@@ -1,0 +1,59 @@
+//! Autotuner demo (the Fig. 9 setting in miniature): for a few matrices,
+//! sweep the classic-format design space with the GPU simulator (the
+//! AlphaSparse stand-in), then compare the winner against the fixed
+//! CSR-dtANS format — including the search cost that makes per-matrix
+//! autotuning impractical.
+//!
+//! Run: `cargo run --release --example autotune_demo`
+
+use dtans::autotune::{autotune, dtans_time_us, TuneSpace};
+use dtans::format::csr_dtans::{CsrDtans, EncodeOptions};
+use dtans::matrix::gen::structured::{banded, powerlaw_rows, random_uniform};
+use dtans::matrix::gen::{assign_values, ValueDist};
+use dtans::matrix::{Csr, Precision};
+use dtans::sim::GpuModel;
+use dtans::util::rng::Xoshiro256;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Xoshiro256::seeded(5);
+    let cases: Vec<(&str, Csr)> = vec![
+        ("banded-200k", {
+            let mut m = banded(200_000, 4);
+            assign_values(&mut m, ValueDist::FewDistinct(16), &mut rng);
+            m
+        }),
+        ("powerlaw-50k", powerlaw_rows(50_000, 8.0, 1.2, &mut rng)),
+        ("random-100k", random_uniform(100_000, 100_000, 500_000, &mut rng)),
+    ];
+    let dev = GpuModel::RTX5090;
+    let space = TuneSpace::default();
+    let opts = EncodeOptions {
+        precision: Precision::F32,
+        ..Default::default()
+    };
+
+    println!(
+        "{:<14} {:>12} {:>10} {:>12} {:>12} {:>14}",
+        "matrix", "tuner best", "best µs", "dtANS µs", "dtANS rel", "search cost"
+    );
+    for (name, csr) in &cases {
+        let tuned = autotune(csr, Precision::F32, &space, &dev, true);
+        let enc = CsrDtans::encode(csr, &opts)?;
+        let dt = dtans_time_us(csr, &enc, Precision::F32, &dev, true);
+        println!(
+            "{:<14} {:>12} {:>10.1} {:>12.1} {:>11.2}x {:>12.1}s",
+            name,
+            tuned.best.label(),
+            tuned.best_us,
+            dt,
+            dt / tuned.best_us,
+            tuned.search_cost_us / 1e6,
+        );
+    }
+    println!(
+        "\nThe tuner explores ~11 candidates per matrix; its search cost (dominated by \
+         per-candidate code generation, as with AlphaSparse) exceeds any single SpMVM by \
+         ~6 orders of magnitude — the paper's argument for a fixed format."
+    );
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Quickstart: generate a sparse matrix, compress it with CSR-dtANS,
+//! compare sizes against CSR/COO/SELL, run SpMVM on the fly, and verify
+//! against the plain CSR kernel.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use dtans::format::csr_dtans::{CsrDtans, EncodeOptions};
+use dtans::matrix::gen::{assign_values, gen_graph_csr, GraphModel, ValueDist};
+use dtans::matrix::{Precision, SizeModel};
+use dtans::spmv::{spmv_csr, spmv_csr_dtans};
+use dtans::util::rng::Xoshiro256;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A random graph adjacency matrix with quantized values (think:
+    //    pruned+quantized NN layer, one of the paper's motivating cases).
+    let mut rng = Xoshiro256::seeded(7);
+    let mut a = gen_graph_csr(GraphModel::ErdosRenyi, 20_000, 16.0, &mut rng);
+    assign_values(&mut a, ValueDist::Quantized(256), &mut rng);
+    println!("matrix: {} x {}, {} nnz", a.nrows, a.ncols, a.nnz());
+
+    // 2. Compress. The encoder delta-encodes column indices, builds the
+    //    two dtANS coding tables, entropy-codes every row and interleaves
+    //    the streams warp-wise.
+    let opts = EncodeOptions::default(); // PAPER params, 64-bit
+    let enc = CsrDtans::encode(&a, &opts)?;
+    let report = enc.size_report();
+    let model = SizeModel { precision: Precision::F64 };
+    let (baseline, fmt) = model.best_baseline_bytes(&a);
+    println!(
+        "size: best classic format ({fmt}) = {} KB, CSR-dtANS = {} KB  ({:.2}x smaller)",
+        baseline / 1024,
+        report.total / 1024,
+        baseline as f64 / report.total as f64
+    );
+    println!(
+        "      breakdown: tables {} + dicts {} + stream {} + row lens {} + escapes {}",
+        report.tables, report.dicts, report.stream, report.row_lens, report.escapes
+    );
+
+    // 3. SpMVM with on-the-fly decoding, verified against plain CSR.
+    let x: Vec<f64> = (0..a.ncols).map(|_| rng.next_f64() - 0.5).collect();
+    let mut y = vec![0.0; a.nrows];
+    let t0 = std::time::Instant::now();
+    spmv_csr_dtans(&enc, &x, &mut y)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let mut want = vec![0.0; a.nrows];
+    spmv_csr(&a, &x, &mut want)?;
+    let err = y
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!(
+        "spmv: {:.2} ms ({:.2} GB/s of compressed data), max |err| vs CSR = {err:.2e}",
+        dt * 1e3,
+        report.total as f64 / dt / 1e9
+    );
+    assert!(err < 1e-9);
+    println!("OK");
+    Ok(())
+}

@@ -1,0 +1,85 @@
+"""AOT pipeline: lower every (entry × bucket) jax function to HLO *text*
+and write ``artifacts/<entry>_<bucket>.hlo.txt`` plus a manifest.
+
+HLO text — NOT ``lowered.compile()`` or a serialized HloModuleProto — is
+the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids that the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Run once via ``make artifacts``; python never executes on the Rust
+request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # decoder state is int64
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .model import BUCKETS, ENTRIES  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def manifest_line(name: str, specs, out_shape) -> str:
+    """`name|in=dtype:shape;...|out=f32:shape` — parsed by rust/src/runtime."""
+    def fmt(s):
+        dt = {"int32": "i32", "float32": "f32", "int64": "i64", "float64": "f64"}[str(s.dtype)]
+        dims = "x".join(str(d) for d in s.shape)
+        return f"{dt}:{dims}"
+
+    ins = ";".join(fmt(s) for s in specs)
+    return f"{name}|{ins}|f32:{out_shape}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--buckets", default=",".join(BUCKETS), help="comma-separated bucket names")
+    ap.add_argument("--entries", default=",".join(ENTRIES), help="comma-separated entry names")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    manifest = []
+    for bname in args.buckets.split(","):
+        bucket = BUCKETS[bname]
+        for ename in args.entries.split(","):
+            builder, spec_builder = ENTRIES[ename]
+            fn = builder(bucket)
+            specs = spec_builder(bucket)
+            lowered = jax.jit(fn).lower(*specs)
+            text = to_hlo_text(lowered)
+            name = f"{ename}_{bname}"
+            path = os.path.join(args.outdir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest.append(manifest_line(name, specs, bucket["nrows"]))
+            print(f"wrote {path} ({len(text)} chars)")
+
+    # Bucket metadata for the Rust runtime's padding logic.
+    with open(os.path.join(args.outdir, "manifest.txt"), "w") as f:
+        for line in manifest:
+            f.write(line + "\n")
+        for bname, b in BUCKETS.items():
+            f.write(
+                f"#bucket {bname} nrows={b['nrows']} ncols={b['ncols']} "
+                f"nw={b['nw']} ne={b['ne']} nnz={b['nnz']} max_seg={b['max_seg']}\n"
+            )
+    print(f"wrote {os.path.join(args.outdir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,287 @@
+"""Layer-1 Pallas kernel: fused dtANS decode + SpMVM for CSR-dtANS.
+
+One grid program per slice of 32 rows. The 32 CUDA lanes of the paper's
+warp become a (32,)-shaped vector axis:
+
+* ``__ballot_sync`` + ``popc`` lane ranking  -> ``jnp.cumsum`` over lanes;
+* shared-memory coding tables               -> VMEM-resident (K,) arrays;
+* coalesced 4-byte stream loads             -> per-event gathers of <= 32
+  consecutive words (one lane each);
+* ``__umul_hi`` double-word state           -> int64 arithmetic, which the
+  KERNEL preset (W=2^16) keeps below 2^34.
+
+The kernel MUST be lowered with ``interpret=True``: real TPU lowering emits
+a Mosaic custom-call the CPU PJRT plugin cannot execute. Numerics are
+validated against ``ref.decode_spmv_ref`` by pytest; the AOT path exports
+the surrounding jitted function as HLO text for the Rust runtime.
+
+Hardware note (DESIGN.md §Hardware-Adaptation): tables + dictionaries are
+~112 KB and the per-slice lane state is a few KB — comfortably inside VMEM.
+The full stream is read via dynamic gathers here (interpret mode); a Mosaic
+production build would double-buffer stream tiles HBM->VMEM instead.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+WARP = ref.WARP
+W_BITS = ref.W_BITS
+K_BITS = ref.K_BITS
+L_SYMS = ref.L_SYMS
+O_WORDS = ref.O_WORDS
+F_CHECKS = ref.F_CHECKS
+GROUP = ref.GROUP
+W = ref.W
+K = ref.K
+NPS = L_SYMS // 2  # nonzeros per segment
+
+
+def _slice_kernel(
+    dtab_ref,
+    vtab_ref,
+    d_payload_ref,
+    d_isesc_ref,
+    v_value_ref,
+    v_isesc_ref,
+    stream_ref,
+    so_ref,
+    nnz_ref,
+    deo_ref,
+    veo_ref,
+    d_escapes_ref,
+    v_escapes_ref,
+    x_ref,
+    y_ref,
+    *,
+    max_seg: int,
+    delta_encode: bool,
+):
+    sid = pl.program_id(0)
+    i64 = jnp.int64
+
+    dtab = dtab_ref[...].astype(i64)
+    vtab = vtab_ref[...].astype(i64)
+    d_payload = d_payload_ref[...].astype(i64)
+    d_isesc = d_isesc_ref[...].astype(i64)
+    v_value = v_value_ref[...]
+    v_isesc = v_isesc_ref[...].astype(i64)
+    stream = stream_ref[...].astype(i64)
+    d_escapes = d_escapes_ref[...].astype(i64)
+    v_escapes = v_escapes_ref[...]
+    x = x_ref[...]
+
+    # Slice-local row metadata (blocked to (WARP,) by the BlockSpecs).
+    nnz = nnz_ref[...].astype(i64)
+    esc_d0 = deo_ref[...].astype(i64)
+    esc_v0 = veo_ref[...].astype(i64)
+    so_pair = pl.load(so_ref, (pl.dslice(sid, 2),)).astype(i64)
+    base = so_pair[0]
+
+    nseg = (nnz + (NPS - 1)) // NPS
+
+    def gather_words(pos, mask):
+        """One coalesced load event: active lanes read consecutive words."""
+        ranks = jnp.cumsum(mask) - mask  # exclusive prefix sum (popc analog)
+        idx = base + pos + ranks
+        words = jnp.take(stream, idx, mode="clip")
+        return jnp.where(mask.astype(bool), words, 0), pos + jnp.sum(mask)
+
+    # Initial o words for non-empty lanes.
+    pos = i64(0)
+    w = jnp.zeros((WARP, O_WORDS), dtype=i64)
+    nonempty = (nseg > 0).astype(i64)
+    for k in range(O_WORDS):
+        wk, pos = gather_words(pos, nonempty)
+        w = w.at[:, k].set(wk)
+
+    def body(t, carry):
+        pos, w, d, r, emitted, col, acc, esc_d, esc_v = carry
+        active = t < nseg
+        producing = (t + 1) < nseg
+
+        # unpack: o words -> l slots (base-W number re-read in base K).
+        n = (w[:, 0] << (2 * W_BITS)) | (w[:, 1] << W_BITS) | w[:, 2]
+        slots = [(n >> (K_BITS * p)) & (K - 1) for p in range(L_SYMS)]
+
+        # ---- decode + multiply the segment's nonzeros ----
+        for i in range(NPS):
+            de = jnp.take(dtab, slots[2 * i], mode="clip")
+            ve = jnp.take(vtab, slots[2 * i + 1], mode="clip")
+            ds = de >> 16
+            vs = ve >> 16
+            live = active & (emitted < nnz)
+
+            d_esc = jnp.take(d_isesc, ds, mode="clip") == 1
+            dlt = jnp.where(
+                d_esc,
+                jnp.take(d_escapes, esc_d, mode="clip"),
+                jnp.take(d_payload, ds, mode="clip"),
+            )
+            esc_d = esc_d + jnp.where(live & d_esc, 1, 0)
+
+            v_esc = jnp.take(v_isesc, vs, mode="clip") == 1
+            val = jnp.where(
+                v_esc,
+                jnp.take(v_escapes, esc_v, mode="clip"),
+                jnp.take(v_value, vs, mode="clip"),
+            )
+            esc_v = esc_v + jnp.where(live & v_esc, 1, 0)
+
+            first = emitted == 0
+            new_col = jnp.where(first | (not delta_encode), dlt, col + dlt)
+            col = jnp.where(live, new_col, col)
+            xv = jnp.take(x, jnp.clip(col, 0, x.shape[0] - 1), mode="clip")
+            acc = acc + jnp.where(live, val * xv, jnp.float32(0.0))
+            emitted = emitted + jnp.where(live, 1, 0)
+
+        # ---- produce next-segment words (final segments skip) ----
+        prod_i = producing.astype(i64)
+        for g in range(F_CHECKS):
+            gd = jnp.zeros((WARP,), dtype=i64)
+            gr = jnp.ones((WARP,), dtype=i64)
+            for ps in range(g * GROUP, (g + 1) * GROUP):
+                tab = dtab if ps % 2 == 0 else vtab
+                e = jnp.take(tab, slots[ps], mode="clip")
+                b = (e & 0xFF) + 1
+                gd = gd * b + ((e >> 8) & 0xFF)
+                gr = gr * b
+            d = jnp.where(producing, d * gr + gd, d)
+            r = jnp.where(producing, r * gr, r)
+            extract = producing & (r >= W)
+            loadm = prod_i * (1 - extract.astype(i64))
+            wload, pos = gather_words(pos, loadm)
+            wg = jnp.where(extract, d & (W - 1), jnp.where(loadm.astype(bool), wload, w[:, g]))
+            w = w.at[:, g].set(wg)
+            d = jnp.where(extract, d >> W_BITS, d)
+            r = jnp.where(extract, r >> W_BITS, r)
+        for k in range(F_CHECKS, O_WORDS):
+            wload, pos = gather_words(pos, prod_i)
+            w = w.at[:, k].set(jnp.where(producing, wload, w[:, k]))
+        return pos, w, d, r, emitted, col, acc, esc_d, esc_v
+
+    carry = (
+        pos,
+        w,
+        jnp.zeros((WARP,), dtype=i64),  # d
+        jnp.ones((WARP,), dtype=i64),  # r
+        jnp.zeros((WARP,), dtype=i64),  # emitted
+        jnp.zeros((WARP,), dtype=i64),  # col
+        jnp.zeros((WARP,), dtype=jnp.float32),  # acc
+        esc_d0,
+        esc_v0,
+    )
+    carry = jax.lax.fori_loop(0, max_seg, body, carry)
+    y_ref[...] = carry[6]
+
+
+def spmv_dtans(
+    dtab,
+    vtab,
+    d_payload,
+    d_isesc,
+    v_value,
+    v_isesc,
+    stream,
+    slice_offsets,
+    row_nnz,
+    d_esc_off,
+    v_esc_off,
+    d_escapes,
+    v_escapes,
+    x,
+    *,
+    max_seg: int,
+    delta_encode: bool = True,
+    interpret: bool = True,
+):
+    """Fused decode+SpMVM: returns y = A @ x (float32, shape (nrows,)).
+
+    All array arguments follow :class:`ref.KernelBundle`; shapes are static,
+    so one jit/AOT artifact serves one bucket.
+    """
+    nrows = row_nnz.shape[0]
+    assert nrows % WARP == 0, "pad rows to a multiple of 32"
+    nslices = nrows // WARP
+
+    kernel = functools.partial(_slice_kernel, max_seg=max_seg, delta_encode=delta_encode)
+    full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    lane = pl.BlockSpec((WARP,), lambda i: (i,))
+    return pl.pallas_call(
+        kernel,
+        grid=(nslices,),
+        in_specs=[
+            full(dtab.shape),
+            full(vtab.shape),
+            full(d_payload.shape),
+            full(d_isesc.shape),
+            full(v_value.shape),
+            full(v_isesc.shape),
+            full(stream.shape),
+            full(slice_offsets.shape),
+            lane,  # row_nnz
+            lane,  # d_esc_off
+            lane,  # v_esc_off
+            full(d_escapes.shape),
+            full(v_escapes.shape),
+            full(x.shape),
+        ],
+        out_specs=lane,
+        out_shape=jax.ShapeDtypeStruct((nrows,), jnp.float32),
+        interpret=interpret,
+    )(
+        dtab,
+        vtab,
+        d_payload,
+        d_isesc,
+        v_value,
+        v_isesc,
+        stream,
+        slice_offsets,
+        row_nnz,
+        d_esc_off,
+        v_esc_off,
+        d_escapes,
+        v_escapes,
+        x,
+    )
+
+
+def spmv_dtans_bundle(b: "ref.KernelBundle", x, interpret: bool = True):
+    """Convenience wrapper over a :class:`ref.KernelBundle`. Pads the row
+    count to a slice multiple (and the stream to >= 1 word) if needed,
+    truncating the result back."""
+    nrows = len(b.row_nnz)
+    padded_rows = max(-(-nrows // WARP) * WARP, WARP)
+    if padded_rows != nrows or len(b.stream) == 0:
+        b = b.pad_to(padded_rows, max(len(b.stream), 1), max(len(b.d_escapes), 1))
+    y = _spmv_bundle_arrays(b, x, interpret)
+    return y[:nrows]
+
+
+def _spmv_bundle_arrays(b: "ref.KernelBundle", x, interpret: bool):
+    return spmv_dtans(
+        jnp.asarray(b.dtab),
+        jnp.asarray(b.vtab),
+        jnp.asarray(b.d_payload),
+        jnp.asarray(b.d_isesc),
+        jnp.asarray(b.v_value),
+        jnp.asarray(b.v_isesc),
+        jnp.asarray(b.stream),
+        jnp.asarray(b.slice_offsets),
+        jnp.asarray(b.row_nnz),
+        jnp.asarray(b.d_esc_off),
+        jnp.asarray(b.v_esc_off),
+        jnp.asarray(b.d_escapes),
+        jnp.asarray(b.v_escapes),
+        jnp.asarray(x, dtype=jnp.float32),
+        max_seg=max(b.max_seg, 1),
+        delta_encode=b.delta_encode,
+        interpret=interpret,
+    )

@@ -1,0 +1,547 @@
+"""Pure-numpy dtANS reference: encoder, scalar decoder, warp interleaver,
+and the SpMVM oracle the Pallas kernel is verified against.
+
+This is a faithful port of the Rust codec (``rust/src/ans/dtans.rs`` and
+``rust/src/format/``) restricted to the KERNEL parameter preset
+(W=2^16, K=4096, M=256, l=4, o=3, f=2) plus a simplified symbolization
+policy (top-frequency dictionary, everything else escapes). The *decoder*
+is bit-exact with the Rust one — the Rust CLI can export encoded matrices
+that these functions decode (`dtans export-kernel-bundle`); the encoder
+here only needs to be self-consistent for the python-side property tests.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Parameters (KERNEL preset)
+# ---------------------------------------------------------------------------
+
+W_BITS = 16
+K_BITS = 12
+M_BITS = 8
+L_SYMS = 4  # symbols per segment (2 nonzeros: delta+value each)
+O_WORDS = 3
+F_CHECKS = 2
+GROUP = L_SYMS // F_CHECKS
+W = 1 << W_BITS
+K = 1 << K_BITS
+M = 1 << M_BITS
+WARP = 32
+
+
+# ---------------------------------------------------------------------------
+# Tables
+# ---------------------------------------------------------------------------
+
+
+def normalize_counts(counts: np.ndarray, k: int = K, m_cap: int = M) -> np.ndarray:
+    """Normalize positive counts to multiplicities summing to ``k`` with each
+    in ``[1, m_cap]`` (greedy cross-entropy repair, as in Rust)."""
+    counts = np.asarray(counts, dtype=np.float64)
+    n = len(counts)
+    assert n >= 1 and n <= k and n * m_cap >= k and (counts > 0).all()
+    ideal = counts * k / counts.sum()
+    mult = np.clip(np.round(ideal), 1, m_cap).astype(np.int64)
+    while mult.sum() != k:
+        if mult.sum() > k:
+            cost = np.where(mult > 1, counts * np.log2(mult / np.maximum(mult - 1, 1)), np.inf)
+            mult[int(np.argmin(cost))] -= 1
+        else:
+            gain = np.where(mult < m_cap, counts * np.log2((mult + 1) / mult), -np.inf)
+            mult[int(np.argmax(gain))] += 1
+    return mult.astype(np.uint32)
+
+
+@dataclass
+class Tables:
+    """Coding tables for one domain: packed slots + per-symbol inverse."""
+
+    packed: np.ndarray  # uint32[K]: sym<<16 | digit<<8 | (base-1)
+    sym_start: np.ndarray  # uint32[nsym]
+    sym_mult: np.ndarray  # uint32[nsym]
+
+    @staticmethod
+    def build(mult: np.ndarray) -> "Tables":
+        mult = np.asarray(mult, dtype=np.uint32)
+        assert mult.sum() == K and (mult >= 1).all() and (mult <= M).all()
+        packed = np.zeros(K, dtype=np.uint32)
+        start = np.zeros(len(mult), dtype=np.uint32)
+        pos = 0
+        for sym, q in enumerate(mult):
+            start[sym] = pos
+            q = int(q)
+            digits = np.arange(q, dtype=np.uint32)
+            packed[pos : pos + q] = (np.uint32(sym) << 16) | (digits << 8) | np.uint32(q - 1)
+            pos += q
+        return Tables(packed, start, mult)
+
+    @property
+    def num_symbols(self) -> int:
+        return len(self.sym_mult)
+
+    def base_of(self, sym: int) -> int:
+        return int(self.sym_mult[sym])
+
+    def slot_of(self, sym: int, digit: int) -> int:
+        assert 0 <= digit < self.sym_mult[sym]
+        return int(self.sym_start[sym]) + digit
+
+
+# ---------------------------------------------------------------------------
+# Row codec (scalar)
+# ---------------------------------------------------------------------------
+
+
+def _pack(slots: list[int]) -> list[int]:
+    n = 0
+    for pos, s in enumerate(slots):
+        n |= int(s) << (K_BITS * pos)
+    return [(n >> (W_BITS * (O_WORDS - 1 - k))) & (W - 1) for k in range(O_WORDS)]
+
+
+def _unpack(words: list[int]) -> list[int]:
+    n = 0
+    for w in words:
+        n = (n << W_BITS) | int(w)
+    return [(n >> (K_BITS * pos)) & (K - 1) for pos in range(L_SYMS)]
+
+
+def encode_row(tables: list[Tables], syms: list[int]) -> tuple[list[int], list[bool]]:
+    """Two-pass dtANS row encoder. ``syms`` length must be a multiple of l;
+    domain of position i is ``i % len(tables)``. Returns (words, branches)."""
+    nd = len(tables)
+    assert len(syms) % L_SYMS == 0
+    nseg = len(syms) // L_SYMS
+    if nseg == 0:
+        return [], []
+
+    # Base pass: replay r, record branches.
+    branches: list[bool] = []
+    r = 1
+    for t in range(nseg - 1):
+        for g in range(F_CHECKS):
+            for pos in range(g * GROUP, (g + 1) * GROUP):
+                r *= tables[pos % nd].base_of(syms[t * L_SYMS + pos])
+            if r >= W:
+                branches.append(True)
+                r >>= W_BITS
+            else:
+                branches.append(False)
+
+    # Digit pass (backward).
+    d = 0
+    rev: list[int] = []
+    slots = [tables[pos % nd].slot_of(syms[(nseg - 1) * L_SYMS + pos], 0) for pos in range(L_SYMS)]
+    req = _pack(slots)
+    for t in range(nseg - 2, -1, -1):
+        for k in range(O_WORDS - 1, F_CHECKS - 1, -1):
+            rev.append(req[k])
+        slots = [0] * L_SYMS
+        for g in range(F_CHECKS - 1, -1, -1):
+            if branches[t * F_CHECKS + g]:
+                d = (d << W_BITS) | req[g]
+            else:
+                rev.append(req[g])
+            for pos in range((g + 1) * GROUP - 1, g * GROUP - 1, -1):
+                sym = syms[t * L_SYMS + pos]
+                b = tables[pos % nd].base_of(sym)
+                slots[pos] = tables[pos % nd].slot_of(sym, d % b)
+                d //= b
+        req = _pack(slots)
+    for k in range(O_WORDS - 1, -1, -1):
+        rev.append(req[k])
+    assert d == 0, "leftover encoder state must vanish"
+    rev.reverse()
+    return rev, branches
+
+
+def decode_row(tables: list[Tables], words: list[int], nsyms: int) -> list[int]:
+    """Scalar dtANS row decoder (Algorithm 3)."""
+    nd = len(tables)
+    assert nsyms % L_SYMS == 0
+    nseg = nsyms // L_SYMS
+    out: list[int] = []
+    if nseg == 0:
+        return out
+    w = list(int(x) for x in words[:O_WORDS])
+    pos = O_WORDS
+    d, r = 0, 1
+    for t in range(nseg):
+        slots = _unpack(w)
+        for i, s in enumerate(slots):
+            out.append(int(tables[i % nd].packed[s]) >> 16)
+        if t + 1 == nseg:
+            break
+        for g in range(F_CHECKS):
+            gd, gr = 0, 1
+            for ps in range(g * GROUP, (g + 1) * GROUP):
+                e = int(tables[ps % nd].packed[slots[ps]])
+                base = (e & 0xFF) + 1
+                gd = gd * base + ((e >> 8) & 0xFF)
+                gr *= base
+            d = d * gr + gd
+            r *= gr
+            if r >= W:
+                w[g] = d & (W - 1)
+                d >>= W_BITS
+                r >>= W_BITS
+            else:
+                w[g] = int(words[pos])
+                pos += 1
+        for k in range(F_CHECKS, O_WORDS):
+            w[k] = int(words[pos])
+            pos += 1
+    assert pos == len(words), f"consumed {pos}/{len(words)} words"
+    return out
+
+
+def interleave_slice(rows: list[tuple[list[int], list[bool], int]]) -> list[int]:
+    """Warp-interleave per-row (words, branches, nseg) by load-event order."""
+    cursors = [0] * len(rows)
+    out: list[int] = []
+
+    def take(lane: int) -> None:
+        words, _, _ = rows[lane]
+        out.append(words[cursors[lane]])
+        cursors[lane] += 1
+
+    for _k in range(O_WORDS):
+        for lane, (_, _, nseg) in enumerate(rows):
+            if nseg > 0:
+                take(lane)
+    max_seg = max((nseg for _, _, nseg in rows), default=0)
+    for t in range(max(0, max_seg - 1)):
+        for g in range(F_CHECKS):
+            for lane, (_, branches, nseg) in enumerate(rows):
+                if t + 1 < nseg and not branches[t * F_CHECKS + g]:
+                    take(lane)
+        for _k in range(F_CHECKS, O_WORDS):
+            for lane, (_, _, nseg) in enumerate(rows):
+                if t + 1 < nseg:
+                    take(lane)
+    assert all(cursors[i] == len(rows[i][0]) for i in range(len(rows)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Matrix-level encoding (simplified symbolization) + kernel bundle
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class KernelBundle:
+    """Everything the fused decode+SpMVM kernel consumes, padded to a static
+    bucket shape. Mirrors the Rust runtime's PJRT inputs."""
+
+    dtab: np.ndarray  # int32[K] packed delta slots
+    vtab: np.ndarray  # int32[K] packed value slots
+    d_payload: np.ndarray  # int32[K] delta per symbol id (0 for escape)
+    d_isesc: np.ndarray  # int32[K]
+    v_value: np.ndarray  # float32[K] value per symbol id (0 for escape)
+    v_isesc: np.ndarray  # int32[K]
+    stream: np.ndarray  # int32[NW]
+    slice_offsets: np.ndarray  # int32[NSLICES+1]
+    row_nnz: np.ndarray  # int32[NROWS]
+    d_esc_off: np.ndarray  # int32[NROWS]
+    v_esc_off: np.ndarray  # int32[NROWS]
+    d_escapes: np.ndarray  # int32[NE]
+    v_escapes: np.ndarray  # float32[NE]
+    nrows: int = 0
+    ncols: int = 0
+    max_seg: int = 0
+    delta_encode: bool = True
+
+    def pad_to(self, nrows: int, stream_words: int, escapes: int) -> "KernelBundle":
+        """Zero-pad arrays to a static bucket shape (extra rows are empty)."""
+        assert nrows % WARP == 0 and nrows >= len(self.row_nnz)
+        nslices = nrows // WARP
+
+        def pad(a: np.ndarray, n: int, dt) -> np.ndarray:
+            out = np.zeros(n, dtype=dt)
+            assert len(a) <= n, f"bucket too small: {len(a)} > {n}"
+            out[: len(a)] = a
+            return out
+
+        so = pad(self.slice_offsets, nslices + 1, np.int32)
+        so[len(self.slice_offsets):] = self.slice_offsets[-1]
+        return KernelBundle(
+            self.dtab,
+            self.vtab,
+            self.d_payload,
+            self.d_isesc,
+            self.v_value,
+            self.v_isesc,
+            pad(self.stream, stream_words, np.int32),
+            so,
+            pad(self.row_nnz, nrows, np.int32),
+            pad(self.d_esc_off, nrows, np.int32),
+            pad(self.v_esc_off, nrows, np.int32),
+            pad(self.d_escapes, escapes, np.int32),
+            pad(self.v_escapes, escapes, np.float32),
+            nrows=nrows,
+            ncols=self.ncols,
+            max_seg=self.max_seg,
+            delta_encode=self.delta_encode,
+        )
+
+
+def _build_domain(counts: dict[int, int], max_keep: int):
+    """Keep the most frequent payloads (up to max_keep); rest escape."""
+    items = sorted(counts.items(), key=lambda kv: (-kv[1], kv[0]))[:max_keep]
+    payloads = [p for p, _ in items]
+    return payloads, {p: i for i, p in enumerate(payloads)}
+
+
+def encode_matrix(
+    rows_cols: list[np.ndarray],
+    rows_vals: list[np.ndarray],
+    ncols: int,
+    delta_encode: bool = True,
+    max_dict: int = 1024,
+) -> KernelBundle:
+    """Encode a CSR-like matrix (per-row column/value arrays) into a
+    KernelBundle using the python reference codec."""
+    nrows = len(rows_cols)
+    rows_deltas = []
+    dcounts: dict[int, int] = {}
+    vcounts: dict[int, int] = {}
+    for cols, vals in zip(rows_cols, rows_vals):
+        cols = np.asarray(cols, dtype=np.int64)
+        deltas = cols.copy()
+        if delta_encode and len(cols) > 1:
+            deltas[1:] = cols[1:] - cols[:-1]
+        rows_deltas.append(deltas)
+        for d in deltas:
+            dcounts[int(d)] = dcounts.get(int(d), 0) + 1
+        for v in np.asarray(vals, dtype=np.float32):
+            b = int(np.float32(v).view(np.uint32))
+            vcounts[b] = vcounts.get(b, 0) + 1
+
+    kept_d, dmap = _build_domain(dcounts, max_dict)
+    kept_v, vmap = _build_domain(vcounts, max_dict)
+
+    def finalize(kept: list[int], counts: dict[int, int]):
+        payloads = list(kept)
+        cnts = [max(counts.get(p, 1), 1) for p in payloads]
+        isesc = [False] * len(payloads)
+        kept_set = set(kept)
+        esc_count = sum(c for p, c in counts.items() if p not in kept_set)
+        payloads.append(0)
+        cnts.append(max(esc_count, 1))
+        isesc.append(True)
+        # Duplicate hot ids until K slots are fillable under cap M.
+        while len(payloads) * M < K:
+            hot = int(np.argmax(cnts))
+            half = max(cnts[hot] // 2, 1)
+            cnts[hot] = max(cnts[hot] - half, 1)
+            payloads.append(payloads[hot])
+            cnts.append(half)
+            isesc.append(isesc[hot])
+        mult = normalize_counts(np.array(cnts, dtype=np.float64))
+        return payloads, isesc, mult
+
+    d_payloads, d_isesc, d_mult = finalize(kept_d, dcounts)
+    v_payloads, v_isesc, v_mult = finalize(kept_v, vcounts)
+    dtab = Tables.build(d_mult)
+    vtab = Tables.build(v_mult)
+    d_pad = int(np.argmax(np.where(np.array(d_isesc), 0, d_mult)))
+    v_pad = int(np.argmax(np.where(np.array(v_isesc), 0, v_mult)))
+    d_escape_ids = [i for i, e in enumerate(d_isesc) if e]
+    v_escape_ids = [i for i, e in enumerate(v_isesc) if e]
+
+    encs = []
+    d_escapes: list[int] = []
+    v_escapes: list[float] = []
+    d_esc_off = [0]
+    v_esc_off = [0]
+    max_seg = 0
+    for cols, vals, deltas in zip(rows_cols, rows_vals, rows_deltas):
+        nnz = len(cols)
+        nps = L_SYMS // 2
+        nseg = -(-nnz // nps) if nnz else 0
+        max_seg = max(max_seg, nseg)
+        syms: list[int] = []
+        for i in range(nseg * nps):
+            if i < nnz:
+                dlt = int(deltas[i])
+                if dlt in dmap:
+                    syms.append(dmap[dlt])
+                else:
+                    syms.append(d_escape_ids[0])
+                    d_escapes.append(dlt)
+                vb = int(np.float32(vals[i]).view(np.uint32))
+                if vb in vmap:
+                    syms.append(vmap[vb])
+                else:
+                    syms.append(v_escape_ids[0])
+                    v_escapes.append(float(np.float32(vals[i])))
+            else:
+                syms.append(d_pad)
+                syms.append(v_pad)
+        words, branches = encode_row([dtab, vtab], syms)
+        encs.append((words, branches, nseg))
+        d_esc_off.append(len(d_escapes))
+        v_esc_off.append(len(v_escapes))
+
+    nslices = -(-nrows // WARP) if nrows else 0
+    stream: list[int] = []
+    slice_offsets = [0]
+    for s in range(nslices):
+        stream.extend(interleave_slice(encs[s * WARP : min((s + 1) * WARP, nrows)]))
+        slice_offsets.append(len(stream))
+
+    def per_sym(payloads, isesc):
+        out = np.zeros(K, dtype=np.int64)
+        esc = np.zeros(K, dtype=np.int32)
+        for i, (p, e) in enumerate(zip(payloads, isesc)):
+            out[i] = 0 if e else p
+            esc[i] = 1 if e else 0
+        return out, esc
+
+    d_payload_arr, d_isesc_arr = per_sym(d_payloads, d_isesc)
+    v_bits, v_isesc_arr = per_sym(v_payloads, v_isesc)
+    v_value_arr = v_bits.astype(np.uint32).view(np.float32)
+
+    return KernelBundle(
+        dtab=dtab.packed.view(np.int32).copy(),
+        vtab=vtab.packed.view(np.int32).copy(),
+        d_payload=d_payload_arr.astype(np.int32),
+        d_isesc=d_isesc_arr,
+        v_value=v_value_arr,
+        v_isesc=v_isesc_arr,
+        stream=np.array(stream, dtype=np.int32),
+        slice_offsets=np.array(slice_offsets, dtype=np.int32),
+        row_nnz=np.array([len(c) for c in rows_cols], dtype=np.int32),
+        d_esc_off=np.array(d_esc_off[:-1], dtype=np.int32),
+        v_esc_off=np.array(v_esc_off[:-1], dtype=np.int32),
+        # Side streams are padded to length >= 1 so gathers are well formed
+        # even when nothing escaped.
+        d_escapes=np.array(d_escapes or [0], dtype=np.int32),
+        v_escapes=np.array(v_escapes or [0.0], dtype=np.float32),
+        nrows=nrows,
+        ncols=ncols,
+        max_seg=max_seg,
+        delta_encode=delta_encode,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Oracle: scalar decode + SpMVM over a bundle
+# ---------------------------------------------------------------------------
+
+
+def decode_spmv_ref(b: KernelBundle, x: np.ndarray) -> np.ndarray:
+    """Scalar replay of the warp-synchronous fused decode+SpMVM: the oracle
+    the Pallas kernel must match (float32 accumulation per lane)."""
+    nrows = len(b.row_nnz)
+    y = np.zeros(nrows, dtype=np.float32)
+    nslices = len(b.slice_offsets) - 1
+    nps = L_SYMS // 2
+    xf = np.asarray(x, dtype=np.float32)
+    for s in range(nslices):
+        stream = b.stream[b.slice_offsets[s] : b.slice_offsets[s + 1]]
+        pos = 0
+        lanes = min(WARP, nrows - s * WARP)
+        if lanes <= 0:
+            continue
+        d = [0] * lanes
+        r = [1] * lanes
+        w = [[0] * O_WORDS for _ in range(lanes)]
+        nseg = [-(-int(b.row_nnz[s * WARP + i]) // nps) for i in range(lanes)]
+        emitted = [0] * lanes
+        col = [0] * lanes
+        esc_d = [int(b.d_esc_off[s * WARP + i]) for i in range(lanes)]
+        esc_v = [int(b.v_esc_off[s * WARP + i]) for i in range(lanes)]
+        acc = [np.float32(0.0) for _ in range(lanes)]
+        for k in range(O_WORDS):
+            for lane in range(lanes):
+                if nseg[lane] > 0:
+                    w[lane][k] = int(stream[pos])
+                    pos += 1
+        slots_l = [[0] * L_SYMS for _ in range(lanes)]
+        for t in range(max(nseg, default=0)):
+            for lane in range(lanes):
+                if t >= nseg[lane]:
+                    continue
+                slots = _unpack(w[lane])
+                slots_l[lane] = slots
+                nnz_r = int(b.row_nnz[s * WARP + lane])
+                for i in range(nps):
+                    if emitted[lane] >= nnz_r:
+                        break
+                    ds = int(b.dtab[slots[2 * i]]) >> 16
+                    vs = int(b.vtab[slots[2 * i + 1]]) >> 16
+                    if b.d_isesc[ds]:
+                        dlt = int(b.d_escapes[esc_d[lane]])
+                        esc_d[lane] += 1
+                    else:
+                        dlt = int(b.d_payload[ds])
+                    if b.v_isesc[vs]:
+                        val = np.float32(b.v_escapes[esc_v[lane]])
+                        esc_v[lane] += 1
+                    else:
+                        val = np.float32(b.v_value[vs])
+                    c = dlt if (emitted[lane] == 0 or not b.delta_encode) else col[lane] + dlt
+                    col[lane] = c
+                    emitted[lane] += 1
+                    acc[lane] = np.float32(acc[lane] + val * xf[c])
+            for g in range(F_CHECKS):
+                for lane in range(lanes):
+                    if t + 1 >= nseg[lane]:
+                        continue
+                    gd, gr = 0, 1
+                    for ps in range(g * GROUP, (g + 1) * GROUP):
+                        tab = b.dtab if ps % 2 == 0 else b.vtab
+                        e = int(tab[slots_l[lane][ps]])
+                        base = (e & 0xFF) + 1
+                        gd = gd * base + ((e >> 8) & 0xFF)
+                        gr *= base
+                    d[lane] = d[lane] * gr + gd
+                    r[lane] *= gr
+                    if r[lane] >= W:
+                        w[lane][g] = d[lane] & (W - 1)
+                        d[lane] >>= W_BITS
+                        r[lane] >>= W_BITS
+                    else:
+                        w[lane][g] = int(stream[pos])
+                        pos += 1
+            for k in range(F_CHECKS, O_WORDS):
+                for lane in range(lanes):
+                    if t + 1 >= nseg[lane]:
+                        continue
+                    w[lane][k] = int(stream[pos])
+                    pos += 1
+        assert pos == len(stream), f"slice {s}: consumed {pos}/{len(stream)}"
+        for lane in range(lanes):
+            y[s * WARP + lane] = acc[lane]
+    return y
+
+
+def spmv_csr_ref(rows_cols, rows_vals, x: np.ndarray) -> np.ndarray:
+    """Plain float32 CSR SpMVM oracle."""
+    y = np.zeros(len(rows_cols), dtype=np.float32)
+    xf = np.asarray(x, dtype=np.float32)
+    for r, (cols, vals) in enumerate(zip(rows_cols, rows_vals)):
+        acc = np.float32(0.0)
+        for c, v in zip(np.asarray(cols), np.asarray(vals, dtype=np.float32)):
+            acc = np.float32(acc + np.float32(v) * xf[int(c)])
+        y[r] = acc
+    return y
+
+
+def random_matrix(rng: np.random.Generator, nrows: int, ncols: int, avg_nnz: float,
+                  distinct_vals: int = 16):
+    """Random CSR-like matrix for tests: per-row sorted unique columns."""
+    rows_cols, rows_vals = [], []
+    palette = rng.standard_normal(max(distinct_vals, 1)).astype(np.float32)
+    for _ in range(nrows):
+        n = min(int(rng.poisson(avg_nnz)), ncols)
+        cols = np.sort(rng.choice(ncols, size=n, replace=False)) if n else np.zeros(0, dtype=np.int64)
+        vals = palette[rng.integers(0, len(palette), size=n)]
+        rows_cols.append(cols.astype(np.int64))
+        rows_vals.append(vals)
+    return rows_cols, rows_vals

@@ -1,0 +1,156 @@
+"""Layer-2 JAX compute graph: the SpMVM entry points that get AOT-lowered
+to HLO text for the Rust runtime.
+
+Three entries per size bucket:
+
+* ``spmv_dtans`` — the paper's kernel: fused dtANS decode + SpMVM over a
+  CSR-dtANS bundle (calls the Layer-1 Pallas kernel, which lowers inline
+  because it is built with ``interpret=True``);
+* ``spmv_csr_jnp`` — a scatter-add CSR SpMVM in plain jnp (the cuSPARSE-
+  baseline analog on the PJRT path);
+* ``dense_matvec`` — dense reference.
+
+All entries compute ``y = A·x + y_in`` (the paper's §III-A semantics).
+Shapes are static; the Rust side pads matrices into the bucket it loads.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.dtans_decode import spmv_dtans as _pallas_spmv
+
+# Buckets the AOT pipeline compiles. Key -> static shape parameters:
+#   nrows (multiple of 32), ncols, nw (stream words), ne (escape slots),
+#   nnz (for the CSR entry), max_seg (segment loop bound).
+BUCKETS: dict[str, dict[str, int]] = {
+    "r64c64": dict(nrows=64, ncols=64, nw=4096, ne=512, nnz=1024, max_seg=32),
+    "r256c256": dict(nrows=256, ncols=256, nw=32768, ne=4096, nnz=8192, max_seg=160),
+}
+
+
+def spmv_dtans_entry(bucket: dict[str, int]):
+    """Build the fused decode+SpMVM jax function for a bucket. Argument
+    order matches ``ref.KernelBundle`` fields, then x, then y_in."""
+
+    def fn(
+        dtab,
+        vtab,
+        d_payload,
+        d_isesc,
+        v_value,
+        v_isesc,
+        stream,
+        slice_offsets,
+        row_nnz,
+        d_esc_off,
+        v_esc_off,
+        d_escapes,
+        v_escapes,
+        x,
+        y_in,
+    ):
+        y = _pallas_spmv(
+            dtab,
+            vtab,
+            d_payload,
+            d_isesc,
+            v_value,
+            v_isesc,
+            stream,
+            slice_offsets,
+            row_nnz,
+            d_esc_off,
+            v_esc_off,
+            d_escapes,
+            v_escapes,
+            x,
+            max_seg=bucket["max_seg"],
+            delta_encode=True,
+            interpret=True,
+        )
+        return (y + y_in,)
+
+    return fn
+
+
+def spmv_dtans_arg_specs(bucket: dict[str, int]):
+    """ShapeDtypeStructs for :func:`spmv_dtans_entry` in argument order."""
+    from .kernels.ref import K
+
+    i32 = jnp.int32
+    f32 = jnp.float32
+    nrows, ncols = bucket["nrows"], bucket["ncols"]
+    nslices = nrows // 32
+    s = jax.ShapeDtypeStruct
+    return [
+        s((K,), i32),  # dtab
+        s((K,), i32),  # vtab
+        s((K,), i32),  # d_payload
+        s((K,), i32),  # d_isesc
+        s((K,), f32),  # v_value
+        s((K,), i32),  # v_isesc
+        s((bucket["nw"],), i32),  # stream
+        s((nslices + 1,), i32),  # slice_offsets
+        s((nrows,), i32),  # row_nnz
+        s((nrows,), i32),  # d_esc_off
+        s((nrows,), i32),  # v_esc_off
+        s((bucket["ne"],), i32),  # d_escapes
+        s((bucket["ne"],), f32),  # v_escapes
+        s((ncols,), f32),  # x
+        s((nrows,), f32),  # y_in
+    ]
+
+
+def spmv_csr_jnp_entry(bucket: dict[str, int]):
+    """Scatter-add CSR SpMVM (padded to a fixed nnz; padding rows point at
+    row index nrows, column 0, value 0 — a dead scatter target)."""
+    nrows = bucket["nrows"]
+
+    def fn(row_ids, cols, vals, x, y_in):
+        contrib = vals * jnp.take(x, cols, mode="clip")
+        y = jnp.zeros((nrows + 1,), dtype=jnp.float32).at[row_ids].add(contrib)
+        return (y[:nrows] + y_in,)
+
+    return fn
+
+
+def spmv_csr_jnp_arg_specs(bucket: dict[str, int]):
+    """ShapeDtypeStructs for :func:`spmv_csr_jnp_entry`."""
+    s = jax.ShapeDtypeStruct
+    nnz = bucket["nnz"]
+    return [
+        s((nnz,), jnp.int32),
+        s((nnz,), jnp.int32),
+        s((nnz,), jnp.float32),
+        s((bucket["ncols"],), jnp.float32),
+        s((bucket["nrows"],), jnp.float32),
+    ]
+
+
+def dense_matvec_entry(bucket: dict[str, int]):
+    """Dense y = A x + y_in."""
+
+    def fn(a, x, y_in):
+        return (jnp.dot(a, x) + y_in,)
+
+    return fn
+
+
+def dense_matvec_arg_specs(bucket: dict[str, int]):
+    """ShapeDtypeStructs for :func:`dense_matvec_entry`."""
+    s = jax.ShapeDtypeStruct
+    return [
+        s((bucket["nrows"], bucket["ncols"]), jnp.float32),
+        s((bucket["ncols"],), jnp.float32),
+        s((bucket["nrows"],), jnp.float32),
+    ]
+
+
+# Entry registry: name -> (fn builder, spec builder).
+ENTRIES = {
+    "spmv_dtans": (spmv_dtans_entry, spmv_dtans_arg_specs),
+    "spmv_csr_jnp": (spmv_csr_jnp_entry, spmv_csr_jnp_arg_specs),
+    "dense_matvec": (dense_matvec_entry, dense_matvec_arg_specs),
+}

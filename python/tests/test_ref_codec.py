@@ -1,0 +1,125 @@
+"""Property tests of the pure-numpy dtANS reference codec (hypothesis)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def make_tables(rng: np.random.Generator, nsyms: int) -> ref.Tables:
+    counts = rng.integers(1, 1000, size=max(nsyms, ref.K // ref.M)).astype(np.float64)
+    return ref.Tables.build(ref.normalize_counts(counts))
+
+
+# ---------------------------------------------------------------------------
+# Table construction
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(16, 512))
+@settings(max_examples=25, deadline=None)
+def test_normalize_sums_to_k_with_cap(seed, nsyms):
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(1, 10_000, size=nsyms).astype(np.float64)
+    mult = ref.normalize_counts(counts)
+    assert mult.sum() == ref.K
+    assert mult.min() >= 1 and mult.max() <= ref.M
+
+
+def test_tables_layout():
+    t = ref.Tables.build(ref.normalize_counts(np.array([100.0, 10.0] * 8)))
+    # Slots of one symbol are consecutive with digits 0..mult-1.
+    for sym in range(t.num_symbols):
+        start, q = int(t.sym_start[sym]), int(t.sym_mult[sym])
+        entries = t.packed[start : start + q]
+        assert ((entries >> 16) == sym).all()
+        assert (((entries >> 8) & 0xFF) == np.arange(q)).all()
+        assert ((entries & 0xFF) == q - 1).all()
+
+
+# ---------------------------------------------------------------------------
+# Row codec roundtrips
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(0, 40), st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_row_roundtrip(seed, nseg, two_domains):
+    rng = np.random.default_rng(seed)
+    t0 = make_tables(rng, 50)
+    tables = [t0, make_tables(rng, 300)] if two_domains else [t0]
+    syms = []
+    for i in range(nseg * ref.L_SYMS):
+        t = tables[i % len(tables)]
+        # Skew towards frequent symbols.
+        if rng.random() < 0.7:
+            syms.append(int(rng.integers(0, min(4, t.num_symbols))))
+        else:
+            syms.append(int(rng.integers(0, t.num_symbols)))
+    words, branches = ref.encode_row(tables, syms)
+    assert ref.decode_row(tables, words, len(syms)) == syms
+    loads = sum(1 for b in branches if not b)
+    if nseg > 0:
+        expected = ref.O_WORDS + (nseg - 1) * (ref.O_WORDS - ref.F_CHECKS) + loads
+        assert len(words) == expected
+
+
+def test_single_segment_costs_o_words():
+    rng = np.random.default_rng(7)
+    t = make_tables(rng, 64)
+    words, _ = ref.encode_row([t], [1, 2, 3, 0])
+    assert len(words) == ref.O_WORDS
+
+
+def test_hot_symbols_cheaper_than_cold():
+    rng = np.random.default_rng(8)
+    t = make_tables(rng, 200)
+    hot = int(np.argmax(t.sym_mult))
+    cold = int(np.argmin(t.sym_mult))
+    n = 32 * ref.L_SYMS
+    w_hot, _ = ref.encode_row([t], [hot] * n)
+    w_cold, _ = ref.encode_row([t], [cold] * n)
+    assert len(w_hot) < len(w_cold)
+
+
+# ---------------------------------------------------------------------------
+# Matrix-level: encode_matrix + scalar oracle vs plain CSR SpMVM
+# ---------------------------------------------------------------------------
+
+
+@given(
+    st.integers(0, 2**32 - 1),
+    st.integers(1, 80),
+    st.integers(1, 120),
+    st.floats(0.0, 12.0),
+    st.sampled_from([1, 3, 1000]),
+    st.booleans(),
+)
+@settings(max_examples=25, deadline=None)
+def test_bundle_decode_matches_csr(seed, nrows, ncols, avg, distinct, delta):
+    rng = np.random.default_rng(seed)
+    rc, rv = ref.random_matrix(rng, nrows, ncols, avg, distinct)
+    b = ref.encode_matrix(rc, rv, ncols, delta_encode=delta)
+    x = rng.standard_normal(ncols).astype(np.float32)
+    got = ref.decode_spmv_ref(b, x)
+    want = ref.spmv_csr_ref(rc, rv, x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_bundle_padding_keeps_results():
+    rng = np.random.default_rng(3)
+    rc, rv = ref.random_matrix(rng, 50, 64, 4.0)
+    b = ref.encode_matrix(rc, rv, 64)
+    x = rng.standard_normal(64).astype(np.float32)
+    y = ref.decode_spmv_ref(b, x)
+    padded = b.pad_to(nrows=96, stream_words=4096, escapes=512)
+    y2 = ref.decode_spmv_ref(padded, x)
+    np.testing.assert_allclose(y2[:50], y, rtol=0, atol=0)
+    assert (y2[50:] == 0).all()
+
+
+def test_empty_matrix():
+    b = ref.encode_matrix([], [], 8)
+    y = ref.decode_spmv_ref(b, np.zeros(8, dtype=np.float32))
+    assert y.shape == (0,)

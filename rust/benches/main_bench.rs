@@ -1,0 +1,212 @@
+//! Benchmark harness (criterion is not in the vendored set; this is a
+//! plain `harness = false` bench binary using util::timer's warmup/median
+//! machinery). Covers:
+//!
+//!  * microbenches: dtANS encode/decode throughput, per-kernel SpMVM;
+//!  * one end-to-end bench per paper table/figure (regenerating them at
+//!    bench scale): fig4, fig6+tab1, fig7/tab2, fig8/tab3, fig9, ablate.
+//!
+//! Filter with `cargo bench -- <substring>`; `cargo bench -- --quick`
+//! shrinks the corpus.
+
+use dtans::ans::AnsParams;
+use dtans::eval::{ablate, fig4, fig6, fig9, runtime_experiment, tab1, CorpusScale};
+use dtans::format::csr_dtans::{CsrDtans, EncodeOptions};
+use dtans::matrix::gen::structured::{banded, stencil2d5};
+use dtans::matrix::gen::{assign_values, gen_graph_csr, GraphModel, ValueDist};
+use dtans::matrix::Csr;
+use dtans::spmv::{spmv_coo, spmv_csr, spmv_csr_dtans, spmv_sell};
+use dtans::util::rng::Xoshiro256;
+use dtans::util::timer::bench;
+use std::path::Path;
+
+fn should_run(filter: &Option<String>, name: &str) -> bool {
+    filter.as_deref().is_none_or(|f| name.contains(f))
+}
+
+fn bench_codec(filter: &Option<String>, quick: bool) {
+    let n = if quick { 50_000 } else { 400_000 };
+    let mut rng = Xoshiro256::seeded(1);
+    let mut m = gen_graph_csr(GraphModel::ErdosRenyi, n / 10, 10.0, &mut rng);
+    assign_values(&mut m, ValueDist::Quantized(256), &mut rng);
+    let opts = EncodeOptions::default();
+
+    if should_run(filter, "encode_throughput") {
+        let st = bench(1, 3, 0.5, || CsrDtans::encode(&m, &opts).unwrap());
+        let mbs = m.nnz() as f64 * 12.0 / st.median / 1e6;
+        println!("encode_throughput            {} ({:.1} MB/s of CSR)", st.display(), mbs);
+    }
+    let enc = CsrDtans::encode(&m, &opts).unwrap();
+    let x: Vec<f64> = (0..m.ncols).map(|_| rng.next_f64()).collect();
+    if should_run(filter, "decode_spmv_throughput") {
+        let mut y = vec![0.0; m.nrows];
+        let st = bench(2, 5, 1.0, || {
+            y.iter_mut().for_each(|v| *v = 0.0);
+            spmv_csr_dtans(&enc, &x, &mut y).unwrap()
+        });
+        let gbs = enc.size_report().total as f64 / st.median / 1e9;
+        let gnnz = m.nnz() as f64 / st.median / 1e9;
+        println!(
+            "decode_spmv_throughput       {} ({:.2} GB/s decoded, {:.3} Gnnz/s)",
+            st.display(),
+            gbs,
+            gnnz
+        );
+        let pool = dtans::util::threadpool::ThreadPool::new(
+            dtans::util::threadpool::ThreadPool::default_parallelism(),
+        );
+        let stp = bench(2, 5, 1.0, || {
+            y.iter_mut().for_each(|v| *v = 0.0);
+            dtans::spmv::csr_dtans::spmv_csr_dtans_parallel(&enc, &x, &mut y, &pool).unwrap()
+        });
+        println!(
+            "decode_spmv_parallel         {} ({:.2} GB/s decoded, {:.1}x over 1 thread)",
+            stp.display(),
+            enc.size_report().total as f64 / stp.median / 1e9,
+            st.median / stp.median
+        );
+    }
+}
+
+fn bench_kernels(filter: &Option<String>, quick: bool) {
+    if !should_run(filter, "kernels") {
+        return;
+    }
+    let n = if quick { 300 } else { 900 };
+    let mut rng = Xoshiro256::seeded(2);
+    let mut m = stencil2d5(n, n);
+    assign_values(&mut m, ValueDist::FewDistinct(8), &mut rng);
+    let x: Vec<f64> = (0..m.ncols).map(|_| rng.next_f64()).collect();
+    let mut y = vec![0.0; m.nrows];
+    let coo = m.to_coo();
+    let sell = dtans::matrix::Sell::from_csr(&m, 32);
+    let enc = CsrDtans::encode(&m, &EncodeOptions::default()).unwrap();
+    let bytes_csr = m.nnz() as f64 * 12.0;
+
+    let run = |name: &str, bytes: f64, f: &mut dyn FnMut()| {
+        let st = bench(2, 5, 0.5, f);
+        println!(
+            "kernels/{name:<18} {} ({:.2} GB/s)",
+            st.display(),
+            bytes / st.median / 1e9
+        );
+    };
+    run("csr", bytes_csr, &mut || {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        spmv_csr(&m, &x, &mut y).unwrap();
+    });
+    run("coo", m.nnz() as f64 * 16.0, &mut || {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        spmv_coo(&coo, &x, &mut y).unwrap();
+    });
+    run("sell", sell.padded_cells() as f64 * 12.0, &mut || {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        spmv_sell(&sell, &x, &mut y).unwrap();
+    });
+    run("csr_dtans", enc.size_report().total as f64, &mut || {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        spmv_csr_dtans(&enc, &x, &mut y).unwrap();
+    });
+}
+
+fn bench_tans_vs_dtans(filter: &Option<String>) {
+    if !should_run(filter, "tans_ratio") {
+        return;
+    }
+    // Compression-ratio comparison: dtANS (word stream, decoupled) gives up
+    // a little ratio vs classic tANS for decode parallelism.
+    use dtans::ans::histogram::normalize_counts;
+    use dtans::ans::tables::CodingTables;
+    use dtans::ans::tans::tans_encode;
+    use dtans::ans::dtans::encode_row;
+    let p = AnsParams::KERNEL;
+    let mut rng = Xoshiro256::seeded(3);
+    let counts: Vec<u64> = (0..500).map(|i| 1 + 100_000 / (i as u64 + 1)).collect();
+    let t = CodingTables::build(&p, &normalize_counts(&counts, p.k(), p.m()).unwrap()).unwrap();
+    let total: u64 = counts.iter().sum();
+    let n = 1 << 14;
+    let syms: Vec<u16> = (0..n)
+        .map(|_| {
+            let mut pick = rng.below(total);
+            for (s, &c) in counts.iter().enumerate() {
+                if pick < c {
+                    return s as u16;
+                }
+                pick -= c;
+            }
+            0
+        })
+        .collect();
+    let tans_bits = tans_encode(&t, p.k() as u64, &syms).unwrap().bits.len();
+    let dtans_words = encode_row(&p, &[&t], &syms).unwrap().words.len();
+    println!(
+        "tans_ratio                   tANS {:.3} bits/sym vs dtANS {:.3} bits/sym",
+        tans_bits as f64 / n as f64,
+        dtans_words as f64 * p.w_bits as f64 / n as f64
+    );
+}
+
+fn bench_experiments(filter: &Option<String>, quick: bool) {
+    let scale = if quick {
+        CorpusScale { max_nnz: 1 << 16, steps: 4 }
+    } else {
+        CorpusScale { max_nnz: 1 << 21, steps: 6 }
+    };
+    let outdir = Path::new("results");
+    let run = |name: &str, f: &mut dyn FnMut() -> dtans::eval::ExperimentOutput| {
+        if !should_run(filter, name) {
+            return;
+        }
+        let t0 = std::time::Instant::now();
+        let out = f();
+        let summary = dtans::eval::report::save(&out, outdir).expect("save");
+        println!("exp/{name:<10} {:>8.2}s  {}", t0.elapsed().as_secs_f64(), summary.trim().replace('\n', "\n                        "));
+    };
+    run("fig4", &mut || fig4(if quick { 1 << 13 } else { 1 << 16 }));
+    run("fig6", &mut || fig6(&scale));
+    run("tab1", &mut || tab1(&scale));
+    run("fig7", &mut || runtime_experiment(&scale, true));
+    run("fig8", &mut || runtime_experiment(&scale, false));
+    run("fig9", &mut || fig9(&scale));
+    run("ablate", &mut || ablate(&scale));
+}
+
+fn bench_large_banded(filter: &Option<String>, quick: bool) {
+    if !should_run(filter, "large_banded") || quick {
+        return;
+    }
+    // The headline-style case: large, structured, compressible.
+    let mut m = banded(1 << 20, 4);
+    let mut rng = Xoshiro256::seeded(4);
+    assign_values(&mut m, ValueDist::FewDistinct(16), &mut rng);
+    let enc = CsrDtans::encode(&m, &EncodeOptions::default()).unwrap();
+    let x: Vec<f64> = (0..m.ncols).map(|_| rng.next_f64()).collect();
+    let mut y = vec![0.0; m.nrows];
+    let st = bench(1, 3, 1.0, || {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        spmv_csr_dtans(&enc, &x, &mut y).unwrap()
+    });
+    let report = enc.size_report();
+    println!(
+        "large_banded (9.4M nnz)      {} ({:.2} GB/s decoded; {:.2}x smaller than CSR)",
+        st.display(),
+        report.total as f64 / st.median / 1e9,
+        m.size_bytes_f64() as f64 / report.total as f64,
+    );
+    let _ = Csr::new(0, 0);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let filter = args.into_iter().find(|a| !a.starts_with("--"));
+    println!("dtans bench harness (filter: {filter:?}, quick: {quick})");
+    bench_codec(&filter, quick);
+    bench_kernels(&filter, quick);
+    bench_tans_vs_dtans(&filter);
+    bench_large_banded(&filter, quick);
+    bench_experiments(&filter, quick);
+    println!("done.");
+}
+
+// (Appended during the perf pass.) Parallel decode+SpMVM scaling check.

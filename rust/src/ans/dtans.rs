@@ -1,0 +1,510 @@
+//! dtANS — the paper's decoupled tANS codec (§IV-D/E, Algorithm 3).
+//!
+//! A row of symbols is processed in *segments* of `l` symbols. The decoder
+//! keeps `o` buffered words `w[0..o]` and a state `(d, r)`:
+//!
+//! * `unpack(w)` yields the `l` slots of the current segment (the base-W
+//!   number formed by the words re-read in base K);
+//! * the slots' digit/base pairs are folded into `(d, r)` group-wise
+//!   (`l/f` digits per group, each group ≤ one word by the `M` cap);
+//! * after each group a *check* refills one word for the next segment:
+//!   if `r ≥ W` a word is **extracted** from the state (no memory access),
+//!   otherwise it is **loaded** from the stream; the last `o − f` words are
+//!   always loaded;
+//! * the final segment of a row performs no pushes/checks at all (§IV-F
+//!   "efficient handling of end of row").
+//!
+//! Symbols at position `p` within a segment belong to domain
+//! `p mod ndomains` (CSR-dtANS interleaves delta/value symbols, so
+//! `ndomains = 2`); pass a single table for one-domain streams.
+//!
+//! The encoder reverses the decoder exactly: a forward **base pass**
+//! replays `r` alone — bases depend only on symbols, not slots — recording
+//! each check's branch; a backward **digit pass** starts from `d = 0`,
+//! re-injects extracted words (`d ← d·W + w`), emits loaded words to the
+//! stream (built back-to-front), and picks each slot by `digit = d mod
+//! base`. The invariant `d < r(forward)` holds at every point of the
+//! backward pass (proved by induction over the three inverse operations),
+//! so at stream start where `r = 1` the leftover state is exactly 0 — the
+//! decoder may therefore start from `(d, r) = (0, 1)` without any stored
+//! state, unlike classic ANS.
+
+use super::params::AnsParams;
+use super::tables::CodingTables;
+use crate::util::error::{DtansError, Result};
+
+/// Output of [`encode_row`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowEncoding {
+    /// Words in the order the decoder consumes them (initial `o` words,
+    /// then per non-final segment: conditional loads in check order, then
+    /// unconditional loads).
+    pub words: Vec<u32>,
+    /// Branch per check of each non-final segment (`(nseg-1) * f` entries,
+    /// segment-major): `true` = extract (no load), `false` = load.
+    pub branches: Vec<bool>,
+    /// Number of segments (`nsyms / l`).
+    pub nseg: usize,
+}
+
+#[inline]
+fn unpack(p: &AnsParams, w: &[u32], slots: &mut [u32]) {
+    let mut n: u128 = 0;
+    for &word in w.iter() {
+        n = (n << p.w_bits) | word as u128;
+    }
+    let mask = (p.k() - 1) as u128;
+    for (pos, s) in slots.iter_mut().enumerate() {
+        *s = ((n >> (p.k_bits as usize * pos)) & mask) as u32;
+    }
+}
+
+#[inline]
+fn pack(p: &AnsParams, slots: &[u32], w: &mut [u32]) {
+    let mut n: u128 = 0;
+    for (pos, &s) in slots.iter().enumerate() {
+        n |= (s as u128) << (p.k_bits as usize * pos);
+    }
+    let mask = (p.w() - 1) as u128;
+    let o = w.len();
+    for (k, word) in w.iter_mut().enumerate() {
+        *word = ((n >> (p.w_bits as usize * (o - 1 - k))) & mask) as u32;
+    }
+}
+
+/// Check that symbols are in range for their domain tables and the length
+/// is a whole number of segments.
+fn validate_syms(p: &AnsParams, tables: &[&CodingTables], syms: &[u16]) -> Result<()> {
+    if tables.is_empty() || p.l as usize % tables.len() != 0 {
+        return Err(DtansError::InvalidParams(
+            "need 1..=l tables with l % ndomains == 0".into(),
+        ));
+    }
+    if syms.len() % p.l as usize != 0 {
+        return Err(DtansError::InvalidParams(format!(
+            "symbol count {} not a multiple of l={}",
+            syms.len(),
+            p.l
+        )));
+    }
+    for (i, &s) in syms.iter().enumerate() {
+        let t = tables[i % tables.len()];
+        if s as usize >= t.num_symbols() {
+            return Err(DtansError::InvalidParams(format!(
+                "symbol {s} out of range at position {i}"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Encode one row of symbols (`syms.len()` must be a multiple of `l`;
+/// the CSR-dtANS layer pads rows before calling this).
+pub fn encode_row(p: &AnsParams, tables: &[&CodingTables], syms: &[u16]) -> Result<RowEncoding> {
+    p.validate()?;
+    validate_syms(p, tables, syms)?;
+    let (l, o, f) = (p.l as usize, p.o as usize, p.f as usize);
+    let gsz = p.group_size() as usize;
+    let w_radix = p.w();
+    let nd = tables.len();
+    let nseg = syms.len() / l;
+    if nseg == 0 {
+        return Ok(RowEncoding {
+            words: Vec::new(),
+            branches: Vec::new(),
+            nseg: 0,
+        });
+    }
+
+    // ---- Base pass (forward): replay r, record branches. ----
+    let mut branches = Vec::with_capacity((nseg - 1) * f);
+    let mut r: u64 = 1;
+    for t in 0..nseg - 1 {
+        for g in 0..f {
+            let mut gr: u64 = 1;
+            for pos in g * gsz..(g + 1) * gsz {
+                gr *= tables[pos % nd].base_of(syms[t * l + pos]);
+            }
+            r *= gr;
+            if r >= w_radix {
+                branches.push(true);
+                r >>= p.w_bits;
+            } else {
+                branches.push(false);
+            }
+        }
+    }
+
+    // ---- Digit pass (backward): choose slots, build the stream. ----
+    let mut d: u64 = 0;
+    let mut rev: Vec<u32> = Vec::new();
+    let mut slots = vec![0u32; l];
+    let mut req = vec![0u32; o];
+
+    // Final segment: its digits are never pushed by the decoder, so any
+    // slot of the right symbol works — use digit 0.
+    for pos in 0..l {
+        let sym = syms[(nseg - 1) * l + pos];
+        slots[pos] = tables[pos % nd].slot_of(sym, 0);
+    }
+    pack(p, &slots, &mut req);
+
+    for t in (0..nseg - 1).rev() {
+        // Forward consumption order in segment t: checks 0..f (loads only
+        // on `false` branches), then unconditional words f..o. Backward we
+        // undo in reverse: unconditional words first, then check g paired
+        // with undoing group g's pushes, for g = f-1 .. 0.
+        for k in (f..o).rev() {
+            rev.push(req[k]);
+        }
+        for g in (0..f).rev() {
+            if branches[t * f + g] {
+                // Forward extracted this word from the state: re-inject.
+                debug_assert!(d < w_radix, "inject precondition d < W");
+                d = (d << p.w_bits) | req[g] as u64;
+            } else {
+                rev.push(req[g]);
+            }
+            for pos in (g * gsz..(g + 1) * gsz).rev() {
+                let sym = syms[t * l + pos];
+                let b = tables[pos % nd].base_of(sym);
+                let digit = d % b;
+                slots[pos] = tables[pos % nd].slot_of(sym, digit as u32);
+                d /= b;
+            }
+        }
+        pack(p, &slots, &mut req);
+    }
+    // Initial o words (read before the first segment).
+    for k in (0..o).rev() {
+        rev.push(req[k]);
+    }
+    debug_assert_eq!(d, 0, "leftover encoder state must vanish (d < r = 1)");
+    rev.reverse();
+    Ok(RowEncoding {
+        words: rev,
+        branches,
+        nseg,
+    })
+}
+
+/// Segment-stepped decoder. The scalar [`decode_row`] drives it directly;
+/// the warp-synchronous SpMVM kernel drives 32 of them in lockstep,
+/// supplying words from the shared interleaved stream.
+#[derive(Debug, Clone)]
+pub struct RowDecoder {
+    p: AnsParams,
+    d: u64,
+    r: u64,
+    /// Buffered words for the next unpack.
+    pub w: Vec<u32>,
+    slots: Vec<u32>,
+    seg: usize,
+    nseg: usize,
+}
+
+impl RowDecoder {
+    /// New decoder for a row of `nsyms` symbols (multiple of `l`).
+    pub fn new(p: AnsParams, nsyms: usize) -> Result<RowDecoder> {
+        if nsyms % p.l as usize != 0 {
+            return Err(DtansError::InvalidParams(format!(
+                "nsyms {nsyms} not a multiple of l={}",
+                p.l
+            )));
+        }
+        Ok(RowDecoder {
+            p,
+            d: 0,
+            r: 1,
+            w: vec![0; p.o as usize],
+            slots: vec![0; p.l as usize],
+            seg: 0,
+            nseg: nsyms / p.l as usize,
+        })
+    }
+
+    /// Number of segments.
+    #[inline]
+    pub fn nseg(&self) -> usize {
+        self.nseg
+    }
+
+    /// Current segment index.
+    #[inline]
+    pub fn seg(&self) -> usize {
+        self.seg
+    }
+
+    /// True while segments remain to decode.
+    #[inline]
+    pub fn active(&self) -> bool {
+        self.seg < self.nseg
+    }
+
+    /// True if the current segment must produce words for a successor
+    /// (i.e. it is not the final segment).
+    #[inline]
+    pub fn producing(&self) -> bool {
+        self.seg + 1 < self.nseg
+    }
+
+    /// Supply the initial `o` words (index `k` in `0..o`).
+    #[inline]
+    pub fn supply(&mut self, k: usize, word: u32) {
+        debug_assert!((word as u64) < self.p.w());
+        self.w[k] = word;
+    }
+
+    /// Unpack the buffered words into the current segment's slots and write
+    /// the decoded symbols (length `l`); `tables` as in [`decode_row`].
+    pub fn begin_segment(&mut self, tables: &[&CodingTables], out: &mut [u16]) {
+        unpack(&self.p, &self.w, &mut self.slots);
+        let nd = tables.len();
+        for (pos, &slot) in self.slots.iter().enumerate() {
+            out[pos] = tables[pos % nd].slot_sym[slot as usize];
+        }
+    }
+
+    /// Fold group `g`'s digit/base pairs into the state (call only when
+    /// [`Self::producing`]).
+    pub fn push_group(&mut self, tables: &[&CodingTables], g: usize) {
+        let gsz = self.p.group_size() as usize;
+        let nd = tables.len();
+        let (mut gd, mut gr) = (0u64, 1u64);
+        for pos in g * gsz..(g + 1) * gsz {
+            let (_, digit, base) = tables[pos % nd].slot_decode(self.slots[pos]);
+            gd = gd * base + digit;
+            gr *= base;
+        }
+        // One multiply-add on the state; on the GPU this is the
+        // umul + __umul_hi pair of §IV-F.
+        self.d = self.d * gr + gd;
+        self.r *= gr;
+    }
+
+    /// Check `g`: returns `true` if the word was extracted from the state
+    /// (no load needed); on `false` the caller must [`Self::supply`] word
+    /// `g` from the stream.
+    pub fn check(&mut self, g: usize) -> bool {
+        if self.r >= self.p.w() {
+            self.w[g] = (self.d & (self.p.w() - 1)) as u32;
+            self.d >>= self.p.w_bits;
+            self.r >>= self.p.w_bits;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Advance to the next segment.
+    #[inline]
+    pub fn end_segment(&mut self) {
+        self.seg += 1;
+    }
+}
+
+/// Decode a full row of `nsyms` symbols from `words` (scalar driver).
+pub fn decode_row(
+    p: &AnsParams,
+    tables: &[&CodingTables],
+    words: &[u32],
+    nsyms: usize,
+) -> Result<Vec<u16>> {
+    p.validate()?;
+    if tables.is_empty() || p.l as usize % tables.len() != 0 {
+        return Err(DtansError::InvalidParams(
+            "need 1..=l tables with l % ndomains == 0".into(),
+        ));
+    }
+    let (l, o, f) = (p.l as usize, p.o as usize, p.f as usize);
+    let mut dec = RowDecoder::new(*p, nsyms)?;
+    let mut out = vec![0u16; nsyms];
+    if dec.nseg() == 0 {
+        return Ok(out);
+    }
+    let mut pos = 0usize;
+    let load = |pos: &mut usize| -> Result<u32> {
+        let w = *words
+            .get(*pos)
+            .ok_or_else(|| DtansError::CorruptStream("word stream exhausted".into()))?;
+        *pos += 1;
+        Ok(w)
+    };
+    for k in 0..o {
+        let w = load(&mut pos)?;
+        dec.supply(k, w);
+    }
+    while dec.active() {
+        let t = dec.seg();
+        dec.begin_segment(tables, &mut out[t * l..(t + 1) * l]);
+        if dec.producing() {
+            for g in 0..f {
+                dec.push_group(tables, g);
+                if !dec.check(g) {
+                    let w = load(&mut pos)?;
+                    dec.supply(g, w);
+                }
+            }
+            for k in f..o {
+                let w = load(&mut pos)?;
+                dec.supply(k, w);
+            }
+        }
+        dec.end_segment();
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ans::histogram::normalize_counts;
+    use crate::util::rng::Xoshiro256;
+
+    fn toy_tables() -> CodingTables {
+        // Fig. 3 tables: (a:1, b:4, c:3) over K=8, reused by the §IV-D
+        // dtANS example (M=4 satisfied).
+        CodingTables::build(&AnsParams::TOY, &[1, 4, 3]).unwrap()
+    }
+
+    #[test]
+    fn paper_toy_roundtrip() {
+        // The §IV-D example input (10 symbols, l=2 -> pad to 10 stays 10).
+        let t = toy_tables();
+        let tabs = [&t];
+        let syms: Vec<u16> = vec![2, 1, 2, 1, 2, 2, 1, 1, 1, 0];
+        let p = AnsParams::TOY;
+        let enc = encode_row(&p, &tabs, &syms).unwrap();
+        assert_eq!(enc.nseg, 5);
+        let dec = decode_row(&p, &tabs, &enc.words, syms.len()).unwrap();
+        assert_eq!(dec, syms);
+    }
+
+    #[test]
+    fn single_segment_row_costs_o_words() {
+        // A 1-segment row needs exactly the initial o words — the source of
+        // the paper's "~4 words for a 1-nonzero row" observation.
+        let t = toy_tables();
+        let tabs = [&t];
+        let p = AnsParams::TOY;
+        let enc = encode_row(&p, &tabs, &[1, 2]).unwrap();
+        assert_eq!(enc.words.len(), p.o as usize);
+        assert_eq!(decode_row(&p, &tabs, &enc.words, 2).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn empty_row() {
+        let t = toy_tables();
+        let p = AnsParams::TOY;
+        let enc = encode_row(&p, &[&t], &[]).unwrap();
+        assert!(enc.words.is_empty());
+        assert_eq!(decode_row(&p, &[&t], &[], 0).unwrap(), Vec::<u16>::new());
+    }
+
+    fn random_tables(p: &AnsParams, nsyms: usize, rng: &mut Xoshiro256) -> CodingTables {
+        let counts: Vec<u64> = (0..nsyms).map(|_| 1 + rng.below(1000)).collect();
+        let mult = normalize_counts(&counts, p.k(), p.m()).unwrap();
+        CodingTables::build(p, &mult).unwrap()
+    }
+
+    fn roundtrip_random(p: AnsParams, ndomains: usize, seed: u64, max_len_segments: usize) {
+        let mut rng = Xoshiro256::seeded(seed);
+        let min_syms = (p.k() as usize).div_ceil(p.m() as usize);
+        let t0 = random_tables(&p, min_syms.max(20), &mut rng);
+        let t1 = random_tables(&p, min_syms.max(300), &mut rng);
+        let tables: Vec<&CodingTables> = match ndomains {
+            1 => vec![&t0],
+            _ => vec![&t0, &t1],
+        };
+        for _ in 0..20 {
+            let nseg = rng.below_usize(max_len_segments + 1);
+            let nsyms = nseg * p.l as usize;
+            let syms: Vec<u16> = (0..nsyms)
+                .map(|i| {
+                    let t = tables[i % tables.len()];
+                    // Skew: mostly frequent symbols.
+                    if rng.chance(0.8) {
+                        // frequent symbol = argmax mult (symbol 0 is fine)
+                        (rng.below(4.min(t.num_symbols() as u64))) as u16
+                    } else {
+                        rng.below(t.num_symbols() as u64) as u16
+                    }
+                })
+                .collect();
+            let enc = encode_row(&p, &tables, &syms).unwrap();
+            let dec = decode_row(&p, &tables, &enc.words, nsyms).unwrap();
+            assert_eq!(dec, syms);
+            // The stream is never longer than nseg * o words.
+            assert!(enc.words.len() <= nseg.max(1) * p.o as usize || nseg == 0);
+        }
+    }
+
+    #[test]
+    fn roundtrip_paper_params() {
+        roundtrip_random(AnsParams::PAPER, 2, 101, 40);
+    }
+
+    #[test]
+    fn roundtrip_kernel_params() {
+        roundtrip_random(AnsParams::KERNEL, 2, 202, 60);
+    }
+
+    #[test]
+    fn roundtrip_single_domain() {
+        roundtrip_random(AnsParams::PAPER, 1, 303, 30);
+        roundtrip_random(AnsParams::KERNEL, 1, 304, 30);
+    }
+
+    #[test]
+    fn frequent_symbols_extract_more() {
+        // All-frequent input should extract (branch=true) much more often
+        // than all-rare input, i.e. consume fewer stream words.
+        let p = AnsParams::KERNEL;
+        let mut rng = Xoshiro256::seeded(7);
+        let t = random_tables(&p, 300, &mut rng);
+        let tabs = [&t];
+        // Find most and least frequent symbols.
+        let hot = (0..t.num_symbols()).max_by_key(|&s| t.sym_mult[s]).unwrap() as u16;
+        let cold = (0..t.num_symbols()).min_by_key(|&s| t.sym_mult[s]).unwrap() as u16;
+        let n = 64 * p.l as usize;
+        let e_hot = encode_row(&p, &tabs, &vec![hot; n]).unwrap();
+        let e_cold = encode_row(&p, &tabs, &vec![cold; n]).unwrap();
+        assert!(
+            e_hot.words.len() < e_cold.words.len(),
+            "hot {} vs cold {}",
+            e_hot.words.len(),
+            e_cold.words.len()
+        );
+    }
+
+    #[test]
+    fn truncated_stream_is_error_not_panic() {
+        let p = AnsParams::KERNEL;
+        let mut rng = Xoshiro256::seeded(8);
+        let t = random_tables(&p, 300, &mut rng);
+        let tabs = [&t];
+        let syms: Vec<u16> = (0..8 * p.l as usize)
+            .map(|_| rng.below(t.num_symbols() as u64) as u16)
+            .collect();
+        let enc = encode_row(&p, &tabs, &syms).unwrap();
+        let cut = &enc.words[..enc.words.len() - 1];
+        assert!(decode_row(&p, &tabs, cut, syms.len()).is_err());
+    }
+
+    #[test]
+    fn branch_count_matches_loads() {
+        let p = AnsParams::KERNEL;
+        let mut rng = Xoshiro256::seeded(9);
+        let t = random_tables(&p, 100, &mut rng);
+        let tabs = [&t];
+        let nseg = 17;
+        let syms: Vec<u16> = (0..nseg * p.l as usize)
+            .map(|_| rng.below(t.num_symbols() as u64) as u16)
+            .collect();
+        let enc = encode_row(&p, &tabs, &syms).unwrap();
+        let loads = enc.branches.iter().filter(|&&b| !b).count();
+        let expected =
+            p.o as usize + (nseg - 1) * (p.o - p.f) as usize + loads;
+        assert_eq!(enc.words.len(), expected);
+    }
+}

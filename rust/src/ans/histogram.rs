@@ -1,0 +1,168 @@
+//! Normalizing a symbol histogram to `K` table slots with per-symbol cap
+//! `M` — the approximation `P ≈ P'` of §III-D/§IV-C, chosen to minimize
+//! cross entropy `H(P, P')`.
+
+use crate::util::error::{DtansError, Result};
+
+/// Normalize raw counts to multiplicities summing exactly to `k`, with
+/// `1 ≤ mult[i] ≤ m_cap` for every symbol with `counts[i] > 0`.
+///
+/// Starts from the rounded proportional assignment and then repairs the sum
+/// by greedy steepest-descent on cross entropy: each unit moved to/from the
+/// symbol where the change costs least. This is the standard
+/// fast-normalization scheme for tANS tables, extended with the paper's
+/// multiplicity cap `M` (§IV-C).
+///
+/// Requirements: `counts` non-empty, every count > 0 (filter zeros before
+/// calling), `counts.len() ≤ k` and `counts.len() * m_cap ≥ k` (otherwise
+/// no assignment exists — the caller pads/duplicates symbols, see
+/// `format::symbolize`).
+pub fn normalize_counts(counts: &[u64], k: u32, m_cap: u32) -> Result<Vec<u32>> {
+    let n = counts.len();
+    let k = k as u64;
+    let m_cap = m_cap as u64;
+    if n == 0 {
+        return Err(DtansError::InvalidParams("empty histogram".into()));
+    }
+    if counts.iter().any(|&c| c == 0) {
+        return Err(DtansError::InvalidParams("zero count in histogram".into()));
+    }
+    if (n as u64) > k {
+        return Err(DtansError::InvalidParams(format!(
+            "{n} symbols exceed {k} slots"
+        )));
+    }
+    if (n as u64) * m_cap < k {
+        return Err(DtansError::InvalidParams(format!(
+            "{n} symbols with cap {m_cap} cannot fill {k} slots"
+        )));
+    }
+
+    let total: u64 = counts.iter().sum();
+    let mut mult: Vec<u64> = counts
+        .iter()
+        .map(|&c| {
+            let ideal = (c as f64) * (k as f64) / (total as f64);
+            (ideal.round() as u64).clamp(1, m_cap)
+        })
+        .collect();
+    let mut sum: u64 = mult.iter().sum();
+
+    // Cost of multiplicity q for count c is -c*log2(q/K); moving one unit
+    // changes the cost by c*log2(q/(q±1)). Repair the sum greedily. The
+    // histogram is at most K entries, so O(n) scans per unit are fine for
+    // the build path (encode-time only).
+    while sum != k {
+        if sum > k {
+            // Decrement where the entropy penalty is smallest.
+            let mut best = usize::MAX;
+            let mut best_cost = f64::INFINITY;
+            for i in 0..n {
+                if mult[i] > 1 {
+                    let c = counts[i] as f64;
+                    let q = mult[i] as f64;
+                    let cost = c * (q / (q - 1.0)).log2();
+                    if cost < best_cost {
+                        best_cost = cost;
+                        best = i;
+                    }
+                }
+            }
+            debug_assert!(best != usize::MAX);
+            mult[best] -= 1;
+            sum -= 1;
+        } else {
+            // Increment where the entropy gain is largest.
+            let mut best = usize::MAX;
+            let mut best_gain = f64::NEG_INFINITY;
+            for i in 0..n {
+                if mult[i] < m_cap {
+                    let c = counts[i] as f64;
+                    let q = mult[i] as f64;
+                    let gain = c * ((q + 1.0) / q).log2();
+                    if gain > best_gain {
+                        best_gain = gain;
+                        best = i;
+                    }
+                }
+            }
+            debug_assert!(best != usize::MAX);
+            mult[best] += 1;
+            sum += 1;
+        }
+    }
+    Ok(mult.into_iter().map(|x| x as u32).collect())
+}
+
+/// Cross entropy H(P, P') in bits/symbol for counts vs multiplicities
+/// normalized to `k` slots — Eq. (2) with `P'(i) = mult[i]/K`.
+pub fn cross_entropy_bits(counts: &[u64], mult: &[u32], k: u32) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    counts
+        .iter()
+        .zip(mult)
+        .map(|(&c, &q)| {
+            let p = c as f64 / total as f64;
+            let pq = q as f64 / k as f64;
+            -p * pq.log2()
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::stats::entropy_of_counts;
+
+    #[test]
+    fn paper_example_normalization() {
+        // §III-D: counts (a,1),(b,5),(c,4), K=8 -> P' = (1,4,3)/8 is the
+        // cross-entropy-optimal assignment (H' ~ 1.366 < 1.5 of (2,4,2)).
+        let mult = normalize_counts(&[1, 5, 4], 8, 8).unwrap();
+        assert_eq!(mult, vec![1, 4, 3]);
+    }
+
+    #[test]
+    fn sums_to_k_and_caps() {
+        let counts = vec![1000, 100, 10, 1];
+        let mult = normalize_counts(&counts, 64, 16).unwrap();
+        assert_eq!(mult.iter().sum::<u32>(), 64);
+        assert!(mult.iter().all(|&q| (1..=16).contains(&q)));
+        // Dominant symbol hits the cap.
+        assert_eq!(mult[0], 16);
+    }
+
+    #[test]
+    fn uniform_counts_uniform_slots() {
+        let mult = normalize_counts(&[7, 7, 7, 7], 16, 8).unwrap();
+        assert_eq!(mult, vec![4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn near_entropy_for_large_tables() {
+        // With a large table and no binding cap, H(P,P') ~ H(P).
+        let counts: Vec<u64> = (1..=32).map(|i| i * i).collect();
+        let mult = normalize_counts(&counts, 4096, 4096).unwrap();
+        let h = entropy_of_counts(counts.clone());
+        let hx = cross_entropy_bits(&counts, &mult, 4096);
+        assert!(hx >= h - 1e-9);
+        assert!(hx < h + 0.01, "H={h} H'={hx}");
+    }
+
+    #[test]
+    fn infeasible_rejected() {
+        assert!(normalize_counts(&[1; 10], 8, 8).is_err()); // too many symbols
+        assert!(normalize_counts(&[1, 1], 64, 8).is_err()); // cap too low
+        assert!(normalize_counts(&[], 8, 8).is_err());
+        assert!(normalize_counts(&[0, 3], 8, 8).is_err());
+    }
+
+    #[test]
+    fn single_symbol_fills_table() {
+        let mult = normalize_counts(&[42], 8, 8).unwrap();
+        assert_eq!(mult, vec![8]);
+    }
+}

@@ -1,0 +1,38 @@
+//! The entropy-coding core: classic tabled ANS (tANS, §III of the paper)
+//! as a reference implementation, and **dtANS** (§IV), the decoupled
+//! variant designed for fast parallel GPU decoding.
+//!
+//! dtANS differs from tANS in two ways that matter for GPUs:
+//!
+//! 1. **Word streams instead of bit streams.** The compressed stream `v`
+//!    holds `W`-radix words (4-byte words on the GPU). Threads of a warp
+//!    share one interleaved stream; per decoded segment each thread needs
+//!    at most `o` words, of which `f` are *conditional* (extracted from the
+//!    decoder state when its radix `r ≥ W`, loaded from the stream
+//!    otherwise) and `o − f` unconditional.
+//! 2. **Segments instead of per-symbol dependencies.** `l` symbols are
+//!    decoded at once from an `unpack` of the `o` buffered words, restoring
+//!    instruction-level parallelism that the sequential tANS state update
+//!    destroys; the returned digit/base pairs are then folded back into the
+//!    decoder state group-wise.
+//!
+//! The encoder is the paper's two-pass scheme: a forward *base pass* that
+//! replays only the radix `r` (and therefore the exact branch pattern of
+//! the decoder), and a backward *digit pass* that picks slots via
+//! `digit = d mod base` — exactly inverse to the decoder.
+//!
+//! Correctness hinges on an exact invariant we maintain (and property-test):
+//! the backward encoder state is always `< r` of the forward replay at the
+//! same point; since `r = 1` at stream start, the leftover state is forced
+//! to 0 — which is why the decoder can initialize `d = 0, r = 1`.
+
+pub mod dtans;
+pub mod histogram;
+pub mod params;
+pub mod tables;
+pub mod tans;
+
+pub use dtans::{decode_row, encode_row, RowDecoder, RowEncoding};
+pub use histogram::normalize_counts;
+pub use params::AnsParams;
+pub use tables::CodingTables;

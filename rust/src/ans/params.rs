@@ -1,0 +1,190 @@
+//! dtANS codec parameters and the constraints tying them together
+//! (§IV-C/D of the paper).
+
+use crate::util::error::{DtansError, Result};
+
+/// Parameters of a dtANS code.
+///
+/// * `W = 2^w_bits` — radix of the compressed word stream. The paper uses
+///   the GPU word size `W = 2^32`.
+/// * `K = 2^k_bits` — number of slots in each coding table. The paper uses
+///   `K = 4096` so the tables fit in shared memory.
+/// * `M = 2^m_bits` — upper bound on per-symbol multiplicity (new in
+///   dtANS vs tANS). Small `M` makes more loads unconditional; the paper
+///   uses `M = 256` so returned digits fit 8 bits.
+/// * `l` — symbols per segment (decoded in parallel). With value+delta
+///   interleaving, a segment covers `l/2` nonzeros.
+/// * `o` — words consumed per segment; chosen so `K^l = W^o`.
+/// * `f` — conditional checks per segment; chosen so `M^l = W^f`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AnsParams {
+    /// log2 of the stream word radix W.
+    pub w_bits: u32,
+    /// log2 of the table size K.
+    pub k_bits: u32,
+    /// log2 of the multiplicity cap M.
+    pub m_bits: u32,
+    /// Symbols per segment.
+    pub l: u32,
+    /// Words per segment.
+    pub o: u32,
+    /// Conditional checks per segment.
+    pub f: u32,
+}
+
+impl AnsParams {
+    /// The paper's CSR-dtANS parameters: `W=2^32, K=4096, M=256, l=8, o=3,
+    /// f=2` — 4 nonzeros per segment, both constraint inequalities tight.
+    pub const PAPER: AnsParams = AnsParams {
+        w_bits: 32,
+        k_bits: 12,
+        m_bits: 8,
+        l: 8,
+        o: 3,
+        f: 2,
+    };
+
+    /// Scaled-down parameters for the Pallas kernel (all arithmetic fits
+    /// i64, which the TPU/interpret path handles natively): `W=2^16,
+    /// K=4096, M=256, l=4, o=3, f=2` — 2 nonzeros per segment, both
+    /// constraints again tight.
+    pub const KERNEL: AnsParams = AnsParams {
+        w_bits: 16,
+        k_bits: 12,
+        m_bits: 8,
+        l: 4,
+        o: 3,
+        f: 2,
+    };
+
+    /// A tiny configuration mirroring the paper's worked example machine
+    /// (word size 2 bits, K=8, M=4, l=2, o=3, f=2) — used in tests to stay
+    /// close to §IV-D.
+    pub const TOY: AnsParams = AnsParams {
+        w_bits: 2,
+        k_bits: 3,
+        m_bits: 2,
+        l: 2,
+        o: 3,
+        f: 2,
+    };
+
+    /// Word radix W.
+    #[inline]
+    pub fn w(&self) -> u64 {
+        1u64 << self.w_bits
+    }
+
+    /// Table size K.
+    #[inline]
+    pub fn k(&self) -> u32 {
+        1u32 << self.k_bits
+    }
+
+    /// Multiplicity cap M.
+    #[inline]
+    pub fn m(&self) -> u32 {
+        1u32 << self.m_bits
+    }
+
+    /// Digits per group (`l / f`): each group is accumulated into a single
+    /// ≤ W digit/base pair before being pushed onto the state.
+    #[inline]
+    pub fn group_size(&self) -> u32 {
+        self.l / self.f
+    }
+
+    /// Validate the constraint system.
+    pub fn validate(&self) -> Result<()> {
+        let err = |m: String| Err(DtansError::InvalidParams(m));
+        if self.w_bits == 0 || self.w_bits > 32 {
+            return err(format!("w_bits {} out of range [1,32]", self.w_bits));
+        }
+        if self.k_bits == 0 || self.k_bits > 16 {
+            return err(format!("k_bits {} out of range [1,16]", self.k_bits));
+        }
+        if self.m_bits == 0 || self.m_bits > self.k_bits || self.m_bits > 8 {
+            // m_bits ≤ 8 keeps `base - 1` in one byte (the packed-slot and
+            // decremented-radix layout of §IV-F).
+            return err(format!("m_bits {} out of range [1, min(k_bits, 8)]", self.m_bits));
+        }
+        if self.l == 0 || self.f == 0 || self.o == 0 {
+            return err("l, o, f must be positive".into());
+        }
+        if self.f > self.o {
+            return err(format!("f={} may not exceed o={}", self.f, self.o));
+        }
+        if self.l % self.f != 0 {
+            return err(format!("l={} must be a multiple of f={}", self.l, self.f));
+        }
+        // unpack must be a bijection between o words and l slots.
+        if self.k_bits * self.l != self.w_bits * self.o {
+            return err(format!(
+                "K^l must equal W^o (k_bits*l={} vs w_bits*o={})",
+                self.k_bits * self.l,
+                self.w_bits * self.o
+            ));
+        }
+        // The decoder state must return below W after the f checks.
+        if self.m_bits * self.l > self.w_bits * self.f {
+            return err(format!(
+                "M^l must not exceed W^f (m_bits*l={} vs w_bits*f={})",
+                self.m_bits * self.l,
+                self.w_bits * self.f
+            ));
+        }
+        // A digit group must fit in one word so the group accumulation is
+        // a single multiply-add (the paper's §IV-F "positioning of checks").
+        if self.m_bits * self.group_size() > self.w_bits {
+            return err(format!(
+                "group of {} digits with M=2^{} exceeds one word",
+                self.group_size(),
+                self.m_bits
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_valid() {
+        AnsParams::PAPER.validate().unwrap();
+        AnsParams::KERNEL.validate().unwrap();
+        AnsParams::TOY.validate().unwrap();
+    }
+
+    #[test]
+    fn paper_preset_matches_text() {
+        let p = AnsParams::PAPER;
+        assert_eq!(p.w(), 1 << 32);
+        assert_eq!(p.k(), 4096);
+        assert_eq!(p.m(), 256);
+        assert_eq!((p.l, p.o, p.f), (8, 3, 2));
+        assert_eq!(p.group_size(), 4);
+    }
+
+    #[test]
+    fn rejects_unbalanced_unpack() {
+        let mut p = AnsParams::PAPER;
+        p.o = 2;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_m() {
+        let mut p = AnsParams::KERNEL;
+        p.m_bits = 12; // M^l = 2^48 > W^f = 2^32
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_f_gt_o() {
+        let mut p = AnsParams::KERNEL;
+        p.f = 4;
+        assert!(p.validate().is_err());
+    }
+}

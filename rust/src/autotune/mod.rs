@@ -1,0 +1,14 @@
+//! Format autotuner — the AlphaSparse stand-in for the Fig. 9 experiment.
+//!
+//! AlphaSparse [13] searches a large design space of formats and kernel
+//! parameters per matrix (taking hours) and emits the fastest kernel it
+//! finds. Our substitute exhaustively sweeps the simulator over the same
+//! *kind* of space — the four classic kernels times their tile/slice
+//! parameters — and returns the best, along with an honest account of the
+//! search cost (the sum of all simulated candidate runtimes plus a
+//! per-candidate compilation overhead, which is what makes the real
+//! AlphaSparse impractical).
+
+pub mod search;
+
+pub use search::{autotune, dtans_time_us, Candidate, TuneResult, TuneSpace};

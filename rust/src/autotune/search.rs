@@ -1,0 +1,188 @@
+//! Exhaustive search over the format × parameter space via the simulator.
+
+use crate::format::csr_dtans::CsrDtans;
+use crate::matrix::csr::Csr;
+use crate::matrix::sell::Sell;
+use crate::matrix::Precision;
+use crate::sim::{simulate, GpuModel, KernelKind, SimInput};
+
+/// One point in the search space.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    /// Kernel family.
+    pub kind: KernelKind,
+    /// SELL slice height (only for `Sell`).
+    pub sell_height: usize,
+}
+
+impl Candidate {
+    /// Report label.
+    pub fn label(&self) -> String {
+        match self.kind {
+            KernelKind::Sell => format!("SELL-{}", self.sell_height),
+            k => k.label().to_string(),
+        }
+    }
+}
+
+/// The search space definition.
+#[derive(Debug, Clone)]
+pub struct TuneSpace {
+    /// SELL slice heights to sweep.
+    pub sell_heights: Vec<usize>,
+    /// Include the row-split CSR-vector variant.
+    pub include_vector: bool,
+    /// Per-candidate code-generation overhead in microseconds — models
+    /// AlphaSparse's compilation step (the source of its "hours per
+    /// matrix" cost).
+    pub codegen_overhead_us: f64,
+}
+
+impl Default for TuneSpace {
+    fn default() -> Self {
+        TuneSpace {
+            sell_heights: vec![4, 8, 16, 32, 64, 128],
+            include_vector: true,
+            codegen_overhead_us: 30e6, // ~30 s compile per candidate kernel
+        }
+    }
+}
+
+/// Autotuning outcome.
+#[derive(Debug, Clone)]
+pub struct TuneResult {
+    /// Winning candidate.
+    pub best: Candidate,
+    /// Simulated runtime of the winner (µs).
+    pub best_us: f64,
+    /// Total search cost (µs) including per-candidate codegen overhead.
+    pub search_cost_us: f64,
+    /// All evaluated candidates with their times.
+    pub evaluated: Vec<(Candidate, f64)>,
+}
+
+/// Exhaustively evaluate the space on a matrix; `warm` selects cache state.
+pub fn autotune(
+    csr: &Csr,
+    precision: Precision,
+    space: &TuneSpace,
+    dev: &GpuModel,
+    warm: bool,
+) -> TuneResult {
+    let mut evaluated: Vec<(Candidate, f64)> = Vec::new();
+    let mut search_cost = 0.0;
+
+    let base_input = SimInput {
+        csr,
+        sell: None,
+        enc: None,
+        precision,
+    };
+    let mut kinds = vec![KernelKind::CsrScalar, KernelKind::Coo];
+    if space.include_vector {
+        kinds.push(KernelKind::CsrVector);
+    }
+    for kind in kinds {
+        let r = simulate(kind, &base_input, dev, warm);
+        evaluated.push((Candidate { kind, sell_height: 0 }, r.time_us));
+        search_cost += r.time_us + space.codegen_overhead_us;
+    }
+    for &h in &space.sell_heights {
+        let sell = Sell::from_csr(csr, h);
+        let inp = SimInput {
+            csr,
+            sell: Some(&sell),
+            enc: None,
+            precision,
+        };
+        let r = simulate(KernelKind::Sell, &inp, dev, warm);
+        evaluated.push((
+            Candidate {
+                kind: KernelKind::Sell,
+                sell_height: h,
+            },
+            r.time_us,
+        ));
+        search_cost += r.time_us + space.codegen_overhead_us;
+    }
+
+    let (best, best_us) = evaluated
+        .iter()
+        .cloned()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .expect("non-empty space");
+    TuneResult {
+        best,
+        best_us,
+        search_cost_us: search_cost,
+        evaluated,
+    }
+}
+
+/// Simulated CSR-dtANS runtime for the same matrix (the fixed-format
+/// contender in Fig. 9).
+pub fn dtans_time_us(
+    csr: &Csr,
+    enc: &CsrDtans,
+    precision: Precision,
+    dev: &GpuModel,
+    warm: bool,
+) -> f64 {
+    let inp = SimInput {
+        csr,
+        sell: None,
+        enc: Some(enc),
+        precision,
+    };
+    simulate(KernelKind::CsrDtans, &inp, dev, warm).time_us
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen::structured::{banded, powerlaw_rows};
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn finds_a_winner_and_charges_search_cost() {
+        let m = banded(5000, 3);
+        let space = TuneSpace::default();
+        let r = autotune(&m, Precision::F32, &space, &GpuModel::RTX5090, true);
+        assert!(!r.evaluated.is_empty());
+        assert!(r.best_us > 0.0);
+        // Search cost is dominated by codegen overhead — the paper's
+        // "extreme computation overhead" of AlphaSparse.
+        assert!(r.search_cost_us > 100e6);
+        assert!(r.evaluated.iter().all(|(_, t)| *t >= r.best_us));
+    }
+
+    #[test]
+    fn regular_matrix_prefers_sell_like_kernels() {
+        // Banded matrices have uniform rows: SELL should beat COO.
+        let m = banded(20_000, 4);
+        let r = autotune(&m, Precision::F32, &TuneSpace::default(), &GpuModel::RTX5090, true);
+        let coo_time = r
+            .evaluated
+            .iter()
+            .find(|(c, _)| c.kind == KernelKind::Coo)
+            .unwrap()
+            .1;
+        assert!(r.best_us <= coo_time);
+    }
+
+    #[test]
+    fn irregular_matrix_not_csr_scalar() {
+        let mut rng = Xoshiro256::seeded(4);
+        let m = powerlaw_rows(20_000, 8.0, 1.2, &mut rng);
+        let r = autotune(&m, Precision::F32, &TuneSpace::default(), &GpuModel::RTX5090, true);
+        // Scalar CSR pays the warp-max divergence on power-law rows; the
+        // tuner must find something better.
+        let scalar = r
+            .evaluated
+            .iter()
+            .find(|(c, _)| c.kind == KernelKind::CsrScalar)
+            .unwrap()
+            .1;
+        assert!(r.best_us < scalar);
+    }
+}

@@ -1,0 +1,100 @@
+//! Service metrics: request counters and latency quantiles.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Lock-free counters + a mutexed latency reservoir.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Requests accepted.
+    pub submitted: AtomicU64,
+    /// Requests completed successfully.
+    pub completed: AtomicU64,
+    /// Requests failed.
+    pub failed: AtomicU64,
+    /// Batches executed.
+    pub batches: AtomicU64,
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+/// Quantile summary of request latencies.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencySummary {
+    /// Number of samples.
+    pub count: usize,
+    /// 50th percentile, microseconds.
+    pub p50_us: u64,
+    /// 99th percentile, microseconds.
+    pub p99_us: u64,
+    /// Maximum, microseconds.
+    pub max_us: u64,
+}
+
+impl Metrics {
+    /// Record one completed request's latency.
+    pub fn record_latency(&self, micros: u64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        let mut l = self.latencies_us.lock().unwrap();
+        // Bounded reservoir: keep the most recent 64k samples.
+        if l.len() >= 65536 {
+            l.drain(..32768);
+        }
+        l.push(micros);
+    }
+
+    /// Quantile summary over the recorded reservoir.
+    pub fn latency_summary(&self) -> LatencySummary {
+        let mut l = self.latencies_us.lock().unwrap().clone();
+        if l.is_empty() {
+            return LatencySummary::default();
+        }
+        l.sort_unstable();
+        let q = |p: f64| l[((l.len() - 1) as f64 * p) as usize];
+        LatencySummary {
+            count: l.len(),
+            p50_us: q(0.50),
+            p99_us: q(0.99),
+            max_us: *l.last().unwrap(),
+        }
+    }
+
+    /// One-line human-readable report.
+    pub fn report(&self) -> String {
+        let s = self.latency_summary();
+        format!(
+            "submitted={} completed={} failed={} batches={} p50={}µs p99={}µs max={}µs",
+            self.submitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            s.p50_us,
+            s.p99_us,
+            s.max_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles() {
+        let m = Metrics::default();
+        for i in 1..=100 {
+            m.record_latency(i);
+        }
+        let s = m.latency_summary();
+        assert_eq!(s.count, 100);
+        assert!((49..=51).contains(&s.p50_us));
+        assert!(s.p99_us >= 98);
+        assert_eq!(s.max_us, 100);
+    }
+
+    #[test]
+    fn empty_summary() {
+        let m = Metrics::default();
+        assert_eq!(m.latency_summary().count, 0);
+        assert!(m.report().contains("submitted=0"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Layer-3 coordinator: a batching SpMVM service with per-matrix format
+//! routing (the production wrapper around the paper's kernel — encode
+//! once, decode on every multiply, as in the iterative-solver and
+//! ML-inference scenarios the paper motivates).
+
+pub mod metrics;
+pub mod router;
+pub mod service;
+
+pub use metrics::{LatencySummary, Metrics};
+pub use router::{FormatChoice, RoutePolicy};
+pub use service::{Pending, ServiceConfig, SpmvService};

@@ -1,0 +1,102 @@
+//! Format routing: decide, per registered matrix, whether SpMVM requests
+//! run over CSR-dtANS or plain CSR.
+//!
+//! The policy distills the paper's Tables I–II conclusion: "size is the
+//! most important feature to predict whether a matrix is likely to see a
+//! speedup; the number of nonzeros per row determines the magnitude" — so
+//! dtANS is selected when the matrix is large enough *and* actually
+//! compressed (otherwise decode overhead buys nothing).
+
+use crate::format::csr_dtans::{CsrDtans, EncodeOptions};
+use crate::matrix::csr::Csr;
+use crate::matrix::SizeModel;
+
+/// Routing decision for one matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FormatChoice {
+    /// Plain CSR kernel.
+    Csr,
+    /// Entropy-coded CSR-dtANS kernel.
+    CsrDtans,
+}
+
+/// Tunable routing thresholds (defaults follow the paper's findings,
+/// scaled down: the paper's crossover is ~2^25 nnz on an RTX 5090; the
+/// CPU testbed crossover sits far lower, so the *structure* of the rule is
+/// what we reproduce).
+#[derive(Debug, Clone, Copy)]
+pub struct RoutePolicy {
+    /// Minimum nonzeros before compression can pay off.
+    pub min_nnz: usize,
+    /// Required compressed/baseline size ratio (must be below this).
+    pub max_size_ratio: f64,
+}
+
+impl Default for RoutePolicy {
+    fn default() -> Self {
+        RoutePolicy {
+            min_nnz: 1 << 15,
+            max_size_ratio: 0.9,
+        }
+    }
+}
+
+impl RoutePolicy {
+    /// Decide the format for a matrix given its (pre-computed) encoding.
+    pub fn choose(&self, csr: &Csr, enc: &CsrDtans, opts: &EncodeOptions) -> FormatChoice {
+        if csr.nnz() < self.min_nnz {
+            return FormatChoice::Csr;
+        }
+        let model = SizeModel {
+            precision: opts.precision,
+        };
+        let (baseline, _) = model.best_baseline_bytes(csr);
+        let ratio = enc.size_report().total as f64 / baseline.max(1) as f64;
+        if ratio < self.max_size_ratio {
+            FormatChoice::CsrDtans
+        } else {
+            FormatChoice::Csr
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen::structured::banded;
+    use crate::matrix::gen::{assign_values, ValueDist};
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn small_matrices_stay_csr() {
+        let m = banded(100, 2);
+        let enc = CsrDtans::encode(&m, &EncodeOptions::default()).unwrap();
+        let p = RoutePolicy::default();
+        assert_eq!(p.choose(&m, &enc, &EncodeOptions::default()), FormatChoice::Csr);
+    }
+
+    #[test]
+    fn large_compressible_matrices_route_to_dtans() {
+        let mut m = banded(40_000, 2); // ~120k nnz, highly structured
+        assign_values(&mut m, ValueDist::Ones, &mut Xoshiro256::seeded(1));
+        let opts = EncodeOptions::default();
+        let enc = CsrDtans::encode(&m, &opts).unwrap();
+        let p = RoutePolicy::default();
+        assert_eq!(p.choose(&m, &enc, &opts), FormatChoice::CsrDtans);
+    }
+
+    #[test]
+    fn incompressible_matrices_stay_csr() {
+        let mut rng = Xoshiro256::seeded(2);
+        let mut m = crate::matrix::gen::structured::random_uniform(8000, 8000, 80_000, &mut rng);
+        assign_values(&mut m, ValueDist::Random, &mut rng);
+        let opts = EncodeOptions::default();
+        let enc = CsrDtans::encode(&m, &opts).unwrap();
+        let p = RoutePolicy {
+            min_nnz: 1 << 10,
+            ..Default::default()
+        };
+        // Random values + random pattern: dtANS cannot win on size.
+        assert_eq!(p.choose(&m, &enc, &opts), FormatChoice::Csr);
+    }
+}

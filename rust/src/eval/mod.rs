@@ -1,0 +1,10 @@
+//! Evaluation harness: the synthetic corpus and the drivers that
+//! regenerate every table and figure of the paper's §V (see the
+//! experiment index in DESIGN.md).
+
+pub mod corpus;
+pub mod experiments;
+pub mod report;
+
+pub use corpus::{build_corpus, CorpusEntry, CorpusScale};
+pub use experiments::{ablate, fig4, fig6, fig9, runtime_experiment, tab1, ExperimentOutput};

@@ -1,0 +1,36 @@
+//! Saving experiment outputs: CSV per table under `results/`, summaries
+//! appended to stdout and returned for EXPERIMENTS.md.
+
+use super::experiments::ExperimentOutput;
+use crate::util::error::Result;
+use std::path::Path;
+
+/// Save all tables of an experiment under `dir` and return the summary.
+pub fn save(out: &ExperimentOutput, dir: &Path) -> Result<String> {
+    for (stem, table) in &out.tables {
+        let path = dir.join(format!("{stem}.csv"));
+        table.save_csv(&path)?;
+    }
+    Ok(out.summary.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::csv::Table;
+
+    #[test]
+    fn saves_tables() {
+        let mut t = Table::new(&["a"]);
+        t.push(vec!["1".into()]);
+        let out = ExperimentOutput {
+            tables: vec![("unit_test_table".into(), t)],
+            summary: "ok".into(),
+        };
+        let dir = std::env::temp_dir().join("dtans_report_test");
+        let s = save(&out, &dir).unwrap();
+        assert_eq!(s, "ok");
+        assert!(dir.join("unit_test_table.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

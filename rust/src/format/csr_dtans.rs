@@ -1,0 +1,570 @@
+//! The CSR-dtANS container (§IV): a CSR matrix whose delta-encoded column
+//! indices and values are entropy-coded with dtANS, stored as
+//! warp-interleaved word streams plus shared coding tables.
+
+use super::interleave::interleave_slice;
+use super::symbolize::{Domain, SymbolPicker};
+use crate::ans::dtans::{encode_row, RowDecoder, RowEncoding};
+use crate::ans::params::AnsParams;
+use crate::ans::tables::CodingTables;
+use crate::matrix::csr::Csr;
+use crate::matrix::Precision;
+use crate::util::error::{DtansError, Result};
+use std::collections::HashMap;
+
+/// Warp width: rows per slice, lanes per decode group.
+pub const WARP: usize = 32;
+
+/// Encoding options.
+#[derive(Debug, Clone, Copy)]
+pub struct EncodeOptions {
+    /// Codec parameters (PAPER by default).
+    pub params: AnsParams,
+    /// Value precision (affects symbolization and size accounting).
+    pub precision: Precision,
+    /// Delta-encode column indices before entropy coding (§IV-A). Disabled
+    /// only by the ablation benchmarks.
+    pub delta_encode: bool,
+}
+
+impl Default for EncodeOptions {
+    fn default() -> Self {
+        EncodeOptions {
+            params: AnsParams::PAPER,
+            precision: Precision::F64,
+            delta_encode: true,
+        }
+    }
+}
+
+/// Byte-size breakdown of a CSR-dtANS matrix (the paper's Fig. 6 size
+/// accounting: constant table cost + stream + per-row n + escapes).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SizeReport {
+    /// Fixed header.
+    pub header: usize,
+    /// Both K-slot tables (4 B packed entry per slot).
+    pub tables: usize,
+    /// Dictionary payload arrays.
+    pub dicts: usize,
+    /// Interleaved word streams.
+    pub stream: usize,
+    /// Per-row nonzero counts (the paper's 4-byte `n` per row).
+    pub row_lens: usize,
+    /// Per-slice stream offsets.
+    pub slice_offsets: usize,
+    /// Escaped raw payloads (side streams).
+    pub escapes: usize,
+    /// Per-row escape offsets (present only when escapes exist).
+    pub escape_offsets: usize,
+    /// Sum of all components.
+    pub total: usize,
+}
+
+/// A CSR matrix compressed with dtANS.
+#[derive(Debug, Clone)]
+pub struct CsrDtans {
+    /// Codec parameters.
+    pub params: AnsParams,
+    /// Value precision.
+    pub precision: Precision,
+    /// Whether column indices were delta-encoded.
+    pub delta_encode: bool,
+    /// Logical shape.
+    pub nrows: usize,
+    /// Columns.
+    pub ncols: usize,
+    /// Nonzeros.
+    pub nnz: usize,
+    /// Delta-domain dictionary/escape/multiplicity info.
+    pub delta_domain: Domain,
+    /// Value-domain dictionary/escape/multiplicity info.
+    pub value_domain: Domain,
+    /// Delta coding tables (K slots).
+    pub delta_tables: CodingTables,
+    /// Value coding tables (K slots).
+    pub value_tables: CodingTables,
+    /// Per-row nonzero count.
+    pub row_nnz: Vec<u32>,
+    /// Word offset of each slice's interleaved stream (len = nslices + 1).
+    pub slice_offsets: Vec<u32>,
+    /// All slices' interleaved words.
+    pub stream: Vec<u32>,
+    /// Escaped delta payloads, row-major.
+    pub delta_escapes: Vec<u32>,
+    /// Escaped value payloads (bit patterns), row-major.
+    pub value_escapes: Vec<u64>,
+    /// Per-row start into `delta_escapes` (len = nrows + 1).
+    pub delta_esc_offsets: Vec<u32>,
+    /// Per-row start into `value_escapes` (len = nrows + 1).
+    pub value_esc_offsets: Vec<u32>,
+}
+
+#[inline]
+fn value_payload(v: f64, prec: Precision) -> u64 {
+    match prec {
+        Precision::F64 => v.to_bits(),
+        Precision::F32 => (v as f32).to_bits() as u64,
+    }
+}
+
+#[inline]
+fn value_from_payload(p: u64, prec: Precision) -> f64 {
+    match prec {
+        Precision::F64 => f64::from_bits(p),
+        Precision::F32 => f32::from_bits(p as u32) as f64,
+    }
+}
+
+impl CsrDtans {
+    /// Nonzeros per segment (`l / 2`: one delta + one value symbol each).
+    #[inline]
+    pub fn nnz_per_segment(&self) -> usize {
+        self.params.l as usize / 2
+    }
+
+    /// Number of row slices.
+    pub fn nslices(&self) -> usize {
+        self.nrows.div_ceil(WARP)
+    }
+
+    /// Segments of row `r`.
+    #[inline]
+    pub fn row_segments(&self, r: usize) -> usize {
+        (self.row_nnz[r] as usize).div_ceil(self.nnz_per_segment())
+    }
+
+    /// Encode with default options at the given precision.
+    pub fn encode_f64(csr: &Csr, opts: &EncodeOptions) -> Result<CsrDtans> {
+        Self::encode(csr, opts)
+    }
+
+    /// Encode a CSR matrix into CSR-dtANS.
+    pub fn encode(csr: &Csr, opts: &EncodeOptions) -> Result<CsrDtans> {
+        opts.params.validate()?;
+        let p = opts.params;
+        if p.l % 2 != 0 {
+            return Err(DtansError::InvalidParams(
+                "l must be even (delta+value per nonzero)".into(),
+            ));
+        }
+        let prec = opts.precision;
+        let nps = p.l as usize / 2; // nonzeros per segment
+
+        // ---- Pass 1: histograms over delta and value payloads. ----
+        let mut dcounts: HashMap<u64, u64> = HashMap::new();
+        let mut vcounts: HashMap<u64, u64> = HashMap::new();
+        let mut deltas: Vec<u32> = Vec::with_capacity(csr.nnz());
+        for r in 0..csr.nrows {
+            let cols = csr.row_cols(r);
+            let mut prev = 0u32;
+            for (i, &c) in cols.iter().enumerate() {
+                let d = if i == 0 || !opts.delta_encode { c } else { c - prev };
+                deltas.push(d);
+                *dcounts.entry(d as u64).or_insert(0) += 1;
+                prev = c;
+            }
+            for &v in csr.row_vals(r) {
+                *vcounts.entry(value_payload(v, prec)).or_insert(0) += 1;
+            }
+        }
+
+        let value_bits = 8 * prec.value_bytes() as u32;
+        let delta_domain = Domain::build(&dcounts, &p, 32)?;
+        let value_domain = Domain::build(&vcounts, &p, value_bits)?;
+        let delta_tables = CodingTables::build(&p, &delta_domain.mult)?;
+        let value_tables = CodingTables::build(&p, &value_domain.mult)?;
+        let tabs = [&delta_tables, &value_tables];
+
+        // ---- Pass 2: symbolize and encode each row. ----
+        let mut picker_d = SymbolPicker::default();
+        let mut picker_v = SymbolPicker::default();
+        let mut row_encs: Vec<RowEncoding> = Vec::with_capacity(csr.nrows);
+        let mut delta_escapes = Vec::new();
+        let mut value_escapes = Vec::new();
+        let mut delta_esc_offsets = Vec::with_capacity(csr.nrows + 1);
+        let mut value_esc_offsets = Vec::with_capacity(csr.nrows + 1);
+        delta_esc_offsets.push(0u32);
+        value_esc_offsets.push(0u32);
+        let mut syms: Vec<u16> = Vec::new();
+        let mut nz_cursor = 0usize;
+        for r in 0..csr.nrows {
+            let nnz_r = csr.row_len(r);
+            let nseg = nnz_r.div_ceil(nps);
+            syms.clear();
+            for i in 0..nseg * nps {
+                if i < nnz_r {
+                    let d = deltas[nz_cursor + i] as u64;
+                    let (ds, desc) = delta_domain.sym_for(d, &mut picker_d);
+                    if desc {
+                        delta_escapes.push(d as u32);
+                    }
+                    syms.push(ds);
+                    let vp = value_payload(csr.row_vals(r)[i], prec);
+                    let (vs, vesc) = value_domain.sym_for(vp, &mut picker_v);
+                    if vesc {
+                        value_escapes.push(vp);
+                    }
+                    syms.push(vs);
+                } else {
+                    // Padding (§IV-F): any symbol; the decoder knows n and
+                    // ignores it. Pads are never escape symbols.
+                    syms.push(delta_domain.pad_sym);
+                    syms.push(value_domain.pad_sym);
+                }
+            }
+            nz_cursor += nnz_r;
+            row_encs.push(encode_row(&p, &tabs, &syms)?);
+            delta_esc_offsets.push(delta_escapes.len() as u32);
+            value_esc_offsets.push(value_escapes.len() as u32);
+        }
+
+        // ---- Pass 3: warp-interleave slices. ----
+        let nslices = csr.nrows.div_ceil(WARP);
+        let mut stream = Vec::new();
+        let mut slice_offsets = Vec::with_capacity(nslices + 1);
+        slice_offsets.push(0u32);
+        for s in 0..nslices {
+            let r0 = s * WARP;
+            let r1 = (r0 + WARP).min(csr.nrows);
+            let words = interleave_slice(&p, &row_encs[r0..r1]);
+            stream.extend_from_slice(&words);
+            slice_offsets.push(stream.len() as u32);
+        }
+
+        Ok(CsrDtans {
+            params: p,
+            precision: prec,
+            delta_encode: opts.delta_encode,
+            nrows: csr.nrows,
+            ncols: csr.ncols,
+            nnz: csr.nnz(),
+            delta_domain,
+            value_domain,
+            delta_tables,
+            value_tables,
+            row_nnz: (0..csr.nrows).map(|r| csr.row_len(r) as u32).collect(),
+            slice_offsets,
+            stream,
+            delta_escapes,
+            value_escapes,
+            delta_esc_offsets,
+            value_esc_offsets,
+        })
+    }
+
+    /// Replay the warp-synchronous decode of one slice, invoking
+    /// `emit(row, col, value)` for every nonzero (in per-lane column order).
+    ///
+    /// This is the CUDA kernel's control flow executed in lockstep on the
+    /// CPU: one shared stream cursor, per-event lane ranks, per-lane
+    /// decoder state — see `spmv::csr_dtans` for the fused SpMVM variant.
+    pub fn walk_slice<F: FnMut(usize, u32, f64)>(&self, slice: usize, mut emit: F) -> Result<()> {
+        let p = &self.params;
+        let (l, o, f) = (p.l as usize, p.o as usize, p.f as usize);
+        let nps = self.nnz_per_segment();
+        let r0 = slice * WARP;
+        let r1 = (r0 + WARP).min(self.nrows);
+        let lanes = r1 - r0;
+        let stream = &self.stream
+            [self.slice_offsets[slice] as usize..self.slice_offsets[slice + 1] as usize];
+        let mut pos = 0usize;
+        let load = |pos: &mut usize| -> Result<u32> {
+            let w = *stream
+                .get(*pos)
+                .ok_or_else(|| DtansError::CorruptStream("slice stream exhausted".into()))?;
+            *pos += 1;
+            Ok(w)
+        };
+
+        let tabs = [&self.delta_tables, &self.value_tables];
+        let mut dec: Vec<RowDecoder> = (0..lanes)
+            .map(|i| RowDecoder::new(*p, self.row_segments(r0 + i) * l))
+            .collect::<Result<_>>()?;
+        // Per-lane progress state.
+        let mut emitted = vec![0usize; lanes];
+        let mut col_acc = vec![0u32; lanes];
+        let mut esc_d: Vec<usize> = (0..lanes)
+            .map(|i| self.delta_esc_offsets[r0 + i] as usize)
+            .collect();
+        let mut esc_v: Vec<usize> = (0..lanes)
+            .map(|i| self.value_esc_offsets[r0 + i] as usize)
+            .collect();
+        let mut sym_buf = vec![0u16; l];
+
+        // Initial o words for non-empty lanes.
+        for k in 0..o {
+            for lane in 0..lanes {
+                if dec[lane].nseg() > 0 {
+                    let w = load(&mut pos)?;
+                    dec[lane].supply(k, w);
+                }
+            }
+        }
+        let max_seg = (0..lanes).map(|i| dec[i].nseg()).max().unwrap_or(0);
+        for _t in 0..max_seg {
+            // Decode the current segment of each active lane.
+            for lane in 0..lanes {
+                if !dec[lane].active() {
+                    continue;
+                }
+                dec[lane].begin_segment(&tabs, &mut sym_buf);
+                let row = r0 + lane;
+                let nnz_r = self.row_nnz[row] as usize;
+                for i in 0..nps {
+                    if emitted[lane] >= nnz_r {
+                        break; // padding
+                    }
+                    let ds = sym_buf[2 * i];
+                    let vs = sym_buf[2 * i + 1];
+                    let d = if self.delta_domain.escaped(ds) {
+                        let v = self.delta_escapes[esc_d[lane]];
+                        esc_d[lane] += 1;
+                        v
+                    } else {
+                        self.delta_domain.payload_of(ds) as u32
+                    };
+                    let vp = if self.value_domain.escaped(vs) {
+                        let v = self.value_escapes[esc_v[lane]];
+                        esc_v[lane] += 1;
+                        v
+                    } else {
+                        self.value_domain.payload_of(vs)
+                    };
+                    let col = if emitted[lane] == 0 || !self.delta_encode {
+                        d
+                    } else {
+                        col_acc[lane] + d
+                    };
+                    col_acc[lane] = col;
+                    emitted[lane] += 1;
+                    emit(row, col, value_from_payload(vp, self.precision));
+                }
+            }
+            // Produce next-segment words: checks then unconditional loads,
+            // each a warp-wide event over the producing lanes.
+            for g in 0..f {
+                for lane in 0..lanes {
+                    if dec[lane].active() && dec[lane].producing() {
+                        dec[lane].push_group(&tabs, g);
+                        if !dec[lane].check(g) {
+                            let w = load(&mut pos)?;
+                            dec[lane].supply(g, w);
+                        }
+                    }
+                }
+            }
+            for k in f..o {
+                for lane in 0..lanes {
+                    if dec[lane].active() && dec[lane].producing() {
+                        let w = load(&mut pos)?;
+                        dec[lane].supply(k, w);
+                    }
+                }
+            }
+            for lane in 0..lanes {
+                if dec[lane].active() {
+                    dec[lane].end_segment();
+                }
+            }
+        }
+        if pos != stream.len() {
+            return Err(DtansError::CorruptStream(format!(
+                "slice {slice}: {} of {} words consumed",
+                pos,
+                stream.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Replay all slices.
+    pub fn walk<F: FnMut(usize, u32, f64)>(&self, mut emit: F) -> Result<()> {
+        for s in 0..self.nslices() {
+            self.walk_slice(s, &mut emit)?;
+        }
+        Ok(())
+    }
+
+    /// Full inverse transform back to CSR (order within rows is by column,
+    /// as encoded).
+    pub fn decode_to_csr(&self) -> Result<Csr> {
+        let mut coo = crate::matrix::coo::Coo::new(self.nrows, self.ncols);
+        self.walk(|r, c, v| coo.push(r as u32, c, v))?;
+        Ok(Csr::from_coo(&coo))
+    }
+
+    /// Byte-size breakdown (see `SizeReport`).
+    pub fn size_report(&self) -> SizeReport {
+        let vb = self.precision.value_bytes();
+        let mut s = SizeReport {
+            header: 64,
+            tables: self.delta_tables.table_bytes() + self.value_tables.table_bytes(),
+            dicts: self.delta_domain.num_symbols() * 4 + self.value_domain.num_symbols() * vb,
+            stream: self.stream.len() * 4,
+            row_lens: self.row_nnz.len() * 4,
+            slice_offsets: self.slice_offsets.len() * 4,
+            escapes: self.delta_escapes.len() * 4 + self.value_escapes.len() * vb,
+            escape_offsets: 0,
+            total: 0,
+        };
+        if !self.delta_escapes.is_empty() {
+            s.escape_offsets += self.delta_esc_offsets.len() * 4;
+        }
+        if !self.value_escapes.is_empty() {
+            s.escape_offsets += self.value_esc_offsets.len() * 4;
+        }
+        s.total = s.header
+            + s.tables
+            + s.dicts
+            + s.stream
+            + s.row_lens
+            + s.slice_offsets
+            + s.escapes
+            + s.escape_offsets;
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen::{assign_values, gen_graph_csr, GraphModel, ValueDist};
+    use crate::matrix::gen::structured::{banded, powerlaw_rows, tridiagonal};
+    use crate::util::rng::Xoshiro256;
+
+    fn roundtrip(csr: &Csr, opts: &EncodeOptions) -> CsrDtans {
+        let enc = CsrDtans::encode(csr, opts).unwrap();
+        let back = enc.decode_to_csr().unwrap();
+        let want = match opts.precision {
+            Precision::F64 => csr.clone(),
+            Precision::F32 => csr.round_to_f32(),
+        };
+        assert_eq!(back.row_ptr, want.row_ptr);
+        assert_eq!(back.cols, want.cols);
+        assert_eq!(back.vals, want.vals);
+        enc
+    }
+
+    #[test]
+    fn tridiagonal_roundtrip_and_compresses() {
+        let m = tridiagonal(500);
+        let enc = roundtrip(&m, &EncodeOptions::default());
+        let rep = enc.size_report();
+        assert_eq!(rep.total, rep.header + rep.tables + rep.dicts + rep.stream
+            + rep.row_lens + rep.slice_offsets + rep.escapes + rep.escape_offsets);
+        // Highly structured: stream alone must be far below CSR payload.
+        assert!(rep.stream < m.nnz() * 6, "stream {} nnz {}", rep.stream, m.nnz());
+    }
+
+    #[test]
+    fn graph_roundtrip_f64_and_f32() {
+        let mut rng = Xoshiro256::seeded(3);
+        let mut m = gen_graph_csr(GraphModel::ErdosRenyi, 700, 8.0, &mut rng);
+        assign_values(&mut m, ValueDist::FewDistinct(12), &mut rng);
+        roundtrip(&m, &EncodeOptions::default());
+        roundtrip(
+            &m,
+            &EncodeOptions {
+                precision: Precision::F32,
+                ..Default::default()
+            },
+        );
+    }
+
+    #[test]
+    fn kernel_params_roundtrip() {
+        let mut rng = Xoshiro256::seeded(4);
+        let mut m = gen_graph_csr(GraphModel::BarabasiAlbert, 300, 6.0, &mut rng);
+        assign_values(&mut m, ValueDist::Quantized(64), &mut rng);
+        roundtrip(
+            &m,
+            &EncodeOptions {
+                params: AnsParams::KERNEL,
+                ..Default::default()
+            },
+        );
+    }
+
+    #[test]
+    fn random_values_escape_heavy_roundtrip() {
+        let mut rng = Xoshiro256::seeded(5);
+        let mut m = banded(300, 4);
+        assign_values(&mut m, ValueDist::Random, &mut rng);
+        let enc = roundtrip(&m, &EncodeOptions::default());
+        // Nearly every value must have escaped.
+        assert!(enc.value_escapes.len() > m.nnz() * 9 / 10);
+    }
+
+    #[test]
+    fn irregular_rows_roundtrip() {
+        let mut rng = Xoshiro256::seeded(6);
+        let mut m = powerlaw_rows(300, 6.0, 1.2, &mut rng);
+        assign_values(&mut m, ValueDist::Ones, &mut rng);
+        roundtrip(&m, &EncodeOptions::default());
+        roundtrip(
+            &m,
+            &EncodeOptions {
+                params: AnsParams::KERNEL,
+                ..Default::default()
+            },
+        );
+    }
+
+    #[test]
+    fn empty_and_tiny_matrices() {
+        roundtrip(&Csr::new(0, 0), &EncodeOptions::default());
+        roundtrip(&Csr::new(5, 5), &EncodeOptions::default());
+        let mut coo = crate::matrix::coo::Coo::new(1, 1);
+        coo.push(0, 0, 3.25);
+        roundtrip(&Csr::from_coo(&coo), &EncodeOptions::default());
+    }
+
+    #[test]
+    fn delta_encoding_off_roundtrip() {
+        let m = tridiagonal(200);
+        roundtrip(
+            &m,
+            &EncodeOptions {
+                delta_encode: false,
+                ..Default::default()
+            },
+        );
+    }
+
+    #[test]
+    fn one_nnz_rows_cost_about_four_words() {
+        // The paper's Fig. 6 "2x line" group: matrices with one nonzero per
+        // row need ~4 words (1 for n + o=3 initial) per row.
+        let n = 320;
+        let mut coo = crate::matrix::coo::Coo::new(n, n);
+        for i in 0..n {
+            coo.push(i as u32, ((i * 7) % n) as u32, 1.0);
+        }
+        let m = Csr::from_coo(&coo);
+        let enc = roundtrip(&m, &EncodeOptions::default());
+        let rep = enc.size_report();
+        let per_row = (rep.stream + rep.row_lens) as f64 / n as f64;
+        assert!((per_row - 16.0).abs() < 1.0, "bytes/row {per_row}");
+    }
+
+    #[test]
+    fn delta_encoding_shrinks_banded_stream() {
+        let m = banded(2048, 8);
+        let with = CsrDtans::encode(&m, &EncodeOptions::default()).unwrap();
+        let without = CsrDtans::encode(
+            &m,
+            &EncodeOptions {
+                delta_encode: false,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(
+            with.size_report().stream < without.size_report().stream,
+            "with {} without {}",
+            with.size_report().stream,
+            without.size_report().stream
+        );
+    }
+}

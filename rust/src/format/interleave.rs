@@ -1,0 +1,161 @@
+//! Warp interleaving of per-row dtANS word streams (§II-A "Interleaving
+//! for warps", §IV-B "Lack of efficient SIMT parallelism").
+//!
+//! All 32 threads of a warp share one word stream. At every *load event*
+//! the active lanes read consecutive words (one coalesced transaction); a
+//! lane's offset within the event is its rank among the active lanes — on
+//! the GPU a `__ballot_sync` + two `popc`s, here an explicit scan.
+//!
+//! The event schedule per slice is fully determined by the rows' segment
+//! counts and branch patterns (which the encoder's base pass recorded):
+//!
+//! 1. initial words `k = 0..o` for every non-empty row (o events);
+//! 2. per segment `t` of any producing row, in order:
+//!    check `g = 0..f` (lanes whose branch says *load*), then the
+//!    unconditional words `k = f..o` (all producing lanes).
+//!
+//! The decoder replays the same schedule with a single stream cursor.
+
+use crate::ans::dtans::RowEncoding;
+use crate::ans::params::AnsParams;
+
+/// Interleave the per-row encodings of one slice into a shared stream.
+/// `rows.len()` is at most the warp width (32) but any lane count works;
+/// missing rows at the slice tail are simply absent.
+pub fn interleave_slice(p: &AnsParams, rows: &[RowEncoding]) -> Vec<u32> {
+    let (o, f) = (p.o as usize, p.f as usize);
+    let mut cursors = vec![0usize; rows.len()];
+    let total: usize = rows.iter().map(|r| r.words.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    let take = |lane: usize, cursors: &mut [usize], out: &mut Vec<u32>| {
+        out.push(rows[lane].words[cursors[lane]]);
+        cursors[lane] += 1;
+    };
+
+    // Initial o words.
+    for _k in 0..o {
+        for lane in 0..rows.len() {
+            if rows[lane].nseg > 0 {
+                take(lane, &mut cursors, &mut out);
+            }
+        }
+    }
+    let max_seg = rows.iter().map(|r| r.nseg).max().unwrap_or(0);
+    for t in 0..max_seg.saturating_sub(1) {
+        // A lane produces next-segment words while t < nseg - 1.
+        for g in 0..f {
+            for lane in 0..rows.len() {
+                if t + 1 < rows[lane].nseg && !rows[lane].branches[t * f + g] {
+                    take(lane, &mut cursors, &mut out);
+                }
+            }
+        }
+        for _k in f..o {
+            for lane in 0..rows.len() {
+                if t + 1 < rows[lane].nseg {
+                    take(lane, &mut cursors, &mut out);
+                }
+            }
+        }
+    }
+    debug_assert_eq!(out.len(), total, "all row words must be consumed");
+    debug_assert!(cursors.iter().zip(rows).all(|(&c, r)| c == r.words.len()));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ans::dtans::{decode_row, encode_row};
+    use crate::ans::histogram::normalize_counts;
+    use crate::ans::tables::CodingTables;
+    use crate::ans::AnsParams;
+    use crate::util::rng::Xoshiro256;
+
+    fn tables(p: &AnsParams, rng: &mut Xoshiro256) -> CodingTables {
+        let counts: Vec<u64> = (0..200).map(|_| 1 + rng.below(500)).collect();
+        CodingTables::build(p, &normalize_counts(&counts, p.k(), p.m()).unwrap()).unwrap()
+    }
+
+    /// Scalar replay of the interleaved schedule to recover per-row words.
+    fn deinterleave(p: &AnsParams, rows: &[RowEncoding], stream: &[u32]) -> Vec<Vec<u32>> {
+        let (o, f) = (p.o as usize, p.f as usize);
+        let mut pos = 0;
+        let mut out: Vec<Vec<u32>> = rows.iter().map(|_| Vec::new()).collect();
+        for _k in 0..o {
+            for (lane, r) in rows.iter().enumerate() {
+                if r.nseg > 0 {
+                    out[lane].push(stream[pos]);
+                    pos += 1;
+                }
+            }
+        }
+        let max_seg = rows.iter().map(|r| r.nseg).max().unwrap_or(0);
+        for t in 0..max_seg.saturating_sub(1) {
+            for g in 0..f {
+                for (lane, r) in rows.iter().enumerate() {
+                    if t + 1 < r.nseg && !r.branches[t * f + g] {
+                        out[lane].push(stream[pos]);
+                        pos += 1;
+                    }
+                }
+            }
+            for _k in f..o {
+                for (lane, r) in rows.iter().enumerate() {
+                    if t + 1 < r.nseg {
+                        out[lane].push(stream[pos]);
+                        pos += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(pos, stream.len());
+        out
+    }
+
+    #[test]
+    fn interleave_roundtrips_through_schedule() {
+        let p = AnsParams::KERNEL;
+        let mut rng = Xoshiro256::seeded(42);
+        let t = tables(&p, &mut rng);
+        let tabs = [&t];
+        // 32 rows of varying lengths, including empty ones.
+        let mut rows = Vec::new();
+        let mut all_syms = Vec::new();
+        for lane in 0..32usize {
+            let nseg = if lane % 7 == 0 { 0 } else { rng.below_usize(9) };
+            let syms: Vec<u16> = (0..nseg * p.l as usize)
+                .map(|_| rng.below(t.num_symbols() as u64) as u16)
+                .collect();
+            rows.push(encode_row(&p, &tabs, &syms).unwrap());
+            all_syms.push(syms);
+        }
+        let stream = interleave_slice(&p, &rows);
+        let per_row = deinterleave(&p, &rows, &stream);
+        for lane in 0..32 {
+            assert_eq!(per_row[lane], rows[lane].words, "lane {lane}");
+            let dec = decode_row(&p, &tabs, &per_row[lane], all_syms[lane].len()).unwrap();
+            assert_eq!(dec, all_syms[lane], "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn empty_slice() {
+        let p = AnsParams::KERNEL;
+        let rows: Vec<RowEncoding> = Vec::new();
+        assert!(interleave_slice(&p, &rows).is_empty());
+    }
+
+    #[test]
+    fn single_row_slice_is_identity() {
+        let p = AnsParams::KERNEL;
+        let mut rng = Xoshiro256::seeded(5);
+        let t = tables(&p, &mut rng);
+        let syms: Vec<u16> = (0..6 * p.l as usize)
+            .map(|_| rng.below(t.num_symbols() as u64) as u16)
+            .collect();
+        let enc = encode_row(&p, &[&t], &syms).unwrap();
+        let stream = interleave_slice(&p, std::slice::from_ref(&enc));
+        assert_eq!(stream, enc.words);
+    }
+}

@@ -1,0 +1,10 @@
+//! The CSR-dtANS compressed matrix format: symbolization with escapes,
+//! per-row dtANS encoding, warp interleaving, container + (de)serialization.
+
+pub mod csr_dtans;
+pub mod interleave;
+pub mod serialize;
+pub mod symbolize;
+
+pub use csr_dtans::{CsrDtans, EncodeOptions, SizeReport, WARP};
+pub use symbolize::{Domain, SymbolPicker};

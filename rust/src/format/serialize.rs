@@ -1,0 +1,279 @@
+//! Binary (de)serialization of [`CsrDtans`] — the on-disk format the paper
+//! mentions ("the encoded data can be stored in memory or saved in a file
+//! for repeated decoding").
+//!
+//! Layout: little-endian, a fixed magic/header followed by length-prefixed
+//! arrays. The format is self-describing enough to reject foreign or
+//! truncated files with a clear error.
+
+use super::csr_dtans::CsrDtans;
+use super::symbolize::Domain;
+use crate::ans::params::AnsParams;
+use crate::ans::tables::CodingTables;
+use crate::matrix::Precision;
+use crate::util::error::{DtansError, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"CSRDTANS";
+const VERSION: u32 = 1;
+
+struct Writer<W: Write> {
+    w: W,
+}
+
+impl<W: Write> Writer<W> {
+    fn u32(&mut self, x: u32) -> Result<()> {
+        self.w.write_all(&x.to_le_bytes())?;
+        Ok(())
+    }
+    fn u64(&mut self, x: u64) -> Result<()> {
+        self.w.write_all(&x.to_le_bytes())?;
+        Ok(())
+    }
+    fn vec_u32(&mut self, xs: &[u32]) -> Result<()> {
+        self.u64(xs.len() as u64)?;
+        for &x in xs {
+            self.u32(x)?;
+        }
+        Ok(())
+    }
+    fn vec_u64(&mut self, xs: &[u64]) -> Result<()> {
+        self.u64(xs.len() as u64)?;
+        for &x in xs {
+            self.u64(x)?;
+        }
+        Ok(())
+    }
+    fn vec_bool(&mut self, xs: &[bool]) -> Result<()> {
+        self.u64(xs.len() as u64)?;
+        for &x in xs {
+            self.w.write_all(&[x as u8])?;
+        }
+        Ok(())
+    }
+}
+
+struct Reader<R: Read> {
+    r: R,
+}
+
+impl<R: Read> Reader<R> {
+    fn u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+    fn len(&mut self) -> Result<usize> {
+        let n = self.u64()?;
+        if n > (1 << 40) {
+            return Err(DtansError::Container(format!("implausible length {n}")));
+        }
+        Ok(n as usize)
+    }
+    fn vec_u32(&mut self) -> Result<Vec<u32>> {
+        let n = self.len()?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u32()?);
+        }
+        Ok(v)
+    }
+    fn vec_u64(&mut self) -> Result<Vec<u64>> {
+        let n = self.len()?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u64()?);
+        }
+        Ok(v)
+    }
+    fn vec_bool(&mut self) -> Result<Vec<bool>> {
+        let n = self.len()?;
+        let mut bytes = vec![0u8; n];
+        self.r.read_exact(&mut bytes)?;
+        Ok(bytes.into_iter().map(|b| b != 0).collect())
+    }
+}
+
+fn write_domain<W: Write>(w: &mut Writer<W>, d: &Domain) -> Result<()> {
+    w.vec_u64(&d.payload)?;
+    w.vec_bool(&d.is_escape)?;
+    w.vec_u32(&d.mult)?;
+    w.u32(d.escape_payload_bits)
+}
+
+fn read_domain<R: Read>(r: &mut Reader<R>) -> Result<Domain> {
+    let payload = r.vec_u64()?;
+    let is_escape = r.vec_bool()?;
+    let mult = r.vec_u32()?;
+    let bits = r.u32()?;
+    Domain::from_parts(payload, is_escape, mult, bits)
+}
+
+/// Serialize to any writer.
+pub fn write_to<W: Write>(m: &CsrDtans, w: W) -> Result<()> {
+    let mut w = Writer { w };
+    w.w.write_all(MAGIC)?;
+    w.u32(VERSION)?;
+    let p = m.params;
+    for x in [p.w_bits, p.k_bits, p.m_bits, p.l, p.o, p.f] {
+        w.u32(x)?;
+    }
+    w.u32(match m.precision {
+        Precision::F64 => 64,
+        Precision::F32 => 32,
+    })?;
+    w.u32(m.delta_encode as u32)?;
+    w.u64(m.nrows as u64)?;
+    w.u64(m.ncols as u64)?;
+    w.u64(m.nnz as u64)?;
+    write_domain(&mut w, &m.delta_domain)?;
+    write_domain(&mut w, &m.value_domain)?;
+    w.vec_u32(&m.row_nnz)?;
+    w.vec_u32(&m.slice_offsets)?;
+    w.vec_u32(&m.stream)?;
+    w.vec_u32(&m.delta_escapes)?;
+    w.vec_u64(&m.value_escapes)?;
+    w.vec_u32(&m.delta_esc_offsets)?;
+    w.vec_u32(&m.value_esc_offsets)?;
+    Ok(())
+}
+
+/// Deserialize from any reader.
+pub fn read_from<R: Read>(r: R) -> Result<CsrDtans> {
+    let mut r = Reader { r };
+    let mut magic = [0u8; 8];
+    r.r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(DtansError::Container("bad magic".into()));
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        return Err(DtansError::Container(format!("unsupported version {version}")));
+    }
+    let params = AnsParams {
+        w_bits: r.u32()?,
+        k_bits: r.u32()?,
+        m_bits: r.u32()?,
+        l: r.u32()?,
+        o: r.u32()?,
+        f: r.u32()?,
+    };
+    params.validate()?;
+    let precision = match r.u32()? {
+        64 => Precision::F64,
+        32 => Precision::F32,
+        x => return Err(DtansError::Container(format!("bad precision {x}"))),
+    };
+    let delta_encode = r.u32()? != 0;
+    let nrows = r.u64()? as usize;
+    let ncols = r.u64()? as usize;
+    let nnz = r.u64()? as usize;
+    let delta_domain = read_domain(&mut r)?;
+    let value_domain = read_domain(&mut r)?;
+    let delta_tables = CodingTables::build(&params, &delta_domain.mult)?;
+    let value_tables = CodingTables::build(&params, &value_domain.mult)?;
+    let m = CsrDtans {
+        params,
+        precision,
+        delta_encode,
+        nrows,
+        ncols,
+        nnz,
+        delta_domain,
+        value_domain,
+        delta_tables,
+        value_tables,
+        row_nnz: r.vec_u32()?,
+        slice_offsets: r.vec_u32()?,
+        stream: r.vec_u32()?,
+        delta_escapes: r.vec_u32()?,
+        value_escapes: r.vec_u64()?,
+        delta_esc_offsets: r.vec_u32()?,
+        value_esc_offsets: r.vec_u32()?,
+    };
+    if m.row_nnz.len() != m.nrows || m.slice_offsets.len() != m.nslices() + 1 {
+        return Err(DtansError::Container("inconsistent array lengths".into()));
+    }
+    Ok(m)
+}
+
+/// Save to a file, creating parent directories.
+pub fn save(m: &CsrDtans, path: &Path) -> Result<()> {
+    if let Some(p) = path.parent() {
+        std::fs::create_dir_all(p)?;
+    }
+    let f = std::fs::File::create(path)?;
+    write_to(m, std::io::BufWriter::new(f))
+}
+
+/// Load from a file.
+pub fn load(path: &Path) -> Result<CsrDtans> {
+    let f = std::fs::File::open(path)?;
+    read_from(std::io::BufReader::new(f))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::csr_dtans::EncodeOptions;
+    use crate::matrix::gen::structured::banded;
+    use crate::matrix::gen::{assign_values, ValueDist};
+    use crate::util::rng::Xoshiro256;
+
+    fn sample() -> CsrDtans {
+        let mut rng = Xoshiro256::seeded(1);
+        let mut m = banded(200, 3);
+        assign_values(&mut m, ValueDist::Quantized(32), &mut rng);
+        CsrDtans::encode(&m, &EncodeOptions::default()).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let enc = sample();
+        let mut buf = Vec::new();
+        write_to(&enc, &mut buf).unwrap();
+        let back = read_from(std::io::Cursor::new(&buf)).unwrap();
+        assert_eq!(back.stream, enc.stream);
+        assert_eq!(back.row_nnz, enc.row_nnz);
+        assert_eq!(back.delta_tables, enc.delta_tables);
+        assert_eq!(
+            back.decode_to_csr().unwrap(),
+            enc.decode_to_csr().unwrap()
+        );
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let enc = sample();
+        let mut buf = Vec::new();
+        write_to(&enc, &mut buf).unwrap();
+        buf[0] = b'X';
+        assert!(read_from(std::io::Cursor::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let enc = sample();
+        let mut buf = Vec::new();
+        write_to(&enc, &mut buf).unwrap();
+        buf.truncate(buf.len() / 2);
+        assert!(read_from(std::io::Cursor::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let enc = sample();
+        let dir = std::env::temp_dir().join("dtans_test_serialize");
+        let path = dir.join("m.dtans");
+        save(&enc, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.stream, enc.stream);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

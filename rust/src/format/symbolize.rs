@@ -1,0 +1,357 @@
+//! Symbolization of delta/value payloads: building the per-domain
+//! dictionary, the escape policy, and the normalized multiplicities.
+//!
+//! The paper's §IV-F "escaping rare values": a domain may have more than K
+//! distinct payloads, and even when it does not, escaping rare payloads can
+//! reduce total size (a table slot for a once-seen f64 costs more than the
+//! escape path). Escaped payloads travel in a separate uncompressed side
+//! stream (the paper's lower-latency alternative to in-stream escapes).
+//! "We approximate the exact distributions such that the expected total
+//! size is minimized" — we sweep frequency cutoffs and keep the best.
+
+use crate::ans::histogram::normalize_counts;
+use crate::ans::params::AnsParams;
+use crate::util::error::Result;
+use std::collections::HashMap;
+
+/// A symbol domain: dictionary payloads, escape flags, multiplicities.
+///
+/// Symbol ids index `payload`/`mult`/`is_escape` in parallel. Duplicated
+/// entries (same payload under several ids) appear when fewer than `K/M`
+/// distinct symbols exist — the table must still fill all K slots with
+/// per-symbol multiplicity ≤ M.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Domain {
+    /// Payload per symbol id (delta as u64, or value bit pattern).
+    pub payload: Vec<u64>,
+    /// True for escape symbol ids (payload field unused).
+    pub is_escape: Vec<bool>,
+    /// Multiplicity per symbol id (sums to K).
+    pub mult: Vec<u32>,
+    /// payload -> symbol ids (several when duplicated).
+    map: HashMap<u64, Vec<u16>>,
+    /// Ids of the escape symbol(s).
+    escape_ids: Vec<u16>,
+    /// Most frequent non-escape id — used as the row pad symbol so pads
+    /// never touch the side stream.
+    pub pad_sym: u16,
+    /// Bits of one escaped raw payload in the side stream.
+    pub escape_payload_bits: u32,
+    /// Estimated encoded bits for the training data (diagnostics).
+    pub est_bits: f64,
+}
+
+/// Round-robin symbol chooser for encoding (spreads duplicated ids).
+#[derive(Debug, Default)]
+pub struct SymbolPicker {
+    counters: HashMap<u64, usize>,
+}
+
+impl Domain {
+    /// Number of symbol ids.
+    pub fn num_symbols(&self) -> usize {
+        self.payload.len()
+    }
+
+    /// Is `sym` an escape id?
+    #[inline]
+    pub fn escaped(&self, sym: u16) -> bool {
+        self.is_escape[sym as usize]
+    }
+
+    /// Payload of a non-escape symbol.
+    #[inline]
+    pub fn payload_of(&self, sym: u16) -> u64 {
+        self.payload[sym as usize]
+    }
+
+    /// Symbol id for a payload: a dictionary id when present (round-robin
+    /// across duplicates via `picker`), else an escape id.
+    pub fn sym_for(&self, payload: u64, picker: &mut SymbolPicker) -> (u16, bool) {
+        match self.map.get(&payload) {
+            Some(ids) => {
+                if ids.len() == 1 {
+                    (ids[0], false)
+                } else {
+                    let c = picker.counters.entry(payload).or_insert(0);
+                    let id = ids[*c % ids.len()];
+                    *c += 1;
+                    (id, false)
+                }
+            }
+            None => {
+                let c = picker.counters.entry(u64::MAX).or_insert(0);
+                let id = self.escape_ids[*c % self.escape_ids.len()];
+                *c += 1;
+                (id, true)
+            }
+        }
+    }
+
+    /// Reconstruct a domain from serialized parts (payloads, escape flags,
+    /// multiplicities) — rebuilds the lookup map and pad symbol.
+    pub fn from_parts(
+        payload: Vec<u64>,
+        is_escape: Vec<bool>,
+        mult: Vec<u32>,
+        escape_payload_bits: u32,
+    ) -> Result<Domain> {
+        use crate::util::error::DtansError;
+        if payload.len() != is_escape.len() || payload.len() != mult.len() {
+            return Err(DtansError::Container("domain arrays disagree".into()));
+        }
+        if !is_escape.iter().any(|&e| e) {
+            return Err(DtansError::Container("domain lacks escape symbol".into()));
+        }
+        let mut map: HashMap<u64, Vec<u16>> = HashMap::new();
+        let mut escape_ids = Vec::new();
+        for (id, (&p, &e)) in payload.iter().zip(&is_escape).enumerate() {
+            if e {
+                escape_ids.push(id as u16);
+            } else {
+                map.entry(p).or_default().push(id as u16);
+            }
+        }
+        let pad_sym = (0..payload.len())
+            .filter(|&i| !is_escape[i])
+            .max_by_key(|&i| mult[i])
+            .unwrap_or(escape_ids[0] as usize) as u16;
+        Ok(Domain {
+            payload,
+            is_escape,
+            mult,
+            map,
+            escape_ids,
+            pad_sym,
+            escape_payload_bits,
+            est_bits: 0.0,
+        })
+    }
+
+    /// Build a domain from a payload histogram.
+    ///
+    /// `escape_payload_bits` is the side-stream cost of one escaped payload
+    /// (32 for deltas/f32 values, 64 for f64 values).
+    pub fn build(
+        counts: &HashMap<u64, u64>,
+        params: &AnsParams,
+        escape_payload_bits: u32,
+    ) -> Result<Domain> {
+        let k = params.k();
+        let m = params.m();
+        let total: u64 = counts.values().sum();
+
+        // Sort distinct payloads by descending count.
+        let mut items: Vec<(u64, u64)> = counts.iter().map(|(&p, &c)| (p, c)).collect();
+        items.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+
+        // Sweep keep-counts, estimating total encoded bits with the ideal
+        // (uncapped-by-integrality) slot assignment p' = min(p, M/K).
+        let max_keep = items.len().min(k as usize - 1);
+        let mut best_keep = max_keep.max(1).min(items.len());
+        let mut best_bits = f64::INFINITY;
+        let mut prefix: Vec<u64> = Vec::with_capacity(items.len() + 1);
+        prefix.push(0);
+        for (_, c) in &items {
+            prefix.push(prefix.last().unwrap() + c);
+        }
+        let candidates: Vec<usize> = {
+            // Log-spaced keep counts plus the extremes.
+            let mut cs = vec![1usize.min(max_keep.max(1))];
+            let mut v = 1usize;
+            while v < max_keep {
+                v = (v * 2).min(max_keep);
+                cs.push(v);
+            }
+            cs.push(max_keep);
+            cs.sort_unstable();
+            cs.dedup();
+            cs.retain(|&c| c >= 1 && c <= items.len());
+            if cs.is_empty() {
+                vec![items.len().min(1)]
+            } else {
+                cs
+            }
+        };
+        for &keep in &candidates {
+            let esc_count = total - prefix[keep];
+            let cap = m as f64 / k as f64;
+            // Ideal probabilities, capped and renormalized approximately.
+            let mut bits = 0.0;
+            let mut mass = 0.0;
+            for &(_, c) in items.iter().take(keep) {
+                mass += (c as f64 / total as f64).min(cap);
+            }
+            let esc_p = ((esc_count as f64 / total as f64).min(cap)).max(1.0 / k as f64);
+            mass += esc_p;
+            for &(_, c) in items.iter().take(keep) {
+                let p = c as f64 / total as f64;
+                let q = (p.min(cap) / mass).max(1.0 / k as f64);
+                bits += c as f64 * (1.0 / q).log2();
+            }
+            // Each kept symbol also pays its dictionary entry once — the
+            // paper's rationale for escaping rare values ("assigning them a
+            // slot in the table is more expensive than paying the cost to
+            // escape them").
+            bits += keep as f64 * escape_payload_bits as f64;
+            if esc_count > 0 {
+                let q = (esc_p / mass).max(1.0 / k as f64);
+                bits += esc_count as f64 * ((1.0 / q).log2() + escape_payload_bits as f64);
+            }
+            if bits < best_bits {
+                best_bits = bits;
+                best_keep = keep;
+            }
+        }
+        // Keep at least one real payload when any exist, so row padding
+        // never needs the escape path.
+        if !items.is_empty() {
+            best_keep = best_keep.max(1);
+        }
+
+        // Assemble symbol list: kept payloads + one escape id, then
+        // duplicate hot ids until K slots are fillable under the M cap.
+        let mut payload: Vec<u64> = items.iter().take(best_keep).map(|&(p, _)| p).collect();
+        let mut cnt: Vec<u64> = items.iter().take(best_keep).map(|&(_, c)| c).collect();
+        let mut is_escape: Vec<bool> = vec![false; payload.len()];
+        let esc_count = total - prefix[best_keep.min(items.len())];
+        payload.push(0);
+        // Escape keeps at least weight 1 so it stays representable: decoders
+        // must handle payloads outside the dictionary even if none were in
+        // the training data (e.g. after padding rows).
+        cnt.push(esc_count.max(1));
+        is_escape.push(true);
+
+        while (payload.len() as u64) * (m as u64) < (k as u64) {
+            // Duplicate the currently heaviest id, splitting its count.
+            let (hot, _) = cnt.iter().enumerate().max_by_key(|&(_, &c)| c).unwrap();
+            let half = (cnt[hot] / 2).max(1);
+            cnt[hot] = (cnt[hot] - half).max(1);
+            payload.push(payload[hot]);
+            cnt.push(half);
+            is_escape.push(is_escape[hot]);
+        }
+
+        let mult = normalize_counts(&cnt, k, m)?;
+
+        let mut map: HashMap<u64, Vec<u16>> = HashMap::new();
+        let mut escape_ids = Vec::new();
+        for (id, (&p, &e)) in payload.iter().zip(&is_escape).enumerate() {
+            if e {
+                escape_ids.push(id as u16);
+            } else {
+                map.entry(p).or_default().push(id as u16);
+            }
+        }
+        // Pad symbol: most multiplicitous non-escape id (falls back to the
+        // escape id only for the degenerate "no payloads at all" domain).
+        let pad_sym = (0..payload.len())
+            .filter(|&i| !is_escape[i])
+            .max_by_key(|&i| mult[i])
+            .unwrap_or(escape_ids[0] as usize) as u16;
+
+        Ok(Domain {
+            payload,
+            is_escape,
+            mult,
+            map,
+            escape_ids,
+            pad_sym,
+            escape_payload_bits,
+            est_bits: best_bits,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts_of(pairs: &[(u64, u64)]) -> HashMap<u64, u64> {
+        pairs.iter().copied().collect()
+    }
+
+    #[test]
+    fn small_domain_duplicates_to_fill_k() {
+        // KERNEL: K=4096, M=256 -> need >= 16 symbol ids.
+        let d = Domain::build(
+            &counts_of(&[(1, 1000), (2, 500)]),
+            &AnsParams::KERNEL,
+            32,
+        )
+        .unwrap();
+        assert!(d.num_symbols() >= 16);
+        assert_eq!(d.mult.iter().sum::<u32>(), 4096);
+        // The hot payload 1 has several ids.
+        assert!(d.map.get(&1).unwrap().len() > 1);
+        assert!(!d.escaped(d.pad_sym));
+    }
+
+    #[test]
+    fn rare_values_escape() {
+        // One dominant payload plus 5000 singletons: singletons should not
+        // all get dictionary slots.
+        let mut c = HashMap::new();
+        c.insert(7u64, 100_000u64);
+        for i in 0..5000u64 {
+            c.insert(1_000_000 + i, 1);
+        }
+        let d = Domain::build(&c, &AnsParams::KERNEL, 64).unwrap();
+        let mut picker = SymbolPicker::default();
+        let (s7, esc7) = d.sym_for(7, &mut picker);
+        assert!(!esc7);
+        assert_eq!(d.payload_of(s7), 7);
+        let (_, esc_rare) = d.sym_for(1_000_321, &mut picker);
+        assert!(esc_rare);
+        // Unseen payloads also escape.
+        let (_, esc_new) = d.sym_for(9_999_999_999, &mut picker);
+        assert!(esc_new);
+    }
+
+    #[test]
+    fn more_than_k_distinct_forced_to_escape() {
+        let mut c = HashMap::new();
+        for i in 0..10_000u64 {
+            c.insert(i, 10);
+        }
+        let d = Domain::build(&c, &AnsParams::KERNEL, 32).unwrap();
+        assert!(d.num_symbols() <= 4096);
+        assert_eq!(d.mult.iter().sum::<u32>(), 4096);
+    }
+
+    #[test]
+    fn empty_domain_is_escape_only() {
+        let d = Domain::build(&HashMap::new(), &AnsParams::KERNEL, 32).unwrap();
+        assert!(d.num_symbols() >= 16);
+        let mut picker = SymbolPicker::default();
+        let (_, esc) = d.sym_for(42, &mut picker);
+        assert!(esc);
+    }
+
+    #[test]
+    fn round_robin_spreads_duplicates() {
+        let d = Domain::build(&counts_of(&[(5, 100)]), &AnsParams::KERNEL, 32).unwrap();
+        let ids = d.map.get(&5).unwrap().clone();
+        assert!(ids.len() > 1);
+        let mut picker = SymbolPicker::default();
+        let a = d.sym_for(5, &mut picker).0;
+        let b = d.sym_for(5, &mut picker).0;
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn paper_params_domain() {
+        let d = Domain::build(
+            &counts_of(&[(1, 800), (2, 150), (3, 50)]),
+            &AnsParams::PAPER,
+            32,
+        )
+        .unwrap();
+        assert_eq!(d.mult.iter().sum::<u32>(), 4096);
+        // Frequent deltas get higher multiplicity than rare ones.
+        let mut picker = SymbolPicker::default();
+        let s1 = d.sym_for(1, &mut picker).0 as usize;
+        let s3 = d.sym_for(3, &mut picker).0 as usize;
+        assert!(d.mult[s1] >= d.mult[s3]);
+    }
+}

@@ -1,0 +1,71 @@
+//! # dtans — entropy-coded sparse matrices with on-the-fly decoding SpMVM
+//!
+//! Reproduction of *"Fast Entropy Decoding for Sparse MVM on GPUs"*
+//! (Schätzle, Pegolotti, Püschel, CS.PF 2026).
+//!
+//! The paper's key idea: apply lossless entropy coding (a GPU-friendly
+//! variant of tabled asymmetric numeral systems, called **dtANS**) on top of
+//! the CSR sparse-matrix format, and perform sparse matrix-vector
+//! multiplication (SpMVM) while decoding the compressed matrix on the fly.
+//! Because SpMVM is memory-bound, moving fewer bytes wins even though
+//! decoding costs instructions.
+//!
+//! This crate contains the complete system:
+//!
+//! * [`ans`] — the dtANS codec (and classic tANS as a reference):
+//!   histogram normalization with multiplicity cap `M`, coding tables,
+//!   the segment/word decoder of the paper's Algorithm 3, and the
+//!   two-pass (base pass + digit pass) encoder.
+//! * [`matrix`] — sparse matrix substrates: COO/CSR/SELL, MatrixMarket IO,
+//!   random-graph and structured generators, entropy statistics.
+//! * [`format`] — the **CSR-dtANS** container: delta encoding,
+//!   symbolization with escapes, per-row encoding, warp interleaving,
+//!   byte-accurate size accounting.
+//! * [`spmv`] — SpMVM kernels for dense/CSR/COO/SELL/CSR-dtANS, including
+//!   the warp-synchronous on-the-fly-decoding kernel (the CUDA kernel's
+//!   semantics executed in lockstep on the CPU).
+//! * [`sim`] — a GPU execution-model simulator (coalescing, L2, DRAM
+//!   roofline) that stands in for the paper's RTX 5090 when regenerating
+//!   the runtime figures/tables.
+//! * [`autotune`] — an exhaustive format autotuner standing in for
+//!   AlphaSparse in the Fig. 9 comparison.
+//! * [`eval`] — corpus + drivers regenerating every table and figure of
+//!   the paper's evaluation section.
+//! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`).
+//! * [`coordinator`] — a batching SpMVM service (router, worker pool,
+//!   metrics) built on the native and PJRT execution paths.
+//!
+//! ## Quickstart
+//!
+//! (`no_run`: doctest binaries do not inherit the rpath to
+//! libxla_extension's bundled libstdc++ in this offline image; the same
+//! code runs as `examples/quickstart.rs`.)
+//!
+//! ```no_run
+//! use dtans::matrix::gen::{GraphModel, gen_graph_csr};
+//! use dtans::format::CsrDtans;
+//! use dtans::spmv::spmv_csr_dtans;
+//! use dtans::util::rng::Xoshiro256;
+//!
+//! let mut rng = Xoshiro256::seeded(7);
+//! let a = gen_graph_csr(GraphModel::ErdosRenyi, 1 << 10, 10.0, &mut rng);
+//! let enc = CsrDtans::encode(&a, &Default::default()).unwrap();
+//! println!("CSR bytes {} -> dtANS bytes {}", a.size_bytes_f64(), enc.size_report().total);
+//! let x = vec![1.0; a.ncols];
+//! let mut y = vec![0.0; a.nrows];
+//! spmv_csr_dtans(&enc, &x, &mut y).unwrap();
+//! ```
+
+pub mod ans;
+pub mod autotune;
+pub mod coordinator;
+pub mod eval;
+pub mod format;
+pub mod matrix;
+pub mod runtime;
+pub mod sim;
+pub mod spmv;
+pub mod util;
+
+pub use util::error::{DtansError, Result};

@@ -1,0 +1,322 @@
+//! `dtans` CLI: generate/inspect matrices, encode/decode CSR-dtANS, run
+//! SpMVM on the native or PJRT path, and regenerate every experiment of
+//! the paper's evaluation.
+
+use dtans::ans::AnsParams;
+use dtans::eval::{ablate, fig4, fig6, fig9, runtime_experiment, tab1, CorpusScale};
+use dtans::format::csr_dtans::{CsrDtans, EncodeOptions};
+use dtans::format::serialize;
+use dtans::matrix::gen::structured::*;
+use dtans::matrix::gen::{assign_values, gen_graph_csr, GraphModel, ValueDist};
+use dtans::matrix::stats::MatrixStats;
+use dtans::matrix::{mtx, Csr, Precision, SizeModel};
+use dtans::runtime::Runtime;
+use dtans::spmv::{spmv_csr, spmv_csr_dtans};
+use dtans::util::cli::Args;
+use dtans::util::rng::Xoshiro256;
+use std::path::{Path, PathBuf};
+
+const USAGE: &str = "\
+dtans — entropy-coded sparse matrices with on-the-fly decoding SpMVM
+
+USAGE: dtans <command> [options]
+
+COMMANDS:
+  gen --kind <tridiag|banded|stencil5|stencil27|er|ws|ba|powerlaw|random>
+      --n <rows> [--deg <d>] [--values <ones|fewK|quantK|intsK|random|gaussian>]
+      [--seed <s>] --out <file.mtx>          generate a matrix
+  info <file.mtx>                            matrix + entropy statistics
+  encode <file.mtx> --out <file.dtans>
+      [--f32] [--kernel-params] [--no-delta] encode to CSR-dtANS
+  decode <file.dtans> --out <file.mtx>       decode back to MatrixMarket
+  spmv <file.mtx> [--pjrt] [--iters <n>]     run y = Ax (native or PJRT)
+  exp <fig4|fig6|tab1|fig7|fig8|fig9|ablate|all>
+      [--full] [--out results/]              regenerate paper experiments
+  help                                       this text
+";
+
+fn main() {
+    let args = Args::from_env(true);
+    let code = match args.subcommand.as_deref() {
+        Some("gen") => cmd_gen(&args),
+        Some("info") => cmd_info(&args),
+        Some("encode") => cmd_encode(&args),
+        Some("decode") => cmd_decode(&args),
+        Some("spmv") => cmd_spmv(&args),
+        Some("exp") => cmd_exp(&args),
+        Some("help") | None => {
+            println!("{USAGE}");
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn fail(e: impl std::fmt::Display) -> i32 {
+    eprintln!("error: {e}");
+    1
+}
+
+fn cmd_gen(args: &Args) -> i32 {
+    let kind = args.get_or("kind", "er");
+    let n = args.usize_or("n", 1024);
+    let deg = args.f64_or("deg", 10.0);
+    let seed = args.u64_or("seed", 42);
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut m = match kind.as_str() {
+        "tridiag" => tridiagonal(n),
+        "banded" => banded(n, args.usize_or("bw", 4)),
+        "stencil5" => {
+            let s = (n as f64).sqrt() as usize;
+            stencil2d5(s, s)
+        }
+        "stencil27" => {
+            let s = (n as f64).cbrt() as usize;
+            stencil3d27(s, s, s)
+        }
+        "er" => gen_graph_csr(GraphModel::ErdosRenyi, n, deg, &mut rng),
+        "ws" => gen_graph_csr(GraphModel::WattsStrogatz, n, deg, &mut rng),
+        "ba" => gen_graph_csr(GraphModel::BarabasiAlbert, n, deg, &mut rng),
+        "powerlaw" => powerlaw_rows(n, deg, 1.1, &mut rng),
+        "random" => random_uniform(n, n, (n as f64 * deg) as usize, &mut rng),
+        other => return fail(format!("unknown kind {other:?}")),
+    };
+    if let Some(v) = args.get("values") {
+        match ValueDist::parse(v) {
+            Some(vd) => assign_values(&mut m, vd, &mut rng),
+            None => return fail(format!("bad value distribution {v:?}")),
+        }
+    }
+    let out = PathBuf::from(args.get_or("out", "matrix.mtx"));
+    match mtx::save_mtx(&m, &out) {
+        Ok(()) => {
+            println!("wrote {} ({} x {}, {} nnz)", out.display(), m.nrows, m.ncols, m.nnz());
+            0
+        }
+        Err(e) => fail(e),
+    }
+}
+
+fn load_input(args: &Args) -> Result<Csr, i32> {
+    let path = args.positional.first().ok_or_else(|| fail("missing input file"))?;
+    mtx::load_mtx_csr(Path::new(path)).map_err(fail)
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    let m = match load_input(args) {
+        Ok(m) => m,
+        Err(c) => return c,
+    };
+    let s = MatrixStats::compute(&m);
+    println!("shape        {} x {}", s.nrows, s.ncols);
+    println!("nnz          {}", s.nnz);
+    println!("annzpr       {:.2}", s.annzpr);
+    println!("max row len  {}", s.max_row_len);
+    println!("H(indices)   {:.3} bits", s.h_indices);
+    println!("H(deltas)    {:.3} bits  (ratio {:.3})", s.h_deltas, s.relative_delta_entropy());
+    println!("H(values)    {:.3} bits  ({} distinct)", s.h_values, s.distinct_values);
+    for prec in [Precision::F64, Precision::F32] {
+        let model = SizeModel { precision: prec };
+        let (bytes, fmt) = model.best_baseline_bytes(&m);
+        let enc = CsrDtans::encode(
+            &m,
+            &EncodeOptions {
+                precision: prec,
+                ..Default::default()
+            },
+        )
+        .expect("encode");
+        let r = enc.size_report();
+        println!(
+            "{}: best cuSPARSE-format {} = {} B; CSR-dtANS = {} B (ratio {:.2}x)",
+            prec.label(),
+            fmt,
+            bytes,
+            r.total,
+            bytes as f64 / r.total as f64
+        );
+    }
+    0
+}
+
+fn encode_opts(args: &Args) -> EncodeOptions {
+    EncodeOptions {
+        params: if args.flag("kernel-params") {
+            AnsParams::KERNEL
+        } else {
+            AnsParams::PAPER
+        },
+        precision: if args.flag("f32") { Precision::F32 } else { Precision::F64 },
+        delta_encode: !args.flag("no-delta"),
+    }
+}
+
+fn cmd_encode(args: &Args) -> i32 {
+    let m = match load_input(args) {
+        Ok(m) => m,
+        Err(c) => return c,
+    };
+    let opts = encode_opts(args);
+    let enc = match CsrDtans::encode(&m, &opts) {
+        Ok(e) => e,
+        Err(e) => return fail(e),
+    };
+    let r = enc.size_report();
+    println!(
+        "encoded: total {} B (tables {} + dicts {} + stream {} + row_lens {} + escapes {})",
+        r.total, r.tables, r.dicts, r.stream, r.row_lens, r.escapes
+    );
+    let out = PathBuf::from(args.get_or("out", "matrix.dtans"));
+    match serialize::save(&enc, &out) {
+        Ok(()) => {
+            println!("wrote {}", out.display());
+            0
+        }
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_decode(args: &Args) -> i32 {
+    let path = match args.positional.first() {
+        Some(p) => p.clone(),
+        None => return fail("missing input file"),
+    };
+    let enc = match serialize::load(Path::new(&path)) {
+        Ok(e) => e,
+        Err(e) => return fail(e),
+    };
+    let m = match enc.decode_to_csr() {
+        Ok(m) => m,
+        Err(e) => return fail(e),
+    };
+    let out = PathBuf::from(args.get_or("out", "decoded.mtx"));
+    match mtx::save_mtx(&m, &out) {
+        Ok(()) => {
+            println!("wrote {} ({} nnz)", out.display(), m.nnz());
+            0
+        }
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_spmv(args: &Args) -> i32 {
+    let m = match load_input(args) {
+        Ok(m) => m,
+        Err(c) => return c,
+    };
+    let iters = args.usize_or("iters", 10);
+    let mut rng = Xoshiro256::seeded(7);
+    let x: Vec<f64> = (0..m.ncols).map(|_| rng.next_f64() - 0.5).collect();
+    let mut want = vec![0.0; m.nrows];
+    if let Err(e) = spmv_csr(&m, &x, &mut want) {
+        return fail(e);
+    }
+    if args.flag("pjrt") {
+        let rt = match Runtime::open(&Runtime::default_dir()) {
+            Ok(r) => r,
+            Err(e) => return fail(e),
+        };
+        let opts = EncodeOptions {
+            params: AnsParams::KERNEL,
+            precision: Precision::F32,
+            delta_encode: true,
+        };
+        let enc = match CsrDtans::encode(&m, &opts) {
+            Ok(e) => e,
+            Err(e) => return fail(e),
+        };
+        let y_in = vec![0.0; m.nrows];
+        let t0 = std::time::Instant::now();
+        let mut y = Vec::new();
+        for _ in 0..iters {
+            y = match rt.spmv_dtans(&enc, &x, &y_in) {
+                Ok(y) => y,
+                Err(e) => return fail(e),
+            };
+        }
+        let dt = t0.elapsed().as_secs_f64() / iters as f64;
+        let err = (0..m.nrows)
+            .map(|r| (want[r] - y[r] as f64).abs())
+            .fold(0.0f64, f64::max);
+        println!("pjrt spmv: {:.3} ms/iter, max |err| vs CSR = {err:.2e}", dt * 1e3);
+    } else {
+        let enc = match CsrDtans::encode(&m, &encode_opts(args)) {
+            Ok(e) => e,
+            Err(e) => return fail(e),
+        };
+        let t0 = std::time::Instant::now();
+        let mut y = vec![0.0; m.nrows];
+        for _ in 0..iters {
+            y.iter_mut().for_each(|v| *v = 0.0);
+            if let Err(e) = spmv_csr_dtans(&enc, &x, &mut y) {
+                return fail(e);
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64() / iters as f64;
+        let err = (0..m.nrows)
+            .map(|r| (want[r] - y[r]).abs())
+            .fold(0.0f64, f64::max);
+        let gbps = (enc.size_report().total as f64 / dt) / 1e9;
+        println!(
+            "native spmv: {:.3} ms/iter ({:.2} GB/s decoded), max |err| vs CSR = {err:.2e}",
+            dt * 1e3,
+            gbps
+        );
+    }
+    0
+}
+
+fn cmd_exp(args: &Args) -> i32 {
+    let which = args.positional.first().cloned().unwrap_or_else(|| "all".into());
+    let scale = if args.flag("full") {
+        CorpusScale::default()
+    } else {
+        CorpusScale {
+            max_nnz: 1 << 18,
+            steps: 5,
+        }
+    };
+    let outdir = PathBuf::from(args.get_or("out", "results"));
+    let run = |name: &str| -> Option<dtans::eval::ExperimentOutput> {
+        match name {
+            "fig4" => Some(fig4(if args.flag("full") { 1 << 17 } else { 1 << 14 })),
+            "fig6" => Some(fig6(&scale)),
+            "tab1" => Some(tab1(&scale)),
+            "fig7" => Some(runtime_experiment(&scale, true)),
+            "fig8" => Some(runtime_experiment(&scale, false)),
+            "fig9" => Some(fig9(&scale)),
+            "ablate" => Some(ablate(&scale)),
+            _ => None,
+        }
+    };
+    let names: Vec<&str> = if which == "all" {
+        vec!["fig4", "fig6", "tab1", "fig7", "fig8", "fig9", "ablate"]
+    } else {
+        vec![which.as_str()]
+    };
+    for name in names {
+        let t0 = std::time::Instant::now();
+        match run(name) {
+            Some(out) => match dtans::eval::report::save(&out, &outdir) {
+                Ok(summary) => {
+                    println!("== {name} ({:.1}s) ==", t0.elapsed().as_secs_f64());
+                    println!("{summary}");
+                    for (stem, t) in &out.tables {
+                        if t.rows.len() <= 12 {
+                            println!("{}", t.to_markdown());
+                        } else {
+                            println!("[{} rows -> {}/{stem}.csv]", t.rows.len(), outdir.display());
+                        }
+                    }
+                }
+                Err(e) => return fail(e),
+            },
+            None => return fail(format!("unknown experiment {name:?}")),
+        }
+    }
+    0
+}

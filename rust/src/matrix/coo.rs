@@ -1,0 +1,120 @@
+//! Coordinate-list (COO) sparse matrix.
+
+use crate::util::error::{DtansError, Result};
+
+/// COO matrix: parallel arrays of (row, col, value) triplets.
+///
+/// Triplets need not be sorted; [`Coo::sorted_dedup`] canonicalizes
+/// (row-major, duplicate entries summed) before conversion to CSR.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Coo {
+    /// Number of rows.
+    pub nrows: usize,
+    /// Number of columns.
+    pub ncols: usize,
+    /// Row index per nonzero.
+    pub rows: Vec<u32>,
+    /// Column index per nonzero.
+    pub cols: Vec<u32>,
+    /// Value per nonzero.
+    pub vals: Vec<f64>,
+}
+
+impl Coo {
+    /// Empty matrix of given shape.
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Coo {
+            nrows,
+            ncols,
+            ..Default::default()
+        }
+    }
+
+    /// Number of stored entries (before dedup these may repeat).
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Append one triplet.
+    #[inline]
+    pub fn push(&mut self, r: u32, c: u32, v: f64) {
+        self.rows.push(r);
+        self.cols.push(c);
+        self.vals.push(v);
+    }
+
+    /// Validate indices are in range and arrays agree in length.
+    pub fn validate(&self) -> Result<()> {
+        if self.rows.len() != self.cols.len() || self.rows.len() != self.vals.len() {
+            return Err(DtansError::InvalidMatrix("triplet arrays disagree in length".into()));
+        }
+        for (&r, &c) in self.rows.iter().zip(&self.cols) {
+            if r as usize >= self.nrows || c as usize >= self.ncols {
+                return Err(DtansError::InvalidMatrix(format!(
+                    "entry ({r},{c}) out of bounds for {}x{}",
+                    self.nrows, self.ncols
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Sort row-major (row, then col) and sum duplicates.
+    pub fn sorted_dedup(&self) -> Coo {
+        let mut idx: Vec<usize> = (0..self.nnz()).collect();
+        idx.sort_unstable_by_key(|&i| ((self.rows[i] as u64) << 32) | self.cols[i] as u64);
+        let mut out = Coo::new(self.nrows, self.ncols);
+        for &i in &idx {
+            let (r, c, v) = (self.rows[i], self.cols[i], self.vals[i]);
+            if let (Some(&lr), Some(&lc)) = (out.rows.last(), out.cols.last()) {
+                if lr == r && lc == c {
+                    *out.vals.last_mut().unwrap() += v;
+                    continue;
+                }
+            }
+            out.push(r, c, v);
+        }
+        out
+    }
+
+    /// Dense row-major materialization (tests / tiny matrices only).
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut d = vec![0.0; self.nrows * self.ncols];
+        for i in 0..self.nnz() {
+            d[self.rows[i] as usize * self.ncols + self.cols[i] as usize] += self.vals[i];
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sorted_dedup_sums() {
+        let mut m = Coo::new(2, 2);
+        m.push(1, 1, 2.0);
+        m.push(0, 0, 1.0);
+        m.push(1, 1, 3.0);
+        let s = m.sorted_dedup();
+        assert_eq!(s.nnz(), 2);
+        assert_eq!(s.rows, vec![0, 1]);
+        assert_eq!(s.vals, vec![1.0, 5.0]);
+    }
+
+    #[test]
+    fn validate_catches_oob() {
+        let mut m = Coo::new(2, 2);
+        m.push(2, 0, 1.0);
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn dense_sums_duplicates() {
+        let mut m = Coo::new(1, 2);
+        m.push(0, 1, 1.5);
+        m.push(0, 1, 0.5);
+        assert_eq!(m.to_dense(), vec![0.0, 2.0]);
+    }
+}

@@ -1,0 +1,252 @@
+//! Compressed sparse row (CSR) matrix — the paper's starting format.
+
+use super::coo::Coo;
+use crate::util::error::{DtansError, Result};
+
+/// CSR matrix: values and column indices in row-major order plus per-row
+/// start offsets (Fig. 2 of the paper).
+///
+/// Column indices within each row are kept strictly ascending (the paper
+/// sorts nonzeros by column before delta-encoding); [`Csr::from_coo`]
+/// guarantees this.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Csr {
+    /// Number of rows.
+    pub nrows: usize,
+    /// Number of columns.
+    pub ncols: usize,
+    /// Row start offsets, length `nrows + 1`.
+    pub row_ptr: Vec<usize>,
+    /// Column index per nonzero, strictly ascending within a row.
+    pub cols: Vec<u32>,
+    /// Value per nonzero.
+    pub vals: Vec<f64>,
+}
+
+impl Csr {
+    /// Empty matrix of given shape.
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Csr {
+            nrows,
+            ncols,
+            row_ptr: vec![0; nrows + 1],
+            cols: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    /// Number of nonzeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Average number of nonzeros per row (the paper's `annzpr`).
+    pub fn annzpr(&self) -> f64 {
+        if self.nrows == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.nrows as f64
+        }
+    }
+
+    /// Column indices of row `r`.
+    #[inline]
+    pub fn row_cols(&self, r: usize) -> &[u32] {
+        &self.cols[self.row_ptr[r]..self.row_ptr[r + 1]]
+    }
+
+    /// Values of row `r`.
+    #[inline]
+    pub fn row_vals(&self, r: usize) -> &[f64] {
+        &self.vals[self.row_ptr[r]..self.row_ptr[r + 1]]
+    }
+
+    /// Number of nonzeros in row `r`.
+    #[inline]
+    pub fn row_len(&self, r: usize) -> usize {
+        self.row_ptr[r + 1] - self.row_ptr[r]
+    }
+
+    /// Longest row.
+    pub fn max_row_len(&self) -> usize {
+        (0..self.nrows).map(|r| self.row_len(r)).max().unwrap_or(0)
+    }
+
+    /// Build from COO (sorts and sums duplicates).
+    pub fn from_coo(coo: &Coo) -> Csr {
+        let s = coo.sorted_dedup();
+        let mut m = Csr::new(s.nrows, s.ncols);
+        m.cols = s.cols;
+        m.vals = s.vals;
+        let mut ptr = vec![0usize; s.nrows + 1];
+        for &r in &s.rows {
+            ptr[r as usize + 1] += 1;
+        }
+        for i in 0..s.nrows {
+            ptr[i + 1] += ptr[i];
+        }
+        m.row_ptr = ptr;
+        m
+    }
+
+    /// Convert back to COO (row-major order).
+    pub fn to_coo(&self) -> Coo {
+        let mut out = Coo::new(self.nrows, self.ncols);
+        for r in 0..self.nrows {
+            for i in self.row_ptr[r]..self.row_ptr[r + 1] {
+                out.push(r as u32, self.cols[i], self.vals[i]);
+            }
+        }
+        out
+    }
+
+    /// Validate structural invariants (monotone `row_ptr`, strictly
+    /// ascending in-row columns, in-range indices).
+    pub fn validate(&self) -> Result<()> {
+        if self.row_ptr.len() != self.nrows + 1 {
+            return Err(DtansError::InvalidMatrix("row_ptr length".into()));
+        }
+        if *self.row_ptr.last().unwrap_or(&0) != self.nnz() || self.cols.len() != self.vals.len() {
+            return Err(DtansError::InvalidMatrix("array lengths disagree".into()));
+        }
+        for r in 0..self.nrows {
+            if self.row_ptr[r] > self.row_ptr[r + 1] {
+                return Err(DtansError::InvalidMatrix(format!("row_ptr not monotone at {r}")));
+            }
+            let cols = self.row_cols(r);
+            for w in cols.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(DtansError::InvalidMatrix(format!(
+                        "columns not strictly ascending in row {r}"
+                    )));
+                }
+            }
+            if let Some(&last) = cols.last() {
+                if last as usize >= self.ncols {
+                    return Err(DtansError::InvalidMatrix(format!("column out of range in row {r}")));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Dense row-major materialization (tests / tiny matrices only).
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut d = vec![0.0; self.nrows * self.ncols];
+        for r in 0..self.nrows {
+            for i in self.row_ptr[r]..self.row_ptr[r + 1] {
+                d[r * self.ncols + self.cols[i] as usize] = self.vals[i];
+            }
+        }
+        d
+    }
+
+    /// In-memory CSR byte size with 32-bit indices and f64 values
+    /// (convenience for the quickstart; see [`super::SizeModel`] for the
+    /// precision-parametric accounting).
+    pub fn size_bytes_f64(&self) -> usize {
+        self.nnz() * 12 + (self.nrows + 1) * 4
+    }
+
+    /// Is the sparsity pattern + values symmetric? (Used by the Fig. 9
+    /// experiment which mimics AlphaSparse's triangular handling.)
+    pub fn is_symmetric(&self) -> bool {
+        if self.nrows != self.ncols {
+            return false;
+        }
+        // Build transpose lookup and compare.
+        let t = Csr::from_coo(&{
+            let mut c = Coo::new(self.ncols, self.nrows);
+            for r in 0..self.nrows {
+                for i in self.row_ptr[r]..self.row_ptr[r + 1] {
+                    c.push(self.cols[i], r as u32, self.vals[i]);
+                }
+            }
+            c
+        });
+        t.row_ptr == self.row_ptr && t.cols == self.cols && t.vals == self.vals
+    }
+
+    /// Lower-triangular part (including diagonal) — AlphaSparse's storage
+    /// for symmetric matrices.
+    pub fn lower_triangular(&self) -> Csr {
+        let mut c = Coo::new(self.nrows, self.ncols);
+        for r in 0..self.nrows {
+            for i in self.row_ptr[r]..self.row_ptr[r + 1] {
+                if self.cols[i] as usize <= r {
+                    c.push(r as u32, self.cols[i], self.vals[i]);
+                }
+            }
+        }
+        Csr::from_coo(&c)
+    }
+
+    /// Round all values to f32 and back (the 32-bit precision setting).
+    pub fn round_to_f32(&self) -> Csr {
+        let mut m = self.clone();
+        for v in &mut m.vals {
+            *v = *v as f32 as f64;
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn example() -> Csr {
+        // Fig. 2 of the paper.
+        let mut coo = Coo::new(4, 4);
+        for &(r, c, v) in &[(0, 1, 7.0), (0, 3, 5.0), (1, 0, 3.0), (1, 2, 2.0), (2, 1, 4.0), (3, 3, 1.0)] {
+            coo.push(r, c, v);
+        }
+        Csr::from_coo(&coo)
+    }
+
+    #[test]
+    fn matches_paper_fig2() {
+        let m = example();
+        assert_eq!(m.vals, vec![7.0, 5.0, 3.0, 2.0, 4.0, 1.0]);
+        assert_eq!(m.cols, vec![1, 3, 0, 2, 1, 3]);
+        assert_eq!(m.row_ptr, vec![0, 2, 4, 5, 6]);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn coo_roundtrip() {
+        let m = example();
+        let back = Csr::from_coo(&m.to_coo());
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn dense_matches() {
+        let m = example();
+        let d = m.to_dense();
+        assert_eq!(d[0 * 4 + 1], 7.0);
+        assert_eq!(d[3 * 4 + 3], 1.0);
+        assert_eq!(d.iter().filter(|&&x| x != 0.0).count(), 6);
+    }
+
+    #[test]
+    fn symmetric_detection() {
+        let mut coo = Coo::new(3, 3);
+        for &(r, c) in &[(0, 1), (1, 0), (1, 2), (2, 1), (0, 0)] {
+            coo.push(r, c, 1.0);
+        }
+        let m = Csr::from_coo(&coo);
+        assert!(m.is_symmetric());
+        let lt = m.lower_triangular();
+        assert_eq!(lt.nnz(), 3); // (0,0),(1,0),(2,1)
+        assert!(!example().is_symmetric());
+    }
+
+    #[test]
+    fn annzpr_and_maxrow() {
+        let m = example();
+        assert!((m.annzpr() - 1.5).abs() < 1e-12);
+        assert_eq!(m.max_row_len(), 2);
+    }
+}

@@ -1,0 +1,216 @@
+//! Random graph models used in Fig. 4 of the paper: Erdős–Rényi,
+//! Watts–Strogatz and Barabási–Albert, parameterized by average degree.
+
+use crate::matrix::coo::Coo;
+use crate::matrix::csr::Csr;
+use crate::util::rng::Xoshiro256;
+
+/// The three random graph models of Fig. 4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphModel {
+    /// G(n, p): each edge independently with probability p = degree/n.
+    ErdosRenyi,
+    /// Ring lattice with k neighbors, each edge rewired with prob 0.1.
+    WattsStrogatz,
+    /// Preferential attachment, m = degree/2 edges per new node.
+    BarabasiAlbert,
+}
+
+impl GraphModel {
+    /// Parse from a CLI label.
+    pub fn parse(s: &str) -> Option<GraphModel> {
+        match s.to_ascii_lowercase().as_str() {
+            "er" | "erdos-renyi" | "erdosrenyi" => Some(GraphModel::ErdosRenyi),
+            "ws" | "watts-strogatz" => Some(GraphModel::WattsStrogatz),
+            "ba" | "barabasi-albert" => Some(GraphModel::BarabasiAlbert),
+            _ => None,
+        }
+    }
+
+    /// Display label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            GraphModel::ErdosRenyi => "Erdos-Renyi",
+            GraphModel::WattsStrogatz => "Watts-Strogatz",
+            GraphModel::BarabasiAlbert => "Barabasi-Albert",
+        }
+    }
+}
+
+/// Generate the adjacency matrix (as CSR, all values 1.0) of a random graph
+/// with `n` nodes and the given target average degree.
+///
+/// Matrix parameters are chosen as in the paper's Fig. 4: "model parameters
+/// are chosen to keep the average degree at 5, 10, and 20".
+pub fn gen_graph_csr(model: GraphModel, n: usize, avg_degree: f64, rng: &mut Xoshiro256) -> Csr {
+    let coo = match model {
+        GraphModel::ErdosRenyi => erdos_renyi(n, avg_degree, rng),
+        GraphModel::WattsStrogatz => watts_strogatz(n, avg_degree, 0.1, rng),
+        GraphModel::BarabasiAlbert => barabasi_albert(n, avg_degree, rng),
+    };
+    Csr::from_coo(&coo)
+}
+
+/// Directed G(n, p) with p = degree/n, generated with geometric skipping so
+/// the cost is O(nnz) rather than O(n²).
+fn erdos_renyi(n: usize, avg_degree: f64, rng: &mut Xoshiro256) -> Coo {
+    let p = (avg_degree / n as f64).min(1.0);
+    let mut coo = Coo::new(n, n);
+    if p <= 0.0 {
+        return coo;
+    }
+    let total = (n as u64) * (n as u64);
+    let mut pos: u64 = rng.next_geometric(p);
+    while pos < total {
+        coo.push((pos / n as u64) as u32, (pos % n as u64) as u32, 1.0);
+        pos += 1 + rng.next_geometric(p);
+    }
+    coo
+}
+
+/// Watts–Strogatz small-world: ring lattice with `k = round(degree)`
+/// neighbors per node (k/2 on each side), each edge rewired with
+/// probability `beta`.
+fn watts_strogatz(n: usize, avg_degree: f64, beta: f64, rng: &mut Xoshiro256) -> Coo {
+    let k = (avg_degree.round() as usize).max(2) & !1; // even, >= 2
+    let mut coo = Coo::new(n, n);
+    if n < 2 {
+        return coo;
+    }
+    // BTreeSet keeps iteration deterministic (seeded corpora must be
+    // reproducible across processes).
+    use std::collections::BTreeSet;
+    let mut edges: BTreeSet<(u32, u32)> = BTreeSet::new();
+    for i in 0..n {
+        for j in 1..=(k / 2) {
+            let mut tgt = ((i + j) % n) as u32;
+            if beta > 0.0 && rng.chance(beta) {
+                // Rewire to a uniform random target (avoid self loops).
+                for _ in 0..8 {
+                    let cand = rng.below_usize(n) as u32;
+                    if cand as usize != i {
+                        tgt = cand;
+                        break;
+                    }
+                }
+            }
+            edges.insert((i as u32, tgt));
+            edges.insert((tgt, i as u32));
+        }
+    }
+    for (r, c) in edges {
+        coo.push(r, c, 1.0);
+    }
+    coo
+}
+
+/// Barabási–Albert preferential attachment with `m = degree/2` edges per
+/// new node, implemented with the standard repeated-nodes target list (an
+/// O(nnz) sampler of the degree distribution).
+fn barabasi_albert(n: usize, avg_degree: f64, rng: &mut Xoshiro256) -> Coo {
+    let m = ((avg_degree / 2.0).round() as usize).max(1);
+    let mut coo = Coo::new(n, n);
+    if n <= m {
+        // Complete graph fallback for tiny n.
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    coo.push(i as u32, j as u32, 1.0);
+                }
+            }
+        }
+        return coo;
+    }
+    // `targets` holds node ids proportionally to their degree.
+    let mut targets: Vec<u32> = Vec::with_capacity(2 * m * n);
+    // Seed: a small clique of m+1 nodes.
+    for i in 0..=m {
+        for j in 0..=m {
+            if i != j {
+                coo.push(i as u32, j as u32, 1.0);
+            }
+        }
+        for _ in 0..m {
+            targets.push(i as u32);
+        }
+    }
+    use std::collections::BTreeSet;
+    for v in (m + 1)..n {
+        let mut chosen: BTreeSet<u32> = BTreeSet::new();
+        let mut guard = 0;
+        while chosen.len() < m && guard < 50 * m {
+            let t = targets[rng.below_usize(targets.len())];
+            chosen.insert(t);
+            guard += 1;
+        }
+        for &t in &chosen {
+            coo.push(v as u32, t, 1.0);
+            coo.push(t, v as u32, 1.0);
+            targets.push(t);
+            targets.push(v as u32);
+        }
+    }
+    coo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::stats::MatrixStats;
+
+    #[test]
+    fn er_degree_close_to_target() {
+        let mut rng = Xoshiro256::seeded(1);
+        let m = gen_graph_csr(GraphModel::ErdosRenyi, 2000, 10.0, &mut rng);
+        let d = m.annzpr();
+        assert!((d - 10.0).abs() < 1.0, "avg degree {d}");
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn ws_degree_close_to_target() {
+        let mut rng = Xoshiro256::seeded(2);
+        let m = gen_graph_csr(GraphModel::WattsStrogatz, 2000, 10.0, &mut rng);
+        let d = m.annzpr();
+        assert!(d > 8.0 && d < 11.0, "avg degree {d}");
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn ba_degree_close_to_target() {
+        let mut rng = Xoshiro256::seeded(3);
+        let m = gen_graph_csr(GraphModel::BarabasiAlbert, 2000, 10.0, &mut rng);
+        let d = m.annzpr();
+        assert!(d > 8.0 && d < 12.0, "avg degree {d}");
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn ba_has_hubs() {
+        // Power-law: max degree should far exceed the average.
+        let mut rng = Xoshiro256::seeded(4);
+        let m = gen_graph_csr(GraphModel::BarabasiAlbert, 3000, 10.0, &mut rng);
+        assert!(m.max_row_len() > 5 * m.annzpr() as usize);
+    }
+
+    #[test]
+    fn er_delta_encoding_reduces_entropy() {
+        // The Fig. 4 claim: delta-encoding reduces index entropy for all
+        // three models. ER deltas are geometric, so this is the clearest.
+        let mut rng = Xoshiro256::seeded(5);
+        let m = gen_graph_csr(GraphModel::ErdosRenyi, 4096, 10.0, &mut rng);
+        let s = MatrixStats::compute(&m);
+        assert!(
+            s.relative_delta_entropy() < 0.95,
+            "relative entropy {}",
+            s.relative_delta_entropy()
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = gen_graph_csr(GraphModel::ErdosRenyi, 500, 5.0, &mut Xoshiro256::seeded(9));
+        let b = gen_graph_csr(GraphModel::ErdosRenyi, 500, 5.0, &mut Xoshiro256::seeded(9));
+        assert_eq!(a, b);
+    }
+}

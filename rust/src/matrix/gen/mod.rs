@@ -1,0 +1,12 @@
+//! Matrix generators for the evaluation corpus and the Fig. 4 experiment:
+//! random graph models (Erdős–Rényi, Watts–Strogatz, Barabási–Albert),
+//! structured patterns (banded, stencils, blocks, power-law rows), and
+//! value distributions.
+
+pub mod graphs;
+pub mod structured;
+pub mod values;
+
+pub use graphs::{gen_graph_csr, GraphModel};
+pub use structured::*;
+pub use values::{assign_values, ValueDist};

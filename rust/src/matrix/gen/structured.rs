@@ -1,0 +1,244 @@
+//! Structured sparsity patterns: banded matrices, 2D/3D stencils, random
+//! block patterns, power-law row lengths, and uniform random matrices.
+//!
+//! Together with the graph models these span the corpus axes the paper's
+//! Tables I–III bucket over (total nnz × annzpr × regularity).
+
+use crate::matrix::coo::Coo;
+use crate::matrix::csr::Csr;
+use crate::util::rng::Xoshiro256;
+
+/// Tridiagonal matrix of order `n` (the paper's §IV-A example).
+pub fn tridiagonal(n: usize) -> Csr {
+    banded(n, 1)
+}
+
+/// Banded matrix with half-bandwidth `bw` (full band `2*bw+1`).
+pub fn banded(n: usize, bw: usize) -> Csr {
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        let lo = i.saturating_sub(bw);
+        let hi = (i + bw + 1).min(n);
+        for j in lo..hi {
+            coo.push(i as u32, j as u32, if i == j { 2.0 } else { -1.0 });
+        }
+    }
+    Csr::from_coo(&coo)
+}
+
+/// 5-point 2D Laplacian stencil on an `nx × ny` grid.
+pub fn stencil2d5(nx: usize, ny: usize) -> Csr {
+    let n = nx * ny;
+    let mut coo = Coo::new(n, n);
+    let idx = |x: usize, y: usize| (y * nx + x) as u32;
+    for y in 0..ny {
+        for x in 0..nx {
+            let c = idx(x, y);
+            coo.push(c, c, 4.0);
+            if x > 0 {
+                coo.push(c, idx(x - 1, y), -1.0);
+            }
+            if x + 1 < nx {
+                coo.push(c, idx(x + 1, y), -1.0);
+            }
+            if y > 0 {
+                coo.push(c, idx(x, y - 1), -1.0);
+            }
+            if y + 1 < ny {
+                coo.push(c, idx(x, y + 1), -1.0);
+            }
+        }
+    }
+    Csr::from_coo(&coo)
+}
+
+/// 9-point 2D stencil on an `nx × ny` grid.
+pub fn stencil2d9(nx: usize, ny: usize) -> Csr {
+    let n = nx * ny;
+    let mut coo = Coo::new(n, n);
+    for y in 0..ny as isize {
+        for x in 0..nx as isize {
+            let c = (y * nx as isize + x) as u32;
+            for dy in -1..=1 {
+                for dx in -1..=1 {
+                    let (xx, yy) = (x + dx, y + dy);
+                    if xx >= 0 && yy >= 0 && (xx as usize) < nx && (yy as usize) < ny {
+                        let v = if dx == 0 && dy == 0 { 8.0 } else { -1.0 };
+                        coo.push(c, (yy * nx as isize + xx) as u32, v);
+                    }
+                }
+            }
+        }
+    }
+    Csr::from_coo(&coo)
+}
+
+/// 27-point 3D stencil on an `nx × ny × nz` grid.
+pub fn stencil3d27(nx: usize, ny: usize, nz: usize) -> Csr {
+    let n = nx * ny * nz;
+    let mut coo = Coo::new(n, n);
+    for z in 0..nz as isize {
+        for y in 0..ny as isize {
+            for x in 0..nx as isize {
+                let c = ((z * ny as isize + y) * nx as isize + x) as u32;
+                for dz in -1..=1 {
+                    for dy in -1..=1 {
+                        for dx in -1..=1 {
+                            let (xx, yy, zz) = (x + dx, y + dy, z + dz);
+                            if xx >= 0
+                                && yy >= 0
+                                && zz >= 0
+                                && (xx as usize) < nx
+                                && (yy as usize) < ny
+                                && (zz as usize) < nz
+                            {
+                                let v = if dx == 0 && dy == 0 && dz == 0 { 26.0 } else { -1.0 };
+                                coo.push(c, ((zz * ny as isize + yy) * nx as isize + xx) as u32, v);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Csr::from_coo(&coo)
+}
+
+/// Uniform random pattern with exactly ~`nnz` entries spread over an
+/// `nrows × ncols` matrix (duplicates collapse, so actual nnz ≲ requested).
+pub fn random_uniform(nrows: usize, ncols: usize, nnz: usize, rng: &mut Xoshiro256) -> Csr {
+    let mut coo = Coo::new(nrows, ncols);
+    for _ in 0..nnz {
+        coo.push(
+            rng.below_usize(nrows) as u32,
+            rng.below_usize(ncols) as u32,
+            1.0,
+        );
+    }
+    Csr::from_coo(&coo)
+}
+
+/// Random block pattern: `nb × nb` dense blocks of size `bs` dropped onto a
+/// block grid with the given density — models FEM-style clustered matrices
+/// where delta-encoding shines.
+pub fn block_random(n: usize, bs: usize, density: f64, rng: &mut Xoshiro256) -> Csr {
+    let nb = n / bs;
+    let mut coo = Coo::new(n, n);
+    for bi in 0..nb {
+        for bj in 0..nb {
+            // Always keep the diagonal block so no row is empty.
+            if bi == bj || rng.chance(density) {
+                for i in 0..bs {
+                    for j in 0..bs {
+                        coo.push((bi * bs + i) as u32, (bj * bs + j) as u32, 1.0);
+                    }
+                }
+            }
+        }
+    }
+    Csr::from_coo(&coo)
+}
+
+/// Power-law row lengths: row r gets ~`c / (r+1)^alpha` nonzeros at random
+/// columns — models the highly irregular matrices our kernel handles badly
+/// (upper-left quadrant of Fig. 7).
+pub fn powerlaw_rows(n: usize, avg_nnz_per_row: f64, alpha: f64, rng: &mut Xoshiro256) -> Csr {
+    // Normalize so the expected average matches.
+    let weight: f64 = (0..n).map(|r| 1.0 / ((r + 1) as f64).powf(alpha)).sum();
+    let scale = avg_nnz_per_row * n as f64 / weight;
+    let mut coo = Coo::new(n, n);
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order); // hubs scattered, not sorted by row id
+    for (rank, &r) in order.iter().enumerate() {
+        let len = ((scale / ((rank + 1) as f64).powf(alpha)).round() as usize).clamp(1, n);
+        for &c in rng.sample_distinct(n, len).iter() {
+            coo.push(r as u32, c as u32, 1.0);
+        }
+    }
+    Csr::from_coo(&coo)
+}
+
+/// Diagonal plus `k` random off-diagonals per row — mildly irregular.
+pub fn diag_plus_random(n: usize, k: usize, rng: &mut Xoshiro256) -> Csr {
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        coo.push(i as u32, i as u32, 2.0);
+        for &c in rng.sample_distinct(n, k).iter() {
+            if c != i {
+                coo.push(i as u32, c as u32, -0.1);
+            }
+        }
+    }
+    Csr::from_coo(&coo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tridiagonal_shape() {
+        let m = tridiagonal(5);
+        assert_eq!(m.nnz(), 13);
+        assert_eq!(m.row_len(0), 2);
+        assert_eq!(m.row_len(2), 3);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn banded_width() {
+        let m = banded(10, 2);
+        assert_eq!(m.max_row_len(), 5);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn stencil5_interior_has_5() {
+        let m = stencil2d5(8, 8);
+        // Interior point (3,3) -> row 27 has 5 entries.
+        assert_eq!(m.row_len(3 * 8 + 3), 5);
+        assert_eq!(m.row_len(0), 3); // corner
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn stencil9_and_27_counts() {
+        assert_eq!(stencil2d9(5, 5).row_len(2 * 5 + 2), 9);
+        assert_eq!(stencil3d27(4, 4, 4).row_len(1 * 16 + 1 * 4 + 1), 27);
+    }
+
+    #[test]
+    fn random_uniform_near_target() {
+        let mut rng = Xoshiro256::seeded(1);
+        let m = random_uniform(200, 200, 2000, &mut rng);
+        assert!(m.nnz() > 1800 && m.nnz() <= 2000);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn block_random_no_empty_rows() {
+        let mut rng = Xoshiro256::seeded(2);
+        let m = block_random(64, 8, 0.2, &mut rng);
+        for r in 0..m.nrows {
+            assert!(m.row_len(r) >= 8);
+        }
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn powerlaw_irregular() {
+        let mut rng = Xoshiro256::seeded(3);
+        let m = powerlaw_rows(500, 8.0, 1.0, &mut rng);
+        assert!(m.max_row_len() > 4 * m.annzpr() as usize);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn diag_plus_random_has_diag() {
+        let mut rng = Xoshiro256::seeded(4);
+        let m = diag_plus_random(50, 3, &mut rng);
+        for r in 0..50 {
+            assert!(m.row_cols(r).contains(&(r as u32)));
+        }
+    }
+}

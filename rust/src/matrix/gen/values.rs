@@ -1,0 +1,151 @@
+//! Value distributions assigned to sparsity patterns.
+//!
+//! The compressibility of the *value* stream varies enormously across
+//! domains: pattern matrices (all 1.0) are maximally compressible, FEM
+//! matrices have few distinct stiffness values, quantized NN weights have
+//! e.g. 256 levels, and random measurement data is incompressible (every
+//! value escapes). The corpus sweeps all of these.
+
+use crate::matrix::csr::Csr;
+use crate::util::rng::Xoshiro256;
+
+/// Value distribution families.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ValueDist {
+    /// All values 1.0 (pattern matrices).
+    Ones,
+    /// Uniform over `k` distinct values (FEM-style).
+    FewDistinct(usize),
+    /// Gaussian quantized to `levels` levels (quantized NN weights).
+    Quantized(usize),
+    /// Small integers in `[-range, range]` (integer matrices).
+    SmallInts(u32),
+    /// Fully random uniform in [0,1) — incompressible values.
+    Random,
+    /// Gaussian N(0,1) — incompressible values with sign structure.
+    Gaussian,
+}
+
+impl ValueDist {
+    /// Parse from a CLI label like `ones`, `few16`, `quant256`, `random`.
+    pub fn parse(s: &str) -> Option<ValueDist> {
+        let s = s.to_ascii_lowercase();
+        if s == "ones" {
+            Some(ValueDist::Ones)
+        } else if s == "random" {
+            Some(ValueDist::Random)
+        } else if s == "gaussian" {
+            Some(ValueDist::Gaussian)
+        } else if let Some(k) = s.strip_prefix("few") {
+            k.parse().ok().map(ValueDist::FewDistinct)
+        } else if let Some(k) = s.strip_prefix("quant") {
+            k.parse().ok().map(ValueDist::Quantized)
+        } else if let Some(k) = s.strip_prefix("ints") {
+            k.parse().ok().map(ValueDist::SmallInts)
+        } else {
+            None
+        }
+    }
+
+    /// Label for reports.
+    pub fn label(&self) -> String {
+        match self {
+            ValueDist::Ones => "ones".into(),
+            ValueDist::FewDistinct(k) => format!("few{k}"),
+            ValueDist::Quantized(k) => format!("quant{k}"),
+            ValueDist::SmallInts(k) => format!("ints{k}"),
+            ValueDist::Random => "random".into(),
+            ValueDist::Gaussian => "gaussian".into(),
+        }
+    }
+}
+
+/// Overwrite the values of `m` in place according to `dist`.
+pub fn assign_values(m: &mut Csr, dist: ValueDist, rng: &mut Xoshiro256) {
+    match dist {
+        ValueDist::Ones => {
+            for v in &mut m.vals {
+                *v = 1.0;
+            }
+        }
+        ValueDist::FewDistinct(k) => {
+            let k = k.max(1);
+            let palette: Vec<f64> = (0..k).map(|_| rng.next_gaussian()).collect();
+            for v in &mut m.vals {
+                *v = palette[rng.below_usize(k)];
+            }
+        }
+        ValueDist::Quantized(levels) => {
+            let levels = levels.max(2) as f64;
+            for v in &mut m.vals {
+                let g = rng.next_gaussian().clamp(-4.0, 4.0);
+                // Quantize to `levels` uniform levels over [-4, 4].
+                let q = ((g + 4.0) / 8.0 * (levels - 1.0)).round() / (levels - 1.0) * 8.0 - 4.0;
+                *v = q;
+            }
+        }
+        ValueDist::SmallInts(range) => {
+            let span = (2 * range + 1) as u64;
+            for v in &mut m.vals {
+                *v = (rng.below(span) as i64 - range as i64) as f64;
+            }
+        }
+        ValueDist::Random => {
+            for v in &mut m.vals {
+                *v = rng.next_f64();
+            }
+        }
+        ValueDist::Gaussian => {
+            for v in &mut m.vals {
+                *v = rng.next_gaussian();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen::structured::banded;
+    use std::collections::HashSet;
+
+    fn distinct(m: &Csr) -> usize {
+        m.vals.iter().map(|v| v.to_bits()).collect::<HashSet<_>>().len()
+    }
+
+    #[test]
+    fn ones_single_value() {
+        let mut m = banded(100, 3);
+        assign_values(&mut m, ValueDist::Ones, &mut Xoshiro256::seeded(1));
+        assert_eq!(distinct(&m), 1);
+    }
+
+    #[test]
+    fn few_distinct_bounded() {
+        let mut m = banded(100, 3);
+        assign_values(&mut m, ValueDist::FewDistinct(8), &mut Xoshiro256::seeded(2));
+        assert!(distinct(&m) <= 8);
+    }
+
+    #[test]
+    fn quantized_bounded_levels() {
+        let mut m = banded(200, 3);
+        assign_values(&mut m, ValueDist::Quantized(16), &mut Xoshiro256::seeded(3));
+        assert!(distinct(&m) <= 16);
+    }
+
+    #[test]
+    fn random_mostly_distinct() {
+        let mut m = banded(100, 3);
+        assign_values(&mut m, ValueDist::Random, &mut Xoshiro256::seeded(4));
+        assert!(distinct(&m) > m.nnz() / 2);
+    }
+
+    #[test]
+    fn parse_labels() {
+        assert_eq!(ValueDist::parse("few16"), Some(ValueDist::FewDistinct(16)));
+        assert_eq!(ValueDist::parse("quant256"), Some(ValueDist::Quantized(256)));
+        assert_eq!(ValueDist::parse("ones"), Some(ValueDist::Ones));
+        assert!(ValueDist::parse("bogus").is_none());
+    }
+}

@@ -1,0 +1,95 @@
+//! Sparse matrix substrates: storage formats (COO/CSR/SELL), conversions,
+//! MatrixMarket IO, generators, and entropy/structure statistics.
+//!
+//! These are the formats the paper compares against (cuSPARSE's CSR, COO and
+//! SELL) plus everything needed to build the evaluation corpus. Values are
+//! held as `f64` in memory; the 64-/32-bit distinction of the paper enters
+//! through size accounting ([`SizeModel`]) and through the value
+//! symbolization in [`crate::format`].
+
+pub mod coo;
+pub mod csr;
+pub mod gen;
+pub mod mtx;
+pub mod sell;
+pub mod stats;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use sell::Sell;
+
+/// Precision used for *size accounting* and symbolization (the paper's
+/// 64-bit vs 32-bit settings).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// 8-byte values (scientific computing gold standard).
+    F64,
+    /// 4-byte values (ML-style reduced footprint).
+    F32,
+}
+
+impl Precision {
+    /// Bytes per stored value.
+    pub fn value_bytes(self) -> usize {
+        match self {
+            Precision::F64 => 8,
+            Precision::F32 => 4,
+        }
+    }
+
+    /// Short label used in reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::F64 => "64-bit",
+            Precision::F32 => "32-bit",
+        }
+    }
+}
+
+/// Byte-size model for the classic formats with 32-bit indices, matching
+/// the paper's accounting (cuSPARSE with 32-bit indices).
+#[derive(Debug, Clone, Copy)]
+pub struct SizeModel {
+    /// Value precision.
+    pub precision: Precision,
+}
+
+impl SizeModel {
+    /// CSR bytes: one u32 column index + value per nonzero, one u32 row
+    /// offset per row + 1.
+    pub fn csr_bytes(&self, nrows: usize, nnz: usize) -> usize {
+        nnz * (4 + self.precision.value_bytes()) + (nrows + 1) * 4
+    }
+
+    /// COO bytes: two u32 indices + value per nonzero (empty rows are free).
+    pub fn coo_bytes(&self, nnz: usize) -> usize {
+        nnz * (8 + self.precision.value_bytes())
+    }
+
+    /// SELL bytes from actual padded layout: per slice, `width × height`
+    /// padded (index + value) cells plus one u32 slice offset.
+    pub fn sell_bytes(&self, sell: &Sell) -> usize {
+        let padded: usize = sell
+            .slice_widths
+            .iter()
+            .map(|&w| w as usize * sell.slice_height)
+            .sum();
+        padded * (4 + self.precision.value_bytes()) + sell.slice_widths.len() * 4
+    }
+
+    /// The paper's baseline: smallest of CSR, COO, SELL.
+    pub fn best_baseline_bytes(&self, csr: &Csr) -> (usize, &'static str) {
+        let sell = Sell::from_csr(csr, 32);
+        let c = self.csr_bytes(csr.nrows, csr.nnz());
+        let o = self.coo_bytes(csr.nnz());
+        let s = self.sell_bytes(&sell);
+        let mut best = (c, "CSR");
+        if o < best.0 {
+            best = (o, "COO");
+        }
+        if s < best.0 {
+            best = (s, "SELL");
+        }
+        best
+    }
+}

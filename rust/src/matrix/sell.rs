@@ -1,0 +1,161 @@
+//! Sliced ELLPACK (SELL) format — groups of `slice_height` rows padded to
+//! the slice-local maximum row length and stored column-major, the
+//! SIMD/GPU-friendly format the paper compares against.
+
+use super::csr::Csr;
+
+/// SELL matrix with fixed slice height (32 matches a warp, as in the
+/// paper's setting; cuSPARSE SELL also uses warp-sized slices).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sell {
+    /// Number of rows / columns of the logical matrix.
+    pub nrows: usize,
+    /// Number of columns.
+    pub ncols: usize,
+    /// Rows per slice.
+    pub slice_height: usize,
+    /// Width (max row length) of each slice.
+    pub slice_widths: Vec<u32>,
+    /// Start offset of each slice in `cols`/`vals` (length = nslices + 1).
+    pub slice_ptr: Vec<usize>,
+    /// Column indices, column-major within a slice; padding uses the row's
+    /// last valid column (benign duplicate reads, zero value).
+    pub cols: Vec<u32>,
+    /// Values, column-major within a slice; padding is 0.0.
+    pub vals: Vec<f64>,
+    /// Per-row actual lengths (needed to ignore padding).
+    pub row_lens: Vec<u32>,
+}
+
+impl Sell {
+    /// Number of slices.
+    pub fn nslices(&self) -> usize {
+        self.slice_widths.len()
+    }
+
+    /// Total padded cells.
+    pub fn padded_cells(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Build from CSR with the given slice height.
+    pub fn from_csr(csr: &Csr, slice_height: usize) -> Sell {
+        assert!(slice_height > 0);
+        let nslices = csr.nrows.div_ceil(slice_height.max(1)).max(0);
+        let mut slice_widths = Vec::with_capacity(nslices);
+        let mut slice_ptr = vec![0usize];
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        let row_lens: Vec<u32> = (0..csr.nrows).map(|r| csr.row_len(r) as u32).collect();
+        for s in 0..nslices {
+            let r0 = s * slice_height;
+            let r1 = (r0 + slice_height).min(csr.nrows);
+            let width = (r0..r1).map(|r| csr.row_len(r)).max().unwrap_or(0);
+            slice_widths.push(width as u32);
+            // Column-major: for each position j, all rows of the slice.
+            for j in 0..width {
+                for rr in 0..slice_height {
+                    let r = r0 + rr;
+                    if r < r1 && j < csr.row_len(r) {
+                        cols.push(csr.row_cols(r)[j]);
+                        vals.push(csr.row_vals(r)[j]);
+                    } else {
+                        // Padding: repeat a valid column (or 0) with value 0.
+                        let pad_col = if r < r1 && csr.row_len(r) > 0 {
+                            *csr.row_cols(r).last().unwrap()
+                        } else {
+                            0
+                        };
+                        cols.push(pad_col);
+                        vals.push(0.0);
+                    }
+                }
+            }
+            slice_ptr.push(cols.len());
+        }
+        Sell {
+            nrows: csr.nrows,
+            ncols: csr.ncols,
+            slice_height,
+            slice_widths,
+            slice_ptr,
+            cols,
+            vals,
+            row_lens,
+        }
+    }
+
+    /// Convert back to CSR (drops padding) — used by tests.
+    pub fn to_csr(&self) -> Csr {
+        let mut coo = super::coo::Coo::new(self.nrows, self.ncols);
+        for s in 0..self.nslices() {
+            let r0 = s * self.slice_height;
+            let width = self.slice_widths[s] as usize;
+            let base = self.slice_ptr[s];
+            for j in 0..width {
+                for rr in 0..self.slice_height {
+                    let r = r0 + rr;
+                    if r < self.nrows && (j as u32) < self.row_lens[r] {
+                        let idx = base + j * self.slice_height + rr;
+                        coo.push(r as u32, self.cols[idx], self.vals[idx]);
+                    }
+                }
+            }
+        }
+        Csr::from_coo(&coo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::coo::Coo;
+
+    fn example() -> Csr {
+        let mut coo = Coo::new(5, 6);
+        for &(r, c, v) in &[
+            (0, 0, 1.0),
+            (0, 5, 2.0),
+            (1, 2, 3.0),
+            (2, 0, 4.0),
+            (2, 1, 5.0),
+            (2, 3, 6.0),
+            (4, 4, 7.0),
+        ] {
+            coo.push(r, c, v);
+        }
+        Csr::from_coo(&coo)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = example();
+        let sell = Sell::from_csr(&m, 2);
+        assert_eq!(sell.to_csr(), m);
+    }
+
+    #[test]
+    fn slice_widths_are_local_maxima() {
+        let m = example();
+        let sell = Sell::from_csr(&m, 2);
+        // slices: rows {0,1} width 2; {2,3} width 3; {4} width 1
+        assert_eq!(sell.slice_widths, vec![2, 3, 1]);
+        assert_eq!(sell.padded_cells(), 2 * 2 + 3 * 2 + 1 * 2);
+    }
+
+    #[test]
+    fn warp_sized_slices() {
+        let m = example();
+        let sell = Sell::from_csr(&m, 32);
+        assert_eq!(sell.nslices(), 1);
+        assert_eq!(sell.to_csr(), m);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = Csr::new(0, 0);
+        let sell = Sell::from_csr(&m, 32);
+        assert_eq!(sell.nslices(), 0);
+        assert_eq!(sell.padded_cells(), 0);
+    }
+}

@@ -1,0 +1,213 @@
+//! Entropy and structure statistics over sparse matrices.
+//!
+//! These drive the Fig. 4 experiment (entropy reduction via delta-encoding
+//! on random graph models) and the corpus characterization used in the
+//! Table I–III bucketing.
+
+use super::csr::Csr;
+use std::collections::HashMap;
+
+/// Shannon entropy (bits/symbol) of a count multiset — Eq. (1).
+pub fn entropy_of_counts<I: IntoIterator<Item = u64>>(counts: I) -> f64 {
+    let counts: Vec<u64> = counts.into_iter().filter(|&c| c > 0).collect();
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let total = total as f64;
+    counts
+        .iter()
+        .map(|&c| {
+            let p = c as f64 / total;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+/// Cross entropy H(P, P') in bits/symbol — Eq. (2). `p` and `q` are
+/// parallel per-symbol probability slices; symbols with q=0 must not have
+/// p>0 (caller guarantees coverage, e.g. via an escape symbol).
+pub fn cross_entropy(p: &[f64], q: &[f64]) -> f64 {
+    p.iter()
+        .zip(q)
+        .filter(|(&pi, _)| pi > 0.0)
+        .map(|(&pi, &qi)| -pi * qi.log2())
+        .sum()
+}
+
+/// Entropy of a u32 symbol sequence.
+pub fn entropy_u32(xs: impl IntoIterator<Item = u32>) -> f64 {
+    let mut counts: HashMap<u32, u64> = HashMap::new();
+    for x in xs {
+        *counts.entry(x).or_insert(0) += 1;
+    }
+    entropy_of_counts(counts.into_values())
+}
+
+/// Entropy of a u64 symbol sequence (used for f64 value bit patterns).
+pub fn entropy_u64(xs: impl IntoIterator<Item = u64>) -> f64 {
+    let mut counts: HashMap<u64, u64> = HashMap::new();
+    for x in xs {
+        *counts.entry(x).or_insert(0) += 1;
+    }
+    entropy_of_counts(counts.into_values())
+}
+
+/// Delta-encode the column indices of one row: `delta_0 = col_0`,
+/// `delta_i = col_i - col_{i-1}` (strictly positive for i > 0 since columns
+/// ascend strictly). Matches the paper's tridiagonal example: a row
+/// `[k-1, k, k+1]` yields `[k-1, 1, 1]`.
+pub fn delta_encode_row(cols: &[u32], out: &mut Vec<u32>) {
+    let mut prev = 0u32;
+    for (i, &c) in cols.iter().enumerate() {
+        if i == 0 {
+            out.push(c);
+        } else {
+            out.push(c - prev);
+        }
+        prev = c;
+    }
+}
+
+/// Inverse of [`delta_encode_row`].
+pub fn delta_decode_row(deltas: &[u32], out: &mut Vec<u32>) {
+    let mut acc = 0u32;
+    for (i, &d) in deltas.iter().enumerate() {
+        acc = if i == 0 { d } else { acc + d };
+        out.push(acc);
+    }
+}
+
+/// All per-row deltas of a CSR matrix, concatenated.
+pub fn all_deltas(m: &Csr) -> Vec<u32> {
+    let mut out = Vec::with_capacity(m.nnz());
+    for r in 0..m.nrows {
+        delta_encode_row(m.row_cols(r), &mut out);
+    }
+    out
+}
+
+/// Summary statistics of a matrix used for bucketing and reports.
+#[derive(Debug, Clone)]
+pub struct MatrixStats {
+    /// Rows.
+    pub nrows: usize,
+    /// Columns.
+    pub ncols: usize,
+    /// Nonzeros.
+    pub nnz: usize,
+    /// Average nonzeros per row.
+    pub annzpr: f64,
+    /// Maximum row length.
+    pub max_row_len: usize,
+    /// Entropy of raw column indices (bits/symbol).
+    pub h_indices: f64,
+    /// Entropy of delta-encoded column indices (bits/symbol).
+    pub h_deltas: f64,
+    /// Entropy of value bit patterns (bits/symbol, f64 patterns).
+    pub h_values: f64,
+    /// Number of distinct values.
+    pub distinct_values: usize,
+}
+
+impl MatrixStats {
+    /// Compute all statistics for a matrix.
+    pub fn compute(m: &Csr) -> MatrixStats {
+        let h_indices = entropy_u32(m.cols.iter().copied());
+        let h_deltas = entropy_u32(all_deltas(m));
+        let mut vcounts: HashMap<u64, u64> = HashMap::new();
+        for &v in &m.vals {
+            *vcounts.entry(v.to_bits()).or_insert(0) += 1;
+        }
+        let distinct_values = vcounts.len();
+        let h_values = entropy_of_counts(vcounts.into_values());
+        MatrixStats {
+            nrows: m.nrows,
+            ncols: m.ncols,
+            nnz: m.nnz(),
+            annzpr: m.annzpr(),
+            max_row_len: m.max_row_len(),
+            h_indices,
+            h_deltas,
+            h_values,
+            distinct_values,
+        }
+    }
+
+    /// The Fig. 4 y-axis: relative entropy H(deltas)/H(indices) (1.0 when
+    /// index entropy is zero).
+    pub fn relative_delta_entropy(&self) -> f64 {
+        if self.h_indices <= 0.0 {
+            1.0
+        } else {
+            self.h_deltas / self.h_indices
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::coo::Coo;
+
+    #[test]
+    fn entropy_uniform_and_point() {
+        assert!((entropy_of_counts(vec![1, 1, 1, 1]) - 2.0).abs() < 1e-12);
+        assert_eq!(entropy_of_counts(vec![5]), 0.0);
+        assert_eq!(entropy_of_counts(vec![]), 0.0);
+    }
+
+    #[test]
+    fn entropy_paper_example() {
+        // P: (a,0.1),(b,0.5),(c,0.4) -> H ~ 1.361
+        let h = entropy_of_counts(vec![1, 5, 4]);
+        assert!((h - 1.3609640474436812).abs() < 1e-9, "{h}");
+    }
+
+    #[test]
+    fn cross_entropy_paper_example() {
+        // P' (a,1/8),(b,4/8),(c,3/8) -> H(P,P') ~ 1.366
+        let p = [0.1, 0.5, 0.4];
+        let q = [0.125, 0.5, 0.375];
+        let h = cross_entropy(&p, &q);
+        assert!((h - 1.3660149997115376).abs() < 1e-9, "{h}");
+        // suboptimal P'' gives 1.5 exactly
+        let q2 = [0.25, 0.5, 0.25];
+        assert!((cross_entropy(&p, &q2) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delta_roundtrip() {
+        let cols = vec![3, 5, 6, 100, 101];
+        let mut d = Vec::new();
+        delta_encode_row(&cols, &mut d);
+        assert_eq!(d, vec![3, 2, 1, 94, 1]);
+        let mut back = Vec::new();
+        delta_decode_row(&d, &mut back);
+        assert_eq!(back, cols);
+    }
+
+    #[test]
+    fn tridiagonal_deltas_match_paper() {
+        // Row [k-1, k, k+1] -> deltas [k-1, 1, 1]
+        let mut d = Vec::new();
+        delta_encode_row(&[41, 42, 43], &mut d);
+        assert_eq!(d, vec![41, 1, 1]);
+    }
+
+    #[test]
+    fn tridiag_delta_entropy_much_lower() {
+        // Tridiagonal matrix: delta entropy should be far below raw index
+        // entropy (the motivating example of §IV-A).
+        let n = 256;
+        let mut coo = Coo::new(n, n);
+        for i in 0..n {
+            for j in i.saturating_sub(1)..(i + 2).min(n) {
+                coo.push(i as u32, j as u32, 1.0);
+            }
+        }
+        let m = Csr::from_coo(&coo);
+        let s = MatrixStats::compute(&m);
+        assert!(s.relative_delta_entropy() < 0.5, "rel={}", s.relative_delta_entropy());
+    }
+}

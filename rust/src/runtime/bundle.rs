@@ -1,0 +1,182 @@
+//! Conversion of an encoded [`CsrDtans`] matrix into the flat argument
+//! arrays the AOT-compiled Pallas kernel expects, padded to a bucket's
+//! static shapes (mirrors `python/compile/kernels/ref.py::KernelBundle`).
+
+use super::client::Arg;
+use super::manifest::Bucket;
+use crate::format::csr_dtans::{CsrDtans, WARP};
+use crate::matrix::Precision;
+use crate::util::error::{DtansError, Result};
+
+/// Requirements an encoded matrix must meet for the PJRT path.
+pub fn check_kernel_compatible(m: &CsrDtans) -> Result<()> {
+    if m.params != crate::ans::AnsParams::KERNEL {
+        return Err(DtansError::Runtime(
+            "PJRT path requires AnsParams::KERNEL encoding".into(),
+        ));
+    }
+    if m.precision != Precision::F32 {
+        return Err(DtansError::Runtime("PJRT path requires F32 precision".into()));
+    }
+    if !m.delta_encode {
+        return Err(DtansError::Runtime(
+            "artifacts are compiled with delta_encode=true".into(),
+        ));
+    }
+    Ok(())
+}
+
+/// Maximum segments of any row (the kernel's loop bound requirement).
+pub fn max_segments(m: &CsrDtans) -> usize {
+    (0..m.nrows).map(|r| m.row_segments(r)).max().unwrap_or(0)
+}
+
+fn pad_i32(src: impl Iterator<Item = i32>, n: usize, fill: i32) -> Vec<i32> {
+    let mut v: Vec<i32> = src.collect();
+    assert!(v.len() <= n, "bucket too small: {} > {n}", v.len());
+    v.resize(n, fill);
+    v
+}
+
+fn pad_f32(src: impl Iterator<Item = f32>, n: usize) -> Vec<f32> {
+    let mut v: Vec<f32> = src.collect();
+    assert!(v.len() <= n, "bucket too small: {} > {n}", v.len());
+    v.resize(n, 0.0);
+    v
+}
+
+/// Build the 15 kernel arguments (bundle fields, then x, then y_in) padded
+/// to `bucket`.
+pub fn build_args(m: &CsrDtans, bucket: &Bucket, x: &[f64], y_in: &[f64]) -> Result<Vec<Arg>> {
+    check_kernel_compatible(m)?;
+    if x.len() != m.ncols || y_in.len() != m.nrows {
+        return Err(DtansError::Dimension(format!(
+            "x[{}]/y[{}] vs matrix {}x{}",
+            x.len(),
+            y_in.len(),
+            m.nrows,
+            m.ncols
+        )));
+    }
+    let k = m.params.k() as usize;
+    let nslices_b = bucket.nrows / WARP;
+
+    let per_sym_i32 = |domain: &crate::format::symbolize::Domain| -> (Vec<i32>, Vec<i32>) {
+        let mut pay = vec![0i32; k];
+        let mut esc = vec![0i32; k];
+        for (i, (&p, &e)) in domain.payload.iter().zip(&domain.is_escape).enumerate() {
+            pay[i] = if e { 0 } else { p as i32 };
+            esc[i] = e as i32;
+        }
+        (pay, esc)
+    };
+    let (d_payload, d_isesc) = per_sym_i32(&m.delta_domain);
+    let mut v_value = vec![0.0f32; k];
+    let mut v_isesc = vec![0i32; k];
+    for (i, (&p, &e)) in m
+        .value_domain
+        .payload
+        .iter()
+        .zip(&m.value_domain.is_escape)
+        .enumerate()
+    {
+        v_value[i] = if e { 0.0 } else { f32::from_bits(p as u32) };
+        v_isesc[i] = e as i32;
+    }
+
+    let last_off = *m.slice_offsets.last().unwrap_or(&0) as i32;
+    let mut slice_offsets: Vec<i32> = m.slice_offsets.iter().map(|&v| v as i32).collect();
+    assert!(slice_offsets.len() <= nslices_b + 1);
+    slice_offsets.resize(nslices_b + 1, last_off);
+
+    Ok(vec![
+        Arg::I32(m.delta_tables.packed.iter().map(|&v| v as i32).collect()),
+        Arg::I32(m.value_tables.packed.iter().map(|&v| v as i32).collect()),
+        Arg::I32(d_payload),
+        Arg::I32(d_isesc),
+        Arg::F32(v_value),
+        Arg::I32(v_isesc),
+        Arg::I32(pad_i32(m.stream.iter().map(|&v| v as i32), bucket.nw, 0)),
+        Arg::I32(slice_offsets),
+        Arg::I32(pad_i32(m.row_nnz.iter().map(|&v| v as i32), bucket.nrows, 0)),
+        Arg::I32(pad_i32(
+            m.delta_esc_offsets[..m.nrows].iter().map(|&v| v as i32),
+            bucket.nrows,
+            0,
+        )),
+        Arg::I32(pad_i32(
+            m.value_esc_offsets[..m.nrows].iter().map(|&v| v as i32),
+            bucket.nrows,
+            0,
+        )),
+        Arg::I32(pad_i32(
+            m.delta_escapes.iter().map(|&v| v as i32),
+            bucket.ne,
+            0,
+        )),
+        Arg::F32(pad_f32(
+            m.value_escapes.iter().map(|&p| f32::from_bits(p as u32)),
+            bucket.ne,
+        )),
+        Arg::F32(pad_f32(x.iter().map(|&v| v as f32), bucket.ncols)),
+        Arg::F32(pad_f32(y_in.iter().map(|&v| v as f32), bucket.nrows)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ans::AnsParams;
+    use crate::format::csr_dtans::EncodeOptions;
+    use crate::matrix::gen::structured::banded;
+
+    fn kernel_encode(n: usize) -> CsrDtans {
+        CsrDtans::encode(
+            &banded(n, 2),
+            &EncodeOptions {
+                params: AnsParams::KERNEL,
+                precision: Precision::F32,
+                delta_encode: true,
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn rejects_paper_params() {
+        let m = CsrDtans::encode(&banded(40, 2), &EncodeOptions::default()).unwrap();
+        assert!(check_kernel_compatible(&m).is_err());
+    }
+
+    #[test]
+    fn builds_padded_args() {
+        let m = kernel_encode(50);
+        let bucket = Bucket {
+            nrows: 64,
+            ncols: 64,
+            nw: 4096,
+            ne: 512,
+            nnz: 1024,
+            max_seg: 32,
+        };
+        let x = vec![1.0; 50];
+        let y = vec![0.0; 50];
+        let args = build_args(&m, &bucket, &x, &y).unwrap();
+        assert_eq!(args.len(), 15);
+        match &args[6] {
+            Arg::I32(v) => assert_eq!(v.len(), 4096),
+            _ => panic!("stream must be i32"),
+        }
+        match &args[13] {
+            Arg::F32(v) => assert_eq!(v.len(), 64),
+            _ => panic!("x must be f32"),
+        }
+    }
+
+    #[test]
+    fn max_segments_counts() {
+        let m = kernel_encode(10);
+        // banded(10,2): max row len 5, 2 nnz/segment -> 3 segments.
+        assert_eq!(max_segments(&m), 3);
+    }
+}

@@ -1,0 +1,115 @@
+//! PJRT client wrapper: load HLO-text artifacts, compile them once, execute
+//! with typed argument vectors. Adapted from /opt/xla-example/load_hlo.rs.
+
+use crate::util::error::{DtansError, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A typed argument for artifact execution.
+#[derive(Debug, Clone)]
+pub enum Arg {
+    /// i32 tensor (row-major; dims given separately for >1-D).
+    I32(Vec<i32>),
+    /// f32 tensor.
+    F32(Vec<f32>),
+    /// f32 matrix (row-major).
+    F32Mat(Vec<f32>, usize, usize),
+}
+
+/// PJRT CPU client + compiled-executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl std::fmt::Debug for PjrtRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtRuntime").field("dir", &self.dir).finish()
+    }
+}
+
+fn xerr(e: xla::Error) -> DtansError {
+    DtansError::Runtime(e.to_string())
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client rooted at an artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        Ok(PjrtRuntime {
+            client,
+            dir: artifact_dir.to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the artifact `<name>.hlo.txt`.
+    fn executable(&self, name: &str) -> Result<()> {
+        let mut cache = self.cache.lock().unwrap();
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            return Err(DtansError::Runtime(format!(
+                "artifact {} not found (run `make artifacts`)",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("utf-8 path"),
+        )
+        .map_err(xerr)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(xerr)?;
+        cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with the given arguments; returns the flattened
+    /// f32 result (entries are lowered with `return_tuple=True`, so the
+    /// output is a 1-tuple of one f32 tensor).
+    pub fn execute_f32(&self, name: &str, args: &[Arg]) -> Result<Vec<f32>> {
+        self.executable(name)?;
+        let cache = self.cache.lock().unwrap();
+        let exe = cache.get(name).expect("just compiled");
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|a| -> Result<xla::Literal> {
+                Ok(match a {
+                    Arg::I32(v) => xla::Literal::vec1(v),
+                    Arg::F32(v) => xla::Literal::vec1(v),
+                    Arg::F32Mat(v, r, c) => xla::Literal::vec1(v)
+                        .reshape(&[*r as i64, *c as i64])
+                        .map_err(xerr)?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals).map_err(xerr)?;
+        let lit = result[0][0].to_literal_sync().map_err(xerr)?;
+        let out = lit.to_tuple1().map_err(xerr)?;
+        out.to_vec::<f32>().map_err(xerr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-dependent tests live in rust/tests/runtime_artifacts.rs (they
+    // need `make artifacts` to have run); here we only check error paths
+    // that do not require artifacts.
+    use super::*;
+
+    #[test]
+    fn missing_artifact_is_clean_error() {
+        let rt = PjrtRuntime::new(Path::new("/nonexistent-dir")).unwrap();
+        let err = rt.execute_f32("nope", &[]).unwrap_err();
+        assert!(err.to_string().contains("not found"), "{err}");
+    }
+}

@@ -1,0 +1,249 @@
+//! Parsing of `artifacts/manifest.txt` produced by `python/compile/aot.py`:
+//! one line per compiled entry (`name|in=dtype:shape;...|out`) plus
+//! `#bucket` metadata lines describing the static padding shapes.
+
+use crate::util::error::{DtansError, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Element type of an artifact parameter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElemType {
+    /// 32-bit int.
+    I32,
+    /// 64-bit int.
+    I64,
+    /// 32-bit float.
+    F32,
+    /// 64-bit float.
+    F64,
+}
+
+/// One parameter (or result) spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArgSpec {
+    /// Element type.
+    pub dtype: ElemType,
+    /// Dimensions.
+    pub dims: Vec<usize>,
+}
+
+impl ArgSpec {
+    fn parse(s: &str) -> Result<ArgSpec> {
+        let (dt, dims) = s
+            .split_once(':')
+            .ok_or_else(|| DtansError::Runtime(format!("bad arg spec {s:?}")))?;
+        let dtype = match dt {
+            "i32" => ElemType::I32,
+            "i64" => ElemType::I64,
+            "f32" => ElemType::F32,
+            "f64" => ElemType::F64,
+            _ => return Err(DtansError::Runtime(format!("bad dtype {dt:?}"))),
+        };
+        let dims = dims
+            .split('x')
+            .map(|d| {
+                d.parse::<usize>()
+                    .map_err(|_| DtansError::Runtime(format!("bad dim {d:?}")))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArgSpec { dtype, dims })
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// True when zero-dimensional.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A compiled artifact entry.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    /// Entry name (`<entry>_<bucket>` — also the file stem).
+    pub name: String,
+    /// Input parameter specs, in call order.
+    pub inputs: Vec<ArgSpec>,
+    /// Output spec (flattened single result).
+    pub output: ArgSpec,
+}
+
+/// Static bucket shapes the Rust side pads matrices into.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Bucket {
+    /// Rows (multiple of 32).
+    pub nrows: usize,
+    /// Columns.
+    pub ncols: usize,
+    /// Stream capacity in words.
+    pub nw: usize,
+    /// Escape side-stream capacity.
+    pub ne: usize,
+    /// CSR-entry nnz capacity.
+    pub nnz: usize,
+    /// Segment loop bound.
+    pub max_seg: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    /// Entries by name.
+    pub entries: BTreeMap<String, Entry>,
+    /// Buckets by name.
+    pub buckets: BTreeMap<String, Bucket>,
+}
+
+impl Manifest {
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("#bucket ") {
+                let mut name = String::new();
+                let mut vals: BTreeMap<&str, usize> = BTreeMap::new();
+                for (i, tok) in rest.split_whitespace().enumerate() {
+                    if i == 0 {
+                        name = tok.to_string();
+                    } else if let Some((k, v)) = tok.split_once('=') {
+                        vals.insert(
+                            k,
+                            v.parse().map_err(|_| {
+                                DtansError::Runtime(format!("bad bucket value {tok:?}"))
+                            })?,
+                        );
+                    }
+                }
+                let get = |k: &str| -> Result<usize> {
+                    vals.get(k)
+                        .copied()
+                        .ok_or_else(|| DtansError::Runtime(format!("bucket {name} missing {k}")))
+                };
+                m.buckets.insert(
+                    name.clone(),
+                    Bucket {
+                        nrows: get("nrows")?,
+                        ncols: get("ncols")?,
+                        nw: get("nw")?,
+                        ne: get("ne")?,
+                        nnz: get("nnz")?,
+                        max_seg: get("max_seg")?,
+                    },
+                );
+                continue;
+            }
+            if line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('|').collect();
+            if parts.len() != 3 {
+                return Err(DtansError::Runtime(format!("bad manifest line {line:?}")));
+            }
+            let inputs = parts[1]
+                .split(';')
+                .filter(|s| !s.is_empty())
+                .map(ArgSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let output = ArgSpec::parse(parts[2])?;
+            m.entries.insert(
+                parts[0].to_string(),
+                Entry {
+                    name: parts[0].to_string(),
+                    inputs,
+                    output,
+                },
+            );
+        }
+        Ok(m)
+    }
+
+    /// Load `manifest.txt` from an artifact directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))?;
+        Manifest::parse(&text)
+    }
+
+    /// Bucket name for an entry name (`<entry>_<bucket>`).
+    pub fn bucket_of(&self, entry: &str) -> Option<(&str, &Bucket)> {
+        self.buckets
+            .iter()
+            .find(|(b, _)| entry.ends_with(b.as_str()))
+            .map(|(b, v)| (b.as_str(), v))
+    }
+
+    /// Smallest bucket (by nrows) satisfying the given requirements.
+    pub fn pick_bucket(
+        &self,
+        nrows: usize,
+        ncols: usize,
+        nw: usize,
+        ne: usize,
+        max_seg: usize,
+    ) -> Option<(&str, &Bucket)> {
+        self.buckets
+            .iter()
+            .filter(|(_, b)| {
+                b.nrows >= nrows
+                    && b.ncols >= ncols
+                    && b.nw >= nw
+                    && b.ne >= ne
+                    && b.max_seg >= max_seg
+            })
+            .min_by_key(|(_, b)| b.nrows)
+            .map(|(n, b)| (n.as_str(), b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+dense_matvec_r64c64|f32:64x64;f32:64;f32:64|f32:64
+spmv_dtans_r64c64|i32:4096;i32:4096;f32:64|f32:64
+#bucket r64c64 nrows=64 ncols=64 nw=4096 ne=512 nnz=1024 max_seg=32
+#bucket r256c256 nrows=256 ncols=256 nw=32768 ne=4096 nnz=8192 max_seg=64
+";
+
+    #[test]
+    fn parses_entries_and_buckets() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert_eq!(m.buckets.len(), 2);
+        let e = &m.entries["dense_matvec_r64c64"];
+        assert_eq!(e.inputs[0].dims, vec![64, 64]);
+        assert_eq!(e.inputs[0].dtype, ElemType::F32);
+        assert_eq!(m.buckets["r64c64"].nw, 4096);
+    }
+
+    #[test]
+    fn bucket_of_matches_suffix() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let (b, _) = m.bucket_of("spmv_dtans_r64c64").unwrap();
+        assert_eq!(b, "r64c64");
+    }
+
+    #[test]
+    fn pick_bucket_smallest_fit() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let (name, _) = m.pick_bucket(50, 64, 1000, 100, 10).unwrap();
+        assert_eq!(name, "r64c64");
+        let (name, _) = m.pick_bucket(65, 64, 1000, 100, 10).unwrap();
+        assert_eq!(name, "r256c256");
+        assert!(m.pick_bucket(10_000, 64, 1000, 100, 10).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("just|two").is_err());
+        assert!(Manifest::parse("a|q32:3|f32:3").is_err());
+    }
+}

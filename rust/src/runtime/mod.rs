@@ -1,0 +1,148 @@
+//! Runtime layer: load the AOT-compiled JAX/Pallas artifacts (HLO text)
+//! via PJRT and execute them from Rust — python never runs on this path.
+
+pub mod bundle;
+pub mod client;
+pub mod manifest;
+
+pub use client::{Arg, PjrtRuntime};
+pub use manifest::{Bucket, Manifest};
+
+use crate::format::csr_dtans::CsrDtans;
+use crate::util::error::{DtansError, Result};
+use std::path::Path;
+
+/// High-level artifact runtime: manifest + PJRT client + bucket selection.
+#[derive(Debug)]
+pub struct Runtime {
+    /// Parsed manifest.
+    pub manifest: Manifest,
+    client: PjrtRuntime,
+}
+
+impl Runtime {
+    /// Open an artifact directory (expects `manifest.txt` + `*.hlo.txt`).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        Ok(Runtime {
+            manifest: Manifest::load(dir)?,
+            client: PjrtRuntime::new(dir)?,
+        })
+    }
+
+    /// PJRT platform name.
+    pub fn platform(&self) -> String {
+        self.client.platform()
+    }
+
+    /// `y = A·x + y_in` through the AOT-compiled fused decode+SpMVM kernel.
+    /// The matrix must be KERNEL/F32-encoded; the smallest fitting bucket
+    /// is selected automatically.
+    pub fn spmv_dtans(&self, m: &CsrDtans, x: &[f64], y_in: &[f64]) -> Result<Vec<f32>> {
+        bundle::check_kernel_compatible(m)?;
+        let max_seg = bundle::max_segments(m);
+        let (bname, bucket) = self
+            .manifest
+            .pick_bucket(
+                m.nrows,
+                m.ncols,
+                m.stream.len(),
+                m.delta_escapes.len().max(m.value_escapes.len()),
+                max_seg,
+            )
+            .ok_or_else(|| {
+                DtansError::Runtime(format!(
+                    "no bucket fits matrix {}x{} ({} words, {} segs)",
+                    m.nrows,
+                    m.ncols,
+                    m.stream.len(),
+                    max_seg
+                ))
+            })?;
+        let args = bundle::build_args(m, bucket, x, y_in)?;
+        let name = format!("spmv_dtans_{bname}");
+        let y = self.client.execute_f32(&name, &args)?;
+        Ok(y[..m.nrows].to_vec())
+    }
+
+    /// `y = A·x + y_in` through the jnp scatter-add CSR artifact (baseline
+    /// on the PJRT path).
+    pub fn spmv_csr_jnp(
+        &self,
+        m: &crate::matrix::Csr,
+        x: &[f64],
+        y_in: &[f64],
+    ) -> Result<Vec<f32>> {
+        let (bname, bucket) = self
+            .manifest
+            .pick_bucket(m.nrows, m.ncols, 0, 0, 0)
+            .filter(|(_, b)| b.nnz >= m.nnz())
+            .ok_or_else(|| DtansError::Runtime("no bucket fits CSR matrix".into()))?;
+        let mut row_ids = vec![bucket.nrows as i32; bucket.nnz]; // dead target
+        let mut cols = vec![0i32; bucket.nnz];
+        let mut vals = vec![0.0f32; bucket.nnz];
+        let mut k = 0;
+        for r in 0..m.nrows {
+            for i in m.row_ptr[r]..m.row_ptr[r + 1] {
+                row_ids[k] = r as i32;
+                cols[k] = m.cols[i] as i32;
+                vals[k] = m.vals[i] as f32;
+                k += 1;
+            }
+        }
+        let mut xp: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        xp.resize(bucket.ncols, 0.0);
+        let mut yp: Vec<f32> = y_in.iter().map(|&v| v as f32).collect();
+        yp.resize(bucket.nrows, 0.0);
+        let y = self.client.execute_f32(
+            &format!("spmv_csr_jnp_{bname}"),
+            &[
+                Arg::I32(row_ids),
+                Arg::I32(cols),
+                Arg::F32(vals),
+                Arg::F32(xp),
+                Arg::F32(yp),
+            ],
+        )?;
+        Ok(y[..m.nrows].to_vec())
+    }
+
+    /// Dense `y = A·x + y_in` artifact (reference / sanity path).
+    pub fn dense_matvec(
+        &self,
+        a: &[f32],
+        nrows: usize,
+        ncols: usize,
+        x: &[f32],
+        y_in: &[f32],
+    ) -> Result<Vec<f32>> {
+        let (bname, bucket) = self
+            .manifest
+            .pick_bucket(nrows, ncols, 0, 0, 0)
+            .ok_or_else(|| DtansError::Runtime("no bucket fits dense matrix".into()))?;
+        let mut ap = vec![0.0f32; bucket.nrows * bucket.ncols];
+        for r in 0..nrows {
+            ap[r * bucket.ncols..r * bucket.ncols + ncols]
+                .copy_from_slice(&a[r * ncols..(r + 1) * ncols]);
+        }
+        let mut xp = x.to_vec();
+        xp.resize(bucket.ncols, 0.0);
+        let mut yp = y_in.to_vec();
+        yp.resize(bucket.nrows, 0.0);
+        let y = self.client.execute_f32(
+            &format!("dense_matvec_{bname}"),
+            &[
+                Arg::F32Mat(ap, bucket.nrows, bucket.ncols),
+                Arg::F32(xp),
+                Arg::F32(yp),
+            ],
+        )?;
+        Ok(y[..nrows].to_vec())
+    }
+
+    /// Default artifact directory (`$DTANS_ARTIFACTS` or `./artifacts`).
+    pub fn default_dir() -> std::path::PathBuf {
+        std::env::var("DTANS_ARTIFACTS")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+    }
+}

@@ -1,0 +1,61 @@
+//! GPU device models for the execution simulator.
+
+/// Parameters of the modeled GPU. Defaults mirror the paper's testbed, an
+/// RTX 5090: 170 SMs, 32 GB GDDR7 at ~1.79 TB/s, 96 MB L2.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuModel {
+    /// Marketing name (reports).
+    pub name: &'static str,
+    /// Streaming multiprocessors.
+    pub sms: u32,
+    /// Core clock, GHz.
+    pub clock_ghz: f64,
+    /// DRAM bandwidth, GB/s.
+    pub dram_bw_gbs: f64,
+    /// L2 capacity in bytes.
+    pub l2_bytes: usize,
+    /// L2 line size in bytes (CUDA sector-pair granularity).
+    pub l2_line: usize,
+    /// L2 associativity.
+    pub l2_ways: usize,
+    /// Aggregate L2 bandwidth, GB/s (roughly 4-5x DRAM on Ada/Blackwell).
+    pub l2_bw_gbs: f64,
+    /// Issued instructions per cycle per SM (warp-averaged integer/FMA mix).
+    pub ipc_per_sm: f64,
+    /// Fixed kernel launch overhead in microseconds.
+    pub launch_us: f64,
+}
+
+impl GpuModel {
+    /// The paper's RTX 5090 testbed.
+    pub const RTX5090: GpuModel = GpuModel {
+        name: "RTX 5090 (model)",
+        sms: 170,
+        clock_ghz: 2.4,
+        dram_bw_gbs: 1790.0,
+        l2_bytes: 96 * 1024 * 1024,
+        l2_line: 128,
+        l2_ways: 16,
+        l2_bw_gbs: 8000.0,
+        ipc_per_sm: 2.0,
+        launch_us: 3.0,
+    };
+
+    /// Peak instruction throughput, instructions/second.
+    pub fn instr_rate(&self) -> f64 {
+        self.sms as f64 * self.ipc_per_sm * self.clock_ghz * 1e9 * 32.0 // per-lane
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rtx5090_matches_paper_specs() {
+        let g = GpuModel::RTX5090;
+        assert_eq!(g.sms, 170);
+        assert_eq!(g.l2_bytes, 96 * 1024 * 1024);
+        assert!(g.instr_rate() > 1e13);
+    }
+}

@@ -1,0 +1,391 @@
+//! Per-kernel execution models: each SpMVM kernel is replayed as a stream
+//! of memory accesses (fed through the L2 model) plus an instruction count,
+//! then timed with a roofline `max(memory, compute) + launch` model.
+//!
+//! This is the stand-in for the paper's RTX 5090 measurements. It is not a
+//! cycle simulator; it reproduces the *first-order* effects the paper's
+//! evaluation turns on:
+//!
+//! * SpMVM is memory-bound → bytes moved dominate for large matrices,
+//!   so compressed formats win there (Fig. 7/8 bottom-right);
+//! * decode costs instructions → dtANS loses when compute-bound or when
+//!   the matrix is small (launch + table-load overheads, low occupancy);
+//! * warm vs cold cache → matrices fitting in 96 MB L2 stop paying DRAM
+//!   bandwidth on the second run (Table II vs Table III);
+//! * x-vector gathers hit or miss depending on column locality, so
+//!   structure matters, not just nnz;
+//! * warp-synchronous kernels pay the slice maximum, so irregular row
+//!   lengths hurt CSR-scalar and CSR-dtANS but not SELL/COO (upper-left
+//!   quadrant of Fig. 7).
+
+use super::cache::Cache;
+use super::device::GpuModel;
+use crate::format::csr_dtans::{CsrDtans, WARP};
+use crate::matrix::csr::Csr;
+use crate::matrix::sell::Sell;
+use crate::matrix::Precision;
+
+/// Kernels the simulator models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// One thread per row over CSR.
+    CsrScalar,
+    /// One warp per row over CSR.
+    CsrVector,
+    /// Atomic scatter over COO.
+    Coo,
+    /// Column-major slice kernel over SELL (slice height 32).
+    Sell,
+    /// Fused dtANS decode + SpMVM over CSR-dtANS.
+    CsrDtans,
+}
+
+impl KernelKind {
+    /// Report label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            KernelKind::CsrScalar => "CSR",
+            KernelKind::CsrVector => "CSR-vector",
+            KernelKind::Coo => "COO",
+            KernelKind::Sell => "SELL",
+            KernelKind::CsrDtans => "CSR-dtANS",
+        }
+    }
+}
+
+/// Simulation result for one kernel launch.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimResult {
+    /// Modeled execution time.
+    pub time_us: f64,
+    /// Bytes served by DRAM.
+    pub dram_bytes: u64,
+    /// Bytes served by L2.
+    pub l2_bytes: u64,
+    /// Lane-instructions executed.
+    pub instrs: u64,
+    /// Memory-model time component (µs).
+    pub mem_us: f64,
+    /// Compute-model time component (µs).
+    pub compute_us: f64,
+}
+
+// Disjoint synthetic base addresses per array.
+const A_ROWPTR: u64 = 0x01_0000_0000;
+const A_COLS: u64 = 0x02_0000_0000;
+const A_VALS: u64 = 0x04_0000_0000;
+const A_X: u64 = 0x06_0000_0000;
+const A_Y: u64 = 0x08_0000_0000;
+const A_ROWS: u64 = 0x0a_0000_0000;
+const A_STREAM: u64 = 0x0c_0000_0000;
+const A_TABLES: u64 = 0x0e_0000_0000;
+const A_ROWNNZ: u64 = 0x10_0000_0000;
+const A_ESC: u64 = 0x12_0000_0000;
+const A_SLICEOFF: u64 = 0x14_0000_0000;
+
+struct Tracer<'a> {
+    cache: &'a mut Cache,
+    instrs: u64,
+}
+
+impl<'a> Tracer<'a> {
+    /// Sequential (coalesced) read of `bytes` from `base`.
+    fn seq(&mut self, base: u64, bytes: usize) {
+        let line = 128;
+        let mut off = 0;
+        while off < bytes {
+            self.cache.access(base + off as u64, line.min(bytes - off));
+            off += line;
+        }
+    }
+
+    /// One gathered element access.
+    fn gather(&mut self, base: u64, index: u64, elem: usize) {
+        self.cache.access(base + index * elem as u64, elem);
+    }
+}
+
+/// Inputs to a simulation: the matrix in all relevant formats.
+pub struct SimInput<'a> {
+    /// CSR form (always required).
+    pub csr: &'a Csr,
+    /// SELL form (required for `KernelKind::Sell`).
+    pub sell: Option<&'a Sell>,
+    /// Encoded form (required for `KernelKind::CsrDtans`).
+    pub enc: Option<&'a CsrDtans>,
+    /// Value precision (element sizes).
+    pub precision: Precision,
+}
+
+fn trace_kernel(kind: KernelKind, inp: &SimInput, dev: &GpuModel, tr: &mut Tracer) -> u64 {
+    let m = inp.csr;
+    let vb = inp.precision.value_bytes();
+    match kind {
+        KernelKind::CsrScalar => {
+            tr.seq(A_ROWPTR, (m.nrows + 1) * 4);
+            tr.seq(A_COLS, m.nnz() * 4);
+            tr.seq(A_VALS, m.nnz() * vb);
+            for r in 0..m.nrows {
+                for &c in m.row_cols(r) {
+                    tr.gather(A_X, c as u64, vb);
+                }
+            }
+            tr.seq(A_Y, m.nrows * vb);
+            // Warp-synchronous: each warp pays its longest row.
+            let mut instr = 0u64;
+            for w0 in (0..m.nrows).step_by(32) {
+                let maxlen = (w0..(w0 + 32).min(m.nrows))
+                    .map(|r| m.row_len(r))
+                    .max()
+                    .unwrap_or(0);
+                instr += 32 * (8 * maxlen as u64 + 6);
+            }
+            instr
+        }
+        KernelKind::CsrVector => {
+            tr.seq(A_ROWPTR, (m.nrows + 1) * 4);
+            tr.seq(A_COLS, m.nnz() * 4);
+            tr.seq(A_VALS, m.nnz() * vb);
+            for r in 0..m.nrows {
+                for &c in m.row_cols(r) {
+                    tr.gather(A_X, c as u64, vb);
+                }
+            }
+            tr.seq(A_Y, m.nrows * vb);
+            // One warp per row: ceil(len/32) coalesced strides + reduction.
+            (0..m.nrows)
+                .map(|r| 32 * (8 * m.row_len(r).div_ceil(32) as u64 + 12))
+                .sum()
+        }
+        KernelKind::Coo => {
+            tr.seq(A_ROWS, m.nnz() * 4);
+            tr.seq(A_COLS, m.nnz() * 4);
+            tr.seq(A_VALS, m.nnz() * vb);
+            for r in 0..m.nrows {
+                for &c in m.row_cols(r) {
+                    tr.gather(A_X, c as u64, vb);
+                }
+                // Atomic y update per nonzero.
+                for _ in 0..m.row_len(r) {
+                    tr.gather(A_Y, r as u64, vb);
+                }
+            }
+            m.nnz() as u64 * 14
+        }
+        KernelKind::Sell => {
+            let sell = inp.sell.expect("SELL input required");
+            let padded = sell.padded_cells();
+            tr.seq(A_SLICEOFF, sell.nslices() * 4);
+            tr.seq(A_COLS, padded * 4);
+            tr.seq(A_VALS, padded * vb);
+            for s in 0..sell.nslices() {
+                let base = sell.slice_ptr[s];
+                for idx in base..sell.slice_ptr[s + 1] {
+                    tr.gather(A_X, sell.cols[idx] as u64, vb);
+                }
+            }
+            tr.seq(A_Y, m.nrows * vb);
+            padded as u64 * 7
+        }
+        KernelKind::CsrDtans => {
+            let enc = inp.enc.expect("CSR-dtANS input required");
+            // Coding tables + dictionaries: loaded into shared memory by
+            // every resident block; repeats hit L2.
+            let table_bytes = enc.delta_tables.table_bytes()
+                + enc.value_tables.table_bytes()
+                + enc.delta_domain.num_symbols() * 4
+                + enc.value_domain.num_symbols() * vb;
+            let resident = enc.nslices().min(dev.sms as usize * 2).max(1);
+            for _ in 0..resident {
+                tr.seq(A_TABLES, table_bytes);
+            }
+            tr.seq(A_ROWNNZ, enc.nrows * 4);
+            tr.seq(A_SLICEOFF, (enc.nslices() + 1) * 4);
+            tr.seq(A_STREAM, enc.stream.len() * 4);
+            if !enc.delta_escapes.is_empty() {
+                tr.seq(A_ESC, enc.delta_escapes.len() * 4 + (enc.nrows + 1) * 4);
+            }
+            if !enc.value_escapes.is_empty() {
+                tr.seq(A_ESC + 0x1_0000_0000, enc.value_escapes.len() * vb + (enc.nrows + 1) * 4);
+            }
+            for r in 0..m.nrows {
+                for &c in m.row_cols(r) {
+                    tr.gather(A_X, c as u64, vb);
+                }
+            }
+            tr.seq(A_Y, m.nrows * vb);
+            // Warp lockstep: a slice pays its maximum segment count.
+            let nps = enc.nnz_per_segment() as u64;
+            let mut instr = 0u64;
+            for s in 0..enc.nslices() {
+                let r0 = s * WARP;
+                let r1 = (r0 + WARP).min(enc.nrows);
+                let max_seg = (r0..r1).map(|r| enc.row_segments(r)).max().unwrap_or(0) as u64;
+                // Per segment per lane: unpack (6) + 2 table lookups, digit
+                // fold and FMA per nonzero (9 each) + 2 checks (6 each).
+                instr += 32 * max_seg * (6 + 9 * nps + 12);
+            }
+            // Escape handling costs a few extra ops per escaped payload.
+            instr += (enc.delta_escapes.len() + enc.value_escapes.len()) as u64 * 4;
+            instr
+        }
+    }
+}
+
+/// Occupancy: fraction of the device the kernel can keep busy.
+fn occupancy(kind: KernelKind, inp: &SimInput, dev: &GpuModel) -> f64 {
+    let warps_needed = match kind {
+        KernelKind::CsrScalar | KernelKind::Sell | KernelKind::CsrDtans => {
+            inp.csr.nrows.div_ceil(32)
+        }
+        KernelKind::CsrVector => inp.csr.nrows,
+        KernelKind::Coo => inp.csr.nnz().div_ceil(32 * 4),
+    } as f64;
+    // ~12 resident warps per SM keep bandwidth saturated.
+    (warps_needed / (dev.sms as f64 * 12.0)).min(1.0)
+}
+
+/// Simulate one kernel on one matrix. `warm`: the kernel ran once already
+/// (L2 primed); cold: L2 flushed.
+pub fn simulate(kind: KernelKind, inp: &SimInput, dev: &GpuModel, warm: bool) -> SimResult {
+    let mut cache = Cache::new(dev.l2_bytes, dev.l2_line, dev.l2_ways);
+    let instrs;
+    if warm {
+        let mut tr = Tracer { cache: &mut cache, instrs: 0 };
+        trace_kernel(kind, inp, dev, &mut tr);
+        cache.reset_stats();
+    } else {
+        cache.flush();
+    }
+    {
+        let mut tr = Tracer { cache: &mut cache, instrs: 0 };
+        instrs = trace_kernel(kind, inp, dev, &mut tr) + tr.instrs;
+    }
+    let dram_bytes = cache.miss_bytes;
+    let l2_bytes = cache.hit_bytes;
+    let occ = occupancy(kind, inp, dev).max(1e-3);
+    let mem_us = (dram_bytes as f64 / (dev.dram_bw_gbs * occ * 1e3))
+        + (l2_bytes as f64 / (dev.l2_bw_gbs * occ * 1e3));
+    let compute_us = instrs as f64 / (dev.instr_rate() * occ) * 1e6;
+    SimResult {
+        time_us: mem_us.max(compute_us) + dev.launch_us,
+        dram_bytes,
+        l2_bytes,
+        instrs,
+        mem_us,
+        compute_us,
+    }
+}
+
+/// Convenience: simulate the best (minimum-time) cuSPARSE-style baseline
+/// (CSR scalar/vector, COO, SELL) and return (kind, result).
+pub fn best_baseline(inp: &SimInput, dev: &GpuModel, warm: bool) -> (KernelKind, SimResult) {
+    [
+        KernelKind::CsrScalar,
+        KernelKind::CsrVector,
+        KernelKind::Coo,
+        KernelKind::Sell,
+    ]
+    .into_iter()
+    .map(|k| (k, simulate(k, inp, dev, warm)))
+    .min_by(|a, b| a.1.time_us.partial_cmp(&b.1.time_us).unwrap())
+    .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::csr_dtans::EncodeOptions;
+    use crate::matrix::gen::structured::banded;
+    use crate::matrix::gen::{assign_values, ValueDist};
+    use crate::util::rng::Xoshiro256;
+
+    fn setup(n: usize, bw: usize, vals: ValueDist) -> (Csr, Sell, CsrDtans) {
+        let mut m = banded(n, bw);
+        assign_values(&mut m, vals, &mut Xoshiro256::seeded(1));
+        let sell = Sell::from_csr(&m, 32);
+        let enc = CsrDtans::encode(&m, &EncodeOptions::default()).unwrap();
+        (m, sell, enc)
+    }
+
+    fn input<'a>(m: &'a Csr, sell: &'a Sell, enc: &'a CsrDtans) -> SimInput<'a> {
+        SimInput {
+            csr: m,
+            sell: Some(sell),
+            enc: Some(enc),
+            precision: Precision::F64,
+        }
+    }
+
+    #[test]
+    fn warm_is_not_slower_than_cold() {
+        let (m, sell, enc) = setup(20_000, 4, ValueDist::Ones);
+        let inp = input(&m, &sell, &enc);
+        for k in [
+            KernelKind::CsrScalar,
+            KernelKind::CsrVector,
+            KernelKind::Coo,
+            KernelKind::Sell,
+            KernelKind::CsrDtans,
+        ] {
+            let cold = simulate(k, &inp, &GpuModel::RTX5090, false);
+            let warm = simulate(k, &inp, &GpuModel::RTX5090, true);
+            assert!(warm.time_us <= cold.time_us + 1e-9, "{k:?}");
+        }
+    }
+
+    #[test]
+    fn warm_fitting_matrix_has_no_dram_traffic() {
+        let (m, sell, enc) = setup(5_000, 2, ValueDist::Ones);
+        let inp = input(&m, &sell, &enc);
+        let warm = simulate(KernelKind::CsrScalar, &inp, &GpuModel::RTX5090, true);
+        assert_eq!(warm.dram_bytes, 0, "fits in 96 MB L2");
+    }
+
+    #[test]
+    fn dtans_moves_fewer_bytes_on_compressible_matrix() {
+        // Highly structured banded matrix with constant values: dtANS
+        // traffic must be far below CSR's (the paper's core premise).
+        let (m, sell, enc) = setup(200_000, 4, ValueDist::Ones);
+        let inp = input(&m, &sell, &enc);
+        let base = simulate(KernelKind::CsrScalar, &inp, &GpuModel::RTX5090, false);
+        let dt = simulate(KernelKind::CsrDtans, &inp, &GpuModel::RTX5090, false);
+        assert!(
+            dt.dram_bytes * 2 < base.dram_bytes,
+            "dtans {} vs csr {}",
+            dt.dram_bytes,
+            base.dram_bytes
+        );
+    }
+
+    #[test]
+    fn dtans_costs_more_instructions() {
+        let (m, sell, enc) = setup(50_000, 4, ValueDist::Ones);
+        let inp = input(&m, &sell, &enc);
+        let base = simulate(KernelKind::CsrScalar, &inp, &GpuModel::RTX5090, false);
+        let dt = simulate(KernelKind::CsrDtans, &inp, &GpuModel::RTX5090, false);
+        assert!(dt.instrs > base.instrs);
+    }
+
+    #[test]
+    fn small_matrix_dtans_loses_large_compressible_wins() {
+        let dev = GpuModel::RTX5090;
+        // Small: launch + tables dominate -> dtANS slower.
+        let (m, sell, enc) = setup(500, 2, ValueDist::Ones);
+        let inp = input(&m, &sell, &enc);
+        let (_, base) = best_baseline(&inp, &dev, false);
+        let dt = simulate(KernelKind::CsrDtans, &inp, &dev, false);
+        assert!(dt.time_us >= base.time_us, "small should not win");
+        // Large + compressible: dtANS faster (cold cache).
+        let (m2, sell2, enc2) = setup(300_000, 5, ValueDist::Ones);
+        let inp2 = input(&m2, &sell2, &enc2);
+        let (_, base2) = best_baseline(&inp2, &dev, false);
+        let dt2 = simulate(KernelKind::CsrDtans, &inp2, &dev, false);
+        assert!(
+            dt2.time_us < base2.time_us,
+            "dtans {} vs base {}",
+            dt2.time_us,
+            base2.time_us
+        );
+    }
+}

@@ -1,0 +1,13 @@
+//! GPU execution-model simulator: the stand-in for the paper's RTX 5090
+//! testbed. Models coalesced transactions, a 96 MB set-associative L2,
+//! DRAM/L2 bandwidth roofline, occupancy, and per-kernel instruction
+//! costs — enough to reproduce the *shape* of the paper's runtime results
+//! (who wins, where the crossover falls, warm vs cold behavior).
+
+pub mod cache;
+pub mod device;
+pub mod exec;
+
+pub use cache::Cache;
+pub use device::GpuModel;
+pub use exec::{best_baseline, simulate, KernelKind, SimInput, SimResult};

@@ -1,0 +1,46 @@
+//! COO SpMVM kernel (atomic-scatter style on the GPU; sequential scatter
+//! here — the simulator charges the atomic traffic).
+
+use crate::matrix::coo::Coo;
+use crate::util::error::Result;
+
+/// `y += A·x` over COO triplets.
+pub fn spmv_coo(m: &Coo, x: &[f64], y: &mut [f64]) -> Result<()> {
+    super::check_dims(m.nrows, m.ncols, x, y)?;
+    for i in 0..m.nnz() {
+        y[m.rows[i] as usize] += m.vals[i] * x[m.cols[i] as usize];
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    
+    use crate::spmv::csr::spmv_csr;
+    use crate::util::propcheck::assert_close;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn matches_csr_on_random() {
+        let mut rng = Xoshiro256::seeded(9);
+        let m = crate::matrix::gen::structured::random_uniform(80, 60, 400, &mut rng);
+        let coo = m.to_coo();
+        let x: Vec<f64> = (0..60).map(|_| rng.next_f64() - 0.5).collect();
+        let mut y1 = vec![0.0; 80];
+        let mut y2 = vec![0.0; 80];
+        spmv_csr(&m, &x, &mut y1).unwrap();
+        spmv_coo(&coo, &x, &mut y2).unwrap();
+        assert_close(&y1, &y2, 1e-12, 1e-15).unwrap();
+    }
+
+    #[test]
+    fn duplicates_accumulate() {
+        let mut m = Coo::new(1, 1);
+        m.push(0, 0, 1.5);
+        m.push(0, 0, 2.5);
+        let mut y = vec![0.0];
+        spmv_coo(&m, &[2.0], &mut y).unwrap();
+        assert_eq!(y[0], 8.0);
+    }
+}

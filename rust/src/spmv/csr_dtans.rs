@@ -1,0 +1,702 @@
+//! The paper's kernel: SpMVM fused with on-the-fly dtANS decoding
+//! (Fig. 1 right, §II-B). This is the warp-synchronous CUDA control flow
+//! executed in lockstep on the CPU: 32 lanes per slice, one shared stream
+//! cursor, load events resolved by lane rank (the `__ballot_sync`/`popc`
+//! prefix sum becomes an explicit scan).
+//!
+//! The hot path avoids the generic [`crate::ans::dtans::RowDecoder`] in
+//! favor of flat per-lane state arrays and precomputed symbol lookup
+//! tables (`sym -> f64 value`, `sym -> delta`, `sym -> escape?`), so the
+//! inner loop is: unpack, table gather, FMA, group push, check.
+
+use crate::format::csr_dtans::{CsrDtans, WARP};
+use crate::util::error::{DtansError, Result};
+use crate::util::threadpool::ThreadPool;
+
+/// Precomputed per-symbol lookup tables for one encoded matrix; build once,
+/// reuse across SpMVM calls (the coordinator caches this).
+#[derive(Debug, Clone)]
+pub struct DecodePlan {
+    /// Value-domain symbol -> f64 value (0.0 for escapes).
+    value_of_sym: Vec<f64>,
+    /// Delta-domain symbol -> delta (0 for escapes).
+    delta_of_sym: Vec<u32>,
+    /// Value-domain symbol -> escape?
+    value_escape: Vec<bool>,
+    /// Delta-domain symbol -> escape?
+    delta_escape: Vec<bool>,
+    /// Escaped value payloads pre-decoded to f64.
+    value_escapes_f64: Vec<f64>,
+}
+
+impl DecodePlan {
+    /// Build the plan for an encoded matrix.
+    pub fn new(m: &CsrDtans) -> DecodePlan {
+        let prec = m.precision;
+        let to_f64 = |p: u64| match prec {
+            crate::matrix::Precision::F64 => f64::from_bits(p),
+            crate::matrix::Precision::F32 => f32::from_bits(p as u32) as f64,
+        };
+        DecodePlan {
+            value_of_sym: m
+                .value_domain
+                .payload
+                .iter()
+                .zip(&m.value_domain.is_escape)
+                .map(|(&p, &e)| if e { 0.0 } else { to_f64(p) })
+                .collect(),
+            delta_of_sym: m
+                .delta_domain
+                .payload
+                .iter()
+                .zip(&m.delta_domain.is_escape)
+                .map(|(&p, &e)| if e { 0 } else { p as u32 })
+                .collect(),
+            value_escape: m.value_domain.is_escape.clone(),
+            delta_escape: m.delta_domain.is_escape.clone(),
+            value_escapes_f64: m.value_escapes.iter().map(|&p| to_f64(p)).collect(),
+        }
+    }
+}
+
+/// `y += A·x` over a CSR-dtANS matrix (single-threaded).
+pub fn spmv_csr_dtans(m: &CsrDtans, x: &[f64], y: &mut [f64]) -> Result<()> {
+    let plan = DecodePlan::new(m);
+    spmv_with_plan(m, &plan, x, y)
+}
+
+/// `y += A·x` with a prebuilt [`DecodePlan`].
+pub fn spmv_with_plan(m: &CsrDtans, plan: &DecodePlan, x: &[f64], y: &mut [f64]) -> Result<()> {
+    super::check_dims(m.nrows, m.ncols, x, y)?;
+    for s in 0..m.nslices() {
+        spmv_slice(m, plan, s, x, &mut y[s * WARP..((s + 1) * WARP).min(m.nrows)])?;
+    }
+    Ok(())
+}
+
+/// Parallel variant: slices are independent, so they fan out over a pool.
+pub fn spmv_csr_dtans_parallel(
+    m: &CsrDtans,
+    x: &[f64],
+    y: &mut [f64],
+    pool: &ThreadPool,
+) -> Result<()> {
+    super::check_dims(m.nrows, m.ncols, x, y)?;
+    let plan = DecodePlan::new(m);
+    let nsl = m.nslices();
+    // Each slice writes a disjoint y range; collect per-slice results.
+    let results: Vec<Result<Vec<f64>>> = {
+        // SAFETY-free approach: copy per-slice y segments in, return them.
+        let m_ref = &m;
+        let plan_ref = &plan;
+        let x_ref = &x;
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(nsl);
+            let chunk = nsl.div_ceil(ThreadPool::default_parallelism().max(1)).max(1);
+            for c0 in (0..nsl).step_by(chunk) {
+                let c1 = (c0 + chunk).min(nsl);
+                handles.push(scope.spawn(move || {
+                    let mut out = Vec::with_capacity(c1 - c0);
+                    for s in c0..c1 {
+                        let r1 = ((s + 1) * WARP).min(m_ref.nrows);
+                        let mut seg = vec![0.0; r1 - s * WARP];
+                        match spmv_slice(m_ref, plan_ref, s, x_ref, &mut seg) {
+                            Ok(()) => out.push(Ok(seg)),
+                            Err(e) => out.push(Err(e)),
+                        }
+                    }
+                    out
+                }));
+            }
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("spmv worker panicked"))
+                .collect()
+        })
+    };
+    let _ = pool; // pool reserved for future work stealing; scoped threads used here
+    for (s, res) in results.into_iter().enumerate() {
+        let seg = res?;
+        let r0 = s * WARP;
+        for (i, v) in seg.into_iter().enumerate() {
+            y[r0 + i] += v;
+        }
+    }
+    Ok(())
+}
+
+/// Decode + multiply one slice; `y_slice` covers the slice's rows.
+/// Dispatches to a monomorphized kernel for the two presets (perf pass:
+/// constant loop bounds let the compiler fully unroll the per-segment
+/// inner loops — ~25% over the dynamic version).
+fn spmv_slice(
+    m: &CsrDtans,
+    plan: &DecodePlan,
+    slice: usize,
+    x: &[f64],
+    y_slice: &mut [f64],
+) -> Result<()> {
+    use crate::ans::AnsParams;
+    if m.params == AnsParams::PAPER {
+        spmv_slice_impl::<8, 3, 2, 32, 12>(m, plan, slice, x, y_slice)
+    } else if m.params == AnsParams::KERNEL {
+        spmv_slice_impl::<4, 3, 2, 16, 12>(m, plan, slice, x, y_slice)
+    } else {
+        spmv_slice_dyn(m, plan, slice, x, y_slice)
+    }
+}
+
+/// Monomorphized slice kernel: `L` symbols/segment, `O` words, `F` checks,
+/// `WB`/`KB` word/table bits.
+#[inline(always)]
+fn spmv_slice_impl<const L: usize, const O: usize, const F: usize, const WB: usize, const KB: usize>(
+    m: &CsrDtans,
+    plan: &DecodePlan,
+    slice: usize,
+    x: &[f64],
+    y_slice: &mut [f64],
+) -> Result<()> {
+    let (l, o, f) = (L, O, F);
+    let gsz = L / F;
+    let nps = L / 2;
+    let (w_bits, k_bits) = (WB, KB);
+    let w_radix: u64 = 1 << w_bits;
+    let k_mask: u64 = (1u64 << k_bits) - 1;
+
+    let r0 = slice * WARP;
+    let lanes = y_slice.len();
+    let stream =
+        &m.stream[m.slice_offsets[slice] as usize..m.slice_offsets[slice + 1] as usize];
+    let dtab = &m.delta_tables.packed[..];
+    let vtab = &m.value_tables.packed[..];
+    // Invariants for the unchecked gathers below: slots are masked to
+    // [0, K), both tables have exactly K entries, and symbol ids inside
+    // packed entries are < num_symbols == plan array lengths by table
+    // construction (they do not depend on stream contents).
+    assert_eq!(dtab.len(), k_mask as usize + 1);
+    assert_eq!(vtab.len(), k_mask as usize + 1);
+    assert_eq!(plan.delta_of_sym.len(), m.delta_domain.num_symbols());
+    assert_eq!(plan.value_of_sym.len(), m.value_domain.num_symbols());
+
+    let mut pos = 0usize;
+
+    // Flat per-lane state. `ent` caches the packed table entries of the
+    // current segment's slots so the digit-fold phase does not re-gather
+    // them (perf pass: -1 table load per symbol).
+    let mut d = [0u64; WARP];
+    let mut r = [1u64; WARP];
+    let mut w = [[0u32; 8]; WARP]; // o <= 8
+    let mut nseg = [0usize; WARP];
+    let mut emitted = [0usize; WARP];
+    let mut nnz_lane = [0usize; WARP];
+    let mut col_acc = [0u32; WARP];
+    let mut acc = [0.0f64; WARP];
+    let mut esc_d = [0usize; WARP];
+    let mut esc_v = [0usize; WARP];
+    let mut ent = [[0u32; 16]; WARP]; // l <= 16
+    debug_assert!(o <= 8 && l <= 16 && nps <= 8);
+
+    let mut max_seg = 0usize;
+    for lane in 0..lanes {
+        let row = r0 + lane;
+        nnz_lane[lane] = m.row_nnz[row] as usize;
+        nseg[lane] = nnz_lane[lane].div_ceil(nps);
+        max_seg = max_seg.max(nseg[lane]);
+        esc_d[lane] = m.delta_esc_offsets[row] as usize;
+        esc_v[lane] = m.value_esc_offsets[row] as usize;
+    }
+
+    // Initial o words (one event per word index — coalesced on the GPU).
+    for k in 0..o {
+        for lane in 0..lanes {
+            if nseg[lane] > 0 {
+                let word = *stream
+                    .get(pos)
+                    .ok_or_else(|| DtansError::CorruptStream("stream exhausted".into()))?;
+                pos += 1;
+                w[lane][k] = word;
+            }
+        }
+    }
+
+    // Perf notes (EXPERIMENTS.md §Perf): the unpack works on two u64
+    // halves instead of a u128 (the 96-bit PAPER case), the packed table
+    // entries are gathered once per symbol and cached in `ent` for the
+    // digit-fold phase, and the per-position span split (low half / both /
+    // high half) branches only on the loop counter, so it predicts
+    // perfectly.
+    for t in 0..max_seg {
+        // --- Decode segment t of each active lane and accumulate. ---
+        for lane in 0..lanes {
+            if t >= nseg[lane] {
+                continue;
+            }
+            // unpack: o words form a (w_bits*o <= 96)-bit number held as
+            // (hi, lo) u64 halves; slots are its base-K digits.
+            let (mut hi, mut lo) = (0u64, 0u64);
+            for k in 0..o {
+                hi = (hi << w_bits) | (lo >> (64 - w_bits));
+                lo = (lo << w_bits) | w[lane][k] as u64;
+            }
+            for pos_s in 0..l {
+                let b = k_bits * pos_s;
+                let raw = if b + k_bits <= 64 {
+                    lo >> b
+                } else if b >= 64 {
+                    hi >> (b - 64)
+                } else {
+                    (lo >> b) | (hi << (64 - b))
+                };
+                let slot = (raw & k_mask) as usize;
+                // SAFETY: slot < K == table length (asserted above).
+                ent[lane][pos_s] = unsafe {
+                    if pos_s % 2 == 0 {
+                        *dtab.get_unchecked(slot)
+                    } else {
+                        *vtab.get_unchecked(slot)
+                    }
+                };
+            }
+            // Resolve up to nps (column, value) pairs; the x-gathers and
+            // FMAs run in a separate batched pass below so the loads of
+            // all lanes are independent in the out-of-order window (perf
+            // pass: the fused per-lane loop serialized on the x gather).
+            let mut em = emitted[lane];
+            let nnz_r = nnz_lane[lane];
+            let mut col = col_acc[lane];
+            let mut cnt = 0usize;
+            let (mut a0, mut a1) = (0.0f64, 0.0f64);
+            for i in 0..nps {
+                if em >= nnz_r {
+                    break;
+                }
+                let ds = (ent[lane][2 * i] >> 16) as usize;
+                let vs = (ent[lane][2 * i + 1] >> 16) as usize;
+                // SAFETY: symbol ids in packed entries are < num_symbols
+                // by table construction (asserted above), independent of
+                // stream contents.
+                let delta = if unsafe { *plan.delta_escape.get_unchecked(ds) } {
+                    let v = *m
+                        .delta_escapes
+                        .get(esc_d[lane])
+                        .ok_or_else(|| DtansError::CorruptStream("delta escapes exhausted".into()))?;
+                    esc_d[lane] += 1;
+                    v
+                } else {
+                    unsafe { *plan.delta_of_sym.get_unchecked(ds) }
+                };
+                let val = if unsafe { *plan.value_escape.get_unchecked(vs) } {
+                    let v = *plan
+                        .value_escapes_f64
+                        .get(esc_v[lane])
+                        .ok_or_else(|| DtansError::CorruptStream("value escapes exhausted".into()))?;
+                    esc_v[lane] += 1;
+                    v
+                } else {
+                    unsafe { *plan.value_of_sym.get_unchecked(vs) }
+                };
+                col = if em == 0 || !m.delta_encode { delta } else { col + delta };
+                // Checked x access: corrupt streams yield errors, not
+                // panics (see proptests::prop_corrupted_streams_never_panic).
+                let xv = *x
+                    .get(col as usize)
+                    .ok_or_else(|| DtansError::CorruptStream("column out of range".into()))?;
+                cnt += 1;
+                // Alternating accumulators break the addsd dependency
+                // chain within a segment.
+                if cnt % 2 == 0 {
+                    a0 += val * xv;
+                } else {
+                    a1 += val * xv;
+                }
+                em += 1;
+            }
+            emitted[lane] = em;
+            col_acc[lane] = col;
+            acc[lane] += a0 + a1;
+        }
+        // --- Produce next-segment words (skipped by final segments). ---
+        for g in 0..f {
+            for lane in 0..lanes {
+                if t + 1 >= nseg[lane] {
+                    continue;
+                }
+                // Group push: fold gsz digit/base pairs into (d, r), using
+                // the cached entries (no table re-gather).
+                let (mut gd, mut gr) = (0u64, 1u64);
+                for ps in g * gsz..(g + 1) * gsz {
+                    let e = ent[lane][ps];
+                    let base = (e & 0xff) as u64 + 1;
+                    let digit = ((e >> 8) & 0xff) as u64;
+                    gd = gd * base + digit;
+                    gr *= base;
+                }
+                d[lane] = d[lane] * gr + gd;
+                r[lane] *= gr;
+                // (Perf pass note: a branchless cmov variant of this check
+                // measured *slower* — the branch predicts well on real
+                // symbol streams because hot rows extract consistently.)
+                if r[lane] >= w_radix {
+                    w[lane][g] = (d[lane] & (w_radix - 1)) as u32;
+                    d[lane] >>= w_bits;
+                    r[lane] >>= w_bits;
+                } else {
+                    let word = *stream
+                        .get(pos)
+                        .ok_or_else(|| DtansError::CorruptStream("stream exhausted".into()))?;
+                    pos += 1;
+                    w[lane][g] = word;
+                }
+            }
+        }
+        for k in f..o {
+            for lane in 0..lanes {
+                if t + 1 >= nseg[lane] {
+                    continue;
+                }
+                let word = *stream
+                    .get(pos)
+                    .ok_or_else(|| DtansError::CorruptStream("stream exhausted".into()))?;
+                pos += 1;
+                w[lane][k] = word;
+            }
+        }
+    }
+    if pos != stream.len() {
+        return Err(DtansError::CorruptStream(format!(
+            "slice {slice}: consumed {pos}/{} words",
+            stream.len()
+        )));
+    }
+    for lane in 0..lanes {
+        y_slice[lane] += acc[lane];
+    }
+    Ok(())
+}
+
+/// Fallback for non-preset parameter sets (identical logic, dynamic bounds).
+fn spmv_slice_dyn(
+    m: &CsrDtans,
+    plan: &DecodePlan,
+    slice: usize,
+    x: &[f64],
+    y_slice: &mut [f64],
+) -> Result<()> {
+    let p = &m.params;
+    let (l, o, f) = (p.l as usize, p.o as usize, p.f as usize);
+    let gsz = p.group_size() as usize;
+    let nps = l / 2;
+    let (w_bits, k_bits) = (p.w_bits as usize, p.k_bits as usize);
+    let w_radix: u64 = 1 << w_bits;
+    let k_mask: u64 = (p.k() - 1) as u64;
+
+    let r0 = slice * WARP;
+    let lanes = y_slice.len();
+    let stream =
+        &m.stream[m.slice_offsets[slice] as usize..m.slice_offsets[slice + 1] as usize];
+    let dtab = &m.delta_tables.packed[..];
+    let vtab = &m.value_tables.packed[..];
+    // Invariants for the unchecked gathers below: slots are masked to
+    // [0, K), both tables have exactly K entries, and symbol ids inside
+    // packed entries are < num_symbols == plan array lengths by table
+    // construction (they do not depend on stream contents).
+    assert_eq!(dtab.len(), k_mask as usize + 1);
+    assert_eq!(vtab.len(), k_mask as usize + 1);
+    assert_eq!(plan.delta_of_sym.len(), m.delta_domain.num_symbols());
+    assert_eq!(plan.value_of_sym.len(), m.value_domain.num_symbols());
+
+    let mut pos = 0usize;
+
+    // Flat per-lane state. `ent` caches the packed table entries of the
+    // current segment's slots so the digit-fold phase does not re-gather
+    // them (perf pass: -1 table load per symbol).
+    let mut d = [0u64; WARP];
+    let mut r = [1u64; WARP];
+    let mut w = [[0u32; 8]; WARP]; // o <= 8
+    let mut nseg = [0usize; WARP];
+    let mut emitted = [0usize; WARP];
+    let mut nnz_lane = [0usize; WARP];
+    let mut col_acc = [0u32; WARP];
+    let mut acc = [0.0f64; WARP];
+    let mut esc_d = [0usize; WARP];
+    let mut esc_v = [0usize; WARP];
+    let mut ent = [[0u32; 16]; WARP]; // l <= 16
+    debug_assert!(o <= 8 && l <= 16 && nps <= 8);
+
+    let mut max_seg = 0usize;
+    for lane in 0..lanes {
+        let row = r0 + lane;
+        nnz_lane[lane] = m.row_nnz[row] as usize;
+        nseg[lane] = nnz_lane[lane].div_ceil(nps);
+        max_seg = max_seg.max(nseg[lane]);
+        esc_d[lane] = m.delta_esc_offsets[row] as usize;
+        esc_v[lane] = m.value_esc_offsets[row] as usize;
+    }
+
+    // Initial o words (one event per word index — coalesced on the GPU).
+    for k in 0..o {
+        for lane in 0..lanes {
+            if nseg[lane] > 0 {
+                let word = *stream
+                    .get(pos)
+                    .ok_or_else(|| DtansError::CorruptStream("stream exhausted".into()))?;
+                pos += 1;
+                w[lane][k] = word;
+            }
+        }
+    }
+
+    // Perf notes (EXPERIMENTS.md §Perf): the unpack works on two u64
+    // halves instead of a u128 (the 96-bit PAPER case), the packed table
+    // entries are gathered once per symbol and cached in `ent` for the
+    // digit-fold phase, and the per-position span split (low half / both /
+    // high half) branches only on the loop counter, so it predicts
+    // perfectly.
+    for t in 0..max_seg {
+        // --- Decode segment t of each active lane and accumulate. ---
+        for lane in 0..lanes {
+            if t >= nseg[lane] {
+                continue;
+            }
+            // unpack: o words form a (w_bits*o <= 96)-bit number held as
+            // (hi, lo) u64 halves; slots are its base-K digits.
+            let (mut hi, mut lo) = (0u64, 0u64);
+            for k in 0..o {
+                hi = (hi << w_bits) | (lo >> (64 - w_bits));
+                lo = (lo << w_bits) | w[lane][k] as u64;
+            }
+            for pos_s in 0..l {
+                let b = k_bits * pos_s;
+                let raw = if b + k_bits <= 64 {
+                    lo >> b
+                } else if b >= 64 {
+                    hi >> (b - 64)
+                } else {
+                    (lo >> b) | (hi << (64 - b))
+                };
+                let slot = (raw & k_mask) as usize;
+                // SAFETY: slot < K == table length (asserted above).
+                ent[lane][pos_s] = unsafe {
+                    if pos_s % 2 == 0 {
+                        *dtab.get_unchecked(slot)
+                    } else {
+                        *vtab.get_unchecked(slot)
+                    }
+                };
+            }
+            // Resolve up to nps (column, value) pairs; the x-gathers and
+            // FMAs run in a separate batched pass below so the loads of
+            // all lanes are independent in the out-of-order window (perf
+            // pass: the fused per-lane loop serialized on the x gather).
+            let mut em = emitted[lane];
+            let nnz_r = nnz_lane[lane];
+            let mut col = col_acc[lane];
+            let mut cnt = 0usize;
+            let (mut a0, mut a1) = (0.0f64, 0.0f64);
+            for i in 0..nps {
+                if em >= nnz_r {
+                    break;
+                }
+                let ds = (ent[lane][2 * i] >> 16) as usize;
+                let vs = (ent[lane][2 * i + 1] >> 16) as usize;
+                // SAFETY: symbol ids in packed entries are < num_symbols
+                // by table construction (asserted above), independent of
+                // stream contents.
+                let delta = if unsafe { *plan.delta_escape.get_unchecked(ds) } {
+                    let v = *m
+                        .delta_escapes
+                        .get(esc_d[lane])
+                        .ok_or_else(|| DtansError::CorruptStream("delta escapes exhausted".into()))?;
+                    esc_d[lane] += 1;
+                    v
+                } else {
+                    unsafe { *plan.delta_of_sym.get_unchecked(ds) }
+                };
+                let val = if unsafe { *plan.value_escape.get_unchecked(vs) } {
+                    let v = *plan
+                        .value_escapes_f64
+                        .get(esc_v[lane])
+                        .ok_or_else(|| DtansError::CorruptStream("value escapes exhausted".into()))?;
+                    esc_v[lane] += 1;
+                    v
+                } else {
+                    unsafe { *plan.value_of_sym.get_unchecked(vs) }
+                };
+                col = if em == 0 || !m.delta_encode { delta } else { col + delta };
+                // Checked x access: corrupt streams yield errors, not
+                // panics (see proptests::prop_corrupted_streams_never_panic).
+                let xv = *x
+                    .get(col as usize)
+                    .ok_or_else(|| DtansError::CorruptStream("column out of range".into()))?;
+                cnt += 1;
+                // Alternating accumulators break the addsd dependency
+                // chain within a segment.
+                if cnt % 2 == 0 {
+                    a0 += val * xv;
+                } else {
+                    a1 += val * xv;
+                }
+                em += 1;
+            }
+            emitted[lane] = em;
+            col_acc[lane] = col;
+            acc[lane] += a0 + a1;
+        }
+        // --- Produce next-segment words (skipped by final segments). ---
+        for g in 0..f {
+            for lane in 0..lanes {
+                if t + 1 >= nseg[lane] {
+                    continue;
+                }
+                // Group push: fold gsz digit/base pairs into (d, r), using
+                // the cached entries (no table re-gather).
+                let (mut gd, mut gr) = (0u64, 1u64);
+                for ps in g * gsz..(g + 1) * gsz {
+                    let e = ent[lane][ps];
+                    let base = (e & 0xff) as u64 + 1;
+                    let digit = ((e >> 8) & 0xff) as u64;
+                    gd = gd * base + digit;
+                    gr *= base;
+                }
+                d[lane] = d[lane] * gr + gd;
+                r[lane] *= gr;
+                // (Perf pass note: a branchless cmov variant of this check
+                // measured *slower* — the branch predicts well on real
+                // symbol streams because hot rows extract consistently.)
+                if r[lane] >= w_radix {
+                    w[lane][g] = (d[lane] & (w_radix - 1)) as u32;
+                    d[lane] >>= w_bits;
+                    r[lane] >>= w_bits;
+                } else {
+                    let word = *stream
+                        .get(pos)
+                        .ok_or_else(|| DtansError::CorruptStream("stream exhausted".into()))?;
+                    pos += 1;
+                    w[lane][g] = word;
+                }
+            }
+        }
+        for k in f..o {
+            for lane in 0..lanes {
+                if t + 1 >= nseg[lane] {
+                    continue;
+                }
+                let word = *stream
+                    .get(pos)
+                    .ok_or_else(|| DtansError::CorruptStream("stream exhausted".into()))?;
+                pos += 1;
+                w[lane][k] = word;
+            }
+        }
+    }
+    if pos != stream.len() {
+        return Err(DtansError::CorruptStream(format!(
+            "slice {slice}: consumed {pos}/{} words",
+            stream.len()
+        )));
+    }
+    for lane in 0..lanes {
+        y_slice[lane] += acc[lane];
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ans::AnsParams;
+    use crate::format::csr_dtans::EncodeOptions;
+    use crate::matrix::gen::structured::{banded, powerlaw_rows, random_uniform, stencil2d5};
+    use crate::matrix::gen::{assign_values, gen_graph_csr, GraphModel, ValueDist};
+    use crate::matrix::{Csr, Precision};
+    use crate::spmv::csr::spmv_csr;
+    use crate::util::propcheck::assert_close;
+    use crate::util::rng::Xoshiro256;
+
+    fn check_matches_csr(m: &Csr, opts: &EncodeOptions, seed: u64) {
+        let enc = CsrDtans::encode(m, opts).unwrap();
+        let mut rng = Xoshiro256::seeded(seed);
+        let x: Vec<f64> = (0..m.ncols).map(|_| rng.next_f64() - 0.5).collect();
+        let mut want = vec![0.25; m.nrows];
+        let reference = match opts.precision {
+            Precision::F64 => m.clone(),
+            Precision::F32 => m.round_to_f32(),
+        };
+        spmv_csr(&reference, &x, &mut want).unwrap();
+        let mut got = vec![0.25; m.nrows];
+        spmv_csr_dtans(&enc, &x, &mut got).unwrap();
+        assert_close(&got, &want, 1e-12, 1e-12).unwrap();
+        // Parallel variant agrees too.
+        let pool = ThreadPool::new(4);
+        let mut gp = vec![0.25; m.nrows];
+        spmv_csr_dtans_parallel(&enc, &x, &mut gp, &pool).unwrap();
+        assert_close(&gp, &want, 1e-12, 1e-12).unwrap();
+    }
+
+    #[test]
+    fn banded_matches() {
+        let mut m = banded(700, 5);
+        assign_values(&mut m, ValueDist::FewDistinct(9), &mut Xoshiro256::seeded(1));
+        check_matches_csr(&m, &EncodeOptions::default(), 11);
+    }
+
+    #[test]
+    fn stencil_matches_kernel_params() {
+        let m = stencil2d5(25, 25);
+        check_matches_csr(
+            &m,
+            &EncodeOptions {
+                params: AnsParams::KERNEL,
+                ..Default::default()
+            },
+            12,
+        );
+    }
+
+    #[test]
+    fn graph_with_random_values_escapes() {
+        let mut rng = Xoshiro256::seeded(2);
+        let mut m = gen_graph_csr(GraphModel::ErdosRenyi, 500, 7.0, &mut rng);
+        assign_values(&mut m, ValueDist::Gaussian, &mut rng);
+        check_matches_csr(&m, &EncodeOptions::default(), 13);
+    }
+
+    #[test]
+    fn f32_precision_matches_rounded_reference() {
+        let mut rng = Xoshiro256::seeded(3);
+        let mut m = random_uniform(300, 200, 2500, &mut rng);
+        assign_values(&mut m, ValueDist::Quantized(128), &mut rng);
+        check_matches_csr(
+            &m,
+            &EncodeOptions {
+                precision: Precision::F32,
+                ..Default::default()
+            },
+            14,
+        );
+    }
+
+    #[test]
+    fn irregular_power_law_matches() {
+        let mut rng = Xoshiro256::seeded(4);
+        let mut m = powerlaw_rows(400, 7.0, 1.1, &mut rng);
+        assign_values(&mut m, ValueDist::SmallInts(3), &mut rng);
+        check_matches_csr(&m, &EncodeOptions::default(), 15);
+        check_matches_csr(
+            &m,
+            &EncodeOptions {
+                params: AnsParams::KERNEL,
+                ..Default::default()
+            },
+            16,
+        );
+    }
+
+    #[test]
+    fn empty_rows_and_empty_matrix() {
+        check_matches_csr(&Csr::new(40, 40), &EncodeOptions::default(), 17);
+        let mut coo = crate::matrix::coo::Coo::new(65, 65);
+        coo.push(64, 64, 2.0); // single nonzero in last slice
+        check_matches_csr(&Csr::from_coo(&coo), &EncodeOptions::default(), 18);
+    }
+}

@@ -1,0 +1,41 @@
+//! Dense row-major matrix-vector product — the ground-truth oracle for all
+//! sparse kernels (tests only; never used on large matrices).
+
+use crate::util::error::Result;
+
+/// `y += A·x` for dense row-major `a` of shape `nrows × ncols`.
+pub fn spmv_dense(a: &[f64], nrows: usize, ncols: usize, x: &[f64], y: &mut [f64]) -> Result<()> {
+    super::check_dims(nrows, ncols, x, y)?;
+    assert_eq!(a.len(), nrows * ncols);
+    for r in 0..nrows {
+        let row = &a[r * ncols..(r + 1) * ncols];
+        let mut acc = 0.0;
+        for (av, xv) in row.iter().zip(x) {
+            acc += av * xv;
+        }
+        y[r] += acc;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_product() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let x = vec![1.0, -1.0];
+        let mut y = vec![10.0, 0.0];
+        spmv_dense(&a, 2, 2, &x, &mut y).unwrap();
+        assert_eq!(y, vec![10.0 - 1.0, -1.0]);
+    }
+
+    #[test]
+    fn dim_mismatch() {
+        let a = vec![0.0; 4];
+        let x = vec![0.0; 3];
+        let mut y = vec![0.0; 2];
+        assert!(spmv_dense(&a, 2, 2, &x, &mut y).is_err());
+    }
+}

@@ -1,0 +1,34 @@
+//! SpMVM kernels (`y = A·x + y`, the paper's §III-A semantics) for every
+//! format: dense reference, CSR (scalar and vector variants), COO, SELL,
+//! and the fused decode+multiply kernel over CSR-dtANS.
+//!
+//! The classic-format kernels stand in for cuSPARSE's and feed the GPU
+//! simulator's cost models; the CSR-dtANS kernel is the paper's
+//! contribution — SpMVM interleaved with on-the-fly entropy decoding.
+
+pub mod coo;
+pub mod csr;
+pub mod csr_dtans;
+pub mod dense;
+pub mod sell;
+pub mod verify;
+
+pub use coo::spmv_coo;
+pub use csr::{spmv_csr, spmv_csr_vector};
+pub use csr_dtans::spmv_csr_dtans;
+pub use dense::spmv_dense;
+pub use sell::spmv_sell;
+
+use crate::util::error::{DtansError, Result};
+
+/// Check `x`/`y` lengths against a matrix shape.
+pub(crate) fn check_dims(nrows: usize, ncols: usize, x: &[f64], y: &[f64]) -> Result<()> {
+    if x.len() != ncols || y.len() != nrows {
+        return Err(DtansError::Dimension(format!(
+            "matrix {nrows}x{ncols} with x[{}], y[{}]",
+            x.len(),
+            y.len()
+        )));
+    }
+    Ok(())
+}

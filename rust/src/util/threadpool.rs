@@ -1,0 +1,133 @@
+//! A small fixed-size thread pool with a shared work queue.
+//!
+//! Used by the coordinator's worker pool and by the evaluation harness to
+//! parallelize over corpus matrices (tokio/rayon are not available offline).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool; jobs are `FnOnce()` closures.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    pending: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` worker threads (at least 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let pending = Arc::clone(&pending);
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(job) => {
+                            job();
+                            pending.fetch_sub(1, Ordering::SeqCst);
+                        }
+                        Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        ThreadPool {
+            tx: Some(tx),
+            workers,
+            pending,
+        }
+    }
+
+    /// Number of logical CPUs (fallback 4).
+    pub fn default_parallelism() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    }
+
+    /// Submit a job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.pending.fetch_add(1, Ordering::SeqCst);
+        self.tx.as_ref().unwrap().send(Box::new(job)).unwrap();
+    }
+
+    /// Busy-wait (with yields) until all submitted jobs completed.
+    pub fn wait_idle(&self) {
+        while self.pending.load(Ordering::SeqCst) != 0 {
+            std::thread::yield_now();
+        }
+    }
+
+    /// Parallel map over an indexed range, preserving order.
+    pub fn par_map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let results: Arc<Mutex<Vec<Option<T>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        for i in 0..n {
+            let f = Arc::clone(&f);
+            let results = Arc::clone(&results);
+            self.execute(move || {
+                let v = f(i);
+                results.lock().unwrap()[i] = Some(v);
+            });
+        }
+        self.wait_idle();
+        Arc::try_unwrap(results)
+            .ok()
+            .expect("results still shared")
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|x| x.expect("job did not run"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_order_preserved() {
+        let pool = ThreadPool::new(4);
+        let out = pool.par_map(100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn wait_idle_completes() {
+        let pool = ThreadPool::new(2);
+        let ctr = Arc::new(AtomicUsize::new(0));
+        for _ in 0..50 {
+            let c = Arc::clone(&ctr);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(ctr.load(Ordering::SeqCst), 50);
+    }
+}

@@ -1,0 +1,117 @@
+//! Timing + micro-benchmark statistics (criterion is not available offline).
+
+use std::time::Instant;
+
+/// Run `f` once and return (result, seconds).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Summary statistics of repeated timed runs (seconds).
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    /// Median runtime in seconds.
+    pub median: f64,
+    /// Minimum runtime.
+    pub min: f64,
+    /// Maximum runtime.
+    pub max: f64,
+    /// Median absolute deviation.
+    pub mad: f64,
+    /// Number of measured iterations.
+    pub iters: usize,
+}
+
+impl BenchStats {
+    /// Format as `median ± mad` with human units.
+    pub fn display(&self) -> String {
+        format!(
+            "{} ± {} (n={})",
+            humanize_secs(self.median),
+            humanize_secs(self.mad),
+            self.iters
+        )
+    }
+}
+
+/// Human-readable seconds.
+pub fn humanize_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark `f`: `warmup` unmeasured runs, then measured runs until both
+/// `min_iters` iterations and `min_secs` total measured seconds are reached
+/// (mirrors criterion's warmup/measure split, medians for robustness).
+pub fn bench<T>(warmup: usize, min_iters: usize, min_secs: f64, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::new();
+    let mut total = 0.0;
+    while samples.len() < min_iters || total < min_secs {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let dt = t0.elapsed().as_secs_f64();
+        samples.push(dt);
+        total += dt;
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    stats_from(&mut samples)
+}
+
+/// Compute [`BenchStats`] from raw samples (sorts in place).
+pub fn stats_from(samples: &mut [f64]) -> BenchStats {
+    assert!(!samples.is_empty());
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mut devs: Vec<f64> = samples.iter().map(|x| (x - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchStats {
+        median,
+        min: samples[0],
+        max: samples[samples.len() - 1],
+        mad: devs[devs.len() / 2],
+        iters: samples.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_median() {
+        let mut s = vec![3.0, 1.0, 2.0];
+        let st = stats_from(&mut s);
+        assert_eq!(st.median, 2.0);
+        assert_eq!(st.min, 1.0);
+        assert_eq!(st.max, 3.0);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let st = bench(1, 3, 0.0, || 1 + 1);
+        assert!(st.iters >= 3);
+        assert!(st.median >= 0.0);
+    }
+
+    #[test]
+    fn humanize() {
+        assert!(humanize_secs(2.0).contains("s"));
+        assert!(humanize_secs(2e-3).contains("ms"));
+        assert!(humanize_secs(2e-6).contains("µs"));
+        assert!(humanize_secs(2e-9).contains("ns"));
+    }
+}

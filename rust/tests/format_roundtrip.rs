@@ -1,0 +1,99 @@
+//! Integration: CSR-dtANS encode → serialize → load → decode roundtrips
+//! across the corpus, both parameter presets and precisions.
+
+use dtans::ans::AnsParams;
+use dtans::eval::{build_corpus, CorpusScale};
+use dtans::format::csr_dtans::{CsrDtans, EncodeOptions};
+use dtans::format::serialize;
+use dtans::matrix::Precision;
+
+fn opts_matrix() -> Vec<EncodeOptions> {
+    vec![
+        EncodeOptions::default(),
+        EncodeOptions {
+            params: AnsParams::KERNEL,
+            ..Default::default()
+        },
+        EncodeOptions {
+            precision: Precision::F32,
+            ..Default::default()
+        },
+        EncodeOptions {
+            delta_encode: false,
+            ..Default::default()
+        },
+    ]
+}
+
+#[test]
+fn corpus_roundtrips_all_option_combinations() {
+    let corpus = build_corpus(&CorpusScale { max_nnz: 6000, steps: 3 }, 99);
+    assert!(corpus.len() >= 15);
+    for (i, e) in corpus.iter().enumerate() {
+        // Rotate option combos across corpus entries (full cross product
+        // would be slow; every combo still sees many matrices).
+        let opts = &opts_matrix()[i % 4];
+        let enc = CsrDtans::encode(&e.csr, opts)
+            .unwrap_or_else(|err| panic!("{}: encode failed: {err}", e.name));
+        let back = enc
+            .decode_to_csr()
+            .unwrap_or_else(|err| panic!("{}: decode failed: {err}", e.name));
+        let want = match opts.precision {
+            Precision::F64 => e.csr.clone(),
+            Precision::F32 => e.csr.round_to_f32(),
+        };
+        assert_eq!(back, want, "{} with {opts:?}", e.name);
+    }
+}
+
+#[test]
+fn corpus_serialization_roundtrips() {
+    let corpus = build_corpus(&CorpusScale { max_nnz: 3000, steps: 2 }, 7);
+    for e in corpus.iter().take(10) {
+        let enc = CsrDtans::encode(&e.csr, &EncodeOptions::default()).unwrap();
+        let mut buf = Vec::new();
+        serialize::write_to(&enc, &mut buf).unwrap();
+        let back = serialize::read_from(std::io::Cursor::new(&buf)).unwrap();
+        assert_eq!(back.decode_to_csr().unwrap(), enc.decode_to_csr().unwrap(), "{}", e.name);
+        // Serialized size tracks the size report's stream component.
+        assert!(buf.len() >= enc.size_report().stream);
+    }
+}
+
+#[test]
+fn size_report_components_are_consistent() {
+    let corpus = build_corpus(&CorpusScale { max_nnz: 20_000, steps: 3 }, 3);
+    for e in &corpus {
+        let enc = CsrDtans::encode(&e.csr, &EncodeOptions::default()).unwrap();
+        let r = enc.size_report();
+        assert_eq!(
+            r.total,
+            r.header + r.tables + r.dicts + r.stream + r.row_lens + r.slice_offsets
+                + r.escapes + r.escape_offsets,
+            "{}",
+            e.name
+        );
+        assert_eq!(r.stream, enc.stream.len() * 4);
+        assert_eq!(r.row_lens, enc.nrows * 4);
+        // Tables are the paper's constant: 2 domains x K slots x 4 B.
+        assert_eq!(r.tables, 2 * 4096 * 4);
+    }
+}
+
+#[test]
+fn mtx_to_dtans_file_pipeline() {
+    // The CLI path: mtx -> encode -> save -> load -> decode -> mtx.
+    let dir = std::env::temp_dir().join("dtans_it_pipeline");
+    std::fs::create_dir_all(&dir).unwrap();
+    let m = dtans::matrix::gen::structured::stencil2d5(20, 20);
+    let mtx_path = dir.join("a.mtx");
+    dtans::matrix::mtx::save_mtx(&m, &mtx_path).unwrap();
+    let loaded = dtans::matrix::mtx::load_mtx_csr(&mtx_path).unwrap();
+    assert_eq!(loaded, m);
+    let enc = CsrDtans::encode(&loaded, &EncodeOptions::default()).unwrap();
+    let bin = dir.join("a.dtans");
+    serialize::save(&enc, &bin).unwrap();
+    let enc2 = serialize::load(&bin).unwrap();
+    assert_eq!(enc2.decode_to_csr().unwrap(), m);
+    let _ = std::fs::remove_dir_all(&dir);
+}

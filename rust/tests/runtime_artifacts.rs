@@ -1,0 +1,108 @@
+//! End-to-end integration: AOT artifacts (JAX/Pallas -> HLO text) loaded
+//! and executed via PJRT from Rust, validated against the native Rust
+//! decode path. Skips (with a loud message) if `make artifacts` has not
+//! produced the artifact directory.
+
+use dtans::ans::AnsParams;
+use dtans::format::csr_dtans::{CsrDtans, EncodeOptions};
+use dtans::matrix::gen::structured::{banded, powerlaw_rows};
+use dtans::matrix::gen::{assign_values, ValueDist};
+use dtans::matrix::{Csr, Precision};
+use dtans::runtime::Runtime;
+use dtans::spmv::spmv_csr_dtans;
+use dtans::util::rng::Xoshiro256;
+use std::path::Path;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::open(&dir).expect("open runtime"))
+}
+
+fn kernel_opts() -> EncodeOptions {
+    EncodeOptions {
+        params: AnsParams::KERNEL,
+        precision: Precision::F32,
+        delta_encode: true,
+    }
+}
+
+fn check_pjrt_matches_native(rt: &Runtime, m: &Csr, seed: u64) {
+    let enc = CsrDtans::encode(m, &kernel_opts()).unwrap();
+    let mut rng = Xoshiro256::seeded(seed);
+    let x: Vec<f64> = (0..m.ncols).map(|_| (rng.next_f32() - 0.5) as f64).collect();
+    let y_in: Vec<f64> = (0..m.nrows).map(|_| (rng.next_f32()) as f64).collect();
+    // Native Rust warp-synchronous decode path.
+    let mut want = y_in.clone();
+    spmv_csr_dtans(&enc, &x, &mut want).unwrap();
+    // PJRT path (f32 accumulation).
+    let got = rt.spmv_dtans(&enc, &x, &y_in).unwrap();
+    for r in 0..m.nrows {
+        let w = want[r];
+        let g = got[r] as f64;
+        assert!(
+            (w - g).abs() <= 1e-4 * w.abs().max(1.0),
+            "row {r}: native {w} vs pjrt {g}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_spmv_dtans_matches_native_small() {
+    let Some(rt) = runtime() else { return };
+    let mut m = banded(60, 2);
+    assign_values(&mut m, ValueDist::FewDistinct(7), &mut Xoshiro256::seeded(1));
+    check_pjrt_matches_native(&rt, &m, 11);
+}
+
+#[test]
+fn pjrt_spmv_dtans_matches_native_irregular_larger_bucket() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Xoshiro256::seeded(2);
+    let mut m = powerlaw_rows(200, 5.0, 1.0, &mut rng);
+    assign_values(&mut m, ValueDist::Quantized(32), &mut rng);
+    check_pjrt_matches_native(&rt, &m, 12);
+}
+
+#[test]
+fn pjrt_csr_jnp_baseline_matches() {
+    let Some(rt) = runtime() else { return };
+    let mut m = banded(50, 3);
+    assign_values(&mut m, ValueDist::SmallInts(4), &mut Xoshiro256::seeded(3));
+    let m = m.round_to_f32();
+    let x: Vec<f64> = (0..50).map(|i| (i as f64 * 0.1).sin()).collect();
+    let y_in = vec![0.0; 50];
+    let mut want = vec![0.0; 50];
+    dtans::spmv::spmv_csr(&m, &x, &mut want).unwrap();
+    let got = rt.spmv_csr_jnp(&m, &x, &y_in).unwrap();
+    for r in 0..50 {
+        assert!((want[r] - got[r] as f64).abs() < 1e-3, "row {r}");
+    }
+}
+
+#[test]
+fn pjrt_dense_matvec_matches() {
+    let Some(rt) = runtime() else { return };
+    let (nr, nc) = (10usize, 8usize);
+    let a: Vec<f32> = (0..nr * nc).map(|i| (i as f32 * 0.37).sin()).collect();
+    let x: Vec<f32> = (0..nc).map(|i| i as f32 * 0.5).collect();
+    let y_in = vec![1.0f32; nr];
+    let got = rt.dense_matvec(&a, nr, nc, &x, &y_in).unwrap();
+    for r in 0..nr {
+        let want: f32 = (0..nc).map(|c| a[r * nc + c] * x[c]).sum::<f32>() + 1.0;
+        assert!((want - got[r]).abs() < 1e-4, "row {r}: {want} vs {}", got[r]);
+    }
+}
+
+#[test]
+fn oversized_matrix_is_clean_error() {
+    let Some(rt) = runtime() else { return };
+    let m = banded(5000, 1); // exceeds every bucket
+    let enc = CsrDtans::encode(&m, &kernel_opts()).unwrap();
+    let x = vec![0.0; 5000];
+    let y = vec![0.0; 5000];
+    assert!(rt.spmv_dtans(&enc, &x, &y).is_err());
+}

@@ -1,0 +1,70 @@
+//! Integration: all SpMVM kernels agree on the whole corpus (dense oracle,
+//! CSR scalar/vector, COO, SELL at several slice heights, CSR-dtANS native
+//! and parallel).
+
+use dtans::eval::{build_corpus, CorpusScale};
+use dtans::format::csr_dtans::EncodeOptions;
+use dtans::matrix::Precision;
+use dtans::spmv::verify::cross_check;
+use dtans::util::rng::Xoshiro256;
+
+#[test]
+fn all_kernels_agree_on_corpus_f64() {
+    let corpus = build_corpus(&CorpusScale { max_nnz: 8000, steps: 3 }, 5);
+    for e in &corpus {
+        let err = cross_check(&e.csr, &EncodeOptions::default(), 77).unwrap();
+        assert!(err < 1e-10, "{}: err {err}", e.name);
+    }
+}
+
+#[test]
+fn all_kernels_agree_on_corpus_f32() {
+    let corpus = build_corpus(&CorpusScale { max_nnz: 5000, steps: 2 }, 6);
+    for e in &corpus {
+        let err = cross_check(
+            &e.csr,
+            &EncodeOptions {
+                precision: Precision::F32,
+                ..Default::default()
+            },
+            78,
+        )
+        .unwrap();
+        assert!(err < 1e-10, "{}: err {err}", e.name);
+    }
+}
+
+#[test]
+fn dense_oracle_on_tiny_matrices() {
+    use dtans::spmv::{spmv_csr, spmv_dense};
+    let mut rng = Xoshiro256::seeded(8);
+    for _ in 0..50 {
+        let nr = 1 + rng.below_usize(12);
+        let nc = 1 + rng.below_usize(12);
+        let nnz = rng.below_usize(nr * nc + 1);
+        let m = dtans::matrix::gen::structured::random_uniform(nr, nc, nnz, &mut rng);
+        let x: Vec<f64> = (0..nc).map(|_| rng.next_f64() - 0.5).collect();
+        let mut y1 = vec![0.1; nr];
+        let mut y2 = vec![0.1; nr];
+        spmv_csr(&m, &x, &mut y1).unwrap();
+        spmv_dense(&m.to_dense(), nr, nc, &x, &mut y2).unwrap();
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}
+
+#[test]
+fn dimension_mismatches_error_everywhere() {
+    use dtans::format::csr_dtans::CsrDtans;
+    use dtans::spmv::{spmv_csr, spmv_csr_dtans};
+    let m = dtans::matrix::gen::structured::banded(10, 1);
+    let enc = CsrDtans::encode(&m, &EncodeOptions::default()).unwrap();
+    let x_bad = vec![0.0; 9];
+    let mut y = vec![0.0; 10];
+    assert!(spmv_csr(&m, &x_bad, &mut y).is_err());
+    assert!(spmv_csr_dtans(&enc, &x_bad, &mut y).is_err());
+    let x = vec![0.0; 10];
+    let mut y_bad = vec![0.0; 11];
+    assert!(spmv_csr_dtans(&enc, &x, &mut y_bad).is_err());
+}
