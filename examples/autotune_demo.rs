@@ -14,7 +14,7 @@ use dtans::matrix::{Csr, Precision};
 use dtans::sim::GpuModel;
 use dtans::util::rng::Xoshiro256;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut rng = Xoshiro256::seeded(5);
     let cases: Vec<(&str, Csr)> = vec![
         ("banded-200k", {

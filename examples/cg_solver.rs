@@ -63,7 +63,7 @@ fn cg(op: &Op, b: &[f64], x: &mut [f64], tol: f64, max_iter: usize) -> (usize, f
     (max_iter, rs.sqrt(), spmv_secs)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let side = 192;
     let a = stencil2d5(side, side);
     println!(

@@ -1,16 +1,16 @@
 //! Quickstart: generate a sparse matrix, compress it with CSR-dtANS,
-//! compare sizes against CSR/COO/SELL, run SpMVM on the fly, and verify
-//! against the plain CSR kernel.
+//! compare sizes against CSR/COO/SELL, run SpMVM on the fly (serial and
+//! through the parallel engine), and verify against the plain CSR kernel.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use dtans::format::csr_dtans::{CsrDtans, EncodeOptions};
 use dtans::matrix::gen::{assign_values, gen_graph_csr, GraphModel, ValueDist};
 use dtans::matrix::{Precision, SizeModel};
-use dtans::spmv::{spmv_csr, spmv_csr_dtans};
+use dtans::spmv::{spmv_csr, spmv_csr_dtans, SpmvEngine};
 use dtans::util::rng::Xoshiro256;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // 1. A random graph adjacency matrix with quantized values (think:
     //    pruned+quantized NN layer, one of the paper's motivating cases).
     let mut rng = Xoshiro256::seeded(7);
@@ -56,6 +56,21 @@ fn main() -> anyhow::Result<()> {
         report.total as f64 / dt / 1e9
     );
     assert!(err < 1e-9);
+
+    // 4. The same multiply through the parallel engine (nnz-balanced
+    //    blocks across all CPUs) — bit-identical to the serial kernel.
+    let engine = SpmvEngine::auto();
+    let mut y_par = vec![0.0; a.nrows];
+    let t0 = std::time::Instant::now();
+    engine.spmv_csr_dtans(&enc, &x, &mut y_par)?;
+    let dt_par = t0.elapsed().as_secs_f64();
+    assert_eq!(y_par, y, "parallel engine must be bit-identical");
+    println!(
+        "engine: {:.2} ms on {} threads ({:.2}x over serial)",
+        dt_par * 1e3,
+        engine.nthreads(),
+        dt / dt_par
+    );
     println!("OK");
     Ok(())
 }

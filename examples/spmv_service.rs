@@ -19,7 +19,7 @@ use dtans::matrix::Precision;
 use dtans::runtime::Runtime;
 use dtans::util::rng::Xoshiro256;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // --- 1. Start the service and register a small model zoo. ---
     let svc = SpmvService::start(ServiceConfig {
         workers: 4,

@@ -3,11 +3,14 @@
 //! machinery). Covers:
 //!
 //!  * microbenches: dtANS encode/decode throughput, per-kernel SpMVM;
+//!  * engine benches: serial-vs-parallel scaling of the nnz-balanced
+//!    engine (`engine_scaling`) and the batched multi-RHS entry point
+//!    (`engine_batched`);
 //!  * one end-to-end bench per paper table/figure (regenerating them at
 //!    bench scale): fig4, fig6+tab1, fig7/tab2, fig8/tab3, fig9, ablate.
 //!
 //! Filter with `cargo bench -- <substring>`; `cargo bench -- --quick`
-//! shrinks the corpus.
+//! shrinks the corpus. Methodology notes live in `docs/BENCHMARKS.md`.
 
 use dtans::ans::AnsParams;
 use dtans::eval::{ablate, fig4, fig6, fig9, runtime_experiment, tab1, CorpusScale};
@@ -15,8 +18,11 @@ use dtans::format::csr_dtans::{CsrDtans, EncodeOptions};
 use dtans::matrix::gen::structured::{banded, stencil2d5};
 use dtans::matrix::gen::{assign_values, gen_graph_csr, GraphModel, ValueDist};
 use dtans::matrix::Csr;
+use dtans::spmv::csr_dtans::DecodePlan;
+use dtans::spmv::engine::{ParStrategy, SpmvEngine};
 use dtans::spmv::{spmv_coo, spmv_csr, spmv_csr_dtans, spmv_sell};
 use dtans::util::rng::Xoshiro256;
+use dtans::util::threadpool::ThreadPool;
 use dtans::util::timer::bench;
 use std::path::Path;
 
@@ -146,6 +152,111 @@ fn bench_tans_vs_dtans(filter: &Option<String>) {
     );
 }
 
+/// Serial-vs-parallel scaling of the nnz-balanced engine on a large
+/// structured matrix (full mode: ~2.3M nnz >= 2^20, the acceptance bar for
+/// a *measured* multi-thread speedup over serial CSR-dtANS SpMVM).
+fn bench_engine_scaling(filter: &Option<String>, quick: bool) {
+    if !should_run(filter, "engine_scaling") {
+        return;
+    }
+    let n = if quick { 1 << 15 } else { 1 << 18 };
+    let mut m = banded(n, 4); // ~9 nnz/row -> full mode ~2.3M nnz
+    let mut rng = Xoshiro256::seeded(6);
+    assign_values(&mut m, ValueDist::FewDistinct(16), &mut rng);
+    let enc = CsrDtans::encode(&m, &EncodeOptions::default()).unwrap();
+    let plan = DecodePlan::new(&enc);
+    let x: Vec<f64> = (0..m.ncols).map(|_| rng.next_f64()).collect();
+    let mut y = vec![0.0; m.nrows];
+    println!(
+        "engine_scaling               matrix: {} nnz (2^{:.1}), {} stream words",
+        m.nnz(),
+        (m.nnz() as f64).log2(),
+        enc.stream.len()
+    );
+
+    let mut threads = vec![1usize, 2, 4];
+    let ncpu = ThreadPool::default_parallelism();
+    if !threads.contains(&ncpu) {
+        threads.push(ncpu);
+    }
+    threads.retain(|&t| t <= ncpu.max(4));
+
+    // CSR-dtANS: fused decode+multiply.
+    let serial = SpmvEngine::serial();
+    let st0 = bench(1, 3, 0.5, || {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        serial.spmv_csr_dtans_with_plan(&enc, &plan, &x, &mut y).unwrap();
+    });
+    println!("engine_scaling/dtans t=1     {} (serial baseline)", st0.display());
+    for &t in &threads[1..] {
+        let eng = SpmvEngine::new(ParStrategy::Fixed(t));
+        let st = bench(1, 3, 0.5, || {
+            y.iter_mut().for_each(|v| *v = 0.0);
+            eng.spmv_csr_dtans_with_plan(&enc, &plan, &x, &mut y).unwrap();
+        });
+        println!(
+            "engine_scaling/dtans t={t:<2}    {} ({:.2}x speedup over serial)",
+            st.display(),
+            st0.median / st.median
+        );
+    }
+
+    // Plain CSR for reference (bandwidth-bound ceiling).
+    let sc0 = bench(1, 3, 0.5, || {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        serial.spmv_csr(&m, &x, &mut y).unwrap();
+    });
+    println!("engine_scaling/csr   t=1     {} (serial baseline)", sc0.display());
+    for &t in &threads[1..] {
+        let eng = SpmvEngine::new(ParStrategy::Fixed(t));
+        let sc = bench(1, 3, 0.5, || {
+            y.iter_mut().for_each(|v| *v = 0.0);
+            eng.spmv_csr(&m, &x, &mut y).unwrap();
+        });
+        println!(
+            "engine_scaling/csr   t={t:<2}    {} ({:.2}x speedup over serial)",
+            sc.display(),
+            sc0.median / sc.median
+        );
+    }
+}
+
+/// Batched multi-RHS (SpMM-style) sweep: one matrix against k vectors per
+/// call, versus k separate serial multiplies — the serving shape.
+fn bench_engine_batched(filter: &Option<String>, quick: bool) {
+    if !should_run(filter, "engine_batched") {
+        return;
+    }
+    let n = if quick { 1 << 12 } else { 1 << 15 };
+    let mut rng = Xoshiro256::seeded(7);
+    let mut m = gen_graph_csr(GraphModel::ErdosRenyi, n, 12.0, &mut rng);
+    assign_values(&mut m, ValueDist::Quantized(128), &mut rng);
+    let enc = CsrDtans::encode(&m, &EncodeOptions::default()).unwrap();
+    let plan = DecodePlan::new(&enc);
+    let engine = SpmvEngine::auto();
+    for k in [1usize, 4, 16] {
+        let xs: Vec<Vec<f64>> = (0..k)
+            .map(|_| (0..m.ncols).map(|_| rng.next_f64() - 0.5).collect())
+            .collect();
+        let st_serial = bench(1, 3, 0.3, || {
+            for x in &xs {
+                let mut y = vec![0.0; m.nrows];
+                dtans::spmv::csr_dtans::spmv_with_plan(&enc, &plan, x, &mut y).unwrap();
+            }
+        });
+        let st_batch = bench(1, 3, 0.3, || {
+            engine.spmm_csr_dtans_with_plan(&enc, &plan, &xs).unwrap();
+        });
+        println!(
+            "engine_batched/k={k:<3}        {} vs {} serial ({:.2}x, {:.3} Gnnz/s)",
+            st_batch.display(),
+            st_serial.display(),
+            st_serial.median / st_batch.median,
+            (m.nnz() * k) as f64 / st_batch.median / 1e9
+        );
+    }
+}
+
 fn bench_experiments(filter: &Option<String>, quick: bool) {
     let scale = if quick {
         CorpusScale { max_nnz: 1 << 16, steps: 4 }
@@ -204,9 +315,9 @@ fn main() {
     bench_codec(&filter, quick);
     bench_kernels(&filter, quick);
     bench_tans_vs_dtans(&filter);
+    bench_engine_scaling(&filter, quick);
+    bench_engine_batched(&filter, quick);
     bench_large_banded(&filter, quick);
     bench_experiments(&filter, quick);
     println!("done.");
 }
-
-// (Appended during the perf pass.) Parallel decode+SpMVM scaling check.

@@ -1,17 +1,24 @@
-//! The SpMVM service: matrix registry + request batcher + worker pool.
+//! The SpMVM service: matrix registry + request batcher + worker pool,
+//! executing over the parallel SpMV engine.
 //!
 //! Requests `(matrix_id, x)` are queued; a dispatcher groups consecutive
 //! requests to the same matrix into batches (amortizing plan lookups and
-//! keeping the decode tables hot, the same motivation as GPU batching),
-//! and a pool of workers executes them over the routed format. Responses
-//! are delivered over per-request channels. Everything is std-thread based.
+//! keeping the decode tables hot, the same motivation as GPU batching).
+//! Singleton batches run as jobs on a worker pool; multi-request batches
+//! take the SpMM fast path — one multi-RHS engine call for the whole
+//! batch, fanning the (request × row-block) grid across the engine's
+//! threads. Either way the kernel work routes through a shared
+//! [`SpmvEngine`] whose [`ParStrategy`] comes from [`ServiceConfig::par`]
+//! (`ParStrategy::Serial` restores the old one-thread-per-request
+//! behavior). Responses are delivered over per-request channels.
+//! Everything is std-thread based.
 
 use super::metrics::Metrics;
 use super::router::{FormatChoice, RoutePolicy};
 use crate::format::csr_dtans::{CsrDtans, EncodeOptions};
 use crate::matrix::csr::Csr;
-use crate::spmv::csr_dtans::{spmv_with_plan, DecodePlan};
-use crate::spmv::spmv_csr;
+use crate::spmv::csr_dtans::DecodePlan;
+use crate::spmv::engine::{ParStrategy, SpmvEngine};
 use crate::util::error::{DtansError, Result};
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
@@ -44,7 +51,7 @@ struct Request {
 /// Service configuration.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
-    /// Worker threads.
+    /// Worker threads (request-level parallelism for singleton batches).
     pub workers: usize,
     /// Max requests fused into one batch.
     pub max_batch: usize,
@@ -52,6 +59,11 @@ pub struct ServiceConfig {
     pub encode: EncodeOptions,
     /// Routing policy.
     pub policy: RoutePolicy,
+    /// Kernel-level parallelism: the [`ParStrategy`] of the shared
+    /// [`SpmvEngine`] every request executes on. `Auto` (default) splits
+    /// large multiplies across all CPUs and runs small ones serially;
+    /// `Serial` restores pre-engine behavior.
+    pub par: ParStrategy,
 }
 
 impl Default for ServiceConfig {
@@ -61,6 +73,7 @@ impl Default for ServiceConfig {
             max_batch: 16,
             encode: EncodeOptions::default(),
             policy: RoutePolicy::default(),
+            par: ParStrategy::Auto,
         }
     }
 }
@@ -182,6 +195,9 @@ fn dispatcher_loop(
     cfg: ServiceConfig,
 ) {
     let pool = crate::util::threadpool::ThreadPool::new(cfg.workers);
+    // One engine shared by every request: the decode tables / plan stay
+    // hot, and kernel-level parallelism is centralized in one place.
+    let engine = Arc::new(SpmvEngine::new(cfg.par));
     let mut pending: Option<Request> = None;
     loop {
         // Collect a batch: all queued requests for the same matrix, up to
@@ -216,12 +232,23 @@ fn dispatcher_loop(
                         .send(Err(DtansError::Service(format!("unknown matrix {}", req.matrix))));
                 }
             }
+            // SpMM fast path only when the engine would actually fan the
+            // batch out; otherwise (Serial engine, or Auto below its cost
+            // threshold) keep the old one-worker-per-request path so
+            // request-level parallelism on the service pool is preserved.
+            Some(mat)
+                if batch.len() > 1
+                    && engine.will_batch_parallel(mat.csr.nnz(), batch.len()) =>
+            {
+                run_spmm_batch(&mat, batch, &engine, &metrics);
+            }
             Some(mat) => {
                 for req in batch {
                     let mat = Arc::clone(&mat);
                     let metrics = Arc::clone(&metrics);
+                    let engine = Arc::clone(&engine);
                     pool.execute(move || {
-                        let result = run_one(&mat, &req.x);
+                        let result = run_one(&mat, &engine, &req.x);
                         match &result {
                             Ok(_) => metrics
                                 .record_latency(req.submitted.elapsed().as_micros() as u64),
@@ -238,11 +265,64 @@ fn dispatcher_loop(
     }
 }
 
-fn run_one(mat: &LoadedMatrix, x: &[f64]) -> Result<Vec<f64>> {
+/// SpMM fast path for a multi-request batch: dimension-check each request
+/// up front (so one malformed vector cannot poison the batch), then run
+/// all remaining right-hand sides through a single batched engine call.
+fn run_spmm_batch(
+    mat: &LoadedMatrix,
+    batch: Vec<Request>,
+    engine: &SpmvEngine,
+    metrics: &Metrics,
+) {
+    let (nrows, ncols) = (mat.csr.nrows, mat.csr.ncols);
+    let mut xs = Vec::with_capacity(batch.len());
+    let mut accepted = Vec::with_capacity(batch.len());
+    for req in batch {
+        if req.x.len() == ncols {
+            xs.push(req.x);
+            accepted.push((req.resp, req.submitted));
+        } else {
+            metrics.failed.fetch_add(1, Ordering::Relaxed);
+            // Same message shape as the per-request path (check_dims with
+            // the nrows-sized output the run would have used), so clients
+            // see one error text regardless of how requests batched.
+            let _ = req.resp.send(Err(DtansError::Dimension(format!(
+                "matrix {nrows}x{ncols} with x[{}], y[{nrows}]",
+                req.x.len()
+            ))));
+        }
+    }
+    if accepted.is_empty() {
+        return;
+    }
+    let result = match mat.choice {
+        FormatChoice::Csr => engine.spmm_csr(&mat.csr, &xs),
+        FormatChoice::CsrDtans => engine.spmm_csr_dtans_with_plan(&mat.enc, &mat.plan, &xs),
+    };
+    match result {
+        Ok(ys) => {
+            for ((resp, submitted), y) in accepted.into_iter().zip(ys) {
+                metrics.record_latency(submitted.elapsed().as_micros() as u64);
+                let _ = resp.send(Ok(y));
+            }
+        }
+        Err(e) => {
+            // Decode-level failures are a property of the matrix, so every
+            // request in the batch sees the same error — with its variant
+            // preserved, exactly as the per-request path would report it.
+            for (resp, _) in accepted {
+                metrics.failed.fetch_add(1, Ordering::Relaxed);
+                let _ = resp.send(Err(e.duplicate()));
+            }
+        }
+    }
+}
+
+fn run_one(mat: &LoadedMatrix, engine: &SpmvEngine, x: &[f64]) -> Result<Vec<f64>> {
     let mut y = vec![0.0; mat.csr.nrows];
     match mat.choice {
-        FormatChoice::Csr => spmv_csr(&mat.csr, x, &mut y)?,
-        FormatChoice::CsrDtans => spmv_with_plan(&mat.enc, &mat.plan, x, &mut y)?,
+        FormatChoice::Csr => engine.spmv_csr(&mat.csr, x, &mut y)?,
+        FormatChoice::CsrDtans => engine.spmv_csr_dtans_with_plan(&mat.enc, &mat.plan, x, &mut y)?,
     }
     Ok(y)
 }
@@ -252,6 +332,7 @@ mod tests {
     use super::*;
     use crate::matrix::gen::structured::banded;
     use crate::matrix::gen::{assign_values, ValueDist};
+    use crate::spmv::spmv_csr;
     use crate::util::rng::Xoshiro256;
 
     #[test]
@@ -295,6 +376,59 @@ mod tests {
         let svc = SpmvService::start(ServiceConfig::default());
         assert!(svc.spmv(999, vec![0.0; 4]).is_err());
         assert_eq!(svc.metrics.failed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn parallel_engine_config_matches_serial_service() {
+        // Same requests through a Serial-engine service and a Fixed(4)
+        // engine service must produce bit-identical responses.
+        let mut m = banded(3000, 3);
+        assign_values(&mut m, ValueDist::FewDistinct(8), &mut Xoshiro256::seeded(7));
+        let xs: Vec<Vec<f64>> = (0..6)
+            .map(|i| (0..3000).map(|j| ((i * j) as f64 * 0.001).sin()).collect())
+            .collect();
+        let mut answers: Vec<Vec<Vec<f64>>> = Vec::new();
+        for par in [ParStrategy::Serial, ParStrategy::Fixed(4)] {
+            let svc = SpmvService::start(ServiceConfig {
+                workers: 2,
+                par,
+                policy: RoutePolicy { min_nnz: 1 << 10, max_size_ratio: 0.95 },
+                ..Default::default()
+            });
+            let id = svc.register("m", m.clone()).unwrap();
+            // Submit all up front so the dispatcher can exercise the SpMM
+            // batch fast path.
+            let pendings: Vec<Pending> =
+                xs.iter().map(|x| svc.submit(id, x.clone())).collect();
+            answers.push(pendings.into_iter().map(|p| p.wait().unwrap()).collect());
+        }
+        assert_eq!(answers[0], answers[1]);
+        // And both match the serial CSR ground truth.
+        for (x, y) in xs.iter().zip(&answers[0]) {
+            let mut want = vec![0.0; 3000];
+            spmv_csr(&m, x, &mut want).unwrap();
+            crate::util::propcheck::assert_close(y, &want, 1e-12, 1e-12).unwrap();
+        }
+    }
+
+    #[test]
+    fn spmm_batch_isolates_bad_dimensions() {
+        // Fixed strategy keeps will_batch_parallel() true at any size, so
+        // whenever these requests do coalesce they exercise the SpMM path.
+        let svc = SpmvService::start(ServiceConfig {
+            par: ParStrategy::Fixed(2),
+            ..Default::default()
+        });
+        let m = banded(256, 2);
+        let id = svc.register("m", m).unwrap();
+        // One malformed request among good ones; submitted together so
+        // they can batch.
+        let good1 = svc.submit(id, vec![1.0; 256]);
+        let bad = svc.submit(id, vec![1.0; 7]);
+        let good2 = svc.submit(id, vec![2.0; 256]);
+        assert_eq!(good1.wait().unwrap().len(), 256);
+        assert!(bad.wait().is_err());
+        assert_eq!(good2.wait().unwrap().len(), 256);
     }
 
     #[test]

@@ -1,5 +1,44 @@
 //! The CSR-dtANS compressed matrix format: symbolization with escapes,
 //! per-row dtANS encoding, warp interleaving, container + (de)serialization.
+//!
+//! This is the paper's §IV container. Encoding takes a validated
+//! [`crate::matrix::Csr`] through four stages:
+//!
+//! 1. delta-encode in-row column indices ([`csr_dtans`], §IV-A);
+//! 2. symbolize deltas and value bit-patterns against two dictionaries
+//!    with escape codes for rare payloads ([`symbolize`], §IV-B);
+//! 3. entropy-code each row with dtANS ([`crate::ans::dtans`], Alg. 2);
+//! 4. interleave the 32 per-row streams of each warp-sized slice into one
+//!    word stream in exact decode order ([`interleave`], §IV-D), so the
+//!    lockstep decoder's loads coalesce.
+//!
+//! [`serialize`] gives the container a stable byte format; the size
+//! accounting ([`SizeReport`]) reproduces the paper's Fig. 6 breakdown.
+//!
+//! Decoding back to CSR ([`CsrDtans::decode_to_csr`]) is exact for f64
+//! encodes; SpMVM over the encoded form without decompressing lives in
+//! [`crate::spmv`] (serial) and [`crate::spmv::engine`] (parallel).
+//!
+//! ```
+//! use dtans::format::{CsrDtans, EncodeOptions};
+//! use dtans::matrix::gen::structured::banded;
+//! use dtans::matrix::gen::{assign_values, ValueDist};
+//! use dtans::util::rng::Xoshiro256;
+//!
+//! let mut m = banded(512, 2);
+//! assign_values(&mut m, ValueDist::FewDistinct(4), &mut Xoshiro256::seeded(9));
+//! let enc = CsrDtans::encode(&m, &EncodeOptions::default()).unwrap();
+//! // Lossless roundtrip...
+//! assert_eq!(enc.decode_to_csr().unwrap(), m);
+//! // ...and the paper's size accounting.
+//! let report = enc.size_report();
+//! assert_eq!(
+//!     report.total,
+//!     report.header + report.tables + report.dicts + report.stream
+//!         + report.row_lens + report.slice_offsets + report.escapes
+//!         + report.escape_offsets
+//! );
+//! ```
 
 pub mod csr_dtans;
 pub mod interleave;

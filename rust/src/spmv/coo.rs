@@ -4,7 +4,18 @@
 use crate::matrix::coo::Coo;
 use crate::util::error::Result;
 
-/// `y += A·x` over COO triplets.
+/// `y += A·x` over COO triplets (duplicates accumulate, as with atomics).
+///
+/// ```
+/// use dtans::matrix::Coo;
+/// use dtans::spmv::spmv_coo;
+/// let mut m = Coo::new(2, 2);
+/// m.push(0, 1, 4.0);
+/// m.push(0, 1, 1.0); // duplicate entry sums into the same output row
+/// let mut y = vec![0.0; 2];
+/// spmv_coo(&m, &[1.0, 2.0], &mut y).unwrap();
+/// assert_eq!(y, vec![10.0, 0.0]);
+/// ```
 pub fn spmv_coo(m: &Coo, x: &[f64], y: &mut [f64]) -> Result<()> {
     super::check_dims(m.nrows, m.ncols, x, y)?;
     for i in 0..m.nnz() {

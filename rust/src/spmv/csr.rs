@@ -7,16 +7,45 @@ use crate::matrix::csr::Csr;
 use crate::util::error::Result;
 
 /// Scalar CSR kernel: each row's dot product in sequence.
+///
+/// Accumulates into `y` (`y += A·x`); zero `y` first for a plain product.
+///
+/// ```
+/// use dtans::matrix::{Coo, Csr};
+/// use dtans::spmv::spmv_csr;
+/// let mut coo = Coo::new(2, 2);
+/// coo.push(0, 0, 2.0);
+/// coo.push(1, 1, 3.0);
+/// let m = Csr::from_coo(&coo);
+/// let mut y = vec![1.0, 0.0]; // note the nonzero initial entry
+/// spmv_csr(&m, &[10.0, 10.0], &mut y).unwrap();
+/// assert_eq!(y, vec![21.0, 30.0]);
+/// ```
 pub fn spmv_csr(m: &Csr, x: &[f64], y: &mut [f64]) -> Result<()> {
     super::check_dims(m.nrows, m.ncols, x, y)?;
-    for r in 0..m.nrows {
+    spmv_row_range(m, 0, m.nrows, x, y)
+}
+
+/// Scalar CSR kernel over rows `r0..r1`; `y_seg[i]` accumulates row
+/// `r0 + i`. The whole-matrix [`spmv_csr`] is the `0..nrows` case and the
+/// parallel engine fans out disjoint ranges, so both paths share one loop
+/// and bit-identical results hold by construction.
+pub(crate) fn spmv_row_range(
+    m: &Csr,
+    r0: usize,
+    r1: usize,
+    x: &[f64],
+    y_seg: &mut [f64],
+) -> Result<()> {
+    debug_assert_eq!(y_seg.len(), r1 - r0);
+    for (i, r) in (r0..r1).enumerate() {
         let lo = m.row_ptr[r];
         let hi = m.row_ptr[r + 1];
         let mut acc = 0.0;
-        for i in lo..hi {
-            acc += m.vals[i] * x[m.cols[i] as usize];
+        for k in lo..hi {
+            acc += m.vals[k] * x[m.cols[k] as usize];
         }
-        y[r] += acc;
+        y_seg[i] += acc;
     }
     Ok(())
 }
@@ -24,6 +53,19 @@ pub fn spmv_csr(m: &Csr, x: &[f64], y: &mut [f64]) -> Result<()> {
 /// Vector CSR kernel: rows processed in warp-sized gangs with a lane-strided
 /// inner loop (the GPU schedule; numerically reassociated, which matters
 /// only at the f64 ulp level).
+///
+/// ```
+/// use dtans::matrix::{Coo, Csr};
+/// use dtans::spmv::{spmv_csr, spmv_csr_vector};
+/// let mut coo = Coo::new(1, 4);
+/// for c in 0..4 { coo.push(0, c, 1.0 + c as f64); }
+/// let m = Csr::from_coo(&coo);
+/// let x = [1.0, -1.0, 0.5, 0.25];
+/// let (mut y, mut yv) = (vec![0.0], vec![0.0]);
+/// spmv_csr(&m, &x, &mut y).unwrap();
+/// spmv_csr_vector(&m, &x, &mut yv, 32).unwrap();
+/// assert!((y[0] - yv[0]).abs() < 1e-12);
+/// ```
 pub fn spmv_csr_vector(m: &Csr, x: &[f64], y: &mut [f64], warp: usize) -> Result<()> {
     super::check_dims(m.nrows, m.ncols, x, y)?;
     let warp = warp.max(1);
@@ -76,6 +118,19 @@ mod tests {
         spmv_csr(&m, &x, &mut y1).unwrap();
         spmv_csr_vector(&m, &x, &mut y2, 32).unwrap();
         assert_close(&y1, &y2, 1e-12, 1e-15).unwrap();
+    }
+
+    #[test]
+    fn row_range_blocks_reassemble_bitwise() {
+        let m = example();
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let mut want = vec![0.5; 4];
+        spmv_csr(&m, &x, &mut want).unwrap();
+        let mut got = vec![0.5; 4];
+        for (r0, r1) in [(0usize, 1usize), (1, 3), (3, 4)] {
+            spmv_row_range(&m, r0, r1, &x, &mut got[r0..r1]).unwrap();
+        }
+        assert_eq!(got, want); // bit-identical, not just close
     }
 
     #[test]

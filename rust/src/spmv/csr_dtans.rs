@@ -60,6 +60,27 @@ impl DecodePlan {
 }
 
 /// `y += A·x` over a CSR-dtANS matrix (single-threaded).
+///
+/// Builds a fresh [`DecodePlan`]; use [`spmv_with_plan`] (or the engine's
+/// [`crate::spmv::engine::SpmvEngine::spmv_csr_dtans_with_plan`]) to reuse
+/// the plan across multiplies.
+///
+/// ```
+/// use dtans::format::csr_dtans::{CsrDtans, EncodeOptions};
+/// use dtans::matrix::gen::structured::banded;
+/// use dtans::matrix::gen::{assign_values, ValueDist};
+/// use dtans::spmv::{spmv_csr, spmv_csr_dtans};
+/// use dtans::util::rng::Xoshiro256;
+///
+/// let mut m = banded(200, 2);
+/// assign_values(&mut m, ValueDist::FewDistinct(4), &mut Xoshiro256::seeded(1));
+/// let enc = CsrDtans::encode(&m, &EncodeOptions::default()).unwrap();
+/// let x = vec![1.0; m.ncols];
+/// let (mut y, mut want) = (vec![0.0; m.nrows], vec![0.0; m.nrows]);
+/// spmv_csr_dtans(&enc, &x, &mut y).unwrap();
+/// spmv_csr(&m, &x, &mut want).unwrap();
+/// assert!(y.iter().zip(&want).all(|(a, b)| (a - b).abs() < 1e-12));
+/// ```
 pub fn spmv_csr_dtans(m: &CsrDtans, x: &[f64], y: &mut [f64]) -> Result<()> {
     let plan = DecodePlan::new(m);
     spmv_with_plan(m, &plan, x, y)
@@ -68,13 +89,38 @@ pub fn spmv_csr_dtans(m: &CsrDtans, x: &[f64], y: &mut [f64]) -> Result<()> {
 /// `y += A·x` with a prebuilt [`DecodePlan`].
 pub fn spmv_with_plan(m: &CsrDtans, plan: &DecodePlan, x: &[f64], y: &mut [f64]) -> Result<()> {
     super::check_dims(m.nrows, m.ncols, x, y)?;
-    for s in 0..m.nslices() {
-        spmv_slice(m, plan, s, x, &mut y[s * WARP..((s + 1) * WARP).min(m.nrows)])?;
+    spmv_slice_range(m, plan, 0, m.nslices(), x, y)
+}
+
+/// Decode + multiply the contiguous slice range `s0..s1`; `y_seg` spans
+/// rows `s0 * WARP .. min(s1 * WARP, nrows)`. This is the unit the
+/// parallel engine fans out: slice ranges touch disjoint row ranges, so
+/// each block gets its own `&mut` output segment with no combining pass.
+pub(crate) fn spmv_slice_range(
+    m: &CsrDtans,
+    plan: &DecodePlan,
+    s0: usize,
+    s1: usize,
+    x: &[f64],
+    y_seg: &mut [f64],
+) -> Result<()> {
+    let base = s0 * WARP;
+    for s in s0..s1 {
+        let a = s * WARP - base;
+        let b = ((s + 1) * WARP).min(m.nrows) - base;
+        spmv_slice(m, plan, s, x, &mut y_seg[a..b])?;
     }
     Ok(())
 }
 
-/// Parallel variant: slices are independent, so they fan out over a pool.
+/// Parallel variant over a caller-provided pool: slices fan out in
+/// nnz-balanced blocks (see [`crate::spmv::engine::partition_dtans`]),
+/// each writing its disjoint `y` range in place — no per-slice copies.
+/// Bit-identical to the serial [`spmv_csr_dtans`].
+///
+/// Prefer [`crate::spmv::engine::SpmvEngine`], which owns its pool and
+/// adds strategy selection plus batched entry points; this free function
+/// remains for callers that already manage a [`ThreadPool`].
 pub fn spmv_csr_dtans_parallel(
     m: &CsrDtans,
     x: &[f64],
@@ -83,46 +129,14 @@ pub fn spmv_csr_dtans_parallel(
 ) -> Result<()> {
     super::check_dims(m.nrows, m.ncols, x, y)?;
     let plan = DecodePlan::new(m);
-    let nsl = m.nslices();
-    // Each slice writes a disjoint y range; collect per-slice results.
-    let results: Vec<Result<Vec<f64>>> = {
-        // SAFETY-free approach: copy per-slice y segments in, return them.
-        let m_ref = &m;
-        let plan_ref = &plan;
-        let x_ref = &x;
-        std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(nsl);
-            let chunk = nsl.div_ceil(ThreadPool::default_parallelism().max(1)).max(1);
-            for c0 in (0..nsl).step_by(chunk) {
-                let c1 = (c0 + chunk).min(nsl);
-                handles.push(scope.spawn(move || {
-                    let mut out = Vec::with_capacity(c1 - c0);
-                    for s in c0..c1 {
-                        let r1 = ((s + 1) * WARP).min(m_ref.nrows);
-                        let mut seg = vec![0.0; r1 - s * WARP];
-                        match spmv_slice(m_ref, plan_ref, s, x_ref, &mut seg) {
-                            Ok(()) => out.push(Ok(seg)),
-                            Err(e) => out.push(Err(e)),
-                        }
-                    }
-                    out
-                }));
-            }
-            handles
-                .into_iter()
-                .flat_map(|h| h.join().expect("spmv worker panicked"))
-                .collect()
-        })
-    };
-    let _ = pool; // pool reserved for future work stealing; scoped threads used here
-    for (s, res) in results.into_iter().enumerate() {
-        let seg = res?;
-        let r0 = s * WARP;
-        for (i, v) in seg.into_iter().enumerate() {
-            y[r0 + i] += v;
-        }
-    }
-    Ok(())
+    let blocks = super::engine::partition_dtans(m, pool.size());
+    super::engine::run_blocks(
+        pool,
+        &blocks,
+        y,
+        |b| (b.end * WARP).min(m.nrows),
+        |b, seg| spmv_slice_range(m, &plan, b.start, b.end, x, seg),
+    )
 }
 
 /// Decode + multiply one slice; `y_slice` covers the slice's rows.

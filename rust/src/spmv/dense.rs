@@ -4,6 +4,14 @@
 use crate::util::error::Result;
 
 /// `y += A·x` for dense row-major `a` of shape `nrows × ncols`.
+///
+/// ```
+/// use dtans::spmv::spmv_dense;
+/// let a = [1.0, 2.0, 3.0, 4.0]; // [[1, 2], [3, 4]]
+/// let mut y = vec![0.0; 2];
+/// spmv_dense(&a, 2, 2, &[1.0, 1.0], &mut y).unwrap();
+/// assert_eq!(y, vec![3.0, 7.0]);
+/// ```
 pub fn spmv_dense(a: &[f64], nrows: usize, ncols: usize, x: &[f64], y: &mut [f64]) -> Result<()> {
     super::check_dims(nrows, ncols, x, y)?;
     assert_eq!(a.len(), nrows * ncols);

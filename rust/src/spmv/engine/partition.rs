@@ -1,0 +1,231 @@
+//! nnz-balanced work partitioning.
+//!
+//! The paper assigns one warp per 32-row slice; throughput then depends on
+//! the *nonzeros* (equivalently, stream words) each warp owns, not the row
+//! count — the same observation behind row-grouped CSR (Oberhuber et al.,
+//! arXiv:1012.2270) and nmSPARSE's balanced partitions. This module
+//! reproduces that assignment on the CPU: given a monotone cost-prefix
+//! array (CSR's `row_ptr`, a slice word-offset table, SELL's `slice_ptr`),
+//! it binary-searches for split points that give every block an equal share
+//! of the total cost.
+//!
+//! Blocks are contiguous, disjoint, and cover every unit exactly once, so
+//! a parallel executor can hand each block a disjoint `&mut` range of the
+//! output vector and each row is still computed by exactly one serial
+//! kernel invocation — which is what makes the parallel results
+//! *bit-identical* to the serial ones (see `tests/engine_parallel.rs`).
+
+use crate::format::csr_dtans::CsrDtans;
+use crate::matrix::csr::Csr;
+use crate::matrix::sell::Sell;
+
+/// One contiguous block of work units (rows or slices).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Block {
+    /// First unit (inclusive).
+    pub start: usize,
+    /// Last unit (exclusive).
+    pub end: usize,
+    /// Total cost of the block (`prefix[end] - prefix[start]`).
+    pub cost: usize,
+}
+
+impl Block {
+    /// Number of units in the block.
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// True when the block spans no units (never produced by the
+    /// partitioner; useful for callers building blocks by hand).
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// Split `prefix.len() - 1` work units into at most `parts` contiguous
+/// blocks of near-equal cost.
+///
+/// `prefix` is a monotone non-decreasing cost prefix over the units
+/// (`prefix[i+1] - prefix[i]` = cost of unit `i`), e.g. CSR's `row_ptr`.
+/// For each split `p`, the boundary is the first unit index whose prefix
+/// reaches `total * p / parts` — a binary search (`partition_point`),
+/// mirroring the paper's equal-nonzeros warp assignment.
+///
+/// Guarantees (property-tested in `tests/engine_parallel.rs`):
+///
+/// * blocks are non-empty, contiguous, in ascending order, and cover
+///   `0..units` exactly;
+/// * block costs sum to `prefix[units] - prefix[0]`;
+/// * every block's cost is at most `ceil(total / parts)` plus the largest
+///   single-unit cost (a single unit is never split).
+///
+/// Returns fewer than `parts` blocks when there are fewer units than
+/// parts, and an empty vector when there are no units at all.
+///
+/// ```
+/// use dtans::spmv::engine::partition_prefix;
+/// // 4 rows with 2, 8, 1, 1 nonzeros: the two-way split lands right
+/// // after the heavy row (first boundary whose prefix reaches the
+/// // 6-nonzeros target), not at the midpoint row count.
+/// let blocks = partition_prefix(&[0, 2, 10, 11, 12], 2);
+/// assert_eq!(blocks.len(), 2);
+/// assert_eq!((blocks[0].start, blocks[0].end, blocks[0].cost), (0, 2, 10));
+/// assert_eq!((blocks[1].start, blocks[1].end, blocks[1].cost), (2, 4, 2));
+/// ```
+pub fn partition_prefix(prefix: &[usize], parts: usize) -> Vec<Block> {
+    partition_prefix_by(prefix, |&v| v, parts)
+}
+
+/// Generic core of [`partition_prefix`]: `cost_of` projects each stored
+/// offset to its `usize` cost, so narrower offset tables (e.g. the `u32`
+/// slice offsets of CSR-dtANS) partition without a widening copy.
+fn partition_prefix_by<T>(prefix: &[T], cost_of: impl Fn(&T) -> usize, parts: usize) -> Vec<Block> {
+    assert!(!prefix.is_empty(), "prefix must contain at least one offset");
+    debug_assert!(
+        prefix.windows(2).all(|w| cost_of(&w[0]) <= cost_of(&w[1])),
+        "prefix not monotone"
+    );
+    let units = prefix.len() - 1;
+    if units == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, units);
+    let base = cost_of(&prefix[0]);
+    let total = cost_of(&prefix[units]) - base;
+    let mut blocks = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    for p in 1..=parts {
+        if start == units {
+            break;
+        }
+        let end = if p == parts {
+            units
+        } else {
+            let target = base + ((total as u128 * p as u128) / parts as u128) as usize;
+            // First unit boundary at or past the target cost; forced to
+            // advance at least one unit so every block is non-empty.
+            prefix
+                .partition_point(|v| cost_of(v) < target)
+                .clamp(start + 1, units)
+        };
+        blocks.push(Block {
+            start,
+            end,
+            cost: cost_of(&prefix[end]) - cost_of(&prefix[start]),
+        });
+        start = end;
+    }
+    blocks
+}
+
+/// Partition a CSR matrix's rows into `parts` equal-nonzeros blocks
+/// (units = rows, cost = per-row nnz from `row_ptr`).
+pub fn partition_csr(m: &Csr, parts: usize) -> Vec<Block> {
+    partition_prefix(&m.row_ptr, parts)
+}
+
+/// Partition a CSR-dtANS matrix's 32-row slices into `parts` blocks of
+/// near-equal *stream words* (units = slices, cost = encoded words, the
+/// quantity that actually bounds decode time). Slices are the kernel's
+/// atomic unit, so blocks always align to `WARP`-row boundaries.
+pub fn partition_dtans(m: &CsrDtans, parts: usize) -> Vec<Block> {
+    partition_prefix_by(&m.slice_offsets, |&w| w as usize, parts)
+}
+
+/// Partition a SELL matrix's slices into `parts` blocks of near-equal
+/// *padded cells* (units = slices, cost = `slice_ptr` deltas — padding is
+/// real work in the SELL kernel, so it is what must balance).
+pub fn partition_sell(m: &Sell, parts: usize) -> Vec<Block> {
+    partition_prefix(&m.slice_ptr, parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::coo::Coo;
+
+    fn assert_valid(blocks: &[Block], prefix: &[usize], parts: usize) {
+        let units = prefix.len() - 1;
+        if units == 0 {
+            assert!(blocks.is_empty());
+            return;
+        }
+        let total = prefix[units] - prefix[0];
+        assert!(!blocks.is_empty());
+        assert!(blocks.len() <= parts.clamp(1, units));
+        assert_eq!(blocks[0].start, 0);
+        assert_eq!(blocks.last().unwrap().end, units);
+        let max_unit = prefix.windows(2).map(|w| w[1] - w[0]).max().unwrap();
+        let mut expect_start = 0;
+        let mut cost_sum = 0;
+        for b in blocks {
+            assert_eq!(b.start, expect_start, "blocks not contiguous");
+            assert!(b.end > b.start, "empty block");
+            assert_eq!(b.cost, prefix[b.end] - prefix[b.start]);
+            assert!(
+                b.cost <= total.div_ceil(parts.clamp(1, units)) + max_unit,
+                "unbalanced block {b:?} (total {total}, parts {parts})"
+            );
+            expect_start = b.end;
+            cost_sum += b.cost;
+        }
+        assert_eq!(cost_sum, total);
+    }
+
+    #[test]
+    fn uniform_costs_split_evenly() {
+        let prefix: Vec<usize> = (0..=100).map(|i| i * 5).collect();
+        for parts in [1, 2, 3, 4, 7, 16, 100] {
+            let blocks = partition_prefix(&prefix, parts);
+            assert_eq!(blocks.len(), parts.min(100));
+            assert_valid(&blocks, &prefix, parts);
+        }
+    }
+
+    #[test]
+    fn skewed_costs_balance_by_cost_not_rows() {
+        // One huge row at the front: it must sit alone in the first block.
+        let prefix = vec![0, 1000, 1001, 1002, 1003, 1004];
+        let blocks = partition_prefix(&prefix, 2);
+        assert_valid(&blocks, &prefix, 2);
+        assert_eq!(blocks[0], Block { start: 0, end: 1, cost: 1000 });
+        assert_eq!(blocks[1], Block { start: 1, end: 5, cost: 4 });
+    }
+
+    #[test]
+    fn zero_cost_units_are_still_covered() {
+        // All-empty rows: every unit must land in some block.
+        let prefix = vec![0usize; 9]; // 8 rows, 0 nnz
+        for parts in 1..=16 {
+            let blocks = partition_prefix(&prefix, parts);
+            assert_valid(&blocks, &prefix, parts);
+        }
+    }
+
+    #[test]
+    fn fewer_units_than_parts() {
+        let prefix = vec![0, 3, 7];
+        let blocks = partition_prefix(&prefix, 16);
+        assert_valid(&blocks, &prefix, 16);
+        assert_eq!(blocks.len(), 2);
+    }
+
+    #[test]
+    fn no_units_yields_no_blocks() {
+        assert!(partition_prefix(&[0], 4).is_empty());
+        assert!(partition_prefix(&[42], 1).is_empty());
+    }
+
+    #[test]
+    fn csr_partition_matches_row_ptr() {
+        let mut coo = Coo::new(4, 4);
+        for &(r, c) in &[(0, 0), (0, 1), (1, 0), (1, 1), (1, 2), (2, 0), (3, 3)] {
+            coo.push(r, c, 1.0);
+        }
+        let m = Csr::from_coo(&coo);
+        let blocks = partition_csr(&m, 2);
+        assert_valid(&blocks, &m.row_ptr, 2);
+        assert_eq!(blocks.iter().map(|b| b.cost).sum::<usize>(), m.nnz());
+    }
+}

@@ -5,11 +5,38 @@
 //! The classic-format kernels stand in for cuSPARSE's and feed the GPU
 //! simulator's cost models; the CSR-dtANS kernel is the paper's
 //! contribution — SpMVM interleaved with on-the-fly entropy decoding.
+//!
+//! The free functions in this module are the *serial* kernels. The
+//! [`engine`] submodule layers the parallel execution model on top: an
+//! nnz-balanced partitioner plus a thread-pool executor whose results are
+//! bit-identical to the serial kernels (see [`engine::SpmvEngine`] and
+//! [`engine::ParStrategy`] for the selection rules). The serial functions
+//! remain the fallback path and the ground truth the engine is tested
+//! against.
+//!
+//! ```
+//! use dtans::matrix::{Coo, Csr};
+//! use dtans::spmv::engine::SpmvEngine;
+//! use dtans::spmv::spmv_csr;
+//!
+//! let mut coo = Coo::new(2, 3);
+//! coo.push(0, 2, 4.0);
+//! coo.push(1, 0, -1.0);
+//! let m = Csr::from_coo(&coo);
+//! let x = [1.0, 1.0, 0.5];
+//!
+//! let mut y = vec![0.0; 2];
+//! spmv_csr(&m, &x, &mut y).unwrap(); // serial kernel
+//! let mut y_eng = vec![0.0; 2];
+//! SpmvEngine::auto().spmv_csr(&m, &x, &mut y_eng).unwrap(); // engine
+//! assert_eq!(y, y_eng);
+//! ```
 
 pub mod coo;
 pub mod csr;
 pub mod csr_dtans;
 pub mod dense;
+pub mod engine;
 pub mod sell;
 pub mod verify;
 
@@ -17,6 +44,7 @@ pub use coo::spmv_coo;
 pub use csr::{spmv_csr, spmv_csr_vector};
 pub use csr_dtans::spmv_csr_dtans;
 pub use dense::spmv_dense;
+pub use engine::{ParStrategy, SpmvEngine};
 pub use sell::spmv_sell;
 
 use crate::util::error::{DtansError, Result};

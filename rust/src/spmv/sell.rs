@@ -5,22 +5,54 @@ use crate::matrix::sell::Sell;
 use crate::util::error::Result;
 
 /// `y += A·x` over a SELL matrix (padding contributes 0).
+///
+/// ```
+/// use dtans::matrix::{Coo, Csr, Sell};
+/// use dtans::spmv::{spmv_csr, spmv_sell};
+/// let mut coo = Coo::new(3, 3);
+/// for &(r, c, v) in &[(0, 0, 1.0), (0, 2, 2.0), (2, 1, 3.0)] {
+///     coo.push(r, c, v);
+/// }
+/// let m = Csr::from_coo(&coo);
+/// let sell = Sell::from_csr(&m, 2);
+/// let x = [1.0, 1.0, 1.0];
+/// let (mut y, mut want) = (vec![0.0; 3], vec![0.0; 3]);
+/// spmv_sell(&sell, &x, &mut y).unwrap();
+/// spmv_csr(&m, &x, &mut want).unwrap();
+/// assert_eq!(y, want);
+/// ```
 pub fn spmv_sell(m: &Sell, x: &[f64], y: &mut [f64]) -> Result<()> {
     super::check_dims(m.nrows, m.ncols, x, y)?;
+    spmv_sell_slice_range(m, 0, m.nslices(), x, y)
+}
+
+/// SELL kernel over slices `s0..s1`; `y_seg` spans rows
+/// `s0 * slice_height .. min(s1 * slice_height, nrows)`. The whole-matrix
+/// [`spmv_sell`] is the `0..nslices` case and the parallel engine fans out
+/// disjoint ranges, so both paths share one loop and bit-identical results
+/// hold by construction.
+pub(crate) fn spmv_sell_slice_range(
+    m: &Sell,
+    s0: usize,
+    s1: usize,
+    x: &[f64],
+    y_seg: &mut [f64],
+) -> Result<()> {
     let h = m.slice_height;
-    for s in 0..m.nslices() {
-        let r0 = s * h;
+    let row0 = s0 * h;
+    for s in s0..s1 {
+        let r_base = s * h;
         let width = m.slice_widths[s] as usize;
         let base = m.slice_ptr[s];
         for j in 0..width {
             let col_base = base + j * h;
             for rr in 0..h {
-                let r = r0 + rr;
+                let r = r_base + rr;
                 if r < m.nrows {
                     let idx = col_base + rr;
                     // Padded cells have value 0.0: the FMA is a no-op, as on
                     // the GPU (no branch).
-                    y[r] += m.vals[idx] * x[m.cols[idx] as usize];
+                    y_seg[r - row0] += m.vals[idx] * x[m.cols[idx] as usize];
                 }
             }
         }
@@ -35,6 +67,24 @@ mod tests {
     use crate::spmv::csr::spmv_csr;
     use crate::util::propcheck::assert_close;
     use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn slice_range_blocks_reassemble_bitwise() {
+        let mut rng = Xoshiro256::seeded(5);
+        let m = crate::matrix::gen::structured::powerlaw_rows(90, 5.0, 1.1, &mut rng);
+        let sell = Sell::from_csr(&m, 8);
+        let x: Vec<f64> = (0..90).map(|_| rng.next_f64()).collect();
+        let mut want = vec![0.0; 90];
+        spmv_sell(&sell, &x, &mut want).unwrap();
+        let mut got = vec![0.0; 90];
+        let nsl = sell.nslices();
+        for (s0, s1) in [(0usize, 3usize), (3, 7), (7, nsl)] {
+            let r0 = s0 * 8;
+            let r1 = (s1 * 8).min(90);
+            spmv_sell_slice_range(&sell, s0, s1, &x, &mut got[r0..r1]).unwrap();
+        }
+        assert_eq!(got, want); // bit-identical, not just close
+    }
 
     #[test]
     fn matches_csr_various_slice_heights() {

@@ -1,47 +1,137 @@
 //! Crate-wide error type.
+//!
+//! Implemented by hand on top of `std` (no `thiserror`): the crate builds
+//! fully offline with zero external dependencies.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by the dtans library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum DtansError {
     /// Invalid codec parameters (violating the K^l >= W^o / M^l <= W^f
     /// constraints, or out-of-range fields).
-    #[error("invalid ANS parameters: {0}")]
     InvalidParams(String),
 
     /// Malformed or inconsistent matrix data.
-    #[error("invalid matrix: {0}")]
     InvalidMatrix(String),
 
     /// A decoder detected a corrupt or truncated stream.
-    #[error("corrupt stream: {0}")]
     CorruptStream(String),
 
     /// Container (de)serialization failure.
-    #[error("container format error: {0}")]
     Container(String),
 
     /// Mismatched dimensions in an SpMVM call.
-    #[error("dimension mismatch: {0}")]
     Dimension(String),
 
     /// MatrixMarket parse errors.
-    #[error("matrix market parse error at line {line}: {msg}")]
-    MtxParse { line: usize, msg: String },
+    MtxParse {
+        /// 1-based line number of the offending input line.
+        line: usize,
+        /// What went wrong on that line.
+        msg: String,
+    },
 
     /// IO errors.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// PJRT / XLA runtime errors.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Coordinator/service errors.
-    #[error("service error: {0}")]
     Service(String),
+}
+
+impl DtansError {
+    /// Best-effort duplicate, preserving the variant (the coordinator
+    /// fans one kernel error out to every request of a batch). `Io` is
+    /// rebuilt from its kind + message since `std::io::Error` is not
+    /// `Clone`.
+    pub fn duplicate(&self) -> DtansError {
+        match self {
+            DtansError::InvalidParams(m) => DtansError::InvalidParams(m.clone()),
+            DtansError::InvalidMatrix(m) => DtansError::InvalidMatrix(m.clone()),
+            DtansError::CorruptStream(m) => DtansError::CorruptStream(m.clone()),
+            DtansError::Container(m) => DtansError::Container(m.clone()),
+            DtansError::Dimension(m) => DtansError::Dimension(m.clone()),
+            DtansError::MtxParse { line, msg } => DtansError::MtxParse {
+                line: *line,
+                msg: msg.clone(),
+            },
+            DtansError::Io(e) => DtansError::Io(std::io::Error::new(e.kind(), e.to_string())),
+            DtansError::Runtime(m) => DtansError::Runtime(m.clone()),
+            DtansError::Service(m) => DtansError::Service(m.clone()),
+        }
+    }
+}
+
+impl fmt::Display for DtansError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DtansError::InvalidParams(m) => write!(f, "invalid ANS parameters: {m}"),
+            DtansError::InvalidMatrix(m) => write!(f, "invalid matrix: {m}"),
+            DtansError::CorruptStream(m) => write!(f, "corrupt stream: {m}"),
+            DtansError::Container(m) => write!(f, "container format error: {m}"),
+            DtansError::Dimension(m) => write!(f, "dimension mismatch: {m}"),
+            DtansError::MtxParse { line, msg } => {
+                write!(f, "matrix market parse error at line {line}: {msg}")
+            }
+            DtansError::Io(e) => write!(f, "io error: {e}"),
+            DtansError::Runtime(m) => write!(f, "runtime error: {m}"),
+            DtansError::Service(m) => write!(f, "service error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for DtansError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DtansError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for DtansError {
+    fn from(e: std::io::Error) -> Self {
+        DtansError::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, DtansError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_previous_derive() {
+        assert_eq!(
+            DtansError::InvalidParams("k too small".into()).to_string(),
+            "invalid ANS parameters: k too small"
+        );
+        assert_eq!(
+            DtansError::MtxParse { line: 3, msg: "bad header".into() }.to_string(),
+            "matrix market parse error at line 3: bad header"
+        );
+    }
+
+    #[test]
+    fn duplicate_preserves_variant_and_message() {
+        let e = DtansError::CorruptStream("slice 3".into());
+        let d = e.duplicate();
+        assert!(matches!(d, DtansError::CorruptStream(_)));
+        assert_eq!(d.to_string(), e.to_string());
+        let io: DtansError = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(matches!(io.duplicate(), DtansError::Io(_)));
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: DtansError = io.into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

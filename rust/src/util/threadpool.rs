@@ -1,26 +1,83 @@
 //! A small fixed-size thread pool with a shared work queue.
 //!
-//! Used by the coordinator's worker pool and by the evaluation harness to
-//! parallelize over corpus matrices (tokio/rayon are not available offline).
+//! Used by the SpMV engine ([`crate::spmv::engine`]), the coordinator's
+//! worker pool and the evaluation harness to parallelize over corpus
+//! matrices (tokio/rayon are not available offline).
+//!
+//! Two submission APIs exist:
+//!
+//! * [`ThreadPool::execute`] / [`ThreadPool::par_map`] take `'static` jobs
+//!   (owned data only) — the classic fire-and-forget queue.
+//! * [`ThreadPool::scope_run`] takes *borrowing* jobs and blocks until all
+//!   of them have finished, so jobs may capture `&`/`&mut` references to
+//!   the caller's stack (the same contract as `std::thread::scope`, but on
+//!   pooled threads with no per-call spawn cost). This is what lets the
+//!   SpMV engine hand each worker a disjoint `&mut` slice of the output
+//!   vector without copying.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Unique id per pool, so a worker can recognize its own pool (0 = not a
+/// pool worker). Used by [`ThreadPool::scope_run`] to detect reentrancy.
+static NEXT_POOL_ID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static CURRENT_POOL: Cell<u64> = const { Cell::new(0) };
+}
+
+/// A borrowing job for [`ThreadPool::scope_run`]: may capture non-`'static`
+/// references; guaranteed to have finished when `scope_run` returns.
+pub type ScopedJob<'env> = Box<dyn FnOnce() + Send + 'env>;
+
 /// Fixed-size thread pool; jobs are `FnOnce()` closures.
+///
+/// `&ThreadPool` can be shared across threads (`ThreadPool: Sync`, via
+/// `mpsc::Sender: Sync` on Rust >= 1.72) — the coordinator's workers all
+/// submit through one shared engine pool.
 pub struct ThreadPool {
+    id: u64,
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
     pending: Arc<AtomicUsize>,
+}
+
+/// Completion latch for one `scope_run` call: counts jobs down and records
+/// whether any of them panicked.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+/// Decrements the latch when a scoped job finishes — including by panic
+/// (`Drop` runs during unwinding), so `scope_run` can never deadlock on a
+/// panicking job.
+struct LatchGuard(Arc<Latch>);
+
+impl Drop for LatchGuard {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.panicked.store(true, Ordering::SeqCst);
+        }
+        let mut remaining = self.0.remaining.lock().unwrap();
+        *remaining -= 1;
+        if *remaining == 0 {
+            self.0.done.notify_all();
+        }
+    }
 }
 
 impl ThreadPool {
     /// Spawn `n` worker threads (at least 1).
     pub fn new(n: usize) -> Self {
         let n = n.max(1);
+        let id = NEXT_POOL_ID.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let pending = Arc::new(AtomicUsize::new(0));
@@ -28,26 +85,44 @@ impl ThreadPool {
             .map(|_| {
                 let rx = Arc::clone(&rx);
                 let pending = Arc::clone(&pending);
-                std::thread::spawn(move || loop {
-                    let job = {
-                        let guard = rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    match job {
-                        Ok(job) => {
-                            job();
-                            pending.fetch_sub(1, Ordering::SeqCst);
+                std::thread::spawn(move || {
+                    CURRENT_POOL.with(|c| c.set(id));
+                    loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                // Contain panicking jobs: the worker
+                                // survives and the pending counter stays
+                                // exact, so `wait_idle`/`par_map` cannot
+                                // hang afterwards. `scope_run` re-raises
+                                // via its latch; a bare `execute` panic
+                                // surfaces through `par_map`'s
+                                // missing-result check instead.
+                                let _ = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job),
+                                );
+                                pending.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break,
                         }
-                        Err(_) => break,
                     }
                 })
             })
             .collect();
         ThreadPool {
+            id,
             tx: Some(tx),
             workers,
             pending,
         }
+    }
+
+    /// Number of worker threads in this pool.
+    pub fn size(&self) -> usize {
+        self.workers.len()
     }
 
     /// Number of logical CPUs (fallback 4).
@@ -55,7 +130,8 @@ impl ThreadPool {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
     }
 
-    /// Submit a job.
+    /// Submit a job. A panicking job is contained in its worker (see
+    /// [`ThreadPool::scope_run`] for the variant that re-raises).
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
         self.pending.fetch_add(1, Ordering::SeqCst);
         self.tx.as_ref().unwrap().send(Box::new(job)).unwrap();
@@ -66,6 +142,57 @@ impl ThreadPool {
         while self.pending.load(Ordering::SeqCst) != 0 {
             std::thread::yield_now();
         }
+    }
+
+    /// Run borrowed jobs to completion on the pool (a scoped fan-out).
+    ///
+    /// Blocks until every job has finished; only then do the `'env` borrows
+    /// captured by the jobs go out of use, which is what makes the internal
+    /// lifetime extension sound. Panics (after all jobs have settled) if
+    /// any job panicked.
+    ///
+    /// Multiple threads may call `scope_run` on one shared pool
+    /// concurrently; each call waits only for its own jobs. A *reentrant*
+    /// call — from a job already running on this same pool — executes its
+    /// jobs inline on the calling worker instead (queueing them would
+    /// deadlock behind the blocked caller on a saturated pool).
+    pub fn scope_run<'env>(&self, jobs: Vec<ScopedJob<'env>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        if CURRENT_POOL.with(|c| c.get()) == self.id {
+            for job in jobs {
+                job();
+            }
+            return;
+        }
+        let latch = Arc::new(Latch {
+            remaining: Mutex::new(jobs.len()),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        for job in jobs {
+            // SAFETY: the loop below blocks until the latch reports every
+            // job has finished executing (the guard decrements on normal
+            // completion AND on panic), so no job — and therefore no `'env`
+            // borrow it captured — outlives this call. The pool itself
+            // cannot be dropped mid-call because `&self` is borrowed.
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(job) };
+            let latch = Arc::clone(&latch);
+            self.execute(move || {
+                let _guard = LatchGuard(latch);
+                job();
+            });
+        }
+        let mut remaining = latch.remaining.lock().unwrap();
+        while *remaining != 0 {
+            remaining = latch.done.wait(remaining).unwrap();
+        }
+        drop(remaining);
+        assert!(
+            !latch.panicked.load(Ordering::SeqCst),
+            "a scoped thread-pool job panicked"
+        );
     }
 
     /// Parallel map over an indexed range, preserving order.
@@ -129,5 +256,100 @@ mod tests {
         }
         pool.wait_idle();
         assert_eq!(ctr.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn scope_run_borrows_stack_data() {
+        let pool = ThreadPool::new(4);
+        let mut out = vec![0usize; 64];
+        let input: Vec<usize> = (0..64).collect();
+        {
+            let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+            let mut tail: &mut [usize] = &mut out;
+            let mut chunk_start = 0usize;
+            while !tail.is_empty() {
+                let take = tail.len().min(10);
+                let (seg, rest) = tail.split_at_mut(take);
+                tail = rest;
+                let src = &input[chunk_start..chunk_start + take];
+                jobs.push(Box::new(move || {
+                    for (o, &i) in seg.iter_mut().zip(src) {
+                        *o = i * 3;
+                    }
+                }));
+                chunk_start += take;
+            }
+            pool.scope_run(jobs);
+        }
+        assert_eq!(out, (0..64).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_run_reentrant_from_own_worker_runs_inline() {
+        // A job on a 1-worker pool calling scope_run on that same pool
+        // must complete (inline) rather than deadlock behind itself.
+        let pool = Arc::new(ThreadPool::new(1));
+        let (tx, rx) = mpsc::channel();
+        let p2 = Arc::clone(&pool);
+        pool.execute(move || {
+            let mut vals = [0u32; 4];
+            let jobs: Vec<ScopedJob<'_>> = vals
+                .iter_mut()
+                .enumerate()
+                .map(|(i, v)| Box::new(move || *v = i as u32 + 1) as ScopedJob<'_>)
+                .collect();
+            p2.scope_run(jobs);
+            tx.send(vals).unwrap();
+        });
+        let got = rx
+            .recv_timeout(std::time::Duration::from_secs(30))
+            .expect("reentrant scope_run deadlocked");
+        assert_eq!(got, [1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn scope_run_panicking_job_reraises_and_pool_survives() {
+        let pool = ThreadPool::new(1);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scope_run(vec![Box::new(|| panic!("boom")) as ScopedJob<'_>]);
+        }));
+        assert!(caught.is_err(), "scope_run must re-raise job panics");
+        // The single worker must still be alive and the counter exact.
+        let mut out = [0u8; 1];
+        pool.scope_run(vec![Box::new(|| out[0] = 7) as ScopedJob<'_>]);
+        assert_eq!(out[0], 7);
+        pool.wait_idle(); // must not hang
+    }
+
+    #[test]
+    fn scope_run_empty_is_noop() {
+        let pool = ThreadPool::new(1);
+        pool.scope_run(Vec::new());
+    }
+
+    #[test]
+    fn scope_run_concurrent_callers() {
+        let pool = Arc::new(ThreadPool::new(4));
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let pool = Arc::clone(&pool);
+                std::thread::spawn(move || {
+                    let mut acc = vec![0u64; 8];
+                    let jobs: Vec<ScopedJob<'_>> = acc
+                        .iter_mut()
+                        .enumerate()
+                        .map(|(i, slot)| {
+                            Box::new(move || *slot = (t * 100 + i) as u64) as ScopedJob<'_>
+                        })
+                        .collect();
+                    pool.scope_run(jobs);
+                    acc
+                })
+            })
+            .collect();
+        for (t, h) in handles.into_iter().enumerate() {
+            let acc = h.join().unwrap();
+            assert_eq!(acc, (0..8).map(|i| (t * 100 + i) as u64).collect::<Vec<_>>());
+        }
     }
 }

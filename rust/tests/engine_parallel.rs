@@ -1,0 +1,256 @@
+//! Property tests (custom propcheck harness) for the parallel SpMV
+//! engine, pinning its central contract: for every partition count in
+//! 1..=16 and every supported format, the parallel engine's output is
+//! **bit-identical** to the serial kernel's — not merely numerically
+//! close. This holds because the nnz-balanced partitioner assigns every
+//! row (or 32-row slice) to exactly one contiguous block, and each block
+//! runs the serial kernel's arithmetic unchanged.
+//!
+//! Also pinned: the partitioner's structural invariants (coverage,
+//! disjointness, cost conservation, balance bound) over arbitrary cost
+//! prefixes.
+
+use dtans::format::csr_dtans::{CsrDtans, EncodeOptions};
+use dtans::matrix::coo::Coo;
+use dtans::matrix::csr::Csr;
+use dtans::matrix::gen::structured::{banded, powerlaw_rows, stencil2d5};
+use dtans::matrix::gen::{assign_values, gen_graph_csr, GraphModel, ValueDist};
+use dtans::matrix::Sell;
+use dtans::spmv::engine::{partition_prefix, ParStrategy, SpmvEngine};
+use dtans::spmv::{spmv_csr, spmv_csr_dtans, spmv_sell};
+use dtans::util::propcheck::{check, Ctx};
+use dtans::util::rng::Xoshiro256;
+
+/// Random sparse matrix mixing graph and structured families, with value
+/// palettes that exercise both the dictionary and escape paths.
+fn random_csr(ctx: &mut Ctx) -> Csr {
+    let n = 1 + ctx.rng.below_usize(ctx.size.max(1));
+    let mut m = match ctx.rng.below(4) {
+        0 => gen_graph_csr(GraphModel::ErdosRenyi, n.max(4), 4.0, &mut ctx.rng),
+        1 => powerlaw_rows(n.max(4), 5.0, 1.1, &mut ctx.rng),
+        2 => banded(n.max(2), 1 + ctx.rng.below_usize(4)),
+        _ => {
+            let side = 2 + ctx.rng.below_usize((n as f64).sqrt() as usize + 2);
+            stencil2d5(side, side)
+        }
+    };
+    let dist = match ctx.rng.below(3) {
+        0 => ValueDist::FewDistinct(6),
+        1 => ValueDist::Gaussian,
+        _ => ValueDist::Quantized(64),
+    };
+    assign_values(&mut m, dist, &mut ctx.rng);
+    m
+}
+
+fn random_x(ctx: &mut Ctx, n: usize) -> Vec<f64> {
+    (0..n).map(|_| ctx.rng.next_f64() - 0.5).collect()
+}
+
+#[test]
+fn prop_partition_invariants() {
+    check("partition-invariants", 80, 200, |ctx: &mut Ctx| {
+        // Random unit costs, frequently zero (empty rows) and occasionally
+        // huge (pathological skew).
+        let units = ctx.rng.below_usize(ctx.size + 1);
+        let mut prefix = Vec::with_capacity(units + 1);
+        prefix.push(0usize);
+        for _ in 0..units {
+            let cost = match ctx.rng.below(4) {
+                0 => 0,
+                1 => ctx.rng.below_usize(4),
+                2 => ctx.rng.below_usize(100),
+                _ => ctx.rng.below_usize(10_000),
+            };
+            let last = *prefix.last().unwrap();
+            prefix.push(last + cost);
+        }
+        let total = *prefix.last().unwrap();
+        let max_unit = prefix.windows(2).map(|w| w[1] - w[0]).max().unwrap_or(0);
+        for parts in 1..=16 {
+            let blocks = partition_prefix(&prefix, parts);
+            if units == 0 {
+                if !blocks.is_empty() {
+                    return Err("blocks for zero units".into());
+                }
+                continue;
+            }
+            let eff = parts.min(units);
+            if blocks.is_empty() || blocks.len() > eff {
+                return Err(format!("bad block count {} (parts {parts})", blocks.len()));
+            }
+            if blocks[0].start != 0 || blocks.last().unwrap().end != units {
+                return Err("blocks do not cover all units".into());
+            }
+            let mut expect_start = 0;
+            let mut cost_sum = 0;
+            for b in &blocks {
+                if b.start != expect_start {
+                    return Err(format!("gap/overlap at block {b:?}"));
+                }
+                if b.end <= b.start {
+                    return Err(format!("empty block {b:?}"));
+                }
+                if b.cost != prefix[b.end] - prefix[b.start] {
+                    return Err(format!("wrong cost in {b:?}"));
+                }
+                if b.cost > total.div_ceil(eff) + max_unit {
+                    return Err(format!(
+                        "unbalanced block {b:?}: cost {} > {}/{} + {max_unit}",
+                        b.cost, total, eff
+                    ));
+                }
+                expect_start = b.end;
+                cost_sum += b.cost;
+            }
+            if cost_sum != total {
+                return Err("block costs do not sum to total".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engine_csr_bit_identical_across_partition_counts() {
+    check("engine-csr-bitident", 20, 150, |ctx: &mut Ctx| {
+        let m = random_csr(ctx);
+        let x = random_x(ctx, m.ncols);
+        // Nonzero initial y exercises the += contract.
+        let y0: Vec<f64> = (0..m.nrows).map(|i| (i as f64) * 0.125).collect();
+        let mut want = y0.clone();
+        spmv_csr(&m, &x, &mut want).map_err(|e| e.to_string())?;
+        for parts in 1..=16 {
+            let engine = SpmvEngine::new(ParStrategy::Fixed(parts));
+            let mut got = y0.clone();
+            engine.spmv_csr(&m, &x, &mut got).map_err(|e| e.to_string())?;
+            if got != want {
+                return Err(format!("CSR mismatch at parts={parts}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engine_dtans_bit_identical_across_partition_counts() {
+    check("engine-dtans-bitident", 12, 150, |ctx: &mut Ctx| {
+        let m = random_csr(ctx);
+        let opts = if ctx.rng.chance(0.5) {
+            EncodeOptions::default()
+        } else {
+            EncodeOptions {
+                params: dtans::ans::AnsParams::KERNEL,
+                ..Default::default()
+            }
+        };
+        let enc = CsrDtans::encode(&m, &opts).map_err(|e| e.to_string())?;
+        let x = random_x(ctx, m.ncols);
+        let y0: Vec<f64> = (0..m.nrows).map(|i| (i as f64) * -0.25).collect();
+        let mut want = y0.clone();
+        spmv_csr_dtans(&enc, &x, &mut want).map_err(|e| e.to_string())?;
+        for parts in 1..=16 {
+            let engine = SpmvEngine::new(ParStrategy::Fixed(parts));
+            let mut got = y0.clone();
+            engine
+                .spmv_csr_dtans(&enc, &x, &mut got)
+                .map_err(|e| e.to_string())?;
+            if got != want {
+                return Err(format!("CSR-dtANS mismatch at parts={parts}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engine_sell_bit_identical() {
+    check("engine-sell-bitident", 12, 120, |ctx: &mut Ctx| {
+        let m = random_csr(ctx);
+        let sell = Sell::from_csr(&m, 32);
+        let x = random_x(ctx, m.ncols);
+        let mut want = vec![0.0; m.nrows];
+        spmv_sell(&sell, &x, &mut want).map_err(|e| e.to_string())?;
+        for parts in [1usize, 2, 5, 16] {
+            let engine = SpmvEngine::new(ParStrategy::Fixed(parts));
+            let mut got = vec![0.0; m.nrows];
+            engine.spmv_sell(&sell, &x, &mut got).map_err(|e| e.to_string())?;
+            if got != want {
+                return Err(format!("SELL mismatch at parts={parts}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spmm_bit_identical_to_repeated_spmv() {
+    check("engine-spmm-bitident", 12, 100, |ctx: &mut Ctx| {
+        let m = random_csr(ctx);
+        let enc = CsrDtans::encode(&m, &EncodeOptions::default()).map_err(|e| e.to_string())?;
+        let k = 1 + ctx.rng.below_usize(6);
+        let xs: Vec<Vec<f64>> = (0..k).map(|_| random_x(ctx, m.ncols)).collect();
+        let parts = 1 + ctx.rng.below_usize(16);
+        let engine = SpmvEngine::new(ParStrategy::Fixed(parts));
+
+        let ys = engine.spmm_csr(&m, &xs).map_err(|e| e.to_string())?;
+        let yd = engine.spmm_csr_dtans(&enc, &xs).map_err(|e| e.to_string())?;
+        for (j, x) in xs.iter().enumerate() {
+            let mut want = vec![0.0; m.nrows];
+            spmv_csr(&m, x, &mut want).map_err(|e| e.to_string())?;
+            if ys[j] != want {
+                return Err(format!("spmm_csr rhs {j} mismatch (parts {parts})"));
+            }
+            let mut want_d = vec![0.0; m.nrows];
+            spmv_csr_dtans(&enc, x, &mut want_d).map_err(|e| e.to_string())?;
+            if yd[j] != want_d {
+                return Err(format!("spmm_csr_dtans rhs {j} mismatch (parts {parts})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn engine_handles_empty_rows_and_tail_slices() {
+    // Deterministic edge cases: empty matrix, single nonzero in the last
+    // slice, all-empty rows — across several partition counts.
+    let mut cases: Vec<Csr> = vec![Csr::new(40, 40), Csr::new(0, 0)];
+    let mut coo = Coo::new(65, 65);
+    coo.push(64, 64, 2.0);
+    cases.push(Csr::from_coo(&coo));
+    for m in &cases {
+        let enc = CsrDtans::encode(m, &EncodeOptions::default()).unwrap();
+        let x = vec![1.0; m.ncols];
+        let mut want = vec![0.5; m.nrows];
+        spmv_csr_dtans(&enc, &x, &mut want).unwrap();
+        for parts in [1usize, 3, 16] {
+            let engine = SpmvEngine::new(ParStrategy::Fixed(parts));
+            let mut got = vec![0.5; m.nrows];
+            engine.spmv_csr_dtans(&enc, &x, &mut got).unwrap();
+            assert_eq!(got, want);
+            let mut got_csr = vec![0.5; m.nrows];
+            engine.spmv_csr(m, &x, &mut got_csr).unwrap();
+            let mut want_csr = vec![0.5; m.nrows];
+            spmv_csr(m, &x, &mut want_csr).unwrap();
+            assert_eq!(got_csr, want_csr);
+        }
+    }
+}
+
+#[test]
+fn engine_big_matrix_parallel_speedpath_is_exact() {
+    // A matrix comfortably above the Auto threshold: the parallel path
+    // actually engages and must still be bit-identical.
+    let mut rng = Xoshiro256::seeded(42);
+    let mut m = banded(30_000, 3);
+    assign_values(&mut m, ValueDist::FewDistinct(12), &mut rng);
+    let enc = CsrDtans::encode(&m, &EncodeOptions::default()).unwrap();
+    let x: Vec<f64> = (0..m.ncols).map(|_| rng.next_f64() - 0.5).collect();
+    let mut want = vec![0.0; m.nrows];
+    spmv_csr_dtans(&enc, &x, &mut want).unwrap();
+    let engine = SpmvEngine::auto();
+    let mut got = vec![0.0; m.nrows];
+    engine.spmv_csr_dtans(&enc, &x, &mut got).unwrap();
+    assert_eq!(got, want);
+}
