@@ -17,16 +17,28 @@ use dtans::matrix::gen::structured::banded;
 use dtans::matrix::gen::{assign_values, gen_graph_csr, GraphModel, ValueDist};
 use dtans::matrix::Precision;
 use dtans::runtime::Runtime;
+use dtans::store::StoreConfig;
 use dtans::util::rng::Xoshiro256;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     // --- 1. Start the service and register a small model zoo. ---
+    // The tiered store persists every encoding to a content-addressed
+    // artifact cache and caps resident bytes: cold matrices fault back in
+    // from disk on demand, and re-running this example skips re-encoding
+    // (watch store_hits in the metrics line).
+    let cache_dir = std::env::temp_dir().join("dtans_example_store");
     let svc = SpmvService::start(ServiceConfig {
         workers: 4,
         max_batch: 16,
         policy: RoutePolicy {
             min_nnz: 1 << 14,
             max_size_ratio: 0.95,
+        },
+        store: StoreConfig {
+            cache_dir: Some(cache_dir.clone()),
+            budget_bytes: Some(8 << 20), // 8 MiB resident cap
+            drop_csr: true,
+            loader_threads: 2,
         },
         ..Default::default()
     });
@@ -65,6 +77,25 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let dt = t0.elapsed().as_secs_f64();
     println!("served 120 requests in {:.2}s ({:.0} req/s)", dt, 120.0 / dt);
     println!("metrics: {}", svc.metrics.report());
+    let stats = svc.store().stats();
+    println!(
+        "store: {} registered, {} resident ({} bytes of {:?} budget) in {}",
+        stats.registered,
+        stats.resident,
+        stats.resident_bytes,
+        stats.budget_bytes,
+        cache_dir.display()
+    );
+
+    // Re-registering a known matrix hits the artifact cache: no encode.
+    svc.store().flush(); // make sure the background persists landed
+    let hits_before = svc.metrics.store_hits.load(std::sync::atomic::Ordering::Relaxed);
+    svc.register("banded-60k-again", big.clone())?;
+    let hits_after = svc.metrics.store_hits.load(std::sync::atomic::Ordering::Relaxed);
+    println!(
+        "re-registration: artifact cache {} (hits {hits_before} -> {hits_after})",
+        if hits_after > hits_before { "HIT, encode skipped" } else { "miss" }
+    );
 
     // --- 3. PJRT path: the AOT-compiled Pallas kernel, if artifacts exist. ---
     match Runtime::open(&Runtime::default_dir()) {

@@ -6,6 +6,9 @@
 //!  * engine benches: serial-vs-parallel scaling of the nnz-balanced
 //!    engine (`engine_scaling`) and the batched multi-RHS entry point
 //!    (`engine_batched`);
+//!  * store benches: artifact-cache registration vs re-encode and
+//!    warm-vs-cold SpMV under eviction (`store_coldstart`), with a
+//!    machine-readable trajectory report at `results/BENCH_store.json`;
 //!  * one end-to-end bench per paper table/figure (regenerating them at
 //!    bench scale): fig4, fig6+tab1, fig7/tab2, fig8/tab3, fig9, ablate.
 //!
@@ -257,6 +260,136 @@ fn bench_engine_batched(filter: &Option<String>, quick: bool) {
     }
 }
 
+/// Tiered-store cold-start bench: (1) register-from-artifact vs
+/// re-encode, (2) warm SpMV vs evicted-then-faulted SpMV. Emits a
+/// machine-readable `results/BENCH_store.json` so future PRs have a perf
+/// trajectory to compare against.
+fn bench_store_coldstart(filter: &Option<String>, quick: bool) {
+    use dtans::coordinator::metrics::Metrics;
+    use dtans::coordinator::RoutePolicy;
+    use dtans::store::{MatrixStore, StoreConfig};
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+
+    if !should_run(filter, "store_coldstart") {
+        return;
+    }
+    let n = if quick { 1 << 13 } else { 1 << 16 };
+    let nmats = 8usize;
+    let dir = std::env::temp_dir().join(format!("dtans_bench_store_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mats: Vec<Csr> = (0..nmats)
+        .map(|i| {
+            let mut m = banded(n + (i << 8), 3);
+            let mut rng = Xoshiro256::seeded(40 + i as u64);
+            assign_values(&mut m, ValueDist::FewDistinct(12), &mut rng);
+            m
+        })
+        .collect();
+    let policy = RoutePolicy { min_nnz: 1 << 10, max_size_ratio: 0.98 };
+    let mk_store = |budget: Option<u64>| {
+        MatrixStore::new(
+            StoreConfig {
+                cache_dir: Some(dir.clone()),
+                budget_bytes: budget,
+                drop_csr: true,
+                loader_threads: 2,
+            },
+            EncodeOptions::default(),
+            policy,
+            Arc::new(Metrics::default()),
+        )
+        .unwrap()
+    };
+
+    // --- Registration: encode-and-persist vs artifact hit. ---
+    let store = mk_store(None);
+    let st_encode = bench(0, 1, 0.0, || {
+        for (i, m) in mats.iter().enumerate() {
+            store.register_csr(&format!("m{i}"), m.clone()).unwrap();
+        }
+    });
+    store.flush(); // artifacts all persisted
+    assert_eq!(store.metrics().store_misses.load(Ordering::Relaxed), nmats as u64);
+    drop(store);
+    let store = mk_store(None);
+    let st_hit = bench(0, 1, 0.0, || {
+        for (i, m) in mats.iter().enumerate() {
+            store.register_csr(&format!("m{i}"), m.clone()).unwrap();
+        }
+    });
+    assert_eq!(store.metrics().store_hits.load(Ordering::Relaxed), nmats as u64);
+    println!(
+        "store_coldstart/register     encode {} vs artifact-hit {} ({:.2}x faster)",
+        st_encode.display(),
+        st_hit.display(),
+        st_encode.median / st_hit.median
+    );
+    drop(store);
+
+    // --- Serving: warm SpMV vs evicted-then-faulted SpMV. ---
+    let store = mk_store(None);
+    let engine = SpmvEngine::serial();
+    let ids: Vec<u64> = mats
+        .iter()
+        .enumerate()
+        .map(|(i, m)| store.register_csr(&format!("m{i}"), m.clone()).unwrap())
+        .collect();
+    store.flush();
+    let x: Vec<f64> = (0..mats[0].ncols).map(|j| (j as f64 * 0.01).sin()).collect();
+    let mut y = vec![0.0; mats[0].nrows];
+    fn acquire_and_spmv(
+        store: &MatrixStore,
+        engine: &SpmvEngine,
+        id: u64,
+        x: &[f64],
+        y: &mut [f64],
+    ) {
+        let p = store.acquire(id).unwrap();
+        y.iter_mut().for_each(|v| *v = 0.0);
+        engine.spmv_csr_dtans_with_plan(&p.enc, &p.plan, x, y).unwrap();
+    }
+    let st_warm = bench(1, 5, 0.2, || {
+        acquire_and_spmv(&store, &engine, ids[0], &x, &mut y)
+    });
+    let st_cold = bench(1, 5, 0.2, || {
+        assert!(store.evict(ids[0]), "evict must succeed between runs");
+        acquire_and_spmv(&store, &engine, ids[0], &x, &mut y)
+    });
+    let m = store.metrics();
+    println!(
+        "store_coldstart/spmv         warm {} vs evicted+faulted {} (fault adds {:.1}%; cold_loads={})",
+        st_warm.display(),
+        st_cold.display(),
+        (st_cold.median / st_warm.median - 1.0) * 100.0,
+        m.cold_loads.load(Ordering::Relaxed)
+    );
+
+    // --- Machine-readable trajectory report. ---
+    let outdir = Path::new("results");
+    let _ = std::fs::create_dir_all(outdir);
+    let json = format!(
+        "{{\n  \"bench\": \"store_coldstart\",\n  \"quick\": {},\n  \"matrices\": {},\n  \"nnz_each_approx\": {},\n  \"register_encode_s\": {:.6},\n  \"register_artifact_hit_s\": {:.6},\n  \"register_speedup\": {:.3},\n  \"spmv_warm_s\": {:.6},\n  \"spmv_evicted_faulted_s\": {:.6},\n  \"cold_fault_overhead_pct\": {:.2},\n  \"evictions\": {},\n  \"cold_loads\": {},\n  \"cold_load_p50_us\": {},\n  \"cold_load_p99_us\": {}\n}}\n",
+        quick,
+        nmats,
+        mats[0].nnz(),
+        st_encode.median,
+        st_hit.median,
+        st_encode.median / st_hit.median,
+        st_warm.median,
+        st_cold.median,
+        (st_cold.median / st_warm.median - 1.0) * 100.0,
+        m.evictions.load(Ordering::Relaxed),
+        m.cold_loads.load(Ordering::Relaxed),
+        m.cold_load_summary().p50_us,
+        m.cold_load_summary().p99_us,
+    );
+    let path = outdir.join("BENCH_store.json");
+    std::fs::write(&path, json).expect("write BENCH_store.json");
+    println!("store_coldstart/report       wrote {}", path.display());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 fn bench_experiments(filter: &Option<String>, quick: bool) {
     let scale = if quick {
         CorpusScale { max_nnz: 1 << 16, steps: 4 }
@@ -317,6 +450,7 @@ fn main() {
     bench_tans_vs_dtans(&filter);
     bench_engine_scaling(&filter, quick);
     bench_engine_batched(&filter, quick);
+    bench_store_coldstart(&filter, quick);
     bench_large_banded(&filter, quick);
     bench_experiments(&filter, quick);
     println!("done.");

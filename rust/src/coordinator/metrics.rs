@@ -1,9 +1,36 @@
-//! Service metrics: request counters and latency quantiles.
+//! Service metrics: request counters, store counters, and latency
+//! quantiles over fixed-size sliding-window reservoirs.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-/// Lock-free counters + a mutexed latency reservoir.
+/// Samples retained per reservoir.
+const RESERVOIR_CAP: usize = 65536;
+
+/// Fixed-size ring of the most recent [`RESERVOIR_CAP`] samples. Unlike
+/// the old grow-then-drain reservoir (which discarded the oldest 32k
+/// samples *wholesale* at 64k, so quantiles right after a drain were
+/// computed over a recent-burst-only window), the ring retires exactly
+/// one oldest sample per new sample — the window slides, it never jumps.
+#[derive(Debug, Default)]
+struct Ring {
+    buf: Vec<u64>,
+    /// Oldest slot, once the ring is full.
+    next: usize,
+}
+
+impl Ring {
+    fn push(&mut self, v: u64) {
+        if self.buf.len() < RESERVOIR_CAP {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next] = v;
+            self.next = (self.next + 1) % RESERVOIR_CAP;
+        }
+    }
+}
+
+/// Lock-free counters + mutexed latency reservoirs.
 #[derive(Debug, Default)]
 pub struct Metrics {
     /// Requests accepted.
@@ -14,10 +41,23 @@ pub struct Metrics {
     pub failed: AtomicU64,
     /// Batches executed.
     pub batches: AtomicU64,
-    latencies_us: Mutex<Vec<u64>>,
+    /// Registrations served from the on-disk artifact cache (encode
+    /// skipped).
+    pub store_hits: AtomicU64,
+    /// Registrations that had to encode.
+    pub store_misses: AtomicU64,
+    /// Matrices evicted from residency by the byte budget.
+    pub evictions: AtomicU64,
+    /// Background artifact persists that failed (the matrix stays
+    /// resident and unevictable — the budget cannot be enforced for it).
+    pub persist_failures: AtomicU64,
+    /// Cold loads (evicted matrices faulted back in from disk).
+    pub cold_loads: AtomicU64,
+    latencies_us: Mutex<Ring>,
+    cold_load_us: Mutex<Ring>,
 }
 
-/// Quantile summary of request latencies.
+/// Quantile summary of a latency reservoir.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct LatencySummary {
     /// Number of samples.
@@ -30,21 +70,9 @@ pub struct LatencySummary {
     pub max_us: u64,
 }
 
-impl Metrics {
-    /// Record one completed request's latency.
-    pub fn record_latency(&self, micros: u64) {
-        self.completed.fetch_add(1, Ordering::Relaxed);
-        let mut l = self.latencies_us.lock().unwrap();
-        // Bounded reservoir: keep the most recent 64k samples.
-        if l.len() >= 65536 {
-            l.drain(..32768);
-        }
-        l.push(micros);
-    }
-
-    /// Quantile summary over the recorded reservoir.
-    pub fn latency_summary(&self) -> LatencySummary {
-        let mut l = self.latencies_us.lock().unwrap().clone();
+impl LatencySummary {
+    /// Summarize raw samples (sorts in place).
+    fn from_samples(mut l: Vec<u64>) -> LatencySummary {
         if l.is_empty() {
             return LatencySummary::default();
         }
@@ -57,19 +85,53 @@ impl Metrics {
             max_us: *l.last().unwrap(),
         }
     }
+}
+
+impl Metrics {
+    /// Record one completed request's latency.
+    pub fn record_latency(&self, micros: u64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latencies_us.lock().unwrap().push(micros);
+    }
+
+    /// Record one cold load (store fault-in) latency.
+    pub fn record_cold_load(&self, micros: u64) {
+        self.cold_loads.fetch_add(1, Ordering::Relaxed);
+        self.cold_load_us.lock().unwrap().push(micros);
+    }
+
+    /// Quantile summary over the request-latency window.
+    pub fn latency_summary(&self) -> LatencySummary {
+        LatencySummary::from_samples(self.latencies_us.lock().unwrap().buf.clone())
+    }
+
+    /// Quantile summary over the cold-load-latency window.
+    pub fn cold_load_summary(&self) -> LatencySummary {
+        LatencySummary::from_samples(self.cold_load_us.lock().unwrap().buf.clone())
+    }
 
     /// One-line human-readable report.
     pub fn report(&self) -> String {
         let s = self.latency_summary();
+        let c = self.cold_load_summary();
         format!(
-            "submitted={} completed={} failed={} batches={} p50={}µs p99={}µs max={}µs",
+            "submitted={} completed={} failed={} batches={} p50={}µs p99={}µs max={}µs \
+             store_hits={} store_misses={} evictions={} persist_failures={} cold_loads={} \
+             cold_p50={}µs cold_p99={}µs",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             s.p50_us,
             s.p99_us,
-            s.max_us
+            s.max_us,
+            self.store_hits.load(Ordering::Relaxed),
+            self.store_misses.load(Ordering::Relaxed),
+            self.evictions.load(Ordering::Relaxed),
+            self.persist_failures.load(Ordering::Relaxed),
+            self.cold_loads.load(Ordering::Relaxed),
+            c.p50_us,
+            c.p99_us,
         )
     }
 }
@@ -96,5 +158,43 @@ mod tests {
         let m = Metrics::default();
         assert_eq!(m.latency_summary().count, 0);
         assert!(m.report().contains("submitted=0"));
+    }
+
+    #[test]
+    fn ring_slides_one_sample_at_a_time() {
+        let m = Metrics::default();
+        let n = RESERVOIR_CAP + 1000;
+        for i in 0..n {
+            m.record_latency(i as u64);
+        }
+        let s = m.latency_summary();
+        assert_eq!(s.count, RESERVOIR_CAP);
+        // Window is exactly the most recent CAP samples: [1000, n).
+        assert_eq!(s.max_us, (n - 1) as u64);
+        assert!(s.p50_us >= 1000);
+        // The median sits mid-window — the old drain-half behavior would
+        // have put it deep in the recent half right after a drain.
+        let mid = 1000 + RESERVOIR_CAP as u64 / 2;
+        assert!(
+            (s.p50_us as i64 - mid as i64).abs() <= 1,
+            "p50 {} not centered on {mid}",
+            s.p50_us
+        );
+        assert_eq!(m.completed.load(Ordering::Relaxed), n as u64);
+    }
+
+    #[test]
+    fn cold_load_reservoir_is_independent() {
+        let m = Metrics::default();
+        m.record_latency(10);
+        m.record_cold_load(5000);
+        m.record_cold_load(7000);
+        assert_eq!(m.latency_summary().count, 1);
+        let c = m.cold_load_summary();
+        assert_eq!(c.count, 2);
+        assert_eq!(c.max_us, 7000);
+        assert_eq!(m.cold_loads.load(Ordering::Relaxed), 2);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+        assert!(m.report().contains("cold_loads=2"));
     }
 }

@@ -1,7 +1,8 @@
 //! Layer-3 coordinator: a batching SpMVM service with per-matrix format
 //! routing (the production wrapper around the paper's kernel — encode
 //! once, decode on every multiply, as in the iterative-solver and
-//! ML-inference scenarios the paper motivates).
+//! ML-inference scenarios the paper motivates). Matrix lifetime and
+//! residency live one layer down in the tiered store ([`crate::store`]).
 
 pub mod metrics;
 pub mod router;
@@ -9,4 +10,4 @@ pub mod service;
 
 pub use metrics::{LatencySummary, Metrics};
 pub use router::{FormatChoice, RoutePolicy};
-pub use service::{Pending, ServiceConfig, SpmvService};
+pub use service::{LoadedMatrix, Pending, ServiceConfig, SpmvService};

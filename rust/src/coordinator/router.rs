@@ -58,6 +58,29 @@ impl RoutePolicy {
             FormatChoice::Csr
         }
     }
+
+    /// Decide the format from the encoding alone — for matrices registered
+    /// straight from an on-disk artifact
+    /// ([`crate::store::MatrixStore::register_path`]) where no CSR
+    /// original exists to size up. The baseline is `min(CSR, COO)` from
+    /// the dimensions (both computable without the decoded structure;
+    /// COO wins whenever `nnz < nrows + 1`, e.g. matrices with many empty
+    /// rows). Only SELL is unaccounted for — it beats CSR/COO on size
+    /// only for unusually regular matrices, where this rule is then
+    /// slightly more permissive than [`RoutePolicy::choose`].
+    pub fn choose_encoded(&self, enc: &CsrDtans) -> FormatChoice {
+        if enc.nnz < self.min_nnz {
+            return FormatChoice::Csr;
+        }
+        let model = SizeModel { precision: enc.precision };
+        let baseline = model.csr_bytes(enc.nrows, enc.nnz).min(model.coo_bytes(enc.nnz));
+        let ratio = enc.size_report().total as f64 / baseline.max(1) as f64;
+        if ratio < self.max_size_ratio {
+            FormatChoice::CsrDtans
+        } else {
+            FormatChoice::Csr
+        }
+    }
 }
 
 #[cfg(test)]
@@ -83,6 +106,21 @@ mod tests {
         let enc = CsrDtans::encode(&m, &opts).unwrap();
         let p = RoutePolicy::default();
         assert_eq!(p.choose(&m, &enc, &opts), FormatChoice::CsrDtans);
+    }
+
+    #[test]
+    fn encoded_only_route_agrees_on_clear_cases() {
+        // Large + compressible routes to dtANS from the encoding alone;
+        // small stays CSR — same answers as the CSR-aware rule.
+        let mut m = banded(40_000, 2);
+        assign_values(&mut m, ValueDist::Ones, &mut Xoshiro256::seeded(3));
+        let opts = EncodeOptions::default();
+        let enc = CsrDtans::encode(&m, &opts).unwrap();
+        let p = RoutePolicy::default();
+        assert_eq!(p.choose_encoded(&enc), FormatChoice::CsrDtans);
+        assert_eq!(p.choose_encoded(&enc), p.choose(&m, &enc, &opts));
+        let small = CsrDtans::encode(&banded(100, 2), &opts).unwrap();
+        assert_eq!(p.choose_encoded(&small), FormatChoice::Csr);
     }
 
     #[test]

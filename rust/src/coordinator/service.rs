@@ -1,5 +1,5 @@
-//! The SpMVM service: matrix registry + request batcher + worker pool,
-//! executing over the parallel SpMV engine.
+//! The SpMVM service: store-backed matrix registry + request batcher +
+//! worker pool, executing over the parallel SpMV engine.
 //!
 //! Requests `(matrix_id, x)` are queued; a dispatcher groups consecutive
 //! requests to the same matrix into batches (amortizing plan lookups and
@@ -12,33 +12,31 @@
 //! (`ParStrategy::Serial` restores the old one-thread-per-request
 //! behavior). Responses are delivered over per-request channels.
 //! Everything is std-thread based.
+//!
+//! Matrix lifetime is owned by the tiered [`MatrixStore`]
+//! ([`crate::store`]): registration goes through the on-disk artifact
+//! cache (re-registering a known matrix skips encoding), and residency is
+//! governed by [`StoreConfig::budget_bytes`]. Pool workers acquire each
+//! matrix through a pin guard — cold matrices fault in from disk
+//! transparently (deduped across concurrent requests), and the pin keeps
+//! them resident until their batch completes. The dispatcher itself
+//! routes on metadata only and never blocks on a cold load, so one cold
+//! matrix cannot head-of-line-block warm traffic.
 
 use super::metrics::Metrics;
 use super::router::{FormatChoice, RoutePolicy};
-use crate::format::csr_dtans::{CsrDtans, EncodeOptions};
+use crate::format::csr_dtans::EncodeOptions;
 use crate::matrix::csr::Csr;
-use crate::spmv::csr_dtans::DecodePlan;
 use crate::spmv::engine::{ParStrategy, SpmvEngine};
+use crate::store::{MatrixStore, PinnedMatrix, StoreConfig};
 use crate::util::error::{DtansError, Result};
-use std::collections::HashMap;
+use std::path::Path;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::Arc;
 use std::time::Instant;
 
-/// A registered matrix with its routed execution state.
-pub struct LoadedMatrix {
-    /// Human-readable name.
-    pub name: String,
-    /// The CSR original (kept for the CSR route and for re-encoding).
-    pub csr: Arc<Csr>,
-    /// The encoded form.
-    pub enc: Arc<CsrDtans>,
-    /// Prebuilt decode plan (symbol lookup tables).
-    pub plan: Arc<DecodePlan>,
-    /// Routed format.
-    pub choice: FormatChoice,
-}
+pub use crate::store::LoadedMatrix;
 
 /// One SpMVM request.
 struct Request {
@@ -64,6 +62,10 @@ pub struct ServiceConfig {
     /// large multiplies across all CPUs and runs small ones serially;
     /// `Serial` restores pre-engine behavior.
     pub par: ParStrategy,
+    /// Storage tier: artifact cache directory, residency byte budget,
+    /// CSR-original dropping, loader threads. The default keeps
+    /// everything in RAM with no persistence (the pre-store behavior).
+    pub store: StoreConfig,
 }
 
 impl Default for ServiceConfig {
@@ -74,6 +76,7 @@ impl Default for ServiceConfig {
             encode: EncodeOptions::default(),
             policy: RoutePolicy::default(),
             par: ParStrategy::Auto,
+            store: StoreConfig::default(),
         }
     }
 }
@@ -94,67 +97,68 @@ impl Pending {
 
 /// The batching SpMVM service.
 pub struct SpmvService {
-    registry: Arc<RwLock<HashMap<u64, Arc<LoadedMatrix>>>>,
+    store: Arc<MatrixStore>,
     queue_tx: Sender<Request>,
-    /// Service metrics (shared with workers).
+    /// Service metrics (shared with workers and the store).
     pub metrics: Arc<Metrics>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
-    next_id: Mutex<u64>,
     config: ServiceConfig,
 }
 
 impl SpmvService {
-    /// Start the service with `config`.
+    /// Start the service with `config`. Panics if the artifact cache
+    /// directory cannot be created; use [`SpmvService::try_start`] to
+    /// handle that error.
     pub fn start(config: ServiceConfig) -> SpmvService {
-        let registry: Arc<RwLock<HashMap<u64, Arc<LoadedMatrix>>>> =
-            Arc::new(RwLock::new(HashMap::new()));
+        SpmvService::try_start(config).expect("service start")
+    }
+
+    /// Start the service with `config`.
+    pub fn try_start(config: ServiceConfig) -> Result<SpmvService> {
         let metrics = Arc::new(Metrics::default());
+        let store = Arc::new(MatrixStore::new(
+            config.store.clone(),
+            config.encode,
+            config.policy,
+            Arc::clone(&metrics),
+        )?);
         let (tx, rx) = channel::<Request>();
 
         let dispatcher = {
-            let registry = Arc::clone(&registry);
+            let store = Arc::clone(&store);
             let metrics = Arc::clone(&metrics);
             let cfg = config.clone();
-            std::thread::spawn(move || dispatcher_loop(rx, registry, metrics, cfg))
+            std::thread::spawn(move || dispatcher_loop(rx, store, metrics, cfg))
         };
 
-        SpmvService {
-            registry,
+        Ok(SpmvService {
+            store,
             queue_tx: tx,
             metrics,
             dispatcher: Some(dispatcher),
-            next_id: Mutex::new(1),
             config,
-        }
+        })
     }
 
-    /// Register a matrix: encodes it, routes it, returns its id.
+    /// Register a matrix: encodes it (or loads its cached artifact),
+    /// routes it, returns its id.
     pub fn register(&self, name: &str, csr: Csr) -> Result<u64> {
-        let enc = CsrDtans::encode(&csr, &self.config.encode)?;
-        let choice = self.config.policy.choose(&csr, &enc, &self.config.encode);
-        let plan = DecodePlan::new(&enc);
-        let id = {
-            let mut g = self.next_id.lock().unwrap();
-            let id = *g;
-            *g += 1;
-            id
-        };
-        self.registry.write().unwrap().insert(
-            id,
-            Arc::new(LoadedMatrix {
-                name: name.to_string(),
-                csr: Arc::new(csr),
-                enc: Arc::new(enc),
-                plan: Arc::new(plan),
-                choice,
-            }),
-        );
-        Ok(id)
+        self.store.register_csr(name, csr)
+    }
+
+    /// Register a matrix straight from a serialized `.dtans` artifact.
+    pub fn register_path(&self, name: &str, path: &Path) -> Result<u64> {
+        self.store.register_path(name, path)
+    }
+
+    /// The service's tiered matrix store (stats, flush, manual evict).
+    pub fn store(&self) -> &Arc<MatrixStore> {
+        &self.store
     }
 
     /// Routed format of a registered matrix.
     pub fn format_of(&self, id: u64) -> Option<FormatChoice> {
-        self.registry.read().unwrap().get(&id).map(|m| m.choice)
+        self.store.format_of(id)
     }
 
     /// Submit a request; returns a [`Pending`] handle.
@@ -174,6 +178,11 @@ impl SpmvService {
     pub fn spmv(&self, matrix: u64, x: Vec<f64>) -> Result<Vec<f64>> {
         self.submit(matrix, x).wait()
     }
+
+    /// The service configuration.
+    pub fn config(&self) -> &ServiceConfig {
+        &self.config
+    }
 }
 
 impl Drop for SpmvService {
@@ -190,7 +199,7 @@ impl Drop for SpmvService {
 
 fn dispatcher_loop(
     rx: Receiver<Request>,
-    registry: Arc<RwLock<HashMap<u64, Arc<LoadedMatrix>>>>,
+    store: Arc<MatrixStore>,
     metrics: Arc<Metrics>,
     cfg: ServiceConfig,
 ) {
@@ -222,33 +231,43 @@ fn dispatcher_loop(
         }
         metrics.batches.fetch_add(1, Ordering::Relaxed);
 
-        let mat = registry.read().unwrap().get(&batch[0].matrix).cloned();
-        match mat {
-            None => {
-                for req in batch {
-                    metrics.failed.fetch_add(1, Ordering::Relaxed);
-                    let _ = req
-                        .resp
-                        .send(Err(DtansError::Service(format!("unknown matrix {}", req.matrix))));
-                }
-            }
-            // SpMM fast path only when the engine would actually fan the
-            // batch out; otherwise (Serial engine, or Auto below its cost
-            // threshold) keep the old one-worker-per-request path so
-            // request-level parallelism on the service pool is preserved.
-            Some(mat)
-                if batch.len() > 1
-                    && engine.will_batch_parallel(mat.csr.nnz(), batch.len()) =>
-            {
-                run_spmm_batch(&mat, batch, &engine, &metrics);
-            }
-            Some(mat) => {
-                for req in batch {
-                    let mat = Arc::clone(&mat);
-                    let metrics = Arc::clone(&metrics);
-                    let engine = Arc::clone(&engine);
-                    pool.execute(move || {
-                        let result = run_one(&mat, &engine, &req.x);
+        // The dispatcher itself never acquires: a cold matrix would block
+        // it on the disk fault (head-of-line for every other matrix's
+        // warm traffic). It routes on cheap metadata only; the acquire —
+        // warm pin or deduped cold load — happens on pool workers.
+        //
+        // SpMM fast path only when the engine would actually fan the
+        // batch out; otherwise (Serial engine, or Auto below its cost
+        // threshold) keep the one-worker-per-request path so
+        // request-level parallelism on the service pool is preserved.
+        let id = batch[0].matrix;
+        let (spmm, resident) = match store.dispatch_meta(id) {
+            Some((nnz, resident)) => (
+                batch.len() > 1 && engine.will_batch_parallel(nnz, batch.len()),
+                resident,
+            ),
+            None => (false, false), // unknown id: the batch job reports it
+        };
+        if spmm || !resident {
+            // One job for the whole batch: it faults the matrix in (or
+            // fails every request) and runs the batched kernel.
+            let store = Arc::clone(&store);
+            let engine = Arc::clone(&engine);
+            let metrics = Arc::clone(&metrics);
+            pool.execute(move || process_batch(&store, &engine, &metrics, batch));
+        } else {
+            // Warm per-request path: each job takes its own (cheap) pin.
+            for req in batch {
+                let store = Arc::clone(&store);
+                let engine = Arc::clone(&engine);
+                let metrics = Arc::clone(&metrics);
+                pool.execute(move || match store.acquire(req.matrix) {
+                    Err(e) => {
+                        metrics.failed.fetch_add(1, Ordering::Relaxed);
+                        let _ = req.resp.send(Err(e));
+                    }
+                    Ok(pinned) => {
+                        let result = run_one(&pinned, &engine, &req.x);
                         match &result {
                             Ok(_) => metrics
                                 .record_latency(req.submitted.elapsed().as_micros() as u64),
@@ -257,9 +276,51 @@ fn dispatcher_loop(
                             }
                         }
                         let _ = req.resp.send(result);
-                    });
+                    }
+                });
+            }
+        }
+    }
+    // `pool` drops here: its Drop joins the workers, so every in-flight
+    // job (and its response send) completes before the dispatcher exits.
+}
+
+/// Process one whole batch on a pool worker: acquire (faulting a cold
+/// matrix in — deduped with any concurrent load of the same id), then run
+/// the SpMM fast path or the requests sequentially.
+fn process_batch(
+    store: &MatrixStore,
+    engine: &SpmvEngine,
+    metrics: &Metrics,
+    batch: Vec<Request>,
+) {
+    match store.acquire(batch[0].matrix) {
+        Err(e) => {
+            for req in batch {
+                metrics.failed.fetch_add(1, Ordering::Relaxed);
+                let _ = req.resp.send(Err(e.duplicate()));
+            }
+        }
+        Ok(pinned) if batch.len() > 1 && engine.will_batch_parallel(pinned.nnz, batch.len()) => {
+            run_spmm_batch(&pinned, batch, engine, metrics);
+        }
+        Ok(pinned) => {
+            // Requests run sequentially on this worker. Deliberate
+            // tradeoff: a cold multi-request batch that does NOT take the
+            // SpMM path has a small matrix (large ones clear the engine's
+            // batch-parallel cost bar), so the disk fault dominates and
+            // per-multiply fan-out would buy little — while re-dispatching
+            // per-request jobs from inside a pool job would require the
+            // pool to own an Arc of itself (a self-join hazard on drop).
+            for req in batch {
+                let result = run_one(&pinned, engine, &req.x);
+                match &result {
+                    Ok(_) => metrics.record_latency(req.submitted.elapsed().as_micros() as u64),
+                    Err(_) => {
+                        metrics.failed.fetch_add(1, Ordering::Relaxed);
+                    }
                 }
-                pool.wait_idle();
+                let _ = req.resp.send(result);
             }
         }
     }
@@ -269,12 +330,13 @@ fn dispatcher_loop(
 /// up front (so one malformed vector cannot poison the batch), then run
 /// all remaining right-hand sides through a single batched engine call.
 fn run_spmm_batch(
-    mat: &LoadedMatrix,
+    pinned: &PinnedMatrix,
     batch: Vec<Request>,
     engine: &SpmvEngine,
     metrics: &Metrics,
 ) {
-    let (nrows, ncols) = (mat.csr.nrows, mat.csr.ncols);
+    let mat: &LoadedMatrix = pinned;
+    let (nrows, ncols) = (mat.nrows, mat.ncols);
     let mut xs = Vec::with_capacity(batch.len());
     let mut accepted = Vec::with_capacity(batch.len());
     for req in batch {
@@ -295,9 +357,12 @@ fn run_spmm_batch(
     if accepted.is_empty() {
         return;
     }
-    let result = match mat.choice {
-        FormatChoice::Csr => engine.spmm_csr(&mat.csr, &xs),
-        FormatChoice::CsrDtans => engine.spmm_csr_dtans_with_plan(&mat.enc, &mat.plan, &xs),
+    let result = match (mat.choice, &mat.csr) {
+        (FormatChoice::Csr, Some(csr)) => engine.spmm_csr(csr, &xs),
+        (FormatChoice::Csr, None) => Err(DtansError::Service(
+            "CSR-routed matrix has no resident CSR original".into(),
+        )),
+        (FormatChoice::CsrDtans, _) => engine.spmm_csr_dtans_with_plan(&mat.enc, &mat.plan, &xs),
     };
     match result {
         Ok(ys) => {
@@ -319,10 +384,17 @@ fn run_spmm_batch(
 }
 
 fn run_one(mat: &LoadedMatrix, engine: &SpmvEngine, x: &[f64]) -> Result<Vec<f64>> {
-    let mut y = vec![0.0; mat.csr.nrows];
-    match mat.choice {
-        FormatChoice::Csr => engine.spmv_csr(&mat.csr, x, &mut y)?,
-        FormatChoice::CsrDtans => engine.spmv_csr_dtans_with_plan(&mat.enc, &mat.plan, x, &mut y)?,
+    let mut y = vec![0.0; mat.nrows];
+    match (mat.choice, &mat.csr) {
+        (FormatChoice::Csr, Some(csr)) => engine.spmv_csr(csr, x, &mut y)?,
+        (FormatChoice::Csr, None) => {
+            return Err(DtansError::Service(
+                "CSR-routed matrix has no resident CSR original".into(),
+            ))
+        }
+        (FormatChoice::CsrDtans, _) => {
+            engine.spmv_csr_dtans_with_plan(&mat.enc, &mat.plan, x, &mut y)?
+        }
     }
     Ok(y)
 }
@@ -450,5 +522,46 @@ mod tests {
         spmv_csr(&m, &x, &mut want).unwrap();
         let got = svc.spmv(id, x).unwrap();
         crate::util::propcheck::assert_close(&got, &want, 1e-12, 1e-9).unwrap();
+    }
+
+    #[test]
+    fn budgeted_service_faults_cold_matrices_in() {
+        // A budget far below the working set: every request may need a
+        // cold reload, yet answers stay correct and evictions/cold loads
+        // show up in metrics.
+        let dir = std::env::temp_dir()
+            .join(format!("dtans_test_svc_budget_{}", std::process::id()));
+        let svc = SpmvService::start(ServiceConfig {
+            policy: RoutePolicy { min_nnz: 1 << 8, max_size_ratio: 0.98 },
+            store: StoreConfig {
+                cache_dir: Some(dir.clone()),
+                budget_bytes: Some(1),
+                drop_csr: true,
+                loader_threads: 2,
+            },
+            ..Default::default()
+        });
+        let mut mats = Vec::new();
+        for i in 0..3 {
+            let mut m = banded(600 + 100 * i, 3);
+            assign_values(&mut m, ValueDist::FewDistinct(5), &mut Xoshiro256::seeded(i as u64));
+            let id = svc.register(&format!("m{i}"), m.clone()).unwrap();
+            mats.push((id, m));
+        }
+        svc.store().flush(); // artifacts on disk -> evictable
+        for round in 0..3 {
+            for (id, m) in &mats {
+                let x: Vec<f64> =
+                    (0..m.ncols).map(|j| ((j + round) as f64 * 0.01).cos()).collect();
+                let mut want = vec![0.0; m.nrows];
+                spmv_csr(m, &x, &mut want).unwrap();
+                let got = svc.spmv(*id, x).unwrap();
+                crate::util::propcheck::assert_close(&got, &want, 1e-12, 1e-9).unwrap();
+            }
+        }
+        assert!(svc.metrics.evictions.load(Ordering::Relaxed) >= 1);
+        assert!(svc.metrics.cold_loads.load(Ordering::Relaxed) >= 1);
+        assert!(svc.metrics.cold_load_summary().count >= 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

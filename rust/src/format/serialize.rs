@@ -54,19 +54,36 @@ impl<W: Write> Writer<W> {
     }
 }
 
+/// Never pre-reserve more than this many elements on the say-so of a
+/// length prefix alone: a corrupted length must fail with
+/// [`DtansError::Truncated`] when the data runs out, not abort the process
+/// trying to allocate terabytes up front. Memory still only grows with
+/// bytes actually read.
+const PREALLOC_CAP: usize = 1 << 16;
+
 struct Reader<R: Read> {
     r: R,
 }
 
 impl<R: Read> Reader<R> {
+    /// `read_exact` with EOF mapped to [`DtansError::Truncated`], so every
+    /// short read surfaces as the dedicated truncation variant.
+    fn fill(&mut self, buf: &mut [u8]) -> Result<()> {
+        self.r.read_exact(buf).map_err(|e| match e.kind() {
+            std::io::ErrorKind::UnexpectedEof => {
+                DtansError::Truncated(format!("file ends {} byte(s) short of a field", buf.len()))
+            }
+            _ => DtansError::Io(e),
+        })
+    }
     fn u32(&mut self) -> Result<u32> {
         let mut b = [0u8; 4];
-        self.r.read_exact(&mut b)?;
+        self.fill(&mut b)?;
         Ok(u32::from_le_bytes(b))
     }
     fn u64(&mut self) -> Result<u64> {
         let mut b = [0u8; 8];
-        self.r.read_exact(&mut b)?;
+        self.fill(&mut b)?;
         Ok(u64::from_le_bytes(b))
     }
     fn len(&mut self) -> Result<usize> {
@@ -78,7 +95,7 @@ impl<R: Read> Reader<R> {
     }
     fn vec_u32(&mut self) -> Result<Vec<u32>> {
         let n = self.len()?;
-        let mut v = Vec::with_capacity(n);
+        let mut v = Vec::with_capacity(n.min(PREALLOC_CAP));
         for _ in 0..n {
             v.push(self.u32()?);
         }
@@ -86,7 +103,7 @@ impl<R: Read> Reader<R> {
     }
     fn vec_u64(&mut self) -> Result<Vec<u64>> {
         let n = self.len()?;
-        let mut v = Vec::with_capacity(n);
+        let mut v = Vec::with_capacity(n.min(PREALLOC_CAP));
         for _ in 0..n {
             v.push(self.u64()?);
         }
@@ -94,9 +111,16 @@ impl<R: Read> Reader<R> {
     }
     fn vec_bool(&mut self) -> Result<Vec<bool>> {
         let n = self.len()?;
-        let mut bytes = vec![0u8; n];
-        self.r.read_exact(&mut bytes)?;
-        Ok(bytes.into_iter().map(|b| b != 0).collect())
+        let mut v = Vec::with_capacity(n.min(PREALLOC_CAP));
+        let mut chunk = [0u8; 4096];
+        let mut remaining = n;
+        while remaining > 0 {
+            let take = remaining.min(chunk.len());
+            self.fill(&mut chunk[..take])?;
+            v.extend(chunk[..take].iter().map(|&b| b != 0));
+            remaining -= take;
+        }
+        Ok(v)
     }
 }
 
@@ -145,16 +169,22 @@ pub fn write_to<W: Write>(m: &CsrDtans, w: W) -> Result<()> {
 }
 
 /// Deserialize from any reader.
+///
+/// Rejects foreign files ([`DtansError::BadMagic`]), files written by a
+/// newer format revision ([`DtansError::UnsupportedVersion`]), files that
+/// end mid-field ([`DtansError::Truncated`]) and files whose arrays are
+/// mutually inconsistent ([`DtansError::Container`]) — see the hardening
+/// tests at the bottom of this module.
 pub fn read_from<R: Read>(r: R) -> Result<CsrDtans> {
     let mut r = Reader { r };
     let mut magic = [0u8; 8];
-    r.r.read_exact(&mut magic)?;
+    r.fill(&mut magic)?;
     if &magic != MAGIC {
-        return Err(DtansError::Container("bad magic".into()));
+        return Err(DtansError::BadMagic { found: magic });
     }
     let version = r.u32()?;
     if version != VERSION {
-        return Err(DtansError::Container(format!("unsupported version {version}")));
+        return Err(DtansError::UnsupportedVersion { found: version, supported: VERSION });
     }
     let params = AnsParams {
         w_bits: r.u32()?,
@@ -197,10 +227,44 @@ pub fn read_from<R: Read>(r: R) -> Result<CsrDtans> {
         delta_esc_offsets: r.vec_u32()?,
         value_esc_offsets: r.vec_u32()?,
     };
-    if m.row_nnz.len() != m.nrows || m.slice_offsets.len() != m.nslices() + 1 {
-        return Err(DtansError::Container("inconsistent array lengths".into()));
-    }
+    validate_consistency(&m)?;
     Ok(m)
+}
+
+/// Cross-array consistency checks on a freshly read container, so decode
+/// paths can index offsets without out-of-bounds panics on corrupt input.
+fn validate_consistency(m: &CsrDtans) -> Result<()> {
+    let fail = |what: &str| Err(DtansError::Container(format!("inconsistent container: {what}")));
+    if m.row_nnz.len() != m.nrows {
+        return fail("row_nnz length != nrows");
+    }
+    if m.slice_offsets.len() != m.nslices() + 1 {
+        return fail("slice_offsets length != nslices + 1");
+    }
+    if m.row_nnz.iter().map(|&n| n as u64).sum::<u64>() != m.nnz as u64 {
+        return fail("row_nnz sum != nnz");
+    }
+    if m.slice_offsets.windows(2).any(|w| w[0] > w[1]) {
+        return fail("slice_offsets not monotonic");
+    }
+    if m.slice_offsets.last().map(|&w| w as usize) != Some(m.stream.len()) {
+        return fail("slice_offsets end != stream length");
+    }
+    for (name, offs, len) in [
+        ("delta", &m.delta_esc_offsets, m.delta_escapes.len()),
+        ("value", &m.value_esc_offsets, m.value_escapes.len()),
+    ] {
+        if offs.len() != m.nrows + 1 {
+            return fail(&format!("{name} escape offsets length != nrows + 1"));
+        }
+        if offs.windows(2).any(|w| w[0] > w[1]) {
+            return fail(&format!("{name} escape offsets not monotonic"));
+        }
+        if offs.last().map(|&w| w as usize) != Some(len) {
+            return fail(&format!("{name} escape offsets end != escape count"));
+        }
+    }
+    Ok(())
 }
 
 /// Save to a file, creating parent directories.
@@ -249,21 +313,78 @@ mod tests {
     }
 
     #[test]
-    fn rejects_bad_magic() {
+    fn rejects_bad_magic_with_distinct_variant() {
         let enc = sample();
         let mut buf = Vec::new();
         write_to(&enc, &mut buf).unwrap();
         buf[0] = b'X';
-        assert!(read_from(std::io::Cursor::new(&buf)).is_err());
+        assert!(matches!(
+            read_from(std::io::Cursor::new(&buf)),
+            Err(DtansError::BadMagic { .. })
+        ));
     }
 
     #[test]
-    fn rejects_truncation() {
+    fn rejects_future_version_with_distinct_variant() {
         let enc = sample();
         let mut buf = Vec::new();
         write_to(&enc, &mut buf).unwrap();
-        buf.truncate(buf.len() / 2);
-        assert!(read_from(std::io::Cursor::new(&buf)).is_err());
+        // Version is the little-endian u32 right after the 8-byte magic.
+        buf[8..12].copy_from_slice(&2u32.to_le_bytes());
+        assert!(matches!(
+            read_from(std::io::Cursor::new(&buf)),
+            Err(DtansError::UnsupportedVersion { found: 2, supported: 1 })
+        ));
+    }
+
+    #[test]
+    fn rejects_truncation_with_distinct_variant() {
+        let enc = sample();
+        let mut buf = Vec::new();
+        write_to(&enc, &mut buf).unwrap();
+        for cut in [buf.len() / 2, buf.len() - 1, 12, 9] {
+            assert!(matches!(
+                read_from(std::io::Cursor::new(&buf[..cut])),
+                Err(DtansError::Truncated(_))
+            ));
+        }
+    }
+
+    #[test]
+    fn every_strict_prefix_is_rejected() {
+        // The format is length-prefixed with no trailing slack, so every
+        // strict prefix must fail to parse (sampled densely near the ends,
+        // sparsely in the middle).
+        let enc = sample();
+        let mut buf = Vec::new();
+        write_to(&enc, &mut buf).unwrap();
+        let mut cuts: Vec<usize> = (0..64.min(buf.len())).collect();
+        cuts.extend((buf.len().saturating_sub(64)..buf.len()).step_by(1));
+        cuts.extend((0..buf.len()).step_by(97));
+        for cut in cuts {
+            assert!(
+                read_from(std::io::Cursor::new(&buf[..cut])).is_err(),
+                "prefix of {cut}/{} bytes parsed",
+                buf.len()
+            );
+        }
+    }
+
+    #[test]
+    fn corrupted_bytes_never_panic() {
+        // Fuzz-ish: flip one byte at a pseudo-random offset and parse. Any
+        // outcome is acceptable except a panic or abort (a corrupted length
+        // prefix must not trigger a huge allocation).
+        let enc = sample();
+        let mut buf = Vec::new();
+        write_to(&enc, &mut buf).unwrap();
+        let mut rng = Xoshiro256::seeded(0xC0FFEE);
+        for _ in 0..400 {
+            let mut bad = buf.clone();
+            let off = rng.below_usize(bad.len());
+            bad[off] ^= 1 + rng.below(255) as u8;
+            let _ = read_from(std::io::Cursor::new(&bad));
+        }
     }
 
     #[test]

@@ -38,6 +38,11 @@
 //!   artifacts (`artifacts/*.hlo.txt`).
 //! * [`coordinator`] — a batching SpMVM service (router, worker pool,
 //!   metrics) built on the native and PJRT execution paths.
+//! * [`store`] — the tiered matrix store under the coordinator: a
+//!   content-addressed on-disk artifact cache (re-registering a known
+//!   matrix skips encoding), memory-budgeted LRU residency with pinning,
+//!   and a deduping background loader that faults evicted matrices back
+//!   in from disk.
 //!
 //! ## Quickstart
 //!
@@ -69,6 +74,7 @@ pub mod matrix;
 pub mod runtime;
 pub mod sim;
 pub mod spmv;
+pub mod store;
 pub mod util;
 
 pub use util::error::{DtansError, Result};

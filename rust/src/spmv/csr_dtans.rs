@@ -57,6 +57,17 @@ impl DecodePlan {
             value_escapes_f64: m.value_escapes.iter().map(|&p| to_f64(p)).collect(),
         }
     }
+
+    /// Heap bytes held by this plan's lookup tables — the plan's
+    /// contribution to a matrix's resident cost in the tiered store's
+    /// memory budget ([`crate::store::residency`]).
+    pub fn resident_bytes(&self) -> usize {
+        self.value_of_sym.len() * 8
+            + self.delta_of_sym.len() * 4
+            + self.value_escape.len()
+            + self.delta_escape.len()
+            + self.value_escapes_f64.len() * 8
+    }
 }
 
 /// `y += A·x` over a CSR-dtANS matrix (single-threaded).

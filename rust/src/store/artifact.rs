@@ -1,0 +1,243 @@
+//! Content-addressed on-disk artifact cache for encoded matrices.
+//!
+//! The paper frames the encoded matrix as a persistent artifact ("the
+//! encoded data can be stored in memory or saved in a file for repeated
+//! decoding"); this module gives that artifact a home. An
+//! [`ArtifactKey`] is a stable 128-bit FNV-1a hash over the *content* of
+//! the CSR original plus every field of [`EncodeOptions`] — the full
+//! input of the encoder — so two registrations of the same matrix with
+//! the same options map to the same on-disk file, and re-registering a
+//! known matrix skips encoding entirely (the store loads the artifact via
+//! [`crate::format::serialize`] instead).
+//!
+//! Layout: `<root>/<first-2-hex>/<32-hex>.dtans`, with writes going
+//! through a temp file + rename so readers never observe a half-written
+//! artifact.
+
+use crate::format::csr_dtans::{CsrDtans, EncodeOptions};
+use crate::format::serialize;
+use crate::matrix::csr::Csr;
+use crate::matrix::Precision;
+use crate::util::error::Result;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// 128-bit FNV-1a offset basis.
+const FNV_OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+/// 128-bit FNV-1a prime.
+const FNV_PRIME: u128 = 0x0000000001000000000000000000013b;
+
+/// Incremental 128-bit FNV-1a-style hasher (std's `Hasher` is not stable
+/// across releases/platforms; artifact keys must be, since they name
+/// files). Folds **8 input bytes per multiply** instead of byte-at-a-time
+/// FNV — registration hashes the full matrix content, so the 8x fewer
+/// u128 multiplies matter on multi-million-nnz matrices. The output is
+/// therefore not standard FNV-128; only stability and dispersion are
+/// required here, and the schema tag versions the key space.
+#[derive(Debug, Clone)]
+struct Fnv128 {
+    state: u128,
+}
+
+impl Fnv128 {
+    fn new() -> Fnv128 {
+        Fnv128 { state: FNV_OFFSET }
+    }
+    #[inline]
+    fn absorb(&mut self, word: u64) {
+        self.state ^= word as u128;
+        self.state = self.state.wrapping_mul(FNV_PRIME);
+    }
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.absorb(u64::from_le_bytes(c.try_into().expect("8-byte chunk")));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            // Length-tag the tail word (rem.len() <= 7, so byte 7 is
+            // free) to keep short inputs unambiguous.
+            let mut buf = [0u8; 8];
+            buf[..rem.len()].copy_from_slice(rem);
+            buf[7] = rem.len() as u8;
+            self.absorb(u64::from_le_bytes(buf));
+        }
+    }
+    fn write_u32(&mut self, x: u32) {
+        self.absorb(x as u64);
+    }
+    fn write_u64(&mut self, x: u64) {
+        self.absorb(x);
+    }
+}
+
+/// Stable content hash identifying one (matrix, encode options) pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ArtifactKey(pub u128);
+
+impl std::fmt::Display for ArtifactKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:032x}", self.0)
+    }
+}
+
+/// Compute the [`ArtifactKey`] for encoding `csr` with `opts`.
+///
+/// The hash covers shape, sparsity pattern, value bit patterns and every
+/// encoder option, prefixed with a schema tag so future key layouts can
+/// never collide with this one.
+pub fn key_for(csr: &Csr, opts: &EncodeOptions) -> ArtifactKey {
+    let mut h = Fnv128::new();
+    h.write(b"dtans-artifact-key-v1");
+    h.write_u64(csr.nrows as u64);
+    h.write_u64(csr.ncols as u64);
+    h.write_u64(csr.nnz() as u64);
+    for &p in &csr.row_ptr {
+        h.write_u64(p as u64);
+    }
+    for &c in &csr.cols {
+        h.write_u32(c);
+    }
+    for &v in &csr.vals {
+        h.write_u64(v.to_bits());
+    }
+    let p = opts.params;
+    for x in [p.w_bits, p.k_bits, p.m_bits, p.l, p.o, p.f] {
+        h.write_u32(x);
+    }
+    h.write_u32(match opts.precision {
+        Precision::F64 => 64,
+        Precision::F32 => 32,
+    });
+    h.write_u32(opts.delta_encode as u32);
+    ArtifactKey(h.state)
+}
+
+/// Distinguishes temp files written concurrently by threads of one process.
+static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A content-addressed directory of serialized [`CsrDtans`] artifacts.
+#[derive(Debug)]
+pub struct ArtifactCache {
+    root: PathBuf,
+}
+
+impl ArtifactCache {
+    /// Open (creating if needed) a cache rooted at `root`.
+    pub fn open(root: &Path) -> Result<ArtifactCache> {
+        std::fs::create_dir_all(root)?;
+        Ok(ArtifactCache { root: root.to_path_buf() })
+    }
+
+    /// The cache's root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Canonical path of `key`'s artifact (whether or not it exists).
+    pub fn path_for(&self, key: &ArtifactKey) -> PathBuf {
+        let hex = key.to_string();
+        self.root.join(&hex[..2]).join(format!("{hex}.dtans"))
+    }
+
+    /// Does an artifact for `key` exist on disk?
+    pub fn contains(&self, key: &ArtifactKey) -> bool {
+        self.path_for(key).is_file()
+    }
+
+    /// Load the artifact for `key`, if present. Returns `Ok(None)` on a
+    /// clean miss; corrupt or unreadable artifacts surface as errors so
+    /// the caller can decide to fall back to re-encoding.
+    pub fn load(&self, key: &ArtifactKey) -> Result<Option<CsrDtans>> {
+        let path = self.path_for(key);
+        if !path.is_file() {
+            return Ok(None);
+        }
+        serialize::load(&path).map(Some)
+    }
+
+    /// Persist `m` as the artifact for `key` (atomic: temp file + rename).
+    /// Returns the canonical artifact path.
+    pub fn store(&self, key: &ArtifactKey, m: &CsrDtans) -> Result<PathBuf> {
+        let path = self.path_for(key);
+        let tmp = path.with_extension(format!(
+            "tmp.{}.{}",
+            std::process::id(),
+            TEMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        serialize::save(m, &tmp)?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen::structured::banded;
+    use crate::matrix::gen::{assign_values, ValueDist};
+    use crate::util::rng::Xoshiro256;
+
+    fn sample(seed: u64) -> Csr {
+        let mut m = banded(120, 3);
+        assign_values(&mut m, ValueDist::FewDistinct(5), &mut Xoshiro256::seeded(seed));
+        m
+    }
+
+    fn temp_root(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("dtans_test_artifact_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn key_is_stable_and_content_sensitive() {
+        let opts = EncodeOptions::default();
+        let a = sample(1);
+        assert_eq!(key_for(&a, &opts), key_for(&a.clone(), &opts));
+        // Different values -> different key.
+        let b = sample(2);
+        assert_ne!(key_for(&a, &opts), key_for(&b, &opts));
+        // Different options -> different key.
+        let other = EncodeOptions { delta_encode: false, ..opts };
+        assert_ne!(key_for(&a, &opts), key_for(&a, &other));
+        let f32_opts = EncodeOptions { precision: Precision::F32, ..opts };
+        assert_ne!(key_for(&a, &opts), key_for(&a, &f32_opts));
+    }
+
+    #[test]
+    fn store_then_load_roundtrips() {
+        let root = temp_root("roundtrip");
+        let cache = ArtifactCache::open(&root).unwrap();
+        let m = sample(3);
+        let opts = EncodeOptions::default();
+        let enc = CsrDtans::encode(&m, &opts).unwrap();
+        let key = key_for(&m, &opts);
+        assert!(!cache.contains(&key));
+        assert!(cache.load(&key).unwrap().is_none());
+        let path = cache.store(&key, &enc).unwrap();
+        assert_eq!(path, cache.path_for(&key));
+        assert!(cache.contains(&key));
+        let back = cache.load(&key).unwrap().unwrap();
+        assert_eq!(back.stream, enc.stream);
+        assert_eq!(back.row_nnz, enc.row_nnz);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn no_temp_files_left_behind() {
+        let root = temp_root("tmpclean");
+        let cache = ArtifactCache::open(&root).unwrap();
+        let m = sample(4);
+        let opts = EncodeOptions::default();
+        let enc = CsrDtans::encode(&m, &opts).unwrap();
+        cache.store(&key_for(&m, &opts), &enc).unwrap();
+        let mut files = Vec::new();
+        for dir in std::fs::read_dir(&root).unwrap() {
+            for f in std::fs::read_dir(dir.unwrap().path()).unwrap() {
+                files.push(f.unwrap().file_name().into_string().unwrap());
+            }
+        }
+        assert_eq!(files.len(), 1);
+        assert!(files[0].ends_with(".dtans"), "{files:?}");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

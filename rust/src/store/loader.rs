@@ -1,0 +1,158 @@
+//! Background worker for the tiered store: encode-and-persist and
+//! cold-load jobs run on a [`ThreadPool`] off the request path, with
+//! per-id dedup so N concurrent requests for the same cold matrix trigger
+//! exactly one load — the joiners block on the leader's result instead of
+//! issuing N disk reads and N plan builds.
+
+use crate::util::error::{DtansError, Result};
+use crate::util::threadpool::ThreadPool;
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// One in-flight deduped job: joiners wait on `done` until the leader's
+/// result is published into `state`.
+struct Slot<T> {
+    state: Mutex<Option<Result<Arc<T>>>>,
+    done: Condvar,
+}
+
+/// Deduping background job runner, generic over the loaded payload.
+pub struct Loader<T> {
+    pool: ThreadPool,
+    inflight: Arc<Mutex<HashMap<u64, Arc<Slot<T>>>>>,
+}
+
+impl<T: Send + Sync + 'static> Loader<T> {
+    /// Spawn a loader with `threads` workers (at least 1).
+    pub fn new(threads: usize) -> Loader<T> {
+        Loader {
+            pool: ThreadPool::new(threads.max(1)),
+            inflight: Arc::new(Mutex::new(HashMap::new())),
+        }
+    }
+
+    /// Run `job` for `id` on the pool, deduplicating against concurrent
+    /// calls: the first caller becomes the leader and submits the job;
+    /// everyone (leader included) blocks until the result is published and
+    /// receives a clone of it. A panicking job is reported as a
+    /// [`DtansError::Service`] error to every waiter rather than hanging
+    /// them.
+    pub fn run_dedup<F>(&self, id: u64, job: F) -> Result<Arc<T>>
+    where
+        F: FnOnce() -> Result<Arc<T>> + Send + 'static,
+    {
+        let (slot, leader) = {
+            let mut g = self.inflight.lock().unwrap();
+            match g.get(&id) {
+                Some(s) => (Arc::clone(s), false),
+                None => {
+                    let s = Arc::new(Slot {
+                        state: Mutex::new(None),
+                        done: Condvar::new(),
+                    });
+                    g.insert(id, Arc::clone(&s));
+                    (s, true)
+                }
+            }
+        };
+        if leader {
+            let inflight = Arc::clone(&self.inflight);
+            let publish = Arc::clone(&slot);
+            self.pool.execute(move || {
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job))
+                    .unwrap_or_else(|_| Err(DtansError::Service("load job panicked".into())));
+                // Retire the slot before publishing: a caller arriving
+                // after publication must start a fresh job, not join a
+                // finished one.
+                inflight.lock().unwrap().remove(&id);
+                let mut st = publish.state.lock().unwrap();
+                *st = Some(res);
+                publish.done.notify_all();
+            });
+        }
+        let mut st = slot.state.lock().unwrap();
+        while st.is_none() {
+            st = slot.done.wait(st).unwrap();
+        }
+        match st.as_ref().expect("published above") {
+            Ok(v) => Ok(Arc::clone(v)),
+            Err(e) => Err(e.duplicate()),
+        }
+    }
+
+    /// Fire-and-forget background job (used for persist-after-encode).
+    pub fn spawn(&self, job: impl FnOnce() + Send + 'static) {
+        self.pool.execute(job);
+    }
+
+    /// Block until every submitted job has finished (tests and benches
+    /// use this to make background persists deterministic).
+    pub fn wait_idle(&self) {
+        self.pool.wait_idle();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn concurrent_callers_share_one_execution() {
+        let loader: Arc<Loader<u64>> = Arc::new(Loader::new(2));
+        let runs = Arc::new(AtomicUsize::new(0));
+        // All callers line up at a barrier, then race into run_dedup while
+        // the leader's job holds the slot open well past the race window.
+        let barrier = Arc::new(std::sync::Barrier::new(8));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let loader = Arc::clone(&loader);
+                let runs = Arc::clone(&runs);
+                let barrier = Arc::clone(&barrier);
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    loader
+                        .run_dedup(7, move || {
+                            runs.fetch_add(1, Ordering::SeqCst);
+                            std::thread::sleep(Duration::from_millis(500));
+                            Ok(Arc::new(42u64))
+                        })
+                        .unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(*h.join().unwrap(), 42);
+        }
+        assert_eq!(runs.load(Ordering::SeqCst), 1, "job must run exactly once");
+    }
+
+    #[test]
+    fn distinct_ids_run_independently() {
+        let loader: Loader<u64> = Loader::new(2);
+        let a = loader.run_dedup(1, || Ok(Arc::new(1))).unwrap();
+        let b = loader.run_dedup(2, || Ok(Arc::new(2))).unwrap();
+        assert_eq!((*a, *b), (1, 2));
+    }
+
+    #[test]
+    fn errors_reach_every_waiter() {
+        let loader: Loader<u64> = Loader::new(1);
+        let err = loader
+            .run_dedup(3, || Err(DtansError::Service("no artifact".into())))
+            .unwrap_err();
+        assert!(err.to_string().contains("no artifact"));
+        // The slot was retired: a retry runs a fresh job.
+        assert_eq!(*loader.run_dedup(3, || Ok(Arc::new(9))).unwrap(), 9);
+    }
+
+    #[test]
+    fn panicking_job_fails_cleanly() {
+        let loader: Loader<u64> = Loader::new(1);
+        let err = loader.run_dedup(4, || panic!("boom")).unwrap_err();
+        assert!(err.to_string().contains("panicked"));
+        // Pool worker survived.
+        assert_eq!(*loader.run_dedup(5, || Ok(Arc::new(5))).unwrap(), 5);
+    }
+}

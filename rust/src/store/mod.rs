@@ -1,0 +1,727 @@
+//! Tiered matrix store: on-disk artifact cache + memory-budgeted
+//! residency + background loader — the persistence layer under the
+//! coordinator.
+//!
+//! The paper treats the encoded matrix as a persistent artifact ("the
+//! encoded data can be stored in memory or saved in a file for repeated
+//! decoding"); at service scale the working set of registered matrices
+//! can far exceed RAM, so pinning every CSR original, encoding and decode
+//! plan in memory forever (what the coordinator did before this module)
+//! caps the service at its heap. The store splits lifetime from
+//! residency across three layers:
+//!
+//! * [`artifact`] — a content-addressed on-disk cache keyed by a stable
+//!   hash of the matrix bytes + [`EncodeOptions`]; re-registering a known
+//!   matrix loads the persisted encoding instead of re-encoding.
+//! * [`residency`] — a byte-budgeted LRU manager deciding which matrices
+//!   stay in RAM; pinned (in-flight) matrices are never evicted, and
+//!   evicted ones fault back in from their artifact on demand.
+//! * [`loader`] — a background worker pool for encode-and-persist and
+//!   cold-load jobs, deduped so concurrent requests for one cold matrix
+//!   trigger a single load.
+//!
+//! [`MatrixStore`] composes the three. [`MatrixStore::register_csr`]
+//! encodes (or artifact-hits), routes, persists in the background and
+//! makes the matrix resident; [`MatrixStore::acquire`] returns a
+//! [`PinnedMatrix`] guard, transparently faulting cold matrices in. The
+//! coordinator's service is rewired on top ([`crate::coordinator::service`]),
+//! and budget/eviction activity is observable through
+//! [`crate::coordinator::metrics::Metrics`] (`store_hits`, `store_misses`,
+//! `evictions`, cold-load quantiles).
+//!
+//! Results are bit-identical with and without a budget: eviction drops
+//! bytes, never changes them — the reloaded encoding is byte-equal to the
+//! persisted one, and a CSR original rebuilt via
+//! [`CsrDtans::decode_to_csr`] is exact for f64 encodes (property-tested
+//! in `rust/tests/store_residency.rs`).
+
+pub mod artifact;
+pub mod loader;
+pub mod residency;
+
+pub use artifact::{key_for, ArtifactCache, ArtifactKey};
+pub use residency::{ResidencyManager, ResidencyStats};
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::router::{FormatChoice, RoutePolicy};
+use crate::format::csr_dtans::{CsrDtans, EncodeOptions};
+use crate::matrix::csr::Csr;
+use crate::matrix::Precision;
+use crate::spmv::csr_dtans::DecodePlan;
+use crate::util::error::{DtansError, Result};
+use loader::Loader;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// A registered matrix in its resident (in-RAM) form.
+pub struct LoadedMatrix {
+    /// Human-readable name.
+    pub name: String,
+    /// Rows.
+    pub nrows: usize,
+    /// Columns.
+    pub ncols: usize,
+    /// Nonzeros.
+    pub nnz: usize,
+    /// The CSR original — `None` for dtANS-routed matrices registered in a
+    /// store with [`StoreConfig::drop_csr`] (rebuilt by decoding if the
+    /// matrix ever needs the CSR path again).
+    pub csr: Option<Arc<Csr>>,
+    /// The encoded form.
+    pub enc: Arc<CsrDtans>,
+    /// Prebuilt decode plan (symbol lookup tables).
+    pub plan: Arc<DecodePlan>,
+    /// Routed format.
+    pub choice: FormatChoice,
+}
+
+/// Can a matrix registered from a *user-provided* CSR original be evicted
+/// without changing future results? Eviction rebuilds the kept CSR via
+/// [`CsrDtans::decode_to_csr`], which is exact only for f64 encodes — an
+/// F32-precision encode would hand back f32-rounded values after a
+/// reload, silently changing CSR-routed answers. Such entries stay
+/// resident instead. (A CSR that was itself *derived by decoding* — the
+/// [`MatrixStore::register_path`] and cold-reload cases — is rebuildable
+/// bit-for-bit at any precision, so this gate does not apply there.)
+fn eviction_is_lossless(mat: &LoadedMatrix) -> bool {
+    mat.csr.is_none() || mat.enc.precision == Precision::F64
+}
+
+/// Bytes this matrix pins in RAM while resident (encoded container +
+/// decode plan + CSR original when kept).
+fn resident_cost(mat: &LoadedMatrix) -> u64 {
+    let mut cost = mat.enc.size_report().total as u64 + mat.plan.resident_bytes() as u64;
+    if let Some(csr) = &mat.csr {
+        // Actual heap layout: usize row offsets, u32 columns, f64 values.
+        cost += (csr.row_ptr.len() * 8 + csr.cols.len() * 4 + csr.vals.len() * 8) as u64;
+    }
+    cost
+}
+
+/// Storage-tier configuration (the serving-side knobs live in
+/// [`crate::coordinator::service::ServiceConfig`]).
+#[derive(Debug, Clone, Default)]
+pub struct StoreConfig {
+    /// Artifact cache directory. `None` disables persistence: every
+    /// registration encodes, and nothing is evictable (a budget then has
+    /// no effect, since eviction would lose data).
+    pub cache_dir: Option<PathBuf>,
+    /// Resident-byte budget. `None` means keep everything in RAM.
+    pub budget_bytes: Option<u64>,
+    /// Drop the CSR original for dtANS-routed matrices (they decode on
+    /// the fly; the original is rebuilt by decoding if ever needed).
+    pub drop_csr: bool,
+    /// Background loader threads (0 is treated as 1). The default of 0
+    /// lets `Default::default()` mean "minimal": one worker.
+    pub loader_threads: usize,
+}
+
+/// Aggregate store numbers (see [`MatrixStore::stats`]).
+#[derive(Debug, Clone, Copy)]
+pub struct StoreStats {
+    /// Registered matrices (resident or cold).
+    pub registered: usize,
+    /// Currently resident matrices.
+    pub resident: usize,
+    /// Sum of resident byte costs.
+    pub resident_bytes: u64,
+    /// Configured budget, if any.
+    pub budget_bytes: Option<u64>,
+}
+
+/// Static metadata for one registered id — survives eviction.
+struct EntryMeta {
+    name: String,
+    choice: FormatChoice,
+    nrows: usize,
+    ncols: usize,
+    nnz: usize,
+    keep_csr: bool,
+    /// Path of the persisted artifact, once it exists.
+    artifact: Option<PathBuf>,
+}
+
+struct StoreInner {
+    next_id: u64,
+    entries: HashMap<u64, EntryMeta>,
+    residency: ResidencyManager<LoadedMatrix>,
+}
+
+/// State shared with background jobs and pin guards.
+struct StoreShared {
+    config: StoreConfig,
+    encode: EncodeOptions,
+    policy: RoutePolicy,
+    metrics: Arc<Metrics>,
+    artifacts: Option<ArtifactCache>,
+    inner: Mutex<StoreInner>,
+}
+
+impl StoreShared {
+    fn note_evictions(&self, evicted: &[u64]) {
+        if !evicted.is_empty() {
+            self.metrics.evictions.fetch_add(evicted.len() as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The tiered matrix store. See the [module docs](self) for the layer
+/// breakdown and `docs/STORE.md` for artifact layout and budget semantics.
+pub struct MatrixStore {
+    shared: Arc<StoreShared>,
+    loader: Loader<LoadedMatrix>,
+}
+
+impl MatrixStore {
+    /// Open a store. Fails only if the artifact cache directory cannot be
+    /// created.
+    pub fn new(
+        config: StoreConfig,
+        encode: EncodeOptions,
+        policy: RoutePolicy,
+        metrics: Arc<Metrics>,
+    ) -> Result<MatrixStore> {
+        let artifacts = match &config.cache_dir {
+            Some(dir) => Some(ArtifactCache::open(dir)?),
+            None => None,
+        };
+        let budget = config.budget_bytes;
+        let loader_threads = config.loader_threads;
+        Ok(MatrixStore {
+            shared: Arc::new(StoreShared {
+                config,
+                encode,
+                policy,
+                metrics,
+                artifacts,
+                inner: Mutex::new(StoreInner {
+                    next_id: 1,
+                    entries: HashMap::new(),
+                    residency: ResidencyManager::new(budget),
+                }),
+            }),
+            loader: Loader::new(loader_threads),
+        })
+    }
+
+    /// Register a CSR matrix: artifact-cache hit loads the persisted
+    /// encoding (skipping the encoder entirely, counted as a
+    /// `store_hits`); a miss encodes and persists in the background. The
+    /// matrix becomes resident and routed; returns its id.
+    pub fn register_csr(&self, name: &str, csr: Csr) -> Result<u64> {
+        let sh = &self.shared;
+        // The O(nnz) content hash is only worth computing when there is a
+        // cache to consult/populate with it.
+        let key = sh.artifacts.as_ref().map(|_| key_for(&csr, &sh.encode));
+        // A cached artifact must agree with the matrix on shape; a
+        // corrupt or colliding file is treated as a miss and re-encoded.
+        let cached = sh.artifacts.as_ref().zip(key).and_then(|(cache, key)| {
+            match cache.load(&key) {
+                Ok(Some(enc))
+                    if enc.nrows == csr.nrows
+                        && enc.ncols == csr.ncols
+                        && enc.nnz == csr.nnz() =>
+                {
+                    Some(enc)
+                }
+                _ => None,
+            }
+        });
+        let from_cache = cached.is_some();
+        let enc = match cached {
+            Some(enc) => {
+                sh.metrics.store_hits.fetch_add(1, Ordering::Relaxed);
+                enc
+            }
+            None => {
+                sh.metrics.store_misses.fetch_add(1, Ordering::Relaxed);
+                CsrDtans::encode(&csr, &sh.encode)?
+            }
+        };
+        let choice = sh.policy.choose(&csr, &enc, &sh.encode);
+        let keep_csr = !(sh.config.drop_csr && choice == FormatChoice::CsrDtans);
+        let plan = DecodePlan::new(&enc);
+        let mat = Arc::new(LoadedMatrix {
+            name: name.to_string(),
+            nrows: csr.nrows,
+            ncols: csr.ncols,
+            nnz: csr.nnz(),
+            csr: keep_csr.then(|| Arc::new(csr)),
+            enc: Arc::new(enc),
+            plan: Arc::new(plan),
+            choice,
+        });
+        let artifact = if from_cache {
+            sh.artifacts.as_ref().zip(key).map(|(c, k)| c.path_for(&k))
+        } else {
+            None
+        };
+        let persisted = artifact.is_some();
+        let id = self.admit(name, &mat, artifact, eviction_is_lossless(&mat));
+        // `key` is Some exactly when a cache is configured.
+        if let (false, Some(key)) = (persisted, key) {
+            // Persist off the request path; the entry becomes evictable
+            // once the artifact is safely on disk.
+            let sh2 = Arc::clone(sh);
+            let mat2 = Arc::clone(&mat);
+            self.loader.spawn(move || {
+                let cache = sh2.artifacts.as_ref().expect("key exists only with a cache");
+                match cache.store(&key, &mat2.enc) {
+                    Ok(path) => {
+                        let mut inner = sh2.inner.lock().unwrap();
+                        if let Some(e) = inner.entries.get_mut(&id) {
+                            e.artifact = Some(path);
+                        }
+                        if eviction_is_lossless(&mat2) {
+                            inner.residency.mark_evictable(id);
+                        }
+                        let evicted = inner.residency.enforce();
+                        drop(inner);
+                        sh2.note_evictions(&evicted);
+                    }
+                    Err(_) => {
+                        // The matrix stays resident and unevictable; make
+                        // the budget gap observable instead of silent.
+                        sh2.metrics.persist_failures.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+        Ok(id)
+    }
+
+    /// Register a matrix straight from a serialized `.dtans` artifact —
+    /// no CSR original, no encoding (not counted as a `store_hits`: no
+    /// cache was consulted). The file itself backs eviction, so the entry
+    /// is evictable immediately (f64 encodes, or any encode without a
+    /// kept CSR original); routing uses the encoded-only rule
+    /// ([`RoutePolicy::choose_encoded`]).
+    pub fn register_path(&self, name: &str, path: &Path) -> Result<u64> {
+        let sh = &self.shared;
+        // Canonicalize up front: the stored path backs cold reloads for
+        // the entry's whole lifetime, so it must survive cwd changes. The
+        // file itself must outlive the registration — the store reads it
+        // in place rather than copying it into the cache.
+        let path = std::fs::canonicalize(path)?;
+        let enc = crate::format::serialize::load(&path)?;
+        let choice = sh.policy.choose_encoded(&enc);
+        let keep_csr = !(sh.config.drop_csr && choice == FormatChoice::CsrDtans);
+        let csr = if keep_csr { Some(Arc::new(enc.decode_to_csr()?)) } else { None };
+        let plan = DecodePlan::new(&enc);
+        let mat = Arc::new(LoadedMatrix {
+            name: name.to_string(),
+            nrows: enc.nrows,
+            ncols: enc.ncols,
+            nnz: enc.nnz,
+            csr,
+            enc: Arc::new(enc),
+            plan: Arc::new(plan),
+            choice,
+        });
+        // The CSR (if kept) was derived by decoding this very artifact, so
+        // a cold reload rebuilds it bit-identically at any precision:
+        // always safe to evict.
+        Ok(self.admit(name, &mat, Some(path), true))
+    }
+
+    /// Insert a freshly built resident matrix: allocate an id, record its
+    /// metadata, make it resident, enforce the budget. `lossless_evict`
+    /// says whether an evict/reload cycle reproduces this matrix exactly
+    /// (see [`eviction_is_lossless`]); entries persist-gate on it.
+    fn admit(
+        &self,
+        name: &str,
+        mat: &Arc<LoadedMatrix>,
+        artifact: Option<PathBuf>,
+        lossless_evict: bool,
+    ) -> u64 {
+        let sh = &self.shared;
+        let cost = resident_cost(mat);
+        let mut inner = sh.inner.lock().unwrap();
+        let id = inner.next_id;
+        inner.next_id += 1;
+        let persisted = artifact.is_some();
+        inner.entries.insert(
+            id,
+            EntryMeta {
+                name: name.to_string(),
+                choice: mat.choice,
+                nrows: mat.nrows,
+                ncols: mat.ncols,
+                nnz: mat.nnz,
+                keep_csr: mat.csr.is_some(),
+                artifact,
+            },
+        );
+        inner.residency.track(id);
+        if persisted && lossless_evict {
+            inner.residency.mark_evictable(id);
+        }
+        let evicted = inner.residency.insert(id, Arc::clone(mat), cost);
+        drop(inner);
+        sh.note_evictions(&evicted);
+        id
+    }
+
+    /// Acquire matrix `id` for use, pinning it against eviction until the
+    /// returned guard drops. Cold matrices fault in from their artifact
+    /// (deduped: concurrent acquirers share one load).
+    pub fn acquire(&self, id: u64) -> Result<PinnedMatrix> {
+        let sh = &self.shared;
+        {
+            let mut inner = sh.inner.lock().unwrap();
+            if !inner.residency.is_tracked(id) {
+                return Err(DtansError::Service(format!("unknown matrix {id}")));
+            }
+            // Pin before anything else: from here the matrix (resident
+            // now or loaded below) cannot be evicted under us.
+            inner.residency.pin(id);
+            if let Some(mat) = inner.residency.get(id) {
+                return Ok(PinnedMatrix { shared: Arc::clone(sh), id, mat });
+            }
+        }
+        let sh2 = Arc::clone(sh);
+        match self.loader.run_dedup(id, move || cold_load(&sh2, id)) {
+            Ok(mat) => Ok(PinnedMatrix { shared: Arc::clone(sh), id, mat }),
+            Err(e) => {
+                let mut inner = sh.inner.lock().unwrap();
+                inner.residency.unpin(id);
+                Err(e)
+            }
+        }
+    }
+
+    /// Routed format of a registered matrix.
+    pub fn format_of(&self, id: u64) -> Option<FormatChoice> {
+        self.shared.inner.lock().unwrap().entries.get(&id).map(|e| e.choice)
+    }
+
+    /// Name of a registered matrix.
+    pub fn name_of(&self, id: u64) -> Option<String> {
+        self.shared.inner.lock().unwrap().entries.get(&id).map(|e| e.name.clone())
+    }
+
+    /// Nonzeros of a registered matrix (metadata — available even while
+    /// the matrix is cold, so dispatchers can plan without faulting it in).
+    pub fn nnz_of(&self, id: u64) -> Option<usize> {
+        self.shared.inner.lock().unwrap().entries.get(&id).map(|e| e.nnz)
+    }
+
+    /// Dispatcher helper: `(nnz, currently_resident)` for `id` under a
+    /// single lock acquisition, or `None` if unregistered.
+    pub fn dispatch_meta(&self, id: u64) -> Option<(usize, bool)> {
+        let inner = self.shared.inner.lock().unwrap();
+        let nnz = inner.entries.get(&id)?.nnz;
+        Some((nnz, inner.residency.is_resident(id)))
+    }
+
+    /// Is `id` currently resident (in RAM)?
+    pub fn is_resident(&self, id: u64) -> bool {
+        self.shared.inner.lock().unwrap().residency.is_resident(id)
+    }
+
+    /// Forcibly evict `id` (refused while pinned or until its artifact is
+    /// persisted). Returns whether it was evicted. Benches use this to
+    /// measure the cold path deterministically.
+    pub fn evict(&self, id: u64) -> bool {
+        let mut inner = self.shared.inner.lock().unwrap();
+        let evicted = inner.residency.evict(id);
+        drop(inner);
+        if evicted {
+            self.shared.metrics.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        evicted
+    }
+
+    /// Block until background persists/loads submitted so far finished.
+    pub fn flush(&self) {
+        self.loader.wait_idle();
+    }
+
+    /// Aggregate store numbers.
+    pub fn stats(&self) -> StoreStats {
+        let inner = self.shared.inner.lock().unwrap();
+        let r = inner.residency.stats();
+        StoreStats {
+            registered: inner.entries.len(),
+            resident: r.resident,
+            resident_bytes: r.resident_bytes,
+            budget_bytes: r.budget_bytes,
+        }
+    }
+
+    /// The store's metrics sink (shared with the owning service, if any).
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.shared.metrics
+    }
+}
+
+/// Fault one cold matrix in from its on-disk artifact. Runs on the
+/// loader pool; the acquirer already holds a pin, so the freshly inserted
+/// resident cannot be evicted before the caller sees it.
+fn cold_load(sh: &Arc<StoreShared>, id: u64) -> Result<Arc<LoadedMatrix>> {
+    let (path, meta) = {
+        let mut inner = sh.inner.lock().unwrap();
+        // Raced with another load or an insert: already resident.
+        if let Some(mat) = inner.residency.get(id) {
+            return Ok(mat);
+        }
+        let e = inner
+            .entries
+            .get(&id)
+            .ok_or_else(|| DtansError::Service(format!("unknown matrix {id}")))?;
+        let path = e.artifact.clone().ok_or_else(|| {
+            DtansError::Service(format!("matrix {id} is cold and has no on-disk artifact"))
+        })?;
+        (path, (e.name.clone(), e.choice, e.keep_csr, e.nrows, e.ncols, e.nnz))
+    };
+    let (name, choice, keep_csr, nrows, ncols, nnz) = meta;
+    let t0 = Instant::now();
+    let enc = crate::format::serialize::load(&path)?;
+    let csr = if keep_csr { Some(Arc::new(enc.decode_to_csr()?)) } else { None };
+    let plan = DecodePlan::new(&enc);
+    let mat = Arc::new(LoadedMatrix {
+        name,
+        nrows,
+        ncols,
+        nnz,
+        csr,
+        enc: Arc::new(enc),
+        plan: Arc::new(plan),
+        choice,
+    });
+    sh.metrics.record_cold_load(t0.elapsed().as_micros() as u64);
+    let cost = resident_cost(&mat);
+    let mut inner = sh.inner.lock().unwrap();
+    let evicted = inner.residency.insert(id, Arc::clone(&mat), cost);
+    drop(inner);
+    sh.note_evictions(&evicted);
+    Ok(mat)
+}
+
+/// Guard over an acquired matrix: derefs to [`LoadedMatrix`] and releases
+/// its eviction pin on drop (re-enforcing the budget, since the unpinned
+/// matrix may now be the eviction candidate that lets the store fit).
+pub struct PinnedMatrix {
+    shared: Arc<StoreShared>,
+    id: u64,
+    mat: Arc<LoadedMatrix>,
+}
+
+impl PinnedMatrix {
+    /// The pinned matrix's id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The resident matrix (cloneable; the clone is *not* pinned — it
+    /// keeps the data alive via `Arc` but no longer counts toward the
+    /// store's residency).
+    pub fn matrix(&self) -> &Arc<LoadedMatrix> {
+        &self.mat
+    }
+}
+
+impl std::ops::Deref for PinnedMatrix {
+    type Target = LoadedMatrix;
+    fn deref(&self) -> &LoadedMatrix {
+        &self.mat
+    }
+}
+
+impl Drop for PinnedMatrix {
+    fn drop(&mut self) {
+        let mut inner = self.shared.inner.lock().unwrap();
+        inner.residency.unpin(self.id);
+        let evicted = inner.residency.enforce();
+        drop(inner);
+        self.shared.note_evictions(&evicted);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen::structured::banded;
+    use crate::matrix::gen::{assign_values, ValueDist};
+    use crate::util::rng::Xoshiro256;
+
+    fn sample(n: usize, seed: u64) -> Csr {
+        let mut m = banded(n, 3);
+        assign_values(&mut m, ValueDist::FewDistinct(6), &mut Xoshiro256::seeded(seed));
+        m
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("dtans_test_store_{tag}_{}", std::process::id()))
+    }
+
+    fn store_with(config: StoreConfig) -> MatrixStore {
+        MatrixStore::new(
+            config,
+            EncodeOptions::default(),
+            RoutePolicy { min_nnz: 1 << 8, max_size_ratio: 0.98 },
+            Arc::new(Metrics::default()),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn register_acquire_roundtrip_without_cache() {
+        let store = store_with(StoreConfig::default());
+        let m = sample(300, 1);
+        let id = store.register_csr("m", m.clone()).unwrap();
+        let pinned = store.acquire(id).unwrap();
+        assert_eq!(pinned.nrows, 300);
+        assert_eq!(pinned.csr.as_ref().map(|c| c.nnz()), Some(m.nnz()));
+        assert!(store.acquire(999).is_err());
+    }
+
+    #[test]
+    fn artifact_hit_skips_encoding() {
+        let dir = temp_dir("hit");
+        let config =
+            StoreConfig { cache_dir: Some(dir.clone()), ..Default::default() };
+        let store = store_with(config.clone());
+        let m = sample(400, 2);
+        let a = store.register_csr("a", m.clone()).unwrap();
+        store.flush(); // wait for the background persist
+        assert_eq!(store.metrics().store_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(store.metrics().store_hits.load(Ordering::Relaxed), 0);
+        // Same content re-registered: artifact hit, no new encode.
+        let b = store.register_csr("b", m.clone()).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(store.metrics().store_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(store.metrics().store_hits.load(Ordering::Relaxed), 1);
+        // A second store over the same directory hits too (cold start).
+        let store2 = store_with(config);
+        store2.register_csr("c", m).unwrap();
+        assert_eq!(store2.metrics().store_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(store2.metrics().store_misses.load(Ordering::Relaxed), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn eviction_and_cold_reload_preserve_results() {
+        let dir = temp_dir("evict");
+        let store = store_with(StoreConfig {
+            cache_dir: Some(dir.clone()),
+            budget_bytes: Some(1), // evict everything unpinned
+            drop_csr: true,
+            ..Default::default()
+        });
+        let m = sample(2000, 3);
+        let id = store.register_csr("m", m.clone()).unwrap();
+        let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.01).sin()).collect();
+        let mut want = vec![0.0; m.nrows];
+        crate::spmv::spmv_csr(&m, &x, &mut want).unwrap();
+        // First acquire may be warm; drop the pin, flush the persist and
+        // let the budget evict it.
+        {
+            let p = store.acquire(id).unwrap();
+            assert_eq!(p.choice, FormatChoice::CsrDtans);
+            assert!(p.csr.is_none(), "drop_csr must shed the original");
+        }
+        store.flush();
+        {
+            let _ = store.acquire(id); // unpin triggers enforce
+        }
+        assert!(!store.is_resident(id), "budget of 1 byte must evict");
+        assert!(store.metrics().evictions.load(Ordering::Relaxed) >= 1);
+        // Cold acquire faults it back in; results match the CSR truth.
+        let p = store.acquire(id).unwrap();
+        assert!(store.metrics().cold_loads.load(Ordering::Relaxed) >= 1);
+        let mut got = vec![0.0; p.nrows];
+        crate::spmv::spmv_csr_dtans(&p.enc, &x, &mut got).unwrap();
+        crate::util::propcheck::assert_close(&got, &want, 1e-12, 1e-9).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn register_path_serves_without_original() {
+        let dir = temp_dir("path");
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = sample(600, 4);
+        let enc = CsrDtans::encode(&m, &EncodeOptions::default()).unwrap();
+        let file = dir.join("m.dtans");
+        crate::format::serialize::save(&enc, &file).unwrap();
+        let store = store_with(StoreConfig { drop_csr: true, ..Default::default() });
+        let id = store.register_path("from-disk", &file).unwrap();
+        let p = store.acquire(id).unwrap();
+        assert_eq!((p.nrows, p.ncols, p.nnz), (m.nrows, m.ncols, m.nnz()));
+        assert_eq!(store.name_of(id).as_deref(), Some("from-disk"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn f32_encodes_with_kept_csr_are_never_evicted() {
+        // Evicting would rebuild the CSR original via a lossy f32
+        // roundtrip; the store must keep such entries resident instead.
+        let dir = temp_dir("f32gate");
+        let store = MatrixStore::new(
+            StoreConfig {
+                cache_dir: Some(dir.clone()),
+                budget_bytes: Some(1),
+                ..Default::default()
+            },
+            EncodeOptions { precision: Precision::F32, ..Default::default() },
+            RoutePolicy { min_nnz: 1 << 8, max_size_ratio: 0.98 },
+            Arc::new(Metrics::default()),
+        )
+        .unwrap();
+        let id = store.register_csr("m", sample(400, 7)).unwrap();
+        store.flush();
+        {
+            let _ = store.acquire(id); // unpin triggers an enforce pass
+        }
+        assert!(store.is_resident(id), "lossy-to-rebuild entries must stay resident");
+        assert!(!store.evict(id), "manual evict must refuse too");
+
+        // The same F32 encoding registered from its artifact IS evictable:
+        // its CSR is decode-derived, so a reload rebuilds it exactly.
+        let opts = EncodeOptions { precision: Precision::F32, ..Default::default() };
+        let enc = CsrDtans::encode(&sample(400, 7), &opts).unwrap();
+        let file = dir.join("f32.dtans");
+        crate::format::serialize::save(&enc, &file).unwrap();
+        let store2 = MatrixStore::new(
+            StoreConfig { budget_bytes: Some(1), ..Default::default() },
+            opts,
+            RoutePolicy { min_nnz: 1 << 8, max_size_ratio: 0.98 },
+            Arc::new(Metrics::default()),
+        )
+        .unwrap();
+        let id2 = store2.register_path("f32-artifact", &file).unwrap();
+        {
+            let _ = store2.acquire(id2); // unpin triggers an enforce pass
+        }
+        assert!(!store2.is_resident(id2), "decode-derived CSR is safe to evict");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pinned_matrices_resist_the_budget() {
+        let dir = temp_dir("pin");
+        let store = store_with(StoreConfig {
+            cache_dir: Some(dir.clone()),
+            budget_bytes: Some(1),
+            ..Default::default()
+        });
+        let id = store.register_csr("m", sample(500, 5)).unwrap();
+        store.flush();
+        let p = store.acquire(id).unwrap();
+        // Another registration lands while `id` is pinned: `id` survives.
+        let other = store.register_csr("n", sample(700, 6)).unwrap();
+        store.flush();
+        assert!(store.is_resident(id));
+        assert!(!store.evict(id), "pinned: manual evict must refuse");
+        drop(p);
+        {
+            let _ = store.acquire(other); // unpin enforce pass
+        }
+        assert!(!store.is_resident(id), "unpinned under a 1-byte budget");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,279 @@
+//! Memory-budgeted residency tracking: which registered matrices are held
+//! in RAM, at what byte cost, and which get evicted when the budget is
+//! exceeded.
+//!
+//! [`ResidencyManager`] is a plain data structure (no interior locking —
+//! the store wraps it in its own mutex) tracking one slot per registered
+//! id with:
+//!
+//! * an optional **resident** payload (`Arc<T>`) plus its byte cost;
+//! * a **pin count** — pinned slots are never evicted, which is how
+//!   in-flight requests keep the matrix they are multiplying alive;
+//! * an **evictable** flag — a slot only becomes evictable once its
+//!   on-disk artifact exists, since eviction would otherwise lose data;
+//! * a **last-use clock** for LRU victim selection.
+//!
+//! [`ResidencyManager::enforce`] evicts cold (unpinned, evictable)
+//! residents in least-recently-used order until the total resident bytes
+//! fit the budget. The budget is deliberately *soft* at the edges: a slot
+//! that is pinned or not yet persisted is skipped, so a burst of pinned
+//! working set can exceed the budget transiently and is trimmed back on
+//! the next unpin.
+//!
+//! The manager is generic over the resident payload so its eviction logic
+//! is unit-testable without building real matrices.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// One tracked id's residency state.
+#[derive(Debug)]
+struct Slot<T> {
+    resident: Option<Arc<T>>,
+    cost: u64,
+    pins: u32,
+    evictable: bool,
+    last_use: u64,
+}
+
+/// Aggregate residency numbers (see [`ResidencyManager::stats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResidencyStats {
+    /// Tracked ids (resident or cold).
+    pub tracked: usize,
+    /// Ids currently resident.
+    pub resident: usize,
+    /// Sum of resident byte costs.
+    pub resident_bytes: u64,
+    /// Configured budget, if any.
+    pub budget_bytes: Option<u64>,
+}
+
+/// LRU residency manager under an optional byte budget.
+#[derive(Debug)]
+pub struct ResidencyManager<T> {
+    budget: Option<u64>,
+    clock: u64,
+    resident_bytes: u64,
+    slots: HashMap<u64, Slot<T>>,
+}
+
+impl<T> ResidencyManager<T> {
+    /// New manager; `budget` of `None` means nothing is ever evicted.
+    pub fn new(budget: Option<u64>) -> ResidencyManager<T> {
+        ResidencyManager {
+            budget,
+            clock: 0,
+            resident_bytes: 0,
+            slots: HashMap::new(),
+        }
+    }
+
+    /// Start tracking `id` (cold, unpinned, not yet evictable). No-op if
+    /// already tracked.
+    pub fn track(&mut self, id: u64) {
+        self.slots.entry(id).or_insert(Slot {
+            resident: None,
+            cost: 0,
+            pins: 0,
+            evictable: false,
+            last_use: 0,
+        });
+    }
+
+    /// Is `id` tracked (registered) at all?
+    pub fn is_tracked(&self, id: u64) -> bool {
+        self.slots.contains_key(&id)
+    }
+
+    /// Is `id` currently resident?
+    pub fn is_resident(&self, id: u64) -> bool {
+        self.slots.get(&id).is_some_and(|s| s.resident.is_some())
+    }
+
+    /// Pin `id`: it cannot be evicted until the matching [`Self::unpin`].
+    pub fn pin(&mut self, id: u64) {
+        if let Some(s) = self.slots.get_mut(&id) {
+            s.pins += 1;
+        }
+    }
+
+    /// Release one pin on `id`.
+    pub fn unpin(&mut self, id: u64) {
+        if let Some(s) = self.slots.get_mut(&id) {
+            s.pins = s.pins.saturating_sub(1);
+        }
+    }
+
+    /// Current pin count of `id` (0 if untracked).
+    pub fn pins(&self, id: u64) -> u32 {
+        self.slots.get(&id).map_or(0, |s| s.pins)
+    }
+
+    /// Mark `id` as safe to evict (its on-disk artifact exists).
+    pub fn mark_evictable(&mut self, id: u64) {
+        if let Some(s) = self.slots.get_mut(&id) {
+            s.evictable = true;
+        }
+    }
+
+    /// Fetch `id`'s resident payload, bumping its LRU clock.
+    pub fn get(&mut self, id: u64) -> Option<Arc<T>> {
+        self.clock += 1;
+        let clock = self.clock;
+        let s = self.slots.get_mut(&id)?;
+        s.last_use = clock;
+        s.resident.clone()
+    }
+
+    /// Make `id` resident at `cost` bytes (tracking it first if needed),
+    /// then enforce the budget. Returns the ids evicted to make room.
+    pub fn insert(&mut self, id: u64, payload: Arc<T>, cost: u64) -> Vec<u64> {
+        self.track(id);
+        self.clock += 1;
+        let clock = self.clock;
+        let s = self.slots.get_mut(&id).expect("tracked above");
+        if s.resident.is_some() {
+            self.resident_bytes -= s.cost;
+        }
+        s.resident = Some(payload);
+        s.cost = cost;
+        s.last_use = clock;
+        self.resident_bytes += cost;
+        self.enforce()
+    }
+
+    /// Evict LRU (unpinned, evictable) residents until the budget fits or
+    /// no victim remains. Returns the evicted ids.
+    pub fn enforce(&mut self) -> Vec<u64> {
+        let mut evicted = Vec::new();
+        let Some(budget) = self.budget else {
+            return evicted;
+        };
+        while self.resident_bytes > budget {
+            let victim = self
+                .slots
+                .iter()
+                .filter(|(_, s)| s.resident.is_some() && s.pins == 0 && s.evictable)
+                .min_by_key(|(_, s)| s.last_use)
+                .map(|(&id, _)| id);
+            match victim {
+                Some(id) => {
+                    self.evict(id);
+                    evicted.push(id);
+                }
+                None => break,
+            }
+        }
+        evicted
+    }
+
+    /// Forcibly drop `id`'s resident payload regardless of budget (still
+    /// refuses pinned or non-evictable slots). Returns whether it evicted.
+    pub fn evict(&mut self, id: u64) -> bool {
+        match self.slots.get_mut(&id) {
+            Some(s) if s.resident.is_some() && s.pins == 0 && s.evictable => {
+                s.resident = None;
+                self.resident_bytes -= s.cost;
+                s.cost = 0;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Aggregate numbers.
+    pub fn stats(&self) -> ResidencyStats {
+        ResidencyStats {
+            tracked: self.slots.len(),
+            resident: self.slots.values().filter(|s| s.resident.is_some()).count(),
+            resident_bytes: self.resident_bytes,
+            budget_bytes: self.budget,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr(budget: u64) -> ResidencyManager<&'static str> {
+        ResidencyManager::new(Some(budget))
+    }
+
+    fn insert(m: &mut ResidencyManager<&'static str>, id: u64, cost: u64) -> Vec<u64> {
+        m.track(id);
+        m.mark_evictable(id);
+        m.insert(id, Arc::new("payload"), cost)
+    }
+
+    #[test]
+    fn evicts_lru_first_when_over_budget() {
+        let mut m = mgr(250);
+        assert!(insert(&mut m, 1, 100).is_empty());
+        assert!(insert(&mut m, 2, 100).is_empty());
+        // Touch 1 so 2 becomes the LRU.
+        assert!(m.get(1).is_some());
+        let evicted = insert(&mut m, 3, 100);
+        assert_eq!(evicted, vec![2]);
+        assert!(m.is_resident(1) && !m.is_resident(2) && m.is_resident(3));
+        assert_eq!(m.stats().resident_bytes, 200);
+    }
+
+    #[test]
+    fn pinned_entries_survive_any_pressure() {
+        let mut m = mgr(50);
+        m.track(1);
+        m.mark_evictable(1);
+        m.pin(1);
+        assert!(m.insert(1, Arc::new("a"), 100).is_empty()); // over budget but pinned
+        assert!(insert(&mut m, 2, 100).contains(&2) || !m.is_resident(2));
+        assert!(m.is_resident(1));
+        m.unpin(1);
+        assert_eq!(m.enforce(), vec![1]);
+        assert!(!m.is_resident(1));
+        assert_eq!(m.stats().resident_bytes, 0);
+    }
+
+    #[test]
+    fn non_evictable_entries_are_skipped() {
+        let mut m = mgr(50);
+        m.track(1);
+        // Not marked evictable: no artifact on disk yet.
+        assert!(m.insert(1, Arc::new("a"), 100).is_empty());
+        assert!(m.is_resident(1));
+        m.mark_evictable(1);
+        assert_eq!(m.enforce(), vec![1]);
+    }
+
+    #[test]
+    fn unbudgeted_never_evicts() {
+        let mut m: ResidencyManager<&'static str> = ResidencyManager::new(None);
+        for id in 0..16 {
+            m.track(id);
+            m.mark_evictable(id);
+            assert!(m.insert(id, Arc::new("x"), u64::MAX / 32).is_empty());
+        }
+        assert_eq!(m.stats().resident, 16);
+    }
+
+    #[test]
+    fn reinsert_replaces_cost_without_double_count() {
+        let mut m = mgr(1000);
+        insert(&mut m, 1, 400);
+        insert(&mut m, 1, 100);
+        assert_eq!(m.stats().resident_bytes, 100);
+        assert_eq!(m.stats().resident, 1);
+    }
+
+    #[test]
+    fn manual_evict_respects_pins() {
+        let mut m = mgr(1000);
+        insert(&mut m, 1, 10);
+        m.pin(1);
+        assert!(!m.evict(1));
+        m.unpin(1);
+        assert!(m.evict(1));
+        assert!(!m.evict(1)); // already cold
+    }
+}

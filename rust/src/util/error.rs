@@ -21,6 +21,26 @@ pub enum DtansError {
     /// Container (de)serialization failure.
     Container(String),
 
+    /// A container file does not start with the `CSRDTANS` magic — it is
+    /// not one of ours (distinct from [`DtansError::Container`] so callers
+    /// can tell "foreign file" from "ours but damaged").
+    BadMagic {
+        /// The eight bytes actually found where the magic should be.
+        found: [u8; 8],
+    },
+
+    /// A container file carries a version this build does not understand
+    /// (e.g. written by a future release).
+    UnsupportedVersion {
+        /// Version found in the file.
+        found: u32,
+        /// Highest version this build can read.
+        supported: u32,
+    },
+
+    /// A container file ended before a field could be read completely.
+    Truncated(String),
+
     /// Mismatched dimensions in an SpMVM call.
     Dimension(String),
 
@@ -53,6 +73,11 @@ impl DtansError {
             DtansError::InvalidMatrix(m) => DtansError::InvalidMatrix(m.clone()),
             DtansError::CorruptStream(m) => DtansError::CorruptStream(m.clone()),
             DtansError::Container(m) => DtansError::Container(m.clone()),
+            DtansError::BadMagic { found } => DtansError::BadMagic { found: *found },
+            DtansError::UnsupportedVersion { found, supported } => {
+                DtansError::UnsupportedVersion { found: *found, supported: *supported }
+            }
+            DtansError::Truncated(m) => DtansError::Truncated(m.clone()),
             DtansError::Dimension(m) => DtansError::Dimension(m.clone()),
             DtansError::MtxParse { line, msg } => DtansError::MtxParse {
                 line: *line,
@@ -72,6 +97,14 @@ impl fmt::Display for DtansError {
             DtansError::InvalidMatrix(m) => write!(f, "invalid matrix: {m}"),
             DtansError::CorruptStream(m) => write!(f, "corrupt stream: {m}"),
             DtansError::Container(m) => write!(f, "container format error: {m}"),
+            DtansError::BadMagic { found } => {
+                write!(f, "container format error: bad magic {:02x?}", found)
+            }
+            DtansError::UnsupportedVersion { found, supported } => write!(
+                f,
+                "container format error: unsupported version {found} (this build reads <= {supported})"
+            ),
+            DtansError::Truncated(m) => write!(f, "container format error: truncated file: {m}"),
             DtansError::Dimension(m) => write!(f, "dimension mismatch: {m}"),
             DtansError::MtxParse { line, msg } => {
                 write!(f, "matrix market parse error at line {line}: {msg}")
@@ -125,6 +158,22 @@ mod tests {
         assert_eq!(d.to_string(), e.to_string());
         let io: DtansError = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
         assert!(matches!(io.duplicate(), DtansError::Io(_)));
+    }
+
+    #[test]
+    fn container_variants_are_distinct_and_duplicate() {
+        let m = DtansError::BadMagic { found: *b"NOTDTANS" };
+        assert!(m.to_string().contains("bad magic"));
+        assert!(matches!(m.duplicate(), DtansError::BadMagic { .. }));
+        let v = DtansError::UnsupportedVersion { found: 9, supported: 1 };
+        assert!(v.to_string().contains("unsupported version 9"));
+        assert!(matches!(
+            v.duplicate(),
+            DtansError::UnsupportedVersion { found: 9, supported: 1 }
+        ));
+        let t = DtansError::Truncated("mid-array".into());
+        assert!(t.to_string().contains("truncated"));
+        assert!(matches!(t.duplicate(), DtansError::Truncated(_)));
     }
 
     #[test]

@@ -1,0 +1,187 @@
+//! Tiered-store acceptance tests: a service whose memory budget is far
+//! below its working set must answer every request **bit-identically** to
+//! an unbudgeted service, under concurrent load, with evictions and cold
+//! reloads observable in metrics — and re-registering an already
+//! persisted matrix must hit the artifact cache and skip encoding.
+
+use dtans::coordinator::{RoutePolicy, ServiceConfig, SpmvService};
+use dtans::matrix::gen::structured::{banded, powerlaw_rows};
+use dtans::matrix::gen::{assign_values, ValueDist};
+use dtans::matrix::Csr;
+use dtans::store::StoreConfig;
+use dtans::util::rng::Xoshiro256;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("dtans_it_store_{tag}_{}", std::process::id()))
+}
+
+/// A mixed zoo of ≥ 8 matrices: banded and power-law, compressible and
+/// not, so both router outcomes (CSR and CSR-dtANS) are exercised.
+fn zoo() -> Vec<Csr> {
+    let mut out = Vec::new();
+    for i in 0..5u64 {
+        let mut m = banded(500 + 200 * i as usize, 2 + (i as usize % 3));
+        assign_values(&mut m, ValueDist::FewDistinct(4 + i as usize), &mut Xoshiro256::seeded(i));
+        out.push(m);
+    }
+    for i in 0..4u64 {
+        let mut rng = Xoshiro256::seeded(100 + i);
+        let mut m = powerlaw_rows(400 + 100 * i as usize, 5.0, 1.2, &mut rng);
+        // Random values resist compression -> some matrices stay CSR.
+        let dist = if i % 2 == 0 { ValueDist::Random } else { ValueDist::Quantized(16) };
+        assign_values(&mut m, dist, &mut rng);
+        out.push(m);
+    }
+    out
+}
+
+fn request_vector(ncols: usize, seed: usize) -> Vec<f64> {
+    (0..ncols).map(|j| ((seed * 31 + j) as f64 * 0.001).sin()).collect()
+}
+
+#[test]
+fn budgeted_service_is_bit_identical_to_unbudgeted() {
+    let dir = temp_dir("bitident");
+    let mats = zoo();
+    assert!(mats.len() >= 8);
+    let policy = RoutePolicy { min_nnz: 1 << 9, max_size_ratio: 0.95 };
+
+    // Ground truth: an unbudgeted, serial service (the pre-store path).
+    let reference = SpmvService::start(ServiceConfig { policy, ..Default::default() });
+    // Subject: a budget far below the working set, CSR originals dropped
+    // for dtANS routes, everything persisted to the artifact cache.
+    let budgeted = SpmvService::start(ServiceConfig {
+        workers: 4,
+        policy,
+        store: StoreConfig {
+            cache_dir: Some(dir.clone()),
+            budget_bytes: Some(64 * 1024), // far below ~9 matrices' cost
+            drop_csr: true,
+            loader_threads: 2,
+        },
+        ..Default::default()
+    });
+
+    let mut ids = Vec::new();
+    for (i, m) in mats.iter().enumerate() {
+        let a = reference.register(&format!("m{i}"), m.clone()).unwrap();
+        let b = budgeted.register(&format!("m{i}"), m.clone()).unwrap();
+        // Same policy + same matrix -> same route on both services.
+        assert_eq!(reference.format_of(a), budgeted.format_of(b), "matrix {i}");
+        ids.push((a, b, m.ncols));
+    }
+    budgeted.store().flush(); // all artifacts on disk -> evictable
+
+    // Concurrent request stream from 4 threads, each sweeping the whole
+    // zoo repeatedly so cold faults and evictions interleave.
+    let reference = Arc::new(reference);
+    let budgeted = Arc::new(budgeted);
+    let ids = Arc::new(ids);
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let reference = Arc::clone(&reference);
+            let budgeted = Arc::clone(&budgeted);
+            let ids = Arc::clone(&ids);
+            std::thread::spawn(move || {
+                for round in 0..3 {
+                    for (i, &(ref_id, bud_id, ncols)) in ids.iter().enumerate() {
+                        let x = request_vector(ncols, t * 1000 + round * 100 + i);
+                        let want = reference.spmv(ref_id, x.clone()).unwrap();
+                        let got = budgeted.spmv(bud_id, x).unwrap();
+                        // Bit-identical, not merely close: eviction and
+                        // cold reload must not change a single ULP.
+                        assert_eq!(got, want, "thread {t} round {round} matrix {i}");
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let m = &budgeted.metrics;
+    assert!(
+        m.evictions.load(Ordering::Relaxed) > 0,
+        "budget below working set must evict: {}",
+        m.report()
+    );
+    assert!(
+        m.cold_loads.load(Ordering::Relaxed) > 0,
+        "evicted matrices must fault back in: {}",
+        m.report()
+    );
+    assert!(m.cold_load_summary().count > 0);
+    let stats = budgeted.store().stats();
+    assert_eq!(stats.registered, mats.len());
+    assert_eq!(stats.budget_bytes, Some(64 * 1024));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn reregistering_persisted_matrix_skips_encoding() {
+    let dir = temp_dir("rereg");
+    let mut m = banded(1500, 3);
+    assign_values(&mut m, ValueDist::FewDistinct(6), &mut Xoshiro256::seeded(9));
+
+    let mk = || {
+        SpmvService::start(ServiceConfig {
+            store: StoreConfig { cache_dir: Some(dir.clone()), ..Default::default() },
+            ..Default::default()
+        })
+    };
+
+    // First service: cold cache -> one miss (encode), persisted on flush.
+    let svc1 = mk();
+    let id1 = svc1.register("m", m.clone()).unwrap();
+    svc1.store().flush();
+    assert_eq!(svc1.metrics.store_misses.load(Ordering::Relaxed), 1);
+    assert_eq!(svc1.metrics.store_hits.load(Ordering::Relaxed), 0);
+    let want = svc1.spmv(id1, request_vector(m.ncols, 1)).unwrap();
+    drop(svc1);
+
+    // Second service over the same cache dir: the artifact survives the
+    // process' service, so registration hits and skips the encoder.
+    let svc2 = mk();
+    let id2 = svc2.register("m", m.clone()).unwrap();
+    assert_eq!(
+        svc2.metrics.store_hits.load(Ordering::Relaxed),
+        1,
+        "re-registering a persisted matrix must hit the artifact cache"
+    );
+    assert_eq!(
+        svc2.metrics.store_misses.load(Ordering::Relaxed),
+        0,
+        "artifact hit must skip encoding"
+    );
+    // And the loaded-from-disk encoding answers bit-identically.
+    let got = svc2.spmv(id2, request_vector(m.ncols, 1)).unwrap();
+    assert_eq!(got, want);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn register_path_roundtrip_through_service() {
+    let dir = temp_dir("regpath");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut m = banded(900, 2);
+    assign_values(&mut m, ValueDist::Quantized(8), &mut Xoshiro256::seeded(5));
+    let enc = dtans::format::CsrDtans::encode(&m, &Default::default()).unwrap();
+    let file = dir.join("m.dtans");
+    dtans::format::serialize::save(&enc, &file).unwrap();
+
+    let svc = SpmvService::start(ServiceConfig {
+        policy: RoutePolicy { min_nnz: 1 << 9, max_size_ratio: 0.95 },
+        ..Default::default()
+    });
+    let id = svc.register_path("from-artifact", &file).unwrap();
+    let x = request_vector(m.ncols, 7);
+    let mut want = vec![0.0; m.nrows];
+    dtans::spmv::spmv_csr(&m, &x, &mut want).unwrap();
+    let got = svc.spmv(id, x).unwrap();
+    dtans::util::propcheck::assert_close(&got, &want, 1e-12, 1e-9).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
