@@ -7,7 +7,7 @@
 use dtans::format::csr_dtans::{CsrDtans, EncodeOptions};
 use dtans::matrix::gen::{assign_values, gen_graph_csr, GraphModel, ValueDist};
 use dtans::matrix::{Precision, SizeModel};
-use dtans::spmv::{spmv_csr, spmv_csr_dtans, SpmvEngine};
+use dtans::spmv::{spmv_csr, spmv_csr_dtans, DtansOperator, SpmvEngine};
 use dtans::util::rng::Xoshiro256;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -59,10 +59,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     // 4. The same multiply through the parallel engine (nnz-balanced
     //    blocks across all CPUs) — bit-identical to the serial kernel.
+    //    The engine is format-agnostic: it takes any SpmvOperator, and the
+    //    dtANS operator owns its decode plan so repeated multiplies skip
+    //    the table build.
+    let op = DtansOperator::new(enc);
     let engine = SpmvEngine::auto();
     let mut y_par = vec![0.0; a.nrows];
     let t0 = std::time::Instant::now();
-    engine.spmv_csr_dtans(&enc, &x, &mut y_par)?;
+    engine.run(&op, &x, &mut y_par)?;
     let dt_par = t0.elapsed().as_secs_f64();
     assert_eq!(y_par, y, "parallel engine must be bit-identical");
     println!(

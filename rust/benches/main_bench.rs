@@ -2,10 +2,14 @@
 //! plain `harness = false` bench binary using util::timer's warmup/median
 //! machinery). Covers:
 //!
-//!  * microbenches: dtANS encode/decode throughput, per-kernel SpMVM;
+//!  * microbenches: dtANS encode/decode throughput, per-kernel SpMVM
+//!    (iterating the `FormatRegistry`, so new formats show up
+//!    automatically);
 //!  * engine benches: serial-vs-parallel scaling of the nnz-balanced
-//!    engine (`engine_scaling`) and the batched multi-RHS entry point
-//!    (`engine_batched`);
+//!    engine (`engine_scaling`), the batched multi-RHS entry point
+//!    (`engine_batched`), and the dyn-dispatch overhead of the
+//!    `SpmvOperator` trait path vs the direct kernels
+//!    (`operator_dispatch`, reporting to `results/BENCH_operator.json`);
 //!  * store benches: artifact-cache registration vs re-encode and
 //!    warm-vs-cold SpMV under eviction (`store_coldstart`), with a
 //!    machine-readable trajectory report at `results/BENCH_store.json`;
@@ -23,7 +27,8 @@ use dtans::matrix::gen::{assign_values, gen_graph_csr, GraphModel, ValueDist};
 use dtans::matrix::Csr;
 use dtans::spmv::csr_dtans::DecodePlan;
 use dtans::spmv::engine::{ParStrategy, SpmvEngine};
-use dtans::spmv::{spmv_coo, spmv_csr, spmv_csr_dtans, spmv_sell};
+use dtans::spmv::operator::{DtansOperator, FormatRegistry};
+use dtans::spmv::{spmv_csr, spmv_csr_dtans, DenseMat};
 use dtans::util::rng::Xoshiro256;
 use dtans::util::threadpool::ThreadPool;
 use dtans::util::timer::bench;
@@ -87,35 +92,29 @@ fn bench_kernels(filter: &Option<String>, quick: bool) {
     assign_values(&mut m, ValueDist::FewDistinct(8), &mut rng);
     let x: Vec<f64> = (0..m.ncols).map(|_| rng.next_f64()).collect();
     let mut y = vec![0.0; m.nrows];
-    let coo = m.to_coo();
-    let sell = dtans::matrix::Sell::from_csr(&m, 32);
-    let enc = CsrDtans::encode(&m, &EncodeOptions::default()).unwrap();
-    let bytes_csr = m.nnz() as f64 * 12.0;
+    let engine = SpmvEngine::serial();
 
-    let run = |name: &str, bytes: f64, f: &mut dyn FnMut()| {
-        let st = bench(2, 5, 0.5, f);
+    // One loop over the registry: every registered format (the dense
+    // oracle refuses matrices this large and is skipped), GB/s from each
+    // operator's actual resident bytes.
+    for (tag, op) in FormatRegistry::builtin().build_all(&m, &EncodeOptions::default()) {
+        let op = match op {
+            Ok(op) => op,
+            Err(_) => {
+                println!("kernels/{tag:<18} skipped (builder refused at this size)");
+                continue;
+            }
+        };
+        let st = bench(2, 5, 0.5, || {
+            y.iter_mut().for_each(|v| *v = 0.0);
+            engine.run(op.as_ref(), &x, &mut y).unwrap();
+        });
         println!(
-            "kernels/{name:<18} {} ({:.2} GB/s)",
+            "kernels/{tag:<18} {} ({:.2} GB/s resident)",
             st.display(),
-            bytes / st.median / 1e9
+            op.resident_bytes() as f64 / st.median / 1e9
         );
-    };
-    run("csr", bytes_csr, &mut || {
-        y.iter_mut().for_each(|v| *v = 0.0);
-        spmv_csr(&m, &x, &mut y).unwrap();
-    });
-    run("coo", m.nnz() as f64 * 16.0, &mut || {
-        y.iter_mut().for_each(|v| *v = 0.0);
-        spmv_coo(&coo, &x, &mut y).unwrap();
-    });
-    run("sell", sell.padded_cells() as f64 * 12.0, &mut || {
-        y.iter_mut().for_each(|v| *v = 0.0);
-        spmv_sell(&sell, &x, &mut y).unwrap();
-    });
-    run("csr_dtans", enc.size_report().total as f64, &mut || {
-        y.iter_mut().for_each(|v| *v = 0.0);
-        spmv_csr_dtans(&enc, &x, &mut y).unwrap();
-    });
+    }
 }
 
 fn bench_tans_vs_dtans(filter: &Option<String>) {
@@ -167,7 +166,6 @@ fn bench_engine_scaling(filter: &Option<String>, quick: bool) {
     let mut rng = Xoshiro256::seeded(6);
     assign_values(&mut m, ValueDist::FewDistinct(16), &mut rng);
     let enc = CsrDtans::encode(&m, &EncodeOptions::default()).unwrap();
-    let plan = DecodePlan::new(&enc);
     let x: Vec<f64> = (0..m.ncols).map(|_| rng.next_f64()).collect();
     let mut y = vec![0.0; m.nrows];
     println!(
@@ -176,6 +174,7 @@ fn bench_engine_scaling(filter: &Option<String>, quick: bool) {
         (m.nnz() as f64).log2(),
         enc.stream.len()
     );
+    let dtans_op = DtansOperator::new(enc); // owns its decode plan
 
     let mut threads = vec![1usize, 2, 4];
     let ncpu = ThreadPool::default_parallelism();
@@ -188,14 +187,14 @@ fn bench_engine_scaling(filter: &Option<String>, quick: bool) {
     let serial = SpmvEngine::serial();
     let st0 = bench(1, 3, 0.5, || {
         y.iter_mut().for_each(|v| *v = 0.0);
-        serial.spmv_csr_dtans_with_plan(&enc, &plan, &x, &mut y).unwrap();
+        serial.run(&dtans_op, &x, &mut y).unwrap();
     });
     println!("engine_scaling/dtans t=1     {} (serial baseline)", st0.display());
     for &t in &threads[1..] {
         let eng = SpmvEngine::new(ParStrategy::Fixed(t));
         let st = bench(1, 3, 0.5, || {
             y.iter_mut().for_each(|v| *v = 0.0);
-            eng.spmv_csr_dtans_with_plan(&enc, &plan, &x, &mut y).unwrap();
+            eng.run(&dtans_op, &x, &mut y).unwrap();
         });
         println!(
             "engine_scaling/dtans t={t:<2}    {} ({:.2}x speedup over serial)",
@@ -207,14 +206,14 @@ fn bench_engine_scaling(filter: &Option<String>, quick: bool) {
     // Plain CSR for reference (bandwidth-bound ceiling).
     let sc0 = bench(1, 3, 0.5, || {
         y.iter_mut().for_each(|v| *v = 0.0);
-        serial.spmv_csr(&m, &x, &mut y).unwrap();
+        serial.run(&m, &x, &mut y).unwrap();
     });
     println!("engine_scaling/csr   t=1     {} (serial baseline)", sc0.display());
     for &t in &threads[1..] {
         let eng = SpmvEngine::new(ParStrategy::Fixed(t));
         let sc = bench(1, 3, 0.5, || {
             y.iter_mut().for_each(|v| *v = 0.0);
-            eng.spmv_csr(&m, &x, &mut y).unwrap();
+            eng.run(&m, &x, &mut y).unwrap();
         });
         println!(
             "engine_scaling/csr   t={t:<2}    {} ({:.2}x speedup over serial)",
@@ -236,19 +235,21 @@ fn bench_engine_batched(filter: &Option<String>, quick: bool) {
     assign_values(&mut m, ValueDist::Quantized(128), &mut rng);
     let enc = CsrDtans::encode(&m, &EncodeOptions::default()).unwrap();
     let plan = DecodePlan::new(&enc);
+    let op = DtansOperator::new(enc.clone());
     let engine = SpmvEngine::auto();
     for k in [1usize, 4, 16] {
-        let xs: Vec<Vec<f64>> = (0..k)
+        let cols: Vec<Vec<f64>> = (0..k)
             .map(|_| (0..m.ncols).map(|_| rng.next_f64() - 0.5).collect())
             .collect();
+        let xs = DenseMat::from_cols(m.ncols, &cols).unwrap();
         let st_serial = bench(1, 3, 0.3, || {
-            for x in &xs {
+            for x in &cols {
                 let mut y = vec![0.0; m.nrows];
                 dtans::spmv::csr_dtans::spmv_with_plan(&enc, &plan, x, &mut y).unwrap();
             }
         });
         let st_batch = bench(1, 3, 0.3, || {
-            engine.spmm_csr_dtans_with_plan(&enc, &plan, &xs).unwrap();
+            engine.run_multi(&op, &xs).unwrap();
         });
         println!(
             "engine_batched/k={k:<3}        {} vs {} serial ({:.2}x, {:.3} Gnnz/s)",
@@ -258,6 +259,71 @@ fn bench_engine_batched(filter: &Option<String>, quick: bool) {
             (m.nnz() * k) as f64 / st_batch.median / 1e9
         );
     }
+}
+
+/// Dyn-dispatch overhead of the `SpmvOperator` trait path vs the direct
+/// kernel entry points, on the same ~2.3M-nnz scaling matrix as
+/// `engine_scaling` (full mode). Both sides run serially so the only
+/// difference is the trait surface: one virtual call per multiply plus
+/// the cost-prefix/units bookkeeping — expected (and asserted by the
+/// acceptance bar) to sit within 5% of the direct kernels. Emits a
+/// machine-readable `results/BENCH_operator.json`.
+fn bench_operator_dispatch(filter: &Option<String>, quick: bool) {
+    if !should_run(filter, "operator_dispatch") {
+        return;
+    }
+    let n = if quick { 1 << 15 } else { 1 << 18 };
+    let mut m = banded(n, 4); // ~9 nnz/row -> full mode ~2.3M nnz
+    let mut rng = Xoshiro256::seeded(9);
+    assign_values(&mut m, ValueDist::FewDistinct(16), &mut rng);
+    let enc = CsrDtans::encode(&m, &EncodeOptions::default()).unwrap();
+    let plan = DecodePlan::new(&enc);
+    let op_dtans = DtansOperator::new(enc.clone());
+    let x: Vec<f64> = (0..m.ncols).map(|_| rng.next_f64()).collect();
+    let mut y = vec![0.0; m.nrows];
+    let engine = SpmvEngine::serial();
+    println!(
+        "operator_dispatch            matrix: {} nnz (2^{:.1})",
+        m.nnz(),
+        (m.nnz() as f64).log2()
+    );
+
+    let measure = |f: &mut dyn FnMut()| bench(2, 7, 0.5, f).median;
+    let csr_direct = measure(&mut || {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        spmv_csr(&m, &x, &mut y).unwrap();
+    });
+    let csr_dyn = measure(&mut || {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        engine.run(&m, &x, &mut y).unwrap();
+    });
+    let dtans_direct = measure(&mut || {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        dtans::spmv::csr_dtans::spmv_with_plan(&enc, &plan, &x, &mut y).unwrap();
+    });
+    let dtans_dyn = measure(&mut || {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        engine.run(&op_dtans, &x, &mut y).unwrap();
+    });
+    let pct = |direct: f64, dynp: f64| (dynp / direct - 1.0) * 100.0;
+    let csr_overhead = pct(csr_direct, csr_dyn);
+    let dtans_overhead = pct(dtans_direct, dtans_dyn);
+    println!(
+        "operator_dispatch/csr        direct {csr_direct:.6}s vs dyn {csr_dyn:.6}s ({csr_overhead:+.2}% overhead)"
+    );
+    println!(
+        "operator_dispatch/csr_dtans  direct {dtans_direct:.6}s vs dyn {dtans_dyn:.6}s ({dtans_overhead:+.2}% overhead)"
+    );
+
+    let outdir = Path::new("results");
+    let _ = std::fs::create_dir_all(outdir);
+    let json = format!(
+        "{{\n  \"bench\": \"operator_dispatch\",\n  \"quick\": {},\n  \"nnz\": {},\n  \"csr_direct_s\": {:.6},\n  \"csr_dyn_s\": {:.6},\n  \"csr_overhead_pct\": {:.3},\n  \"csr_dtans_direct_s\": {:.6},\n  \"csr_dtans_dyn_s\": {:.6},\n  \"csr_dtans_overhead_pct\": {:.3},\n  \"acceptance_bar_pct\": 5.0\n}}\n",
+        quick, m.nnz(), csr_direct, csr_dyn, csr_overhead, dtans_direct, dtans_dyn, dtans_overhead,
+    );
+    let path = outdir.join("BENCH_operator.json");
+    std::fs::write(&path, json).expect("write BENCH_operator.json");
+    println!("operator_dispatch/report     wrote {}", path.display());
 }
 
 /// Tiered-store cold-start bench: (1) register-from-artifact vs
@@ -347,7 +413,7 @@ fn bench_store_coldstart(filter: &Option<String>, quick: bool) {
     ) {
         let p = store.acquire(id).unwrap();
         y.iter_mut().for_each(|v| *v = 0.0);
-        engine.spmv_csr_dtans_with_plan(&p.enc, &p.plan, x, y).unwrap();
+        engine.run(p.op.as_ref(), x, y).unwrap();
     }
     let st_warm = bench(1, 5, 0.2, || {
         acquire_and_spmv(&store, &engine, ids[0], &x, &mut y)
@@ -450,6 +516,7 @@ fn main() {
     bench_tans_vs_dtans(&filter);
     bench_engine_scaling(&filter, quick);
     bench_engine_batched(&filter, quick);
+    bench_operator_dispatch(&filter, quick);
     bench_store_coldstart(&filter, quick);
     bench_large_banded(&filter, quick);
     bench_experiments(&filter, quick);

@@ -1,6 +1,10 @@
 //! Service metrics: request counters, store counters, and latency
-//! quantiles over fixed-size sliding-window reservoirs.
+//! quantiles over fixed-size sliding-window reservoirs — aggregate and
+//! broken out per kernel format
+//! ([`SpmvOperator::format_tag`](crate::spmv::operator::SpmvOperator::format_tag)),
+//! so dtANS vs CSR routing is observable in production.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -55,6 +59,30 @@ pub struct Metrics {
     pub cold_loads: AtomicU64,
     latencies_us: Mutex<Ring>,
     cold_load_us: Mutex<Ring>,
+    /// Per-format breakdown, keyed by the executing operator's
+    /// `format_tag()` (`BTreeMap` so reports list formats in a stable
+    /// order).
+    per_format: Mutex<BTreeMap<&'static str, FormatStats>>,
+}
+
+/// Per-format counters + latency reservoir.
+#[derive(Debug, Default)]
+struct FormatStats {
+    completed: u64,
+    failed: u64,
+    ring: Ring,
+}
+
+/// Snapshot of one format's request counters and latency quantiles (see
+/// [`Metrics::format_summary`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FormatSummary {
+    /// Requests completed successfully on this format's kernel.
+    pub completed: u64,
+    /// Requests that failed while executing on this format's kernel.
+    pub failed: u64,
+    /// Latency quantiles over this format's sliding window.
+    pub latency: LatencySummary,
 }
 
 /// Quantile summary of a latency reservoir.
@@ -94,6 +122,39 @@ impl Metrics {
         self.latencies_us.lock().unwrap().push(micros);
     }
 
+    /// Record one completed request's latency against both the aggregate
+    /// window and the executing format's own window.
+    pub fn record_format_latency(&self, tag: &'static str, micros: u64) {
+        self.record_latency(micros);
+        let mut per = self.per_format.lock().unwrap();
+        let stats = per.entry(tag).or_default();
+        stats.completed += 1;
+        stats.ring.push(micros);
+    }
+
+    /// Record one failed request against both the aggregate `failed`
+    /// counter and the executing format's own counter.
+    pub fn record_format_failure(&self, tag: &'static str) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+        self.per_format.lock().unwrap().entry(tag).or_default().failed += 1;
+    }
+
+    /// Snapshot one format's counters and latency quantiles; `None` if no
+    /// request has executed on that format.
+    pub fn format_summary(&self, tag: &str) -> Option<FormatSummary> {
+        let per = self.per_format.lock().unwrap();
+        per.get(tag).map(|s| FormatSummary {
+            completed: s.completed,
+            failed: s.failed,
+            latency: LatencySummary::from_samples(s.ring.buf.clone()),
+        })
+    }
+
+    /// Tags that have recorded at least one request, in stable order.
+    pub fn format_tags(&self) -> Vec<&'static str> {
+        self.per_format.lock().unwrap().keys().copied().collect()
+    }
+
     /// Record one cold load (store fault-in) latency.
     pub fn record_cold_load(&self, micros: u64) {
         self.cold_loads.fetch_add(1, Ordering::Relaxed);
@@ -110,11 +171,13 @@ impl Metrics {
         LatencySummary::from_samples(self.cold_load_us.lock().unwrap().buf.clone())
     }
 
-    /// One-line human-readable report.
+    /// One-line human-readable report: the aggregate counters and
+    /// quantiles, followed by one `fmt[tag]` section per format that has
+    /// served requests.
     pub fn report(&self) -> String {
         let s = self.latency_summary();
         let c = self.cold_load_summary();
-        format!(
+        let mut out = format!(
             "submitted={} completed={} failed={} batches={} p50={}µs p99={}µs max={}µs \
              store_hits={} store_misses={} evictions={} persist_failures={} cold_loads={} \
              cold_p50={}µs cold_p99={}µs",
@@ -132,7 +195,16 @@ impl Metrics {
             self.cold_loads.load(Ordering::Relaxed),
             c.p50_us,
             c.p99_us,
-        )
+        );
+        let per = self.per_format.lock().unwrap();
+        for (tag, stats) in per.iter() {
+            let f = LatencySummary::from_samples(stats.ring.buf.clone());
+            out.push_str(&format!(
+                " | fmt[{tag}]: ok={} fail={} p50={}µs p99={}µs",
+                stats.completed, stats.failed, f.p50_us, f.p99_us
+            ));
+        }
+        out
     }
 }
 
@@ -181,6 +253,35 @@ mod tests {
             s.p50_us
         );
         assert_eq!(m.completed.load(Ordering::Relaxed), n as u64);
+    }
+
+    #[test]
+    fn per_format_breakdown_is_independent_and_reported() {
+        let m = Metrics::default();
+        for i in 1..=50 {
+            m.record_format_latency("csr", i);
+        }
+        for i in 100..=120 {
+            m.record_format_latency("csr_dtans", i);
+        }
+        m.record_format_failure("csr_dtans");
+        // Aggregate sees everything.
+        assert_eq!(m.completed.load(Ordering::Relaxed), 71);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.latency_summary().count, 71);
+        // Per-format windows are disjoint.
+        let csr = m.format_summary("csr").unwrap();
+        assert_eq!((csr.completed, csr.failed), (50, 0));
+        assert_eq!(csr.latency.count, 50);
+        assert!(csr.latency.max_us <= 50);
+        let dt = m.format_summary("csr_dtans").unwrap();
+        assert_eq!((dt.completed, dt.failed), (21, 1));
+        assert!(dt.latency.p50_us >= 100);
+        assert!(m.format_summary("sell").is_none());
+        assert_eq!(m.format_tags(), vec!["csr", "csr_dtans"]);
+        let report = m.report();
+        assert!(report.contains("fmt[csr]: ok=50 fail=0"), "{report}");
+        assert!(report.contains("fmt[csr_dtans]: ok=21 fail=1"), "{report}");
     }
 
     #[test]

@@ -8,6 +8,6 @@ pub mod metrics;
 pub mod router;
 pub mod service;
 
-pub use metrics::{LatencySummary, Metrics};
+pub use metrics::{FormatSummary, LatencySummary, Metrics};
 pub use router::{FormatChoice, RoutePolicy};
 pub use service::{LoadedMatrix, Pending, ServiceConfig, SpmvService};

@@ -1,5 +1,7 @@
 //! Format routing: decide, per registered matrix, whether SpMVM requests
-//! run over CSR-dtANS or plain CSR.
+//! run over CSR-dtANS or plain CSR — and hand back the chosen format as
+//! an [`SpmvOperator`], the one kernel surface the rest of the
+//! coordinator executes against.
 //!
 //! The policy distills the paper's Tables I–II conclusion: "size is the
 //! most important feature to predict whether a matrix is likely to see a
@@ -10,6 +12,9 @@
 use crate::format::csr_dtans::{CsrDtans, EncodeOptions};
 use crate::matrix::csr::Csr;
 use crate::matrix::SizeModel;
+use crate::spmv::operator::{DtansOperator, SpmvOperator};
+use crate::util::error::{DtansError, Result};
+use std::sync::Arc;
 
 /// Routing decision for one matrix.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -18,6 +23,17 @@ pub enum FormatChoice {
     Csr,
     /// Entropy-coded CSR-dtANS kernel.
     CsrDtans,
+}
+
+impl FormatChoice {
+    /// The [`SpmvOperator::format_tag`] the choice routes to — the key
+    /// used by per-format metrics.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            FormatChoice::Csr => "csr",
+            FormatChoice::CsrDtans => "csr_dtans",
+        }
+    }
 }
 
 /// Tunable routing thresholds (defaults follow the paper's findings,
@@ -81,6 +97,27 @@ impl RoutePolicy {
             FormatChoice::Csr
         }
     }
+
+    /// Materialize a routing decision as the operator the service will
+    /// execute against: the CSR original for [`FormatChoice::Csr`] (an
+    /// error if none is held — the store's residency rules guarantee one
+    /// exists for CSR-routed matrices), a [`DtansOperator`] (owning its
+    /// decode plan) for [`FormatChoice::CsrDtans`].
+    pub fn operator_for(
+        choice: FormatChoice,
+        csr: Option<&Arc<Csr>>,
+        enc: &Arc<CsrDtans>,
+    ) -> Result<Arc<dyn SpmvOperator>> {
+        match choice {
+            FormatChoice::Csr => match csr {
+                Some(csr) => Ok(Arc::clone(csr) as Arc<dyn SpmvOperator>),
+                None => Err(DtansError::Service(
+                    "CSR-routed matrix has no resident CSR original".into(),
+                )),
+            },
+            FormatChoice::CsrDtans => Ok(Arc::new(DtansOperator::new(Arc::clone(enc)))),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -121,6 +158,19 @@ mod tests {
         assert_eq!(p.choose_encoded(&enc), p.choose(&m, &enc, &opts));
         let small = CsrDtans::encode(&banded(100, 2), &opts).unwrap();
         assert_eq!(p.choose_encoded(&small), FormatChoice::Csr);
+    }
+
+    #[test]
+    fn operator_for_materializes_the_choice() {
+        let m = Arc::new(banded(100, 2));
+        let enc = Arc::new(CsrDtans::encode(&m, &EncodeOptions::default()).unwrap());
+        let op = RoutePolicy::operator_for(FormatChoice::Csr, Some(&m), &enc).unwrap();
+        assert_eq!(op.format_tag(), FormatChoice::Csr.tag());
+        assert_eq!(op.dims(), (100, 100));
+        let op = RoutePolicy::operator_for(FormatChoice::CsrDtans, None, &enc).unwrap();
+        assert_eq!(op.format_tag(), FormatChoice::CsrDtans.tag());
+        // A CSR-routed matrix without its original is a service error.
+        assert!(RoutePolicy::operator_for(FormatChoice::Csr, None, &enc).is_err());
     }
 
     #[test]

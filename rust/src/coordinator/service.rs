@@ -5,13 +5,18 @@
 //! requests to the same matrix into batches (amortizing plan lookups and
 //! keeping the decode tables hot, the same motivation as GPU batching).
 //! Singleton batches run as jobs on a worker pool; multi-request batches
-//! take the SpMM fast path — one multi-RHS engine call for the whole
-//! batch, fanning the (request × row-block) grid across the engine's
-//! threads. Either way the kernel work routes through a shared
-//! [`SpmvEngine`] whose [`ParStrategy`] comes from [`ServiceConfig::par`]
+//! take the SpMM fast path — the batch packed into one contiguous
+//! column-major [`DenseMat`] and run through a single multi-RHS engine
+//! call, fanning the (request × row-block) grid across the engine's
+//! threads. Either way the kernel work is format-agnostic: every matrix
+//! carries its routed
+//! [`SpmvOperator`](crate::spmv::operator::SpmvOperator) and the shared
+//! [`SpmvEngine`] executes `run`/`run_multi` against that trait object,
+//! with the [`ParStrategy`] coming from [`ServiceConfig::par`]
 //! (`ParStrategy::Serial` restores the old one-thread-per-request
-//! behavior). Responses are delivered over per-request channels.
-//! Everything is std-thread based.
+//! behavior). Responses are delivered over per-request channels; metrics
+//! are recorded per executing `format_tag()`. Everything is std-thread
+//! based.
 //!
 //! Matrix lifetime is owned by the tiered [`MatrixStore`]
 //! ([`crate::store`]): registration goes through the on-disk artifact
@@ -27,6 +32,7 @@ use super::metrics::Metrics;
 use super::router::{FormatChoice, RoutePolicy};
 use crate::format::csr_dtans::EncodeOptions;
 use crate::matrix::csr::Csr;
+use crate::spmv::densemat::DenseMat;
 use crate::spmv::engine::{ParStrategy, SpmvEngine};
 use crate::store::{MatrixStore, PinnedMatrix, StoreConfig};
 use crate::util::error::{DtansError, Result};
@@ -267,13 +273,14 @@ fn dispatcher_loop(
                         let _ = req.resp.send(Err(e));
                     }
                     Ok(pinned) => {
+                        let tag = pinned.op.format_tag();
                         let result = run_one(&pinned, &engine, &req.x);
                         match &result {
-                            Ok(_) => metrics
-                                .record_latency(req.submitted.elapsed().as_micros() as u64),
-                            Err(_) => {
-                                metrics.failed.fetch_add(1, Ordering::Relaxed);
-                            }
+                            Ok(_) => metrics.record_format_latency(
+                                tag,
+                                req.submitted.elapsed().as_micros() as u64,
+                            ),
+                            Err(_) => metrics.record_format_failure(tag),
                         }
                         let _ = req.resp.send(result);
                     }
@@ -312,13 +319,13 @@ fn process_batch(
             // per-multiply fan-out would buy little — while re-dispatching
             // per-request jobs from inside a pool job would require the
             // pool to own an Arc of itself (a self-join hazard on drop).
+            let tag = pinned.op.format_tag();
             for req in batch {
                 let result = run_one(&pinned, engine, &req.x);
                 match &result {
-                    Ok(_) => metrics.record_latency(req.submitted.elapsed().as_micros() as u64),
-                    Err(_) => {
-                        metrics.failed.fetch_add(1, Ordering::Relaxed);
-                    }
+                    Ok(_) => metrics
+                        .record_format_latency(tag, req.submitted.elapsed().as_micros() as u64),
+                    Err(_) => metrics.record_format_failure(tag),
                 }
                 let _ = req.resp.send(result);
             }
@@ -327,8 +334,10 @@ fn process_batch(
 }
 
 /// SpMM fast path for a multi-request batch: dimension-check each request
-/// up front (so one malformed vector cannot poison the batch), then run
-/// all remaining right-hand sides through a single batched engine call.
+/// up front (so one malformed vector cannot poison the batch), pack the
+/// accepted right-hand sides into one contiguous column-major [`DenseMat`]
+/// and run them through a single batched engine call over the matrix's
+/// routed operator.
 fn run_spmm_batch(
     pinned: &PinnedMatrix,
     batch: Vec<Request>,
@@ -336,6 +345,7 @@ fn run_spmm_batch(
     metrics: &Metrics,
 ) {
     let mat: &LoadedMatrix = pinned;
+    let tag = mat.op.format_tag();
     let (nrows, ncols) = (mat.nrows, mat.ncols);
     let mut xs = Vec::with_capacity(batch.len());
     let mut accepted = Vec::with_capacity(batch.len());
@@ -344,7 +354,7 @@ fn run_spmm_batch(
             xs.push(req.x);
             accepted.push((req.resp, req.submitted));
         } else {
-            metrics.failed.fetch_add(1, Ordering::Relaxed);
+            metrics.record_format_failure(tag);
             // Same message shape as the per-request path (check_dims with
             // the nrows-sized output the run would have used), so clients
             // see one error text regardless of how requests batched.
@@ -357,17 +367,13 @@ fn run_spmm_batch(
     if accepted.is_empty() {
         return;
     }
-    let result = match (mat.choice, &mat.csr) {
-        (FormatChoice::Csr, Some(csr)) => engine.spmm_csr(csr, &xs),
-        (FormatChoice::Csr, None) => Err(DtansError::Service(
-            "CSR-routed matrix has no resident CSR original".into(),
-        )),
-        (FormatChoice::CsrDtans, _) => engine.spmm_csr_dtans_with_plan(&mat.enc, &mat.plan, &xs),
-    };
+    // Lengths were pre-checked against ncols, so packing cannot fail.
+    let result = DenseMat::from_cols(ncols, &xs)
+        .and_then(|xs_mat| engine.run_multi(mat.op.as_ref(), &xs_mat));
     match result {
         Ok(ys) => {
-            for ((resp, submitted), y) in accepted.into_iter().zip(ys) {
-                metrics.record_latency(submitted.elapsed().as_micros() as u64);
+            for ((resp, submitted), y) in accepted.into_iter().zip(ys.into_cols()) {
+                metrics.record_format_latency(tag, submitted.elapsed().as_micros() as u64);
                 let _ = resp.send(Ok(y));
             }
         }
@@ -376,7 +382,7 @@ fn run_spmm_batch(
             // request in the batch sees the same error — with its variant
             // preserved, exactly as the per-request path would report it.
             for (resp, _) in accepted {
-                metrics.failed.fetch_add(1, Ordering::Relaxed);
+                metrics.record_format_failure(tag);
                 let _ = resp.send(Err(e.duplicate()));
             }
         }
@@ -385,17 +391,7 @@ fn run_spmm_batch(
 
 fn run_one(mat: &LoadedMatrix, engine: &SpmvEngine, x: &[f64]) -> Result<Vec<f64>> {
     let mut y = vec![0.0; mat.nrows];
-    match (mat.choice, &mat.csr) {
-        (FormatChoice::Csr, Some(csr)) => engine.spmv_csr(csr, x, &mut y)?,
-        (FormatChoice::Csr, None) => {
-            return Err(DtansError::Service(
-                "CSR-routed matrix has no resident CSR original".into(),
-            ))
-        }
-        (FormatChoice::CsrDtans, _) => {
-            engine.spmv_csr_dtans_with_plan(&mat.enc, &mat.plan, x, &mut y)?
-        }
-    }
+    engine.run(mat.op.as_ref(), x, &mut y)?;
     Ok(y)
 }
 
@@ -419,6 +415,12 @@ mod tests {
         let got = svc.spmv(id, x).unwrap();
         crate::util::propcheck::assert_close(&got, &want, 1e-12, 1e-12).unwrap();
         assert!(svc.metrics.latency_summary().count >= 1);
+        // A 200x200 banded matrix is below the routing threshold: the
+        // request must show up under the CSR format's own metrics.
+        let tag = svc.format_of(id).unwrap().tag();
+        assert_eq!(tag, "csr");
+        let fs = svc.metrics.format_summary(tag).unwrap();
+        assert!(fs.completed >= 1 && fs.latency.count >= 1);
     }
 
     #[test]

@@ -23,10 +23,13 @@
 //!   byte-accurate size accounting.
 //! * [`spmv`] — SpMVM kernels for dense/CSR/COO/SELL/CSR-dtANS, including
 //!   the warp-synchronous on-the-fly-decoding kernel (the CUDA kernel's
-//!   semantics executed in lockstep on the CPU), plus the parallel
-//!   [`spmv::engine`]: an nnz-balanced partitioner + thread-pool executor
-//!   (bit-identical to the serial kernels) with batched multi-RHS entry
-//!   points.
+//!   semantics executed in lockstep on the CPU). On top sits the
+//!   format-agnostic [`spmv::operator`] layer — the object-safe
+//!   [`spmv::SpmvOperator`] trait every format implements, plus a
+//!   [`spmv::FormatRegistry`] — and the parallel [`spmv::engine`]: an
+//!   nnz-balanced partitioner + thread-pool executor (bit-identical to
+//!   the serial kernels) with batched multi-RHS entry points over
+//!   contiguous [`spmv::densemat`] views.
 //! * [`sim`] — a GPU execution-model simulator (coalescing, L2, DRAM
 //!   roofline) that stands in for the paper's RTX 5090 when regenerating
 //!   the runtime figures/tables.

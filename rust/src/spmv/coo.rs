@@ -18,10 +18,17 @@ use crate::util::error::Result;
 /// ```
 pub fn spmv_coo(m: &Coo, x: &[f64], y: &mut [f64]) -> Result<()> {
     super::check_dims(m.nrows, m.ncols, x, y)?;
+    scatter(m, x, y);
+    Ok(())
+}
+
+/// The scatter loop shared by [`spmv_coo`] and the COO
+/// [`SpmvOperator`](crate::spmv::operator::SpmvOperator) impl, so both
+/// paths are bit-identical by construction.
+pub(crate) fn scatter(m: &Coo, x: &[f64], y: &mut [f64]) {
     for i in 0..m.nnz() {
         y[m.rows[i] as usize] += m.vals[i] * x[m.cols[i] as usize];
     }
-    Ok(())
 }
 
 #[cfg(test)]

@@ -72,9 +72,9 @@ impl DecodePlan {
 
 /// `y += A·x` over a CSR-dtANS matrix (single-threaded).
 ///
-/// Builds a fresh [`DecodePlan`]; use [`spmv_with_plan`] (or the engine's
-/// [`crate::spmv::engine::SpmvEngine::spmv_csr_dtans_with_plan`]) to reuse
-/// the plan across multiplies.
+/// Builds a fresh [`DecodePlan`]; use [`spmv_with_plan`] — or better, a
+/// [`DtansOperator`](crate::spmv::operator::DtansOperator), which owns its
+/// plan — to reuse the plan across multiplies.
 ///
 /// ```
 /// use dtans::format::csr_dtans::{CsrDtans, EncodeOptions};
@@ -125,13 +125,16 @@ pub(crate) fn spmv_slice_range(
 }
 
 /// Parallel variant over a caller-provided pool: slices fan out in
-/// nnz-balanced blocks (see [`crate::spmv::engine::partition_dtans`]),
-/// each writing its disjoint `y` range in place — no per-slice copies.
-/// Bit-identical to the serial [`spmv_csr_dtans`].
+/// nnz-balanced blocks (see [`crate::spmv::engine::partition_prefix`],
+/// applied to the slice word-offset table), each writing its disjoint `y`
+/// range in place — no per-slice copies. Bit-identical to the serial
+/// [`spmv_csr_dtans`].
 ///
-/// Prefer [`crate::spmv::engine::SpmvEngine`], which owns its pool and
-/// adds strategy selection plus batched entry points; this free function
-/// remains for callers that already manage a [`ThreadPool`].
+/// Prefer [`crate::spmv::engine::SpmvEngine::run`] over a
+/// [`DtansOperator`](crate::spmv::operator::DtansOperator), which owns its
+/// pool and plan and adds strategy selection plus batched entry points;
+/// this free function remains for callers that already manage a
+/// [`ThreadPool`].
 pub fn spmv_csr_dtans_parallel(
     m: &CsrDtans,
     x: &[f64],
@@ -140,7 +143,11 @@ pub fn spmv_csr_dtans_parallel(
 ) -> Result<()> {
     super::check_dims(m.nrows, m.ncols, x, y)?;
     let plan = DecodePlan::new(m);
-    let blocks = super::engine::partition_dtans(m, pool.size());
+    // The by-projection partitions the u32 slice-offset table directly —
+    // no widened copy on this per-call path (the operator API instead
+    // widens once at `DtansOperator` construction).
+    let blocks =
+        super::engine::partition::partition_prefix_by(&m.slice_offsets, |&w| w as usize, pool.size());
     super::engine::run_blocks(
         pool,
         &blocks,

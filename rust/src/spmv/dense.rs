@@ -15,13 +15,30 @@ use crate::util::error::Result;
 pub fn spmv_dense(a: &[f64], nrows: usize, ncols: usize, x: &[f64], y: &mut [f64]) -> Result<()> {
     super::check_dims(nrows, ncols, x, y)?;
     assert_eq!(a.len(), nrows * ncols);
-    for r in 0..nrows {
+    spmv_dense_row_range(a, ncols, 0, nrows, x, y)
+}
+
+/// Dense kernel over rows `r0..r1`; `y_seg[i]` accumulates row `r0 + i`.
+/// The whole-matrix [`spmv_dense`] is the `0..nrows` case and the dense
+/// [`SpmvOperator`](crate::spmv::operator::SpmvOperator) fans out disjoint
+/// ranges, so both paths share one loop and bit-identical results hold by
+/// construction.
+pub(crate) fn spmv_dense_row_range(
+    a: &[f64],
+    ncols: usize,
+    r0: usize,
+    r1: usize,
+    x: &[f64],
+    y_seg: &mut [f64],
+) -> Result<()> {
+    debug_assert_eq!(y_seg.len(), r1 - r0);
+    for (i, r) in (r0..r1).enumerate() {
         let row = &a[r * ncols..(r + 1) * ncols];
         let mut acc = 0.0;
         for (av, xv) in row.iter().zip(x) {
             acc += av * xv;
         }
-        y[r] += acc;
+        y_seg[i] += acc;
     }
     Ok(())
 }

@@ -1,0 +1,197 @@
+//! Contiguous column-major dense matrices for multi-right-hand-side
+//! (SpMM-style) multiplies.
+//!
+//! The engine's batched entry points used to take `&[Vec<f64>]` — one heap
+//! allocation per right-hand side, with no locality guarantee between
+//! them. [`DenseMat`] packs `k` vectors of length `nrows` into one
+//! contiguous buffer, column-major: column `j` (one right-hand side or one
+//! output vector) is the slice `data[j*nrows .. (j+1)*nrows]`. Columns
+//! being contiguous is what lets the parallel engine hand each
+//! (column × row-block) job a disjoint `&mut` segment via `split_at_mut`,
+//! so multi-RHS results stay **bit-identical** to repeated single-vector
+//! multiplies.
+//!
+//! [`DenseMatMut`] is the borrowed mutable view the
+//! [`SpmvOperator::run_range_multi`](crate::spmv::operator::SpmvOperator::run_range_multi)
+//! contract is written against: a kernel receives the view covering
+//! exactly its block's rows, for every column.
+//!
+//! ```
+//! use dtans::spmv::densemat::DenseMat;
+//! let m = DenseMat::from_cols(2, &[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+//! assert_eq!(m.col(1), &[3.0, 4.0]);
+//! assert_eq!(m.as_slice(), &[1.0, 2.0, 3.0, 4.0]); // column-major
+//! ```
+
+use crate::util::error::{DtansError, Result};
+
+/// Owned column-major dense matrix: `ncols` columns of `nrows` contiguous
+/// values each. In SpMM use, `nrows` is the vector length and `ncols` the
+/// number of right-hand sides (`k`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseMat {
+    data: Vec<f64>,
+    nrows: usize,
+    ncols: usize,
+}
+
+impl DenseMat {
+    /// All-zero matrix of the given shape.
+    pub fn zeros(nrows: usize, ncols: usize) -> DenseMat {
+        DenseMat { data: vec![0.0; nrows * ncols], nrows, ncols }
+    }
+
+    /// Pack column vectors into one contiguous buffer. Every column must
+    /// have length `nrows`; the first mismatch is reported by index (the
+    /// same contract the engine's old `&[Vec<f64>]` batch check had).
+    pub fn from_cols(nrows: usize, cols: &[Vec<f64>]) -> Result<DenseMat> {
+        let mut data = Vec::with_capacity(nrows * cols.len());
+        for (j, c) in cols.iter().enumerate() {
+            if c.len() != nrows {
+                return Err(DtansError::Dimension(format!(
+                    "batch rhs {j}: x[{}] for {nrows} rows",
+                    c.len()
+                )));
+            }
+            data.extend_from_slice(c);
+        }
+        Ok(DenseMat { data, nrows, ncols: cols.len() })
+    }
+
+    /// Rows per column (the vector length).
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    /// Number of columns (right-hand sides).
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Column `j` as a contiguous slice.
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.nrows..(j + 1) * self.nrows]
+    }
+
+    /// Column `j` as a contiguous mutable slice.
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        &mut self.data[j * self.nrows..(j + 1) * self.nrows]
+    }
+
+    /// The whole column-major buffer.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable view over the full matrix (all rows, all columns).
+    pub fn view_mut(&mut self) -> DenseMatMut<'_> {
+        DenseMatMut { data: &mut self.data, nrows: self.nrows, ncols: self.ncols }
+    }
+
+    /// Iterate mutably over whole columns (each a disjoint contiguous
+    /// slice) — the fan-out axis of the parallel engine. Empty iterator
+    /// when `nrows == 0` (there are no row segments to hand out).
+    pub fn cols_mut(&mut self) -> impl Iterator<Item = &mut [f64]> {
+        // `chunks_mut` instead of `chunks_exact_mut(nrows)` so nrows == 0
+        // yields no chunks instead of panicking on a zero chunk size.
+        self.data.chunks_mut(self.nrows.max(1)).take(self.ncols)
+    }
+
+    /// Unpack into per-column `Vec`s (copies; the inverse of
+    /// [`DenseMat::from_cols`]).
+    pub fn into_cols(self) -> Vec<Vec<f64>> {
+        (0..self.ncols).map(|j| self.col(j).to_vec()).collect()
+    }
+}
+
+/// Borrowed mutable column-major view: `ncols` columns of `nrows`
+/// contiguous values. In the
+/// [`run_range_multi`](crate::spmv::operator::SpmvOperator::run_range_multi)
+/// contract, `nrows` covers exactly the rows of the block being computed.
+#[derive(Debug)]
+pub struct DenseMatMut<'a> {
+    data: &'a mut [f64],
+    nrows: usize,
+    ncols: usize,
+}
+
+impl<'a> DenseMatMut<'a> {
+    /// Wrap a raw column-major buffer (`data.len()` must equal
+    /// `nrows * ncols`).
+    pub fn new(data: &'a mut [f64], nrows: usize, ncols: usize) -> Result<DenseMatMut<'a>> {
+        if data.len() != nrows * ncols {
+            return Err(DtansError::Dimension(format!(
+                "dense view buffer {} != {nrows} x {ncols}",
+                data.len()
+            )));
+        }
+        Ok(DenseMatMut { data, nrows, ncols })
+    }
+
+    /// Rows per column.
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    /// Number of columns.
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Column `j` as a contiguous mutable slice.
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        &mut self.data[j * self.nrows..(j + 1) * self.nrows]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrips_columns() {
+        let cols = vec![vec![1.0, 2.0, 3.0], vec![-1.0, 0.0, 4.0]];
+        let m = DenseMat::from_cols(3, &cols).unwrap();
+        assert_eq!((m.nrows(), m.ncols()), (3, 2));
+        assert_eq!(m.col(0), &cols[0][..]);
+        assert_eq!(m.col(1), &cols[1][..]);
+        assert_eq!(m.into_cols(), cols);
+    }
+
+    #[test]
+    fn mismatched_column_is_reported_by_index() {
+        let err = DenseMat::from_cols(3, &[vec![0.0; 3], vec![0.0; 2]]).unwrap_err();
+        assert!(err.to_string().contains("rhs 1"), "{err}");
+    }
+
+    #[test]
+    fn zero_shapes_are_fine() {
+        let mut m = DenseMat::zeros(0, 4);
+        assert_eq!(m.cols_mut().count(), 0);
+        assert_eq!(m.into_cols(), vec![Vec::<f64>::new(); 4]);
+        let mut k0 = DenseMat::zeros(5, 0);
+        assert_eq!(k0.cols_mut().count(), 0);
+        assert!(k0.into_cols().is_empty());
+    }
+
+    #[test]
+    fn view_and_cols_mut_cover_disjoint_columns() {
+        let mut m = DenseMat::zeros(2, 3);
+        for (j, col) in m.cols_mut().enumerate() {
+            col.fill(j as f64);
+        }
+        assert_eq!(m.as_slice(), &[0.0, 0.0, 1.0, 1.0, 2.0, 2.0]);
+        let mut v = m.view_mut();
+        assert_eq!((v.nrows(), v.ncols()), (2, 3));
+        v.col_mut(1)[0] = 9.0;
+        assert_eq!(m.col(1), &[9.0, 1.0]);
+    }
+
+    #[test]
+    fn raw_view_checks_length() {
+        let mut buf = vec![0.0; 5];
+        assert!(DenseMatMut::new(&mut buf, 2, 3).is_err());
+        let mut buf = vec![0.0; 6];
+        assert!(DenseMatMut::new(&mut buf, 2, 3).is_ok());
+    }
+}

@@ -1,4 +1,5 @@
-//! Parallel nnz-balanced SpMVM engine.
+//! Parallel nnz-balanced SpMVM engine over the format-agnostic
+//! [`SpmvOperator`] trait.
 //!
 //! The paper's GPU kernel assigns one warp per 32-row slice and wins
 //! because SpMVM is bandwidth-bound; the CPU reproduction was leaving that
@@ -9,11 +10,19 @@
 //! fans blocks out across a [`ThreadPool`], handing each worker a disjoint
 //! `&mut` range of the output vector.
 //!
+//! The engine is **format-agnostic**: [`SpmvEngine::run`] and
+//! [`SpmvEngine::run_multi`] accept any `&dyn SpmvOperator` — the
+//! operator describes its work units via
+//! [`cost_prefix`](SpmvOperator::cost_prefix) and computes blocks via
+//! [`run_range`](SpmvOperator::run_range); the engine owns scheduling.
+//! (The old per-format `spmv_csr`/`spmv_sell`/`spmm_*` methods are gone;
+//! see `docs/API.md` for the migration table.)
+//!
 //! Because blocks are contiguous and every row is computed by exactly one
 //! block with the serial kernel's per-row arithmetic, parallel results are
-//! **bit-identical** to the serial kernels for CSR, SELL and CSR-dtANS —
-//! property-tested in `tests/engine_parallel.rs` across partition counts
-//! 1..=16.
+//! **bit-identical** to the serial free functions for every built-in
+//! format — property-tested in `tests/operator_dispatch.rs` across
+//! partition counts 1..=16.
 //!
 //! # Strategy selection ([`ParStrategy`])
 //!
@@ -26,10 +35,10 @@
 //!   scaling studies and reproducible partition counts; `Fixed(1)` is the
 //!   serial path (no pool is spawned).
 //! * [`ParStrategy::Auto`] (default) — one block per logical CPU, but fall
-//!   back to the serial path whenever the estimated work (nonzeros, times
-//!   right-hand sides for the batched entry points) is below
-//!   [`MIN_PAR_COST`], where fan-out overhead would dominate. This is the
-//!   right default for services.
+//!   back to the serial path whenever the estimated work
+//!   ([`SpmvOperator::cost`], times right-hand sides for the batched
+//!   entry point) is below [`MIN_PAR_COST`], where fan-out overhead
+//!   would dominate. This is the right default for services.
 //!
 //! # Example
 //!
@@ -46,7 +55,7 @@
 //!
 //! let engine = SpmvEngine::new(ParStrategy::Fixed(4));
 //! let mut y_par = vec![0.0; m.nrows];
-//! engine.spmv_csr(&m, &x, &mut y_par).unwrap();
+//! engine.run(&m, &x, &mut y_par).unwrap(); // Csr is an SpmvOperator
 //!
 //! let mut y_serial = vec![0.0; m.nrows];
 //! spmv_csr(&m, &x, &mut y_serial).unwrap();
@@ -55,20 +64,17 @@
 
 pub mod partition;
 
-pub use partition::{partition_csr, partition_dtans, partition_prefix, partition_sell, Block};
+pub use partition::{partition_prefix, Block};
 
-use crate::format::csr_dtans::{CsrDtans, WARP};
-use crate::matrix::csr::Csr;
-use crate::matrix::sell::Sell;
-use crate::spmv::csr::spmv_row_range;
-use crate::spmv::csr_dtans::{spmv_slice_range, spmv_with_plan, DecodePlan};
-use crate::spmv::sell::spmv_sell_slice_range;
+use crate::spmv::densemat::DenseMat;
+use crate::spmv::operator::SpmvOperator;
 use crate::util::error::{DtansError, Result};
 use crate::util::threadpool::{ScopedJob, ThreadPool};
 
-/// Below this many "cost units" (nonzeros × right-hand sides), the
-/// [`ParStrategy::Auto`] strategy runs serially: fanning a multiply this
-/// small across threads costs more in wake-ups than the multiply itself.
+/// Below this many "cost units" ([`SpmvOperator::cost`] × right-hand
+/// sides — calibrated in nonzeros), the [`ParStrategy::Auto`] strategy
+/// runs serially: fanning a multiply this small across threads costs
+/// more in wake-ups than the multiply itself.
 pub const MIN_PAR_COST: usize = 1 << 14;
 
 /// How the engine maps one multiply onto threads; see the
@@ -84,9 +90,9 @@ pub enum ParStrategy {
     Auto,
 }
 
-/// The parallel SpMVM engine: owns a worker pool and routes every
-/// supported format (CSR, SELL, CSR-dtANS) through the nnz-balanced
-/// partitioner. See the [module docs](self) for the execution model.
+/// The parallel SpMVM engine: owns a worker pool and routes any
+/// [`SpmvOperator`] through the nnz-balanced partitioner. See the
+/// [module docs](self) for the execution model.
 ///
 /// The engine is `Sync`: one instance can be shared by many request
 /// threads (the coordinator does exactly this), with each call waiting
@@ -146,13 +152,14 @@ impl SpmvEngine {
         self.pool.is_some()
     }
 
-    /// True when a batched call over a matrix with `nnz` nonzeros and `k`
-    /// right-hand sides would actually fan out (callers with their own
-    /// request-level parallelism — the coordinator's worker pool — use
-    /// this to decide whether handing the whole batch to the engine beats
-    /// per-request dispatch).
-    pub fn will_batch_parallel(&self, nnz: usize, k: usize) -> bool {
-        self.pool.is_some() && self.batch_parts(nnz, k).is_some()
+    /// True when a batched call over an operator with total cost `cost`
+    /// and `k` right-hand sides would actually fan out (callers with
+    /// their own request-level parallelism — the coordinator's worker
+    /// pool — use this to decide whether handing the whole batch to the
+    /// engine beats per-request dispatch). Nonzeros are a fine proxy for
+    /// `cost` when the exact prefix total is not at hand.
+    pub fn will_batch_parallel(&self, cost: usize, k: usize) -> bool {
+        self.pool.is_some() && self.batch_parts(cost, k).is_some()
     }
 
     /// Number of blocks a multiply of the given cost will fan out into;
@@ -171,8 +178,9 @@ impl SpmvEngine {
         }
     }
 
-    /// `y += A·x` over CSR, partitioned by rows into equal-nonzeros
-    /// blocks. Bit-identical to [`crate::spmv::spmv_csr`].
+    /// `y += A·x` for any [`SpmvOperator`], partitioned into equal-cost
+    /// blocks from the operator's [`cost_prefix`](SpmvOperator::cost_prefix).
+    /// Bit-identical to the format's serial free function.
     ///
     /// ```
     /// use dtans::matrix::{Coo, Csr};
@@ -182,154 +190,74 @@ impl SpmvEngine {
     /// coo.push(1, 1, 3.0);
     /// let m = Csr::from_coo(&coo);
     /// let mut y = vec![0.0; 2];
-    /// SpmvEngine::auto().spmv_csr(&m, &[1.0, 1.0], &mut y).unwrap();
+    /// SpmvEngine::auto().run(&m, &[1.0, 1.0], &mut y).unwrap();
     /// assert_eq!(y, vec![2.0, 3.0]);
     /// ```
-    pub fn spmv_csr(&self, m: &Csr, x: &[f64], y: &mut [f64]) -> Result<()> {
-        let parts = self.parts_for(m.nnz());
+    pub fn run(&self, op: &dyn SpmvOperator, x: &[f64], y: &mut [f64]) -> Result<()> {
+        let (nrows, ncols) = op.dims();
+        crate::spmv::check_dims(nrows, ncols, x, y)?;
+        let prefix = op.cost_prefix();
+        let (units, total) = prefix_stats(&prefix);
+        let parts = self.parts_for(op.cost());
         match &self.pool {
-            Some(pool) if parts > 1 => {
-                super::check_dims(m.nrows, m.ncols, x, y)?;
-                let blocks = partition_csr(m, parts);
-                run_blocks(pool, &blocks, y, |b| b.end, |b, seg| {
-                    spmv_row_range(m, b.start, b.end, x, seg)
-                })
-            }
-            _ => super::csr::spmv_csr(m, x, y),
-        }
-    }
-
-    /// `y += A·x` over SELL, partitioned by slices weighted by padded
-    /// cells. Bit-identical to [`crate::spmv::spmv_sell`].
-    pub fn spmv_sell(&self, m: &Sell, x: &[f64], y: &mut [f64]) -> Result<()> {
-        let parts = self.parts_for(m.padded_cells());
-        match &self.pool {
-            Some(pool) if parts > 1 => {
-                super::check_dims(m.nrows, m.ncols, x, y)?;
-                let blocks = partition_sell(m, parts);
-                let h = m.slice_height;
+            Some(pool) if parts > 1 && units > 1 => {
+                let blocks = partition_prefix(&prefix, parts);
                 run_blocks(
                     pool,
                     &blocks,
                     y,
-                    |b| (b.end * h).min(m.nrows),
-                    |b, seg| spmv_sell_slice_range(m, b.start, b.end, x, seg),
+                    |b| op.rows_through(b.end),
+                    |b, seg| op.run_range(b, x, seg),
                 )
             }
-            _ => super::sell::spmv_sell(m, x, y),
+            _ => op.run_range(Block { start: 0, end: units, cost: total }, x, y),
         }
     }
 
-    /// `y += A·x` over CSR-dtANS (decode fused with multiply), building
-    /// the [`DecodePlan`] on the fly. Prefer
-    /// [`SpmvEngine::spmv_csr_dtans_with_plan`] when multiplying the same
-    /// matrix repeatedly.
-    pub fn spmv_csr_dtans(&self, m: &CsrDtans, x: &[f64], y: &mut [f64]) -> Result<()> {
-        let plan = DecodePlan::new(m);
-        self.spmv_csr_dtans_with_plan(m, &plan, x, y)
-    }
-
-    /// `y += A·x` over CSR-dtANS with a prebuilt [`DecodePlan`],
-    /// partitioned by 32-row slices weighted by encoded stream words (the
-    /// quantity that bounds decode time). Bit-identical to
-    /// [`crate::spmv::spmv_csr_dtans`].
-    pub fn spmv_csr_dtans_with_plan(
-        &self,
-        m: &CsrDtans,
-        plan: &DecodePlan,
-        x: &[f64],
-        y: &mut [f64],
-    ) -> Result<()> {
-        let parts = self.parts_for(m.nnz);
-        match &self.pool {
-            Some(pool) if parts > 1 => {
-                super::check_dims(m.nrows, m.ncols, x, y)?;
-                let blocks = partition_dtans(m, parts);
-                run_blocks(
-                    pool,
-                    &blocks,
-                    y,
-                    |b| (b.end * WARP).min(m.nrows),
-                    |b, seg| spmv_slice_range(m, plan, b.start, b.end, x, seg),
-                )
-            }
-            _ => spmv_with_plan(m, plan, x, y),
-        }
-    }
-
-    /// Batched multi-RHS multiply (SpMM-style): `ys[j] = A·xs[j]` for every
-    /// right-hand side, fanning the (right-hand side × row block) grid out
-    /// over the pool — the serving shape where one matrix is multiplied
-    /// against many vectors per batch. Returns freshly zero-initialized
-    /// outputs. Each output is bit-identical to a serial
-    /// [`crate::spmv::spmv_csr`] on the same vector.
+    /// Batched multi-RHS multiply (SpMM-style): `ys[.., j] = A·xs[.., j]`
+    /// for every column of the contiguous column-major [`DenseMat`],
+    /// fanning the (column × row-block) grid out over the pool — the
+    /// serving shape where one matrix is multiplied against many vectors
+    /// per batch. Returns a freshly zero-initialized output matrix. Each
+    /// column is bit-identical to a serial single-vector multiply.
     ///
     /// ```
     /// use dtans::matrix::{Coo, Csr};
+    /// use dtans::spmv::densemat::DenseMat;
     /// use dtans::spmv::engine::SpmvEngine;
     /// let mut coo = Coo::new(2, 2);
     /// coo.push(0, 1, 5.0);
     /// coo.push(1, 0, 7.0);
     /// let m = Csr::from_coo(&coo);
-    /// let xs = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
-    /// let ys = SpmvEngine::auto().spmm_csr(&m, &xs).unwrap();
-    /// assert_eq!(ys, vec![vec![0.0, 7.0], vec![5.0, 0.0]]);
+    /// let xs = DenseMat::from_cols(2, &[vec![1.0, 0.0], vec![0.0, 1.0]]).unwrap();
+    /// let ys = SpmvEngine::auto().run_multi(&m, &xs).unwrap();
+    /// assert_eq!(ys.into_cols(), vec![vec![0.0, 7.0], vec![5.0, 0.0]]);
     /// ```
-    pub fn spmm_csr(&self, m: &Csr, xs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
-        check_batch_dims(m.ncols, xs)?;
-        let mut ys: Vec<Vec<f64>> = xs.iter().map(|_| vec![0.0; m.nrows]).collect();
-        match (&self.pool, self.batch_parts(m.nnz(), xs.len())) {
-            (Some(pool), Some(parts)) => {
-                let blocks = partition_csr(m, parts);
-                run_batch_blocks(pool, &blocks, xs, &mut ys, |b| b.end, |b, x, seg| {
-                    spmv_row_range(m, b.start, b.end, x, seg)
-                })?;
-            }
-            _ => {
-                for (x, y) in xs.iter().zip(ys.iter_mut()) {
-                    super::csr::spmv_csr(m, x, y)?;
-                }
-            }
+    pub fn run_multi(&self, op: &dyn SpmvOperator, xs: &DenseMat) -> Result<DenseMat> {
+        let (nrows, ncols) = op.dims();
+        if xs.nrows() != ncols {
+            return Err(DtansError::Dimension(format!(
+                "matrix {nrows}x{ncols} with batch rhs rows {}",
+                xs.nrows()
+            )));
         }
-        Ok(ys)
-    }
-
-    /// Batched multi-RHS multiply over CSR-dtANS, building the plan once.
-    pub fn spmm_csr_dtans(&self, m: &CsrDtans, xs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
-        let plan = DecodePlan::new(m);
-        self.spmm_csr_dtans_with_plan(m, &plan, xs)
-    }
-
-    /// Batched multi-RHS multiply over CSR-dtANS with a prebuilt plan:
-    /// `ys[j] = A·xs[j]`, fanning the (right-hand side × slice block) grid
-    /// out over the pool. The matrix is decoded once per right-hand side
-    /// (decode is fused into the multiply), but the coding tables and plan
-    /// stay hot in cache across the whole batch. Each output is
-    /// bit-identical to a serial [`crate::spmv::spmv_csr_dtans`].
-    pub fn spmm_csr_dtans_with_plan(
-        &self,
-        m: &CsrDtans,
-        plan: &DecodePlan,
-        xs: &[Vec<f64>],
-    ) -> Result<Vec<Vec<f64>>> {
-        check_batch_dims(m.ncols, xs)?;
-        let mut ys: Vec<Vec<f64>> = xs.iter().map(|_| vec![0.0; m.nrows]).collect();
-        match (&self.pool, self.batch_parts(m.nnz, xs.len())) {
+        let k = xs.ncols();
+        let mut ys = DenseMat::zeros(nrows, k);
+        if nrows == 0 || k == 0 {
+            return Ok(ys);
+        }
+        let prefix = op.cost_prefix();
+        let (units, total) = prefix_stats(&prefix);
+        match (&self.pool, self.batch_parts(op.cost(), k)) {
             (Some(pool), Some(parts)) => {
-                let blocks = partition_dtans(m, parts);
-                run_batch_blocks(
-                    pool,
-                    &blocks,
-                    xs,
-                    &mut ys,
-                    |b| (b.end * WARP).min(m.nrows),
-                    |b, x, seg| spmv_slice_range(m, plan, b.start, b.end, x, seg),
-                )?;
+                let blocks = partition_prefix(&prefix, parts);
+                if !blocks.is_empty() {
+                    run_grid(pool, &blocks, op, xs, &mut ys)?;
+                }
             }
             _ => {
-                for (x, y) in xs.iter().zip(ys.iter_mut()) {
-                    spmv_with_plan(m, plan, x, y)?;
-                }
+                let full = Block { start: 0, end: units, cost: total };
+                op.run_range_multi(full, xs, &mut ys.view_mut())?;
             }
         }
         Ok(ys)
@@ -341,11 +269,11 @@ impl SpmvEngine {
     /// provides parallelism (with `k` right-hand sides and `n` threads,
     /// `ceil(n / k)` blocks already yield ≥ `n` independent jobs, so even
     /// one block per right-hand side is a real fan-out when `k > 1`).
-    fn batch_parts(&self, nnz: usize, k: usize) -> Option<usize> {
+    fn batch_parts(&self, cost: usize, k: usize) -> Option<usize> {
         if k == 0 {
             return None;
         }
-        let parts = self.parts_for(nnz.saturating_mul(k));
+        let parts = self.parts_for(cost.saturating_mul(k));
         match self.strategy {
             ParStrategy::Serial => None,
             // Auto below the cost threshold stays serial even for k > 1.
@@ -357,17 +285,13 @@ impl SpmvEngine {
     }
 }
 
-/// Validate every right-hand side's length against `ncols`.
-fn check_batch_dims(ncols: usize, xs: &[Vec<f64>]) -> Result<()> {
-    for (j, x) in xs.iter().enumerate() {
-        if x.len() != ncols {
-            return Err(DtansError::Dimension(format!(
-                "batch rhs {j}: x[{}] for {ncols} columns",
-                x.len()
-            )));
-        }
+/// `(units, total cost)` of a cost prefix — the two numbers `run` and
+/// `run_multi` both derive before partitioning.
+fn prefix_stats(prefix: &[usize]) -> (usize, usize) {
+    match prefix.len() {
+        0 | 1 => (0, 0),
+        n => (n - 1, prefix[n - 1] - prefix[0]),
     }
-    Ok(())
 }
 
 /// Fan one output vector's blocks out over the pool. `row_end` maps a
@@ -401,35 +325,35 @@ pub(crate) fn run_blocks(
     slots.into_iter().find(|r| r.is_err()).unwrap_or(Ok(()))
 }
 
-/// Fan the (right-hand side × block) grid out over the pool; every job
-/// writes a disjoint segment of one output vector.
-fn run_batch_blocks(
+/// Fan the (column × block) grid of a batched multiply out over the pool;
+/// every job writes a disjoint row segment of one output column (columns
+/// are contiguous in the column-major [`DenseMat`], so segments come from
+/// plain `split_at_mut`).
+fn run_grid(
     pool: &ThreadPool,
     blocks: &[Block],
-    xs: &[Vec<f64>],
-    ys: &mut [Vec<f64>],
-    row_end: impl Fn(&Block) -> usize,
-    kernel: impl Fn(Block, &[f64], &mut [f64]) -> Result<()> + Send + Sync,
+    op: &dyn SpmvOperator,
+    xs: &DenseMat,
+    ys: &mut DenseMat,
 ) -> Result<()> {
-    let njobs = blocks.len() * xs.len();
+    let njobs = blocks.len() * xs.ncols();
     let mut slots: Vec<Result<()>> = Vec::new();
     slots.resize_with(njobs, || Ok(()));
-    let kernel = &kernel;
     {
         let mut jobs: Vec<ScopedJob<'_>> = Vec::with_capacity(njobs);
         let mut slot_iter = slots.iter_mut();
-        for (x, y) in xs.iter().zip(ys.iter_mut()) {
-            let x: &[f64] = x.as_slice();
-            let mut tail: &mut [f64] = y;
+        for (j, col) in ys.cols_mut().enumerate() {
+            let x = xs.col(j);
+            let mut tail: &mut [f64] = col;
             let mut cursor = 0usize;
             for b in blocks {
                 let b = *b;
-                let r1 = row_end(&b);
+                let r1 = op.rows_through(b.end);
                 let (seg, rest) = tail.split_at_mut(r1 - cursor);
                 tail = rest;
                 cursor = r1;
                 let slot = slot_iter.next().expect("slot per job");
-                jobs.push(Box::new(move || *slot = kernel(b, x, seg)));
+                jobs.push(Box::new(move || *slot = op.run_range(b, x, seg)));
             }
         }
         pool.scope_run(jobs);
@@ -440,9 +364,12 @@ fn run_batch_blocks(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::format::csr_dtans::EncodeOptions;
+    use crate::format::csr_dtans::{CsrDtans, EncodeOptions};
+    use crate::matrix::csr::Csr;
     use crate::matrix::gen::structured::{banded, powerlaw_rows};
     use crate::matrix::gen::{assign_values, ValueDist};
+    use crate::matrix::Sell;
+    use crate::spmv::operator::DtansOperator;
     use crate::util::rng::Xoshiro256;
 
     fn test_matrix(seed: u64) -> Csr {
@@ -457,11 +384,11 @@ mod tests {
         let m = test_matrix(1);
         let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.1).sin()).collect();
         let mut want = vec![0.25; m.nrows];
-        super::super::csr::spmv_csr(&m, &x, &mut want).unwrap();
+        crate::spmv::csr::spmv_csr(&m, &x, &mut want).unwrap();
         for strategy in [ParStrategy::Serial, ParStrategy::Fixed(3), ParStrategy::Fixed(16)] {
             let engine = SpmvEngine::new(strategy);
             let mut got = vec![0.25; m.nrows];
-            engine.spmv_csr(&m, &x, &mut got).unwrap();
+            engine.run(&m, &x, &mut got).unwrap();
             assert_eq!(got, want, "strategy {strategy:?}");
         }
     }
@@ -472,10 +399,11 @@ mod tests {
         let enc = CsrDtans::encode(&m, &EncodeOptions::default()).unwrap();
         let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.07).cos()).collect();
         let mut want = vec![0.0; m.nrows];
-        super::super::csr_dtans::spmv_csr_dtans(&enc, &x, &mut want).unwrap();
+        crate::spmv::csr_dtans::spmv_csr_dtans(&enc, &x, &mut want).unwrap();
+        let op = DtansOperator::new(enc);
         let engine = SpmvEngine::new(ParStrategy::Fixed(5));
         let mut got = vec![0.0; m.nrows];
-        engine.spmv_csr_dtans(&enc, &x, &mut got).unwrap();
+        engine.run(&op, &x, &mut got).unwrap();
         assert_eq!(got, want);
     }
 
@@ -485,26 +413,27 @@ mod tests {
         let sell = Sell::from_csr(&m, 32);
         let x: Vec<f64> = (0..m.ncols).map(|i| i as f64 * 0.01 - 1.0).collect();
         let mut want = vec![0.0; m.nrows];
-        super::super::sell::spmv_sell(&sell, &x, &mut want).unwrap();
+        crate::spmv::sell::spmv_sell(&sell, &x, &mut want).unwrap();
         let engine = SpmvEngine::new(ParStrategy::Fixed(4));
         let mut got = vec![0.0; m.nrows];
-        engine.spmv_sell(&sell, &x, &mut got).unwrap();
+        engine.run(&sell, &x, &mut got).unwrap();
         assert_eq!(got, want);
     }
 
     #[test]
-    fn spmm_matches_repeated_spmv() {
+    fn run_multi_matches_repeated_run() {
         let m = test_matrix(4);
         let mut rng = Xoshiro256::seeded(5);
-        let xs: Vec<Vec<f64>> = (0..5)
+        let cols: Vec<Vec<f64>> = (0..5)
             .map(|_| (0..m.ncols).map(|_| rng.next_f64() - 0.5).collect())
             .collect();
+        let xs = DenseMat::from_cols(m.ncols, &cols).unwrap();
         let engine = SpmvEngine::new(ParStrategy::Fixed(4));
-        let ys = engine.spmm_csr(&m, &xs).unwrap();
-        for (x, y) in xs.iter().zip(&ys) {
+        let ys = engine.run_multi(&m, &xs).unwrap();
+        for (x, y) in cols.iter().zip(ys.into_cols()) {
             let mut want = vec![0.0; m.nrows];
-            super::super::csr::spmv_csr(&m, x, &mut want).unwrap();
-            assert_eq!(y, &want);
+            crate::spmv::csr::spmv_csr(&m, x, &mut want).unwrap();
+            assert_eq!(y, want);
         }
     }
 
@@ -512,8 +441,8 @@ mod tests {
     fn batch_dim_mismatch_is_error() {
         let m = test_matrix(6);
         let engine = SpmvEngine::serial();
-        let xs = vec![vec![0.0; m.ncols], vec![0.0; m.ncols + 1]];
-        assert!(engine.spmm_csr(&m, &xs).is_err());
+        let xs = DenseMat::zeros(m.ncols + 1, 2);
+        assert!(engine.run_multi(&m, &xs).is_err());
     }
 
     #[test]
@@ -522,7 +451,7 @@ mod tests {
         let engine = SpmvEngine::new(ParStrategy::Fixed(4));
         let x = vec![0.0; m.ncols + 1];
         let mut y = vec![0.0; m.nrows];
-        assert!(engine.spmv_csr(&m, &x, &mut y).is_err());
+        assert!(engine.run(&m, &x, &mut y).is_err());
     }
 
     #[test]
@@ -530,8 +459,12 @@ mod tests {
         let m = Csr::new(0, 0);
         let engine = SpmvEngine::new(ParStrategy::Fixed(4));
         let mut y = Vec::new();
-        engine.spmv_csr(&m, &[], &mut y).unwrap();
-        assert!(engine.spmm_csr(&m, &[]).unwrap().is_empty());
+        engine.run(&m, &[], &mut y).unwrap();
+        let ys = engine.run_multi(&m, &DenseMat::zeros(0, 0)).unwrap();
+        assert!(ys.into_cols().is_empty());
+        // k > 0 over an empty matrix: k empty output columns, no panic.
+        let ys = engine.run_multi(&m, &DenseMat::zeros(0, 3)).unwrap();
+        assert_eq!(ys.into_cols(), vec![Vec::<f64>::new(); 3]);
     }
 
     #[test]
@@ -544,9 +477,9 @@ mod tests {
             assign_values(&mut m, ValueDist::FewDistinct(4), &mut Xoshiro256::seeded(8));
             let x = vec![1.0; m.ncols];
             let mut want = vec![0.0; m.nrows];
-            super::super::csr::spmv_csr(&m, &x, &mut want).unwrap();
+            crate::spmv::csr::spmv_csr(&m, &x, &mut want).unwrap();
             let mut got = vec![0.0; m.nrows];
-            engine.spmv_csr(&m, &x, &mut got).unwrap();
+            engine.run(&m, &x, &mut got).unwrap();
             assert_eq!(got, want);
         }
     }

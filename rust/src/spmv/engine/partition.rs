@@ -5,19 +5,21 @@
 //! count — the same observation behind row-grouped CSR (Oberhuber et al.,
 //! arXiv:1012.2270) and nmSPARSE's balanced partitions. This module
 //! reproduces that assignment on the CPU: given a monotone cost-prefix
-//! array (CSR's `row_ptr`, a slice word-offset table, SELL's `slice_ptr`),
-//! it binary-searches for split points that give every block an equal share
-//! of the total cost.
+//! array (from [`SpmvOperator::cost_prefix`] — CSR's `row_ptr`, a slice
+//! word-offset table, SELL's `slice_ptr`), it binary-searches for split
+//! points that give every block an equal share of the total cost.
 //!
 //! Blocks are contiguous, disjoint, and cover every unit exactly once, so
 //! a parallel executor can hand each block a disjoint `&mut` range of the
 //! output vector and each row is still computed by exactly one serial
 //! kernel invocation — which is what makes the parallel results
 //! *bit-identical* to the serial ones (see `tests/engine_parallel.rs`).
-
-use crate::format::csr_dtans::CsrDtans;
-use crate::matrix::csr::Csr;
-use crate::matrix::sell::Sell;
+//!
+//! The per-format wrappers (`partition_csr`/`partition_sell`/
+//! `partition_dtans`) are gone: formats describe their own costs through
+//! [`SpmvOperator::cost_prefix`] and the engine partitions generically.
+//!
+//! [`SpmvOperator::cost_prefix`]: crate::spmv::operator::SpmvOperator::cost_prefix
 
 /// One contiguous block of work units (rows or slices).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -60,8 +62,14 @@ impl Block {
 /// * every block's cost is at most `ceil(total / parts)` plus the largest
 ///   single-unit cost (a single unit is never split).
 ///
-/// Returns fewer than `parts` blocks when there are fewer units than
-/// parts, and an empty vector when there are no units at all.
+/// Edge cases are handled here, not by callers (unit-tested below):
+///
+/// * an **empty matrix** — a prefix with no units (`[x]`) or even a fully
+///   empty slice — yields no blocks;
+/// * **`parts > units`** yields exactly `units` single-unit blocks, and
+///   `parts == 0` is treated as 1;
+/// * an **all-zero prefix** (every row empty) still covers every unit, so
+///   zero-cost rows keep their well-defined owner block.
 ///
 /// ```
 /// use dtans::spmv::engine::partition_prefix;
@@ -79,17 +87,21 @@ pub fn partition_prefix(prefix: &[usize], parts: usize) -> Vec<Block> {
 
 /// Generic core of [`partition_prefix`]: `cost_of` projects each stored
 /// offset to its `usize` cost, so narrower offset tables (e.g. the `u32`
-/// slice offsets of CSR-dtANS) partition without a widening copy.
-fn partition_prefix_by<T>(prefix: &[T], cost_of: impl Fn(&T) -> usize, parts: usize) -> Vec<Block> {
-    assert!(!prefix.is_empty(), "prefix must contain at least one offset");
+/// slice offsets of CSR-dtANS in `spmv_csr_dtans_parallel`) partition
+/// without a widening copy.
+pub(crate) fn partition_prefix_by<T>(
+    prefix: &[T],
+    cost_of: impl Fn(&T) -> usize,
+    parts: usize,
+) -> Vec<Block> {
     debug_assert!(
         prefix.windows(2).all(|w| cost_of(&w[0]) <= cost_of(&w[1])),
         "prefix not monotone"
     );
-    let units = prefix.len() - 1;
-    if units == 0 {
-        return Vec::new();
+    if prefix.len() <= 1 {
+        return Vec::new(); // empty matrix (or empty prefix): no work units
     }
+    let units = prefix.len() - 1;
     let parts = parts.clamp(1, units);
     let base = cost_of(&prefix[0]);
     let total = cost_of(&prefix[units]) - base;
@@ -119,34 +131,12 @@ fn partition_prefix_by<T>(prefix: &[T], cost_of: impl Fn(&T) -> usize, parts: us
     blocks
 }
 
-/// Partition a CSR matrix's rows into `parts` equal-nonzeros blocks
-/// (units = rows, cost = per-row nnz from `row_ptr`).
-pub fn partition_csr(m: &Csr, parts: usize) -> Vec<Block> {
-    partition_prefix(&m.row_ptr, parts)
-}
-
-/// Partition a CSR-dtANS matrix's 32-row slices into `parts` blocks of
-/// near-equal *stream words* (units = slices, cost = encoded words, the
-/// quantity that actually bounds decode time). Slices are the kernel's
-/// atomic unit, so blocks always align to `WARP`-row boundaries.
-pub fn partition_dtans(m: &CsrDtans, parts: usize) -> Vec<Block> {
-    partition_prefix_by(&m.slice_offsets, |&w| w as usize, parts)
-}
-
-/// Partition a SELL matrix's slices into `parts` blocks of near-equal
-/// *padded cells* (units = slices, cost = `slice_ptr` deltas — padding is
-/// real work in the SELL kernel, so it is what must balance).
-pub fn partition_sell(m: &Sell, parts: usize) -> Vec<Block> {
-    partition_prefix(&m.slice_ptr, parts)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::matrix::coo::Coo;
 
     fn assert_valid(blocks: &[Block], prefix: &[usize], parts: usize) {
-        let units = prefix.len() - 1;
+        let units = prefix.len().saturating_sub(1);
         if units == 0 {
             assert!(blocks.is_empty());
             return;
@@ -194,37 +184,56 @@ mod tests {
     }
 
     #[test]
-    fn zero_cost_units_are_still_covered() {
-        // All-empty rows: every unit must land in some block.
+    fn all_zero_prefix_still_covers_every_unit() {
+        // All-empty rows: every unit must land in some block even though
+        // every split target is 0.
         let prefix = vec![0usize; 9]; // 8 rows, 0 nnz
         for parts in 1..=16 {
             let blocks = partition_prefix(&prefix, parts);
             assert_valid(&blocks, &prefix, parts);
+            assert_eq!(blocks.last().unwrap().end, 8);
         }
+        // Nonzero base with zero total (offset slice of a larger prefix).
+        let offset = vec![7usize; 4];
+        assert_valid(&partition_prefix(&offset, 2), &offset, 2);
     }
 
     #[test]
-    fn fewer_units_than_parts() {
+    fn more_parts_than_units_yields_one_block_per_unit() {
         let prefix = vec![0, 3, 7];
         let blocks = partition_prefix(&prefix, 16);
         assert_valid(&blocks, &prefix, 16);
         assert_eq!(blocks.len(), 2);
+        assert!(blocks.iter().all(|b| b.len() == 1));
     }
 
     #[test]
-    fn no_units_yields_no_blocks() {
+    fn zero_parts_is_treated_as_one() {
+        let prefix = vec![0, 3, 7];
+        let blocks = partition_prefix(&prefix, 0);
+        assert_eq!(blocks.len(), 1);
+        assert_eq!(blocks[0], Block { start: 0, end: 2, cost: 7 });
+    }
+
+    #[test]
+    fn empty_matrix_yields_no_blocks() {
+        // No units (the empty-matrix prefix `[0]`), a bare offset, and
+        // even a fully empty prefix: all explicitly legal, all empty.
         assert!(partition_prefix(&[0], 4).is_empty());
         assert!(partition_prefix(&[42], 1).is_empty());
+        assert!(partition_prefix(&[], 3).is_empty());
     }
 
     #[test]
-    fn csr_partition_matches_row_ptr() {
+    fn row_ptr_prefix_conserves_nnz() {
+        use crate::matrix::coo::Coo;
+        use crate::matrix::csr::Csr;
         let mut coo = Coo::new(4, 4);
         for &(r, c) in &[(0, 0), (0, 1), (1, 0), (1, 1), (1, 2), (2, 0), (3, 3)] {
             coo.push(r, c, 1.0);
         }
         let m = Csr::from_coo(&coo);
-        let blocks = partition_csr(&m, 2);
+        let blocks = partition_prefix(&m.row_ptr, 2);
         assert_valid(&blocks, &m.row_ptr, 2);
         assert_eq!(blocks.iter().map(|b| b.cost).sum::<usize>(), m.nnz());
     }

@@ -6,13 +6,15 @@
 //! simulator's cost models; the CSR-dtANS kernel is the paper's
 //! contribution — SpMVM interleaved with on-the-fly entropy decoding.
 //!
-//! The free functions in this module are the *serial* kernels. The
-//! [`engine`] submodule layers the parallel execution model on top: an
-//! nnz-balanced partitioner plus a thread-pool executor whose results are
-//! bit-identical to the serial kernels (see [`engine::SpmvEngine`] and
-//! [`engine::ParStrategy`] for the selection rules). The serial functions
-//! remain the fallback path and the ground truth the engine is tested
-//! against.
+//! The free functions in this module are the *serial* kernels — the
+//! ground truth every other execution path is tested against. Above them
+//! sits the format-agnostic [`operator`] layer: each format implements the
+//! object-safe [`operator::SpmvOperator`] trait (work units, cost prefix,
+//! block kernel), and the [`engine`] schedules any operator — serial,
+//! nnz-balanced parallel, or batched multi-RHS over contiguous
+//! [`densemat::DenseMat`] views — with results bit-identical to the serial
+//! kernels (see [`engine::SpmvEngine`] and [`engine::ParStrategy`] for the
+//! selection rules).
 //!
 //! ```
 //! use dtans::matrix::{Coo, Csr};
@@ -28,7 +30,7 @@
 //! let mut y = vec![0.0; 2];
 //! spmv_csr(&m, &x, &mut y).unwrap(); // serial kernel
 //! let mut y_eng = vec![0.0; 2];
-//! SpmvEngine::auto().spmv_csr(&m, &x, &mut y_eng).unwrap(); // engine
+//! SpmvEngine::auto().run(&m, &x, &mut y_eng).unwrap(); // engine, trait path
 //! assert_eq!(y, y_eng);
 //! ```
 
@@ -36,7 +38,9 @@ pub mod coo;
 pub mod csr;
 pub mod csr_dtans;
 pub mod dense;
+pub mod densemat;
 pub mod engine;
+pub mod operator;
 pub mod sell;
 pub mod verify;
 
@@ -44,7 +48,9 @@ pub use coo::spmv_coo;
 pub use csr::{spmv_csr, spmv_csr_vector};
 pub use csr_dtans::spmv_csr_dtans;
 pub use dense::spmv_dense;
+pub use densemat::{DenseMat, DenseMatMut};
 pub use engine::{ParStrategy, SpmvEngine};
+pub use operator::{DenseOperator, DtansOperator, FormatEntry, FormatRegistry, SpmvOperator};
 pub use sell::spmv_sell;
 
 use crate::util::error::{DtansError, Result};

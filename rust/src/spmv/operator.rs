@@ -1,0 +1,610 @@
+//! The format-agnostic kernel surface: one object-safe trait,
+//! [`SpmvOperator`], that every sparse format implements — and the only
+//! interface the engine, router, store and service compile against.
+//!
+//! The paper frames entropy-coded CSR (dtANS) as one more *format*
+//! competing against CSR/COO/SELL, and its related work (CMRS, adaptive
+//! row-grouped CSR) shows the format zoo keeps growing. Before this
+//! module, every format was a separate hard-coded path through the engine,
+//! router, store and service; adding a format meant editing six modules.
+//! Now a format plugs in by implementing this trait (and optionally
+//! registering in the [`FormatRegistry`] so eval and benches pick it up).
+//!
+//! # Trait contract
+//!
+//! An operator is a matrix in some storage format, viewed as a collection
+//! of contiguous *work units* (rows for CSR/dense, 32-row slices for
+//! SELL/CSR-dtANS, one indivisible unit for COO's unordered scatter):
+//!
+//! * [`cost_prefix`](SpmvOperator::cost_prefix) returns a monotone
+//!   non-decreasing prefix over the units (`prefix[i+1] - prefix[i]` =
+//!   cost of unit `i`, length = units + 1, always ≥ 1). The engine feeds
+//!   it to [`partition_prefix`](crate::spmv::engine::partition_prefix) to
+//!   get equal-cost [`Block`]s — the CPU analog of the paper's
+//!   equal-nonzeros warp assignment.
+//! * [`rows_through`](SpmvOperator::rows_through) maps a unit boundary to
+//!   its exclusive end *row*, so the engine can hand each block a disjoint
+//!   `&mut` segment of the output vector.
+//! * [`run_range`](SpmvOperator::run_range) computes one block with the
+//!   serial kernel's per-row arithmetic, accumulating into its segment
+//!   (`y_seg[i] += …`). Because every row is computed by exactly one block
+//!   and blocks reuse the serial loops, the engine's parallel results are
+//!   **bit-identical** to the serial free functions — property-tested for
+//!   all five built-in formats in `tests/operator_dispatch.rs`.
+//! * [`run_range_multi`](SpmvOperator::run_range_multi) is the batched
+//!   (multi-right-hand-side) variant over contiguous
+//!   [`DenseMat`]/[`DenseMatMut`] views; the default implementation loops
+//!   [`run_range`](SpmvOperator::run_range) over columns, which keeps
+//!   bit-identity with repeated single-vector multiplies by construction.
+//!
+//! # Example
+//!
+//! ```
+//! use dtans::matrix::{Coo, Csr};
+//! use dtans::spmv::engine::SpmvEngine;
+//! use dtans::spmv::operator::SpmvOperator;
+//!
+//! let mut coo = Coo::new(2, 2);
+//! coo.push(0, 0, 2.0);
+//! coo.push(1, 1, 3.0);
+//! let m = Csr::from_coo(&coo); // Csr implements SpmvOperator directly
+//! assert_eq!((m.format_tag(), SpmvOperator::nnz(&m)), ("csr", 2));
+//! let mut y = vec![0.0; 2];
+//! SpmvEngine::auto().run(&m, &[1.0, 1.0], &mut y).unwrap();
+//! assert_eq!(y, vec![2.0, 3.0]);
+//! ```
+
+use crate::format::csr_dtans::{CsrDtans, EncodeOptions, WARP};
+use crate::matrix::coo::Coo;
+use crate::matrix::csr::Csr;
+use crate::matrix::sell::Sell;
+use crate::spmv::csr_dtans::DecodePlan;
+use crate::spmv::densemat::{DenseMat, DenseMatMut};
+use crate::spmv::engine::Block;
+use crate::util::error::{DtansError, Result};
+use std::borrow::Cow;
+use std::sync::Arc;
+
+/// Object-safe, format-agnostic SpMVM kernel surface. See the
+/// [module docs](self) for the work-unit/cost/row contract and
+/// `docs/API.md` for the full trait reference and migration table.
+///
+/// `Send + Sync` is part of the trait: operators are shared across the
+/// service's worker threads as `Arc<dyn SpmvOperator>`.
+pub trait SpmvOperator: Send + Sync {
+    /// Logical shape `(nrows, ncols)`.
+    fn dims(&self) -> (usize, usize);
+
+    /// Number of stored nonzeros (for COO this counts stored triplets,
+    /// duplicates included).
+    fn nnz(&self) -> usize;
+
+    /// Monotone cost prefix over this operator's work units (length =
+    /// units + 1, never empty). The engine partitions it into equal-cost
+    /// blocks.
+    fn cost_prefix(&self) -> Cow<'_, [usize]>;
+
+    /// Total work-cost driving the
+    /// [`ParStrategy::Auto`](crate::spmv::engine::ParStrategy::Auto)
+    /// serial/parallel decision (compared against
+    /// [`MIN_PAR_COST`](crate::spmv::engine::MIN_PAR_COST), which is
+    /// calibrated in *nonzeros*). Defaults to the cost-prefix total;
+    /// override when the prefix is in different units — CSR-dtANS's
+    /// prefix counts compressed stream words, so it reports `nnz` here
+    /// to keep the crossover where the uncompressed formats have it.
+    fn cost(&self) -> usize {
+        let prefix = self.cost_prefix();
+        match prefix.len() {
+            0 | 1 => 0,
+            n => prefix[n - 1] - prefix[0],
+        }
+    }
+
+    /// Exclusive end row of units `0..unit_end`. Defaults to the identity
+    /// (one unit per row); sliced formats map slice counts to rows,
+    /// clamped to `nrows` for the final partial slice.
+    fn rows_through(&self, unit_end: usize) -> usize {
+        unit_end
+    }
+
+    /// Compute one block: `y_seg[i] += (A·x)[rows_through(block.start) + i]`
+    /// with the serial kernel's arithmetic. `y_seg` spans exactly rows
+    /// `rows_through(block.start)..rows_through(block.end)`; `x` is the
+    /// full input vector. Callers (the engine) have already checked
+    /// `x.len() == ncols`.
+    fn run_range(&self, block: Block, x: &[f64], y_seg: &mut [f64]) -> Result<()>;
+
+    /// Batched variant of [`run_range`](SpmvOperator::run_range): for each
+    /// column `j`, `ys[.., j] += (A·xs[.., j])` over the block's rows.
+    /// `ys` spans exactly the block's rows; `xs` the full input columns.
+    /// The default loops `run_range` per column — override only with an
+    /// implementation that stays bit-identical to that loop.
+    fn run_range_multi(&self, block: Block, xs: &DenseMat, ys: &mut DenseMatMut<'_>) -> Result<()> {
+        debug_assert_eq!(xs.ncols(), ys.ncols());
+        for j in 0..xs.ncols() {
+            self.run_range(block, xs.col(j), ys.col_mut(j))?;
+        }
+        Ok(())
+    }
+
+    /// Heap bytes this operator pins while resident — its cost against the
+    /// tiered store's memory budget ([`crate::store`]).
+    fn resident_bytes(&self) -> usize;
+
+    /// Stable short tag naming the format (`"csr"`, `"coo"`, `"sell"`,
+    /// `"dense"`, `"csr_dtans"`) — the key used by per-format metrics
+    /// ([`crate::coordinator::metrics::Metrics`]) and the
+    /// [`FormatRegistry`].
+    fn format_tag(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------------
+// CSR
+// ---------------------------------------------------------------------------
+
+impl SpmvOperator for Csr {
+    fn dims(&self) -> (usize, usize) {
+        (self.nrows, self.ncols)
+    }
+
+    fn nnz(&self) -> usize {
+        Csr::nnz(self)
+    }
+
+    /// Units = rows, cost = per-row nonzeros: `row_ptr` itself.
+    fn cost_prefix(&self) -> Cow<'_, [usize]> {
+        Cow::Borrowed(&self.row_ptr)
+    }
+
+    fn run_range(&self, block: Block, x: &[f64], y_seg: &mut [f64]) -> Result<()> {
+        crate::spmv::csr::spmv_row_range(self, block.start, block.end, x, y_seg)
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.row_ptr.len() * 8 + self.cols.len() * 4 + self.vals.len() * 8
+    }
+
+    fn format_tag(&self) -> &'static str {
+        "csr"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SELL
+// ---------------------------------------------------------------------------
+
+impl SpmvOperator for Sell {
+    fn dims(&self) -> (usize, usize) {
+        (self.nrows, self.ncols)
+    }
+
+    fn nnz(&self) -> usize {
+        self.row_lens.iter().map(|&l| l as usize).sum()
+    }
+
+    /// Units = slices, cost = padded cells (`slice_ptr` deltas — padding
+    /// is real work in the SELL kernel, so it is what must balance).
+    fn cost_prefix(&self) -> Cow<'_, [usize]> {
+        Cow::Borrowed(&self.slice_ptr)
+    }
+
+    fn rows_through(&self, unit_end: usize) -> usize {
+        (unit_end * self.slice_height).min(self.nrows)
+    }
+
+    fn run_range(&self, block: Block, x: &[f64], y_seg: &mut [f64]) -> Result<()> {
+        crate::spmv::sell::spmv_sell_slice_range(self, block.start, block.end, x, y_seg)
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.slice_widths.len() * 4
+            + self.slice_ptr.len() * 8
+            + self.cols.len() * 4
+            + self.vals.len() * 8
+            + self.row_lens.len() * 4
+    }
+
+    fn format_tag(&self) -> &'static str {
+        "sell"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// COO
+// ---------------------------------------------------------------------------
+
+impl SpmvOperator for Coo {
+    fn dims(&self) -> (usize, usize) {
+        (self.nrows, self.ncols)
+    }
+
+    fn nnz(&self) -> usize {
+        Coo::nnz(self)
+    }
+
+    /// One indivisible unit: COO triplets are unordered (the GPU kernel
+    /// scatters with atomics), so no row range owns a disjoint output
+    /// segment and the engine always runs COO serially. Honest rather
+    /// than wrong — a row-sorted COO wanting parallelism should convert
+    /// to CSR.
+    fn cost_prefix(&self) -> Cow<'_, [usize]> {
+        Cow::Owned(vec![0, Coo::nnz(self)])
+    }
+
+    fn rows_through(&self, unit_end: usize) -> usize {
+        if unit_end == 0 {
+            0
+        } else {
+            self.nrows
+        }
+    }
+
+    fn run_range(&self, block: Block, x: &[f64], y_seg: &mut [f64]) -> Result<()> {
+        if block.is_empty() {
+            return Ok(());
+        }
+        debug_assert_eq!((block.start, block.end), (0, 1), "COO has one unit");
+        crate::spmv::coo::scatter(self, x, y_seg);
+        Ok(())
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.rows.len() * 4 + self.cols.len() * 4 + self.vals.len() * 8
+    }
+
+    fn format_tag(&self) -> &'static str {
+        "coo"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense
+// ---------------------------------------------------------------------------
+
+/// Row-major dense matrix as an operator — the ground-truth oracle
+/// ([`crate::spmv::spmv_dense`]) behind the trait surface, so cross-format
+/// checks can iterate one registry instead of special-casing the oracle.
+///
+/// Densifying a sparse matrix is quadratic in its dimensions, so
+/// [`DenseOperator::from_csr`] refuses matrices above
+/// [`DenseOperator::MAX_CELLS`] cells.
+pub struct DenseOperator {
+    data: Vec<f64>,
+    nrows: usize,
+    ncols: usize,
+    /// Precomputed uniform cost prefix (`prefix[i] = i * ncols`).
+    prefix: Vec<usize>,
+}
+
+impl DenseOperator {
+    /// Refuse to densify past this many cells (32 MiB of f64): dense is
+    /// the *oracle*, never the serving path.
+    pub const MAX_CELLS: usize = 1 << 22;
+
+    /// Wrap an existing row-major buffer of shape `nrows × ncols`.
+    pub fn new(data: Vec<f64>, nrows: usize, ncols: usize) -> Result<DenseOperator> {
+        if data.len() != nrows * ncols {
+            return Err(DtansError::Dimension(format!(
+                "dense buffer {} != {nrows} x {ncols}",
+                data.len()
+            )));
+        }
+        let prefix = (0..=nrows).map(|i| i * ncols).collect();
+        Ok(DenseOperator { data, nrows, ncols, prefix })
+    }
+
+    /// Densify a CSR matrix (refused above [`DenseOperator::MAX_CELLS`]).
+    pub fn from_csr(m: &Csr) -> Result<DenseOperator> {
+        if m.nrows.saturating_mul(m.ncols) > Self::MAX_CELLS {
+            return Err(DtansError::InvalidMatrix(format!(
+                "dense oracle refused: {} x {} exceeds {} cells",
+                m.nrows,
+                m.ncols,
+                Self::MAX_CELLS
+            )));
+        }
+        DenseOperator::new(m.to_dense(), m.nrows, m.ncols)
+    }
+}
+
+impl SpmvOperator for DenseOperator {
+    fn dims(&self) -> (usize, usize) {
+        (self.nrows, self.ncols)
+    }
+
+    fn nnz(&self) -> usize {
+        self.data.iter().filter(|v| **v != 0.0).count()
+    }
+
+    fn cost_prefix(&self) -> Cow<'_, [usize]> {
+        Cow::Borrowed(&self.prefix)
+    }
+
+    fn run_range(&self, block: Block, x: &[f64], y_seg: &mut [f64]) -> Result<()> {
+        crate::spmv::dense::spmv_dense_row_range(
+            &self.data, self.ncols, block.start, block.end, x, y_seg,
+        )
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.data.len() * 8 + self.prefix.len() * 8
+    }
+
+    fn format_tag(&self) -> &'static str {
+        "dense"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CSR-dtANS
+// ---------------------------------------------------------------------------
+
+/// The paper's format as an operator: an encoded matrix *plus* its
+/// [`DecodePlan`], built once at construction. Plan reuse used to leak
+/// through a separate `spmv_with_plan(…, &plan, …)` entry point that every
+/// caller had to thread a plan into; here it is an internal detail —
+/// construct the operator once, multiply many times.
+pub struct DtansOperator {
+    enc: Arc<CsrDtans>,
+    plan: DecodePlan,
+    /// `slice_offsets` widened to `usize` once, so partitioning never
+    /// re-copies the table.
+    prefix: Vec<usize>,
+}
+
+impl DtansOperator {
+    /// Build the operator (and its decode plan) for an encoded matrix.
+    pub fn new(enc: impl Into<Arc<CsrDtans>>) -> DtansOperator {
+        let enc = enc.into();
+        let plan = DecodePlan::new(&enc);
+        let prefix = enc.slice_offsets.iter().map(|&w| w as usize).collect();
+        DtansOperator { enc, plan, prefix }
+    }
+
+    /// The encoded matrix.
+    pub fn encoding(&self) -> &Arc<CsrDtans> {
+        &self.enc
+    }
+
+    /// The prebuilt decode plan.
+    pub fn plan(&self) -> &DecodePlan {
+        &self.plan
+    }
+}
+
+impl SpmvOperator for DtansOperator {
+    fn dims(&self) -> (usize, usize) {
+        (self.enc.nrows, self.enc.ncols)
+    }
+
+    fn nnz(&self) -> usize {
+        self.enc.nnz
+    }
+
+    /// Units = 32-row slices, cost = encoded stream words (the quantity
+    /// that bounds decode time — the paper's §IV work assignment).
+    fn cost_prefix(&self) -> Cow<'_, [usize]> {
+        Cow::Borrowed(&self.prefix)
+    }
+
+    /// Decode work scales with nonzeros, and [`MIN_PAR_COST`] is
+    /// calibrated in nonzeros — reporting the (compression-ratio smaller)
+    /// stream-word total here would silently raise the Auto serial
+    /// crossover for exactly the well-compressed matrices dtANS targets,
+    /// and would disagree with the service dispatcher's nnz-based
+    /// batch-path decision.
+    ///
+    /// [`MIN_PAR_COST`]: crate::spmv::engine::MIN_PAR_COST
+    fn cost(&self) -> usize {
+        self.enc.nnz
+    }
+
+    fn rows_through(&self, unit_end: usize) -> usize {
+        (unit_end * WARP).min(self.enc.nrows)
+    }
+
+    fn run_range(&self, block: Block, x: &[f64], y_seg: &mut [f64]) -> Result<()> {
+        crate::spmv::csr_dtans::spmv_slice_range(
+            &self.enc, &self.plan, block.start, block.end, x, y_seg,
+        )
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.enc.size_report().total + self.plan.resident_bytes() + self.prefix.len() * 8
+    }
+
+    fn format_tag(&self) -> &'static str {
+        "csr_dtans"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// How to build one format's operator from a CSR original.
+#[derive(Clone, Copy)]
+pub struct FormatEntry {
+    /// The format's [`SpmvOperator::format_tag`].
+    pub tag: &'static str,
+    /// Constructor. May fail (e.g. the dense oracle refuses huge
+    /// matrices); iterating callers skip failures.
+    pub build: fn(&Csr, &EncodeOptions) -> Result<Arc<dyn SpmvOperator>>,
+}
+
+/// Registry of operator constructors, so eval, benches and tests iterate
+/// *all* formats instead of hard-coding the list in each caller — adding
+/// a format means one [`FormatEntry`], not another copy of the zoo.
+///
+/// ```
+/// use dtans::format::csr_dtans::EncodeOptions;
+/// use dtans::matrix::gen::structured::banded;
+/// use dtans::spmv::engine::SpmvEngine;
+/// use dtans::spmv::operator::FormatRegistry;
+///
+/// let m = banded(64, 1);
+/// let x = vec![1.0; m.ncols];
+/// let engine = SpmvEngine::serial();
+/// for (tag, op) in FormatRegistry::builtin().build_all(&m, &EncodeOptions::default()) {
+///     let op = op.expect(tag); // small matrix: every builder succeeds
+///     let mut y = vec![0.0; m.nrows];
+///     engine.run(op.as_ref(), &x, &mut y).unwrap();
+/// }
+/// ```
+pub struct FormatRegistry {
+    entries: Vec<FormatEntry>,
+}
+
+impl FormatRegistry {
+    /// The five built-in formats: CSR, COO, SELL (32-row slices), the
+    /// dense oracle, and CSR-dtANS.
+    pub fn builtin() -> FormatRegistry {
+        FormatRegistry {
+            entries: vec![
+                FormatEntry { tag: "csr", build: build_csr },
+                FormatEntry { tag: "coo", build: build_coo },
+                FormatEntry { tag: "sell", build: build_sell },
+                FormatEntry { tag: "dense", build: build_dense },
+                FormatEntry { tag: "csr_dtans", build: build_dtans },
+            ],
+        }
+    }
+
+    /// Add (or shadow) a format. Later entries with an existing tag
+    /// replace the earlier one.
+    pub fn register(&mut self, entry: FormatEntry) {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.tag == entry.tag) {
+            *e = entry;
+        } else {
+            self.entries.push(entry);
+        }
+    }
+
+    /// The registered entries, in registration order.
+    pub fn entries(&self) -> &[FormatEntry] {
+        &self.entries
+    }
+
+    /// Look one format up by tag.
+    pub fn get(&self, tag: &str) -> Option<&FormatEntry> {
+        self.entries.iter().find(|e| e.tag == tag)
+    }
+
+    /// Build every registered operator for `m`. Construction failures are
+    /// returned per-tag (not short-circuited) so callers can skip, e.g.,
+    /// the dense oracle on matrices too large to densify.
+    pub fn build_all(
+        &self,
+        m: &Csr,
+        opts: &EncodeOptions,
+    ) -> Vec<(&'static str, Result<Arc<dyn SpmvOperator>>)> {
+        self.entries.iter().map(|e| (e.tag, (e.build)(m, opts))).collect()
+    }
+}
+
+fn build_csr(m: &Csr, _opts: &EncodeOptions) -> Result<Arc<dyn SpmvOperator>> {
+    Ok(Arc::new(m.clone()))
+}
+
+fn build_coo(m: &Csr, _opts: &EncodeOptions) -> Result<Arc<dyn SpmvOperator>> {
+    Ok(Arc::new(m.to_coo()))
+}
+
+fn build_sell(m: &Csr, _opts: &EncodeOptions) -> Result<Arc<dyn SpmvOperator>> {
+    Ok(Arc::new(Sell::from_csr(m, 32)))
+}
+
+fn build_dense(m: &Csr, _opts: &EncodeOptions) -> Result<Arc<dyn SpmvOperator>> {
+    Ok(Arc::new(DenseOperator::from_csr(m)?))
+}
+
+fn build_dtans(m: &Csr, opts: &EncodeOptions) -> Result<Arc<dyn SpmvOperator>> {
+    Ok(Arc::new(DtansOperator::new(CsrDtans::encode(m, opts)?)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen::structured::powerlaw_rows;
+    use crate::matrix::gen::{assign_values, ValueDist};
+    use crate::util::rng::Xoshiro256;
+
+    fn sample(seed: u64) -> Csr {
+        let mut rng = Xoshiro256::seeded(seed);
+        let mut m = powerlaw_rows(100, 4.0, 1.1, &mut rng);
+        assign_values(&mut m, ValueDist::FewDistinct(5), &mut rng);
+        m
+    }
+
+    #[test]
+    fn all_builtin_operators_agree_with_csr_kernel() {
+        let m = sample(1);
+        let mut rng = Xoshiro256::seeded(2);
+        let x: Vec<f64> = (0..m.ncols).map(|_| rng.next_f64() - 0.5).collect();
+        let mut want = vec![0.0; m.nrows];
+        crate::spmv::spmv_csr(&m, &x, &mut want).unwrap();
+        for (tag, op) in FormatRegistry::builtin().build_all(&m, &EncodeOptions::default()) {
+            let op = op.expect(tag);
+            assert_eq!(op.format_tag(), tag);
+            assert_eq!(op.dims(), (m.nrows, m.ncols));
+            let prefix = op.cost_prefix();
+            assert!(!prefix.is_empty(), "{tag}: empty prefix");
+            assert_eq!(op.rows_through(prefix.len() - 1), m.nrows, "{tag}");
+            let mut got = vec![0.0; m.nrows];
+            let full = Block {
+                start: 0,
+                end: prefix.len() - 1,
+                cost: prefix[prefix.len() - 1] - prefix[0],
+            };
+            op.run_range(full, &x, &mut got).unwrap();
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-9, "{tag}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_oracle_refuses_huge_matrices() {
+        let m = Csr::new(1 << 12, 1 << 12); // 16M cells > MAX_CELLS
+        assert!(DenseOperator::from_csr(&m).is_err());
+        assert!(DenseOperator::from_csr(&sample(3)).is_ok());
+    }
+
+    #[test]
+    fn registry_shadowing_replaces_by_tag() {
+        let mut reg = FormatRegistry::builtin();
+        let n = reg.entries().len();
+        reg.register(FormatEntry { tag: "csr", build: build_csr });
+        assert_eq!(reg.entries().len(), n);
+        reg.register(FormatEntry { tag: "custom", build: build_csr });
+        assert_eq!(reg.entries().len(), n + 1);
+        assert!(reg.get("custom").is_some());
+        assert!(reg.get("nope").is_none());
+    }
+
+    #[test]
+    fn auto_cost_is_calibrated_in_nonzeros() {
+        // The Auto decision compares cost() against MIN_PAR_COST, which
+        // is calibrated in nonzeros: CSR reports nnz (its prefix total),
+        // SELL its padded cells (real kernel work), and dtANS must
+        // report nnz too — its prefix counts compressed stream words,
+        // which would move the serial crossover by the compression ratio.
+        let m = sample(5);
+        assert_eq!(SpmvOperator::cost(&m), m.nnz());
+        let sell = Sell::from_csr(&m, 32);
+        assert_eq!(SpmvOperator::cost(&sell), sell.padded_cells());
+        let op = DtansOperator::new(CsrDtans::encode(&m, &EncodeOptions::default()).unwrap());
+        assert_eq!(op.cost(), m.nnz());
+    }
+
+    #[test]
+    fn dtans_operator_owns_plan_and_sizes_itself() {
+        let m = sample(4);
+        let enc = CsrDtans::encode(&m, &EncodeOptions::default()).unwrap();
+        let total = enc.size_report().total;
+        let op = DtansOperator::new(enc);
+        assert_eq!(SpmvOperator::nnz(&op), m.nnz());
+        assert!(op.resident_bytes() >= total + op.plan().resident_bytes());
+        assert_eq!(op.encoding().nrows, m.nrows);
+    }
+}

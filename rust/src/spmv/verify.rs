@@ -48,6 +48,19 @@ pub fn cross_check(m: &Csr, opts: &EncodeOptions, seed: u64) -> Result<f64> {
     y.iter_mut().for_each(|v| *v = 0.0);
     super::csr_dtans::spmv_csr_dtans(&enc, &x, &mut y)?;
     worst = worst.max(max_rel_err(&want, &y));
+
+    // Every registered format once more, through the dyn-operator engine
+    // path: the trait surface must agree with the free functions on
+    // arbitrary matrices too (builders that refuse — the dense oracle on
+    // huge matrices — are skipped, as the registry contract allows).
+    let engine = super::engine::SpmvEngine::serial();
+    for (_tag, op) in super::operator::FormatRegistry::builtin().build_all(&reference, opts) {
+        if let Ok(op) = op {
+            y.iter_mut().for_each(|v| *v = 0.0);
+            engine.run(op.as_ref(), &x, &mut y)?;
+            worst = worst.max(max_rel_err(&want, &y));
+        }
+    }
     Ok(worst)
 }
 

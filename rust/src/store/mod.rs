@@ -47,7 +47,7 @@ use crate::coordinator::router::{FormatChoice, RoutePolicy};
 use crate::format::csr_dtans::{CsrDtans, EncodeOptions};
 use crate::matrix::csr::Csr;
 use crate::matrix::Precision;
-use crate::spmv::csr_dtans::DecodePlan;
+use crate::spmv::operator::SpmvOperator;
 use crate::util::error::{DtansError, Result};
 use loader::Loader;
 use std::collections::HashMap;
@@ -70,10 +70,12 @@ pub struct LoadedMatrix {
     /// store with [`StoreConfig::drop_csr`] (rebuilt by decoding if the
     /// matrix ever needs the CSR path again).
     pub csr: Option<Arc<Csr>>,
-    /// The encoded form.
+    /// The encoded form (always kept: it backs persistence and eviction).
     pub enc: Arc<CsrDtans>,
-    /// Prebuilt decode plan (symbol lookup tables).
-    pub plan: Arc<DecodePlan>,
+    /// The routed kernel surface the service executes against — the CSR
+    /// original, or a [`crate::spmv::operator::DtansOperator`] owning its
+    /// decode plan.
+    pub op: Arc<dyn SpmvOperator>,
     /// Routed format.
     pub choice: FormatChoice,
 }
@@ -90,13 +92,20 @@ fn eviction_is_lossless(mat: &LoadedMatrix) -> bool {
     mat.csr.is_none() || mat.enc.precision == Precision::F64
 }
 
-/// Bytes this matrix pins in RAM while resident (encoded container +
-/// decode plan + CSR original when kept).
+/// Bytes this matrix pins in RAM while resident: the routed operator's
+/// own footprint ([`SpmvOperator::resident_bytes`] — for dtANS that
+/// already includes the encoded container and decode plan) plus whatever
+/// side data the operator does not own (the retained encoding under a
+/// CSR route; the retained CSR original under a dtANS route).
 fn resident_cost(mat: &LoadedMatrix) -> u64 {
-    let mut cost = mat.enc.size_report().total as u64 + mat.plan.resident_bytes() as u64;
-    if let Some(csr) = &mat.csr {
-        // Actual heap layout: usize row offsets, u32 columns, f64 values.
-        cost += (csr.row_ptr.len() * 8 + csr.cols.len() * 4 + csr.vals.len() * 8) as u64;
+    let mut cost = mat.op.resident_bytes() as u64;
+    match mat.choice {
+        FormatChoice::Csr => cost += mat.enc.size_report().total as u64,
+        FormatChoice::CsrDtans => {
+            if let Some(csr) = &mat.csr {
+                cost += SpmvOperator::resident_bytes(csr.as_ref()) as u64;
+            }
+        }
     }
     cost
 }
@@ -243,15 +252,18 @@ impl MatrixStore {
         };
         let choice = sh.policy.choose(&csr, &enc, &sh.encode);
         let keep_csr = !(sh.config.drop_csr && choice == FormatChoice::CsrDtans);
-        let plan = DecodePlan::new(&enc);
+        let (nrows, ncols, nnz) = (csr.nrows, csr.ncols, csr.nnz());
+        let csr = keep_csr.then(|| Arc::new(csr));
+        let enc = Arc::new(enc);
+        let op = RoutePolicy::operator_for(choice, csr.as_ref(), &enc)?;
         let mat = Arc::new(LoadedMatrix {
             name: name.to_string(),
-            nrows: csr.nrows,
-            ncols: csr.ncols,
-            nnz: csr.nnz(),
-            csr: keep_csr.then(|| Arc::new(csr)),
-            enc: Arc::new(enc),
-            plan: Arc::new(plan),
+            nrows,
+            ncols,
+            nnz,
+            csr,
+            enc,
+            op,
             choice,
         });
         let artifact = if from_cache {
@@ -310,15 +322,16 @@ impl MatrixStore {
         let choice = sh.policy.choose_encoded(&enc);
         let keep_csr = !(sh.config.drop_csr && choice == FormatChoice::CsrDtans);
         let csr = if keep_csr { Some(Arc::new(enc.decode_to_csr()?)) } else { None };
-        let plan = DecodePlan::new(&enc);
+        let enc = Arc::new(enc);
+        let op = RoutePolicy::operator_for(choice, csr.as_ref(), &enc)?;
         let mat = Arc::new(LoadedMatrix {
             name: name.to_string(),
             nrows: enc.nrows,
             ncols: enc.ncols,
             nnz: enc.nnz,
             csr,
-            enc: Arc::new(enc),
-            plan: Arc::new(plan),
+            enc,
+            op,
             choice,
         });
         // The CSR (if kept) was derived by decoding this very artifact, so
@@ -482,15 +495,16 @@ fn cold_load(sh: &Arc<StoreShared>, id: u64) -> Result<Arc<LoadedMatrix>> {
     let t0 = Instant::now();
     let enc = crate::format::serialize::load(&path)?;
     let csr = if keep_csr { Some(Arc::new(enc.decode_to_csr()?)) } else { None };
-    let plan = DecodePlan::new(&enc);
+    let enc = Arc::new(enc);
+    let op = RoutePolicy::operator_for(choice, csr.as_ref(), &enc)?;
     let mat = Arc::new(LoadedMatrix {
         name,
         nrows,
         ncols,
         nnz,
         csr,
-        enc: Arc::new(enc),
-        plan: Arc::new(plan),
+        enc,
+        op,
         choice,
     });
     sh.metrics.record_cold_load(t0.elapsed().as_micros() as u64);

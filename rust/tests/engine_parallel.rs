@@ -17,7 +17,8 @@ use dtans::matrix::gen::structured::{banded, powerlaw_rows, stencil2d5};
 use dtans::matrix::gen::{assign_values, gen_graph_csr, GraphModel, ValueDist};
 use dtans::matrix::Sell;
 use dtans::spmv::engine::{partition_prefix, ParStrategy, SpmvEngine};
-use dtans::spmv::{spmv_csr, spmv_csr_dtans, spmv_sell};
+use dtans::spmv::operator::DtansOperator;
+use dtans::spmv::{spmv_csr, spmv_csr_dtans, spmv_sell, DenseMat};
 use dtans::util::propcheck::{check, Ctx};
 use dtans::util::rng::Xoshiro256;
 
@@ -123,7 +124,7 @@ fn prop_engine_csr_bit_identical_across_partition_counts() {
         for parts in 1..=16 {
             let engine = SpmvEngine::new(ParStrategy::Fixed(parts));
             let mut got = y0.clone();
-            engine.spmv_csr(&m, &x, &mut got).map_err(|e| e.to_string())?;
+            engine.run(&m, &x, &mut got).map_err(|e| e.to_string())?;
             if got != want {
                 return Err(format!("CSR mismatch at parts={parts}"));
             }
@@ -149,12 +150,11 @@ fn prop_engine_dtans_bit_identical_across_partition_counts() {
         let y0: Vec<f64> = (0..m.nrows).map(|i| (i as f64) * -0.25).collect();
         let mut want = y0.clone();
         spmv_csr_dtans(&enc, &x, &mut want).map_err(|e| e.to_string())?;
+        let op = DtansOperator::new(enc);
         for parts in 1..=16 {
             let engine = SpmvEngine::new(ParStrategy::Fixed(parts));
             let mut got = y0.clone();
-            engine
-                .spmv_csr_dtans(&enc, &x, &mut got)
-                .map_err(|e| e.to_string())?;
+            engine.run(&op, &x, &mut got).map_err(|e| e.to_string())?;
             if got != want {
                 return Err(format!("CSR-dtANS mismatch at parts={parts}"));
             }
@@ -174,7 +174,7 @@ fn prop_engine_sell_bit_identical() {
         for parts in [1usize, 2, 5, 16] {
             let engine = SpmvEngine::new(ParStrategy::Fixed(parts));
             let mut got = vec![0.0; m.nrows];
-            engine.spmv_sell(&sell, &x, &mut got).map_err(|e| e.to_string())?;
+            engine.run(&sell, &x, &mut got).map_err(|e| e.to_string())?;
             if got != want {
                 return Err(format!("SELL mismatch at parts={parts}"));
             }
@@ -189,22 +189,24 @@ fn prop_spmm_bit_identical_to_repeated_spmv() {
         let m = random_csr(ctx);
         let enc = CsrDtans::encode(&m, &EncodeOptions::default()).map_err(|e| e.to_string())?;
         let k = 1 + ctx.rng.below_usize(6);
-        let xs: Vec<Vec<f64>> = (0..k).map(|_| random_x(ctx, m.ncols)).collect();
+        let cols: Vec<Vec<f64>> = (0..k).map(|_| random_x(ctx, m.ncols)).collect();
+        let xs = DenseMat::from_cols(m.ncols, &cols).map_err(|e| e.to_string())?;
         let parts = 1 + ctx.rng.below_usize(16);
         let engine = SpmvEngine::new(ParStrategy::Fixed(parts));
 
-        let ys = engine.spmm_csr(&m, &xs).map_err(|e| e.to_string())?;
-        let yd = engine.spmm_csr_dtans(&enc, &xs).map_err(|e| e.to_string())?;
-        for (j, x) in xs.iter().enumerate() {
+        let op = DtansOperator::new(enc.clone());
+        let ys = engine.run_multi(&m, &xs).map_err(|e| e.to_string())?.into_cols();
+        let yd = engine.run_multi(&op, &xs).map_err(|e| e.to_string())?.into_cols();
+        for (j, x) in cols.iter().enumerate() {
             let mut want = vec![0.0; m.nrows];
             spmv_csr(&m, x, &mut want).map_err(|e| e.to_string())?;
             if ys[j] != want {
-                return Err(format!("spmm_csr rhs {j} mismatch (parts {parts})"));
+                return Err(format!("csr run_multi rhs {j} mismatch (parts {parts})"));
             }
             let mut want_d = vec![0.0; m.nrows];
             spmv_csr_dtans(&enc, x, &mut want_d).map_err(|e| e.to_string())?;
             if yd[j] != want_d {
-                return Err(format!("spmm_csr_dtans rhs {j} mismatch (parts {parts})"));
+                return Err(format!("dtans run_multi rhs {j} mismatch (parts {parts})"));
             }
         }
         Ok(())
@@ -224,13 +226,14 @@ fn engine_handles_empty_rows_and_tail_slices() {
         let x = vec![1.0; m.ncols];
         let mut want = vec![0.5; m.nrows];
         spmv_csr_dtans(&enc, &x, &mut want).unwrap();
+        let op = DtansOperator::new(enc);
         for parts in [1usize, 3, 16] {
             let engine = SpmvEngine::new(ParStrategy::Fixed(parts));
             let mut got = vec![0.5; m.nrows];
-            engine.spmv_csr_dtans(&enc, &x, &mut got).unwrap();
+            engine.run(&op, &x, &mut got).unwrap();
             assert_eq!(got, want);
             let mut got_csr = vec![0.5; m.nrows];
-            engine.spmv_csr(m, &x, &mut got_csr).unwrap();
+            engine.run(m, &x, &mut got_csr).unwrap();
             let mut want_csr = vec![0.5; m.nrows];
             spmv_csr(m, &x, &mut want_csr).unwrap();
             assert_eq!(got_csr, want_csr);
@@ -251,6 +254,6 @@ fn engine_big_matrix_parallel_speedpath_is_exact() {
     spmv_csr_dtans(&enc, &x, &mut want).unwrap();
     let engine = SpmvEngine::auto();
     let mut got = vec![0.0; m.nrows];
-    engine.spmv_csr_dtans(&enc, &x, &mut got).unwrap();
+    engine.run(&DtansOperator::new(enc), &x, &mut got).unwrap();
     assert_eq!(got, want);
 }

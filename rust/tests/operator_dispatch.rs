@@ -1,0 +1,181 @@
+//! Property tests for the format-agnostic `dyn SpmvOperator` surface,
+//! pinning the redesign's central contract: for **all five built-in
+//! formats** (CSR, COO, SELL, dense, CSR-dtANS) and every partition count
+//! in 1..=16, the engine's trait path is **bit-identical** to that
+//! format's legacy free-function kernel — not merely numerically close.
+//! Also pinned: batched `run_multi` over a contiguous [`DenseMat`] matches
+//! repeated single-vector multiplies bitwise, for every format.
+
+use dtans::format::csr_dtans::{CsrDtans, EncodeOptions};
+use dtans::matrix::csr::Csr;
+use dtans::matrix::gen::structured::{banded, powerlaw_rows, stencil2d5};
+use dtans::matrix::gen::{assign_values, gen_graph_csr, GraphModel, ValueDist};
+use dtans::matrix::Sell;
+use dtans::spmv::engine::{ParStrategy, SpmvEngine};
+use dtans::spmv::operator::FormatRegistry;
+use dtans::spmv::{spmv_coo, spmv_csr, spmv_csr_dtans, spmv_dense, spmv_sell, DenseMat};
+use dtans::util::propcheck::{check, Ctx};
+
+/// Random sparse matrix mixing graph and structured families, with value
+/// palettes that exercise both the dictionary and escape paths.
+fn random_csr(ctx: &mut Ctx) -> Csr {
+    let n = 1 + ctx.rng.below_usize(ctx.size.max(1));
+    let mut m = match ctx.rng.below(4) {
+        0 => gen_graph_csr(GraphModel::ErdosRenyi, n.max(4), 4.0, &mut ctx.rng),
+        1 => powerlaw_rows(n.max(4), 5.0, 1.1, &mut ctx.rng),
+        2 => banded(n.max(2), 1 + ctx.rng.below_usize(4)),
+        _ => {
+            let side = 2 + ctx.rng.below_usize((n as f64).sqrt() as usize + 2);
+            stencil2d5(side, side)
+        }
+    };
+    let dist = match ctx.rng.below(3) {
+        0 => ValueDist::FewDistinct(6),
+        1 => ValueDist::Gaussian,
+        _ => ValueDist::Quantized(64),
+    };
+    assign_values(&mut m, dist, &mut ctx.rng);
+    m
+}
+
+fn random_x(ctx: &mut Ctx, n: usize) -> Vec<f64> {
+    (0..n).map(|_| ctx.rng.next_f64() - 0.5).collect()
+}
+
+/// The legacy free-function kernel for one format tag, starting from `y0`
+/// (the `+=` contract). This is the pre-redesign entry point each
+/// operator must reproduce bit-for-bit.
+fn legacy_kernel(
+    tag: &str,
+    m: &Csr,
+    opts: &EncodeOptions,
+    x: &[f64],
+    y0: &[f64],
+) -> Result<Vec<f64>, String> {
+    let mut y = y0.to_vec();
+    match tag {
+        "csr" => spmv_csr(m, x, &mut y),
+        "coo" => spmv_coo(&m.to_coo(), x, &mut y),
+        "sell" => spmv_sell(&Sell::from_csr(m, 32), x, &mut y),
+        "dense" => spmv_dense(&m.to_dense(), m.nrows, m.ncols, x, &mut y),
+        "csr_dtans" => {
+            let enc = CsrDtans::encode(m, opts).map_err(|e| e.to_string())?;
+            spmv_csr_dtans(&enc, x, &mut y)
+        }
+        other => return Err(format!("no legacy kernel for tag {other}")),
+    }
+    .map_err(|e| e.to_string())?;
+    Ok(y)
+}
+
+#[test]
+fn prop_dyn_engine_bit_identical_to_legacy_kernels_all_formats() {
+    // Engines are reusable; build the 16 partition counts once.
+    let engines: Vec<SpmvEngine> =
+        (1..=16).map(|p| SpmvEngine::new(ParStrategy::Fixed(p))).collect();
+    check("operator-dyn-bitident", 14, 110, |ctx: &mut Ctx| {
+        let m = random_csr(ctx);
+        let opts = EncodeOptions::default();
+        let x = random_x(ctx, m.ncols);
+        // Nonzero initial y exercises the += contract.
+        let y0: Vec<f64> = (0..m.nrows).map(|i| (i as f64) * 0.0625 - 1.0).collect();
+        let built = FormatRegistry::builtin().build_all(&m, &opts);
+        if built.len() != 5 {
+            return Err(format!("expected 5 builtin formats, got {}", built.len()));
+        }
+        for (tag, op) in built {
+            // Test matrices are small; every builder (dense included)
+            // must succeed.
+            let op = op.map_err(|e| format!("{tag}: build failed: {e}"))?;
+            if op.format_tag() != tag {
+                return Err(format!("{tag}: operator reports {}", op.format_tag()));
+            }
+            let want = legacy_kernel(tag, &m, &opts, &x, &y0)?;
+            for (engine, parts) in engines.iter().zip(1usize..) {
+                let mut got = y0.clone();
+                engine
+                    .run(op.as_ref(), &x, &mut got)
+                    .map_err(|e| format!("{tag}: {e}"))?;
+                if got != want {
+                    return Err(format!("{tag} mismatch at parts={parts}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_run_multi_matches_repeated_serial_spmv() {
+    check("operator-spmm-bitident", 10, 90, |ctx: &mut Ctx| {
+        let m = random_csr(ctx);
+        let opts = EncodeOptions::default();
+        let k = 1 + ctx.rng.below_usize(6);
+        let cols: Vec<Vec<f64>> = (0..k).map(|_| random_x(ctx, m.ncols)).collect();
+        let xs = DenseMat::from_cols(m.ncols, &cols).map_err(|e| e.to_string())?;
+        let parts = 1 + ctx.rng.below_usize(16);
+        let engine = SpmvEngine::new(ParStrategy::Fixed(parts));
+        let zeros = vec![0.0; m.nrows];
+        for (tag, op) in FormatRegistry::builtin().build_all(&m, &opts) {
+            let op = op.map_err(|e| format!("{tag}: build failed: {e}"))?;
+            let ys = engine
+                .run_multi(op.as_ref(), &xs)
+                .map_err(|e| format!("{tag}: {e}"))?;
+            for (j, (x, y)) in cols.iter().zip(ys.into_cols()).enumerate() {
+                let want = legacy_kernel(tag, &m, &opts, x, &zeros)?;
+                if y != want {
+                    return Err(format!("{tag} run_multi rhs {j} mismatch (parts {parts})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dyn_engine_handles_degenerate_shapes() {
+    // Empty matrix, zero right-hand sides, and a single trailing nonzero:
+    // every format through every partition count, no panics, exact
+    // results.
+    let mut coo_tail = dtans::matrix::coo::Coo::new(65, 65);
+    coo_tail.push(64, 64, 2.0);
+    let cases = vec![Csr::new(0, 0), Csr::new(40, 40), Csr::from_coo(&coo_tail)];
+    let opts = EncodeOptions::default();
+    for m in &cases {
+        let x = vec![1.0; m.ncols];
+        let y0 = vec![0.5; m.nrows];
+        for (tag, op) in FormatRegistry::builtin().build_all(m, &opts) {
+            let op = op.expect(tag);
+            let want = legacy_kernel(tag, m, &opts, &x, &y0).unwrap();
+            for parts in [1usize, 3, 16] {
+                let engine = SpmvEngine::new(ParStrategy::Fixed(parts));
+                let mut got = vec![0.5; m.nrows];
+                engine.run(op.as_ref(), &x, &mut got).unwrap();
+                assert_eq!(got, want, "{tag} parts={parts}");
+                // k = 0 batched call: shape (nrows, 0), no work, no panic.
+                let ys = engine.run_multi(op.as_ref(), &DenseMat::zeros(m.ncols, 0)).unwrap();
+                assert_eq!(ys.ncols(), 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn dyn_engine_rejects_dimension_mismatch_for_every_format() {
+    let m = banded(30, 2);
+    let opts = EncodeOptions::default();
+    let x_bad = vec![0.0; m.ncols + 1];
+    for (tag, op) in FormatRegistry::builtin().build_all(&m, &opts) {
+        let op = op.expect(tag);
+        let engine = SpmvEngine::new(ParStrategy::Fixed(4));
+        let mut y = vec![0.0; m.nrows];
+        assert!(
+            engine.run(op.as_ref(), &x_bad, &mut y).is_err(),
+            "{tag} accepted a bad x"
+        );
+        assert!(
+            engine.run_multi(op.as_ref(), &DenseMat::zeros(m.ncols + 1, 2)).is_err(),
+            "{tag} accepted a bad batch"
+        );
+    }
+}
