@@ -1,67 +1,22 @@
-//! Conjugate-gradient solver over a CSR-dtANS-compressed operator — the
-//! paper's iterative-solver motivation (§I): the matrix is read once per
-//! iteration, so compression pays on every multiply and the warm-cache
-//! setting applies.
+//! Conjugate gradient through the solver subsystem — the paper's
+//! iterative-solver motivation (§I): the matrix is re-read on every
+//! iteration, so compression pays on every multiply and the one-time
+//! encode + decode-plan build amortizes across the whole solve.
 //!
-//! Solves the 2D Poisson problem (5-point stencil) to 1e-8 and reports the
-//! per-iteration SpMVM cost on CSR vs CSR-dtANS.
+//! The solver is written once against `&dyn SpmvOperator`, so the same
+//! `solver::cg` call runs over plain CSR and over CSR-dtANS (and any
+//! other registered format) unchanged; `SolveReport` splits the wall time
+//! into SpMVM vs vector phases so the per-iteration kernel cost is
+//! directly visible.
 //!
 //! Run: `cargo run --release --example cg_solver`
 
 use dtans::format::csr_dtans::{CsrDtans, EncodeOptions};
 use dtans::matrix::gen::structured::stencil2d5;
-use dtans::matrix::Csr;
-use dtans::spmv::{spmv_csr, spmv_csr_dtans};
-
-/// y = A x via the chosen operator.
-enum Op<'a> {
-    Csr(&'a Csr),
-    Dtans(&'a CsrDtans),
-}
-
-impl Op<'_> {
-    fn apply(&self, x: &[f64], y: &mut [f64]) {
-        y.iter_mut().for_each(|v| *v = 0.0);
-        match self {
-            Op::Csr(m) => spmv_csr(m, x, y).unwrap(),
-            Op::Dtans(m) => spmv_csr_dtans(m, x, y).unwrap(),
-        }
-    }
-}
-
-fn dot(a: &[f64], b: &[f64]) -> f64 {
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
-}
-
-/// Standard CG; returns (iterations, final residual norm, seconds in SpMVM).
-fn cg(op: &Op, b: &[f64], x: &mut [f64], tol: f64, max_iter: usize) -> (usize, f64, f64) {
-    let n = b.len();
-    let mut r = b.to_vec();
-    let mut p = r.clone();
-    let mut ap = vec![0.0; n];
-    let mut rs = dot(&r, &r);
-    let mut spmv_secs = 0.0;
-    for it in 0..max_iter {
-        let t0 = std::time::Instant::now();
-        op.apply(&p, &mut ap);
-        spmv_secs += t0.elapsed().as_secs_f64();
-        let alpha = rs / dot(&p, &ap);
-        for i in 0..n {
-            x[i] += alpha * p[i];
-            r[i] -= alpha * ap[i];
-        }
-        let rs_new = dot(&r, &r);
-        if rs_new.sqrt() < tol {
-            return (it + 1, rs_new.sqrt(), spmv_secs);
-        }
-        let beta = rs_new / rs;
-        rs = rs_new;
-        for i in 0..n {
-            p[i] = r[i] + beta * p[i];
-        }
-    }
-    (max_iter, rs.sqrt(), spmv_secs)
-}
+use dtans::solver::{cg_with, SolverConfig};
+use dtans::spmv::engine::SpmvEngine;
+use dtans::spmv::operator::{DtansOperator, SpmvOperator};
+use dtans::spmv::spmv_csr;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let side = 192;
@@ -80,21 +35,28 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         enc.size_report().total / 1024,
         a.size_bytes_f64() as f64 / enc.size_report().total as f64
     );
+    let dtans_op = DtansOperator::new(enc); // plan built once, reused per iteration
 
     let b = vec![1.0; a.nrows];
-    for (name, op) in [("CSR", Op::Csr(&a)), ("CSR-dtANS", Op::Dtans(&enc))] {
-        let mut x = vec![0.0; a.nrows];
-        let t0 = std::time::Instant::now();
-        let (iters, res, spmv_secs) = cg(&op, &b, &mut x, 1e-8, 4000);
+    let cfg = SolverConfig { tol: 1e-8, max_iters: 4000, ..Default::default() };
+    let engine = SpmvEngine::auto(); // shared: nnz-balanced parallel SpMVM
+    let ops: [(&str, &dyn SpmvOperator); 2] = [("CSR", &a), ("CSR-dtANS", &dtans_op)];
+    for (name, op) in ops {
+        let sol = cg_with(&engine, op, &b, None, &cfg)?;
+        let r = &sol.report;
         println!(
-            "{name:<10} converged in {iters} iters (residual {res:.2e}) in {:.2}s \
-             ({:.3} ms/SpMVM)",
-            t0.elapsed().as_secs_f64(),
-            spmv_secs / iters as f64 * 1e3
+            "{name:<10} {} in {} iters (residual {:.2e}) in {:.2}s \
+             ({:.3} ms/SpMVM, {:.0}% of solve in SpMVM)",
+            if r.converged() { "converged" } else { "stopped" },
+            r.iterations,
+            r.final_residual(),
+            r.total_secs,
+            r.spmv_secs / r.iterations.max(1) as f64 * 1e3,
+            100.0 * r.spmv_secs / r.total_secs.max(1e-12),
         );
-        // Sanity: solution must satisfy A x ~ b.
+        // Sanity: the iterate must satisfy A x ~ b.
         let mut ax = vec![0.0; a.nrows];
-        spmv_csr(&a, &x, &mut ax)?;
+        spmv_csr(&a, &sol.x, &mut ax)?;
         let err = ax.iter().zip(&b).map(|(p, q)| (p - q).abs()).fold(0.0f64, f64::max);
         assert!(err < 1e-5, "solution check failed: {err}");
     }

@@ -87,6 +87,29 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         cache_dir.display()
     );
 
+    // --- 2b. Iterative solve through the service: one store pin for the
+    // whole solve, recorded in metrics as a single request-level sample
+    // with its iteration count (watch the `solver:` section).
+    let spd = dtans::matrix::gen::structured::stencil2d5(64, 64);
+    let spd_rows = spd.nrows;
+    let spd_id = svc.register("poisson-64", spd)?;
+    let acquires0 = svc.metrics.acquires.load(std::sync::atomic::Ordering::Relaxed);
+    let sol = svc.solve(
+        spd_id,
+        dtans::solver::SolveMethod::Cg,
+        &vec![1.0; spd_rows],
+        &dtans::solver::SolverConfig { tol: 1e-8, ..Default::default() },
+    )?;
+    let acquires1 = svc.metrics.acquires.load(std::sync::atomic::Ordering::Relaxed);
+    println!(
+        "CG solve on poisson-64: {} in {} iters ({:.2e} residual) — {} store pin(s) held",
+        if sol.report.converged() { "converged" } else { "stopped" },
+        sol.report.iterations,
+        sol.report.final_residual(),
+        acquires1 - acquires0,
+    );
+    println!("metrics after solve: {}", svc.metrics.report());
+
     // Re-registering a known matrix hits the artifact cache: no encode.
     svc.store().flush(); // make sure the background persists landed
     let hits_before = svc.metrics.store_hits.load(std::sync::atomic::Ordering::Relaxed);

@@ -10,6 +10,9 @@
 //!    (`engine_batched`), and the dyn-dispatch overhead of the
 //!    `SpmvOperator` trait path vs the direct kernels
 //!    (`operator_dispatch`, reporting to `results/BENCH_operator.json`);
+//!  * solver bench: CG per-iteration cost CSR vs CSR-dtANS on a ~2.3M-nnz
+//!    SPD system, with the encode-amortization break-even
+//!    (`solver_iterations`, reporting to `results/BENCH_solver.json`);
 //!  * store benches: artifact-cache registration vs re-encode and
 //!    warm-vs-cold SpMV under eviction (`store_coldstart`), with a
 //!    machine-readable trajectory report at `results/BENCH_store.json`;
@@ -456,6 +459,99 @@ fn bench_store_coldstart(filter: &Option<String>, quick: bool) {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Iterative-solver workload: CG on a large SPD Poisson system (~2.3M nnz
+/// in full mode, the scaling-bench size), CSR vs CSR-dtANS per-iteration
+/// cost. This is the repeated-application regime where dtANS's one-time
+/// encode + plan build amortizes across every iteration of the solve;
+/// the JSON report states how many iterations that amortization needs.
+/// Emits machine-readable `results/BENCH_solver.json`.
+fn bench_solver_iterations(filter: &Option<String>, quick: bool) {
+    use dtans::solver::{cg_with, SolverConfig};
+    use std::time::Instant;
+
+    if !should_run(filter, "solver_iterations") {
+        return;
+    }
+    let side = if quick { 240 } else { 680 }; // 680^2 grid -> ~2.31M nnz
+    let a = stencil2d5(side, side);
+    let b: Vec<f64> = (0..a.nrows).map(|i| ((i as f64) * 0.013).sin() + 1.0).collect();
+    println!(
+        "solver_iterations            matrix: {}x{} Poisson, {} unknowns, {} nnz (2^{:.1})",
+        side,
+        side,
+        a.nrows,
+        a.nnz(),
+        (a.nnz() as f64).log2()
+    );
+
+    // One-time dtANS cost: encode + decode-plan build (the DtansOperator
+    // constructor builds the plan), paid once per solve lifetime.
+    let t0 = Instant::now();
+    let enc = CsrDtans::encode(&a, &EncodeOptions::default()).unwrap();
+    let enc_bytes = enc.size_report().total;
+    let dtans_op = DtansOperator::new(enc);
+    let encode_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "solver_iterations/encode     {:.3}s one-time (CSR {} KB -> dtANS {} KB, {:.2}x)",
+        encode_secs,
+        a.size_bytes_f64() / 1024,
+        enc_bytes / 1024,
+        a.size_bytes_f64() as f64 / enc_bytes as f64
+    );
+
+    // Fixed-iteration CG (tol 0.0 never converges): equal work per
+    // format, so per-iteration cost is directly comparable.
+    let iters = if quick { 15 } else { 25 };
+    let cfg = SolverConfig { max_iters: iters, tol: 0.0, ..Default::default() };
+    let engine = SpmvEngine::auto();
+    let csr_sol = cg_with(&engine, &a, &b, None, &cfg).unwrap();
+    let dt_sol = cg_with(&engine, &dtans_op, &b, None, &cfg).unwrap();
+    let per_iter = |r: &dtans::solver::SolveReport| r.total_secs / r.iterations.max(1) as f64;
+    let (csr_it, dt_it) = (per_iter(&csr_sol.report), per_iter(&dt_sol.report));
+    println!(
+        "solver_iterations/csr        {:.3} ms/iter ({:.1}% in SpMVM)",
+        csr_it * 1e3,
+        100.0 * csr_sol.report.spmv_secs / csr_sol.report.total_secs.max(1e-12)
+    );
+    println!(
+        "solver_iterations/csr_dtans  {:.3} ms/iter ({:.1}% in SpMVM, {:.2}x vs CSR/iter)",
+        dt_it * 1e3,
+        100.0 * dt_sol.report.spmv_secs / dt_sol.report.total_secs.max(1e-12),
+        csr_it / dt_it
+    );
+    // Iterations needed before the one-time encode pays for itself
+    // (only meaningful when dtANS is faster per iteration).
+    let amortize = if csr_it > dt_it {
+        let n = (encode_secs / (csr_it - dt_it)).ceil();
+        println!("solver_iterations/amortize   encode pays for itself after {n:.0} iterations");
+        Some(n)
+    } else {
+        println!("solver_iterations/amortize   n/a (dtANS not faster per iteration here)");
+        None
+    };
+
+    let outdir = Path::new("results");
+    let _ = std::fs::create_dir_all(outdir);
+    let json = format!(
+        "{{\n  \"bench\": \"solver_iterations\",\n  \"quick\": {},\n  \"grid_side\": {},\n  \"unknowns\": {},\n  \"nnz\": {},\n  \"cg_iterations\": {},\n  \"encode_plus_plan_s\": {:.6},\n  \"csr_per_iter_s\": {:.6},\n  \"csr_dtans_per_iter_s\": {:.6},\n  \"csr_spmv_fraction\": {:.4},\n  \"csr_dtans_spmv_fraction\": {:.4},\n  \"per_iter_speedup_csr_over_dtans\": {:.4},\n  \"amortize_iterations\": {}\n}}\n",
+        quick,
+        side,
+        a.nrows,
+        a.nnz(),
+        iters,
+        encode_secs,
+        csr_it,
+        dt_it,
+        csr_sol.report.spmv_secs / csr_sol.report.total_secs.max(1e-12),
+        dt_sol.report.spmv_secs / dt_sol.report.total_secs.max(1e-12),
+        csr_it / dt_it,
+        amortize.map_or("null".to_string(), |n| format!("{n:.0}")),
+    );
+    let path = outdir.join("BENCH_solver.json");
+    std::fs::write(&path, json).expect("write BENCH_solver.json");
+    println!("solver_iterations/report     wrote {}", path.display());
+}
+
 fn bench_experiments(filter: &Option<String>, quick: bool) {
     let scale = if quick {
         CorpusScale { max_nnz: 1 << 16, steps: 4 }
@@ -517,6 +613,7 @@ fn main() {
     bench_engine_scaling(&filter, quick);
     bench_engine_batched(&filter, quick);
     bench_operator_dispatch(&filter, quick);
+    bench_solver_iterations(&filter, quick);
     bench_store_coldstart(&filter, quick);
     bench_large_banded(&filter, quick);
     bench_experiments(&filter, quick);

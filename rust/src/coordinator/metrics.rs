@@ -1,8 +1,17 @@
-//! Service metrics: request counters, store counters, and latency
-//! quantiles over fixed-size sliding-window reservoirs — aggregate and
-//! broken out per kernel format
+//! Service metrics: request counters, store counters, solver counters,
+//! and latency quantiles over fixed-size sliding-window reservoirs —
+//! aggregate and broken out per kernel format
 //! ([`SpmvOperator::format_tag`](crate::spmv::operator::SpmvOperator::format_tag)),
 //! so dtANS vs CSR routing is observable in production.
+//!
+//! A whole iterative solve ([`crate::coordinator::service::SpmvService::solve`])
+//! is **one** request-level sample: [`Metrics::record_solve`] pushes a
+//! single end-to-end latency into the aggregate and per-format rings, and
+//! its iteration count into a separate iterations reservoir. Recording
+//! each of a solve's N inner multiplies as its own latency sample would
+//! flood the format rings with N correlated sub-millisecond entries and
+//! drag p99 toward the solver's inner-loop time — the skew called out in
+//! the per-format breakdown work.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -57,8 +66,24 @@ pub struct Metrics {
     pub persist_failures: AtomicU64,
     /// Cold loads (evicted matrices faulted back in from disk).
     pub cold_loads: AtomicU64,
+    /// Successful store pin acquisitions
+    /// ([`crate::store::MatrixStore::acquire`]) — a solve must cost
+    /// exactly one of these no matter how many iterations it runs.
+    pub acquires: AtomicU64,
+    /// Iterative solve attempts through the service (converged, diverged
+    /// **or** errored before iterating — so `solves` may exceed
+    /// `solves_converged + solves_diverged` when requests fail on
+    /// preconditions like a wrong-length right-hand side).
+    pub solves: AtomicU64,
+    /// Solves that reached their tolerance.
+    pub solves_converged: AtomicU64,
+    /// Solves that ran but stopped without converging (iteration cap or
+    /// breakdown). Precondition/request errors count as `failed`, not
+    /// here — divergence is a numerical signal, not an input bug.
+    pub solves_diverged: AtomicU64,
     latencies_us: Mutex<Ring>,
     cold_load_us: Mutex<Ring>,
+    solve_iters: Mutex<Ring>,
     /// Per-format breakdown, keyed by the executing operator's
     /// `format_tag()` (`BTreeMap` so reports list formats in a stable
     /// order).
@@ -115,6 +140,28 @@ impl LatencySummary {
     }
 }
 
+/// Snapshot of the solver section (see [`Metrics::solver_summary`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SolverSummary {
+    /// Solves executed.
+    pub solves: u64,
+    /// Solves that converged.
+    pub converged: u64,
+    /// Solves that ran but did not converge (iteration cap or breakdown);
+    /// errored solve requests appear in `solves` and the `failed`
+    /// counter instead.
+    pub diverged: u64,
+    /// Iteration-count quantiles over the sliding window (`count` solves;
+    /// `p50`/`p99`/`max` are iterations, not microseconds).
+    pub iters_count: usize,
+    /// Median iterations per solve.
+    pub iters_p50: u64,
+    /// 99th-percentile iterations per solve.
+    pub iters_p99: u64,
+    /// Maximum iterations per solve in the window.
+    pub iters_max: u64,
+}
+
 impl Metrics {
     /// Record one completed request's latency.
     pub fn record_latency(&self, micros: u64) {
@@ -155,6 +202,48 @@ impl Metrics {
         self.per_format.lock().unwrap().keys().copied().collect()
     }
 
+    /// Record one whole iterative solve: its iteration count, outcome,
+    /// and end-to-end latency. The solve is **one** submitted request and
+    /// **one** latency sample in the aggregate and per-format rings —
+    /// never one per iteration (see the module docs for the p99-skew
+    /// rationale).
+    pub fn record_solve(&self, tag: &'static str, iterations: u64, converged: bool, micros: u64) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.solves.fetch_add(1, Ordering::Relaxed);
+        if converged {
+            self.solves_converged.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.solves_diverged.fetch_add(1, Ordering::Relaxed);
+        }
+        self.solve_iters.lock().unwrap().push(iterations);
+        self.record_format_latency(tag, micros);
+    }
+
+    /// Record one errored solve (the request never produced an iterate —
+    /// e.g. a dimension mismatch). Counted as a failed request and a
+    /// solve attempt, but **not** as `solves_diverged`: that counter is
+    /// reserved for solves that ran and did not converge.
+    pub fn record_solve_failure(&self, tag: &'static str) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.solves.fetch_add(1, Ordering::Relaxed);
+        self.record_format_failure(tag);
+    }
+
+    /// Snapshot the solver section: solve counts by outcome and
+    /// iteration-count quantiles.
+    pub fn solver_summary(&self) -> SolverSummary {
+        let iters = LatencySummary::from_samples(self.solve_iters.lock().unwrap().buf.clone());
+        SolverSummary {
+            solves: self.solves.load(Ordering::Relaxed),
+            converged: self.solves_converged.load(Ordering::Relaxed),
+            diverged: self.solves_diverged.load(Ordering::Relaxed),
+            iters_count: iters.count,
+            iters_p50: iters.p50_us,
+            iters_p99: iters.p99_us,
+            iters_max: iters.max_us,
+        }
+    }
+
     /// Record one cold load (store fault-in) latency.
     pub fn record_cold_load(&self, micros: u64) {
         self.cold_loads.fetch_add(1, Ordering::Relaxed);
@@ -172,15 +261,16 @@ impl Metrics {
     }
 
     /// One-line human-readable report: the aggregate counters and
-    /// quantiles, followed by one `fmt[tag]` section per format that has
-    /// served requests.
+    /// quantiles, then a `solver:` section once any solve has run,
+    /// followed by one `fmt[tag]` section per format that has served
+    /// requests.
     pub fn report(&self) -> String {
         let s = self.latency_summary();
         let c = self.cold_load_summary();
         let mut out = format!(
             "submitted={} completed={} failed={} batches={} p50={}µs p99={}µs max={}µs \
              store_hits={} store_misses={} evictions={} persist_failures={} cold_loads={} \
-             cold_p50={}µs cold_p99={}µs",
+             acquires={} cold_p50={}µs cold_p99={}µs",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -193,9 +283,17 @@ impl Metrics {
             self.evictions.load(Ordering::Relaxed),
             self.persist_failures.load(Ordering::Relaxed),
             self.cold_loads.load(Ordering::Relaxed),
+            self.acquires.load(Ordering::Relaxed),
             c.p50_us,
             c.p99_us,
         );
+        let sv = self.solver_summary();
+        if sv.solves > 0 {
+            out.push_str(&format!(
+                " | solver: solves={} converged={} diverged={} iters_p50={} iters_p99={}",
+                sv.solves, sv.converged, sv.diverged, sv.iters_p50, sv.iters_p99
+            ));
+        }
         let per = self.per_format.lock().unwrap();
         for (tag, stats) in per.iter() {
             let f = LatencySummary::from_samples(stats.ring.buf.clone());
@@ -282,6 +380,40 @@ mod tests {
         let report = m.report();
         assert!(report.contains("fmt[csr]: ok=50 fail=0"), "{report}");
         assert!(report.contains("fmt[csr_dtans]: ok=21 fail=1"), "{report}");
+    }
+
+    #[test]
+    fn solve_is_one_latency_sample_not_n() {
+        let m = Metrics::default();
+        // A 500-iteration solve on csr, one diverged solve on csr_dtans,
+        // one errored solve (counts as failed + a solve attempt, NOT as
+        // diverged — divergence is numerical, an error is an input bug).
+        m.record_solve("csr", 500, true, 12_000);
+        m.record_solve("csr_dtans", 42, false, 3_000);
+        m.record_solve_failure("csr_dtans");
+        let s = m.solver_summary();
+        assert_eq!((s.solves, s.converged, s.diverged), (3, 1, 1));
+        assert_eq!(s.iters_count, 2);
+        assert_eq!(s.iters_max, 500);
+        // The iteration counts must NOT have flooded the latency rings:
+        // one completed sample per successful solve, exactly.
+        assert_eq!(m.latency_summary().count, 2);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 3);
+        let csr = m.format_summary("csr").unwrap();
+        assert_eq!((csr.completed, csr.latency.count), (1, 1));
+        assert_eq!(csr.latency.max_us, 12_000);
+        let report = m.report();
+        assert!(report.contains("solver: solves=3 converged=1 diverged=1"), "{report}");
+    }
+
+    #[test]
+    fn solver_section_absent_until_first_solve() {
+        let m = Metrics::default();
+        m.record_latency(5);
+        assert!(!m.report().contains("solver:"));
+        assert_eq!(m.solver_summary().solves, 0);
     }
 
     #[test]

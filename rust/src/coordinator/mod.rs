@@ -2,12 +2,14 @@
 //! routing (the production wrapper around the paper's kernel — encode
 //! once, decode on every multiply, as in the iterative-solver and
 //! ML-inference scenarios the paper motivates). Matrix lifetime and
-//! residency live one layer down in the tiered store ([`crate::store`]).
+//! residency live one layer down in the tiered store ([`crate::store`]);
+//! iterative solves ([`crate::solver`]) run through
+//! [`service::SpmvService::solve`] under a single store pin.
 
 pub mod metrics;
 pub mod router;
 pub mod service;
 
-pub use metrics::{FormatSummary, LatencySummary, Metrics};
+pub use metrics::{FormatSummary, LatencySummary, Metrics, SolverSummary};
 pub use router::{FormatChoice, RoutePolicy};
 pub use service::{LoadedMatrix, Pending, ServiceConfig, SpmvService};

@@ -8,6 +8,15 @@
 //! speedup; the number of nonzeros per row determines the magnitude" — so
 //! dtANS is selected when the matrix is large enough *and* actually
 //! compressed (otherwise decode overhead buys nothing).
+//!
+//! Iterative solves ([`crate::solver`], exposed through
+//! [`SpmvService::solve`](crate::coordinator::service::SpmvService::solve))
+//! execute against the same per-matrix routing decision: the operator is
+//! chosen once at registration and reused for every iteration, so a
+//! dtANS route amortizes its one-time plan build across the entire solve
+//! while each iteration pays only the (smaller) resident-byte traffic —
+//! the repeated-application regime where the paper's compression pays
+//! most (see `docs/SOLVERS.md` for when dtANS wins per-iteration).
 
 use crate::format::csr_dtans::{CsrDtans, EncodeOptions};
 use crate::matrix::csr::Csr;

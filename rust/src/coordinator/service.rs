@@ -27,11 +27,20 @@
 //! them resident until their batch completes. The dispatcher itself
 //! routes on metadata only and never blocks on a cold load, so one cold
 //! matrix cannot head-of-line-block warm traffic.
+//!
+//! Beyond one-shot multiplies, the service runs whole **iterative
+//! solves** ([`SpmvService::solve`], [`SpmvService::power`],
+//! [`SpmvService::pagerank`]): the matrix is pinned once for the entire
+//! solve, every iteration executes on the shared engine against the
+//! routed operator, and the solve lands in [`Metrics`] as one
+//! request-level sample carrying its iteration count and outcome (see
+//! `docs/SOLVERS.md`).
 
 use super::metrics::Metrics;
 use super::router::{FormatChoice, RoutePolicy};
 use crate::format::csr_dtans::EncodeOptions;
 use crate::matrix::csr::Csr;
+use crate::solver::{self, PowerSolution, Solution, SolveMethod, SolverConfig};
 use crate::spmv::densemat::DenseMat;
 use crate::spmv::engine::{ParStrategy, SpmvEngine};
 use crate::store::{MatrixStore, PinnedMatrix, StoreConfig};
@@ -107,6 +116,10 @@ pub struct SpmvService {
     queue_tx: Sender<Request>,
     /// Service metrics (shared with workers and the store).
     pub metrics: Arc<Metrics>,
+    /// One engine for every execution path — dispatcher batches, per-
+    /// request jobs, and whole solves — so decode plans stay hot and
+    /// kernel parallelism is centralized under [`ServiceConfig::par`].
+    engine: Arc<SpmvEngine>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     config: ServiceConfig,
 }
@@ -129,18 +142,21 @@ impl SpmvService {
             Arc::clone(&metrics),
         )?);
         let (tx, rx) = channel::<Request>();
+        let engine = Arc::new(SpmvEngine::new(config.par));
 
         let dispatcher = {
             let store = Arc::clone(&store);
             let metrics = Arc::clone(&metrics);
+            let engine = Arc::clone(&engine);
             let cfg = config.clone();
-            std::thread::spawn(move || dispatcher_loop(rx, store, metrics, cfg))
+            std::thread::spawn(move || dispatcher_loop(rx, store, metrics, engine, cfg))
         };
 
         Ok(SpmvService {
             store,
             queue_tx: tx,
             metrics,
+            engine,
             dispatcher: Some(dispatcher),
             config,
         })
@@ -185,6 +201,100 @@ impl SpmvService {
         self.submit(matrix, x).wait()
     }
 
+    /// Run an iterative linear solve `A·x = b` against a registered
+    /// matrix on the calling thread.
+    ///
+    /// The matrix is acquired through **one** store pin held for the
+    /// whole solve — a cold matrix faults in once, then every iteration
+    /// multiplies against the pinned resident operator (no per-iteration
+    /// cold-load faults, observable via [`Metrics::acquires`]). Kernel
+    /// work runs on the service's shared engine (so
+    /// [`ServiceConfig::par`] applies; [`SolverConfig::par`] is ignored
+    /// here), against whatever operator the [`RoutePolicy`] chose at
+    /// registration. The solve is recorded in [`Metrics`] as a single
+    /// request-level sample with its iteration count and outcome
+    /// ([`Metrics::solver_summary`]).
+    ///
+    /// [`Metrics::acquires`]: crate::coordinator::metrics::Metrics::acquires
+    /// [`Metrics::solver_summary`]: crate::coordinator::metrics::Metrics::solver_summary
+    pub fn solve(
+        &self,
+        matrix: u64,
+        method: SolveMethod,
+        b: &[f64],
+        cfg: &SolverConfig,
+    ) -> Result<Solution> {
+        self.run_pinned_solve(
+            matrix,
+            |engine, op| match method {
+                SolveMethod::Cg => solver::cg_with(engine, op, b, None, cfg),
+                SolveMethod::BiCgStab => solver::bicgstab_with(engine, op, b, None, cfg),
+            },
+            |sol| &sol.report,
+        )
+    }
+
+    /// Power-iterate a registered matrix to its dominant eigenpair, with
+    /// the same single-pin and metrics discipline as
+    /// [`SpmvService::solve`].
+    pub fn power(&self, matrix: u64, cfg: &SolverConfig) -> Result<PowerSolution> {
+        self.run_pinned_solve(
+            matrix,
+            |engine, op| solver::power_iteration_with(engine, op, None, cfg),
+            |sol| &sol.report,
+        )
+    }
+
+    /// PageRank a registered column-stochastic transition matrix, with
+    /// the same single-pin and metrics discipline as
+    /// [`SpmvService::solve`].
+    pub fn pagerank(&self, matrix: u64, damping: f64, cfg: &SolverConfig) -> Result<Solution> {
+        self.run_pinned_solve(
+            matrix,
+            |engine, op| solver::pagerank_with(engine, op, damping, cfg),
+            |sol| &sol.report,
+        )
+    }
+
+    /// Shared solve discipline: one pin for the whole solve, execution on
+    /// the shared engine, one request-level metrics sample. `report_of`
+    /// projects the solver's return value onto its [`solver::SolveReport`]
+    /// (solutions and eigenpairs carry it under different types).
+    fn run_pinned_solve<T>(
+        &self,
+        matrix: u64,
+        run: impl FnOnce(&SpmvEngine, &dyn crate::spmv::operator::SpmvOperator) -> Result<T>,
+        report_of: impl Fn(&T) -> &solver::SolveReport,
+    ) -> Result<T> {
+        let t0 = Instant::now();
+        let pinned = match self.store.acquire(matrix) {
+            Ok(p) => p, // the solve's one pin, held until this fn returns
+            Err(e) => {
+                // No operator ever executed, so there is no format to
+                // charge — but the request must still be visible, exactly
+                // as the spmv path counts an unknown-matrix request.
+                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                self.metrics.failed.fetch_add(1, Ordering::Relaxed);
+                return Err(e);
+            }
+        };
+        let tag = pinned.op.format_tag();
+        let result = run(&self.engine, pinned.op.as_ref());
+        match &result {
+            Ok(sol) => {
+                let r = report_of(sol);
+                self.metrics.record_solve(
+                    tag,
+                    r.iterations as u64,
+                    r.converged(),
+                    t0.elapsed().as_micros() as u64,
+                );
+            }
+            Err(_) => self.metrics.record_solve_failure(tag),
+        }
+        result
+    }
+
     /// The service configuration.
     pub fn config(&self) -> &ServiceConfig {
         &self.config
@@ -207,12 +317,12 @@ fn dispatcher_loop(
     rx: Receiver<Request>,
     store: Arc<MatrixStore>,
     metrics: Arc<Metrics>,
+    // The service-wide engine (shared with `SpmvService::solve`): decode
+    // tables / plans stay hot, kernel parallelism lives in one place.
+    engine: Arc<SpmvEngine>,
     cfg: ServiceConfig,
 ) {
     let pool = crate::util::threadpool::ThreadPool::new(cfg.workers);
-    // One engine shared by every request: the decode tables / plan stay
-    // hot, and kernel-level parallelism is centralized in one place.
-    let engine = Arc::new(SpmvEngine::new(cfg.par));
     let mut pending: Option<Request> = None;
     loop {
         // Collect a batch: all queued requests for the same matrix, up to
@@ -450,6 +560,43 @@ mod tests {
         let svc = SpmvService::start(ServiceConfig::default());
         assert!(svc.spmv(999, vec![0.0; 4]).is_err());
         assert_eq!(svc.metrics.failed.load(Ordering::Relaxed), 1);
+        // A solve against an unknown matrix is counted like any failed
+        // request (submitted + failed), even though no solver ever ran.
+        let submitted0 = svc.metrics.submitted.load(Ordering::Relaxed);
+        assert!(svc.solve(999, SolveMethod::Cg, &[0.0; 4], &SolverConfig::default()).is_err());
+        assert_eq!(svc.metrics.failed.load(Ordering::Relaxed), 2);
+        assert_eq!(svc.metrics.submitted.load(Ordering::Relaxed), submitted0 + 1);
+        assert_eq!(svc.metrics.solver_summary().solves, 0);
+    }
+
+    #[test]
+    fn solve_runs_cg_through_the_service() {
+        use crate::matrix::gen::structured::stencil2d5;
+        let svc = SpmvService::start(ServiceConfig::default());
+        let a = stencil2d5(12, 12);
+        let id = svc.register("poisson", a.clone()).unwrap();
+        let b = vec![1.0; a.nrows];
+        let acquires0 = svc.metrics.acquires.load(Ordering::Relaxed);
+        let sol = svc.solve(id, SolveMethod::Cg, &b, &SolverConfig::default()).unwrap();
+        assert!(sol.report.converged());
+        assert!(sol.report.iterations > 1);
+        // Exactly one pin for the whole solve, released afterwards.
+        assert_eq!(svc.metrics.acquires.load(Ordering::Relaxed) - acquires0, 1);
+        assert_eq!(svc.store().pin_count(id), 0);
+        let s = svc.metrics.solver_summary();
+        assert_eq!((s.solves, s.converged, s.diverged), (1, 1, 0));
+        assert_eq!(s.iters_p50, sol.report.iterations as u64);
+        // One request-level latency sample — not one per iteration.
+        let fs = svc.metrics.format_summary("csr").unwrap();
+        assert_eq!((fs.completed, fs.latency.count), (1, 1));
+        // Mismatched rhs fails cleanly: a solve attempt and a failed
+        // request, but NOT a divergence (no iteration ever ran).
+        let failed0 = svc.metrics.failed.load(Ordering::Relaxed);
+        assert!(svc.solve(id, SolveMethod::BiCgStab, &[1.0; 3], &SolverConfig::default())
+            .is_err());
+        let s2 = svc.metrics.solver_summary();
+        assert_eq!((s2.solves, s2.diverged), (2, 0));
+        assert_eq!(svc.metrics.failed.load(Ordering::Relaxed), failed0 + 1);
     }
 
     #[test]

@@ -39,6 +39,12 @@
 //!   the paper's evaluation section.
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`).
+//! * [`solver`] — iterative solvers (conjugate gradient, BiCGStab, power
+//!   iteration / PageRank) written once against the operator trait, with
+//!   iterations running over the engine's fused `y = α·A·x + β·y` entry
+//!   point (allocation-free for the row-oriented formats) — the
+//!   repeated-multiply workload where per-iteration decoding amortizes
+//!   the paper's compression.
 //! * [`coordinator`] — a batching SpMVM service (router, worker pool,
 //!   metrics) built on the native and PJRT execution paths.
 //! * [`store`] — the tiered matrix store under the coordinator: a
@@ -76,6 +82,7 @@ pub mod format;
 pub mod matrix;
 pub mod runtime;
 pub mod sim;
+pub mod solver;
 pub mod spmv;
 pub mod store;
 pub mod util;

@@ -1,0 +1,260 @@
+//! Iterative solvers over the format-agnostic [`SpmvOperator`] surface:
+//! conjugate gradient ([`cg`]), BiCGStab ([`bicgstab`]), and power
+//! iteration / PageRank ([`power_iteration`], [`pagerank`]).
+//!
+//! Repeated SpMVM inside an iterative solve is the workload where the
+//! paper's compression pays twice: the matrix is re-read on **every**
+//! iteration, so the encode cost and the
+//! [`DecodePlan`](crate::spmv::csr_dtans::DecodePlan) build are amortized
+//! across the whole solve, and the per-iteration win is the resident-byte
+//! saving itself (SpMVM is bandwidth-bound). Solvers here are written
+//! *once* against `&dyn SpmvOperator` and therefore run unchanged over
+//! every registered format — CSR, COO, SELL, dense, CSR-dtANS — and over
+//! every [`ParStrategy`]: the engine guarantees each format's results are
+//! bit-identical across partition counts, so a solve's entire iterate
+//! history is too (property-tested in `tests/solver_convergence.rs`).
+//!
+//! Iteration multiplies go through the fused [`SpmvEngine::run_axpby`]
+//! (`y = α·A·x + β·y`), and all solver work vectors are allocated once
+//! before the loop. For the row-oriented formats (CSR, SELL, dense) the
+//! fused kernels make iterations fully allocation-free — no temporary
+//! product vector, no zeroing pass; COO and CSR-dtANS run `run_axpby`
+//! through a per-block temporary (the default
+//! [`run_range_axpby`](crate::spmv::operator::SpmvOperator::run_range_axpby)),
+//! trading one block-sized allocation for arithmetic identical to the
+//! unfused compose.
+//!
+//! # Contracts and termination
+//!
+//! See `docs/SOLVERS.md` for the full contract table. In brief:
+//!
+//! * [`cg`] requires a **symmetric positive-definite** matrix; a
+//!   non-SPD operator surfaces as [`Termination::Breakdown`]
+//!   (`p·Ap ≤ 0`), not as a wrong answer.
+//! * [`bicgstab`] requires only a square nonsingular matrix.
+//! * [`power_iteration`] requires a dominant eigenvalue separated in
+//!   modulus; [`pagerank`] requires a column-stochastic transition
+//!   operator.
+//! * Linear solves terminate on the **relative residual**
+//!   `‖b − A·x‖₂ / ‖b‖₂ ≤ tol`; [`SolveReport::residuals`] records that
+//!   quantity after every iteration, so histories are comparable across
+//!   formats and partition counts.
+//!
+//! # Example
+//!
+//! ```
+//! use dtans::matrix::gen::structured::stencil2d5;
+//! use dtans::solver::{cg, SolverConfig};
+//!
+//! let a = stencil2d5(8, 8); // small SPD Poisson matrix
+//! let b = vec![1.0; a.nrows];
+//! let sol = cg(&a, &b, &SolverConfig::default()).unwrap();
+//! assert!(sol.report.converged());
+//! assert!(sol.report.final_residual() <= 1e-10);
+//! ```
+//!
+//! [`SpmvOperator`]: crate::spmv::operator::SpmvOperator
+//! [`SpmvEngine::run_axpby`]: crate::spmv::engine::SpmvEngine::run_axpby
+//! [`ParStrategy`]: crate::spmv::engine::ParStrategy
+
+pub mod bicgstab;
+pub mod cg;
+pub mod power;
+
+pub use bicgstab::{bicgstab, bicgstab_with};
+pub use cg::{cg, cg_with};
+pub use power::{pagerank, pagerank_with, power_iteration, power_iteration_with, PowerSolution};
+
+use crate::spmv::engine::ParStrategy;
+use crate::spmv::operator::SpmvOperator;
+use crate::util::error::{DtansError, Result};
+
+/// Shared solver knobs. One config drives every solver in this module.
+///
+/// ```
+/// use dtans::solver::SolverConfig;
+/// use dtans::spmv::engine::ParStrategy;
+/// let cfg = SolverConfig { tol: 1e-8, ..Default::default() };
+/// assert_eq!(cfg.max_iters, 1000);
+/// assert_eq!(cfg.par, ParStrategy::Auto);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SolverConfig {
+    /// Iteration cap; reaching it without converging terminates the solve
+    /// with [`Termination::MaxIters`].
+    pub max_iters: usize,
+    /// Convergence tolerance on the relative residual
+    /// (`‖r‖₂ / ‖b‖₂` for linear solves; see each solver for its exact
+    /// residual definition).
+    pub tol: f64,
+    /// Kernel-level parallelism of the engine the convenience entry
+    /// points ([`cg`], [`bicgstab`], …) build. The `*_with` variants take
+    /// an existing engine instead and ignore this field — as does
+    /// [`SpmvService::solve`](crate::coordinator::service::SpmvService::solve),
+    /// which always executes on the service's shared engine.
+    pub par: ParStrategy,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        SolverConfig { max_iters: 1000, tol: 1e-10, par: ParStrategy::Auto }
+    }
+}
+
+/// Which linear solver [`SpmvService::solve`] runs.
+///
+/// [`SpmvService::solve`]: crate::coordinator::service::SpmvService::solve
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolveMethod {
+    /// Conjugate gradient ([`cg`]) — SPD matrices.
+    Cg,
+    /// BiCGStab ([`bicgstab`]) — general square matrices.
+    BiCgStab,
+}
+
+/// Why a solve stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Termination {
+    /// The residual reached [`SolverConfig::tol`].
+    Converged,
+    /// [`SolverConfig::max_iters`] iterations ran without convergence.
+    MaxIters,
+    /// A denominator the method divides by vanished (CG: `p·Ap ≤ 0`, i.e.
+    /// the matrix is not SPD; BiCGStab: `ρ`, `r̂·v` or `t·t` hit zero;
+    /// power iteration: the iterate fell into the null space). The
+    /// returned iterate is the best one before the breakdown.
+    Breakdown,
+}
+
+/// What one solve did: how it terminated, its residual trajectory, and
+/// wall time split by phase (SpMVM vs vector arithmetic).
+#[derive(Debug, Clone)]
+pub struct SolveReport {
+    /// Why the solve stopped.
+    pub termination: Termination,
+    /// Iterations executed.
+    pub iterations: usize,
+    /// Convergence quantity at each residual-update point — the same
+    /// number [`SolverConfig::tol`] is compared against. Its definition
+    /// is per solver: CG records the relative recurrence residual
+    /// `‖r‖₂/‖b‖₂` once per iteration; BiCGStab records it at both the
+    /// half and the full step (up to `2·iterations` entries); power
+    /// iteration records the eigenpair residual `‖A·x − λ·x‖₂/|λ|`;
+    /// PageRank records the **absolute L1 change** `‖x' − x‖₁` per step.
+    /// Empty only on a breakdown before the first residual update.
+    pub residuals: Vec<f64>,
+    /// Seconds spent inside SpMVM (`run_axpby`) calls.
+    pub spmv_secs: f64,
+    /// Seconds spent in dots, axpys and norms.
+    pub vector_secs: f64,
+    /// Whole-solve wall seconds.
+    pub total_secs: f64,
+}
+
+impl SolveReport {
+    /// True when the solve terminated with [`Termination::Converged`].
+    pub fn converged(&self) -> bool {
+        self.termination == Termination::Converged
+    }
+
+    /// The last recorded relative residual (`INFINITY` if none was — a
+    /// breakdown before the first iteration completed).
+    pub fn final_residual(&self) -> f64 {
+        self.residuals.last().copied().unwrap_or(f64::INFINITY)
+    }
+}
+
+/// A linear solve's answer: the iterate and its [`SolveReport`].
+#[derive(Debug, Clone)]
+pub struct Solution {
+    /// The final iterate `x`.
+    pub x: Vec<f64>,
+    /// Termination, residual history, phase timings.
+    pub report: SolveReport,
+}
+
+/// Serial dot product — deliberately a plain sequential loop so solver
+/// scalar updates are deterministic regardless of the engine's
+/// [`ParStrategy`] (the SpMVM side is bit-stable per format already).
+pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Euclidean norm via [`dot`].
+pub(crate) fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// Common argument validation for the linear solvers: the operator must be
+/// square and `b` must match its dimension. Returns `n`.
+pub(crate) fn check_square(op: &dyn SpmvOperator, blen: usize) -> Result<usize> {
+    let (nrows, ncols) = op.dims();
+    if nrows != ncols {
+        return Err(DtansError::Dimension(format!(
+            "iterative solver needs a square matrix, got {nrows}x{ncols}"
+        )));
+    }
+    if blen != nrows {
+        return Err(DtansError::Dimension(format!(
+            "matrix {nrows}x{ncols} with b[{blen}]"
+        )));
+    }
+    Ok(nrows)
+}
+
+/// Validate an optional initial guess and materialize the starting
+/// iterate (zeros when absent).
+pub(crate) fn initial_x(n: usize, x0: Option<&[f64]>) -> Result<Vec<f64>> {
+    match x0 {
+        None => Ok(vec![0.0; n]),
+        Some(v) if v.len() == n => Ok(v.to_vec()),
+        Some(v) => Err(DtansError::Dimension(format!(
+            "initial guess x0[{}] for dimension {n}",
+            v.len()
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen::structured::tridiagonal;
+
+    #[test]
+    fn check_square_rejects_bad_shapes() {
+        let m = crate::matrix::csr::Csr::new(3, 4);
+        assert!(check_square(&m, 3).is_err());
+        let sq = tridiagonal(5);
+        assert!(check_square(&sq, 4).is_err());
+        assert_eq!(check_square(&sq, 5).unwrap(), 5);
+    }
+
+    #[test]
+    fn initial_guess_is_validated() {
+        assert_eq!(initial_x(3, None).unwrap(), vec![0.0; 3]);
+        assert_eq!(initial_x(2, Some(&[1.0, 2.0])).unwrap(), vec![1.0, 2.0]);
+        assert!(initial_x(2, Some(&[1.0])).is_err());
+    }
+
+    #[test]
+    fn report_helpers() {
+        let r = SolveReport {
+            termination: Termination::Converged,
+            iterations: 3,
+            residuals: vec![0.5, 0.1, 1e-12],
+            spmv_secs: 0.0,
+            vector_secs: 0.0,
+            total_secs: 0.0,
+        };
+        assert!(r.converged());
+        assert_eq!(r.final_residual(), 1e-12);
+        let empty = SolveReport { residuals: vec![], termination: Termination::Breakdown, ..r };
+        assert!(!empty.converged());
+        assert!(empty.final_residual().is_infinite());
+    }
+}

@@ -1,0 +1,334 @@
+//! Power iteration and PageRank over any [`SpmvOperator`] — the repeated-
+//! application eigenvalue workloads (one multiply per iteration, the purest
+//! case for the paper's decode-every-iteration amortization argument).
+
+use super::{check_square, dot, norm2, Solution, SolveReport, SolverConfig, Termination};
+use crate::spmv::engine::SpmvEngine;
+use crate::spmv::operator::SpmvOperator;
+use crate::util::error::{DtansError, Result};
+use std::time::Instant;
+
+/// A power-iteration answer: the dominant eigenvalue estimate, its unit
+/// eigenvector, and the usual [`SolveReport`].
+#[derive(Debug, Clone)]
+pub struct PowerSolution {
+    /// Rayleigh-quotient estimate of the dominant eigenvalue.
+    pub eigenvalue: f64,
+    /// Unit-norm eigenvector iterate.
+    pub x: Vec<f64>,
+    /// Termination, residual history, phase timings.
+    pub report: SolveReport,
+}
+
+/// Estimate the dominant eigenpair of a square operator by power
+/// iteration, building a fresh engine from [`SolverConfig::par`].
+/// Requires the dominant eigenvalue to be separated in modulus; the
+/// residual driving termination is `‖A·x − λ·x‖₂ / |λ|` with
+/// `λ = x·A·x` the Rayleigh quotient of the unit iterate.
+///
+/// ```
+/// use dtans::matrix::{Coo, Csr};
+/// use dtans::solver::{power_iteration, SolverConfig};
+///
+/// // diag(9, 3, 1): dominant eigenpair (9, e0), big spectral gap.
+/// let mut coo = Coo::new(3, 3);
+/// for (i, v) in [9.0, 3.0, 1.0].into_iter().enumerate() {
+///     coo.push(i as u32, i as u32, v);
+/// }
+/// let a = Csr::from_coo(&coo);
+/// let cfg = SolverConfig { tol: 1e-9, ..Default::default() };
+/// let sol = power_iteration(&a, &cfg).unwrap();
+/// assert!(sol.report.converged());
+/// assert!((sol.eigenvalue - 9.0).abs() < 1e-6);
+/// assert!(sol.x[0].abs() > 0.999); // eigenvector concentrates on e0
+/// ```
+pub fn power_iteration(op: &dyn SpmvOperator, cfg: &SolverConfig) -> Result<PowerSolution> {
+    power_iteration_with(&SpmvEngine::new(cfg.par), op, None, cfg)
+}
+
+/// [`power_iteration`] on an existing engine, with an optional start
+/// vector (the normalized all-ones vector when `None`).
+///
+/// ```
+/// use dtans::matrix::gen::structured::tridiagonal;
+/// use dtans::solver::{power_iteration_with, SolverConfig};
+/// use dtans::spmv::engine::SpmvEngine;
+///
+/// let a = tridiagonal(32);
+/// let engine = SpmvEngine::serial();
+/// let cfg = SolverConfig { tol: 1e-6, max_iters: 5000, ..Default::default() };
+/// let sol = power_iteration_with(&engine, &a, None, &cfg).unwrap();
+/// // 1D Laplacian spectrum: dominant eigenvalue approaches 4 from below.
+/// assert!(sol.eigenvalue > 3.9 && sol.eigenvalue < 4.0);
+/// ```
+pub fn power_iteration_with(
+    engine: &SpmvEngine,
+    op: &dyn SpmvOperator,
+    x0: Option<&[f64]>,
+    cfg: &SolverConfig,
+) -> Result<PowerSolution> {
+    let n = check_square(op, x0.map_or(op.dims().0, <[f64]>::len))?;
+    let t_total = Instant::now();
+    let mut spmv_secs = 0.0;
+    let mut vector_secs = 0.0;
+    let mut residuals = Vec::new();
+
+    let mut x = match x0 {
+        Some(v) => {
+            let nrm = norm2(v);
+            if nrm == 0.0 {
+                return Err(DtansError::InvalidParams(
+                    "power iteration start vector must be nonzero".into(),
+                ));
+            }
+            v.iter().map(|e| e / nrm).collect()
+        }
+        None => vec![1.0 / (n.max(1) as f64).sqrt(); n],
+    };
+    if n == 0 {
+        return Ok(PowerSolution {
+            eigenvalue: 0.0,
+            x,
+            report: SolveReport {
+                termination: Termination::Converged,
+                iterations: 0,
+                residuals,
+                spmv_secs,
+                vector_secs,
+                total_secs: t_total.elapsed().as_secs_f64(),
+            },
+        });
+    }
+
+    let mut ax = vec![0.0; n];
+    let mut eigenvalue = 0.0;
+    let mut termination = Termination::MaxIters;
+    let mut iterations = 0;
+    for _ in 0..cfg.max_iters {
+        let t = Instant::now();
+        engine.run_axpby(op, &x, 1.0, 0.0, &mut ax)?; // ax = A·x
+        spmv_secs += t.elapsed().as_secs_f64();
+
+        let t = Instant::now();
+        eigenvalue = dot(&x, &ax); // Rayleigh quotient (‖x‖ = 1)
+        let mut resid2 = 0.0;
+        for i in 0..n {
+            let d = ax[i] - eigenvalue * x[i];
+            resid2 += d * d;
+        }
+        let rel = resid2.sqrt() / eigenvalue.abs().max(f64::MIN_POSITIVE);
+        iterations += 1;
+        residuals.push(rel);
+        if rel <= cfg.tol {
+            termination = Termination::Converged;
+            vector_secs += t.elapsed().as_secs_f64();
+            break;
+        }
+        let nrm = norm2(&ax);
+        if nrm == 0.0 {
+            // The iterate fell into the null space — no direction left.
+            termination = Termination::Breakdown;
+            vector_secs += t.elapsed().as_secs_f64();
+            break;
+        }
+        for i in 0..n {
+            x[i] = ax[i] / nrm;
+        }
+        vector_secs += t.elapsed().as_secs_f64();
+    }
+    Ok(PowerSolution {
+        eigenvalue,
+        x,
+        report: SolveReport {
+            termination,
+            iterations,
+            residuals,
+            spmv_secs,
+            vector_secs,
+            total_secs: t_total.elapsed().as_secs_f64(),
+        },
+    })
+}
+
+/// PageRank by power iteration with the teleport fused into the multiply:
+/// each step is `x' = d·P·x + (1−d)/n` — exactly one
+/// [`run_axpby`](crate::spmv::engine::SpmvEngine::run_axpby) call with
+/// `alpha = d` and `beta = 1` over the teleport-filled output. Builds a
+/// fresh engine from [`SolverConfig::par`].
+///
+/// `op` must be the **column-stochastic transition operator** `P`
+/// (`P[v][u] = 1/outdegree(u)` for each edge `u → v`, so `y = P·x`
+/// redistributes rank mass); `damping` is the usual `d ∈ (0, 1)`.
+/// Termination is on the L1 change `‖x' − x‖₁ ≤ tol`; the returned vector
+/// sums to 1 when `P` is genuinely column-stochastic (dangling nodes leak
+/// mass, as in the classic formulation).
+///
+/// ```
+/// use dtans::matrix::{Coo, Csr};
+/// use dtans::solver::{pagerank, SolverConfig};
+///
+/// // 3-cycle: column-stochastic P has PageRank uniform at 1/3.
+/// let mut coo = Coo::new(3, 3);
+/// for u in 0..3u32 {
+///     coo.push((u + 1) % 3, u, 1.0); // one out-edge each: weight 1
+/// }
+/// let p = Csr::from_coo(&coo);
+/// let cfg = SolverConfig { tol: 1e-12, ..Default::default() };
+/// let sol = pagerank(&p, 0.85, &cfg).unwrap();
+/// assert!(sol.report.converged());
+/// for r in &sol.x {
+///     assert!((r - 1.0 / 3.0).abs() < 1e-9);
+/// }
+/// ```
+pub fn pagerank(op: &dyn SpmvOperator, damping: f64, cfg: &SolverConfig) -> Result<Solution> {
+    pagerank_with(&SpmvEngine::new(cfg.par), op, damping, cfg)
+}
+
+/// [`pagerank`] on an existing engine — the service's shared-engine entry
+/// point.
+///
+/// ```
+/// use dtans::matrix::{Coo, Csr};
+/// use dtans::solver::{pagerank_with, SolverConfig};
+/// use dtans::spmv::engine::SpmvEngine;
+///
+/// // Two nodes pointing at each other: uniform rank.
+/// let mut coo = Coo::new(2, 2);
+/// coo.push(0, 1, 1.0);
+/// coo.push(1, 0, 1.0);
+/// let p = Csr::from_coo(&coo);
+/// let engine = SpmvEngine::serial();
+/// let sol = pagerank_with(&engine, &p, 0.85, &SolverConfig::default()).unwrap();
+/// assert!((sol.x[0] - 0.5).abs() < 1e-9 && (sol.x[1] - 0.5).abs() < 1e-9);
+/// ```
+pub fn pagerank_with(
+    engine: &SpmvEngine,
+    op: &dyn SpmvOperator,
+    damping: f64,
+    cfg: &SolverConfig,
+) -> Result<Solution> {
+    if !(0.0..1.0).contains(&damping) || damping == 0.0 {
+        return Err(DtansError::InvalidParams(format!(
+            "pagerank damping must be in (0, 1), got {damping}"
+        )));
+    }
+    let n = check_square(op, op.dims().0)?;
+    let t_total = Instant::now();
+    let mut spmv_secs = 0.0;
+    let mut vector_secs = 0.0;
+    let mut residuals = Vec::new();
+    let mut termination = Termination::MaxIters;
+    let mut iterations = 0;
+    let mut x = vec![1.0 / n.max(1) as f64; n];
+    if n > 0 {
+        let teleport = (1.0 - damping) / n as f64;
+        let mut next = vec![0.0; n];
+        for _ in 0..cfg.max_iters {
+            let t = Instant::now();
+            next.fill(teleport);
+            vector_secs += t.elapsed().as_secs_f64();
+
+            let t = Instant::now();
+            // next = d·P·x + next — the whole PageRank step, fused.
+            engine.run_axpby(op, &x, damping, 1.0, &mut next)?;
+            spmv_secs += t.elapsed().as_secs_f64();
+
+            let t = Instant::now();
+            let mut l1 = 0.0;
+            for i in 0..n {
+                l1 += (next[i] - x[i]).abs();
+            }
+            std::mem::swap(&mut x, &mut next);
+            iterations += 1;
+            residuals.push(l1);
+            vector_secs += t.elapsed().as_secs_f64();
+            if l1 <= cfg.tol {
+                termination = Termination::Converged;
+                break;
+            }
+        }
+    } else {
+        termination = Termination::Converged;
+    }
+    Ok(Solution {
+        x,
+        report: SolveReport {
+            termination,
+            iterations,
+            residuals,
+            spmv_secs,
+            vector_secs,
+            total_secs: t_total.elapsed().as_secs_f64(),
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::coo::Coo;
+    use crate::matrix::csr::Csr;
+
+    fn diag(vals: &[f64]) -> Csr {
+        let mut coo = Coo::new(vals.len(), vals.len());
+        for (i, v) in vals.iter().enumerate() {
+            coo.push(i as u32, i as u32, *v);
+        }
+        Csr::from_coo(&coo)
+    }
+
+    #[test]
+    fn finds_dominant_eigenpair_of_diagonal() {
+        let a = diag(&[10.0, 3.0, 2.0, 1.0, 0.5]);
+        let cfg = SolverConfig { tol: 1e-10, max_iters: 500, ..Default::default() };
+        let sol = power_iteration(&a, &cfg).unwrap();
+        assert!(sol.report.converged());
+        assert!((sol.eigenvalue - 10.0).abs() < 1e-6);
+        assert!(sol.x[0].abs() > 0.999_999);
+        assert!((norm2(&sol.x) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_start_vector_is_rejected() {
+        let a = diag(&[1.0, 2.0]);
+        let engine = SpmvEngine::serial();
+        assert!(power_iteration_with(&engine, &a, Some(&[0.0, 0.0]), &SolverConfig::default())
+            .is_err());
+    }
+
+    #[test]
+    fn null_matrix_breaks_down() {
+        let a = Csr::new(4, 4); // all-zero matrix: A·x = 0
+        let sol = power_iteration(&a, &SolverConfig::default()).unwrap();
+        // Either the zero Rayleigh quotient converges the residual (0/MIN)
+        // or normalization breaks down — both are honest; it must not spin.
+        assert!(sol.report.iterations <= 1);
+    }
+
+    #[test]
+    fn pagerank_respects_link_structure() {
+        // Star: nodes 1..4 all link to node 0; node 0 links to node 1.
+        // Node 0 must end up with the most rank, then node 1.
+        let mut coo = Coo::new(5, 5);
+        for u in 1..5u32 {
+            coo.push(0, u, 1.0); // u -> 0, out-degree 1
+        }
+        coo.push(1, 0, 1.0); // 0 -> 1
+        let p = Csr::from_coo(&coo);
+        let cfg = SolverConfig { tol: 1e-12, ..Default::default() };
+        let sol = pagerank(&p, 0.85, &cfg).unwrap();
+        assert!(sol.report.converged());
+        let total: f64 = sol.x.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "mass conserved, got {total}");
+        assert!(sol.x[0] > sol.x[1] && sol.x[1] > sol.x[2]);
+        assert!((sol.x[2] - sol.x[4]).abs() < 1e-12, "symmetric leaves tie");
+    }
+
+    #[test]
+    fn pagerank_rejects_bad_damping() {
+        let p = diag(&[1.0]);
+        for d in [0.0, 1.0, -0.3, 1.7] {
+            assert!(pagerank(&p, d, &SolverConfig::default()).is_err(), "{d}");
+        }
+    }
+}

@@ -50,6 +50,38 @@ pub(crate) fn spmv_row_range(
     Ok(())
 }
 
+/// Fused scaled update over rows `r0..r1`:
+/// `y_seg[i] = alpha·(A·x)[r0 + i] + beta·y_seg[i]`.
+///
+/// Shares [`spmv_row_range`]'s per-row accumulation (same terms, same
+/// order, same local accumulator starting at `0.0`), then applies the
+/// `alpha·acc + beta·y` update in place of the `y += acc` accumulate — the
+/// exact float operations the unfused "multiply into a zeroed temporary,
+/// then axpby" compose performs, minus the temporary. This is what makes
+/// [`SpmvEngine::run_axpby`](crate::spmv::engine::SpmvEngine::run_axpby)
+/// bit-identical to the unfused compose on the CSR path.
+pub(crate) fn spmv_row_range_axpby(
+    m: &Csr,
+    r0: usize,
+    r1: usize,
+    x: &[f64],
+    alpha: f64,
+    beta: f64,
+    y_seg: &mut [f64],
+) -> Result<()> {
+    debug_assert_eq!(y_seg.len(), r1 - r0);
+    for (i, r) in (r0..r1).enumerate() {
+        let lo = m.row_ptr[r];
+        let hi = m.row_ptr[r + 1];
+        let mut acc = 0.0;
+        for k in lo..hi {
+            acc += m.vals[k] * x[m.cols[k] as usize];
+        }
+        y_seg[i] = alpha * acc + beta * y_seg[i];
+    }
+    Ok(())
+}
+
 /// Vector CSR kernel: rows processed in warp-sized gangs with a lane-strided
 /// inner loop (the GPU schedule; numerically reassociated, which matters
 /// only at the f64 ulp level).
@@ -131,6 +163,29 @@ mod tests {
             spmv_row_range(&m, r0, r1, &x, &mut got[r0..r1]).unwrap();
         }
         assert_eq!(got, want); // bit-identical, not just close
+    }
+
+    #[test]
+    fn axpby_range_matches_unfused_compose_bitwise() {
+        let m = example();
+        let x = vec![1.0, -2.0, 3.0, 0.5];
+        let y0 = vec![0.25, -1.5, 2.0, 7.0];
+        for &(alpha, beta) in &[(1.0, 0.0), (-0.5, 1.0), (2.5, -0.75), (0.0, 0.0)] {
+            // Unfused reference: multiply into a zeroed temporary, then axpby.
+            let mut tmp = vec![0.0; 4];
+            spmv_csr(&m, &x, &mut tmp).unwrap();
+            let want: Vec<f64> =
+                y0.iter().zip(&tmp).map(|(y, t)| alpha * t + beta * y).collect();
+            let mut got = y0.clone();
+            spmv_row_range_axpby(&m, 0, 4, &x, alpha, beta, &mut got).unwrap();
+            assert_eq!(got, want, "alpha={alpha} beta={beta}");
+            // Disjoint ranges reassemble to the same answer.
+            let mut parts = y0.clone();
+            for (r0, r1) in [(0usize, 2usize), (2, 3), (3, 4)] {
+                spmv_row_range_axpby(&m, r0, r1, &x, alpha, beta, &mut parts[r0..r1]).unwrap();
+            }
+            assert_eq!(parts, want);
+        }
     }
 
     #[test]

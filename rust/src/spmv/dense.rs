@@ -43,9 +43,51 @@ pub(crate) fn spmv_dense_row_range(
     Ok(())
 }
 
+/// Fused scaled update over rows `r0..r1`:
+/// `y_seg[i] = alpha·(A·x)[r0 + i] + beta·y_seg[i]`, sharing
+/// [`spmv_dense_row_range`]'s per-row accumulation so the fused path stays
+/// bit-identical to the unfused "multiply into a zeroed temporary, then
+/// axpby" compose.
+pub(crate) fn spmv_dense_row_range_axpby(
+    a: &[f64],
+    ncols: usize,
+    rows: std::ops::Range<usize>,
+    x: &[f64],
+    alpha: f64,
+    beta: f64,
+    y_seg: &mut [f64],
+) -> Result<()> {
+    debug_assert_eq!(y_seg.len(), rows.len());
+    for (i, r) in rows.enumerate() {
+        let row = &a[r * ncols..(r + 1) * ncols];
+        let mut acc = 0.0;
+        for (av, xv) in row.iter().zip(x) {
+            acc += av * xv;
+        }
+        y_seg[i] = alpha * acc + beta * y_seg[i];
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn axpby_range_matches_unfused_compose_bitwise() {
+        let a = vec![1.0, 2.0, 3.0, 4.0, -5.0, 0.5];
+        let x = vec![0.5, -2.0];
+        let y0 = vec![1.0, -3.0, 0.25];
+        for &(alpha, beta) in &[(1.0, 0.0), (-0.5, 1.0), (2.0, -1.5)] {
+            let mut tmp = vec![0.0; 3];
+            spmv_dense(&a, 3, 2, &x, &mut tmp).unwrap();
+            let want: Vec<f64> =
+                y0.iter().zip(&tmp).map(|(y, t)| alpha * t + beta * y).collect();
+            let mut got = y0.clone();
+            spmv_dense_row_range_axpby(&a, 2, 0..3, &x, alpha, beta, &mut got).unwrap();
+            assert_eq!(got, want, "alpha={alpha} beta={beta}");
+        }
+    }
 
     #[test]
     fn small_product() {

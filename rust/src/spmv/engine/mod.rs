@@ -214,6 +214,67 @@ impl SpmvEngine {
         }
     }
 
+    /// Fused scaled update `y = alpha·A·x + beta·y` for any
+    /// [`SpmvOperator`] — the iterative-solver iteration primitive
+    /// ([`crate::solver`] calls this once or twice per iteration), saving
+    /// both the temporary product vector and its zeroing pass.
+    ///
+    /// Partitioning is identical to [`SpmvEngine::run`]; each block runs
+    /// [`run_range_axpby`](SpmvOperator::run_range_axpby) into its
+    /// disjoint output segment. Results are **bit-identical** to the
+    /// unfused compose (`tmp = A·x` into a zeroed buffer, then
+    /// `y = alpha·tmp + beta·y` elementwise) by construction, for every
+    /// format and partition count — property-tested in
+    /// `tests/solver_convergence.rs`.
+    ///
+    /// With `alpha = 1.0, beta = 0.0` this is a plain overwrite-product
+    /// (`y = A·x`, no pre-zeroing needed); with `beta = 1.0` it
+    /// accumulates like [`SpmvEngine::run`] but scaled.
+    ///
+    /// ```
+    /// use dtans::matrix::{Coo, Csr};
+    /// use dtans::spmv::engine::SpmvEngine;
+    /// let mut coo = Coo::new(2, 2);
+    /// coo.push(0, 0, 2.0);
+    /// coo.push(1, 1, 3.0);
+    /// let m = Csr::from_coo(&coo);
+    /// let engine = SpmvEngine::auto();
+    /// let mut y = vec![10.0, 20.0];
+    /// // y = -1·A·x + 1·y, i.e. a residual update r -= A·x.
+    /// engine.run_axpby(&m, &[1.0, 1.0], -1.0, 1.0, &mut y).unwrap();
+    /// assert_eq!(y, vec![8.0, 17.0]);
+    /// // beta = 0 overwrites: y = A·x without zeroing y first.
+    /// engine.run_axpby(&m, &[1.0, 1.0], 1.0, 0.0, &mut y).unwrap();
+    /// assert_eq!(y, vec![2.0, 3.0]);
+    /// ```
+    pub fn run_axpby(
+        &self,
+        op: &dyn SpmvOperator,
+        x: &[f64],
+        alpha: f64,
+        beta: f64,
+        y: &mut [f64],
+    ) -> Result<()> {
+        let (nrows, ncols) = op.dims();
+        crate::spmv::check_dims(nrows, ncols, x, y)?;
+        let prefix = op.cost_prefix();
+        let (units, total) = prefix_stats(&prefix);
+        let parts = self.parts_for(op.cost());
+        match &self.pool {
+            Some(pool) if parts > 1 && units > 1 => {
+                let blocks = partition_prefix(&prefix, parts);
+                run_blocks(
+                    pool,
+                    &blocks,
+                    y,
+                    |b| op.rows_through(b.end),
+                    |b, seg| op.run_range_axpby(b, x, alpha, beta, seg),
+                )
+            }
+            _ => op.run_range_axpby(Block { start: 0, end: units, cost: total }, x, alpha, beta, y),
+        }
+    }
+
     /// Batched multi-RHS multiply (SpMM-style): `ys[.., j] = A·xs[.., j]`
     /// for every column of the contiguous column-major [`DenseMat`],
     /// fanning the (column × row-block) grid out over the pool — the
@@ -418,6 +479,34 @@ mod tests {
         let mut got = vec![0.0; m.nrows];
         engine.run(&sell, &x, &mut got).unwrap();
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn run_axpby_matches_unfused_compose_across_strategies() {
+        // CSR exercises the fused override, dtANS the default temp-based
+        // path; both must equal the unfused compose for every strategy.
+        let m = test_matrix(8);
+        let enc = CsrDtans::encode(&m, &EncodeOptions::default()).unwrap();
+        let dtans = DtansOperator::new(enc);
+        let mut rng = Xoshiro256::seeded(9);
+        let x: Vec<f64> = (0..m.ncols).map(|_| rng.next_f64() - 0.5).collect();
+        let y0: Vec<f64> = (0..m.nrows).map(|_| rng.next_f64() * 2.0).collect();
+        let ops: [&dyn SpmvOperator; 2] = [&m, &dtans];
+        for op in ops {
+            for &(alpha, beta) in &[(1.0, 0.0), (-1.0, 1.0), (0.5, -2.0)] {
+                let mut tmp = vec![0.0; m.nrows];
+                SpmvEngine::serial().run(op, &x, &mut tmp).unwrap();
+                let want: Vec<f64> =
+                    y0.iter().zip(&tmp).map(|(y, t)| alpha * t + beta * y).collect();
+                for strategy in
+                    [ParStrategy::Serial, ParStrategy::Fixed(4), ParStrategy::Fixed(13)]
+                {
+                    let mut got = y0.clone();
+                    SpmvEngine::new(strategy).run_axpby(op, &x, alpha, beta, &mut got).unwrap();
+                    assert_eq!(got, want, "{} {strategy:?} a={alpha} b={beta}", op.format_tag());
+                }
+            }
+        }
     }
 
     #[test]

@@ -114,6 +114,37 @@ pub trait SpmvOperator: Send + Sync {
     /// `x.len() == ncols`.
     fn run_range(&self, block: Block, x: &[f64], y_seg: &mut [f64]) -> Result<()>;
 
+    /// Fused scaled-update variant of [`run_range`](SpmvOperator::run_range):
+    /// `y_seg[i] = alpha·(A·x)[row] + beta·y_seg[i]` over the block's rows —
+    /// the per-block primitive behind
+    /// [`SpmvEngine::run_axpby`](crate::spmv::engine::SpmvEngine::run_axpby),
+    /// which iterative solvers ([`crate::solver`]) call every iteration.
+    ///
+    /// The default computes the block through
+    /// [`run_range`](SpmvOperator::run_range) into a zeroed temporary and
+    /// then applies `alpha·tmp + beta·y` elementwise. Overrides must stay
+    /// **bit-identical** to that compose: the row-oriented formats
+    /// (CSR, SELL, dense) fuse by keeping the per-row accumulator local and
+    /// writing `alpha·acc + beta·y` directly — the exact same float
+    /// operations, minus the temporary allocation. Formats whose kernels
+    /// cannot expose a per-row accumulator (COO's unordered scatter, the
+    /// dtANS lockstep decoder) keep the default.
+    fn run_range_axpby(
+        &self,
+        block: Block,
+        x: &[f64],
+        alpha: f64,
+        beta: f64,
+        y_seg: &mut [f64],
+    ) -> Result<()> {
+        let mut tmp = vec![0.0; y_seg.len()];
+        self.run_range(block, x, &mut tmp)?;
+        for (y, t) in y_seg.iter_mut().zip(&tmp) {
+            *y = alpha * t + beta * *y;
+        }
+        Ok(())
+    }
+
     /// Batched variant of [`run_range`](SpmvOperator::run_range): for each
     /// column `j`, `ys[.., j] += (A·xs[.., j])` over the block's rows.
     /// `ys` spans exactly the block's rows; `xs` the full input columns.
@@ -160,6 +191,19 @@ impl SpmvOperator for Csr {
         crate::spmv::csr::spmv_row_range(self, block.start, block.end, x, y_seg)
     }
 
+    /// Allocation-free fused path (see the trait docs for the bit-identity
+    /// argument).
+    fn run_range_axpby(
+        &self,
+        block: Block,
+        x: &[f64],
+        alpha: f64,
+        beta: f64,
+        y_seg: &mut [f64],
+    ) -> Result<()> {
+        crate::spmv::csr::spmv_row_range_axpby(self, block.start, block.end, x, alpha, beta, y_seg)
+    }
+
     fn resident_bytes(&self) -> usize {
         self.row_ptr.len() * 8 + self.cols.len() * 4 + self.vals.len() * 8
     }
@@ -194,6 +238,21 @@ impl SpmvOperator for Sell {
 
     fn run_range(&self, block: Block, x: &[f64], y_seg: &mut [f64]) -> Result<()> {
         crate::spmv::sell::spmv_sell_slice_range(self, block.start, block.end, x, y_seg)
+    }
+
+    /// Allocation-free fused path (see the trait docs for the bit-identity
+    /// argument).
+    fn run_range_axpby(
+        &self,
+        block: Block,
+        x: &[f64],
+        alpha: f64,
+        beta: f64,
+        y_seg: &mut [f64],
+    ) -> Result<()> {
+        crate::spmv::sell::spmv_sell_slice_range_axpby(
+            self, block.start, block.end, x, alpha, beta, y_seg,
+        )
     }
 
     fn resident_bytes(&self) -> usize {
@@ -323,6 +382,21 @@ impl SpmvOperator for DenseOperator {
     fn run_range(&self, block: Block, x: &[f64], y_seg: &mut [f64]) -> Result<()> {
         crate::spmv::dense::spmv_dense_row_range(
             &self.data, self.ncols, block.start, block.end, x, y_seg,
+        )
+    }
+
+    /// Allocation-free fused path (see the trait docs for the bit-identity
+    /// argument).
+    fn run_range_axpby(
+        &self,
+        block: Block,
+        x: &[f64],
+        alpha: f64,
+        beta: f64,
+        y_seg: &mut [f64],
+    ) -> Result<()> {
+        crate::spmv::dense::spmv_dense_row_range_axpby(
+            &self.data, self.ncols, block.start..block.end, x, alpha, beta, y_seg,
         )
     }
 

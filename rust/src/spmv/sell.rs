@@ -60,6 +60,47 @@ pub(crate) fn spmv_sell_slice_range(
     Ok(())
 }
 
+/// Fused scaled update over slices `s0..s1`:
+/// `y_seg[i] = alpha·(A·x)[row] + beta·y_seg[i]`.
+///
+/// [`spmv_sell_slice_range`] walks a slice column-major and accumulates
+/// each row's terms directly into `y_seg` in ascending-`j` order from a
+/// `0.0` start; this variant walks row-major with a local accumulator,
+/// which performs the *same additions in the same order per row* (padded
+/// cells still contribute `0.0`), then applies `alpha·acc + beta·y` — the
+/// exact operations of the unfused "multiply into a zeroed temporary, then
+/// axpby" compose, minus the temporary.
+pub(crate) fn spmv_sell_slice_range_axpby(
+    m: &Sell,
+    s0: usize,
+    s1: usize,
+    x: &[f64],
+    alpha: f64,
+    beta: f64,
+    y_seg: &mut [f64],
+) -> Result<()> {
+    let h = m.slice_height;
+    let row0 = s0 * h;
+    for s in s0..s1 {
+        let r_base = s * h;
+        let width = m.slice_widths[s] as usize;
+        let base = m.slice_ptr[s];
+        for rr in 0..h {
+            let r = r_base + rr;
+            if r >= m.nrows {
+                break; // tail slice: rows past nrows do not exist
+            }
+            let mut acc = 0.0;
+            for j in 0..width {
+                let idx = base + j * h + rr;
+                acc += m.vals[idx] * x[m.cols[idx] as usize];
+            }
+            y_seg[r - row0] = alpha * acc + beta * y_seg[r - row0];
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -84,6 +125,25 @@ mod tests {
             spmv_sell_slice_range(&sell, s0, s1, &x, &mut got[r0..r1]).unwrap();
         }
         assert_eq!(got, want); // bit-identical, not just close
+    }
+
+    #[test]
+    fn axpby_slice_range_matches_unfused_compose_bitwise() {
+        let mut rng = Xoshiro256::seeded(6);
+        let m = crate::matrix::gen::structured::powerlaw_rows(70, 4.0, 1.2, &mut rng);
+        let sell = Sell::from_csr(&m, 8);
+        let x: Vec<f64> = (0..70).map(|_| rng.next_f64() - 0.5).collect();
+        let y0: Vec<f64> = (0..70).map(|_| rng.next_f64() * 3.0).collect();
+        for &(alpha, beta) in &[(1.0, 0.0), (-0.5, 1.0), (2.5, -0.75)] {
+            let mut tmp = vec![0.0; 70];
+            spmv_sell(&sell, &x, &mut tmp).unwrap();
+            let want: Vec<f64> =
+                y0.iter().zip(&tmp).map(|(y, t)| alpha * t + beta * y).collect();
+            let mut got = y0.clone();
+            spmv_sell_slice_range_axpby(&sell, 0, sell.nslices(), &x, alpha, beta, &mut got)
+                .unwrap();
+            assert_eq!(got, want, "alpha={alpha} beta={beta}");
+        }
     }
 
     #[test]

@@ -381,7 +381,10 @@ impl MatrixStore {
 
     /// Acquire matrix `id` for use, pinning it against eviction until the
     /// returned guard drops. Cold matrices fault in from their artifact
-    /// (deduped: concurrent acquirers share one load).
+    /// (deduped: concurrent acquirers share one load). Each successful
+    /// acquisition counts once in [`Metrics::acquires`] — which is how
+    /// tests assert that an N-iteration solve holds exactly one pin
+    /// instead of re-acquiring per iteration.
     pub fn acquire(&self, id: u64) -> Result<PinnedMatrix> {
         let sh = &self.shared;
         {
@@ -393,18 +396,29 @@ impl MatrixStore {
             // now or loaded below) cannot be evicted under us.
             inner.residency.pin(id);
             if let Some(mat) = inner.residency.get(id) {
+                sh.metrics.acquires.fetch_add(1, Ordering::Relaxed);
                 return Ok(PinnedMatrix { shared: Arc::clone(sh), id, mat });
             }
         }
         let sh2 = Arc::clone(sh);
         match self.loader.run_dedup(id, move || cold_load(&sh2, id)) {
-            Ok(mat) => Ok(PinnedMatrix { shared: Arc::clone(sh), id, mat }),
+            Ok(mat) => {
+                sh.metrics.acquires.fetch_add(1, Ordering::Relaxed);
+                Ok(PinnedMatrix { shared: Arc::clone(sh), id, mat })
+            }
             Err(e) => {
                 let mut inner = sh.inner.lock().unwrap();
                 inner.residency.unpin(id);
                 Err(e)
             }
         }
+    }
+
+    /// Current pin count of `id` (0 if unknown or unpinned) — observable
+    /// so callers can assert pin discipline (e.g. "one pin per solve,
+    /// released on completion").
+    pub fn pin_count(&self, id: u64) -> u32 {
+        self.shared.inner.lock().unwrap().residency.pins(id)
     }
 
     /// Routed format of a registered matrix.
@@ -592,6 +606,12 @@ mod tests {
         assert_eq!(pinned.nrows, 300);
         assert_eq!(pinned.csr.as_ref().map(|c| c.nnz()), Some(m.nnz()));
         assert!(store.acquire(999).is_err());
+        // Pin accounting: one successful acquire counted, one pin live
+        // until the guard drops, failed acquires not counted.
+        assert_eq!(store.metrics().acquires.load(Ordering::Relaxed), 1);
+        assert_eq!(store.pin_count(id), 1);
+        drop(pinned);
+        assert_eq!(store.pin_count(id), 0);
     }
 
     #[test]

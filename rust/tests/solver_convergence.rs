@@ -1,0 +1,187 @@
+//! Solver acceptance tests: CG convergence to 1e-10 relative residual on
+//! a known SPD system across **all five formats**, with bit-identical
+//! iterate histories across `ParStrategy::{Serial, Fixed(n)}` for every
+//! partition count 1..=16; a property test that the fused `run_axpby`
+//! engine path matches the unfused `run` + axpby compose bitwise; and the
+//! service-level single-pin-per-solve guarantee asserted via store
+//! counters.
+
+use dtans::coordinator::service::{ServiceConfig, SpmvService};
+use dtans::format::csr_dtans::EncodeOptions;
+use dtans::matrix::csr::Csr;
+use dtans::matrix::gen::structured::stencil2d5;
+use dtans::matrix::gen::{assign_values, ValueDist};
+use dtans::solver::{bicgstab_with, cg_with, SolveMethod, SolverConfig};
+use dtans::spmv::engine::{ParStrategy, SpmvEngine};
+use dtans::spmv::operator::FormatRegistry;
+use dtans::spmv::spmv_csr;
+use dtans::util::rng::Xoshiro256;
+use std::sync::atomic::Ordering;
+
+/// The known SPD system: a 2D Poisson matrix small enough that even the
+/// dense-oracle operator builds (576 rows, ~2.8k nnz).
+fn spd() -> Csr {
+    stencil2d5(24, 24)
+}
+
+fn rhs(n: usize) -> Vec<f64> {
+    (0..n).map(|i| ((i as f64) * 0.37).sin() + 0.5).collect()
+}
+
+#[test]
+fn cg_hits_1e10_bitwise_across_all_partition_counts_for_every_format() {
+    let m = spd();
+    let b = rhs(m.nrows);
+    let cfg = SolverConfig { tol: 1e-10, max_iters: 2000, par: ParStrategy::Serial };
+    for (tag, op) in FormatRegistry::builtin().build_all(&m, &EncodeOptions::default()) {
+        let op = op.expect(tag);
+        let serial = cg_with(&SpmvEngine::serial(), op.as_ref(), &b, None, &cfg).unwrap();
+        assert!(serial.report.converged(), "{tag}: {:?}", serial.report.termination);
+        assert!(serial.report.final_residual() <= 1e-10, "{tag}");
+        assert!(serial.report.iterations > 10, "{tag}: trivial solve proves nothing");
+        // The solution truly solves the system (checked against the
+        // serial CSR ground truth, independent of the solved format).
+        let mut ax = vec![0.0; m.nrows];
+        spmv_csr(&m, &serial.x, &mut ax).unwrap();
+        for (l, r) in ax.iter().zip(&b) {
+            assert!((l - r).abs() < 1e-7, "{tag}: Ax={l} vs b={r}");
+        }
+        // Every partition count 1..=16 reproduces the iterate history
+        // bit for bit: same iteration count, same residual at every
+        // step, same final x.
+        for parts in 1..=16usize {
+            let engine = SpmvEngine::new(ParStrategy::Fixed(parts));
+            let sol = cg_with(&engine, op.as_ref(), &b, None, &cfg).unwrap();
+            assert_eq!(
+                sol.report.iterations, serial.report.iterations,
+                "{tag} parts={parts}"
+            );
+            assert_eq!(
+                sol.report.residuals, serial.report.residuals,
+                "{tag} parts={parts}: residual history diverged"
+            );
+            assert_eq!(sol.x, serial.x, "{tag} parts={parts}: iterate diverged");
+        }
+    }
+}
+
+#[test]
+fn formats_agree_on_the_cg_solution() {
+    // Cross-format: every format converges to the same solution within
+    // tight tolerance. (Bitwise identity holds *within* a format across
+    // strategies — see above — not *across* formats: the dtANS lockstep
+    // decoder reassociates its per-row accumulation.)
+    let m = spd();
+    let b = rhs(m.nrows);
+    let cfg = SolverConfig { tol: 1e-10, max_iters: 2000, par: ParStrategy::Serial };
+    let engine = SpmvEngine::serial();
+    let mut reference: Option<Vec<f64>> = None;
+    for (tag, op) in FormatRegistry::builtin().build_all(&m, &EncodeOptions::default()) {
+        let op = op.expect(tag);
+        let sol = cg_with(&engine, op.as_ref(), &b, None, &cfg).unwrap();
+        match &reference {
+            None => reference = Some(sol.x),
+            Some(want) => {
+                for (l, r) in sol.x.iter().zip(want) {
+                    assert!((l - r).abs() < 1e-8, "{tag}: {l} vs {r}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_axpby_matches_unfused_compose_bitwise() {
+    // Property test over random matrices, formats, partition counts and
+    // (alpha, beta) pairs: run_axpby == run-into-zeroed-tmp then axpby.
+    let mut rng = Xoshiro256::seeded(41);
+    for seed in 0..4u64 {
+        let mut m =
+            dtans::matrix::gen::structured::powerlaw_rows(200, 5.0, 1.1, &mut rng);
+        assign_values(&mut m, ValueDist::FewDistinct(9), &mut Xoshiro256::seeded(seed));
+        let x: Vec<f64> = (0..m.ncols).map(|_| rng.next_f64() - 0.5).collect();
+        let y0: Vec<f64> = (0..m.nrows).map(|_| rng.next_f64() * 4.0 - 2.0).collect();
+        let alpha = rng.next_f64() * 4.0 - 2.0;
+        let beta = rng.next_f64() * 4.0 - 2.0;
+        let cases =
+            [(1.0, 0.0), (alpha, beta), (-1.0, 1.0), (0.0, 1.0), (alpha, 0.0), (0.0, 0.0)];
+        for (tag, op) in FormatRegistry::builtin().build_all(&m, &EncodeOptions::default()) {
+            let op = op.expect(tag);
+            for &(a, bta) in &cases {
+                // Unfused reference on the serial engine.
+                let mut tmp = vec![0.0; m.nrows];
+                SpmvEngine::serial().run(op.as_ref(), &x, &mut tmp).unwrap();
+                let want: Vec<f64> =
+                    y0.iter().zip(&tmp).map(|(y, t)| a * t + bta * y).collect();
+                for parts in [1usize, 2, 5, 16] {
+                    let engine = SpmvEngine::new(ParStrategy::Fixed(parts));
+                    let mut got = y0.clone();
+                    engine.run_axpby(op.as_ref(), &x, a, bta, &mut got).unwrap();
+                    assert_eq!(
+                        got, want,
+                        "{tag} seed={seed} parts={parts} alpha={a} beta={bta}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn bicgstab_histories_are_bitwise_stable_across_partitions_too() {
+    let m = spd();
+    let b = rhs(m.nrows);
+    let cfg = SolverConfig { tol: 1e-10, max_iters: 2000, par: ParStrategy::Serial };
+    let serial = bicgstab_with(&SpmvEngine::serial(), &m, &b, None, &cfg).unwrap();
+    assert!(serial.report.converged());
+    for parts in [2usize, 7, 16] {
+        let engine = SpmvEngine::new(ParStrategy::Fixed(parts));
+        let sol = bicgstab_with(&engine, &m, &b, None, &cfg).unwrap();
+        assert_eq!(sol.report.residuals, serial.report.residuals, "parts={parts}");
+        assert_eq!(sol.x, serial.x, "parts={parts}");
+    }
+}
+
+#[test]
+fn service_solve_pins_once_for_the_whole_solve() {
+    let svc = SpmvService::start(ServiceConfig::default());
+    let m = spd();
+    let id = svc.register("poisson", m.clone()).unwrap();
+    let b = rhs(m.nrows);
+    let cfg = SolverConfig { tol: 1e-10, max_iters: 2000, ..Default::default() };
+
+    let acquires0 = svc.metrics.acquires.load(Ordering::Relaxed);
+    let sol = svc.solve(id, SolveMethod::Cg, &b, &cfg).unwrap();
+    assert!(sol.report.converged());
+    assert!(sol.report.iterations > 10);
+    // The acceptance bar: an N-iteration solve is exactly ONE store
+    // acquire (one pin held throughout), and the pin is released after.
+    assert_eq!(
+        svc.metrics.acquires.load(Ordering::Relaxed) - acquires0,
+        1,
+        "a solve must not re-acquire per iteration"
+    );
+    assert_eq!(svc.store().pin_count(id), 0, "the solve's pin must be released");
+
+    // Solver metrics: one solve, one converged, iteration quantiles over
+    // that single sample, and ONE request-level latency sample.
+    let s = svc.metrics.solver_summary();
+    assert_eq!((s.solves, s.converged, s.diverged), (1, 1, 0));
+    assert_eq!(s.iters_count, 1);
+    assert_eq!(s.iters_p50, sol.report.iterations as u64);
+    let fs = svc.metrics.format_summary("csr").unwrap();
+    assert_eq!(
+        (fs.completed, fs.latency.count),
+        (1, 1),
+        "a solve's N iterations must land as one latency sample, not N"
+    );
+    assert!(svc.metrics.report().contains("solver: solves=1 converged=1"));
+
+    // A second solve with BiCGStab agrees with CG's answer.
+    let sol2 = svc.solve(id, SolveMethod::BiCgStab, &b, &cfg).unwrap();
+    assert!(sol2.report.converged());
+    for (l, r) in sol2.x.iter().zip(&sol.x) {
+        assert!((l - r).abs() < 1e-7);
+    }
+    assert_eq!(svc.metrics.solver_summary().solves, 2);
+}

@@ -1,0 +1,115 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the repository's documentation set.
+
+Checks every relative link and in-document anchor in the given markdown
+files/directories; external (http/https/mailto) links are skipped — the
+job must stay hermetic so CI never flakes on the network.
+
+Usage: python3 scripts/check_links.py README.md docs
+Exit code 0 when every link resolves, 1 otherwise (one line per dead
+link).
+"""
+
+import re
+import sys
+import unicodedata
+from pathlib import Path
+
+# [text](target) — target up to the first closing paren (no nested
+# parens in our docs); reference-style links are not used in this repo.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def github_anchor(heading: str) -> str:
+    """GitHub's anchor slug: strip markup, lowercase, drop punctuation,
+    spaces to dashes."""
+    text = re.sub(r"[*_`]|\[([^\]]*)\]\([^)]*\)", r"\1", heading)
+    text = unicodedata.normalize("NFKD", text)
+    out = []
+    for ch in text.lower():
+        if ch.isalnum():
+            out.append(ch)
+        elif ch in (" ", "-"):
+            out.append("-" if ch == " " else ch)
+        # other punctuation is dropped
+    return "".join(out)
+
+
+def anchors_of(path: Path) -> set[str]:
+    anchors: set[str] = set()
+    seen: dict[str, int] = {}
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = github_anchor(m.group(2))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return anchors
+
+
+def links_of(path: Path):
+    in_fence = False
+    for lineno, line in enumerate(path.read_text(encoding="utf-8").splitlines(), 1):
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        # Inline code spans can contain bracket/paren sequences that look
+        # like links (e.g. `spmv[_with_plan](…)`): drop them first.
+        for m in LINK_RE.finditer(re.sub(r"`[^`]*`", "", line)):
+            yield lineno, m.group(1)
+
+
+def collect_files(args: list[str]) -> list[Path]:
+    files: list[Path] = []
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.suffix == ".md":
+            files.append(p)
+        else:
+            sys.exit(f"not a markdown file or directory: {a}")
+    return files
+
+
+def main() -> int:
+    args = sys.argv[1:] or ["README.md", "docs"]
+    files = collect_files(args)
+    errors = []
+    checked = 0
+    for md in files:
+        for lineno, target in links_of(md):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            checked += 1
+            raw_path, _, fragment = target.partition("#")
+            dest = md if not raw_path else (md.parent / raw_path).resolve()
+            if not dest.exists():
+                errors.append(f"{md}:{lineno}: dead link {target!r} ({dest} missing)")
+                continue
+            if fragment:
+                if dest.suffix != ".md":
+                    errors.append(f"{md}:{lineno}: anchor on non-markdown target {target!r}")
+                elif fragment.lower() not in anchors_of(dest):
+                    errors.append(f"{md}:{lineno}: dead anchor {target!r} in {dest.name}")
+    for e in errors:
+        print(e)
+    print(f"checked {checked} relative links across {len(files)} files: "
+          f"{'OK' if not errors else f'{len(errors)} dead'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
