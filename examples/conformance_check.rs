@@ -1,0 +1,51 @@
+//! Run the testkit's differential conformance oracle over the curated
+//! pathological fixture zoo and a corpus sample, printing one line per
+//! matrix — a quick health check that every registered format agrees
+//! with the serial CSR ground truth under every partition strategy.
+//!
+//! ```sh
+//! cargo run --release --example conformance_check
+//! ```
+
+use dtans::eval::{build_corpus, CorpusScale};
+use dtans::testkit::oracle::{check_matrix, OracleConfig};
+use dtans::testkit::zoo;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let cfg = OracleConfig::default();
+    println!(
+        "{:<28} {:>8} {:>8} {:>9} {:>8} {:>10}",
+        "matrix", "rows", "nnz", "formats", "skipped", "mismatches"
+    );
+
+    let mut total_mismatches = 0usize;
+    let mut checked = 0usize;
+    let corpus = build_corpus(&CorpusScale { max_nnz: 3000, steps: 2 }, 17);
+    let named: Vec<(String, dtans::matrix::Csr)> = zoo::pathological()
+        .into_iter()
+        .map(|f| (f.name.to_string(), f.csr))
+        .chain(corpus.into_iter().step_by(5).map(|e| (e.name, e.csr)))
+        .collect();
+
+    for (name, m) in named {
+        let report = check_matrix(&m, &cfg)?;
+        println!(
+            "{:<28} {:>8} {:>8} {:>9} {:>8} {:>10}",
+            name,
+            m.nrows,
+            m.nnz(),
+            report.formats.len(),
+            report.skipped.len(),
+            report.mismatches.len()
+        );
+        for mm in &report.mismatches {
+            println!("    !! {mm}");
+        }
+        total_mismatches += report.mismatches.len();
+        checked += 1;
+    }
+
+    println!("\n{checked} matrices checked, {total_mismatches} mismatch(es)");
+    assert_eq!(total_mismatches, 0, "conformance oracle found divergences");
+    Ok(())
+}

@@ -16,6 +16,10 @@
 //!  * store benches: artifact-cache registration vs re-encode and
 //!    warm-vs-cold SpMV under eviction (`store_coldstart`), with a
 //!    machine-readable trajectory report at `results/BENCH_store.json`;
+//!  * stress bench: verified serving throughput of the full coordinator
+//!    stack under budget pressure via the testkit's seeded mixed trace
+//!    with its serial-replay oracle (`stress_driver`, scale via
+//!    `TESTKIT_SCALE`);
 //!  * one end-to-end bench per paper table/figure (regenerating them at
 //!    bench scale): fig4, fig6+tab1, fig7/tab2, fig8/tab3, fig9, ablate.
 //!
@@ -602,6 +606,30 @@ fn bench_large_banded(filter: &Option<String>, quick: bool) {
     let _ = Csr::new(0, 0);
 }
 
+/// End-to-end serving throughput under budget pressure: one full run of
+/// the testkit's seeded stress trace (spmv / SpMM bursts / CG solves /
+/// registrations / evictions) *including* its serial-replay and
+/// conservation oracles — so the number is "verified ops per second",
+/// not just raw dispatch rate. Scale via `TESTKIT_SCALE` (quick pins
+/// small).
+fn bench_stress_driver(filter: &Option<String>, quick: bool) {
+    use dtans::testkit::{run_stress, StressConfig, TestkitScale};
+
+    if !should_run(filter, "stress_driver") {
+        return;
+    }
+    let scale = if quick { TestkitScale::Small } else { TestkitScale::from_env() };
+    let cfg = StressConfig::for_scale(scale);
+    let st = bench(0, 1, 0.0, || run_stress(&cfg).expect("stress oracles"));
+    println!(
+        "stress_driver/{:<14} {} ({:.0} verified ops/s incl. replay, {} threads)",
+        scale.label(),
+        st.display(),
+        cfg.ops as f64 / st.median,
+        cfg.threads
+    );
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
     let quick = args.iter().any(|a| a == "--quick");
@@ -615,6 +643,7 @@ fn main() {
     bench_operator_dispatch(&filter, quick);
     bench_solver_iterations(&filter, quick);
     bench_store_coldstart(&filter, quick);
+    bench_stress_driver(&filter, quick);
     bench_large_banded(&filter, quick);
     bench_experiments(&filter, quick);
     println!("done.");

@@ -3,8 +3,10 @@
 //! for repeated decoding").
 //!
 //! Layout: little-endian, a fixed magic/header followed by length-prefixed
-//! arrays. The format is self-describing enough to reject foreign or
-//! truncated files with a clear error.
+//! arrays and a trailing FNV-1a content checksum over everything before
+//! it. The format is self-describing enough to reject foreign, truncated
+//! or bit-rotted files with a clear, typed error — see the fault-injection
+//! sweep in `tests/fault_injection.rs`.
 
 use super::csr_dtans::CsrDtans;
 use super::symbolize::Domain;
@@ -16,20 +18,42 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"CSRDTANS";
-const VERSION: u32 = 1;
+/// Version 2 appended the trailing content checksum (version 1 files are
+/// rejected with [`DtansError::UnsupportedVersion`]; nothing persists
+/// them outside test temp dirs).
+const VERSION: u32 = 2;
+
+/// 64-bit FNV-1a offset basis (checksum state seed).
+const FNV64_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// 64-bit FNV-1a prime.
+const FNV64_PRIME: u64 = 0x100_0000_01b3;
+
+fn fnv_fold(mut hash: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        hash = (hash ^ b as u64).wrapping_mul(FNV64_PRIME);
+    }
+    hash
+}
 
 struct Writer<W: Write> {
     w: W,
+    /// Running FNV-1a over every byte written so far (the trailer's
+    /// checksum input).
+    hash: u64,
 }
 
 impl<W: Write> Writer<W> {
-    fn u32(&mut self, x: u32) -> Result<()> {
-        self.w.write_all(&x.to_le_bytes())?;
+    /// Single chokepoint: every checksummed byte goes through here.
+    fn put(&mut self, bytes: &[u8]) -> Result<()> {
+        self.hash = fnv_fold(self.hash, bytes);
+        self.w.write_all(bytes)?;
         Ok(())
     }
+    fn u32(&mut self, x: u32) -> Result<()> {
+        self.put(&x.to_le_bytes())
+    }
     fn u64(&mut self, x: u64) -> Result<()> {
-        self.w.write_all(&x.to_le_bytes())?;
-        Ok(())
+        self.put(&x.to_le_bytes())
     }
     fn vec_u32(&mut self, xs: &[u32]) -> Result<()> {
         self.u64(xs.len() as u64)?;
@@ -48,7 +72,7 @@ impl<W: Write> Writer<W> {
     fn vec_bool(&mut self, xs: &[bool]) -> Result<()> {
         self.u64(xs.len() as u64)?;
         for &x in xs {
-            self.w.write_all(&[x as u8])?;
+            self.put(&[x as u8])?;
         }
         Ok(())
     }
@@ -63,6 +87,9 @@ const PREALLOC_CAP: usize = 1 << 16;
 
 struct Reader<R: Read> {
     r: R,
+    /// Running FNV-1a over every byte read so far, compared against the
+    /// file's trailing checksum at the end of [`read_from`].
+    hash: u64,
 }
 
 impl<R: Read> Reader<R> {
@@ -74,7 +101,9 @@ impl<R: Read> Reader<R> {
                 DtansError::Truncated(format!("file ends {} byte(s) short of a field", buf.len()))
             }
             _ => DtansError::Io(e),
-        })
+        })?;
+        self.hash = fnv_fold(self.hash, buf);
+        Ok(())
     }
     fn u32(&mut self) -> Result<u32> {
         let mut b = [0u8; 4];
@@ -141,8 +170,8 @@ fn read_domain<R: Read>(r: &mut Reader<R>) -> Result<Domain> {
 
 /// Serialize to any writer.
 pub fn write_to<W: Write>(m: &CsrDtans, w: W) -> Result<()> {
-    let mut w = Writer { w };
-    w.w.write_all(MAGIC)?;
+    let mut w = Writer { w, hash: FNV64_OFFSET };
+    w.put(MAGIC)?;
     w.u32(VERSION)?;
     let p = m.params;
     for x in [p.w_bits, p.k_bits, p.m_bits, p.l, p.o, p.f] {
@@ -165,18 +194,26 @@ pub fn write_to<W: Write>(m: &CsrDtans, w: W) -> Result<()> {
     w.vec_u64(&m.value_escapes)?;
     w.vec_u32(&m.delta_esc_offsets)?;
     w.vec_u32(&m.value_esc_offsets)?;
+    // Trailer: the content checksum itself, written raw (it cannot cover
+    // its own bytes).
+    let checksum = w.hash;
+    w.w.write_all(&checksum.to_le_bytes())?;
     Ok(())
 }
 
 /// Deserialize from any reader.
 ///
 /// Rejects foreign files ([`DtansError::BadMagic`]), files written by a
-/// newer format revision ([`DtansError::UnsupportedVersion`]), files that
-/// end mid-field ([`DtansError::Truncated`]) and files whose arrays are
-/// mutually inconsistent ([`DtansError::Container`]) — see the hardening
-/// tests at the bottom of this module.
+/// different format revision ([`DtansError::UnsupportedVersion`]), files
+/// that end mid-field ([`DtansError::Truncated`]), files whose bytes were
+/// modified after writing ([`DtansError::ChecksumMismatch`] — the trailer
+/// covers every preceding byte, so even a single flipped stream bit is
+/// detected instead of silently decoding to different values) and files
+/// whose arrays are mutually inconsistent ([`DtansError::Container`]) —
+/// see the hardening tests at the bottom of this module and the
+/// exhaustive fault-mode sweep in `tests/fault_injection.rs`.
 pub fn read_from<R: Read>(r: R) -> Result<CsrDtans> {
-    let mut r = Reader { r };
+    let mut r = Reader { r, hash: FNV64_OFFSET };
     let mut magic = [0u8; 8];
     r.fill(&mut magic)?;
     if &magic != MAGIC {
@@ -227,6 +264,17 @@ pub fn read_from<R: Read>(r: R) -> Result<CsrDtans> {
         delta_esc_offsets: r.vec_u32()?,
         value_esc_offsets: r.vec_u32()?,
     };
+    // Verify the content checksum before the cross-array consistency
+    // pass, so corruption reports as corruption (not as inconsistency).
+    let computed = r.hash;
+    let stored = {
+        let mut b = [0u8; 8];
+        r.fill(&mut b)?;
+        u64::from_le_bytes(b)
+    };
+    if stored != computed {
+        return Err(DtansError::ChecksumMismatch { stored, computed });
+    }
     validate_consistency(&m)?;
     Ok(m)
 }
@@ -330,10 +378,16 @@ mod tests {
         let mut buf = Vec::new();
         write_to(&enc, &mut buf).unwrap();
         // Version is the little-endian u32 right after the 8-byte magic.
-        buf[8..12].copy_from_slice(&2u32.to_le_bytes());
+        buf[8..12].copy_from_slice(&9u32.to_le_bytes());
         assert!(matches!(
             read_from(std::io::Cursor::new(&buf)),
-            Err(DtansError::UnsupportedVersion { found: 2, supported: 1 })
+            Err(DtansError::UnsupportedVersion { found: 9, supported: 2 })
+        ));
+        // Version-1 files (pre-checksum) are rejected the same way.
+        buf[8..12].copy_from_slice(&1u32.to_le_bytes());
+        assert!(matches!(
+            read_from(std::io::Cursor::new(&buf)),
+            Err(DtansError::UnsupportedVersion { found: 1, supported: 2 })
         ));
     }
 
@@ -371,10 +425,11 @@ mod tests {
     }
 
     #[test]
-    fn corrupted_bytes_never_panic() {
-        // Fuzz-ish: flip one byte at a pseudo-random offset and parse. Any
-        // outcome is acceptable except a panic or abort (a corrupted length
-        // prefix must not trigger a huge allocation).
+    fn corrupted_bytes_are_always_detected() {
+        // Fuzz-ish: flip one byte at a pseudo-random offset and parse.
+        // Since version 2 the trailing content checksum makes *every*
+        // byte-level change detectable: the parse must return a typed
+        // error — never panic, never silently decode different values.
         let enc = sample();
         let mut buf = Vec::new();
         write_to(&enc, &mut buf).unwrap();
@@ -383,7 +438,38 @@ mod tests {
             let mut bad = buf.clone();
             let off = rng.below_usize(bad.len());
             bad[off] ^= 1 + rng.below(255) as u8;
-            let _ = read_from(std::io::Cursor::new(&bad));
+            assert!(
+                read_from(std::io::Cursor::new(&bad)).is_err(),
+                "byte {off} corruption parsed successfully"
+            );
+        }
+    }
+
+    #[test]
+    fn every_fault_mode_is_detected_with_a_typed_error() {
+        // The testkit corruption engine's modes (bit flips, truncation,
+        // length-prefix inflation, cross-array length swaps, zeroed
+        // spans) must each map to a typed `DtansError` — this is the
+        // unit-level mirror of the sweep in tests/fault_injection.rs.
+        use crate::testkit::faults::{corrupt, FaultMode, ALL_FAULT_MODES};
+        let enc = sample();
+        let mut buf = Vec::new();
+        write_to(&enc, &mut buf).unwrap();
+        for mode in ALL_FAULT_MODES {
+            for seed in 0..25u64 {
+                let bad = corrupt(&buf, mode, seed);
+                let err = match read_from(std::io::Cursor::new(&bad)) {
+                    Err(e) => e,
+                    Ok(_) => panic!("{mode:?} seed {seed} parsed successfully"),
+                };
+                if mode == FaultMode::Truncate {
+                    // Pure tail loss is always the dedicated variant.
+                    assert!(
+                        matches!(err, DtansError::Truncated(_)),
+                        "{mode:?} seed {seed}: {err}"
+                    );
+                }
+            }
         }
     }
 

@@ -52,6 +52,13 @@
 //!   matrix skips encoding), memory-budgeted LRU residency with pinning,
 //!   and a deduping background loader that faults evicted matrices back
 //!   in from disk.
+//! * [`testkit`] — the verification subsystem behind the integration
+//!   tests: a differential conformance oracle (every registered format ×
+//!   every partition strategy vs the serial CSR ground truth, with
+//!   structured mismatch reports), deterministic fault injection for
+//!   `.dtans` artifacts plus a failing cache-root shim, a seeded
+//!   concurrency-stress driver with serial-replay bit-identity oracles,
+//!   and the curated pathological matrix zoo.
 //!
 //! ## Quickstart
 //!
@@ -85,6 +92,7 @@ pub mod sim;
 pub mod solver;
 pub mod spmv;
 pub mod store;
+pub mod testkit;
 pub mod util;
 
 pub use util::error::{DtansError, Result};

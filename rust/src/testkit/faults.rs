@@ -1,0 +1,404 @@
+//! Deterministic fault injection for serialized `.dtans` containers and
+//! the store's on-disk cache.
+//!
+//! Two tools:
+//!
+//! * [`corrupt`] — a seeded byte-corruption engine over a serialized
+//!   container buffer. Every [`FaultMode`] is deterministic in
+//!   `(bytes, mode, seed)` and guaranteed to change the buffer, so a test
+//!   that asserts "corrupted input must fail to load" can never pass
+//!   vacuously on an unchanged buffer. The length-prefix modes use
+//!   [`length_prefix_offsets`], a layout walker that locates every array
+//!   length in the container format, so "inflate a length prefix" hits a
+//!   real length prefix instead of a random byte that happens to decode
+//!   as one.
+//! * [`FailingDir`] — a cache-root shim for
+//!   [`StoreConfig::cache_dir`](crate::store::StoreConfig::cache_dir)
+//!   that opens deterministic *failure windows*: [`FailingDir::break_writes`]
+//!   makes every artifact persist fail (the root becomes a regular file,
+//!   so `create_dir_all` under it errors) until
+//!   [`FailingDir::restore_writes`]; [`FailingDir::corrupt_artifacts`]
+//!   damages persisted artifacts in place so cold loads fail, and
+//!   [`FailingDir::snapshot`]/[`FailingDir::restore`] bracket that window
+//!   so a test can prove the failure did not poison any retry path.
+//!
+//! These replace the ad-hoc corruption loops that lived inside
+//! `format::serialize`'s unit tests and give `tests/fault_injection.rs`
+//! one engine for every error path: serializer, artifact cache, loader,
+//! and service.
+
+use crate::util::error::Result;
+use crate::util::rng::Xoshiro256;
+use std::path::{Path, PathBuf};
+
+/// Serialized-container header bytes before the first array length
+/// prefix: magic (8) + version (4) + six `AnsParams` fields (24) +
+/// precision (4) + delta flag (4) + nrows/ncols/nnz (24).
+const HEADER_BYTES: usize = 8 + 4 + 24 + 4 + 4 + 24;
+
+/// One way to damage a serialized container.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultMode {
+    /// Flip a single bit at a seeded byte offset.
+    BitFlip,
+    /// Cut the buffer at a seeded offset (always strictly shorter).
+    Truncate,
+    /// Overwrite a seeded array length prefix with an inflated value
+    /// (alternating between a plausible small inflation, which runs the
+    /// reader off the end of the data, and an implausibly huge one, which
+    /// must be rejected before any allocation).
+    InflateLength,
+    /// Swap the contents of two *different* array length prefixes —
+    /// the cross-array corruption that only mutual-consistency
+    /// validation can catch.
+    SwapLengths,
+    /// Zero a seeded 16-byte span.
+    ZeroSpan,
+}
+
+/// Every [`FaultMode`], for exhaustive sweeps.
+pub const ALL_FAULT_MODES: [FaultMode; 5] = [
+    FaultMode::BitFlip,
+    FaultMode::Truncate,
+    FaultMode::InflateLength,
+    FaultMode::SwapLengths,
+    FaultMode::ZeroSpan,
+];
+
+/// Byte offsets of every array length prefix in a serialized container,
+/// in on-disk order, found by walking the layout with the lengths read
+/// from the buffer itself. Stops early (returning the prefixes found so
+/// far) if the buffer is too short to keep walking.
+pub fn length_prefix_offsets(bytes: &[u8]) -> Vec<usize> {
+    let mut offs = Vec::new();
+    let mut pos = HEADER_BYTES;
+    let walk = |elem_bytes: usize, pos: &mut usize, offs: &mut Vec<usize>| -> bool {
+        if *pos + 8 > bytes.len() {
+            return false;
+        }
+        let len =
+            u64::from_le_bytes(bytes[*pos..*pos + 8].try_into().expect("8 bytes")) as usize;
+        offs.push(*pos);
+        match len
+            .checked_mul(elem_bytes)
+            .and_then(|data| pos.checked_add(8 + data))
+        {
+            Some(next) if next <= bytes.len() => {
+                *pos = next;
+                true
+            }
+            _ => false,
+        }
+    };
+    // Two symbol domains: u64 payloads, 1-byte escape flags, u32
+    // multiplicities, then a bare u32 (escape payload bits).
+    for _ in 0..2 {
+        for elem in [8usize, 1, 4] {
+            if !walk(elem, &mut pos, &mut offs) {
+                return offs;
+            }
+        }
+        pos += 4; // escape_payload_bits
+    }
+    // row_nnz, slice_offsets, stream, delta_escapes (u32); value_escapes
+    // (u64); delta/value escape offsets (u32).
+    for elem in [4usize, 4, 4, 4, 8, 4, 4] {
+        if !walk(elem, &mut pos, &mut offs) {
+            return offs;
+        }
+    }
+    offs
+}
+
+fn read_u64(bytes: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(bytes[off..off + 8].try_into().expect("8 bytes"))
+}
+
+fn write_u64(bytes: &mut [u8], off: usize, v: u64) {
+    bytes[off..off + 8].copy_from_slice(&v.to_le_bytes());
+}
+
+/// Deterministically corrupt `bytes` with `mode` at seeded offsets.
+/// The result always differs from the input (modes that could no-op fall
+/// back to a bit flip). Panics only if `bytes` is empty.
+pub fn corrupt(bytes: &[u8], mode: FaultMode, seed: u64) -> Vec<u8> {
+    assert!(!bytes.is_empty(), "cannot corrupt an empty buffer");
+    // Mix the mode into the stream so one seed drives distinct offsets
+    // per mode.
+    let mut rng = Xoshiro256::seeded(seed ^ (mode as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    let mut out = bytes.to_vec();
+    match mode {
+        FaultMode::BitFlip => flip_bit(&mut out, &mut rng),
+        FaultMode::Truncate => {
+            let cut = rng.below_usize(out.len());
+            out.truncate(cut);
+        }
+        FaultMode::InflateLength => {
+            let offs = length_prefix_offsets(bytes);
+            if offs.is_empty() {
+                flip_bit(&mut out, &mut rng);
+            } else {
+                let off = offs[rng.below_usize(offs.len())];
+                let cur = read_u64(&out, off);
+                let inflated = if rng.chance(0.5) {
+                    // Plausible: the reader runs out of data mid-array.
+                    cur + 1 + rng.below(1 << 16)
+                } else {
+                    // Implausible: must be rejected before preallocation.
+                    (1 << 40) + 1 + rng.below(1 << 20)
+                };
+                write_u64(&mut out, off, inflated);
+            }
+        }
+        FaultMode::SwapLengths => {
+            let offs = length_prefix_offsets(bytes);
+            // Pick two prefixes with different stored values so the swap
+            // is guaranteed to change the buffer.
+            let mut pairs = Vec::new();
+            for (i, &a) in offs.iter().enumerate() {
+                for &b in &offs[i + 1..] {
+                    if read_u64(bytes, a) != read_u64(bytes, b) {
+                        pairs.push((a, b));
+                    }
+                }
+            }
+            if pairs.is_empty() {
+                flip_bit(&mut out, &mut rng);
+            } else {
+                let (a, b) = pairs[rng.below_usize(pairs.len())];
+                let (va, vb) = (read_u64(&out, a), read_u64(&out, b));
+                write_u64(&mut out, a, vb);
+                write_u64(&mut out, b, va);
+            }
+        }
+        FaultMode::ZeroSpan => {
+            let off = rng.below_usize(out.len());
+            let end = (off + 16).min(out.len());
+            if out[off..end].iter().all(|&b| b == 0) {
+                out[off] = 0xFF; // span already zero: still change it
+            } else {
+                out[off..end].iter_mut().for_each(|b| *b = 0);
+            }
+        }
+    }
+    debug_assert_ne!(out, bytes, "corruption must change the buffer");
+    out
+}
+
+fn flip_bit(out: &mut [u8], rng: &mut Xoshiro256) {
+    let off = rng.below_usize(out.len());
+    out[off] ^= 1 << rng.below(8);
+}
+
+/// Corrupt a file on disk in place (read, [`corrupt`], rewrite).
+pub fn corrupt_file(path: &Path, mode: FaultMode, seed: u64) -> Result<()> {
+    let bytes = std::fs::read(path)?;
+    std::fs::write(path, corrupt(&bytes, mode, seed))?;
+    Ok(())
+}
+
+/// A managed cache-root directory whose writes and reads can be made to
+/// fail in deterministic windows — the shim behind the
+/// [`store`](crate::store) error-path tests. See the
+/// [module docs](self) for the failure model. The directory is removed on
+/// drop.
+pub struct FailingDir {
+    root: PathBuf,
+}
+
+impl FailingDir {
+    /// Create a fresh managed directory (unique per `tag` + process).
+    pub fn new(tag: &str) -> Result<FailingDir> {
+        let root = std::env::temp_dir()
+            .join(format!("dtans_testkit_faildir_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let _ = std::fs::remove_file(&root);
+        std::fs::create_dir_all(&root)?;
+        Ok(FailingDir { root })
+    }
+
+    /// The root path (pass as
+    /// [`StoreConfig::cache_dir`](crate::store::StoreConfig::cache_dir)).
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Open a write-failure window: the root is replaced by a regular
+    /// file, so every artifact persist under it fails (`create_dir_all`
+    /// on a path with a non-directory component errors for any user, root
+    /// included). **Deletes anything currently inside the root.**
+    pub fn break_writes(&self) -> Result<()> {
+        std::fs::remove_dir_all(&self.root)?;
+        std::fs::write(&self.root, b"testkit failing dir")?;
+        Ok(())
+    }
+
+    /// Close the write-failure window: the root becomes an (empty)
+    /// directory again.
+    pub fn restore_writes(&self) -> Result<()> {
+        let _ = std::fs::remove_file(&self.root);
+        std::fs::create_dir_all(&self.root)?;
+        Ok(())
+    }
+
+    /// All persisted `.dtans` artifacts under the root, sorted for
+    /// determinism.
+    pub fn artifacts(&self) -> Vec<PathBuf> {
+        let mut out = Vec::new();
+        let mut stack = vec![self.root.clone()];
+        while let Some(dir) = stack.pop() {
+            let Ok(entries) = std::fs::read_dir(&dir) else { continue };
+            for e in entries.flatten() {
+                let p = e.path();
+                if p.is_dir() {
+                    stack.push(p);
+                } else if p.extension().is_some_and(|x| x == "dtans") {
+                    out.push(p);
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+
+    /// Corrupt every persisted artifact in place with `mode`; returns how
+    /// many files were damaged. Subsequent cold loads from this cache
+    /// must surface typed errors.
+    pub fn corrupt_artifacts(&self, mode: FaultMode, seed: u64) -> Result<usize> {
+        let files = self.artifacts();
+        for (i, f) in files.iter().enumerate() {
+            corrupt_file(f, mode, seed ^ i as u64)?;
+        }
+        Ok(files.len())
+    }
+
+    /// Snapshot every artifact's bytes (pair with [`FailingDir::restore`]
+    /// to close a read-failure window).
+    pub fn snapshot(&self) -> Result<Vec<(PathBuf, Vec<u8>)>> {
+        let mut out = Vec::new();
+        for f in self.artifacts() {
+            let bytes = std::fs::read(&f)?;
+            out.push((f, bytes));
+        }
+        Ok(out)
+    }
+
+    /// Restore artifacts from a [`FailingDir::snapshot`].
+    pub fn restore(&self, snapshot: &[(PathBuf, Vec<u8>)]) -> Result<()> {
+        for (path, bytes) in snapshot {
+            std::fs::write(path, bytes)?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for FailingDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.root);
+        let _ = std::fs::remove_file(&self.root);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::csr_dtans::{CsrDtans, EncodeOptions};
+    use crate::format::serialize;
+    use crate::matrix::gen::structured::banded;
+    use crate::matrix::gen::{assign_values, ValueDist};
+
+    fn sample_bytes() -> Vec<u8> {
+        let mut m = banded(120, 3);
+        assign_values(&mut m, ValueDist::Quantized(16), &mut Xoshiro256::seeded(5));
+        let enc = CsrDtans::encode(&m, &EncodeOptions::default()).unwrap();
+        let mut buf = Vec::new();
+        serialize::write_to(&enc, &mut buf).unwrap();
+        buf
+    }
+
+    #[test]
+    fn walker_finds_all_thirteen_length_prefixes() {
+        let buf = sample_bytes();
+        let offs = length_prefix_offsets(&buf);
+        // 2 domains x 3 arrays + 7 top-level arrays.
+        assert_eq!(offs.len(), 13, "{offs:?}");
+        assert_eq!(offs[0], HEADER_BYTES);
+        // Each stored length must be plausible for the buffer size.
+        for &o in &offs {
+            assert!(read_u64(&buf, o) < buf.len() as u64);
+        }
+        // Offsets strictly ascend.
+        assert!(offs.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn walker_stops_cleanly_on_short_buffers() {
+        let buf = sample_bytes();
+        for cut in [0, 10, HEADER_BYTES, HEADER_BYTES + 4, buf.len() / 2] {
+            let offs = length_prefix_offsets(&buf[..cut]);
+            assert!(offs.len() <= 13);
+        }
+    }
+
+    #[test]
+    fn corruption_is_deterministic_and_always_changes_the_buffer() {
+        let buf = sample_bytes();
+        for mode in ALL_FAULT_MODES {
+            for seed in 0..20u64 {
+                let a = corrupt(&buf, mode, seed);
+                let b = corrupt(&buf, mode, seed);
+                assert_eq!(a, b, "{mode:?} seed {seed} not deterministic");
+                assert_ne!(a, buf, "{mode:?} seed {seed} did not change the buffer");
+            }
+        }
+    }
+
+    #[test]
+    fn truncate_is_strictly_shorter_and_swap_hits_two_prefixes() {
+        let buf = sample_bytes();
+        for seed in 0..10u64 {
+            assert!(corrupt(&buf, FaultMode::Truncate, seed).len() < buf.len());
+            let swapped = corrupt(&buf, FaultMode::SwapLengths, seed);
+            assert_eq!(swapped.len(), buf.len());
+            let changed: Vec<usize> =
+                (0..buf.len()).filter(|&i| swapped[i] != buf[i]).collect();
+            // All changed bytes lie inside length-prefix fields.
+            let offs = length_prefix_offsets(&buf);
+            for i in changed {
+                assert!(
+                    offs.iter().any(|&o| (o..o + 8).contains(&i)),
+                    "byte {i} outside any length prefix"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn failing_dir_breaks_and_restores_writes() {
+        let dir = FailingDir::new("unit_breaks").unwrap();
+        let probe = dir.root().join("aa").join("probe.dtans");
+        std::fs::create_dir_all(probe.parent().unwrap()).unwrap();
+        std::fs::write(&probe, b"x").unwrap();
+        assert_eq!(dir.artifacts().len(), 1);
+        dir.break_writes().unwrap();
+        assert!(std::fs::create_dir_all(probe.parent().unwrap()).is_err());
+        assert!(dir.artifacts().is_empty());
+        dir.restore_writes().unwrap();
+        std::fs::create_dir_all(probe.parent().unwrap()).unwrap();
+        std::fs::write(&probe, b"y").unwrap();
+        assert_eq!(dir.artifacts().len(), 1);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrips_artifact_bytes() {
+        let dir = FailingDir::new("unit_snapshot").unwrap();
+        let f = dir.root().join("bb").join("m.dtans");
+        std::fs::create_dir_all(f.parent().unwrap()).unwrap();
+        std::fs::write(&f, sample_bytes()).unwrap();
+        let snap = dir.snapshot().unwrap();
+        assert_eq!(dir.corrupt_artifacts(FaultMode::Truncate, 1).unwrap(), 1);
+        assert_ne!(std::fs::read(&f).unwrap(), snap[0].1);
+        dir.restore(&snap).unwrap();
+        assert_eq!(std::fs::read(&f).unwrap(), snap[0].1);
+    }
+}

@@ -1,0 +1,129 @@
+//! Test harness subsystem: differential conformance, deterministic fault
+//! injection, and concurrency stress — the machinery that *proves* the
+//! paper's correctness-critical claim instead of spot-checking it.
+//!
+//! dtANS is lossless entropy coding: every decode must be bit-exact
+//! against the CSR ground truth, under every execution strategy, after
+//! every eviction/cold-reload cycle, and in the face of damaged
+//! artifacts. Before this module that verification logic was scattered
+//! (ad-hoc helpers in `spmv::verify`, per-test corruption code, inline
+//! fixtures); `testkit` centralizes it as a library reused by the
+//! integration tests (`tests/conformance.rs`, `tests/fault_injection.rs`),
+//! benches and examples:
+//!
+//! * [`oracle`] — the differential conformance engine: for any matrix it
+//!   enumerates the [`FormatRegistry`](crate::spmv::FormatRegistry), runs
+//!   every operator through the [`SpmvEngine`](crate::spmv::SpmvEngine)
+//!   across serial and `Fixed(1..=N)` strategies, and checks two levels of
+//!   agreement — **bit-identity** of every partitioned run against the
+//!   format's own serial result, and closeness of every format against the
+//!   serial CSR free-function ground truth — producing structured
+//!   [`Mismatch`](oracle::Mismatch) reports (format tag, partition count,
+//!   first divergent row, ULP distance).
+//! * [`faults`] — deterministic byte corruption for serialized `.dtans`
+//!   containers (bit flips, truncation, length-prefix inflation,
+//!   cross-array length swaps, zeroed spans — all at seeded offsets), plus
+//!   [`FailingDir`](faults::FailingDir), a cache-root shim that makes
+//!   artifact writes/reads fail in controlled windows to drive the
+//!   [`store`](crate::store) error paths.
+//! * [`stress`] — a seeded concurrency-stress driver that hammers a
+//!   budgeted [`SpmvService`](crate::coordinator::SpmvService) with a
+//!   mixed trace (spmv, SpMM bursts, CG solves, registrations, evictions)
+//!   from many threads, then checks conservation oracles: every recorded
+//!   response bit-identical to a serial replay on an unbudgeted reference
+//!   service, metrics counters summing, zero leaked pins.
+//! * [`zoo`] — curated named fixtures: the pathological shapes (empty
+//!   rows, a single dense row, 1×N, explicit zero values, duplicate-heavy
+//!   COO input, slice-boundary sizes) that previously existed only inline
+//!   in individual tests, plus the mixed service zoo shared with the
+//!   store residency tests.
+//!
+//! The stress driver scales with the `TESTKIT_SCALE` environment knob
+//! ([`TestkitScale`]): CI runs `small`, release soak runs set `medium` or
+//! `large`. See `docs/TESTING.md` for the tier layout and the seed-repro
+//! workflow.
+
+pub mod faults;
+pub mod oracle;
+pub mod stress;
+pub mod zoo;
+
+pub use oracle::{ConformanceReport, Mismatch, MismatchKind, OracleConfig, PerturbedOperator};
+pub use stress::{run_stress, StressConfig, StressReport};
+
+/// Deterministic request/input vector: `n` values in `[-0.5, 0.5)` from
+/// a seeded stream. The one generator both the conformance oracle and
+/// the stress driver derive their multiply inputs from (so a recorded
+/// stress response and its replay, or an oracle run and its re-run,
+/// always see identical bits).
+pub fn seeded_vector(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = crate::util::rng::Xoshiro256::seeded(seed);
+    (0..n).map(|_| rng.next_f64() - 0.5).collect()
+}
+
+/// Size knob for the stress driver (and any future scale-sensitive
+/// harness), read from the `TESTKIT_SCALE` environment variable so one
+/// test body serves both fast CI lanes and long soak runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TestkitScale {
+    /// CI scale: completes in seconds (the default).
+    #[default]
+    Small,
+    /// Local soak: minutes.
+    Medium,
+    /// Release soak: tens of minutes.
+    Large,
+}
+
+impl TestkitScale {
+    /// Read `TESTKIT_SCALE` (`small` / `medium` / `large`,
+    /// case-insensitive). Unset or unrecognized values fall back to
+    /// [`TestkitScale::Small`] so a typo can never silently launch a soak
+    /// run in CI.
+    pub fn from_env() -> TestkitScale {
+        match std::env::var("TESTKIT_SCALE") {
+            Ok(v) => TestkitScale::parse(&v).unwrap_or(TestkitScale::Small),
+            Err(_) => TestkitScale::Small,
+        }
+    }
+
+    /// Parse a scale label.
+    pub fn parse(s: &str) -> Option<TestkitScale> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "small" => Some(TestkitScale::Small),
+            "medium" => Some(TestkitScale::Medium),
+            "large" => Some(TestkitScale::Large),
+            _ => None,
+        }
+    }
+
+    /// Stable label (the accepted `TESTKIT_SCALE` value).
+    pub fn label(&self) -> &'static str {
+        match self {
+            TestkitScale::Small => "small",
+            TestkitScale::Medium => "medium",
+            TestkitScale::Large => "large",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_parses_known_labels_and_rejects_noise() {
+        assert_eq!(TestkitScale::parse("small"), Some(TestkitScale::Small));
+        assert_eq!(TestkitScale::parse(" MEDIUM "), Some(TestkitScale::Medium));
+        assert_eq!(TestkitScale::parse("large"), Some(TestkitScale::Large));
+        assert_eq!(TestkitScale::parse("huge"), None);
+        assert_eq!(TestkitScale::parse(""), None);
+    }
+
+    #[test]
+    fn scale_labels_roundtrip() {
+        for s in [TestkitScale::Small, TestkitScale::Medium, TestkitScale::Large] {
+            assert_eq!(TestkitScale::parse(s.label()), Some(s));
+        }
+    }
+}

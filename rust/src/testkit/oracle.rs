@@ -1,0 +1,450 @@
+//! Differential conformance oracle: every format × every strategy,
+//! against the serial CSR ground truth.
+//!
+//! Two levels of agreement are checked for each operator the
+//! [`FormatRegistry`] can build:
+//!
+//! 1. **Cross-format closeness** — the operator's serial result must match
+//!    the serial CSR free-function kernel
+//!    ([`spmv_csr`](crate::spmv::spmv_csr)) within
+//!    [`OracleConfig::rel_tol`]. Exact bit-identity is *not* required
+//!    across formats: COO's scatter order and the dtANS lockstep decoder
+//!    reassociate row sums (see `docs/SOLVERS.md` §format-independence),
+//!    so the guarantee across formats is tight closeness, not equality.
+//! 2. **Engine bit-identity** — for every partition count
+//!    `Fixed(1..=max_parts)`, the engine's result over the operator must
+//!    be **bit-identical** to the operator's own serial result. This is
+//!    the repo-wide invariant the engine is built on (each row computed by
+//!    exactly one block with the serial kernel's arithmetic), checked here
+//!    exhaustively instead of per-format ad hoc.
+//!
+//! Failures come back as structured [`Mismatch`] records — format tag,
+//! partition count, first divergent row, the two values and their ULP
+//! distance — so a conformance break is immediately actionable.
+//! [`PerturbedOperator`] is the oracle's own negative control: it wraps
+//! any operator and flips one output bit only on partitioned runs, which a
+//! healthy oracle must detect and localize (`tests/conformance.rs`).
+
+use crate::format::csr_dtans::EncodeOptions;
+use crate::matrix::csr::Csr;
+use crate::matrix::Precision;
+use crate::spmv::densemat::{DenseMat, DenseMatMut};
+use crate::spmv::engine::{Block, ParStrategy, SpmvEngine};
+use crate::spmv::operator::{FormatRegistry, SpmvOperator};
+use crate::testkit::seeded_vector as input_vector;
+use crate::util::error::Result;
+use std::borrow::Cow;
+use std::fmt;
+use std::sync::Arc;
+
+/// Oracle knobs.
+#[derive(Debug, Clone)]
+pub struct OracleConfig {
+    /// Encoding options for the dtANS (and precision-sensitive) builders.
+    pub opts: EncodeOptions,
+    /// Highest `ParStrategy::Fixed(n)` partition count swept (each of
+    /// `1..=max_parts` is checked for bit-identity).
+    pub max_parts: usize,
+    /// Allowed elementwise relative error against the CSR ground truth
+    /// (`|a-b| / max(1, |a|, |b|)` — the [`crate::spmv::verify`] metric).
+    pub rel_tol: f64,
+    /// Seed for the multiply's input vector.
+    pub seed: u64,
+}
+
+impl Default for OracleConfig {
+    fn default() -> Self {
+        OracleConfig {
+            opts: EncodeOptions::default(),
+            max_parts: 8,
+            rel_tol: 1e-9,
+            seed: 0xD7A5,
+        }
+    }
+}
+
+/// Which oracle level a mismatch violated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MismatchKind {
+    /// The operator's serial result diverged from the serial CSR ground
+    /// truth beyond [`OracleConfig::rel_tol`].
+    CrossFormat,
+    /// A partitioned engine run was not bit-identical to the operator's
+    /// own serial result.
+    ParallelDivergence,
+}
+
+/// One detected divergence: where, under what execution, by how much.
+#[derive(Debug, Clone)]
+pub struct Mismatch {
+    /// Violated oracle level.
+    pub kind: MismatchKind,
+    /// [`SpmvOperator::format_tag`] of the offending operator.
+    pub format: &'static str,
+    /// Partition count of the offending run (0 for the serial
+    /// cross-format check, which has no partitioning).
+    pub parts: usize,
+    /// First divergent output row (worst row for cross-format checks).
+    pub row: usize,
+    /// Value the offending run produced at `row`.
+    pub got: f64,
+    /// Value the reference produced at `row`.
+    pub want: f64,
+    /// Bit-pattern distance between `got` and `want` (1 = adjacent
+    /// floats; large values indicate sign/exponent damage).
+    pub ulps: u64,
+}
+
+impl fmt::Display for Mismatch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let level = match self.kind {
+            MismatchKind::CrossFormat => "cross-format (vs serial CSR)".to_string(),
+            MismatchKind::ParallelDivergence => {
+                format!("partition divergence (parts={})", self.parts)
+            }
+        };
+        write!(
+            f,
+            "[{}] {level}: row {} got {:e} want {:e} ({} ulp)",
+            self.format, self.row, self.got, self.want, self.ulps
+        )
+    }
+}
+
+/// What one conformance run covered and what it found.
+#[derive(Debug, Default)]
+pub struct ConformanceReport {
+    /// Format tags that were built and checked.
+    pub formats: Vec<&'static str>,
+    /// Format tags whose builder refused this matrix (e.g. the dense
+    /// oracle above its cell cap) — skipped, as the registry contract
+    /// allows.
+    pub skipped: Vec<&'static str>,
+    /// Execution strategies swept per format (serial + each `Fixed(n)`).
+    pub strategies: usize,
+    /// Every detected divergence, in detection order.
+    pub mismatches: Vec<Mismatch>,
+}
+
+impl ConformanceReport {
+    /// True when no mismatch was detected.
+    pub fn is_conformant(&self) -> bool {
+        self.mismatches.is_empty()
+    }
+}
+
+impl fmt::Display for ConformanceReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} formats x {} strategies, {} skipped, {} mismatch(es)",
+            self.formats.len(),
+            self.strategies,
+            self.skipped.len(),
+            self.mismatches.len()
+        )?;
+        for m in &self.mismatches {
+            write!(f, "\n  {m}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Bit-pattern distance between two doubles (0 iff identical bits).
+pub fn ulp_distance(a: f64, b: f64) -> u64 {
+    (a.to_bits() as i64).abs_diff(b.to_bits() as i64)
+}
+
+/// Run the full conformance sweep on one matrix with the built-in
+/// registry. See [`check_matrix_with`] for the sweep definition.
+///
+/// ```
+/// use dtans::matrix::gen::structured::banded;
+/// use dtans::testkit::oracle::{check_matrix, OracleConfig};
+///
+/// let report = check_matrix(&banded(100, 2), &OracleConfig::default()).unwrap();
+/// assert!(report.is_conformant(), "{report}");
+/// assert!(report.formats.contains(&"csr_dtans"));
+/// ```
+pub fn check_matrix(m: &Csr, cfg: &OracleConfig) -> Result<ConformanceReport> {
+    check_matrix_with(m, cfg, &FormatRegistry::builtin())
+}
+
+/// Run the conformance sweep on one matrix over an explicit registry
+/// (tests shadow entries with deliberately perturbed builders to prove
+/// the oracle detects them).
+///
+/// The matrix is first rounded to the configured precision (encoders
+/// round internally; the reference must match), then the serial CSR
+/// kernel produces the ground truth and every registry operator is swept
+/// through the two oracle levels described in the [module docs](self).
+pub fn check_matrix_with(
+    m: &Csr,
+    cfg: &OracleConfig,
+    registry: &FormatRegistry,
+) -> Result<ConformanceReport> {
+    let reference = match cfg.opts.precision {
+        Precision::F64 => m.clone(),
+        Precision::F32 => m.round_to_f32(),
+    };
+    let x = input_vector(m.ncols, cfg.seed);
+    let mut want = vec![0.0; m.nrows];
+    crate::spmv::csr::spmv_csr(&reference, &x, &mut want)?;
+
+    let engines = fixed_engines(cfg.max_parts);
+    let mut report = ConformanceReport { strategies: engines.len() + 1, ..Default::default() };
+    for (tag, op) in registry.build_all(&reference, &cfg.opts) {
+        match op {
+            Ok(op) => {
+                report.formats.push(tag);
+                check_one(op.as_ref(), &x, &want, cfg, &engines, &mut report)?;
+            }
+            Err(_) => report.skipped.push(tag),
+        }
+    }
+    Ok(report)
+}
+
+/// Conformance-check a single operator against a CSR reference matrix
+/// (the entry point for hand-built operators such as
+/// [`PerturbedOperator`]). `reference` must already be at the operator's
+/// precision.
+pub fn check_operator(
+    op: &dyn SpmvOperator,
+    reference: &Csr,
+    cfg: &OracleConfig,
+) -> Result<ConformanceReport> {
+    let x = input_vector(reference.ncols, cfg.seed);
+    let mut want = vec![0.0; reference.nrows];
+    crate::spmv::csr::spmv_csr(reference, &x, &mut want)?;
+    let engines = fixed_engines(cfg.max_parts);
+    let mut report = ConformanceReport {
+        formats: vec![op.format_tag()],
+        strategies: engines.len() + 1,
+        ..Default::default()
+    };
+    check_one(op, &x, &want, cfg, &engines, &mut report)?;
+    Ok(report)
+}
+
+fn fixed_engines(max_parts: usize) -> Vec<SpmvEngine> {
+    (1..=max_parts.max(1)).map(|p| SpmvEngine::new(ParStrategy::Fixed(p))).collect()
+}
+
+/// The per-operator sweep shared by [`check_matrix_with`] and
+/// [`check_operator`].
+fn check_one(
+    op: &dyn SpmvOperator,
+    x: &[f64],
+    want: &[f64],
+    cfg: &OracleConfig,
+    engines: &[SpmvEngine],
+    report: &mut ConformanceReport,
+) -> Result<()> {
+    let tag = op.format_tag();
+    let nrows = want.len();
+
+    // Level 1: the operator's own serial result vs the CSR ground truth.
+    let mut own = vec![0.0; nrows];
+    SpmvEngine::serial().run(op, x, &mut own)?;
+    let mut worst: Option<(usize, f64)> = None;
+    for (i, (&got, &w)) in own.iter().zip(want).enumerate() {
+        let rel = (got - w).abs() / got.abs().max(w.abs()).max(1.0);
+        let beats = match worst {
+            None => true,
+            Some((_, r)) => rel > r,
+        };
+        if rel > cfg.rel_tol && beats {
+            worst = Some((i, rel));
+        }
+    }
+    if let Some((row, _)) = worst {
+        report.mismatches.push(Mismatch {
+            kind: MismatchKind::CrossFormat,
+            format: tag,
+            parts: 0,
+            row,
+            got: own[row],
+            want: want[row],
+            ulps: ulp_distance(own[row], want[row]),
+        });
+    }
+
+    // Level 2: every partition count vs the operator's own serial result,
+    // bit for bit.
+    for (i, engine) in engines.iter().enumerate() {
+        let parts = i + 1;
+        let mut got = vec![0.0; nrows];
+        engine.run(op, x, &mut got)?;
+        if let Some(row) = (0..nrows).find(|&r| got[r].to_bits() != own[r].to_bits()) {
+            report.mismatches.push(Mismatch {
+                kind: MismatchKind::ParallelDivergence,
+                format: tag,
+                parts,
+                row,
+                got: got[row],
+                want: own[row],
+                ulps: ulp_distance(got[row], own[row]),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// A deliberately faulty operator — the oracle's negative control.
+///
+/// Delegates everything to the wrapped operator, but flips the lowest
+/// mantissa bit of output row `row` on every block-level run that is
+/// *not* the full serial block. A serial run therefore stays clean while
+/// every partitioned run diverges by exactly 1 ULP at `row` — the
+/// smallest possible conformance break, which the oracle must still
+/// detect and localize (format tag, partition count, row). Used by the
+/// negative self-tests in `tests/conformance.rs`.
+pub struct PerturbedOperator {
+    inner: Arc<dyn SpmvOperator>,
+    row: usize,
+}
+
+impl PerturbedOperator {
+    /// Wrap `inner`, targeting output row `row` (must be in range).
+    pub fn new(inner: Arc<dyn SpmvOperator>, row: usize) -> PerturbedOperator {
+        assert!(row < inner.dims().0, "perturbed row out of range");
+        PerturbedOperator { inner, row }
+    }
+
+    /// Flip the target row's entry iff this block is a partitioned run
+    /// (i.e. not the single full-range block the serial path uses).
+    fn perturb(&self, block: Block, y_seg: &mut [f64]) {
+        let units = self.inner.cost_prefix().len().saturating_sub(1);
+        if block.start == 0 && block.end == units {
+            return; // full serial block: stay clean
+        }
+        let r0 = self.inner.rows_through(block.start);
+        let r1 = self.inner.rows_through(block.end);
+        if (r0..r1).contains(&self.row) {
+            let y = &mut y_seg[self.row - r0];
+            *y = f64::from_bits(y.to_bits() ^ 1);
+        }
+    }
+}
+
+impl SpmvOperator for PerturbedOperator {
+    fn dims(&self) -> (usize, usize) {
+        self.inner.dims()
+    }
+
+    fn nnz(&self) -> usize {
+        self.inner.nnz()
+    }
+
+    fn cost_prefix(&self) -> Cow<'_, [usize]> {
+        self.inner.cost_prefix()
+    }
+
+    fn cost(&self) -> usize {
+        self.inner.cost()
+    }
+
+    fn rows_through(&self, unit_end: usize) -> usize {
+        self.inner.rows_through(unit_end)
+    }
+
+    fn run_range(&self, block: Block, x: &[f64], y_seg: &mut [f64]) -> Result<()> {
+        self.inner.run_range(block, x, y_seg)?;
+        self.perturb(block, y_seg);
+        Ok(())
+    }
+
+    fn run_range_axpby(
+        &self,
+        block: Block,
+        x: &[f64],
+        alpha: f64,
+        beta: f64,
+        y_seg: &mut [f64],
+    ) -> Result<()> {
+        self.inner.run_range_axpby(block, x, alpha, beta, y_seg)?;
+        self.perturb(block, y_seg);
+        Ok(())
+    }
+
+    fn run_range_multi(&self, block: Block, xs: &DenseMat, ys: &mut DenseMatMut<'_>) -> Result<()> {
+        self.inner.run_range_multi(block, xs, ys)?;
+        for j in 0..ys.ncols() {
+            self.perturb(block, ys.col_mut(j));
+        }
+        Ok(())
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.inner.resident_bytes()
+    }
+
+    fn format_tag(&self) -> &'static str {
+        self.inner.format_tag()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen::structured::banded;
+    use crate::matrix::gen::{assign_values, ValueDist};
+    use crate::util::rng::Xoshiro256;
+
+    fn sample() -> Csr {
+        let mut m = banded(150, 3);
+        assign_values(&mut m, ValueDist::FewDistinct(6), &mut Xoshiro256::seeded(3));
+        m
+    }
+
+    #[test]
+    fn healthy_matrix_is_conformant_across_all_formats() {
+        let report = check_matrix(&sample(), &OracleConfig::default()).unwrap();
+        assert!(report.is_conformant(), "{report}");
+        assert_eq!(report.formats.len() + report.skipped.len(), 5);
+        assert!(report.formats.contains(&"csr"));
+        assert!(report.formats.contains(&"csr_dtans"));
+        assert_eq!(report.strategies, 9); // serial + Fixed(1..=8)
+    }
+
+    #[test]
+    fn perturbed_operator_is_detected_with_partition_and_row() {
+        let m = sample();
+        let bad = PerturbedOperator::new(Arc::new(m.clone()), 37);
+        let report = check_operator(&bad, &m, &OracleConfig::default()).unwrap();
+        assert!(!report.is_conformant());
+        // Serial and Fixed(1) runs are clean (no pool, full block), so the
+        // first detection is the 2-way partition; every larger partition
+        // count re-detects it.
+        let first = &report.mismatches[0];
+        assert_eq!(first.kind, MismatchKind::ParallelDivergence);
+        assert_eq!(first.format, "csr");
+        assert_eq!(first.parts, 2);
+        assert_eq!(first.row, 37);
+        assert_eq!(first.ulps, 1);
+        assert_eq!(report.mismatches.len(), 7); // parts 2..=8
+    }
+
+    #[test]
+    fn ulp_distance_basics() {
+        assert_eq!(ulp_distance(1.0, 1.0), 0);
+        assert_eq!(ulp_distance(1.0, f64::from_bits(1.0f64.to_bits() + 1)), 1);
+        assert!(ulp_distance(1.0, -1.0) > 1 << 60);
+    }
+
+    #[test]
+    fn mismatch_display_is_informative() {
+        let m = Mismatch {
+            kind: MismatchKind::ParallelDivergence,
+            format: "sell",
+            parts: 4,
+            row: 9,
+            got: 1.0,
+            want: 2.0,
+            ulps: 42,
+        };
+        let s = m.to_string();
+        assert!(s.contains("sell") && s.contains("parts=4") && s.contains("row 9"), "{s}");
+    }
+}

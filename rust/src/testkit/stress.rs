@@ -1,0 +1,511 @@
+//! Seeded concurrency-stress driver for the coordinator stack.
+//!
+//! [`run_stress`] generates a deterministic mixed trace (single SpMVMs,
+//! SpMM bursts, CG solves, mid-trace registrations, forced evictions)
+//! from a seed, hammers a **budgeted** [`SpmvService`] with it from many
+//! threads — so evictions, cold reloads, deduped loader faults, SpMM
+//! batch packing and solve pins all interleave — and then checks three
+//! conservation oracles:
+//!
+//! 1. **Bit-identical serial replay** — every response the stressed
+//!    service produced is recomputed on a fresh *unbudgeted, serial*
+//!    reference service and compared bit for bit. Eviction, cold reload
+//!    and kernel parallelism must never change a single ULP (the
+//!    per-format bit-identity guarantee of the engine, end to end through
+//!    the service).
+//! 2. **Metrics conservation** — after the run drains,
+//!    `completed + failed == submitted`, and no request failed.
+//! 3. **Zero leaked pins** — every registered matrix's
+//!    [`pin_count`](crate::store::MatrixStore::pin_count) is 0 once all
+//!    threads join: no code path leaks an acquisition.
+//!
+//! Scale comes from [`TestkitScale`] (the `TESTKIT_SCALE` env knob): CI
+//! runs `small` (4 threads, a few hundred ops, seconds); soak runs set
+//! `medium`/`large`.
+
+use crate::coordinator::{RoutePolicy, ServiceConfig, SpmvService};
+use crate::matrix::csr::Csr;
+use crate::solver::{SolveMethod, SolverConfig};
+use crate::spmv::engine::ParStrategy;
+use crate::store::StoreConfig;
+use crate::testkit::{seeded_vector as request_vector, zoo, TestkitScale};
+use crate::util::error::{DtansError, Result};
+use crate::util::rng::Xoshiro256;
+use std::path::Path;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+/// Stress-run knobs. [`StressConfig::for_scale`] maps the `TESTKIT_SCALE`
+/// tiers onto sensible values; fields stay public for bespoke runs.
+#[derive(Debug, Clone)]
+pub struct StressConfig {
+    /// Worker threads issuing requests concurrently.
+    pub threads: usize,
+    /// Total trace operations (split round-robin across threads).
+    pub ops: usize,
+    /// Trace seed: same seed, same trace, same fixture set.
+    pub seed: u64,
+    /// Residency budget for the stressed service — far below the working
+    /// set, so the trace forces evictions and cold reloads.
+    pub budget_bytes: Option<u64>,
+    /// Kernel parallelism of the stressed service (the reference replay
+    /// is always serial).
+    pub par: ParStrategy,
+}
+
+impl StressConfig {
+    /// Map a [`TestkitScale`] tier to a config. All tiers satisfy the
+    /// acceptance floor (≥ 4 threads, ≥ 200 mixed ops, eviction-forcing
+    /// budget).
+    pub fn for_scale(scale: TestkitScale) -> StressConfig {
+        let (threads, ops) = match scale {
+            TestkitScale::Small => (4, 240),
+            TestkitScale::Medium => (8, 1500),
+            TestkitScale::Large => (16, 6000),
+        };
+        StressConfig {
+            threads,
+            ops,
+            seed: 0x57E55,
+            budget_bytes: Some(192 * 1024),
+            par: ParStrategy::Auto,
+        }
+    }
+}
+
+/// What a completed stress run did — for assertions and logs.
+#[derive(Debug)]
+pub struct StressReport {
+    /// Trace operations executed.
+    pub ops_executed: usize,
+    /// Single-SpMVM responses compared bit-identically against replay.
+    pub spmv_checked: usize,
+    /// SpMM-burst responses compared (individual vectors).
+    pub spmm_checked: usize,
+    /// CG solves compared (iterate + residual history, bitwise).
+    pub solves_checked: usize,
+    /// Operations skipped because their mid-trace registration had not
+    /// landed yet on the issuing thread's timeline.
+    pub skipped: usize,
+    /// Evictions observed on the stressed service.
+    pub evictions: u64,
+    /// Cold loads observed on the stressed service.
+    pub cold_loads: u64,
+    /// The stressed service's final metrics report line.
+    pub metrics_report: String,
+}
+
+/// One trace operation. `mat` indexes the fixture set (base fixtures
+/// first, then mid-trace extras).
+#[derive(Debug, Clone, Copy)]
+enum TraceOp {
+    Spmv { mat: usize, vseed: u64 },
+    Spmm { mat: usize, k: usize, vseed: u64 },
+    Solve { vseed: u64 },
+    Register { extra: usize },
+    Evict { mat: usize },
+}
+
+/// A recorded response, for bitwise comparison with the replay.
+enum Response {
+    /// One output vector per request of the op (1 for `Spmv`, `k` for
+    /// `Spmm`).
+    Vecs(Vec<Vec<f64>>),
+    /// CG iterate and residual history.
+    Solve(Vec<f64>, Vec<f64>),
+    /// Op produced nothing to compare (`Register`, `Evict`, skipped).
+    None,
+}
+
+fn gen_trace(rng: &mut Xoshiro256, ops: usize, n_total: usize, n_extra: usize) -> Vec<TraceOp> {
+    let mut trace: Vec<TraceOp> = (0..ops)
+        .map(|_| {
+            let roll = rng.below(100);
+            if roll < 55 {
+                TraceOp::Spmv { mat: rng.below_usize(n_total), vseed: rng.next_u64() }
+            } else if roll < 70 {
+                TraceOp::Spmm {
+                    mat: rng.below_usize(n_total),
+                    k: 2 + rng.below_usize(4),
+                    vseed: rng.next_u64(),
+                }
+            } else if roll < 80 {
+                TraceOp::Solve { vseed: rng.next_u64() }
+            } else {
+                TraceOp::Evict { mat: rng.below_usize(n_total) }
+            }
+        })
+        .collect();
+    // Place each extra's registration once, in the first half of the
+    // trace (linear-probing past slots already taken by a registration).
+    for extra in 0..n_extra {
+        let mut pos = rng.below_usize((ops / 2).max(1));
+        while matches!(trace[pos], TraceOp::Register { .. }) {
+            pos = (pos + 1) % ops;
+        }
+        trace[pos] = TraceOp::Register { extra };
+    }
+    trace
+}
+
+fn solver_config() -> SolverConfig {
+    SolverConfig { max_iters: 200, tol: 1e-8, par: ParStrategy::Serial }
+}
+
+/// The fixture set: the mixed service zoo plus a few extras registered
+/// mid-trace, and one SPD matrix for solves.
+fn fixtures(seed: u64) -> (Vec<Csr>, usize, Csr) {
+    let mut base = zoo::mixed_zoo();
+    let n_extra = 3;
+    for i in 0..n_extra as u64 {
+        let mut m = crate::matrix::gen::structured::banded(700 + 150 * i as usize, 2);
+        crate::matrix::gen::assign_values(
+            &mut m,
+            crate::matrix::gen::ValueDist::FewDistinct(5),
+            &mut Xoshiro256::seeded(seed ^ (0xE0 + i)),
+        );
+        base.push(m);
+    }
+    (base, n_extra, zoo::spd(24))
+}
+
+/// Run one stress cycle; see the [module docs](self) for the oracles.
+/// Returns an error (with a descriptive message) on any violation:
+/// a failed request, a replay mismatch, a leaked pin, or a metrics
+/// imbalance.
+pub fn run_stress(cfg: &StressConfig) -> Result<StressReport> {
+    let cache_dir = std::env::temp_dir().join(format!(
+        "dtans_testkit_stress_{}_{:x}",
+        std::process::id(),
+        cfg.seed
+    ));
+    let result = run_stress_inner(cfg, &cache_dir);
+    let _ = std::fs::remove_dir_all(&cache_dir);
+    result
+}
+
+fn run_stress_inner(cfg: &StressConfig, cache_dir: &Path) -> Result<StressReport> {
+    let policy = RoutePolicy { min_nnz: 1 << 9, max_size_ratio: 0.95 };
+    let (all_fixtures, n_extra, spd) = fixtures(cfg.seed);
+    let n_total = all_fixtures.len();
+    let n_base = n_total - n_extra;
+
+    let mut rng = Xoshiro256::seeded(cfg.seed);
+    let trace = gen_trace(&mut rng, cfg.ops, n_total, n_extra);
+
+    // --- Stressed subject: budgeted, cached, parallel. ---
+    let svc = Arc::new(SpmvService::start(ServiceConfig {
+        workers: cfg.threads.min(8),
+        policy,
+        par: cfg.par,
+        store: StoreConfig {
+            cache_dir: Some(cache_dir.to_path_buf()),
+            budget_bytes: cfg.budget_bytes,
+            drop_csr: true,
+            loader_threads: 2,
+        },
+        ..Default::default()
+    }));
+    // Base fixtures and the SPD solve matrix register up front; extras
+    // land mid-trace.
+    let mut ids: Vec<Option<u64>> = vec![None; n_total];
+    for (i, m) in all_fixtures.iter().take(n_base).enumerate() {
+        ids[i] = Some(svc.register(&format!("base{i}"), m.clone())?);
+    }
+    let spd_id = svc.register("spd", spd.clone())?;
+    svc.store().flush(); // artifacts on disk -> base set evictable
+    let ids = Arc::new(Mutex::new(ids));
+
+    // --- Concurrent execution. ---
+    let responses: Arc<Mutex<Vec<Option<std::result::Result<Response, String>>>>> =
+        Arc::new(Mutex::new((0..trace.len()).map(|_| None).collect()));
+    let trace = Arc::new(trace);
+    let all_fixtures = Arc::new(all_fixtures);
+    let spd_dims = (spd.nrows, spd.ncols);
+    let stride = cfg.threads.max(1);
+    let handles: Vec<_> = (0..cfg.threads)
+        .map(|t| {
+            let svc = Arc::clone(&svc);
+            let trace = Arc::clone(&trace);
+            let responses = Arc::clone(&responses);
+            let ids = Arc::clone(&ids);
+            let all_fixtures = Arc::clone(&all_fixtures);
+            std::thread::spawn(move || {
+                for idx in (t..trace.len()).step_by(stride) {
+                    let r = execute_op(
+                        &svc,
+                        &ids,
+                        &all_fixtures,
+                        n_base,
+                        spd_id,
+                        spd_dims,
+                        trace[idx],
+                    );
+                    responses.lock().unwrap()[idx] = Some(r);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().map_err(|_| DtansError::Service("stress worker panicked".into()))?;
+    }
+    svc.store().flush();
+
+    // --- Oracle 3: zero leaked pins. ---
+    let final_ids: Vec<u64> = {
+        let g = ids.lock().unwrap();
+        g.iter().flatten().copied().chain([spd_id]).collect()
+    };
+    for id in &final_ids {
+        let pins = svc.store().pin_count(*id);
+        if pins != 0 {
+            return Err(DtansError::Service(format!("matrix {id} leaked {pins} pin(s)")));
+        }
+    }
+
+    // --- Oracle 2: metrics conservation, no failures. ---
+    let m = &svc.metrics;
+    let (submitted, completed, failed) = (
+        m.submitted.load(Ordering::Relaxed),
+        m.completed.load(Ordering::Relaxed),
+        m.failed.load(Ordering::Relaxed),
+    );
+    if completed + failed != submitted {
+        return Err(DtansError::Service(format!(
+            "metrics do not sum: submitted={submitted} completed={completed} failed={failed}"
+        )));
+    }
+    if failed != 0 {
+        return Err(DtansError::Service(format!(
+            "{failed} request(s) failed under stress: {}",
+            m.report()
+        )));
+    }
+
+    // --- Oracle 1: bit-identical serial replay on a reference service. ---
+    let reference = SpmvService::start(ServiceConfig {
+        workers: 1,
+        policy,
+        par: ParStrategy::Serial,
+        ..Default::default()
+    });
+    let mut ref_ids = Vec::with_capacity(n_total);
+    for (i, m) in all_fixtures.iter().enumerate() {
+        ref_ids.push(reference.register(&format!("ref{i}"), m.clone())?);
+    }
+    let ref_spd = reference.register("refspd", spd.clone())?;
+
+    let mut report = StressReport {
+        ops_executed: trace.len(),
+        spmv_checked: 0,
+        spmm_checked: 0,
+        solves_checked: 0,
+        skipped: 0,
+        evictions: m.evictions.load(Ordering::Relaxed),
+        cold_loads: m.cold_loads.load(Ordering::Relaxed),
+        metrics_report: m.report(),
+    };
+    let responses = Arc::try_unwrap(responses)
+        .map_err(|_| DtansError::Service("response buffer still shared".into()))?
+        .into_inner()
+        .unwrap();
+    for (idx, (op, resp)) in trace.iter().zip(responses).enumerate() {
+        let resp = resp
+            .ok_or_else(|| DtansError::Service(format!("op {idx} never executed")))?
+            .map_err(DtansError::Service)?;
+        replay_and_compare(
+            &reference,
+            &ref_ids,
+            ref_spd,
+            &all_fixtures,
+            spd_dims,
+            idx,
+            *op,
+            resp,
+            &mut report,
+        )?;
+    }
+    Ok(report)
+}
+
+/// Execute one op on the stressed service. Errors come back as strings
+/// (the caller turns any into a run failure).
+fn execute_op(
+    svc: &SpmvService,
+    ids: &Mutex<Vec<Option<u64>>>,
+    fixtures: &[Csr],
+    n_base: usize,
+    spd_id: u64,
+    spd_dims: (usize, usize),
+    op: TraceOp,
+) -> std::result::Result<Response, String> {
+    let lookup = |mat: usize| ids.lock().unwrap()[mat];
+    let fail = |e: DtansError| e.to_string();
+    match op {
+        TraceOp::Spmv { mat, vseed } => match lookup(mat) {
+            Some(id) => {
+                let x = request_vector(fixtures[mat].ncols, vseed);
+                let y = svc.spmv(id, x).map_err(fail)?;
+                Ok(Response::Vecs(vec![y]))
+            }
+            None => Ok(Response::None), // extra not registered yet
+        },
+        TraceOp::Spmm { mat, k, vseed } => match lookup(mat) {
+            Some(id) => {
+                // Submit the burst together so the dispatcher can pack it
+                // into one SpMM batch.
+                let pendings: Vec<_> = (0..k)
+                    .map(|j| {
+                        let x = request_vector(fixtures[mat].ncols, vseed ^ j as u64);
+                        svc.submit(id, x)
+                    })
+                    .collect();
+                let mut ys = Vec::with_capacity(k);
+                for p in pendings {
+                    ys.push(p.wait().map_err(fail)?);
+                }
+                Ok(Response::Vecs(ys))
+            }
+            None => Ok(Response::None),
+        },
+        TraceOp::Solve { vseed } => {
+            let b = request_vector(spd_dims.0, vseed);
+            let sol =
+                svc.solve(spd_id, SolveMethod::Cg, &b, &solver_config()).map_err(fail)?;
+            Ok(Response::Solve(sol.x, sol.report.residuals))
+        }
+        TraceOp::Register { extra } => {
+            let mat = n_base + extra;
+            let mut g = ids.lock().unwrap();
+            if g[mat].is_none() {
+                drop(g);
+                let id = svc
+                    .register(&format!("extra{extra}"), fixtures[mat].clone())
+                    .map_err(fail)?;
+                ids.lock().unwrap()[mat] = Some(id);
+            }
+            Ok(Response::None)
+        }
+        TraceOp::Evict { mat } => {
+            if let Some(id) = lookup(mat) {
+                // May refuse (pinned / not yet persisted) — both fine.
+                let _ = svc.store().evict(id);
+            }
+            Ok(Response::None)
+        }
+    }
+}
+
+/// Recompute one op on the serial reference service and compare bitwise.
+#[allow(clippy::too_many_arguments)]
+fn replay_and_compare(
+    reference: &SpmvService,
+    ref_ids: &[u64],
+    ref_spd: u64,
+    fixtures: &[Csr],
+    spd_dims: (usize, usize),
+    idx: usize,
+    op: TraceOp,
+    resp: Response,
+    report: &mut StressReport,
+) -> Result<()> {
+    let mismatch = |what: &str| {
+        Err(DtansError::Service(format!("op {idx} ({op:?}): {what} diverged from serial replay")))
+    };
+    match (op, resp) {
+        (TraceOp::Spmv { mat, vseed }, Response::Vecs(got)) => {
+            let x = request_vector(fixtures[mat].ncols, vseed);
+            let want = reference.spmv(ref_ids[mat], x)?;
+            if got.len() != 1 || got[0] != want {
+                return mismatch("spmv response");
+            }
+            report.spmv_checked += 1;
+        }
+        (TraceOp::Spmm { mat, k, vseed }, Response::Vecs(got)) => {
+            if got.len() != k {
+                return mismatch("spmm burst size");
+            }
+            for (j, y) in got.iter().enumerate() {
+                let x = request_vector(fixtures[mat].ncols, vseed ^ j as u64);
+                let want = reference.spmv(ref_ids[mat], x)?;
+                if *y != want {
+                    return mismatch("spmm response");
+                }
+            }
+            report.spmm_checked += 1;
+        }
+        (TraceOp::Solve { vseed }, Response::Solve(x, residuals)) => {
+            let b = request_vector(spd_dims.0, vseed);
+            let want = reference.solve(ref_spd, SolveMethod::Cg, &b, &solver_config())?;
+            if x != want.x || residuals != want.report.residuals {
+                return mismatch("solve");
+            }
+            report.solves_checked += 1;
+        }
+        (TraceOp::Spmv { .. } | TraceOp::Spmm { .. }, Response::None) => report.skipped += 1,
+        (TraceOp::Register { .. } | TraceOp::Evict { .. }, _) => {}
+        (op, _) => {
+            return Err(DtansError::Service(format!(
+                "op {idx} ({op:?}) recorded a response of the wrong shape"
+            )));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_registers_each_extra_once() {
+        let mut a = Xoshiro256::seeded(9);
+        let mut b = Xoshiro256::seeded(9);
+        let ta = gen_trace(&mut a, 300, 12, 3);
+        let tb = gen_trace(&mut b, 300, 12, 3);
+        assert_eq!(ta.len(), 300);
+        for (x, y) in ta.iter().zip(&tb) {
+            assert_eq!(format!("{x:?}"), format!("{y:?}"));
+        }
+        let mut extras: Vec<usize> = ta
+            .iter()
+            .filter_map(|op| match op {
+                TraceOp::Register { extra } => Some(*extra),
+                _ => None,
+            })
+            .collect();
+        extras.sort_unstable();
+        assert_eq!(extras, vec![0, 1, 2]);
+        // The mix contains every op family.
+        assert!(ta.iter().any(|o| matches!(o, TraceOp::Spmv { .. })));
+        assert!(ta.iter().any(|o| matches!(o, TraceOp::Spmm { .. })));
+        assert!(ta.iter().any(|o| matches!(o, TraceOp::Solve { .. })));
+        assert!(ta.iter().any(|o| matches!(o, TraceOp::Evict { .. })));
+    }
+
+    #[test]
+    fn scale_configs_meet_the_acceptance_floor() {
+        for scale in [TestkitScale::Small, TestkitScale::Medium, TestkitScale::Large] {
+            let cfg = StressConfig::for_scale(scale);
+            assert!(cfg.threads >= 4, "{scale:?}");
+            assert!(cfg.ops >= 200, "{scale:?}");
+            assert!(cfg.budget_bytes.is_some(), "{scale:?}");
+        }
+    }
+
+    #[test]
+    fn tiny_stress_run_passes_all_oracles() {
+        // A miniature in-module smoke run; the full small-scale run lives
+        // in tests/conformance.rs.
+        let cfg = StressConfig {
+            threads: 2,
+            ops: 24,
+            seed: 0xABCD,
+            budget_bytes: Some(128 * 1024),
+            par: ParStrategy::Auto,
+        };
+        let report = run_stress(&cfg).unwrap();
+        assert_eq!(report.ops_executed, 24);
+        assert!(report.spmv_checked + report.spmm_checked + report.solves_checked > 0);
+    }
+}

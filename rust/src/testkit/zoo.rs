@@ -1,0 +1,215 @@
+//! Curated matrix fixtures for the test harness.
+//!
+//! Two families:
+//!
+//! * [`pathological`] — named degenerate shapes (empty matrix, empty
+//!   rows, a single dense row, 1×N / N×1 vectors, explicit zero values,
+//!   duplicate-heavy COO input, slice-boundary sizes). These used to
+//!   exist only inline in individual tests; every one of them has broken a
+//!   sparse kernel somewhere in the wild, so the conformance oracle sweeps
+//!   all of them (`tests/conformance.rs`).
+//! * [`mixed_zoo`] — the service-scale mixed workload (banded and
+//!   power-law structures, compressible and incompressible values) shared
+//!   by the store residency tests and the stress driver, so both router
+//!   outcomes (CSR and CSR-dtANS) are exercised under one roof.
+
+use crate::matrix::coo::Coo;
+use crate::matrix::csr::Csr;
+use crate::matrix::gen::structured::{banded, powerlaw_rows, stencil2d5};
+use crate::matrix::gen::{assign_values, ValueDist};
+use crate::util::rng::Xoshiro256;
+
+/// One named fixture.
+pub struct Fixture {
+    /// Stable name for failure messages.
+    pub name: &'static str,
+    /// The matrix.
+    pub csr: Csr,
+}
+
+fn fixture(name: &'static str, csr: Csr) -> Fixture {
+    Fixture { name, csr }
+}
+
+/// The pathological shapes. Deterministic; every entry passes
+/// [`Csr::validate`].
+///
+/// ```
+/// let zoo = dtans::testkit::zoo::pathological();
+/// assert!(zoo.len() >= 10);
+/// for f in &zoo {
+///     f.csr.validate().unwrap();
+/// }
+/// ```
+pub fn pathological() -> Vec<Fixture> {
+    let mut rng = Xoshiro256::seeded(0x200);
+
+    // Degenerate shapes first.
+    let mut out = vec![
+        fixture("empty-0x0", Csr::new(0, 0)),
+        fixture("all-rows-empty", Csr::new(6, 6)),
+    ];
+
+    // Mostly-empty rows: only every 7th row stores anything.
+    let mut coo = Coo::new(64, 64);
+    for r in (0..64).step_by(7) {
+        for j in 0..3u32 {
+            coo.push(r as u32, (r as u32 + j * 11) % 64, rng.next_gaussian());
+        }
+    }
+    out.push(fixture("empty-rows", Csr::from_coo(&coo)));
+
+    // One fully dense row in an otherwise empty matrix: the worst case
+    // for row-count-based partitioning (all cost in one unit).
+    let mut coo = Coo::new(48, 48);
+    for c in 0..48 {
+        coo.push(20, c, (c as f64 * 0.3).sin());
+    }
+    out.push(fixture("single-dense-row", Csr::from_coo(&coo)));
+
+    // 1×N and N×1 vectors.
+    let mut coo = Coo::new(1, 128);
+    for c in (0..128).step_by(3) {
+        coo.push(0, c, rng.next_f64() - 0.5);
+    }
+    out.push(fixture("row-vector-1xN", Csr::from_coo(&coo)));
+    let mut coo = Coo::new(128, 1);
+    for r in (0..128).step_by(2) {
+        coo.push(r, 0, rng.next_f64() - 0.5);
+    }
+    out.push(fixture("col-vector-Nx1", Csr::from_coo(&coo)));
+
+    // Explicitly stored zero values: nnz > 0 but every product is 0.
+    let mut m = banded(40, 2);
+    for v in &mut m.vals {
+        *v = 0.0;
+    }
+    out.push(fixture("all-zero-values", m));
+
+    // Duplicate-heavy COO input: every position pushed 4 times (summed by
+    // `Csr::from_coo`), including exact-cancellation pairs that leave
+    // explicit zeros behind.
+    let mut coo = Coo::new(32, 32);
+    for i in 0..64u32 {
+        let (r, c) = (i % 32, (i * 7) % 32);
+        for _ in 0..4 {
+            coo.push(r, c, 0.25 * (1 + i % 3) as f64);
+        }
+    }
+    coo.push(5, 9, 1.5);
+    coo.push(5, 9, -1.5); // cancels to an explicit stored zero
+    out.push(fixture("duplicate-heavy-coo", Csr::from_coo(&coo)));
+
+    // Sizes straddling the 32-row warp-slice boundary.
+    out.push(fixture("slice-boundary-31", banded(31, 1)));
+    out.push(fixture("slice-boundary-32", banded(32, 1)));
+    out.push(fixture("slice-boundary-33", banded(33, 1)));
+
+    // Skewed aspect ratios.
+    let mut coo = Coo::new(300, 4);
+    for r in 0..300u32 {
+        coo.push(r, r % 4, rng.next_gaussian());
+    }
+    out.push(fixture("tall-thin-300x4", Csr::from_coo(&coo)));
+    let mut coo = Coo::new(4, 300);
+    for c in 0..300u32 {
+        coo.push(c % 4, c, rng.next_gaussian());
+    }
+    out.push(fixture("wide-flat-4x300", Csr::from_coo(&coo)));
+
+    // One heavy head row over a trailing diagonal: partition skew.
+    let mut coo = Coo::new(80, 80);
+    for c in 0..64u32 {
+        coo.push(0, c, 1.0 + (c % 5) as f64);
+    }
+    for r in 1..80u32 {
+        coo.push(r, r, -1.0);
+    }
+    out.push(fixture("heavy-head-row", Csr::from_coo(&coo)));
+
+    for f in &out {
+        debug_assert!(f.csr.validate().is_ok(), "{} invalid", f.name);
+    }
+    out
+}
+
+/// A mixed zoo of ≥ 8 service-scale matrices: banded and power-law,
+/// compressible and not, so both router outcomes (CSR and CSR-dtANS) are
+/// exercised. This is the fixture set behind
+/// `tests/store_residency.rs` and the [`stress`](crate::testkit::stress)
+/// driver.
+pub fn mixed_zoo() -> Vec<Csr> {
+    let mut out = Vec::new();
+    for i in 0..5u64 {
+        let mut m = banded(500 + 200 * i as usize, 2 + (i as usize % 3));
+        assign_values(&mut m, ValueDist::FewDistinct(4 + i as usize), &mut Xoshiro256::seeded(i));
+        out.push(m);
+    }
+    for i in 0..4u64 {
+        let mut rng = Xoshiro256::seeded(100 + i);
+        let mut m = powerlaw_rows(400 + 100 * i as usize, 5.0, 1.2, &mut rng);
+        // Random values resist compression -> some matrices stay CSR.
+        let dist = if i % 2 == 0 { ValueDist::Random } else { ValueDist::Quantized(16) };
+        assign_values(&mut m, dist, &mut rng);
+        out.push(m);
+    }
+    out
+}
+
+/// A symmetric positive-definite fixture (2D Poisson stencil on a
+/// `side × side` grid) for CG-based stress and solver tests.
+pub fn spd(side: usize) -> Csr {
+    stencil2d5(side, side)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pathological_fixtures_are_valid_and_distinctly_named() {
+        let zoo = pathological();
+        assert!(zoo.len() >= 10);
+        let mut names: Vec<_> = zoo.iter().map(|f| f.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), zoo.len(), "duplicate fixture names");
+        for f in &zoo {
+            f.csr.validate().unwrap_or_else(|e| panic!("{}: {e}", f.name));
+        }
+    }
+
+    #[test]
+    fn pathological_covers_the_advertised_shapes() {
+        let zoo = pathological();
+        let get = |name: &str| {
+            &zoo.iter().find(|f| f.name == name).unwrap_or_else(|| panic!("missing {name}")).csr
+        };
+        assert_eq!(get("empty-0x0").nrows, 0);
+        assert_eq!(get("all-rows-empty").nnz(), 0);
+        let dense = get("single-dense-row");
+        assert_eq!(dense.max_row_len(), dense.ncols);
+        assert_eq!(get("row-vector-1xN").nrows, 1);
+        assert_eq!(get("col-vector-Nx1").ncols, 1);
+        let zeroes = get("all-zero-values");
+        assert!(zeroes.nnz() > 0 && zeroes.vals.iter().all(|&v| v == 0.0));
+        // Cancellation left an explicit stored zero behind.
+        assert!(get("duplicate-heavy-coo").vals.iter().any(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn mixed_zoo_is_deterministic_and_sized() {
+        let a = mixed_zoo();
+        let b = mixed_zoo();
+        assert!(a.len() >= 8);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn spd_fixture_is_symmetric() {
+        assert!(spd(8).is_symmetric());
+    }
+}

@@ -30,16 +30,30 @@ pub enum DtansError {
     },
 
     /// A container file carries a version this build does not understand
-    /// (e.g. written by a future release).
+    /// — written by a future release, or by an older one whose layout
+    /// this build no longer reads (the reader requires an exact version
+    /// match).
     UnsupportedVersion {
         /// Version found in the file.
         found: u32,
-        /// Highest version this build can read.
+        /// The one version this build reads.
         supported: u32,
     },
 
     /// A container file ended before a field could be read completely.
     Truncated(String),
+
+    /// A container file's trailing content checksum does not match the
+    /// bytes actually read — the file was modified after writing (bit
+    /// rot, a torn write, deliberate tampering). Distinct from
+    /// [`DtansError::Container`]: the layout parsed, but the content is
+    /// not what was written.
+    ChecksumMismatch {
+        /// Checksum stored in the file's trailer.
+        stored: u64,
+        /// Checksum computed over the bytes read.
+        computed: u64,
+    },
 
     /// Mismatched dimensions in an SpMVM call.
     Dimension(String),
@@ -78,6 +92,9 @@ impl DtansError {
                 DtansError::UnsupportedVersion { found: *found, supported: *supported }
             }
             DtansError::Truncated(m) => DtansError::Truncated(m.clone()),
+            DtansError::ChecksumMismatch { stored, computed } => {
+                DtansError::ChecksumMismatch { stored: *stored, computed: *computed }
+            }
             DtansError::Dimension(m) => DtansError::Dimension(m.clone()),
             DtansError::MtxParse { line, msg } => DtansError::MtxParse {
                 line: *line,
@@ -102,9 +119,13 @@ impl fmt::Display for DtansError {
             }
             DtansError::UnsupportedVersion { found, supported } => write!(
                 f,
-                "container format error: unsupported version {found} (this build reads <= {supported})"
+                "container format error: unsupported version {found} (this build reads exactly {supported})"
             ),
             DtansError::Truncated(m) => write!(f, "container format error: truncated file: {m}"),
+            DtansError::ChecksumMismatch { stored, computed } => write!(
+                f,
+                "container format error: content checksum mismatch (stored {stored:#018x}, computed {computed:#018x})"
+            ),
             DtansError::Dimension(m) => write!(f, "dimension mismatch: {m}"),
             DtansError::MtxParse { line, msg } => {
                 write!(f, "matrix market parse error at line {line}: {msg}")
@@ -174,6 +195,12 @@ mod tests {
         let t = DtansError::Truncated("mid-array".into());
         assert!(t.to_string().contains("truncated"));
         assert!(matches!(t.duplicate(), DtansError::Truncated(_)));
+        let c = DtansError::ChecksumMismatch { stored: 0xAB, computed: 0xCD };
+        assert!(c.to_string().contains("checksum mismatch"));
+        assert!(matches!(
+            c.duplicate(),
+            DtansError::ChecksumMismatch { stored: 0xAB, computed: 0xCD }
+        ));
     }
 
     #[test]

@@ -1,9 +1,20 @@
 //! Property-based testing helper (proptest is not in the vendored set).
 //!
 //! `check(name, cases, |rng| ...)` runs a property over `cases` random
-//! inputs derived from a deterministic per-case seed; on failure it retries
-//! the failing seed with progressively "smaller" size hints (a lightweight
-//! shrinking analog) and reports the seed so failures are reproducible.
+//! inputs derived from a deterministic per-case seed; on failure it
+//! reports the seed — and a ready-to-paste repro command — so failures
+//! are reproducible.
+//!
+//! # Seed-repro workflow
+//!
+//! A failure message ends with a line like
+//! `PROPCHECK_SEED=0x1a2b3c4d cargo test <test name>`. Setting that
+//! environment variable makes [`check`] replay **exactly that seed**
+//! (swept across the property's size ramp, so the original failing
+//! `(seed, size)` combination is guaranteed to be hit) instead of running
+//! the whole case schedule — the fast inner loop for debugging one
+//! counterexample. Unset it to return to full property runs. See
+//! `docs/TESTING.md`.
 
 use super::rng::Xoshiro256;
 
@@ -32,13 +43,52 @@ impl Ctx {
 
 /// Run a property over `cases` deterministic random cases.
 ///
-/// The property returns `Err(msg)` (or panics) to signal failure.
-/// `base_seed` mixes in the property name so distinct properties see
-/// distinct streams.
-pub fn check<F>(name: &str, cases: usize, max_size: usize, mut prop: F)
+/// The property returns `Err(msg)` (or panics) to signal failure; the
+/// failure message includes the seed and a repro command. When the
+/// `PROPCHECK_SEED` environment variable is set (decimal, or hex with a
+/// `0x` prefix), only that seed is replayed — see the
+/// [module docs](self) for the workflow. The per-case seed mixes in the
+/// property name so distinct properties see distinct streams.
+pub fn check<F>(name: &str, cases: usize, max_size: usize, prop: F)
 where
     F: FnMut(&mut Ctx) -> Result<(), String>,
 {
+    let seed_override = std::env::var("PROPCHECK_SEED").ok().and_then(|s| parse_seed(&s));
+    check_with(name, cases, max_size, seed_override, prop)
+}
+
+/// [`check`] with the seed override passed explicitly — the testable core
+/// of the `PROPCHECK_SEED` path. `Some(seed)` replays that one seed
+/// across the property's distinct ramp sizes; `None` runs the normal
+/// case schedule.
+pub fn check_with<F>(
+    name: &str,
+    cases: usize,
+    max_size: usize,
+    seed_override: Option<u64>,
+    mut prop: F,
+) where
+    F: FnMut(&mut Ctx) -> Result<(), String>,
+{
+    if let Some(seed) = seed_override {
+        // Replay the one reported seed at every distinct size the normal
+        // schedule would have paired it with (the ramp is monotone, so
+        // dedup keeps one copy of each size — and the original failing
+        // (seed, size) pair is among them).
+        let mut sizes: Vec<usize> =
+            (0..cases).map(|case| 1 + (max_size * (case + 1)) / cases.max(1)).collect();
+        sizes.dedup();
+        for size in sizes {
+            let mut ctx = Ctx { rng: Xoshiro256::seeded(seed), size, seed };
+            if let Err(msg) = prop(&mut ctx) {
+                panic!(
+                    "property `{name}` failed under PROPCHECK_SEED replay \
+                     (seed {seed:#x}, size {size}): {msg}"
+                );
+            }
+        }
+        return;
+    }
     let name_hash = name.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
         (h ^ b as u64).wrapping_mul(0x100_0000_01b3)
     });
@@ -52,8 +102,23 @@ where
             seed,
         };
         if let Err(msg) = prop(&mut ctx) {
-            panic!("property `{name}` failed (case {case}, seed {seed:#x}, size {size}): {msg}");
+            panic!(
+                "property `{name}` failed (case {case}, seed {seed:#x}, size {size}): {msg}\n\
+                 re-run exactly this case: PROPCHECK_SEED={seed:#x} cargo test"
+            );
         }
+    }
+}
+
+/// Parse a `PROPCHECK_SEED` value: decimal, or hex with a `0x`/`0X`
+/// prefix (the format failure messages print). Returns `None` on
+/// anything unparseable, which [`check`] treats as "no override" rather
+/// than silently replaying seed 0.
+pub fn parse_seed(s: &str) -> Option<u64> {
+    let s = s.trim();
+    match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16).ok(),
+        None => s.parse().ok(),
     }
 }
 
@@ -101,5 +166,63 @@ mod tests {
     fn close_tolerances() {
         assert!(assert_close(&[1.0], &[1.0 + 1e-12], 1e-9, 0.0).is_ok());
         assert!(assert_close(&[1.0], &[1.1], 1e-9, 0.0).is_err());
+    }
+
+    #[test]
+    fn parse_seed_accepts_decimal_and_hex() {
+        assert_eq!(parse_seed("42"), Some(42));
+        assert_eq!(parse_seed("0x2a"), Some(42));
+        assert_eq!(parse_seed("0X2A"), Some(42));
+        assert_eq!(parse_seed(" 0xdead_beef".replace('_', "").as_str()), Some(0xdead_beef));
+        assert_eq!(parse_seed("0xffffffffffffffff"), Some(u64::MAX));
+        assert_eq!(parse_seed(""), None);
+        assert_eq!(parse_seed("bogus"), None);
+        assert_eq!(parse_seed("0x"), None);
+    }
+
+    #[test]
+    fn seed_override_replays_exactly_one_seed_across_the_size_ramp() {
+        // 10 cases over max_size 5 yields ramp sizes {1..=6} -> 6 distinct
+        // sizes, so the override runs the property 6 times, always with
+        // the override seed.
+        let mut runs = Vec::new();
+        check_with("override-replay", 10, 5, Some(0xFEED), |ctx| {
+            runs.push((ctx.seed, ctx.size));
+            Ok(())
+        });
+        assert_eq!(runs.len(), 6);
+        assert!(runs.iter().all(|&(s, _)| s == 0xFEED));
+        let sizes: Vec<usize> = runs.iter().map(|&(_, z)| z).collect();
+        assert_eq!(sizes, vec![1, 2, 3, 4, 5, 6]);
+        // Without the override, the same schedule runs all 10 cases with
+        // 10 distinct seeds.
+        let mut seeds = Vec::new();
+        check_with("override-replay", 10, 5, None, |ctx| {
+            seeds.push(ctx.seed);
+            Ok(())
+        });
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "PROPCHECK_SEED replay")]
+    fn seed_override_failures_name_the_replay() {
+        check_with("replay-fails", 3, 8, Some(0xBAD), |_ctx| Err("nope".into()));
+    }
+
+    #[test]
+    fn normal_failures_print_the_repro_command() {
+        let caught = std::panic::catch_unwind(|| {
+            check_with("with-repro", 3, 8, None, |_ctx| Err("nope".into()))
+        })
+        .expect_err("property must fail");
+        let msg = caught
+            .downcast_ref::<String>()
+            .cloned()
+            .expect("panic message");
+        assert!(msg.contains("PROPCHECK_SEED=0x"), "{msg}");
+        assert!(msg.contains("cargo test"), "{msg}");
     }
 }

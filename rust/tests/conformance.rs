@@ -1,0 +1,138 @@
+//! Tier-1 conformance: the differential oracle over the pathological zoo
+//! and a corpus sample, its negative self-tests (a deliberately perturbed
+//! operator must be detected and localized), and the seeded
+//! concurrency-stress driver at the `TESTKIT_SCALE` size.
+
+use dtans::format::csr_dtans::EncodeOptions;
+use dtans::matrix::gen::structured::banded;
+use dtans::matrix::gen::{assign_values, ValueDist};
+use dtans::matrix::{Csr, Precision};
+use dtans::spmv::{FormatEntry, FormatRegistry, SpmvOperator};
+use dtans::testkit::oracle::{self, MismatchKind, OracleConfig, PerturbedOperator};
+use dtans::testkit::{run_stress, zoo, StressConfig, TestkitScale};
+use dtans::util::rng::Xoshiro256;
+use std::sync::Arc;
+
+#[test]
+fn pathological_zoo_is_conformant_across_formats_and_partitions() {
+    let cfg = OracleConfig::default();
+    for f in zoo::pathological() {
+        let report = oracle::check_matrix(&f.csr, &cfg)
+            .unwrap_or_else(|e| panic!("{}: oracle errored: {e}", f.name));
+        assert!(report.is_conformant(), "{}: {report}", f.name);
+        // Every fixture must actually exercise the zoo — at least the
+        // CSR, COO, SELL and dtANS builders accept all of these shapes.
+        assert!(report.formats.len() >= 4, "{}: only {:?}", f.name, report.formats);
+    }
+}
+
+#[test]
+fn corpus_sample_is_conformant() {
+    use dtans::eval::{build_corpus, CorpusScale};
+    let corpus = build_corpus(&CorpusScale { max_nnz: 4000, steps: 2 }, 21);
+    let cfg = OracleConfig { max_parts: 6, ..Default::default() };
+    for e in corpus.iter().step_by(3) {
+        let report = oracle::check_matrix(&e.csr, &cfg)
+            .unwrap_or_else(|err| panic!("{}: oracle errored: {err}", e.name));
+        assert!(report.is_conformant(), "{}: {report}", e.name);
+    }
+}
+
+#[test]
+fn mixed_zoo_is_conformant_at_f32_precision_too() {
+    let cfg = OracleConfig {
+        opts: EncodeOptions { precision: Precision::F32, ..Default::default() },
+        max_parts: 5,
+        ..Default::default()
+    };
+    for (i, m) in zoo::mixed_zoo().iter().step_by(2).enumerate() {
+        let report = oracle::check_matrix(m, &cfg).unwrap();
+        assert!(report.is_conformant(), "mixed zoo matrix {i}: {report}");
+    }
+}
+
+/// Negative self-test 1: a partition-dependent single-ULP output flip
+/// must be detected with format tag, partition count and divergent row.
+#[test]
+fn oracle_detects_partition_dependent_single_ulp_flip() {
+    let mut m = banded(220, 3);
+    assign_values(&mut m, ValueDist::FewDistinct(7), &mut Xoshiro256::seeded(4));
+    let target_row = 133;
+    for (label, op) in [
+        ("csr", Arc::new(m.clone()) as Arc<dyn SpmvOperator>),
+        ("sell", Arc::new(dtans::matrix::Sell::from_csr(&m, 32)) as Arc<dyn SpmvOperator>),
+    ] {
+        let bad = PerturbedOperator::new(op, target_row);
+        let report = oracle::check_operator(&bad, &m, &OracleConfig::default()).unwrap();
+        assert!(!report.is_conformant(), "{label}: perturbation went undetected");
+        let first = &report.mismatches[0];
+        assert_eq!(first.kind, MismatchKind::ParallelDivergence, "{label}");
+        assert_eq!(first.format, label);
+        assert!(first.parts >= 2, "{label}: detected at parts={}", first.parts);
+        assert_eq!(first.row, target_row, "{label}");
+        assert_eq!(first.ulps, 1, "{label}");
+    }
+}
+
+/// Negative self-test 2: one flipped bit in one stored matrix *value*
+/// (injected through a shadowed registry builder) must be detected by the
+/// cross-format level with the format tag and the divergent row.
+#[test]
+fn oracle_detects_one_flipped_value_bit_via_registry() {
+    fn build_csr_with_flipped_value(
+        m: &Csr,
+        _opts: &EncodeOptions,
+    ) -> dtans::Result<Arc<dyn SpmvOperator>> {
+        let mut m = m.clone();
+        // Flip an exponent bit of the first stored value: a decisive,
+        // single-bit corruption of the operator's data.
+        let v = m.vals.first_mut().expect("nonempty fixture");
+        *v = f64::from_bits(v.to_bits() ^ (1 << 62));
+        Ok(Arc::new(m))
+    }
+
+    let mut m = banded(180, 2);
+    assign_values(&mut m, ValueDist::FewDistinct(5), &mut Xoshiro256::seeded(8));
+    let mut registry = FormatRegistry::builtin();
+    registry.register(FormatEntry { tag: "csr", build: build_csr_with_flipped_value });
+
+    let report =
+        oracle::check_matrix_with(&m, &OracleConfig::default(), &registry).unwrap();
+    assert!(!report.is_conformant(), "flipped value bit went undetected");
+    let cross: Vec<_> = report
+        .mismatches
+        .iter()
+        .filter(|mm| mm.kind == MismatchKind::CrossFormat)
+        .collect();
+    assert!(!cross.is_empty(), "no cross-format mismatch reported: {report}");
+    let mm = cross[0];
+    assert_eq!(mm.format, "csr");
+    assert_eq!(mm.parts, 0, "cross-format checks run serially");
+    // vals[0] lives in row 0 of a banded matrix.
+    assert_eq!(mm.row, 0);
+    assert!(mm.ulps > 0);
+    // The healthy formats must NOT be implicated.
+    assert!(cross.iter().all(|mm| mm.format == "csr"), "{report}");
+}
+
+/// The stress acceptance gate: a seeded multi-threaded mixed trace
+/// (≥ 4 threads, ≥ 200 requests, an eviction budget far below the
+/// working set) completes with bit-identical serial replay, summed
+/// metrics and zero leaked pins. Scale via `TESTKIT_SCALE`
+/// (small/medium/large; CI pins small).
+#[test]
+fn stress_trace_is_bit_identical_with_zero_leaked_pins() {
+    let scale = TestkitScale::from_env();
+    let cfg = StressConfig::for_scale(scale);
+    assert!(cfg.threads >= 4 && cfg.ops >= 200);
+    let report = run_stress(&cfg)
+        .unwrap_or_else(|e| panic!("stress run ({}) failed: {e}", scale.label()));
+    assert_eq!(report.ops_executed, cfg.ops);
+    assert!(report.spmv_checked > 0, "{report:?}");
+    assert!(report.spmm_checked > 0, "{report:?}");
+    assert!(report.solves_checked > 0, "{report:?}");
+    // The budget must actually have forced eviction/cold-reload traffic —
+    // otherwise the run proved nothing about the store under pressure.
+    assert!(report.evictions >= 1, "{}", report.metrics_report);
+    assert!(report.cold_loads >= 1, "{}", report.metrics_report);
+}

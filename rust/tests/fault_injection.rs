@@ -1,0 +1,241 @@
+//! Tier-1 fault injection: every corruption mode against the serializer
+//! maps to a typed `DtansError` (never a panic, never a silently wrong
+//! decode), and the store's failure paths — failed background persists,
+//! failed cold loads with concurrent deduped waiters — degrade exactly as
+//! documented, without poisoning retry paths.
+
+use dtans::coordinator::{Metrics, RoutePolicy};
+use dtans::format::csr_dtans::{CsrDtans, EncodeOptions};
+use dtans::format::serialize;
+use dtans::matrix::gen::structured::banded;
+use dtans::matrix::gen::{assign_values, ValueDist};
+use dtans::matrix::Csr;
+use dtans::store::{MatrixStore, StoreConfig};
+use dtans::testkit::faults::{corrupt, FailingDir, FaultMode, ALL_FAULT_MODES};
+use dtans::util::rng::Xoshiro256;
+use dtans::DtansError;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Barrier};
+
+fn sample_matrix(n: usize, seed: u64) -> Csr {
+    let mut m = banded(n, 3);
+    assign_values(&mut m, ValueDist::FewDistinct(6), &mut Xoshiro256::seeded(seed));
+    m
+}
+
+fn store_with(config: StoreConfig) -> MatrixStore {
+    MatrixStore::new(
+        config,
+        EncodeOptions::default(),
+        RoutePolicy { min_nnz: 1 << 8, max_size_ratio: 0.98 },
+        Arc::new(Metrics::default()),
+    )
+    .unwrap()
+}
+
+#[test]
+fn every_corruption_mode_maps_to_a_typed_error_never_a_panic() {
+    let enc = CsrDtans::encode(&sample_matrix(300, 1), &EncodeOptions::default()).unwrap();
+    let mut buf = Vec::new();
+    serialize::write_to(&enc, &mut buf).unwrap();
+    let mut seen_checksum = false;
+    let mut seen_truncated = false;
+    for mode in ALL_FAULT_MODES {
+        for seed in 0..40u64 {
+            let bad = corrupt(&buf, mode, seed);
+            assert_ne!(bad, buf, "{mode:?} seed {seed}: corruption was a no-op");
+            let err = match serialize::read_from(std::io::Cursor::new(&bad)) {
+                Err(e) => e,
+                Ok(_) => panic!("{mode:?} seed {seed}: corrupted container loaded"),
+            };
+            match (mode, &err) {
+                // Pure tail loss always surfaces as the truncation variant.
+                (FaultMode::Truncate, DtansError::Truncated(_)) => seen_truncated = true,
+                (FaultMode::Truncate, other) => {
+                    panic!("Truncate seed {seed}: expected Truncated, got {other}")
+                }
+                // Everything else must land in a container-family variant
+                // (which one depends on where the damage falls).
+                (
+                    _,
+                    DtansError::BadMagic { .. }
+                    | DtansError::UnsupportedVersion { .. }
+                    | DtansError::Truncated(_)
+                    | DtansError::ChecksumMismatch { .. }
+                    | DtansError::Container(_)
+                    | DtansError::InvalidParams(_)
+                    | DtansError::CorruptStream(_),
+                ) => {
+                    if matches!(err, DtansError::ChecksumMismatch { .. }) {
+                        seen_checksum = true;
+                    }
+                }
+                (_, other) => panic!("{mode:?} seed {seed}: unexpected variant {other}"),
+            }
+        }
+    }
+    // The sweep must have exercised both the checksum trailer and the
+    // truncation path (otherwise the modes are not doing their jobs).
+    assert!(seen_checksum, "no corruption reached the checksum check");
+    assert!(seen_truncated);
+}
+
+#[test]
+fn failed_persist_is_counted_and_matrix_stays_resident() {
+    let dir = FailingDir::new("persist").unwrap();
+    let store = store_with(StoreConfig {
+        cache_dir: Some(dir.root().to_path_buf()),
+        budget_bytes: Some(1), // would evict everything evictable
+        ..Default::default()
+    });
+    // Open the write-failure window before anything persists.
+    dir.break_writes().unwrap();
+    let id = store.register_csr("m", sample_matrix(400, 2)).unwrap();
+    store.flush(); // background persist runs -> fails
+    let metrics = store.metrics();
+    assert_eq!(metrics.persist_failures.load(Ordering::Relaxed), 1);
+    // Unpersisted means unevictable: the 1-byte budget must NOT shed it.
+    {
+        let _ = store.acquire(id).unwrap(); // unpin triggers an enforce pass
+    }
+    assert!(store.is_resident(id), "unpersisted matrix must stay resident");
+    assert!(!store.evict(id), "manual evict must refuse an unpersisted matrix");
+    assert_eq!(metrics.evictions.load(Ordering::Relaxed), 0);
+    // And it still serves correctly from RAM.
+    let pinned = store.acquire(id).unwrap();
+    assert_eq!(pinned.nrows, 400);
+    drop(pinned);
+
+    // Close the window: a later registration persists fine — the failure
+    // did not wedge the store.
+    dir.restore_writes().unwrap();
+    let id2 = store.register_csr("n", sample_matrix(500, 3)).unwrap();
+    store.flush();
+    assert_eq!(metrics.persist_failures.load(Ordering::Relaxed), 1, "no new failure");
+    {
+        let _ = store.acquire(id2).unwrap();
+    }
+    assert!(!store.is_resident(id2), "persisted matrix is evictable under a 1-byte budget");
+}
+
+#[test]
+fn failed_cold_load_reaches_all_deduped_waiters_without_poisoning_the_slot() {
+    let dir = FailingDir::new("coldload").unwrap();
+    let store = Arc::new(store_with(StoreConfig {
+        cache_dir: Some(dir.root().to_path_buf()),
+        budget_bytes: Some(1),
+        drop_csr: true,
+        loader_threads: 2,
+        ..Default::default()
+    }));
+    let m = sample_matrix(900, 4);
+    let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.01).sin()).collect();
+    let mut want = vec![0.0; m.nrows];
+    dtans::spmv::spmv_csr(&m, &x, &mut want).unwrap();
+    let id = store.register_csr("m", m).unwrap();
+    store.flush();
+    {
+        let _ = store.acquire(id).unwrap(); // unpin -> budget evicts
+    }
+    assert!(!store.is_resident(id));
+
+    // Damage the artifact, then race 6 threads into the cold load.
+    let snapshot = dir.snapshot().unwrap();
+    assert!(!snapshot.is_empty(), "artifact must exist on disk");
+    assert!(dir.corrupt_artifacts(FaultMode::Truncate, 7).unwrap() >= 1);
+    let barrier = Arc::new(Barrier::new(6));
+    let handles: Vec<_> = (0..6)
+        .map(|_| {
+            let store = Arc::clone(&store);
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                store.acquire(id).err().map(|e| e.to_string())
+            })
+        })
+        .collect();
+    for h in handles {
+        let err = h.join().unwrap();
+        let msg = err.expect("acquire of a corrupt artifact must fail");
+        assert!(
+            msg.contains("truncated") || msg.contains("load job"),
+            "unexpected error: {msg}"
+        );
+    }
+    // No pins may leak from the failed acquires, and no cold load was
+    // recorded as successful.
+    assert_eq!(store.pin_count(id), 0);
+    assert_eq!(store.metrics().cold_loads.load(Ordering::Relaxed), 0);
+
+    // Restore the artifact bytes: the slot was not poisoned — the next
+    // acquire cold-loads successfully and answers bit-correctly.
+    dir.restore(&snapshot).unwrap();
+    let pinned = store.acquire(id).unwrap();
+    let mut got = vec![0.0; pinned.nrows];
+    dtans::spmv::spmv_csr_dtans(&pinned.enc, &x, &mut got).unwrap();
+    dtans::util::propcheck::assert_close(&got, &want, 1e-12, 1e-9).unwrap();
+    assert!(store.metrics().cold_loads.load(Ordering::Relaxed) >= 1);
+}
+
+#[test]
+fn every_fault_mode_on_an_artifact_surfaces_a_typed_cold_load_error() {
+    // One eviction + one corrupt artifact per fault mode: the cold load
+    // must fail with a typed error every time, and restoring the bytes
+    // must always recover.
+    let dir = FailingDir::new("modes").unwrap();
+    let store = store_with(StoreConfig {
+        cache_dir: Some(dir.root().to_path_buf()),
+        budget_bytes: Some(1),
+        drop_csr: true,
+        ..Default::default()
+    });
+    let id = store.register_csr("m", sample_matrix(600, 5)).unwrap();
+    store.flush();
+    let snapshot = dir.snapshot().unwrap();
+    for (i, mode) in ALL_FAULT_MODES.into_iter().enumerate() {
+        {
+            let _ = store.acquire(id).unwrap(); // ensure resident, unpin -> evict
+        }
+        assert!(!store.is_resident(id), "{mode:?}");
+        assert!(dir.corrupt_artifacts(mode, 0x40 + i as u64).unwrap() >= 1);
+        assert!(store.acquire(id).is_err(), "{mode:?}: corrupt cold load succeeded");
+        assert_eq!(store.pin_count(id), 0, "{mode:?}");
+        dir.restore(&snapshot).unwrap();
+        let pinned = store.acquire(id).unwrap();
+        assert_eq!(pinned.nrows, 600, "{mode:?}");
+    }
+}
+
+#[test]
+fn artifact_cache_read_of_corrupt_file_falls_back_to_reencoding() {
+    // register_csr consults the cache; a corrupt cached artifact must be
+    // treated as a miss (re-encode) rather than an error or a wrong load.
+    let dir = FailingDir::new("cachehit").unwrap();
+    let config = StoreConfig {
+        cache_dir: Some(dir.root().to_path_buf()),
+        ..Default::default()
+    };
+    let m = sample_matrix(500, 6);
+    let store = store_with(config.clone());
+    store.register_csr("a", m.clone()).unwrap();
+    store.flush();
+    assert_eq!(store.metrics().store_misses.load(Ordering::Relaxed), 1);
+    assert!(dir.corrupt_artifacts(FaultMode::BitFlip, 9).unwrap() >= 1);
+
+    let store2 = store_with(config);
+    let id = store2.register_csr("a", m.clone()).unwrap();
+    assert_eq!(
+        store2.metrics().store_hits.load(Ordering::Relaxed),
+        0,
+        "corrupt artifact must not count as a cache hit"
+    );
+    assert_eq!(store2.metrics().store_misses.load(Ordering::Relaxed), 1);
+    // The re-encoded registration still answers correctly.
+    let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.02).cos()).collect();
+    let mut want = vec![0.0; m.nrows];
+    dtans::spmv::spmv_csr(&m, &x, &mut want).unwrap();
+    let pinned = store2.acquire(id).unwrap();
+    let mut got = vec![0.0; m.nrows];
+    dtans::spmv::spmv_csr_dtans(&pinned.enc, &x, &mut got).unwrap();
+    dtans::util::propcheck::assert_close(&got, &want, 1e-12, 1e-9).unwrap();
+}

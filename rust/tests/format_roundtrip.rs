@@ -61,6 +61,31 @@ fn corpus_serialization_roundtrips() {
 }
 
 #[test]
+fn corrupted_corpus_containers_always_fail_to_load() {
+    // The testkit corruption engine over real corpus encodes: every fault
+    // mode must surface as a load error (typed `DtansError`), never a
+    // panic and never a silently different decode — lossless means the
+    // container either roundtrips exactly or refuses.
+    use dtans::testkit::faults::{corrupt, ALL_FAULT_MODES};
+    let corpus = build_corpus(&CorpusScale { max_nnz: 2000, steps: 2 }, 11);
+    for (i, e) in corpus.iter().step_by(4).take(5).enumerate() {
+        let enc = CsrDtans::encode(&e.csr, &EncodeOptions::default()).unwrap();
+        let mut buf = Vec::new();
+        serialize::write_to(&enc, &mut buf).unwrap();
+        for mode in ALL_FAULT_MODES {
+            for seed in 0..6u64 {
+                let bad = corrupt(&buf, mode, seed.wrapping_add(i as u64) << 3);
+                assert!(
+                    serialize::read_from(std::io::Cursor::new(&bad)).is_err(),
+                    "{}: {mode:?} seed {seed} loaded successfully",
+                    e.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn size_report_components_are_consistent() {
     let corpus = build_corpus(&CorpusScale { max_nnz: 20_000, steps: 3 }, 3);
     for e in &corpus {

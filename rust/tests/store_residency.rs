@@ -5,10 +5,12 @@
 //! persisted matrix must hit the artifact cache and skip encoding.
 
 use dtans::coordinator::{RoutePolicy, ServiceConfig, SpmvService};
-use dtans::matrix::gen::structured::{banded, powerlaw_rows};
+use dtans::matrix::gen::structured::banded;
 use dtans::matrix::gen::{assign_values, ValueDist};
-use dtans::matrix::Csr;
 use dtans::store::StoreConfig;
+// The mixed fixture set lives in the testkit zoo (shared with the stress
+// driver) instead of being duplicated inline here.
+use dtans::testkit::zoo::mixed_zoo;
 use dtans::util::rng::Xoshiro256;
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
@@ -18,26 +20,6 @@ fn temp_dir(tag: &str) -> PathBuf {
     std::env::temp_dir().join(format!("dtans_it_store_{tag}_{}", std::process::id()))
 }
 
-/// A mixed zoo of ≥ 8 matrices: banded and power-law, compressible and
-/// not, so both router outcomes (CSR and CSR-dtANS) are exercised.
-fn zoo() -> Vec<Csr> {
-    let mut out = Vec::new();
-    for i in 0..5u64 {
-        let mut m = banded(500 + 200 * i as usize, 2 + (i as usize % 3));
-        assign_values(&mut m, ValueDist::FewDistinct(4 + i as usize), &mut Xoshiro256::seeded(i));
-        out.push(m);
-    }
-    for i in 0..4u64 {
-        let mut rng = Xoshiro256::seeded(100 + i);
-        let mut m = powerlaw_rows(400 + 100 * i as usize, 5.0, 1.2, &mut rng);
-        // Random values resist compression -> some matrices stay CSR.
-        let dist = if i % 2 == 0 { ValueDist::Random } else { ValueDist::Quantized(16) };
-        assign_values(&mut m, dist, &mut rng);
-        out.push(m);
-    }
-    out
-}
-
 fn request_vector(ncols: usize, seed: usize) -> Vec<f64> {
     (0..ncols).map(|j| ((seed * 31 + j) as f64 * 0.001).sin()).collect()
 }
@@ -45,7 +27,7 @@ fn request_vector(ncols: usize, seed: usize) -> Vec<f64> {
 #[test]
 fn budgeted_service_is_bit_identical_to_unbudgeted() {
     let dir = temp_dir("bitident");
-    let mats = zoo();
+    let mats = mixed_zoo();
     assert!(mats.len() >= 8);
     let policy = RoutePolicy { min_nnz: 1 << 9, max_size_ratio: 0.95 };
 
