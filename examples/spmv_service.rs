@@ -69,7 +69,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         let (_, id) = ids[i % 3];
         let n = sizes[i % 3];
         let x: Vec<f64> = (0..n).map(|j| ((i + j) as f64 * 0.01).sin()).collect();
-        pendings.push((i, svc.submit(id, x)));
+        // `submit` now returns a typed admission result: with the default
+        // 1024-deep queue this closed burst never sheds, so an error here
+        // is a real failure worth surfacing.
+        pendings.push((i, svc.submit(id, x)?));
     }
     for (_, p) in pendings {
         p.wait()?;
@@ -77,6 +80,18 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let dt = t0.elapsed().as_secs_f64();
     println!("served 120 requests in {:.2}s ({:.0} req/s)", dt, 120.0 / dt);
     println!("metrics: {}", svc.metrics.report());
+    {
+        use std::sync::atomic::Ordering;
+        let cb = svc.metrics.coalesced_batches.load(Ordering::Relaxed);
+        let cr = svc.metrics.coalesced_requests.load(Ordering::Relaxed);
+        if cb > 0 {
+            println!(
+                "coalescing: {cr} requests served by {cb} SpMM batch(es) \
+                 ({:.1} multiplies per decode)",
+                cr as f64 / cb as f64
+            );
+        }
+    }
     let stats = svc.store().stats();
     println!(
         "store: {} registered, {} resident ({} bytes of {:?} budget) in {}",

@@ -20,6 +20,10 @@
 //!    stack under budget pressure via the testkit's seeded mixed trace
 //!    with its serial-replay oracle (`stress_driver`, scale via
 //!    `TESTKIT_SCALE`);
+//!  * serving bench: latency-vs-offered-load curves for the admission-
+//!    controlled core under open-loop same-matrix traffic, demonstrating
+//!    cross-request coalescing at saturation (`serving_saturation`,
+//!    reporting to `results/BENCH_serving.json`);
 //!  * one end-to-end bench per paper table/figure (regenerating them at
 //!    bench scale): fig4, fig6+tab1, fig7/tab2, fig8/tab3, fig9, ablate.
 //!
@@ -630,6 +634,133 @@ fn bench_stress_driver(filter: &Option<String>, quick: bool) {
     );
 }
 
+/// Latency-vs-offered-load curves for the admission-controlled serving
+/// core under open-loop same-matrix traffic — the coalescing payoff
+/// case. A pacer submits requests at a fixed offered rate regardless of
+/// completions; at each load level we record completion/shed counts,
+/// p50/p99 latency, and the engine batch count. The headline number at
+/// saturation is `batches < requests`: concurrent same-matrix requests
+/// reaching the engine as coalesced SpMM batches (one decode amortized
+/// across the batch). Emits `results/BENCH_serving.json`.
+fn bench_serving_saturation(filter: &Option<String>, quick: bool) {
+    use dtans::coordinator::admission::AdmissionConfig;
+    use dtans::coordinator::{RoutePolicy, ServiceConfig, SpmvService};
+    use std::sync::atomic::Ordering;
+    use std::time::{Duration, Instant};
+
+    if !should_run(filter, "serving_saturation") {
+        return;
+    }
+    let n = if quick { 2000 } else { 6000 };
+    let reqs_per_level = if quick { 120 } else { 400 };
+    let mut m = banded(n, 2);
+    assign_values(&mut m, ValueDist::FewDistinct(8), &mut Xoshiro256::seeded(77));
+    let x: Vec<f64> = (0..m.ncols).map(|j| (j as f64 * 0.01).sin()).collect();
+
+    let mk_service = || {
+        SpmvService::start(ServiceConfig {
+            workers: 2,
+            max_batch: 32,
+            // Fixed(2): the SpMM fast path triggers deterministically for
+            // any coalesced batch, independent of host core count.
+            par: ParStrategy::Fixed(2),
+            policy: RoutePolicy { min_nnz: 1 << 10, max_size_ratio: 0.95 },
+            admission: AdmissionConfig {
+                queue_depth: 256,
+                // Linger briefly so an open-loop burst lands in one
+                // decode-amortized batch (see docs/SERVING.md).
+                gather_window: Duration::from_micros(200),
+                ..Default::default()
+            },
+            ..Default::default()
+        })
+    };
+
+    // Calibrate: closed-loop sequential rate = one request's full
+    // round-trip cost; offered-load levels are multiples of it.
+    let svc = mk_service();
+    let id = svc.register("sat", m.clone()).unwrap();
+    let cal = 30;
+    let t0 = Instant::now();
+    for _ in 0..cal {
+        svc.spmv(id, x.clone()).unwrap();
+    }
+    let base_rps = cal as f64 / t0.elapsed().as_secs_f64();
+    drop(svc);
+
+    let mut rows = Vec::new();
+    for mult in [0.5, 1.0, 2.0, 4.0, 8.0] {
+        let offered_rps = base_rps * mult;
+        let interval = Duration::from_secs_f64(1.0 / offered_rps);
+        let svc = mk_service();
+        let id = svc.register("sat", m.clone()).unwrap();
+        svc.spmv(id, x.clone()).unwrap(); // warm the operator
+        let warm_batches = svc.metrics.batches.load(Ordering::Relaxed);
+
+        // Open-loop pacer: submit on schedule, never wait inline.
+        let start = Instant::now();
+        let mut pendings = Vec::with_capacity(reqs_per_level);
+        for i in 0..reqs_per_level {
+            let due = start + interval * i as u32;
+            let now = Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+            if let Ok(p) = svc.submit(id, x.clone()) {
+                pendings.push(p);
+            } // Err = shed under overload; counted by the service.
+        }
+        let admitted = pendings.len();
+        for p in pendings {
+            p.wait().unwrap();
+        }
+        let wall = start.elapsed().as_secs_f64();
+
+        let mmetrics = &svc.metrics;
+        let shed = mmetrics.shed.load(Ordering::Relaxed);
+        let batches = mmetrics.batches.load(Ordering::Relaxed) - warm_batches;
+        let coalesced_b = mmetrics.coalesced_batches.load(Ordering::Relaxed);
+        let coalesced_r = mmetrics.coalesced_requests.load(Ordering::Relaxed);
+        let lat = mmetrics.latency_summary();
+        println!(
+            "serving_saturation/x{mult:<4} offered {offered_rps:>7.0} req/s: \
+             {admitted}/{reqs_per_level} admitted ({shed} shed), \
+             {batches} engine batches, p50 {}µs p99 {}µs",
+            lat.p50_us, lat.p99_us
+        );
+        rows.push(format!(
+            "    {{\"offered_mult\": {mult}, \"offered_rps\": {offered_rps:.1}, \
+             \"requests\": {reqs_per_level}, \"admitted\": {admitted}, \"shed\": {shed}, \
+             \"engine_batches\": {batches}, \"coalesced_batches\": {coalesced_b}, \
+             \"coalesced_requests\": {coalesced_r}, \
+             \"p50_us\": {}, \"p99_us\": {}, \"wall_s\": {wall:.4}}}",
+            lat.p50_us, lat.p99_us
+        ));
+        // The acceptance claim: past saturation, same-matrix requests
+        // coalesce — strictly fewer engine batches than admitted
+        // requests.
+        if mult >= 4.0 && admitted > 1 {
+            assert!(
+                (batches as usize) < admitted,
+                "no coalescing at x{mult}: {batches} batches for {admitted} requests"
+            );
+        }
+    }
+
+    let outdir = Path::new("results");
+    let _ = std::fs::create_dir_all(outdir);
+    let json = format!(
+        "{{\n  \"bench\": \"serving_saturation\",\n  \"quick\": {quick},\n  \
+         \"matrix_nnz\": {},\n  \"closed_loop_base_rps\": {base_rps:.1},\n  \
+         \"queue_depth\": 256,\n  \"gather_window_us\": 200,\n  \"levels\": [\n{}\n  ]\n}}\n",
+        m.nnz(),
+        rows.join(",\n"),
+    );
+    let path = outdir.join("BENCH_serving.json");
+    std::fs::write(&path, json).expect("write BENCH_serving.json");
+    println!("serving_saturation/report    wrote {}", path.display());
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
     let quick = args.iter().any(|a| a == "--quick");
@@ -644,6 +775,7 @@ fn main() {
     bench_solver_iterations(&filter, quick);
     bench_store_coldstart(&filter, quick);
     bench_stress_driver(&filter, quick);
+    bench_serving_saturation(&filter, quick);
     bench_large_banded(&filter, quick);
     bench_experiments(&filter, quick);
     println!("done.");

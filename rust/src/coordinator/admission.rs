@@ -1,0 +1,531 @@
+//! Admission control for the serving core: a bounded, priority-laned
+//! request queue with per-tenant token-bucket quotas and cross-request
+//! coalescing.
+//!
+//! The paper's economics — one dtANS decode amortized over many
+//! multiplies — only pay off in serving if concurrent requests for the
+//! same matrix actually reach the engine as one SpMM batch. The old
+//! dispatcher batched only *consecutive* queued requests over an
+//! unbounded mpsc channel; this module replaces that front half with an
+//! [`AdmissionQueue`]:
+//!
+//! * **Bounded depth** — [`AdmissionQueue::push`] rejects with a typed
+//!   [`DtansError::Overloaded`] once [`AdmissionConfig::queue_depth`]
+//!   requests are waiting, instead of growing without bound. Shedding at
+//!   submit time is the backpressure contract: the caller knows
+//!   immediately, and no shed request ever holds memory or a store pin.
+//! * **Priority lanes** — three strict-priority FIFO lanes
+//!   ([`Priority::High`]/[`Priority::Normal`]/[`Priority::Low`]).
+//!   Dispatch always starts from the oldest request of the highest
+//!   non-empty lane; within a lane, order is FIFO.
+//! * **Per-tenant quotas** — optional token buckets keyed by
+//!   [`SubmitOptions::tenant`]: each admitted request spends one token,
+//!   buckets refill at [`QuotaConfig::refill_per_sec`] up to
+//!   [`QuotaConfig::burst`]. A tenant with an empty bucket is shed with
+//!   [`DtansError::QuotaExceeded`]; tenants without a configured bucket
+//!   (and tenant-less requests) are never quota-limited.
+//! * **Cross-request coalescing** — [`AdmissionQueue::take_batch`]
+//!   gathers **all** queued requests targeting the dispatch target's
+//!   matrix, across every lane and regardless of interleaving — not just
+//!   a consecutive run. An optional [`AdmissionConfig::gather_window`]
+//!   lets the dispatcher linger briefly so a same-matrix burst arriving
+//!   over a few microseconds still lands in one decode-amortized SpMM
+//!   batch.
+//!
+//! Deadlines ([`SubmitOptions::deadline`]) are *carried* here but
+//! deliberately **not** checked at push: the single expiry point is the
+//! dispatcher, immediately before execution, so "expired requests are
+//! rejected before execution" is one rule with one clock reading (and a
+//! request whose deadline is `Instant::now()` at submit is *guaranteed*
+//! to be expired at any later dispatch — the property the deterministic
+//! test suite builds on).
+//!
+//! The queue also exposes a **pause/resume gate**
+//! ([`AdmissionQueue::pause`]): while paused, pushes are admitted but
+//! `take_batch` blocks, so a test can stage an exact queue state and then
+//! release the dispatcher — no sleeps-as-synchronization anywhere.
+//! [`AdmissionQueue::close`] overrides the gate: a closing service drains
+//! whatever is queued (paused or not) and then `take_batch` returns
+//! `None`.
+
+use crate::util::error::{DtansError, Result};
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Request priority: strict ordering between lanes, FIFO within a lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Priority {
+    /// Dispatched before everything else.
+    High,
+    /// The default lane.
+    #[default]
+    Normal,
+    /// Dispatched only when the other lanes are empty.
+    Low,
+}
+
+impl Priority {
+    /// Lane index (0 = highest).
+    fn lane(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+}
+
+/// Per-request admission options; `Default` is "no deadline, normal
+/// priority, no tenant" — exactly the old `submit` behavior.
+#[derive(Debug, Clone, Default)]
+pub struct SubmitOptions {
+    /// Reject (with [`DtansError::DeadlineExceeded`]) any request whose
+    /// deadline has passed when the dispatcher picks it up — checked
+    /// once, immediately before execution, never at submit.
+    pub deadline: Option<Instant>,
+    /// Scheduling lane.
+    pub priority: Priority,
+    /// Tenant key for quota accounting; `None` bypasses quotas.
+    pub tenant: Option<String>,
+}
+
+/// Token-bucket quota for one tenant.
+#[derive(Debug, Clone, Copy)]
+pub struct QuotaConfig {
+    /// Bucket capacity: the largest burst admitted at once. Buckets
+    /// start full.
+    pub burst: f64,
+    /// Sustained refill rate, tokens per second. `0.0` makes the bucket
+    /// a fixed budget of `burst` admissions — the deterministic setting
+    /// the quota tests use.
+    pub refill_per_sec: f64,
+}
+
+/// Admission-control knobs for the serving core.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Maximum queued (admitted, not yet dispatched) requests before
+    /// [`AdmissionQueue::push`] sheds with [`DtansError::Overloaded`].
+    pub queue_depth: usize,
+    /// How long the dispatcher lingers after picking a dispatch target,
+    /// gathering late-arriving same-matrix requests into the batch.
+    /// `Duration::ZERO` (the default) dispatches immediately; a few
+    /// hundred microseconds trades that much added latency for more
+    /// coalescing under bursty open-loop load.
+    pub gather_window: Duration,
+    /// Per-tenant token buckets, keyed by [`SubmitOptions::tenant`].
+    /// Tenants not listed here are not quota-limited.
+    pub quotas: Vec<(String, QuotaConfig)>,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            queue_depth: 1024,
+            gather_window: Duration::ZERO,
+            quotas: Vec::new(),
+        }
+    }
+}
+
+/// One admitted request, as handed to the dispatcher.
+#[derive(Debug)]
+pub struct Admitted<T> {
+    /// Target matrix id — the coalescing key.
+    pub matrix: u64,
+    /// Deadline carried from [`SubmitOptions`]; the dispatcher rejects
+    /// the request if `deadline <= now` at dispatch time.
+    pub deadline: Option<Instant>,
+    /// Scheduling lane the request was admitted into.
+    pub priority: Priority,
+    /// The caller's payload (input vector + response channel, for the
+    /// service).
+    pub payload: T,
+}
+
+/// A tenant's bucket: current tokens and the last refill instant.
+#[derive(Debug)]
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+    cfg: QuotaConfig,
+}
+
+impl Bucket {
+    /// Spend one token if available, refilling lazily first.
+    fn admit(&mut self, now: Instant) -> bool {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.cfg.refill_per_sec).min(self.cfg.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Everything behind the mutex: the three lanes, the quota buckets, and
+/// the gate/lifecycle flags.
+#[derive(Debug)]
+struct State<T> {
+    lanes: [VecDeque<Admitted<T>>; 3],
+    len: usize,
+    closed: bool,
+    paused: bool,
+    buckets: HashMap<String, Bucket>,
+}
+
+/// The bounded, priority-laned admission queue (see the [module
+/// docs](self)). Generic over the payload so the ordering/coalescing
+/// logic is directly unit-testable without spinning up a service.
+#[derive(Debug)]
+pub struct AdmissionQueue<T> {
+    queue_depth: usize,
+    gather_window: Duration,
+    state: Mutex<State<T>>,
+    cv: Condvar,
+}
+
+impl<T> AdmissionQueue<T> {
+    /// Build a queue from `cfg`; quota buckets start full.
+    pub fn new(cfg: &AdmissionConfig) -> AdmissionQueue<T> {
+        let now = Instant::now();
+        let buckets = cfg
+            .quotas
+            .iter()
+            .map(|(tenant, q)| {
+                (tenant.clone(), Bucket { tokens: q.burst, last: now, cfg: *q })
+            })
+            .collect();
+        AdmissionQueue {
+            queue_depth: cfg.queue_depth,
+            gather_window: cfg.gather_window,
+            state: Mutex::new(State {
+                lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+                len: 0,
+                closed: false,
+                paused: false,
+                buckets,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Admit one request, or shed it with a typed error:
+    /// [`DtansError::QueueClosed`] after [`AdmissionQueue::close`],
+    /// [`DtansError::Overloaded`] at capacity,
+    /// [`DtansError::QuotaExceeded`] on an empty tenant bucket (checked
+    /// in that order, so a full queue never drains quota tokens).
+    /// Returns the queue depth *including* the new request.
+    pub fn push(&self, matrix: u64, opts: &SubmitOptions, payload: T) -> Result<usize> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return Err(DtansError::QueueClosed);
+        }
+        if s.len >= self.queue_depth {
+            return Err(DtansError::Overloaded { queue_depth: self.queue_depth });
+        }
+        if let Some(tenant) = &opts.tenant {
+            if let Some(b) = s.buckets.get_mut(tenant) {
+                if !b.admit(Instant::now()) {
+                    return Err(DtansError::QuotaExceeded { tenant: tenant.clone() });
+                }
+            }
+        }
+        s.lanes[opts.priority.lane()].push_back(Admitted {
+            matrix,
+            deadline: opts.deadline,
+            priority: opts.priority,
+            payload,
+        });
+        s.len += 1;
+        let depth = s.len;
+        drop(s);
+        self.cv.notify_all();
+        Ok(depth)
+    }
+
+    /// Block until work is available (or the queue closes empty), then
+    /// return one coalesced batch: the oldest request of the highest
+    /// non-empty lane plus **every** other queued request for the same
+    /// matrix, across all lanes, up to `max_batch`. If a gather window
+    /// is configured and the batch is not full, lingers up to the window
+    /// collecting late same-matrix arrivals. Returns `None` only when
+    /// the queue is closed and fully drained.
+    ///
+    /// While [paused](AdmissionQueue::pause), blocks even if work is
+    /// queued — unless the queue has closed, which always drains.
+    pub fn take_batch(&self, max_batch: usize) -> Option<Vec<Admitted<T>>> {
+        let max_batch = max_batch.max(1);
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if s.len > 0 && (!s.paused || s.closed) {
+                break;
+            }
+            if s.closed {
+                return None; // closed and drained
+            }
+            s = self.cv.wait(s).unwrap();
+        }
+        let target = s
+            .lanes
+            .iter()
+            .find_map(|lane| lane.front().map(|r| r.matrix))
+            .expect("len > 0 implies a non-empty lane");
+        let mut batch = Vec::new();
+        Self::extract(&mut s, target, max_batch, &mut batch);
+        if self.gather_window > Duration::ZERO {
+            let until = Instant::now() + self.gather_window;
+            while !s.closed && batch.len() < max_batch {
+                let now = Instant::now();
+                if now >= until {
+                    break;
+                }
+                let (guard, _) = self.cv.wait_timeout(s, until - now).unwrap();
+                s = guard;
+                Self::extract(&mut s, target, max_batch, &mut batch);
+            }
+        }
+        Some(batch)
+    }
+
+    /// Move every queued request for `target` (highest lane first, FIFO
+    /// within a lane) into `out`, up to `max_batch` total.
+    fn extract(s: &mut State<T>, target: u64, max_batch: usize, out: &mut Vec<Admitted<T>>) {
+        let before = out.len();
+        for lane in s.lanes.iter_mut() {
+            if out.len() >= max_batch {
+                break;
+            }
+            let mut keep = VecDeque::with_capacity(lane.len());
+            while let Some(r) = lane.pop_front() {
+                if r.matrix == target && out.len() < max_batch {
+                    out.push(r);
+                } else {
+                    keep.push_back(r);
+                }
+            }
+            *lane = keep;
+        }
+        s.len -= out.len() - before;
+    }
+
+    /// Gate the dispatcher: subsequent [`AdmissionQueue::take_batch`]
+    /// calls block (submissions are still admitted) until
+    /// [`AdmissionQueue::resume`]. The deterministic test hook — stage an
+    /// exact queue state, then release it in one step.
+    pub fn pause(&self) {
+        self.state.lock().unwrap().paused = true;
+        self.cv.notify_all();
+    }
+
+    /// Release the [`AdmissionQueue::pause`] gate.
+    pub fn resume(&self) {
+        self.state.lock().unwrap().paused = false;
+        self.cv.notify_all();
+    }
+
+    /// Close the queue: subsequent pushes fail with
+    /// [`DtansError::QueueClosed`]; `take_batch` drains what is queued
+    /// (even while paused) and then returns `None`.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Requests currently queued (admitted, not yet dispatched).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().len
+    }
+
+    /// Whether the queue is currently empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(depth: usize) -> AdmissionConfig {
+        AdmissionConfig { queue_depth: depth, ..Default::default() }
+    }
+
+    fn push_ok(q: &AdmissionQueue<u32>, matrix: u64, opts: &SubmitOptions, payload: u32) {
+        q.push(matrix, opts, payload).unwrap();
+    }
+
+    #[test]
+    fn bounded_depth_sheds_with_typed_overloaded() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(&cfg(3));
+        for i in 0..3 {
+            assert_eq!(q.push(7, &SubmitOptions::default(), i).unwrap(), i as usize + 1);
+        }
+        match q.push(7, &SubmitOptions::default(), 99) {
+            Err(DtansError::Overloaded { queue_depth: 3 }) => {}
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert_eq!(q.len(), 3);
+        // Draining frees capacity again.
+        let batch = q.take_batch(16).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(q.push(7, &SubmitOptions::default(), 4).unwrap(), 1);
+    }
+
+    #[test]
+    fn strict_priority_then_fifo_within_lane() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(&cfg(16));
+        let with = |p: Priority| SubmitOptions { priority: p, ..Default::default() };
+        // Distinct matrices so every take_batch returns exactly one
+        // request and the pop order is fully observable.
+        push_ok(&q, 0, &with(Priority::Low), 0);
+        push_ok(&q, 1, &with(Priority::High), 1);
+        push_ok(&q, 2, &with(Priority::Normal), 2);
+        push_ok(&q, 3, &with(Priority::High), 3);
+        push_ok(&q, 4, &with(Priority::Low), 4);
+        push_ok(&q, 5, &with(Priority::Normal), 5);
+        let mut order = Vec::new();
+        for _ in 0..6 {
+            let batch = q.take_batch(16).unwrap();
+            assert_eq!(batch.len(), 1);
+            order.push(batch[0].payload);
+        }
+        assert_eq!(order, vec![1, 3, 2, 5, 0, 4]);
+    }
+
+    #[test]
+    fn coalesces_same_matrix_across_lanes_and_interleavings() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(&cfg(16));
+        let with = |p: Priority| SubmitOptions { priority: p, ..Default::default() };
+        // A and B interleaved, A spread over all three lanes.
+        push_ok(&q, 10, &with(Priority::Low), 0);
+        push_ok(&q, 20, &with(Priority::Normal), 1);
+        push_ok(&q, 10, &with(Priority::Normal), 2);
+        push_ok(&q, 20, &with(Priority::Normal), 3);
+        push_ok(&q, 10, &with(Priority::High), 4);
+        // Highest non-empty lane fronts matrix 10 -> the whole batch is
+        // matrix 10, gathered across lanes in priority-then-FIFO order.
+        let batch = q.take_batch(16).unwrap();
+        assert_eq!(batch.iter().map(|r| r.matrix).collect::<Vec<_>>(), vec![10, 10, 10]);
+        assert_eq!(batch.iter().map(|r| r.payload).collect::<Vec<_>>(), vec![4, 2, 0]);
+        // The other matrix's requests kept their FIFO order.
+        let batch = q.take_batch(16).unwrap();
+        assert_eq!(batch.iter().map(|r| r.payload).collect::<Vec<_>>(), vec![1, 3]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn max_batch_caps_a_coalesced_gather() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(&cfg(16));
+        for i in 0..5 {
+            push_ok(&q, 1, &SubmitOptions::default(), i);
+        }
+        let batch = q.take_batch(3).unwrap();
+        assert_eq!(batch.iter().map(|r| r.payload).collect::<Vec<_>>(), vec![0, 1, 2]);
+        let batch = q.take_batch(3).unwrap();
+        assert_eq!(batch.iter().map(|r| r.payload).collect::<Vec<_>>(), vec![3, 4]);
+    }
+
+    #[test]
+    fn quota_bucket_is_a_fixed_budget_at_zero_refill() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(&AdmissionConfig {
+            queue_depth: 16,
+            quotas: vec![("acme".into(), QuotaConfig { burst: 2.0, refill_per_sec: 0.0 })],
+            ..Default::default()
+        });
+        let acme = SubmitOptions { tenant: Some("acme".into()), ..Default::default() };
+        q.push(1, &acme, 0).unwrap();
+        q.push(1, &acme, 1).unwrap();
+        match q.push(1, &acme, 2) {
+            Err(DtansError::QuotaExceeded { tenant }) => assert_eq!(tenant, "acme"),
+            other => panic!("expected QuotaExceeded, got {other:?}"),
+        }
+        // Unconfigured tenants and tenant-less requests are unlimited.
+        let other = SubmitOptions { tenant: Some("other".into()), ..Default::default() };
+        q.push(1, &other, 3).unwrap();
+        q.push(1, &SubmitOptions::default(), 4).unwrap();
+        assert_eq!(q.len(), 4);
+    }
+
+    #[test]
+    fn closed_queue_rejects_pushes_and_drains_batches() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(&cfg(8));
+        push_ok(&q, 1, &SubmitOptions::default(), 0);
+        push_ok(&q, 2, &SubmitOptions::default(), 1);
+        q.close();
+        assert!(matches!(
+            q.push(1, &SubmitOptions::default(), 9),
+            Err(DtansError::QueueClosed)
+        ));
+        // Drain continues after close — even under a pause gate.
+        q.pause();
+        assert_eq!(q.take_batch(8).unwrap().len(), 1);
+        assert_eq!(q.take_batch(8).unwrap().len(), 1);
+        assert!(q.take_batch(8).is_none());
+        assert!(q.take_batch(8).is_none());
+    }
+
+    #[test]
+    fn pause_gates_take_batch_but_not_push() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        let q: Arc<AdmissionQueue<u32>> = Arc::new(AdmissionQueue::new(&cfg(8)));
+        q.pause();
+        push_ok(&q, 1, &SubmitOptions::default(), 0);
+        push_ok(&q, 1, &SubmitOptions::default(), 1);
+        assert_eq!(q.len(), 2);
+        let took = Arc::new(AtomicBool::new(false));
+        let h = {
+            let q = Arc::clone(&q);
+            let took = Arc::clone(&took);
+            std::thread::spawn(move || {
+                let batch = q.take_batch(8).unwrap();
+                took.store(true, Ordering::SeqCst);
+                batch.len()
+            })
+        };
+        // The taker is blocked on the gate; resuming releases exactly
+        // the staged state as one coalesced batch. (No sleep needed for
+        // correctness: `took` may only flip after resume, which is what
+        // we assert via the join result; the gate itself is what makes
+        // the batch contents deterministic.)
+        assert!(!took.load(Ordering::SeqCst) || q.len() == 0);
+        q.resume();
+        assert_eq!(h.join().unwrap(), 2);
+        assert!(took.load(Ordering::SeqCst));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn gather_window_collects_late_same_matrix_arrivals() {
+        use std::sync::Arc;
+        let q: Arc<AdmissionQueue<u32>> = Arc::new(AdmissionQueue::new(&AdmissionConfig {
+            queue_depth: 16,
+            gather_window: Duration::from_millis(200),
+            ..Default::default()
+        }));
+        push_ok(&q, 1, &SubmitOptions::default(), 0);
+        let pusher = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                // Lands inside the taker's window; the push itself
+                // signals the condvar, so the window picks it up without
+                // polling. (This is an upper-bound race only: if the
+                // window somehow elapsed first, the assert below catches
+                // it by count.)
+                q.push(1, &SubmitOptions::default(), 1).unwrap();
+            })
+        };
+        let batch = q.take_batch(16).unwrap();
+        pusher.join().unwrap();
+        // Either the push beat the gather (2) or — on a pathologically
+        // slow machine — missed a 200ms window (1, still correct: the
+        // request is simply in the next batch).
+        assert!(!batch.is_empty());
+        assert_eq!(batch.len() + q.len(), 2);
+    }
+}

@@ -52,8 +52,31 @@ pub struct Metrics {
     pub completed: AtomicU64,
     /// Requests failed.
     pub failed: AtomicU64,
+    /// Requests shed at admission (queue full, tenant quota, or closed
+    /// queue) — they were `submitted` but never queued, so the
+    /// conservation identity is
+    /// `completed + failed + shed + expired == submitted`.
+    pub shed: AtomicU64,
+    /// Subset of `shed`: rejections from a per-tenant token-bucket
+    /// quota.
+    pub quota_rejected: AtomicU64,
+    /// Requests whose deadline elapsed before execution; rejected at
+    /// dispatch with `DeadlineExceeded`, never run.
+    pub expired: AtomicU64,
     /// Batches executed.
     pub batches: AtomicU64,
+    /// Multi-request same-matrix batches that took the coalesced SpMM
+    /// fast path (one `run_multi` engine call for the whole batch).
+    pub coalesced_batches: AtomicU64,
+    /// Requests served through those coalesced batches
+    /// (`coalesced_requests / coalesced_batches` = mean amortization
+    /// factor).
+    pub coalesced_requests: AtomicU64,
+    /// Gauge: admission-queue depth after the most recent submit or
+    /// dispatch.
+    pub queue_depth: AtomicU64,
+    /// High-water mark of the admission queue over the service's life.
+    pub queue_depth_peak: AtomicU64,
     /// Registrations served from the on-disk artifact cache (encode
     /// skipped).
     pub store_hits: AtomicU64,
@@ -163,6 +186,26 @@ pub struct SolverSummary {
 }
 
 impl Metrics {
+    /// Record one request shed at admission. `quota` marks a per-tenant
+    /// quota rejection (counted in both `shed` and `quota_rejected`).
+    pub fn record_shed(&self, quota: bool) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        if quota {
+            self.quota_rejected.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one request rejected at dispatch for an elapsed deadline.
+    pub fn record_expired(&self) {
+        self.expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Update the queue-depth gauge and its high-water mark.
+    pub fn note_queue_depth(&self, depth: u64) {
+        self.queue_depth.store(depth, Ordering::Relaxed);
+        self.queue_depth_peak.fetch_max(depth, Ordering::Relaxed);
+    }
+
     /// Record one completed request's latency.
     pub fn record_latency(&self, micros: u64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
@@ -268,13 +311,21 @@ impl Metrics {
         let s = self.latency_summary();
         let c = self.cold_load_summary();
         let mut out = format!(
-            "submitted={} completed={} failed={} batches={} p50={}µs p99={}µs max={}µs \
+            "submitted={} completed={} failed={} shed={} expired={} batches={} \
+             coalesced_batches={} coalesced_requests={} queue_depth={} queue_peak={} \
+             p50={}µs p99={}µs max={}µs \
              store_hits={} store_misses={} evictions={} persist_failures={} cold_loads={} \
              acquires={} cold_p50={}µs cold_p99={}µs",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
+            self.shed.load(Ordering::Relaxed),
+            self.expired.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
+            self.coalesced_batches.load(Ordering::Relaxed),
+            self.coalesced_requests.load(Ordering::Relaxed),
+            self.queue_depth.load(Ordering::Relaxed),
+            self.queue_depth_peak.load(Ordering::Relaxed),
             s.p50_us,
             s.p99_us,
             s.max_us,
@@ -406,6 +457,39 @@ mod tests {
         assert_eq!(csr.latency.max_us, 12_000);
         let report = m.report();
         assert!(report.contains("solver: solves=3 converged=1 diverged=1"), "{report}");
+    }
+
+    #[test]
+    fn admission_counters_report_and_conserve() {
+        let m = Metrics::default();
+        // 7 submitted: 4 completed, 1 shed on depth, 1 shed on quota,
+        // 1 expired at dispatch.
+        for _ in 0..7 {
+            m.submitted.fetch_add(1, Ordering::Relaxed);
+        }
+        for i in 0..4 {
+            m.record_latency(10 + i);
+        }
+        m.record_shed(false);
+        m.record_shed(true);
+        m.record_expired();
+        m.note_queue_depth(5);
+        m.note_queue_depth(2);
+        let (submitted, completed, failed, shed, expired) = (
+            m.submitted.load(Ordering::Relaxed),
+            m.completed.load(Ordering::Relaxed),
+            m.failed.load(Ordering::Relaxed),
+            m.shed.load(Ordering::Relaxed),
+            m.expired.load(Ordering::Relaxed),
+        );
+        assert_eq!(completed + failed + shed + expired, submitted);
+        assert_eq!(m.quota_rejected.load(Ordering::Relaxed), 1);
+        // Gauge holds the latest value; the peak holds the maximum.
+        assert_eq!(m.queue_depth.load(Ordering::Relaxed), 2);
+        assert_eq!(m.queue_depth_peak.load(Ordering::Relaxed), 5);
+        let report = m.report();
+        assert!(report.contains("shed=2 expired=1"), "{report}");
+        assert!(report.contains("queue_depth=2 queue_peak=5"), "{report}");
     }
 
     #[test]

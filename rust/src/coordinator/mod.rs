@@ -1,15 +1,20 @@
-//! Layer-3 coordinator: a batching SpMVM service with per-matrix format
-//! routing (the production wrapper around the paper's kernel — encode
-//! once, decode on every multiply, as in the iterative-solver and
-//! ML-inference scenarios the paper motivates). Matrix lifetime and
-//! residency live one layer down in the tiered store ([`crate::store`]);
-//! iterative solves ([`crate::solver`]) run through
-//! [`service::SpmvService::solve`] under a single store pin.
+//! Layer-3 coordinator: an admission-controlled, batching SpMVM service
+//! with per-matrix format routing (the production wrapper around the
+//! paper's kernel — encode once, decode on every multiply, as in the
+//! iterative-solver and ML-inference scenarios the paper motivates).
+//! Requests pass through the bounded [`admission`] queue (backpressure,
+//! deadlines, priorities, per-tenant quotas, cross-request coalescing —
+//! see `docs/SERVING.md`) before the dispatcher hands them to the worker
+//! pool. Matrix lifetime and residency live one layer down in the tiered
+//! store ([`crate::store`]); iterative solves ([`crate::solver`]) run
+//! through [`service::SpmvService::solve`] under a single store pin.
 
+pub mod admission;
 pub mod metrics;
 pub mod router;
 pub mod service;
 
+pub use admission::{AdmissionConfig, AdmissionQueue, Priority, QuotaConfig, SubmitOptions};
 pub use metrics::{FormatSummary, LatencySummary, Metrics, SolverSummary};
 pub use router::{FormatChoice, RoutePolicy};
 pub use service::{LoadedMatrix, Pending, ServiceConfig, SpmvService};

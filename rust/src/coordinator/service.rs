@@ -1,10 +1,22 @@
-//! The SpMVM service: store-backed matrix registry + request batcher +
-//! worker pool, executing over the parallel SpMV engine.
+//! The SpMVM service: store-backed matrix registry + admission-controlled
+//! request batcher + worker pool, executing over the parallel SpMV
+//! engine.
 //!
-//! Requests `(matrix_id, x)` are queued; a dispatcher groups consecutive
-//! requests to the same matrix into batches (amortizing plan lookups and
-//! keeping the decode tables hot, the same motivation as GPU batching).
-//! Singleton batches run as jobs on a worker pool; multi-request batches
+//! Requests `(matrix_id, x)` enter through the bounded
+//! [`AdmissionQueue`] ([`super::admission`]): [`SpmvService::submit`]
+//! either admits the request or sheds it *at submit time* with a typed
+//! error ([`DtansError::Overloaded`] at capacity,
+//! [`DtansError::QuotaExceeded`] on an exhausted tenant bucket,
+//! [`DtansError::QueueClosed`] during shutdown). The dispatcher pulls
+//! coalesced batches — **all** queued requests for the dispatch target's
+//! matrix, across priority lanes and regardless of interleaving, not
+//! just consecutive arrivals — rejects any whose
+//! [deadline](SubmitOptions::deadline) has elapsed
+//! ([`DtansError::DeadlineExceeded`], checked once, immediately before
+//! execution), and hands the survivors to the worker pool (amortizing
+//! plan lookups and keeping the decode tables hot, the same motivation
+//! as GPU batching). See `docs/SERVING.md` for the full admission
+//! contract. Singleton batches run as jobs on a worker pool; multi-request batches
 //! take the SpMM fast path — the batch packed into one contiguous
 //! column-major [`DenseMat`] and run through a single multi-RHS engine
 //! call, fanning the (request × row-block) grid across the engine's
@@ -36,6 +48,7 @@
 //! request-level sample carrying its iteration count and outcome (see
 //! `docs/SOLVERS.md`).
 
+use super::admission::{AdmissionConfig, AdmissionQueue, SubmitOptions};
 use super::metrics::Metrics;
 use super::router::{FormatChoice, RoutePolicy};
 use crate::format::csr_dtans::EncodeOptions;
@@ -53,7 +66,17 @@ use std::time::Instant;
 
 pub use crate::store::LoadedMatrix;
 
-/// One SpMVM request.
+/// The admission queue's payload: everything about a request except the
+/// coalescing key and scheduling fields, which live on
+/// [`Admitted`](super::admission::Admitted).
+struct Job {
+    x: Vec<f64>,
+    submitted: Instant,
+    resp: Sender<Result<Vec<f64>>>,
+}
+
+/// One dispatched SpMVM request (admission already passed, deadline
+/// already checked).
 struct Request {
     matrix: u64,
     x: Vec<f64>,
@@ -81,6 +104,9 @@ pub struct ServiceConfig {
     /// CSR-original dropping, loader threads. The default keeps
     /// everything in RAM with no persistence (the pre-store behavior).
     pub store: StoreConfig,
+    /// Admission control: bounded queue depth, coalescing gather window,
+    /// per-tenant quotas (see [`AdmissionConfig`] and `docs/SERVING.md`).
+    pub admission: AdmissionConfig,
 }
 
 impl Default for ServiceConfig {
@@ -92,6 +118,7 @@ impl Default for ServiceConfig {
             policy: RoutePolicy::default(),
             par: ParStrategy::Auto,
             store: StoreConfig::default(),
+            admission: AdmissionConfig::default(),
         }
     }
 }
@@ -113,7 +140,7 @@ impl Pending {
 /// The batching SpMVM service.
 pub struct SpmvService {
     store: Arc<MatrixStore>,
-    queue_tx: Sender<Request>,
+    queue: Arc<AdmissionQueue<Job>>,
     /// Service metrics (shared with workers and the store).
     pub metrics: Arc<Metrics>,
     /// One engine for every execution path — dispatcher batches, per-
@@ -141,20 +168,21 @@ impl SpmvService {
             config.policy,
             Arc::clone(&metrics),
         )?);
-        let (tx, rx) = channel::<Request>();
+        let queue = Arc::new(AdmissionQueue::new(&config.admission));
         let engine = Arc::new(SpmvEngine::new(config.par));
 
         let dispatcher = {
+            let queue = Arc::clone(&queue);
             let store = Arc::clone(&store);
             let metrics = Arc::clone(&metrics);
             let engine = Arc::clone(&engine);
             let cfg = config.clone();
-            std::thread::spawn(move || dispatcher_loop(rx, store, metrics, engine, cfg))
+            std::thread::spawn(move || dispatcher_loop(queue, store, metrics, engine, cfg))
         };
 
         Ok(SpmvService {
             store,
-            queue_tx: tx,
+            queue,
             metrics,
             engine,
             dispatcher: Some(dispatcher),
@@ -183,22 +211,67 @@ impl SpmvService {
         self.store.format_of(id)
     }
 
-    /// Submit a request; returns a [`Pending`] handle.
-    pub fn submit(&self, matrix: u64, x: Vec<f64>) -> Pending {
+    /// Submit a request with default admission options (no deadline,
+    /// normal priority, no tenant); returns a [`Pending`] handle, or a
+    /// typed shed error if admission rejected the request
+    /// ([`DtansError::Overloaded`], [`DtansError::QueueClosed`]).
+    ///
+    /// Every call — admitted or shed — counts toward
+    /// [`Metrics::submitted`]; sheds count toward [`Metrics::shed`], so
+    /// `completed + failed + shed + expired == submitted` always holds.
+    ///
+    /// [`Metrics::submitted`]: crate::coordinator::metrics::Metrics::submitted
+    /// [`Metrics::shed`]: crate::coordinator::metrics::Metrics::shed
+    pub fn submit(&self, matrix: u64, x: Vec<f64>) -> Result<Pending> {
+        self.submit_with(matrix, x, SubmitOptions::default())
+    }
+
+    /// Submit a request with explicit [`SubmitOptions`] (deadline,
+    /// priority, tenant). Sheds with [`DtansError::QuotaExceeded`] when
+    /// the tenant's token bucket is empty, in addition to the
+    /// [`SpmvService::submit`] shed conditions. A deadline is **not**
+    /// checked here: expiry is decided once, by the dispatcher,
+    /// immediately before execution — an expired request resolves its
+    /// [`Pending`] with [`DtansError::DeadlineExceeded`].
+    pub fn submit_with(&self, matrix: u64, x: Vec<f64>, opts: SubmitOptions) -> Result<Pending> {
         let (tx, rx) = channel();
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
-        let _ = self.queue_tx.send(Request {
-            matrix,
-            x,
-            submitted: Instant::now(),
-            resp: tx,
-        });
-        Pending { rx }
+        let job = Job { x, submitted: Instant::now(), resp: tx };
+        match self.queue.push(matrix, &opts, job) {
+            Ok(depth) => {
+                self.metrics.note_queue_depth(depth as u64);
+                Ok(Pending { rx })
+            }
+            Err(e) => {
+                self.metrics.record_shed(matches!(e, DtansError::QuotaExceeded { .. }));
+                Err(e)
+            }
+        }
     }
 
     /// Convenience: submit and wait.
     pub fn spmv(&self, matrix: u64, x: Vec<f64>) -> Result<Vec<f64>> {
-        self.submit(matrix, x).wait()
+        self.submit(matrix, x)?.wait()
+    }
+
+    /// Gate the dispatcher: requests are still admitted (and shed, and
+    /// quota-accounted) but nothing dispatches until
+    /// [`SpmvService::resume_dispatch`]. The deterministic test hook —
+    /// stage an exact queue state, then release it; also usable as a
+    /// maintenance drain valve. Dropping the service while paused still
+    /// shuts down cleanly (close overrides the gate).
+    pub fn pause_dispatch(&self) {
+        self.queue.pause();
+    }
+
+    /// Release the [`SpmvService::pause_dispatch`] gate.
+    pub fn resume_dispatch(&self) {
+        self.queue.resume();
+    }
+
+    /// Requests currently admitted and waiting for dispatch.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
     }
 
     /// Run an iterative linear solve `A·x = b` against a registered
@@ -303,10 +376,9 @@ impl SpmvService {
 
 impl Drop for SpmvService {
     fn drop(&mut self) {
-        // Close the queue so the dispatcher drains and exits.
-        let (tx, _rx) = channel();
-        let old = std::mem::replace(&mut self.queue_tx, tx);
-        drop(old);
+        // Close the queue: further submits get QueueClosed, the
+        // dispatcher drains what was admitted (even mid-pause) and exits.
+        self.queue.close();
         if let Some(h) = self.dispatcher.take() {
             let _ = h.join();
         }
@@ -314,7 +386,7 @@ impl Drop for SpmvService {
 }
 
 fn dispatcher_loop(
-    rx: Receiver<Request>,
+    queue: Arc<AdmissionQueue<Job>>,
     store: Arc<MatrixStore>,
     metrics: Arc<Metrics>,
     // The service-wide engine (shared with `SpmvService::solve`): decode
@@ -323,27 +395,34 @@ fn dispatcher_loop(
     cfg: ServiceConfig,
 ) {
     let pool = crate::util::threadpool::ThreadPool::new(cfg.workers);
-    let mut pending: Option<Request> = None;
-    loop {
-        // Collect a batch: all queued requests for the same matrix, up to
-        // max_batch (vLLM-style continuous batching, simplified).
-        let first = match pending.take() {
-            Some(r) => r,
-            None => match rx.recv() {
-                Ok(r) => r,
-                Err(_) => break, // queue closed
-            },
-        };
-        let mut batch = vec![first];
-        while batch.len() < cfg.max_batch {
-            match rx.try_recv() {
-                Ok(r) if r.matrix == batch[0].matrix => batch.push(r),
-                Ok(r) => {
-                    pending = Some(r);
-                    break;
-                }
-                Err(_) => break,
+    // Each take_batch returns one coalesced batch: ALL queued requests
+    // for the dispatch target's matrix, across priority lanes, up to
+    // max_batch — vLLM-style continuous batching, but gathered over the
+    // whole queue instead of only consecutive arrivals.
+    while let Some(admitted) = queue.take_batch(cfg.max_batch) {
+        metrics.note_queue_depth(queue.len() as u64);
+        // The single expiry point: a request whose deadline elapsed
+        // while queued is rejected here, before any kernel work or store
+        // pin. (`deadline <= now` — the queue wait is strictly positive
+        // on a monotonic clock, so a deadline of "now" at submit always
+        // expires.)
+        let now = Instant::now();
+        let mut batch: Vec<Request> = Vec::with_capacity(admitted.len());
+        for a in admitted {
+            if a.deadline.is_some_and(|d| d <= now) {
+                metrics.record_expired();
+                let _ = a.payload.resp.send(Err(DtansError::DeadlineExceeded));
+            } else {
+                batch.push(Request {
+                    matrix: a.matrix,
+                    x: a.payload.x,
+                    submitted: a.payload.submitted,
+                    resp: a.payload.resp,
+                });
             }
+        }
+        if batch.is_empty() {
+            continue; // the whole batch expired; nothing dispatched
         }
         metrics.batches.fetch_add(1, Ordering::Relaxed);
 
@@ -364,6 +443,12 @@ fn dispatcher_loop(
             ),
             None => (false, false), // unknown id: the batch job reports it
         };
+        if spmm {
+            // The decode-amortization payoff, observable: this batch
+            // reaches the engine as ONE run_multi call.
+            metrics.coalesced_batches.fetch_add(1, Ordering::Relaxed);
+            metrics.coalesced_requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        }
         if spmm || !resident {
             // One job for the whole batch: it faults the matrix in (or
             // fails every request) and runs the batched kernel.
@@ -545,7 +630,7 @@ mod tests {
         let handles: Vec<Pending> = (0..40)
             .map(|i| {
                 let x: Vec<f64> = (0..128).map(|j| ((i * j) as f64 * 0.01).sin()).collect();
-                svc.submit(id, x)
+                svc.submit(id, x).unwrap()
             })
             .collect();
         for h in handles {
@@ -620,7 +705,7 @@ mod tests {
             // Submit all up front so the dispatcher can exercise the SpMM
             // batch fast path.
             let pendings: Vec<Pending> =
-                xs.iter().map(|x| svc.submit(id, x.clone())).collect();
+                xs.iter().map(|x| svc.submit(id, x.clone()).unwrap()).collect();
             answers.push(pendings.into_iter().map(|p| p.wait().unwrap()).collect());
         }
         assert_eq!(answers[0], answers[1]);
@@ -644,12 +729,32 @@ mod tests {
         let id = svc.register("m", m).unwrap();
         // One malformed request among good ones; submitted together so
         // they can batch.
-        let good1 = svc.submit(id, vec![1.0; 256]);
-        let bad = svc.submit(id, vec![1.0; 7]);
-        let good2 = svc.submit(id, vec![2.0; 256]);
+        let good1 = svc.submit(id, vec![1.0; 256]).unwrap();
+        let bad = svc.submit(id, vec![1.0; 7]).unwrap();
+        let good2 = svc.submit(id, vec![2.0; 256]).unwrap();
         assert_eq!(good1.wait().unwrap().len(), 256);
         assert!(bad.wait().is_err());
         assert_eq!(good2.wait().unwrap().len(), 256);
+    }
+
+    #[test]
+    fn drop_while_paused_drains_and_answers_everything() {
+        // The shutdown/pause interaction: requests staged behind the
+        // pause gate must still be served (close overrides the gate and
+        // drains), and the drop must not hang on the gated dispatcher.
+        let svc = SpmvService::start(ServiceConfig::default());
+        let m = banded(64, 2);
+        let id = svc.register("m", m).unwrap();
+        svc.pause_dispatch();
+        let pendings: Vec<Pending> =
+            (0..3).map(|_| svc.submit(id, vec![1.0; 64]).unwrap()).collect();
+        assert_eq!(svc.queue_depth(), 3);
+        let metrics = Arc::clone(&svc.metrics);
+        drop(svc); // close + drain, while still paused
+        for p in pendings {
+            assert_eq!(p.wait().unwrap().len(), 64);
+        }
+        assert_eq!(metrics.completed.load(Ordering::Relaxed), 3);
     }
 
     #[test]

@@ -45,8 +45,11 @@
 //!   point (allocation-free for the row-oriented formats) — the
 //!   repeated-multiply workload where per-iteration decoding amortizes
 //!   the paper's compression.
-//! * [`coordinator`] — a batching SpMVM service (router, worker pool,
-//!   metrics) built on the native and PJRT execution paths.
+//! * [`coordinator`] — the admission-controlled SpMVM service: a
+//!   bounded priority queue with typed load-shedding, deadlines and
+//!   per-tenant quotas, cross-request coalescing into SpMM batches
+//!   (see `docs/SERVING.md`), plus router, worker pool and metrics,
+//!   built on the native and PJRT execution paths.
 //! * [`store`] — the tiered matrix store under the coordinator: a
 //!   content-addressed on-disk artifact cache (re-registering a known
 //!   matrix skips encoding), memory-budgeted LRU residency with pinning,

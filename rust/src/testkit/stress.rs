@@ -7,23 +7,40 @@
 //! batch packing and solve pins all interleave — and then checks three
 //! conservation oracles:
 //!
-//! 1. **Bit-identical serial replay** — every response the stressed
-//!    service produced is recomputed on a fresh *unbudgeted, serial*
-//!    reference service and compared bit for bit. Eviction, cold reload
-//!    and kernel parallelism must never change a single ULP (the
-//!    per-format bit-identity guarantee of the engine, end to end through
-//!    the service).
+//! 1. **Bit-identical serial replay of the admitted trace** — every
+//!    response the stressed service produced is recomputed on a fresh
+//!    *unbudgeted, serial* reference service and compared bit for bit;
+//!    shed and expired requests (which by contract never executed) are
+//!    skipped but tallied. Eviction, cold reload and kernel parallelism
+//!    must never change a single ULP (the per-format bit-identity
+//!    guarantee of the engine, end to end through the service).
 //! 2. **Metrics conservation** — after the run drains,
-//!    `completed + failed == submitted`, and no request failed.
+//!    `completed + failed + shed + expired == submitted`, no request
+//!    failed, and the shed/expired counters agree exactly with the
+//!    outcomes the threads recorded.
 //! 3. **Zero leaked pins** — every registered matrix's
 //!    [`pin_count`](crate::store::MatrixStore::pin_count) is 0 once all
-//!    threads join: no code path leaks an acquisition.
+//!    threads join: no code path (including shedding and deadline
+//!    expiry) leaks an acquisition.
+//!
+//! Two arrival modes share the trace and the oracles. **Closed-loop**
+//! (default): each thread waits for its op before issuing the next, so
+//! offered load self-limits and nothing sheds. **Open-loop**
+//! ([`StressConfig::open_loop`], tier presets via
+//! [`StressConfig::open_loop_for_scale`]): each thread submits its whole
+//! slice up front against a deliberately small
+//! [`StressConfig::queue_depth`], then collects — driving real
+//! backpressure sheds, and injecting a deterministic subset of requests
+//! with already-elapsed deadlines (`vseed % 16 == 0`) that the
+//! dispatcher must reject with `DeadlineExceeded` before execution.
 //!
 //! Scale comes from [`TestkitScale`] (the `TESTKIT_SCALE` env knob): CI
 //! runs `small` (4 threads, a few hundred ops, seconds); soak runs set
 //! `medium`/`large`.
 
-use crate::coordinator::{RoutePolicy, ServiceConfig, SpmvService};
+use crate::coordinator::{
+    AdmissionConfig, Pending, RoutePolicy, ServiceConfig, SpmvService, SubmitOptions,
+};
 use crate::matrix::csr::Csr;
 use crate::solver::{SolveMethod, SolverConfig};
 use crate::spmv::engine::ParStrategy;
@@ -51,6 +68,17 @@ pub struct StressConfig {
     /// Kernel parallelism of the stressed service (the reference replay
     /// is always serial).
     pub par: ParStrategy,
+    /// Open-loop arrival: threads submit their whole trace slice before
+    /// collecting any response (offered load is not gated on service
+    /// capacity), and a deterministic subset of single-SpMVM requests
+    /// carries an already-elapsed deadline. `false` is the classic
+    /// closed loop.
+    pub open_loop: bool,
+    /// Admission queue depth of the stressed service. Closed-loop
+    /// presets use a depth far above the possible in-flight count (no
+    /// sheds); open-loop presets use a small depth so backpressure
+    /// actually sheds.
+    pub queue_depth: usize,
 }
 
 impl StressConfig {
@@ -69,6 +97,19 @@ impl StressConfig {
             seed: 0x57E55,
             budget_bytes: Some(192 * 1024),
             par: ParStrategy::Auto,
+            open_loop: false,
+            queue_depth: 4096,
+        }
+    }
+
+    /// The open-loop variant of [`StressConfig::for_scale`]: same trace
+    /// shape, but arrivals are not gated on completions and the queue is
+    /// small enough that admission control must shed under the burst.
+    pub fn open_loop_for_scale(scale: TestkitScale) -> StressConfig {
+        StressConfig {
+            open_loop: true,
+            queue_depth: 64,
+            ..StressConfig::for_scale(scale)
         }
     }
 }
@@ -87,6 +128,12 @@ pub struct StressReport {
     /// Operations skipped because their mid-trace registration had not
     /// landed yet on the issuing thread's timeline.
     pub skipped: usize,
+    /// Requests shed at admission (typed `Overloaded`) — nonzero only
+    /// under open-loop arrivals with a small queue.
+    pub shed: usize,
+    /// Requests rejected at dispatch for an elapsed deadline (typed
+    /// `DeadlineExceeded`) — only injected in open-loop mode.
+    pub expired: usize,
     /// Evictions observed on the stressed service.
     pub evictions: u64,
     /// Cold loads observed on the stressed service.
@@ -108,13 +155,25 @@ enum TraceOp {
 
 /// A recorded response, for bitwise comparison with the replay.
 enum Response {
-    /// One output vector per request of the op (1 for `Spmv`, `k` for
-    /// `Spmm`).
-    Vecs(Vec<Vec<f64>>),
+    /// One outcome per request of the op (1 for `Spmv`, `k` for `Spmm`).
+    Vecs(Vec<VecOutcome>),
     /// CG iterate and residual history.
     Solve(Vec<f64>, Vec<f64>),
     /// Op produced nothing to compare (`Register`, `Evict`, skipped).
     None,
+}
+
+/// Outcome of one multiply request within an op. Only `Ok` vectors are
+/// replayed; `Shed` and `Expired` never executed (by contract) and are
+/// tallied instead.
+enum VecOutcome {
+    /// The request completed; its output vector is replay-compared.
+    Ok(Vec<f64>),
+    /// Admission shed the request (`Overloaded`/`QueueClosed`).
+    Shed,
+    /// The dispatcher rejected an injected elapsed deadline
+    /// (`DeadlineExceeded`).
+    Expired,
 }
 
 fn gen_trace(rng: &mut Xoshiro256, ops: usize, n_total: usize, n_extra: usize) -> Vec<TraceOp> {
@@ -204,6 +263,7 @@ fn run_stress_inner(cfg: &StressConfig, cache_dir: &Path) -> Result<StressReport
             drop_csr: true,
             loader_threads: 2,
         },
+        admission: AdmissionConfig { queue_depth: cfg.queue_depth, ..Default::default() },
         ..Default::default()
     }));
     // Base fixtures and the SPD solve matrix register up front; extras
@@ -230,18 +290,46 @@ fn run_stress_inner(cfg: &StressConfig, cache_dir: &Path) -> Result<StressReport
             let responses = Arc::clone(&responses);
             let ids = Arc::clone(&ids);
             let all_fixtures = Arc::clone(&all_fixtures);
+            let open_loop = cfg.open_loop;
             std::thread::spawn(move || {
-                for idx in (t..trace.len()).step_by(stride) {
-                    let r = execute_op(
-                        &svc,
-                        &ids,
-                        &all_fixtures,
-                        n_base,
-                        spd_id,
-                        spd_dims,
-                        trace[idx],
-                    );
-                    responses.lock().unwrap()[idx] = Some(r);
+                if open_loop {
+                    // Phase 1: submit the whole slice without waiting —
+                    // offered load is not gated on completions, so the
+                    // bounded queue actually backpressures.
+                    let mut inflight: Vec<(usize, InFlight)> = Vec::new();
+                    for idx in (t..trace.len()).step_by(stride) {
+                        let inf = submit_op(
+                            &svc,
+                            &ids,
+                            &all_fixtures,
+                            n_base,
+                            spd_id,
+                            spd_dims,
+                            trace[idx],
+                        );
+                        inflight.push((idx, inf));
+                    }
+                    // Phase 2: collect, in submission order.
+                    for (idx, inf) in inflight {
+                        let r = match inf {
+                            InFlight::Ready(r) => r,
+                            InFlight::Waiting(waits) => resolve_waits(waits),
+                        };
+                        responses.lock().unwrap()[idx] = Some(r);
+                    }
+                } else {
+                    for idx in (t..trace.len()).step_by(stride) {
+                        let r = execute_op(
+                            &svc,
+                            &ids,
+                            &all_fixtures,
+                            n_base,
+                            spd_id,
+                            spd_dims,
+                            trace[idx],
+                        );
+                        responses.lock().unwrap()[idx] = Some(r);
+                    }
                 }
             })
         })
@@ -263,21 +351,33 @@ fn run_stress_inner(cfg: &StressConfig, cache_dir: &Path) -> Result<StressReport
         }
     }
 
-    // --- Oracle 2: metrics conservation, no failures. ---
+    // --- Oracle 2: metrics conservation, no failures. Every submitted
+    // request must be accounted for by exactly one of completed /
+    // failed / shed (admission rejections) / expired (deadline
+    // rejections at dispatch).
     let m = &svc.metrics;
-    let (submitted, completed, failed) = (
+    let (submitted, completed, failed, shed, expired) = (
         m.submitted.load(Ordering::Relaxed),
         m.completed.load(Ordering::Relaxed),
         m.failed.load(Ordering::Relaxed),
+        m.shed.load(Ordering::Relaxed),
+        m.expired.load(Ordering::Relaxed),
     );
-    if completed + failed != submitted {
+    if completed + failed + shed + expired != submitted {
         return Err(DtansError::Service(format!(
-            "metrics do not sum: submitted={submitted} completed={completed} failed={failed}"
+            "metrics do not sum: submitted={submitted} completed={completed} \
+             failed={failed} shed={shed} expired={expired}"
         )));
     }
     if failed != 0 {
         return Err(DtansError::Service(format!(
             "{failed} request(s) failed under stress: {}",
+            m.report()
+        )));
+    }
+    if !cfg.open_loop && (shed != 0 || expired != 0) {
+        return Err(DtansError::Service(format!(
+            "closed-loop run shed/expired requests (shed={shed} expired={expired}): {}",
             m.report()
         )));
     }
@@ -301,6 +401,8 @@ fn run_stress_inner(cfg: &StressConfig, cache_dir: &Path) -> Result<StressReport
         spmm_checked: 0,
         solves_checked: 0,
         skipped: 0,
+        shed: 0,
+        expired: 0,
         evictions: m.evictions.load(Ordering::Relaxed),
         cold_loads: m.cold_loads.load(Ordering::Relaxed),
         metrics_report: m.report(),
@@ -325,7 +427,127 @@ fn run_stress_inner(cfg: &StressConfig, cache_dir: &Path) -> Result<StressReport
             &mut report,
         )?;
     }
+    // Cross-check: the shed/expired outcomes the threads observed must
+    // agree exactly with the service's counters — a shed the caller saw
+    // but the metrics missed (or vice versa) is an accounting leak.
+    if report.shed as u64 != shed || report.expired as u64 != expired {
+        return Err(DtansError::Service(format!(
+            "observed outcomes disagree with counters: saw shed={} expired={}, \
+             metrics say shed={shed} expired={expired}",
+            report.shed, report.expired
+        )));
+    }
     Ok(report)
+}
+
+/// A thread's record of one submitted-but-not-yet-collected op.
+enum InFlight {
+    /// The op resolved at submit time (synchronous op, skip, or error).
+    Ready(std::result::Result<Response, String>),
+    /// Multiply requests still waiting on their [`Pending`] handles.
+    Waiting(Vec<VecWait>),
+}
+
+/// One request of an in-flight op.
+enum VecWait {
+    /// Admitted: wait on the handle. `expect_expired` marks an injected
+    /// elapsed deadline, which the dispatcher *must* reject.
+    Handle { p: Pending, expect_expired: bool },
+    /// Already resolved at submit time (shed).
+    Done(VecOutcome),
+}
+
+/// Open-loop submit of one op: multiplies are submitted without waiting
+/// (sheds recorded inline); solves, registrations and evictions run
+/// synchronously exactly as in the closed loop.
+fn submit_op(
+    svc: &SpmvService,
+    ids: &Mutex<Vec<Option<u64>>>,
+    fixtures: &[Csr],
+    n_base: usize,
+    spd_id: u64,
+    spd_dims: (usize, usize),
+    op: TraceOp,
+) -> InFlight {
+    let lookup = |mat: usize| ids.lock().unwrap()[mat];
+    let shed_or_err = |e: DtansError| match e {
+        DtansError::Overloaded { .. } | DtansError::QueueClosed => {
+            Ok(VecWait::Done(VecOutcome::Shed))
+        }
+        other => Err(other.to_string()),
+    };
+    match op {
+        TraceOp::Spmv { mat, vseed } => match lookup(mat) {
+            Some(id) => {
+                let x = request_vector(fixtures[mat].ncols, vseed);
+                // Deterministic deadline injection: a seed-selected
+                // subset carries a deadline of "now", which is already
+                // elapsed by the time the dispatcher reads its clock —
+                // so the expiry path is exercised without any sleeps.
+                let expect_expired = vseed % 16 == 0;
+                let opts = SubmitOptions {
+                    deadline: expect_expired.then(std::time::Instant::now),
+                    ..Default::default()
+                };
+                match svc.submit_with(id, x, opts) {
+                    Ok(p) => InFlight::Waiting(vec![VecWait::Handle { p, expect_expired }]),
+                    Err(e) => match shed_or_err(e) {
+                        Ok(done) => InFlight::Waiting(vec![done]),
+                        Err(msg) => InFlight::Ready(Err(msg)),
+                    },
+                }
+            }
+            None => InFlight::Ready(Ok(Response::None)),
+        },
+        TraceOp::Spmm { mat, k, vseed } => match lookup(mat) {
+            Some(id) => {
+                let mut waits = Vec::with_capacity(k);
+                for j in 0..k {
+                    let x = request_vector(fixtures[mat].ncols, vseed ^ j as u64);
+                    match svc.submit(id, x) {
+                        Ok(p) => waits.push(VecWait::Handle { p, expect_expired: false }),
+                        Err(e) => match shed_or_err(e) {
+                            Ok(done) => waits.push(done),
+                            Err(msg) => return InFlight::Ready(Err(msg)),
+                        },
+                    }
+                }
+                InFlight::Waiting(waits)
+            }
+            None => InFlight::Ready(Ok(Response::None)),
+        },
+        TraceOp::Solve { .. } | TraceOp::Register { .. } | TraceOp::Evict { .. } => {
+            InFlight::Ready(execute_op(svc, ids, fixtures, n_base, spd_id, spd_dims, op))
+        }
+    }
+}
+
+/// Collect an open-loop op's handles into outcomes, enforcing the
+/// deadline contract: an injected elapsed deadline must come back as
+/// `DeadlineExceeded` — if it executed, the single-expiry-point rule is
+/// broken and the run fails.
+fn resolve_waits(waits: Vec<VecWait>) -> std::result::Result<Response, String> {
+    let mut outs = Vec::with_capacity(waits.len());
+    for w in waits {
+        match w {
+            VecWait::Done(o) => outs.push(o),
+            VecWait::Handle { p, expect_expired } => match p.wait() {
+                Ok(y) => {
+                    if expect_expired {
+                        return Err(
+                            "deadline contract violated: elapsed-deadline request executed".into()
+                        );
+                    }
+                    outs.push(VecOutcome::Ok(y));
+                }
+                Err(DtansError::DeadlineExceeded) if expect_expired => {
+                    outs.push(VecOutcome::Expired);
+                }
+                Err(e) => return Err(e.to_string()),
+            },
+        }
+    }
+    Ok(Response::Vecs(outs))
 }
 
 /// Execute one op on the stressed service. Errors come back as strings
@@ -346,23 +568,26 @@ fn execute_op(
             Some(id) => {
                 let x = request_vector(fixtures[mat].ncols, vseed);
                 let y = svc.spmv(id, x).map_err(fail)?;
-                Ok(Response::Vecs(vec![y]))
+                Ok(Response::Vecs(vec![VecOutcome::Ok(y)]))
             }
             None => Ok(Response::None), // extra not registered yet
         },
         TraceOp::Spmm { mat, k, vseed } => match lookup(mat) {
             Some(id) => {
                 // Submit the burst together so the dispatcher can pack it
-                // into one SpMM batch.
-                let pendings: Vec<_> = (0..k)
+                // into one SpMM batch. Closed-loop runs use a queue depth
+                // far above the possible in-flight count, so admission
+                // never sheds here — any submit error is a run failure.
+                let pendings = (0..k)
                     .map(|j| {
                         let x = request_vector(fixtures[mat].ncols, vseed ^ j as u64);
                         svc.submit(id, x)
                     })
-                    .collect();
+                    .collect::<Result<Vec<_>>>()
+                    .map_err(fail)?;
                 let mut ys = Vec::with_capacity(k);
                 for p in pendings {
-                    ys.push(p.wait().map_err(fail)?);
+                    ys.push(VecOutcome::Ok(p.wait().map_err(fail)?));
                 }
                 Ok(Response::Vecs(ys))
             }
@@ -414,25 +639,47 @@ fn replay_and_compare(
     };
     match (op, resp) {
         (TraceOp::Spmv { mat, vseed }, Response::Vecs(got)) => {
-            let x = request_vector(fixtures[mat].ncols, vseed);
-            let want = reference.spmv(ref_ids[mat], x)?;
-            if got.len() != 1 || got[0] != want {
-                return mismatch("spmv response");
+            if got.len() != 1 {
+                return mismatch("spmv response count");
             }
-            report.spmv_checked += 1;
+            match &got[0] {
+                VecOutcome::Ok(y) => {
+                    let x = request_vector(fixtures[mat].ncols, vseed);
+                    let want = reference.spmv(ref_ids[mat], x)?;
+                    if *y != want {
+                        return mismatch("spmv response");
+                    }
+                    report.spmv_checked += 1;
+                }
+                // Shed/expired requests never executed; only the
+                // admitted trace is replayed.
+                VecOutcome::Shed => report.shed += 1,
+                VecOutcome::Expired => report.expired += 1,
+            }
         }
         (TraceOp::Spmm { mat, k, vseed }, Response::Vecs(got)) => {
             if got.len() != k {
                 return mismatch("spmm burst size");
             }
-            for (j, y) in got.iter().enumerate() {
-                let x = request_vector(fixtures[mat].ncols, vseed ^ j as u64);
-                let want = reference.spmv(ref_ids[mat], x)?;
-                if *y != want {
-                    return mismatch("spmm response");
+            let mut compared = false;
+            for (j, out) in got.iter().enumerate() {
+                match out {
+                    VecOutcome::Ok(y) => {
+                        let x = request_vector(fixtures[mat].ncols, vseed ^ j as u64);
+                        let want = reference.spmv(ref_ids[mat], x)?;
+                        if *y != want {
+                            return mismatch("spmm response");
+                        }
+                        compared = true;
+                    }
+                    VecOutcome::Shed => report.shed += 1,
+                    // Deadlines are only injected on Spmv ops.
+                    VecOutcome::Expired => return mismatch("unexpected spmm expiry"),
                 }
             }
-            report.spmm_checked += 1;
+            if compared {
+                report.spmm_checked += 1;
+            }
         }
         (TraceOp::Solve { vseed }, Response::Solve(x, residuals)) => {
             let b = request_vector(spd_dims.0, vseed);
@@ -490,6 +737,16 @@ mod tests {
             assert!(cfg.threads >= 4, "{scale:?}");
             assert!(cfg.ops >= 200, "{scale:?}");
             assert!(cfg.budget_bytes.is_some(), "{scale:?}");
+            assert!(!cfg.open_loop, "{scale:?}");
+            // Closed loop must never shed: depth far above the largest
+            // possible in-flight count (threads × max SpMM burst).
+            assert!(cfg.queue_depth >= cfg.threads * 8, "{scale:?}");
+            let ol = StressConfig::open_loop_for_scale(scale);
+            assert!(ol.open_loop, "{scale:?}");
+            // Open loop must be able to shed: depth below the trace's
+            // submit count.
+            assert!(ol.queue_depth < ol.ops, "{scale:?}");
+            assert_eq!((ol.threads, ol.ops, ol.seed), (cfg.threads, cfg.ops, cfg.seed));
         }
     }
 
@@ -503,9 +760,32 @@ mod tests {
             seed: 0xABCD,
             budget_bytes: Some(128 * 1024),
             par: ParStrategy::Auto,
+            open_loop: false,
+            queue_depth: 4096,
         };
         let report = run_stress(&cfg).unwrap();
         assert_eq!(report.ops_executed, 24);
+        assert!(report.spmv_checked + report.spmm_checked + report.solves_checked > 0);
+        assert_eq!((report.shed, report.expired), (0, 0));
+    }
+
+    #[test]
+    fn tiny_open_loop_run_passes_all_oracles() {
+        // Open-loop arrivals against a small queue: the oracles must
+        // hold whether or not this machine's timing actually sheds, and
+        // any injected elapsed deadline must come back Expired. The
+        // full-size open-loop run lives in tests/admission.rs.
+        let cfg = StressConfig {
+            threads: 2,
+            ops: 32,
+            seed: 0xABCD,
+            budget_bytes: Some(128 * 1024),
+            par: ParStrategy::Auto,
+            open_loop: true,
+            queue_depth: 8,
+        };
+        let report = run_stress(&cfg).unwrap();
+        assert_eq!(report.ops_executed, 32);
         assert!(report.spmv_checked + report.spmm_checked + report.solves_checked > 0);
     }
 }

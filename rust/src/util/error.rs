@@ -74,6 +74,30 @@ pub enum DtansError {
 
     /// Coordinator/service errors.
     Service(String),
+
+    /// Admission control shed the request: the bounded service queue was
+    /// at capacity. Backpressure, not a bug — the caller should retry
+    /// later or reduce its offered load.
+    Overloaded {
+        /// The configured queue depth that was full at submit time.
+        queue_depth: usize,
+    },
+
+    /// The request's deadline elapsed before any kernel work started; it
+    /// was rejected at dispatch, never executed.
+    DeadlineExceeded,
+
+    /// Admission control shed the request: the submitting tenant's
+    /// token-bucket quota was exhausted.
+    QuotaExceeded {
+        /// The tenant whose bucket was empty.
+        tenant: String,
+    },
+
+    /// The request was submitted to a service whose admission queue has
+    /// closed (the service is shutting down). Distinct from
+    /// [`DtansError::Overloaded`]: retrying cannot succeed.
+    QueueClosed,
 }
 
 impl DtansError {
@@ -103,6 +127,14 @@ impl DtansError {
             DtansError::Io(e) => DtansError::Io(std::io::Error::new(e.kind(), e.to_string())),
             DtansError::Runtime(m) => DtansError::Runtime(m.clone()),
             DtansError::Service(m) => DtansError::Service(m.clone()),
+            DtansError::Overloaded { queue_depth } => {
+                DtansError::Overloaded { queue_depth: *queue_depth }
+            }
+            DtansError::DeadlineExceeded => DtansError::DeadlineExceeded,
+            DtansError::QuotaExceeded { tenant } => {
+                DtansError::QuotaExceeded { tenant: tenant.clone() }
+            }
+            DtansError::QueueClosed => DtansError::QueueClosed,
         }
     }
 }
@@ -133,6 +165,18 @@ impl fmt::Display for DtansError {
             DtansError::Io(e) => write!(f, "io error: {e}"),
             DtansError::Runtime(m) => write!(f, "runtime error: {m}"),
             DtansError::Service(m) => write!(f, "service error: {m}"),
+            DtansError::Overloaded { queue_depth } => {
+                write!(f, "service overloaded: admission queue full (depth {queue_depth})")
+            }
+            DtansError::DeadlineExceeded => {
+                write!(f, "deadline exceeded before execution")
+            }
+            DtansError::QuotaExceeded { tenant } => {
+                write!(f, "quota exhausted for tenant '{tenant}'")
+            }
+            DtansError::QueueClosed => {
+                write!(f, "service shutting down: admission queue closed")
+            }
         }
     }
 }
@@ -201,6 +245,22 @@ mod tests {
             c.duplicate(),
             DtansError::ChecksumMismatch { stored: 0xAB, computed: 0xCD }
         ));
+    }
+
+    #[test]
+    fn admission_variants_are_typed_and_duplicate() {
+        let o = DtansError::Overloaded { queue_depth: 64 };
+        assert!(o.to_string().contains("queue full (depth 64)"));
+        assert!(matches!(o.duplicate(), DtansError::Overloaded { queue_depth: 64 }));
+        let d = DtansError::DeadlineExceeded;
+        assert!(d.to_string().contains("deadline exceeded"));
+        assert!(matches!(d.duplicate(), DtansError::DeadlineExceeded));
+        let q = DtansError::QuotaExceeded { tenant: "acme".into() };
+        assert!(q.to_string().contains("tenant 'acme'"));
+        assert!(matches!(q.duplicate(), DtansError::QuotaExceeded { .. }));
+        let c = DtansError::QueueClosed;
+        assert!(c.to_string().contains("queue closed"));
+        assert!(matches!(c.duplicate(), DtansError::QueueClosed));
     }
 
     #[test]

@@ -30,7 +30,7 @@ fn service_serves_whole_corpus_correctly() {
         .iter()
         .cycle()
         .take(3 * cases.len())
-        .map(|(id, x, _, _)| svc.submit(*id, x.clone()))
+        .map(|(id, x, _, _)| svc.submit(*id, x.clone()).unwrap())
         .collect();
     for (i, p) in pendings.into_iter().enumerate() {
         let (_, _, want, name) = &cases[i % cases.len()];
