@@ -24,6 +24,9 @@
 //!    controlled core under open-loop same-matrix traffic, demonstrating
 //!    cross-request coalescing at saturation (`serving_saturation`,
 //!    reporting to `results/BENCH_serving.json`);
+//!  * observability bench: per-request cost of the tracing/metrics
+//!    layer — off vs sampled 1-in-64 vs always-on — on the scaling
+//!    matrix (`obs_overhead`, reporting to `results/BENCH_obs.json`);
 //!  * one end-to-end bench per paper table/figure (regenerating them at
 //!    bench scale): fig4, fig6+tab1, fig7/tab2, fig8/tab3, fig9, ablate.
 //!
@@ -761,6 +764,81 @@ fn bench_serving_saturation(filter: &Option<String>, quick: bool) {
     println!("serving_saturation/report    wrote {}", path.display());
 }
 
+/// Observability overhead: the same closed-loop warm SpMVM workload
+/// through three identically configured services that differ only in
+/// tracing mode — off (`sample_one_in: 0`, the tracer is bypassed
+/// entirely), sampled 1-in-64, and always-on. The acceptance bars
+/// (always-on < 5%, sampled < 1% on the ~2.3M-nnz scaling matrix) are
+/// recorded in `results/BENCH_obs.json` alongside the always-on
+/// service's full metrics snapshot, so future PRs have the trajectory.
+fn bench_obs_overhead(filter: &Option<String>, quick: bool) {
+    use dtans::coordinator::{ServiceConfig, SpmvService};
+    use dtans::obs::export::metrics_json;
+    use dtans::obs::ObsConfig;
+
+    if !should_run(filter, "obs_overhead") {
+        return;
+    }
+    let n = if quick { 1 << 15 } else { 1 << 18 };
+    let reqs = if quick { 30 } else { 80 };
+    let mut m = banded(n, 4); // ~9 nnz/row -> full mode ~2.3M nnz
+    assign_values(&mut m, ValueDist::FewDistinct(16), &mut Xoshiro256::seeded(11));
+    let x: Vec<f64> = (0..m.ncols).map(|j| (j as f64 * 0.01).sin()).collect();
+    println!(
+        "obs_overhead                 matrix: {} nnz (2^{:.1}), {} closed-loop requests/mode",
+        m.nnz(),
+        (m.nnz() as f64).log2(),
+        reqs
+    );
+
+    let measure = |sample_one_in: u32| {
+        let svc = SpmvService::start(ServiceConfig {
+            obs: ObsConfig { sample_one_in, capacity: 4096 },
+            ..Default::default()
+        });
+        let id = svc.register("obs", m.clone()).unwrap();
+        svc.spmv(id, x.clone()).unwrap(); // warm: encode + pin outside timing
+        let st = bench(1, 3, 0.3, || {
+            for _ in 0..reqs {
+                svc.spmv(id, x.clone()).unwrap();
+            }
+        });
+        (st.median / reqs as f64, svc)
+    };
+    let (off_s, _svc_off) = measure(0);
+    let (sampled_s, _svc_sampled) = measure(64);
+    let (on_s, svc_on) = measure(1);
+    let pct = |t: f64| (t / off_s - 1.0) * 100.0;
+    let (sampled_pct, on_pct) = (pct(sampled_s), pct(on_s));
+    println!("obs_overhead/off             {:.3} ms/req (baseline)", off_s * 1e3);
+    println!(
+        "obs_overhead/sampled_1in64   {:.3} ms/req ({sampled_pct:+.2}%, bar 1%)",
+        sampled_s * 1e3
+    );
+    println!(
+        "obs_overhead/always_on       {:.3} ms/req ({on_pct:+.2}%, bar 5%)",
+        on_s * 1e3
+    );
+
+    let outdir = Path::new("results");
+    let _ = std::fs::create_dir_all(outdir);
+    let json = format!(
+        "{{\n  \"bench\": \"obs_overhead\",\n  \"quick\": {},\n  \"nnz\": {},\n  \"requests_per_mode\": {},\n  \"off_per_req_s\": {:.6},\n  \"sampled_1in64_per_req_s\": {:.6},\n  \"always_on_per_req_s\": {:.6},\n  \"sampled_overhead_pct\": {:.3},\n  \"always_on_overhead_pct\": {:.3},\n  \"sampled_bar_pct\": 1.0,\n  \"always_on_bar_pct\": 5.0,\n  \"always_on_metrics\": {}\n}}\n",
+        quick,
+        m.nnz(),
+        reqs,
+        off_s,
+        sampled_s,
+        on_s,
+        sampled_pct,
+        on_pct,
+        metrics_json(&svc_on.metrics),
+    );
+    let path = outdir.join("BENCH_obs.json");
+    std::fs::write(&path, json).expect("write BENCH_obs.json");
+    println!("obs_overhead/report          wrote {}", path.display());
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
     let quick = args.iter().any(|a| a == "--quick");
@@ -776,6 +854,7 @@ fn main() {
     bench_store_coldstart(&filter, quick);
     bench_stress_driver(&filter, quick);
     bench_serving_saturation(&filter, quick);
+    bench_obs_overhead(&filter, quick);
     bench_large_banded(&filter, quick);
     bench_experiments(&filter, quick);
     println!("done.");

@@ -139,6 +139,11 @@ pub struct Admitted<T> {
     pub deadline: Option<Instant>,
     /// Scheduling lane the request was admitted into.
     pub priority: Priority,
+    /// When the request entered the queue — stamped under the push lock,
+    /// so `enqueued.elapsed()` at dispatch is the exact queue wait
+    /// (recorded as the `Queued` span stage and the `queue_wait`
+    /// histogram; see `docs/OBSERVABILITY.md`).
+    pub enqueued: Instant,
     /// The caller's payload (input vector + response channel, for the
     /// service).
     pub payload: T,
@@ -239,6 +244,7 @@ impl<T> AdmissionQueue<T> {
             matrix,
             deadline: opts.deadline,
             priority: opts.priority,
+            enqueued: Instant::now(),
             payload,
         });
         s.len += 1;
@@ -259,6 +265,15 @@ impl<T> AdmissionQueue<T> {
     /// While [paused](AdmissionQueue::pause), blocks even if work is
     /// queued — unless the queue has closed, which always drains.
     pub fn take_batch(&self, max_batch: usize) -> Option<Vec<Admitted<T>>> {
+        self.take_batch_depth(max_batch).map(|(batch, _)| batch)
+    }
+
+    /// [`AdmissionQueue::take_batch`] plus the **residual queue depth**,
+    /// read under the same lock that finished the extraction. The pair is
+    /// therefore consistent: `depth` is exactly what remained queued the
+    /// instant this batch was carved out, with no window for a concurrent
+    /// `push` to skew the gauge between dequeue and measurement.
+    pub fn take_batch_depth(&self, max_batch: usize) -> Option<(Vec<Admitted<T>>, usize)> {
         let max_batch = max_batch.max(1);
         let mut s = self.state.lock().unwrap();
         loop {
@@ -289,7 +304,8 @@ impl<T> AdmissionQueue<T> {
                 Self::extract(&mut s, target, max_batch, &mut batch);
             }
         }
-        Some(batch)
+        let depth = s.len;
+        Some((batch, depth))
     }
 
     /// Move every queued request for `target` (highest lane first, FIFO
@@ -527,5 +543,34 @@ mod tests {
         // request is simply in the next batch).
         assert!(!batch.is_empty());
         assert_eq!(batch.len() + q.len(), 2);
+    }
+
+    #[test]
+    fn take_batch_depth_reports_the_residual_under_the_lock() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(&cfg(16));
+        for i in 0..5 {
+            push_ok(&q, 1, &SubmitOptions::default(), i);
+        }
+        // 5 queued, carve 3 -> 2 remain; the depth rides along with the
+        // batch instead of being re-read after the lock is dropped.
+        let (batch, depth) = q.take_batch_depth(3).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(depth, 2);
+        let (batch, depth) = q.take_batch_depth(3).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(depth, 0);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn admitted_requests_carry_an_enqueue_stamp() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(&cfg(16));
+        let before = Instant::now();
+        push_ok(&q, 1, &SubmitOptions::default(), 0);
+        let batch = q.take_batch(16).unwrap();
+        // Stamped inside push: between our `before` and dispatch time,
+        // so `enqueued.elapsed()` is a valid queue-wait measurement.
+        assert!(batch[0].enqueued >= before);
+        assert!(batch[0].enqueued <= Instant::now());
     }
 }

@@ -1,49 +1,40 @@
 //! Service metrics: request counters, store counters, solver counters,
-//! and latency quantiles over fixed-size sliding-window reservoirs —
-//! aggregate and broken out per kernel format
+//! and latency quantiles over log-bucketed histograms
+//! ([`crate::obs::hist::LogHistogram`]) — aggregate and broken out per
+//! kernel format
 //! ([`SpmvOperator::format_tag`](crate::spmv::operator::SpmvOperator::format_tag)),
 //! so dtANS vs CSR routing is observable in production.
 //!
+//! Through PR 6 the quantiles came from 64k sliding sample rings; those
+//! windowed the data (quantiles forgot everything older than the last 64k
+//! samples) and cost 512 KiB per reservoir. The histograms keep **every**
+//! sample — exact `count`/`max`, ≤0.78% relative quantile error — in
+//! ~30 KiB of constant memory each, and merge without resorting.
+//!
+//! `Metrics` also owns the request-flow [`Tracer`]: the store, dispatcher
+//! and pool workers all share `Arc<Metrics>` already, so embedding the
+//! collector here threads tracing through the whole pipeline without a
+//! new shared handle. Export surfaces live in [`crate::obs::export`]
+//! (Prometheus text + JSON snapshot); the stage/label contract is in
+//! `docs/OBSERVABILITY.md`.
+//!
 //! A whole iterative solve ([`crate::coordinator::service::SpmvService::solve`])
 //! is **one** request-level sample: [`Metrics::record_solve`] pushes a
-//! single end-to-end latency into the aggregate and per-format rings, and
-//! its iteration count into a separate iterations reservoir. Recording
-//! each of a solve's N inner multiplies as its own latency sample would
-//! flood the format rings with N correlated sub-millisecond entries and
-//! drag p99 toward the solver's inner-loop time — the skew called out in
-//! the per-format breakdown work.
+//! single end-to-end latency into the aggregate and per-format
+//! histograms, and its iteration count into a separate iterations
+//! histogram. Recording each of a solve's N inner multiplies as its own
+//! latency sample would flood the format histograms with N correlated
+//! sub-millisecond entries and drag p99 toward the solver's inner-loop
+//! time — the skew called out in the per-format breakdown work.
 
+use crate::obs::hist::LogHistogram;
+use crate::obs::span::Stage;
+use crate::obs::trace::{ObsConfig, Tracer};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-/// Samples retained per reservoir.
-const RESERVOIR_CAP: usize = 65536;
-
-/// Fixed-size ring of the most recent [`RESERVOIR_CAP`] samples. Unlike
-/// the old grow-then-drain reservoir (which discarded the oldest 32k
-/// samples *wholesale* at 64k, so quantiles right after a drain were
-/// computed over a recent-burst-only window), the ring retires exactly
-/// one oldest sample per new sample — the window slides, it never jumps.
-#[derive(Debug, Default)]
-struct Ring {
-    buf: Vec<u64>,
-    /// Oldest slot, once the ring is full.
-    next: usize,
-}
-
-impl Ring {
-    fn push(&mut self, v: u64) {
-        if self.buf.len() < RESERVOIR_CAP {
-            self.buf.push(v);
-        } else {
-            self.buf[self.next] = v;
-            self.next = (self.next + 1) % RESERVOIR_CAP;
-        }
-    }
-}
-
-/// Lock-free counters + mutexed latency reservoirs.
+/// Lock-free counters + mutexed histograms + the span tracer.
 #[derive(Debug, Default)]
 pub struct Metrics {
     /// Requests accepted.
@@ -73,7 +64,8 @@ pub struct Metrics {
     /// factor).
     pub coalesced_requests: AtomicU64,
     /// Gauge: admission-queue depth after the most recent submit or
-    /// dispatch.
+    /// dispatch (both sides update it — see
+    /// [`AdmissionQueue::take_batch_depth`](crate::coordinator::admission::AdmissionQueue::take_batch_depth)).
     pub queue_depth: AtomicU64,
     /// High-water mark of the admission queue over the service's life.
     pub queue_depth_peak: AtomicU64,
@@ -104,21 +96,57 @@ pub struct Metrics {
     /// breakdown). Precondition/request errors count as `failed`, not
     /// here — divergence is a numerical signal, not an input bug.
     pub solves_diverged: AtomicU64,
-    latencies_us: Mutex<Ring>,
-    cold_load_us: Mutex<Ring>,
-    solve_iters: Mutex<Ring>,
+    /// Gauge: per-block imbalance (slowest/mean block micros, ×1000) of
+    /// the most recent timed engine call. 1000 = perfectly balanced.
+    pub block_imbalance_milli: AtomicU64,
+    latencies_us: Mutex<LogHistogram>,
+    cold_load_us: Mutex<LogHistogram>,
+    solve_iters: Mutex<LogHistogram>,
+    /// Queue wait (enqueue → dequeue), stamped by the dispatcher.
+    queue_wait_us: Mutex<LogHistogram>,
+    /// Mean block micros per timed engine call.
+    block_mean_us: Mutex<LogHistogram>,
+    /// Slowest block micros per timed engine call (straggler signal).
+    block_max_us: Mutex<LogHistogram>,
     /// Per-format breakdown, keyed by the executing operator's
     /// `format_tag()` (`BTreeMap` so reports list formats in a stable
     /// order).
     per_format: Mutex<BTreeMap<&'static str, FormatStats>>,
+    /// Per-tenant admission outcomes (only tenants named in
+    /// `SubmitOptions` appear).
+    tenants: Mutex<BTreeMap<String, TenantStats>>,
+    /// Paper-headline gauges per dtANS-routed matrix, keyed by store id.
+    paper: Mutex<BTreeMap<u64, PaperStats>>,
+    /// Request-flow span collector (shared: everything that holds
+    /// `Arc<Metrics>` can stamp stages).
+    tracer: Tracer,
 }
 
-/// Per-format counters + latency reservoir.
+/// Per-format counters + latency histogram.
 #[derive(Debug, Default)]
 struct FormatStats {
     completed: u64,
     failed: u64,
-    ring: Ring,
+    hist: LogHistogram,
+}
+
+/// Per-tenant admission counters.
+#[derive(Debug, Default, Clone, Copy)]
+struct TenantStats {
+    admitted: u64,
+    shed: u64,
+}
+
+/// Paper-headline gauges for one dtANS-routed matrix: compression ratio
+/// fixed at registration, decode throughput updated per kernel run.
+#[derive(Debug, Default, Clone)]
+struct PaperStats {
+    name: String,
+    baseline_bytes: u64,
+    encoded_bytes: u64,
+    /// Latest observed decode throughput, stream bytes per second.
+    decode_bps: u64,
+    decode_samples: u64,
 }
 
 /// Snapshot of one format's request counters and latency quantiles (see
@@ -129,36 +157,35 @@ pub struct FormatSummary {
     pub completed: u64,
     /// Requests that failed while executing on this format's kernel.
     pub failed: u64,
-    /// Latency quantiles over this format's sliding window.
+    /// Latency quantiles over this format's full history.
     pub latency: LatencySummary,
 }
 
-/// Quantile summary of a latency reservoir.
+/// Quantile summary of a latency histogram. `count` and `max_us` are
+/// exact; the quantiles carry the histogram's ≤0.78% relative error.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct LatencySummary {
-    /// Number of samples.
+    /// Number of samples (exact — histograms never window or subsample).
     pub count: usize,
     /// 50th percentile, microseconds.
     pub p50_us: u64,
+    /// 90th percentile, microseconds.
+    pub p90_us: u64,
     /// 99th percentile, microseconds.
     pub p99_us: u64,
-    /// Maximum, microseconds.
+    /// Maximum, microseconds (exact).
     pub max_us: u64,
 }
 
 impl LatencySummary {
-    /// Summarize raw samples (sorts in place).
-    fn from_samples(mut l: Vec<u64>) -> LatencySummary {
-        if l.is_empty() {
-            return LatencySummary::default();
-        }
-        l.sort_unstable();
-        let q = |p: f64| l[((l.len() - 1) as f64 * p) as usize];
+    /// Summarize a histogram.
+    fn from_hist(h: &LogHistogram) -> LatencySummary {
         LatencySummary {
-            count: l.len(),
-            p50_us: q(0.50),
-            p99_us: q(0.99),
-            max_us: *l.last().unwrap(),
+            count: h.count() as usize,
+            p50_us: h.quantile(0.50),
+            p90_us: h.quantile(0.90),
+            p99_us: h.quantile(0.99),
+            max_us: h.max(),
         }
     }
 }
@@ -174,18 +201,52 @@ pub struct SolverSummary {
     /// errored solve requests appear in `solves` and the `failed`
     /// counter instead.
     pub diverged: u64,
-    /// Iteration-count quantiles over the sliding window (`count` solves;
-    /// `p50`/`p99`/`max` are iterations, not microseconds).
+    /// Solves with a recorded iteration count (`p50`/`p99`/`max` are
+    /// iterations, not microseconds).
     pub iters_count: usize,
     /// Median iterations per solve.
     pub iters_p50: u64,
     /// 99th-percentile iterations per solve.
     pub iters_p99: u64,
-    /// Maximum iterations per solve in the window.
+    /// Maximum iterations per solve (exact).
     pub iters_max: u64,
 }
 
+/// Snapshot of one matrix's paper-headline gauges (see
+/// [`Metrics::paper_summaries`]).
+#[derive(Debug, Clone)]
+pub struct PaperSummary {
+    /// Store id of the matrix.
+    pub id: u64,
+    /// Registration name.
+    pub name: String,
+    /// Resident-CSR-equivalent bytes (the paper's baseline side).
+    pub baseline_bytes: u64,
+    /// Encoded dtANS container bytes.
+    pub encoded_bytes: u64,
+    /// Compression ratio, baseline / encoded (>1 = dtANS smaller).
+    pub ratio: f64,
+    /// Latest observed decode throughput, stream bytes per second.
+    pub decode_bps: u64,
+    /// Kernel runs that contributed a throughput observation.
+    pub decode_samples: u64,
+}
+
 impl Metrics {
+    /// Metrics with a configured tracer (sampling / capacity). `Default`
+    /// uses [`ObsConfig::default`] — always-on tracing.
+    pub fn with_obs(cfg: ObsConfig) -> Metrics {
+        Metrics {
+            tracer: Tracer::new(cfg),
+            ..Default::default()
+        }
+    }
+
+    /// The embedded request-flow span collector.
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
     /// Record one request shed at admission. `quota` marks a per-tenant
     /// quota rejection (counted in both `shed` and `quota_rejected`).
     pub fn record_shed(&self, quota: bool) {
@@ -206,20 +267,46 @@ impl Metrics {
         self.queue_depth_peak.fetch_max(depth, Ordering::Relaxed);
     }
 
+    /// Record one request's measured queue wait (enqueue → dequeue).
+    pub fn record_queue_wait(&self, micros: u64) {
+        self.queue_wait_us.lock().unwrap().record(micros);
+    }
+
+    /// Record one admission outcome against a named tenant.
+    pub fn record_tenant(&self, tenant: &str, admitted: bool) {
+        let mut t = self.tenants.lock().unwrap();
+        let stats = t.entry(tenant.to_string()).or_default();
+        if admitted {
+            stats.admitted += 1;
+        } else {
+            stats.shed += 1;
+        }
+    }
+
+    /// Per-tenant `(name, admitted, shed)` rows in stable order.
+    pub fn tenant_counts(&self) -> Vec<(String, u64, u64)> {
+        self.tenants
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.admitted, v.shed))
+            .collect()
+    }
+
     /// Record one completed request's latency.
     pub fn record_latency(&self, micros: u64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
-        self.latencies_us.lock().unwrap().push(micros);
+        self.latencies_us.lock().unwrap().record(micros);
     }
 
     /// Record one completed request's latency against both the aggregate
-    /// window and the executing format's own window.
+    /// histogram and the executing format's own histogram.
     pub fn record_format_latency(&self, tag: &'static str, micros: u64) {
         self.record_latency(micros);
         let mut per = self.per_format.lock().unwrap();
         let stats = per.entry(tag).or_default();
         stats.completed += 1;
-        stats.ring.push(micros);
+        stats.hist.record(micros);
     }
 
     /// Record one failed request against both the aggregate `failed`
@@ -236,7 +323,7 @@ impl Metrics {
         per.get(tag).map(|s| FormatSummary {
             completed: s.completed,
             failed: s.failed,
-            latency: LatencySummary::from_samples(s.ring.buf.clone()),
+            latency: LatencySummary::from_hist(&s.hist),
         })
     }
 
@@ -247,7 +334,7 @@ impl Metrics {
 
     /// Record one whole iterative solve: its iteration count, outcome,
     /// and end-to-end latency. The solve is **one** submitted request and
-    /// **one** latency sample in the aggregate and per-format rings —
+    /// **one** latency sample in the aggregate and per-format histograms —
     /// never one per iteration (see the module docs for the p99-skew
     /// rationale).
     pub fn record_solve(&self, tag: &'static str, iterations: u64, converged: bool, micros: u64) {
@@ -258,7 +345,7 @@ impl Metrics {
         } else {
             self.solves_diverged.fetch_add(1, Ordering::Relaxed);
         }
-        self.solve_iters.lock().unwrap().push(iterations);
+        self.solve_iters.lock().unwrap().record(iterations);
         self.record_format_latency(tag, micros);
     }
 
@@ -275,7 +362,7 @@ impl Metrics {
     /// Snapshot the solver section: solve counts by outcome and
     /// iteration-count quantiles.
     pub fn solver_summary(&self) -> SolverSummary {
-        let iters = LatencySummary::from_samples(self.solve_iters.lock().unwrap().buf.clone());
+        let iters = LatencySummary::from_hist(&self.solve_iters.lock().unwrap());
         SolverSummary {
             solves: self.solves.load(Ordering::Relaxed),
             converged: self.solves_converged.load(Ordering::Relaxed),
@@ -287,35 +374,158 @@ impl Metrics {
         }
     }
 
-    /// Record one cold load (store fault-in) latency.
-    pub fn record_cold_load(&self, micros: u64) {
+    /// Record one cold load (store fault-in) latency for a known matrix:
+    /// counter + histogram + a standalone [`Stage::ColdLoad`] span.
+    pub fn record_cold_load_for(&self, id: u64, micros: u64) {
         self.cold_loads.fetch_add(1, Ordering::Relaxed);
-        self.cold_load_us.lock().unwrap().push(micros);
+        self.cold_load_us.lock().unwrap().record(micros);
+        let span = self.tracer.begin();
+        self.tracer.record(
+            span,
+            Stage::ColdLoad {
+                matrix: id,
+                dur_us: micros,
+            },
+        );
     }
 
-    /// Quantile summary over the request-latency window.
+    /// Record one cold load without a matrix id (kept for callers that
+    /// predate the tracing layer; the span carries id 0).
+    pub fn record_cold_load(&self, micros: u64) {
+        self.record_cold_load_for(0, micros);
+    }
+
+    /// Record one timed engine call's per-block spread
+    /// ([`SpmvEngine::run_timed`](crate::spmv::engine::SpmvEngine::run_timed)):
+    /// mean and slowest-block micros go to histograms, and the
+    /// slowest/mean ratio (×1000) becomes the imbalance gauge.
+    pub fn record_block_timing(&self, _min_us: u64, max_us: u64, mean_us: u64) {
+        self.block_mean_us.lock().unwrap().record(mean_us);
+        self.block_max_us.lock().unwrap().record(max_us);
+        let imb = max_us.saturating_mul(1000) / mean_us.max(1);
+        self.block_imbalance_milli.store(imb.max(1000), Ordering::Relaxed);
+    }
+
+    /// Per-block imbalance of the most recent timed engine call:
+    /// slowest / mean block micros (1.0 = perfectly balanced; 0.0 before
+    /// any timed call).
+    pub fn block_imbalance(&self) -> f64 {
+        self.block_imbalance_milli.load(Ordering::Relaxed) as f64 / 1000.0
+    }
+
+    /// Record one matrix's compression sizes at registration (dtANS-routed
+    /// matrices only — the paper's ratio is meaningless for CSR routes).
+    pub fn record_compression(&self, id: u64, name: &str, baseline_bytes: u64, encoded_bytes: u64) {
+        let mut p = self.paper.lock().unwrap();
+        let stats = p.entry(id).or_default();
+        stats.name = name.to_string();
+        stats.baseline_bytes = baseline_bytes;
+        stats.encoded_bytes = encoded_bytes;
+    }
+
+    /// Record one dtANS kernel run's decode throughput: `stream_bytes`
+    /// decoded in `micros` microseconds.
+    pub fn record_decode_rate(&self, id: u64, stream_bytes: u64, micros: u64) {
+        let bps = stream_bytes.saturating_mul(1_000_000) / micros.max(1);
+        let mut p = self.paper.lock().unwrap();
+        let stats = p.entry(id).or_default();
+        stats.decode_bps = bps;
+        stats.decode_samples += 1;
+    }
+
+    /// Paper-headline gauges per dtANS-routed matrix, in store-id order.
+    pub fn paper_summaries(&self) -> Vec<PaperSummary> {
+        self.paper
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&id, s)| PaperSummary {
+                id,
+                name: s.name.clone(),
+                baseline_bytes: s.baseline_bytes,
+                encoded_bytes: s.encoded_bytes,
+                ratio: s.baseline_bytes as f64 / s.encoded_bytes.max(1) as f64,
+                decode_bps: s.decode_bps,
+                decode_samples: s.decode_samples,
+            })
+            .collect()
+    }
+
+    /// Quantile summary over all recorded request latencies.
     pub fn latency_summary(&self) -> LatencySummary {
-        LatencySummary::from_samples(self.latencies_us.lock().unwrap().buf.clone())
+        LatencySummary::from_hist(&self.latencies_us.lock().unwrap())
     }
 
-    /// Quantile summary over the cold-load-latency window.
+    /// Quantile summary over all recorded cold-load latencies.
     pub fn cold_load_summary(&self) -> LatencySummary {
-        LatencySummary::from_samples(self.cold_load_us.lock().unwrap().buf.clone())
+        LatencySummary::from_hist(&self.cold_load_us.lock().unwrap())
+    }
+
+    /// Quantile summary over all recorded queue waits.
+    pub fn queue_wait_summary(&self) -> LatencySummary {
+        LatencySummary::from_hist(&self.queue_wait_us.lock().unwrap())
+    }
+
+    /// Quantile summary of mean-block micros across timed engine calls.
+    pub fn block_mean_summary(&self) -> LatencySummary {
+        LatencySummary::from_hist(&self.block_mean_us.lock().unwrap())
+    }
+
+    /// Quantile summary of slowest-block micros across timed engine calls.
+    pub fn block_max_summary(&self) -> LatencySummary {
+        LatencySummary::from_hist(&self.block_max_us.lock().unwrap())
+    }
+
+    /// Clone of the aggregate request-latency histogram (for exporters).
+    pub fn latency_histogram(&self) -> LogHistogram {
+        self.latencies_us.lock().unwrap().clone()
+    }
+
+    /// Clone of the cold-load-latency histogram.
+    pub fn cold_load_histogram(&self) -> LogHistogram {
+        self.cold_load_us.lock().unwrap().clone()
+    }
+
+    /// Clone of the queue-wait histogram.
+    pub fn queue_wait_histogram(&self) -> LogHistogram {
+        self.queue_wait_us.lock().unwrap().clone()
+    }
+
+    /// Clone of the mean-block-micros histogram.
+    pub fn block_mean_histogram(&self) -> LogHistogram {
+        self.block_mean_us.lock().unwrap().clone()
+    }
+
+    /// Clone of the slowest-block-micros histogram.
+    pub fn block_max_histogram(&self) -> LogHistogram {
+        self.block_max_us.lock().unwrap().clone()
+    }
+
+    /// Clone of the solve-iteration-count histogram.
+    pub fn solve_iters_histogram(&self) -> LogHistogram {
+        self.solve_iters.lock().unwrap().clone()
+    }
+
+    /// Clone of one format's latency histogram, if it has served requests.
+    pub fn format_histogram(&self, tag: &str) -> Option<LogHistogram> {
+        self.per_format.lock().unwrap().get(tag).map(|s| s.hist.clone())
     }
 
     /// One-line human-readable report: the aggregate counters and
-    /// quantiles, then a `solver:` section once any solve has run,
-    /// followed by one `fmt[tag]` section per format that has served
-    /// requests.
+    /// quantiles (now including queue wait and, once any timed engine
+    /// call ran, per-block imbalance), then a `solver:` section once any
+    /// solve has run, one `fmt[tag]` section per format that has served
+    /// requests, and one `paper[name]` section per dtANS-routed matrix.
     pub fn report(&self) -> String {
         let s = self.latency_summary();
         let c = self.cold_load_summary();
+        let q = self.queue_wait_summary();
         let mut out = format!(
             "submitted={} completed={} failed={} shed={} expired={} batches={} \
              coalesced_batches={} coalesced_requests={} queue_depth={} queue_peak={} \
              p50={}µs p99={}µs max={}µs \
              store_hits={} store_misses={} evictions={} persist_failures={} cold_loads={} \
-             acquires={} cold_p50={}µs cold_p99={}µs",
+             acquires={} cold_p50={}µs cold_p99={}µs qwait_p50={}µs qwait_p99={}µs",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -337,7 +547,18 @@ impl Metrics {
             self.acquires.load(Ordering::Relaxed),
             c.p50_us,
             c.p99_us,
+            q.p50_us,
+            q.p99_us,
         );
+        let bm = self.block_max_summary();
+        if bm.count > 0 {
+            out.push_str(&format!(
+                " blk_mean_p50={}µs blk_max_p99={}µs blk_imb={:.2}x",
+                self.block_mean_summary().p50_us,
+                bm.p99_us,
+                self.block_imbalance(),
+            ));
+        }
         let sv = self.solver_summary();
         if sv.solves > 0 {
             out.push_str(&format!(
@@ -347,10 +568,19 @@ impl Metrics {
         }
         let per = self.per_format.lock().unwrap();
         for (tag, stats) in per.iter() {
-            let f = LatencySummary::from_samples(stats.ring.buf.clone());
+            let f = LatencySummary::from_hist(&stats.hist);
             out.push_str(&format!(
                 " | fmt[{tag}]: ok={} fail={} p50={}µs p99={}µs",
                 stats.completed, stats.failed, f.p50_us, f.p99_us
+            ));
+        }
+        drop(per);
+        for p in self.paper_summaries() {
+            out.push_str(&format!(
+                " | paper[{}]: ratio={:.2}x decode={:.1}MB/s",
+                p.name,
+                p.ratio,
+                p.decode_bps as f64 / 1e6,
             ));
         }
         out
@@ -370,6 +600,7 @@ mod tests {
         let s = m.latency_summary();
         assert_eq!(s.count, 100);
         assert!((49..=51).contains(&s.p50_us));
+        assert!(s.p90_us >= 89);
         assert!(s.p99_us >= 98);
         assert_eq!(s.max_us, 100);
     }
@@ -382,26 +613,21 @@ mod tests {
     }
 
     #[test]
-    fn ring_slides_one_sample_at_a_time() {
+    fn histogram_counts_every_sample_exactly() {
+        // The pre-PR-7 rings windowed to the most recent 64k samples; the
+        // histograms count everything with bounded quantile error.
         let m = Metrics::default();
-        let n = RESERVOIR_CAP + 1000;
+        let n: u64 = 70_000;
         for i in 0..n {
-            m.record_latency(i as u64);
+            m.record_latency(i);
         }
         let s = m.latency_summary();
-        assert_eq!(s.count, RESERVOIR_CAP);
-        // Window is exactly the most recent CAP samples: [1000, n).
-        assert_eq!(s.max_us, (n - 1) as u64);
-        assert!(s.p50_us >= 1000);
-        // The median sits mid-window — the old drain-half behavior would
-        // have put it deep in the recent half right after a drain.
-        let mid = 1000 + RESERVOIR_CAP as u64 / 2;
-        assert!(
-            (s.p50_us as i64 - mid as i64).abs() <= 1,
-            "p50 {} not centered on {mid}",
-            s.p50_us
-        );
-        assert_eq!(m.completed.load(Ordering::Relaxed), n as u64);
+        assert_eq!(s.count as u64, n);
+        assert_eq!(s.max_us, n - 1);
+        let mid = n as f64 / 2.0;
+        let rel = (s.p50_us as f64 - mid).abs() / mid;
+        assert!(rel <= 0.02, "p50 {} vs exact {mid} (rel {rel})", s.p50_us);
+        assert_eq!(m.completed.load(Ordering::Relaxed), n);
     }
 
     #[test]
@@ -418,7 +644,7 @@ mod tests {
         assert_eq!(m.completed.load(Ordering::Relaxed), 71);
         assert_eq!(m.failed.load(Ordering::Relaxed), 1);
         assert_eq!(m.latency_summary().count, 71);
-        // Per-format windows are disjoint.
+        // Per-format histograms are disjoint.
         let csr = m.format_summary("csr").unwrap();
         assert_eq!((csr.completed, csr.failed), (50, 0));
         assert_eq!(csr.latency.count, 50);
@@ -446,8 +672,8 @@ mod tests {
         assert_eq!((s.solves, s.converged, s.diverged), (3, 1, 1));
         assert_eq!(s.iters_count, 2);
         assert_eq!(s.iters_max, 500);
-        // The iteration counts must NOT have flooded the latency rings:
-        // one completed sample per successful solve, exactly.
+        // The iteration counts must NOT have flooded the latency
+        // histograms: one completed sample per successful solve, exactly.
         assert_eq!(m.latency_summary().count, 2);
         assert_eq!(m.completed.load(Ordering::Relaxed), 2);
         assert_eq!(m.failed.load(Ordering::Relaxed), 1);
@@ -501,11 +727,11 @@ mod tests {
     }
 
     #[test]
-    fn cold_load_reservoir_is_independent() {
+    fn cold_load_histogram_is_independent() {
         let m = Metrics::default();
         m.record_latency(10);
         m.record_cold_load(5000);
-        m.record_cold_load(7000);
+        m.record_cold_load_for(3, 7000);
         assert_eq!(m.latency_summary().count, 1);
         let c = m.cold_load_summary();
         assert_eq!(c.count, 2);
@@ -513,5 +739,75 @@ mod tests {
         assert_eq!(m.cold_loads.load(Ordering::Relaxed), 2);
         assert_eq!(m.completed.load(Ordering::Relaxed), 1);
         assert!(m.report().contains("cold_loads=2"));
+        // Cold loads also left standalone spans behind.
+        let events = m.tracer().drain();
+        assert_eq!(events.len(), 2);
+        assert!(events
+            .iter()
+            .all(|e| matches!(e.stage, crate::obs::span::Stage::ColdLoad { .. })));
+    }
+
+    #[test]
+    fn queue_wait_and_block_timing_reach_the_report() {
+        let m = Metrics::default();
+        m.record_queue_wait(40);
+        m.record_queue_wait(60);
+        let q = m.queue_wait_summary();
+        assert_eq!(q.count, 2);
+        assert_eq!(q.max_us, 60);
+        // Report shows queue wait even before any block timing...
+        let report = m.report();
+        assert!(report.contains("qwait_p50="), "{report}");
+        assert!(!report.contains("blk_imb="), "{report}");
+        // ...and the block section appears once a timed call lands.
+        m.record_block_timing(80, 120, 100);
+        assert!((m.block_imbalance() - 1.2).abs() < 1e-9);
+        assert_eq!(m.block_max_summary().max_us, 120);
+        assert_eq!(m.block_mean_summary().count, 1);
+        assert!(m.report().contains("blk_imb=1.20x"), "{}", m.report());
+    }
+
+    #[test]
+    fn tenant_counts_track_admission_outcomes() {
+        let m = Metrics::default();
+        m.record_tenant("acme", true);
+        m.record_tenant("acme", true);
+        m.record_tenant("acme", false);
+        m.record_tenant("zeta", true);
+        assert_eq!(
+            m.tenant_counts(),
+            vec![("acme".to_string(), 2, 1), ("zeta".to_string(), 1, 0)]
+        );
+    }
+
+    #[test]
+    fn paper_gauges_report_ratio_and_decode_rate() {
+        let m = Metrics::default();
+        m.record_compression(1, "web-graph", 3_000_000, 1_000_000);
+        // 2 MB of stream decoded in 1000µs = 2 GB/s.
+        m.record_decode_rate(1, 2_000_000, 1000);
+        m.record_decode_rate(1, 2_000_000, 2000);
+        let p = m.paper_summaries();
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].name, "web-graph");
+        assert!((p[0].ratio - 3.0).abs() < 1e-9);
+        assert_eq!(p[0].decode_bps, 1_000_000_000);
+        assert_eq!(p[0].decode_samples, 2);
+        let report = m.report();
+        assert!(report.contains("paper[web-graph]: ratio=3.00x"), "{report}");
+    }
+
+    #[test]
+    fn with_obs_configures_the_tracer() {
+        let m = Metrics::with_obs(ObsConfig {
+            sample_one_in: 0,
+            capacity: 8,
+        });
+        assert!(m.tracer().is_off());
+        // Cold loads still count even with tracing off — only the span
+        // is suppressed.
+        m.record_cold_load_for(1, 100);
+        assert_eq!(m.cold_loads.load(Ordering::Relaxed), 1);
+        assert!(m.tracer().drain().is_empty());
     }
 }

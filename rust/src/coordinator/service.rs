@@ -53,6 +53,7 @@ use super::metrics::Metrics;
 use super::router::{FormatChoice, RoutePolicy};
 use crate::format::csr_dtans::EncodeOptions;
 use crate::matrix::csr::Csr;
+use crate::obs::{ObsConfig, SpanId, Stage};
 use crate::solver::{self, PowerSolution, Solution, SolveMethod, SolverConfig};
 use crate::spmv::densemat::DenseMat;
 use crate::spmv::engine::{ParStrategy, SpmvEngine};
@@ -73,6 +74,10 @@ struct Job {
     x: Vec<f64>,
     submitted: Instant,
     resp: Sender<Result<Vec<f64>>>,
+    /// Trace span opened at submit ([`SpanId::NONE`] when unsampled —
+    /// every `record` on it is a no-op, so the pipeline never branches
+    /// on the tracing config).
+    span: SpanId,
 }
 
 /// One dispatched SpMVM request (admission already passed, deadline
@@ -82,6 +87,7 @@ struct Request {
     x: Vec<f64>,
     submitted: Instant,
     resp: Sender<Result<Vec<f64>>>,
+    span: SpanId,
 }
 
 /// Service configuration.
@@ -107,6 +113,11 @@ pub struct ServiceConfig {
     /// Admission control: bounded queue depth, coalescing gather window,
     /// per-tenant quotas (see [`AdmissionConfig`] and `docs/SERVING.md`).
     pub admission: AdmissionConfig,
+    /// Observability: request-flow span sampling and collector capacity
+    /// (see [`ObsConfig`] and `docs/OBSERVABILITY.md`). The default
+    /// traces every request; `sample_one_in: 0` turns the tracer off
+    /// entirely (kernels run untimed, spans cost nothing).
+    pub obs: ObsConfig,
 }
 
 impl Default for ServiceConfig {
@@ -119,6 +130,7 @@ impl Default for ServiceConfig {
             par: ParStrategy::Auto,
             store: StoreConfig::default(),
             admission: AdmissionConfig::default(),
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -161,7 +173,7 @@ impl SpmvService {
 
     /// Start the service with `config`.
     pub fn try_start(config: ServiceConfig) -> Result<SpmvService> {
-        let metrics = Arc::new(Metrics::default());
+        let metrics = Arc::new(Metrics::with_obs(config.obs));
         let store = Arc::new(MatrixStore::new(
             config.store.clone(),
             config.encode,
@@ -236,14 +248,24 @@ impl SpmvService {
     pub fn submit_with(&self, matrix: u64, x: Vec<f64>, opts: SubmitOptions) -> Result<Pending> {
         let (tx, rx) = channel();
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
-        let job = Job { x, submitted: Instant::now(), resp: tx };
+        let tracer = self.metrics.tracer();
+        let span = tracer.begin();
+        tracer.record(span, Stage::Submitted { matrix });
+        let job = Job { x, submitted: Instant::now(), resp: tx, span };
         match self.queue.push(matrix, &opts, job) {
             Ok(depth) => {
+                if let Some(tenant) = &opts.tenant {
+                    self.metrics.record_tenant(tenant, true);
+                }
                 self.metrics.note_queue_depth(depth as u64);
                 Ok(Pending { rx })
             }
             Err(e) => {
+                if let Some(tenant) = &opts.tenant {
+                    self.metrics.record_tenant(tenant, false);
+                }
                 self.metrics.record_shed(matches!(e, DtansError::QuotaExceeded { .. }));
+                tracer.record(span, Stage::Shed);
                 Err(e)
             }
         }
@@ -340,6 +362,12 @@ impl SpmvService {
         report_of: impl Fn(&T) -> &solver::SolveReport,
     ) -> Result<T> {
         let t0 = Instant::now();
+        // Solves are requests too: they open a span (so the conservation
+        // oracle's "one terminal per Submitted" holds across every path
+        // that touches the submitted/completed/failed counters).
+        let tracer = self.metrics.tracer();
+        let span = tracer.begin();
+        tracer.record(span, Stage::Submitted { matrix });
         let pinned = match self.store.acquire(matrix) {
             Ok(p) => p, // the solve's one pin, held until this fn returns
             Err(e) => {
@@ -348,22 +376,24 @@ impl SpmvService {
                 // as the spmv path counts an unknown-matrix request.
                 self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
                 self.metrics.failed.fetch_add(1, Ordering::Relaxed);
+                tracer.record(span, Stage::Failed);
                 return Err(e);
             }
         };
+        tracer.record(span, Stage::Pinned);
         let tag = pinned.op.format_tag();
         let result = run(&self.engine, pinned.op.as_ref());
         match &result {
             Ok(sol) => {
                 let r = report_of(sol);
-                self.metrics.record_solve(
-                    tag,
-                    r.iterations as u64,
-                    r.converged(),
-                    t0.elapsed().as_micros() as u64,
-                );
+                let total_us = t0.elapsed().as_micros() as u64;
+                self.metrics.record_solve(tag, r.iterations as u64, r.converged(), total_us);
+                tracer.record(span, Stage::Completed { total_us });
             }
-            Err(_) => self.metrics.record_solve_failure(tag),
+            Err(_) => {
+                self.metrics.record_solve_failure(tag);
+                tracer.record(span, Stage::Failed);
+            }
         }
         result
     }
@@ -395,12 +425,17 @@ fn dispatcher_loop(
     cfg: ServiceConfig,
 ) {
     let pool = crate::util::threadpool::ThreadPool::new(cfg.workers);
+    if !metrics.tracer().is_off() {
+        metrics.tracer().label_current_track("dispatcher");
+    }
     // Each take_batch returns one coalesced batch: ALL queued requests
     // for the dispatch target's matrix, across priority lanes, up to
     // max_batch — vLLM-style continuous batching, but gathered over the
-    // whole queue instead of only consecutive arrivals.
-    while let Some(admitted) = queue.take_batch(cfg.max_batch) {
-        metrics.note_queue_depth(queue.len() as u64);
+    // whole queue instead of only consecutive arrivals. The residual
+    // depth rides along from under the queue lock, so the gauge reflects
+    // the dequeue exactly (no window for a racing submit to skew it).
+    while let Some((admitted, depth)) = queue.take_batch_depth(cfg.max_batch) {
+        metrics.note_queue_depth(depth as u64);
         // The single expiry point: a request whose deadline elapsed
         // while queued is rejected here, before any kernel work or store
         // pin. (`deadline <= now` — the queue wait is strictly positive
@@ -409,15 +444,22 @@ fn dispatcher_loop(
         let now = Instant::now();
         let mut batch: Vec<Request> = Vec::with_capacity(admitted.len());
         for a in admitted {
+            let span = a.payload.span;
+            let wait_us = now.saturating_duration_since(a.enqueued).as_micros() as u64;
+            metrics.record_queue_wait(wait_us);
+            metrics.tracer().record(span, Stage::Queued { wait_us });
             if a.deadline.is_some_and(|d| d <= now) {
                 metrics.record_expired();
+                metrics.tracer().record(span, Stage::Expired);
                 let _ = a.payload.resp.send(Err(DtansError::DeadlineExceeded));
             } else {
+                metrics.tracer().record(span, Stage::Dispatched);
                 batch.push(Request {
                     matrix: a.matrix,
                     x: a.payload.x,
                     submitted: a.payload.submitted,
                     resp: a.payload.resp,
+                    span,
                 });
             }
         }
@@ -462,22 +504,34 @@ fn dispatcher_loop(
                 let store = Arc::clone(&store);
                 let engine = Arc::clone(&engine);
                 let metrics = Arc::clone(&metrics);
-                pool.execute(move || match store.acquire(req.matrix) {
-                    Err(e) => {
-                        metrics.failed.fetch_add(1, Ordering::Relaxed);
-                        let _ = req.resp.send(Err(e));
+                pool.execute(move || {
+                    let tracer = metrics.tracer();
+                    if !tracer.is_off() {
+                        tracer.label_current_track("worker");
                     }
-                    Ok(pinned) => {
-                        let tag = pinned.op.format_tag();
-                        let result = run_one(&pinned, &engine, &req.x);
-                        match &result {
-                            Ok(_) => metrics.record_format_latency(
-                                tag,
-                                req.submitted.elapsed().as_micros() as u64,
-                            ),
-                            Err(_) => metrics.record_format_failure(tag),
+                    match store.acquire(req.matrix) {
+                        Err(e) => {
+                            metrics.failed.fetch_add(1, Ordering::Relaxed);
+                            tracer.record(req.span, Stage::Failed);
+                            let _ = req.resp.send(Err(e));
                         }
-                        let _ = req.resp.send(result);
+                        Ok(pinned) => {
+                            tracer.record(req.span, Stage::Pinned);
+                            let tag = pinned.op.format_tag();
+                            let result = run_one(&pinned, &engine, &req.x, req.span, &metrics);
+                            match &result {
+                                Ok(_) => {
+                                    let total_us = req.submitted.elapsed().as_micros() as u64;
+                                    metrics.record_format_latency(tag, total_us);
+                                    tracer.record(req.span, Stage::Completed { total_us });
+                                }
+                                Err(_) => {
+                                    metrics.record_format_failure(tag);
+                                    tracer.record(req.span, Stage::Failed);
+                                }
+                            }
+                            let _ = req.resp.send(result);
+                        }
                     }
                 });
             }
@@ -496,14 +550,22 @@ fn process_batch(
     metrics: &Metrics,
     batch: Vec<Request>,
 ) {
+    let tracer = metrics.tracer();
+    if !tracer.is_off() {
+        tracer.label_current_track("worker");
+    }
     match store.acquire(batch[0].matrix) {
         Err(e) => {
             for req in batch {
                 metrics.failed.fetch_add(1, Ordering::Relaxed);
+                tracer.record(req.span, Stage::Failed);
                 let _ = req.resp.send(Err(e.duplicate()));
             }
         }
         Ok(pinned) if batch.len() > 1 && engine.will_batch_parallel(pinned.nnz, batch.len()) => {
+            for req in &batch {
+                tracer.record(req.span, Stage::Pinned);
+            }
             run_spmm_batch(&pinned, batch, engine, metrics);
         }
         Ok(pinned) => {
@@ -516,11 +578,18 @@ fn process_batch(
             // pool to own an Arc of itself (a self-join hazard on drop).
             let tag = pinned.op.format_tag();
             for req in batch {
-                let result = run_one(&pinned, engine, &req.x);
+                tracer.record(req.span, Stage::Pinned);
+                let result = run_one(&pinned, engine, &req.x, req.span, metrics);
                 match &result {
-                    Ok(_) => metrics
-                        .record_format_latency(tag, req.submitted.elapsed().as_micros() as u64),
-                    Err(_) => metrics.record_format_failure(tag),
+                    Ok(_) => {
+                        let total_us = req.submitted.elapsed().as_micros() as u64;
+                        metrics.record_format_latency(tag, total_us);
+                        tracer.record(req.span, Stage::Completed { total_us });
+                    }
+                    Err(_) => {
+                        metrics.record_format_failure(tag);
+                        tracer.record(req.span, Stage::Failed);
+                    }
                 }
                 let _ = req.resp.send(result);
             }
@@ -540,16 +609,23 @@ fn run_spmm_batch(
     metrics: &Metrics,
 ) {
     let mat: &LoadedMatrix = pinned;
+    let tracer = metrics.tracer();
     let tag = mat.op.format_tag();
     let (nrows, ncols) = (mat.nrows, mat.ncols);
+    // One batch id shared by every span in this coalesced dispatch — the
+    // trace-side witness that these requests rode one engine call.
+    let batch_id = tracer.batch_id();
+    let size = batch.len() as u32;
     let mut xs = Vec::with_capacity(batch.len());
     let mut accepted = Vec::with_capacity(batch.len());
     for req in batch {
+        tracer.record(req.span, Stage::Coalesced { batch: batch_id, size });
         if req.x.len() == ncols {
             xs.push(req.x);
-            accepted.push((req.resp, req.submitted));
+            accepted.push((req.resp, req.submitted, req.span));
         } else {
             metrics.record_format_failure(tag);
+            tracer.record(req.span, Stage::Failed);
             // Same message shape as the per-request path (check_dims with
             // the nrows-sized output the run would have used), so clients
             // see one error text regardless of how requests batched.
@@ -563,12 +639,44 @@ fn run_spmm_batch(
         return;
     }
     // Lengths were pre-checked against ncols, so packing cannot fail.
+    let t0 = Instant::now();
     let result = DenseMat::from_cols(ncols, &xs)
         .and_then(|xs_mat| engine.run_multi(mat.op.as_ref(), &xs_mat));
+    let dur_us = t0.elapsed().as_micros() as u64;
     match result {
         Ok(ys) => {
-            for ((resp, submitted), y) in accepted.into_iter().zip(ys.into_cols()) {
-                metrics.record_format_latency(tag, submitted.elapsed().as_micros() as u64);
+            if !tracer.is_off() {
+                let blocks = engine.batch_blocks(mat.nnz, accepted.len()) as u32;
+                if tag == "csr_dtans" {
+                    // The batched kernel decodes the stream once per
+                    // right-hand side; charge all of it to this one call.
+                    metrics.record_decode_rate(
+                        pinned.id(),
+                        mat.enc.size_report().stream as u64 * accepted.len() as u64,
+                        dur_us,
+                    );
+                }
+                for (_, _, span) in &accepted {
+                    // Per-block spread is not measured on the batched path
+                    // (the grid fans over requests × blocks); min/max/mean
+                    // are 0 by convention, dur_us is the whole-call time.
+                    tracer.record(
+                        *span,
+                        Stage::Kernel {
+                            format: tag,
+                            blocks,
+                            min_us: 0,
+                            max_us: 0,
+                            mean_us: 0,
+                            dur_us,
+                        },
+                    );
+                }
+            }
+            for ((resp, submitted, span), y) in accepted.into_iter().zip(ys.into_cols()) {
+                let total_us = submitted.elapsed().as_micros() as u64;
+                metrics.record_format_latency(tag, total_us);
+                tracer.record(span, Stage::Completed { total_us });
                 let _ = resp.send(Ok(y));
             }
         }
@@ -576,17 +684,53 @@ fn run_spmm_batch(
             // Decode-level failures are a property of the matrix, so every
             // request in the batch sees the same error — with its variant
             // preserved, exactly as the per-request path would report it.
-            for (resp, _) in accepted {
+            for (resp, _, span) in accepted {
                 metrics.record_format_failure(tag);
+                tracer.record(span, Stage::Failed);
                 let _ = resp.send(Err(e.duplicate()));
             }
         }
     }
 }
 
-fn run_one(mat: &LoadedMatrix, engine: &SpmvEngine, x: &[f64]) -> Result<Vec<f64>> {
+/// One SpMV on the engine. With tracing on, runs through the per-block
+/// timed entry point: the block spread lands in the imbalance histograms,
+/// dtANS-routed matrices get a decode-throughput sample, and the span
+/// gets its `Kernel` stage. With the tracer off this is exactly the old
+/// untimed `engine.run` — zero observability overhead.
+fn run_one(
+    pinned: &PinnedMatrix,
+    engine: &SpmvEngine,
+    x: &[f64],
+    span: SpanId,
+    metrics: &Metrics,
+) -> Result<Vec<f64>> {
+    let mat: &LoadedMatrix = pinned;
     let mut y = vec![0.0; mat.nrows];
-    engine.run(mat.op.as_ref(), x, &mut y)?;
+    let tracer = metrics.tracer();
+    if tracer.is_off() {
+        engine.run(mat.op.as_ref(), x, &mut y)?;
+        return Ok(y);
+    }
+    let t0 = Instant::now();
+    let timing = engine.run_timed(mat.op.as_ref(), x, &mut y)?;
+    let dur_us = t0.elapsed().as_micros() as u64;
+    metrics.record_block_timing(timing.min_us, timing.max_us, timing.mean_us);
+    let tag = mat.op.format_tag();
+    if tag == "csr_dtans" {
+        metrics.record_decode_rate(pinned.id(), mat.enc.size_report().stream as u64, dur_us);
+    }
+    tracer.record(
+        span,
+        Stage::Kernel {
+            format: tag,
+            blocks: timing.blocks as u32,
+            min_us: timing.min_us,
+            max_us: timing.max_us,
+            mean_us: timing.mean_us,
+            dur_us,
+        },
+    );
     Ok(y)
 }
 
@@ -755,6 +899,49 @@ mod tests {
             assert_eq!(p.wait().unwrap().len(), 64);
         }
         assert_eq!(metrics.completed.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn queue_depth_gauge_falls_on_dequeue() {
+        // Regression guard for the gauge's dequeue side: stage requests
+        // behind the pause gate (submit-side pushes the gauge up), then
+        // release and drain — the dispatcher's take_batch_depth must pull
+        // the gauge back down to the true residual, not leave it stuck at
+        // the last submit-side value.
+        let svc = SpmvService::start(ServiceConfig::default());
+        let m = banded(64, 2);
+        let id = svc.register("m", m).unwrap();
+        svc.pause_dispatch();
+        let pendings: Vec<Pending> =
+            (0..3).map(|_| svc.submit(id, vec![1.0; 64]).unwrap()).collect();
+        assert_eq!(svc.metrics.queue_depth.load(Ordering::Relaxed), 3);
+        assert!(svc.metrics.queue_depth_peak.load(Ordering::Relaxed) >= 3);
+        svc.resume_dispatch();
+        for p in pendings {
+            p.wait().unwrap();
+        }
+        assert_eq!(svc.metrics.queue_depth.load(Ordering::Relaxed), 0);
+        // Every dispatched request left a queue-wait sample (and the
+        // waits are real: the gate held them queued until resume).
+        assert_eq!(svc.metrics.queue_wait_summary().count, 3);
+    }
+
+    #[test]
+    fn spans_chain_through_submit_dispatch_and_kernel() {
+        let svc = SpmvService::start(ServiceConfig::default());
+        let m = banded(100, 2);
+        let id = svc.register("m", m).unwrap();
+        svc.spmv(id, vec![1.0; 100]).unwrap();
+        let events = svc.metrics.tracer().drain();
+        // One request end to end: submitted -> queued -> dispatched ->
+        // pinned -> kernel -> completed, all on the same span.
+        let names: Vec<&str> = events.iter().map(|e| e.stage.name()).collect();
+        for want in ["submitted", "queued", "dispatched", "pinned", "kernel", "completed"] {
+            assert!(names.contains(&want), "missing {want} in {names:?}");
+        }
+        let span = events[0].span;
+        assert!(events.iter().all(|e| e.span == span));
+        assert_eq!(events.iter().filter(|e| e.stage.is_terminal()).count(), 1);
     }
 
     #[test]

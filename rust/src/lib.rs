@@ -50,6 +50,13 @@
 //!   per-tenant quotas, cross-request coalescing into SpMM batches
 //!   (see `docs/SERVING.md`), plus router, worker pool and metrics,
 //!   built on the native and PJRT execution paths.
+//! * [`obs`] — observability: per-request span chains through the
+//!   admission pipeline (drainable as structured events or Chrome
+//!   trace-event JSON for Perfetto), HDR-style log-bucketed histograms
+//!   backing every latency distribution in the coordinator's `Metrics`,
+//!   and Prometheus/JSON metric export with per-matrix paper-headline
+//!   gauges (compression ratio, decode throughput) — see
+//!   `docs/OBSERVABILITY.md`.
 //! * [`store`] — the tiered matrix store under the coordinator: a
 //!   content-addressed on-disk artifact cache (re-registering a known
 //!   matrix skips encoding), memory-budgeted LRU residency with pinning,
@@ -90,6 +97,7 @@ pub mod coordinator;
 pub mod eval;
 pub mod format;
 pub mod matrix;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod solver;

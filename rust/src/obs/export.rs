@@ -1,0 +1,458 @@
+//! Metrics export: Prometheus text exposition and a JSON snapshot.
+//!
+//! [`prometheus_text`] renders every counter, gauge, and histogram in
+//! [`Metrics`] in the Prometheus text exposition format (version 0.0.4):
+//! stable `dtans_`-prefixed metric names, `# HELP`/`# TYPE` headers on
+//! every family, and `format` / `tenant` / `stage` / `matrix` / `stat`
+//! labels where a family breaks out. The name/label contract is
+//! documented in `docs/OBSERVABILITY.md` and validated hermetically by
+//! `scripts/check_prom.py` (charset, header pairing, monotone cumulative
+//! buckets) — run the `observability` example to produce a live
+//! exposition to feed it.
+//!
+//! [`metrics_json`] is the same surface as one JSON object — the benches
+//! embed it in their `results/BENCH_*.json` artifacts.
+//!
+//! Histogram families render the standard cumulative `_bucket{le=...}` /
+//! `_sum` / `_count` triplet. The `le` bounds are powers of four: each is
+//! a [`LogHistogram`] bucket boundary, so the cumulative counts are exact
+//! (`LogHistogram::count_le` is resolution-limited only between
+//! boundaries) and monotone by construction.
+
+use crate::coordinator::metrics::Metrics;
+use crate::obs::hist::LogHistogram;
+use std::fmt::Write as _;
+use std::sync::atomic::Ordering;
+
+/// Cumulative-bucket upper bounds (µs for latencies, plain counts for
+/// iterations) — powers of four from 1 to ~4.2M, then `+Inf`.
+const LE_BOUNDS: [u64; 12] = [
+    1,
+    4,
+    16,
+    64,
+    256,
+    1024,
+    4096,
+    16384,
+    65536,
+    262144,
+    1_048_576,
+    4_194_304,
+];
+
+/// Escape a label value per the exposition format (`\`, `"`, newline).
+fn escape_label(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// One `counter` or `gauge` family with a single unlabeled sample.
+fn scalar(out: &mut String, name: &str, kind: &str, help: &str, value: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+    let _ = writeln!(out, "{name} {value}");
+}
+
+/// The bucket/sum/count triplet for one histogram series. `labels` is
+/// the rendered label-pair prefix (e.g. `stage="queue_wait"`), empty for
+/// unlabeled series.
+fn hist_series(out: &mut String, name: &str, labels: &str, h: &LogHistogram) {
+    let sep = if labels.is_empty() { "" } else { "," };
+    for b in LE_BOUNDS {
+        let _ = writeln!(
+            out,
+            "{name}_bucket{{{labels}{sep}le=\"{b}\"}} {}",
+            h.count_le(b)
+        );
+    }
+    let _ = writeln!(out, "{name}_bucket{{{labels}{sep}le=\"+Inf\"}} {}", h.count());
+    if labels.is_empty() {
+        let _ = writeln!(out, "{name}_sum {}", h.sum());
+        let _ = writeln!(out, "{name}_count {}", h.count());
+    } else {
+        let _ = writeln!(out, "{name}_sum{{{labels}}} {}", h.sum());
+        let _ = writeln!(out, "{name}_count{{{labels}}} {}", h.count());
+    }
+}
+
+/// A histogram family: HELP/TYPE header plus one or more labeled series.
+fn hist_family(
+    out: &mut String,
+    name: &str,
+    help: &str,
+    series: &[(String, LogHistogram)],
+) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    for (labels, h) in series {
+        hist_series(out, name, labels, h);
+    }
+}
+
+/// Render the full metrics surface in the Prometheus text exposition
+/// format. See the module docs for the name/label contract.
+pub fn prometheus_text(m: &Metrics) -> String {
+    let mut out = String::with_capacity(8192);
+    let c = |a: &std::sync::atomic::AtomicU64| a.load(Ordering::Relaxed);
+
+    // Request lifecycle counters (the conservation identity's terms).
+    scalar(&mut out, "dtans_requests_submitted_total", "counter",
+        "Requests accepted by submit (completed+failed+shed+expired reconciles to this).",
+        c(&m.submitted));
+    scalar(&mut out, "dtans_requests_completed_total", "counter",
+        "Requests completed successfully.", c(&m.completed));
+    scalar(&mut out, "dtans_requests_failed_total", "counter",
+        "Requests failed in the store or kernel.", c(&m.failed));
+    scalar(&mut out, "dtans_requests_shed_total", "counter",
+        "Requests shed at admission (queue full, quota, or closed).", c(&m.shed));
+    scalar(&mut out, "dtans_requests_quota_rejected_total", "counter",
+        "Subset of shed: per-tenant token-bucket rejections.", c(&m.quota_rejected));
+    scalar(&mut out, "dtans_requests_expired_total", "counter",
+        "Requests whose deadline elapsed before execution.", c(&m.expired));
+
+    // Dispatch / coalescing.
+    scalar(&mut out, "dtans_batches_total", "counter",
+        "Dispatcher batches executed.", c(&m.batches));
+    scalar(&mut out, "dtans_coalesced_batches_total", "counter",
+        "Same-matrix batches served by one SpMM engine call.", c(&m.coalesced_batches));
+    scalar(&mut out, "dtans_coalesced_requests_total", "counter",
+        "Requests served through coalesced batches.", c(&m.coalesced_requests));
+    scalar(&mut out, "dtans_queue_depth", "gauge",
+        "Admission-queue depth after the most recent submit or dispatch.",
+        c(&m.queue_depth));
+    scalar(&mut out, "dtans_queue_depth_peak", "gauge",
+        "High-water mark of the admission queue.", c(&m.queue_depth_peak));
+
+    // Store counters.
+    scalar(&mut out, "dtans_store_hits_total", "counter",
+        "Registrations served from the artifact cache.", c(&m.store_hits));
+    scalar(&mut out, "dtans_store_misses_total", "counter",
+        "Registrations that had to encode.", c(&m.store_misses));
+    scalar(&mut out, "dtans_store_evictions_total", "counter",
+        "Matrices evicted from residency by the byte budget.", c(&m.evictions));
+    scalar(&mut out, "dtans_store_persist_failures_total", "counter",
+        "Background artifact persists that failed.", c(&m.persist_failures));
+    scalar(&mut out, "dtans_store_cold_loads_total", "counter",
+        "Evicted matrices faulted back in from disk.", c(&m.cold_loads));
+    scalar(&mut out, "dtans_store_acquires_total", "counter",
+        "Successful store pin acquisitions.", c(&m.acquires));
+
+    // Solver counters.
+    scalar(&mut out, "dtans_solves_total", "counter",
+        "Iterative solve attempts through the service.", c(&m.solves));
+    scalar(&mut out, "dtans_solves_converged_total", "counter",
+        "Solves that reached tolerance.", c(&m.solves_converged));
+    scalar(&mut out, "dtans_solves_diverged_total", "counter",
+        "Solves that ran but did not converge.", c(&m.solves_diverged));
+
+    // Tracer health.
+    scalar(&mut out, "dtans_trace_events_recorded_total", "counter",
+        "Span events recorded by the tracer.", m.tracer().recorded());
+    scalar(&mut out, "dtans_trace_events_dropped_total", "counter",
+        "Span events lost to ring overwrites.", m.tracer().dropped());
+
+    // Partition imbalance gauge (slowest/mean block of the last timed
+    // engine call; 0 before any timed call).
+    let _ = writeln!(out,
+        "# HELP dtans_block_imbalance_ratio Slowest/mean block micros of the most recent timed engine call.");
+    let _ = writeln!(out, "# TYPE dtans_block_imbalance_ratio gauge");
+    let _ = writeln!(out, "dtans_block_imbalance_ratio {}", m.block_imbalance());
+
+    // Aggregate latency histogram.
+    hist_family(&mut out, "dtans_request_latency_microseconds",
+        "End-to-end request latency (submit to response).",
+        &[(String::new(), m.latency_histogram())]);
+
+    // Stage durations: queue wait + cold load share one family.
+    hist_family(&mut out, "dtans_stage_duration_microseconds",
+        "Time spent per pipeline stage.",
+        &[
+            ("stage=\"queue_wait\"".to_string(), m.queue_wait_histogram()),
+            ("stage=\"cold_load\"".to_string(), m.cold_load_histogram()),
+        ]);
+
+    // Per-block kernel timing (partition-imbalance evidence).
+    hist_family(&mut out, "dtans_kernel_block_microseconds",
+        "Per-call block timing from timed engine runs.",
+        &[
+            ("stat=\"mean\"".to_string(), m.block_mean_histogram()),
+            ("stat=\"max\"".to_string(), m.block_max_histogram()),
+        ]);
+
+    // Solve iteration counts.
+    hist_family(&mut out, "dtans_solve_iterations",
+        "Iterations per solve (count units, not micros).",
+        &[(String::new(), m.solve_iters_histogram())]);
+
+    // Per-format breakdown: counters + latency histograms.
+    let tags = m.format_tags();
+    if !tags.is_empty() {
+        let _ = writeln!(out,
+            "# HELP dtans_format_requests_total Requests by executing kernel format and outcome.");
+        let _ = writeln!(out, "# TYPE dtans_format_requests_total counter");
+        for tag in &tags {
+            if let Some(s) = m.format_summary(tag) {
+                let _ = writeln!(out,
+                    "dtans_format_requests_total{{format=\"{tag}\",outcome=\"completed\"}} {}",
+                    s.completed);
+                let _ = writeln!(out,
+                    "dtans_format_requests_total{{format=\"{tag}\",outcome=\"failed\"}} {}",
+                    s.failed);
+            }
+        }
+        let series: Vec<(String, LogHistogram)> = tags
+            .iter()
+            .filter_map(|tag| {
+                m.format_histogram(tag)
+                    .map(|h| (format!("format=\"{tag}\""), h))
+            })
+            .collect();
+        hist_family(&mut out, "dtans_format_latency_microseconds",
+            "Request latency by executing kernel format.", &series);
+    }
+
+    // Per-tenant admission outcomes.
+    let tenants = m.tenant_counts();
+    if !tenants.is_empty() {
+        let _ = writeln!(out,
+            "# HELP dtans_tenant_requests_total Admission outcomes per named tenant.");
+        let _ = writeln!(out, "# TYPE dtans_tenant_requests_total counter");
+        for (name, admitted, shed) in &tenants {
+            let esc = escape_label(name);
+            let _ = writeln!(out,
+                "dtans_tenant_requests_total{{tenant=\"{esc}\",outcome=\"admitted\"}} {admitted}");
+            let _ = writeln!(out,
+                "dtans_tenant_requests_total{{tenant=\"{esc}\",outcome=\"shed\"}} {shed}");
+        }
+    }
+
+    // Paper-headline gauges per dtANS-routed matrix.
+    let paper = m.paper_summaries();
+    if !paper.is_empty() {
+        let _ = writeln!(out,
+            "# HELP dtans_matrix_compression_ratio Resident-CSR-equivalent bytes over encoded dtANS bytes.");
+        let _ = writeln!(out, "# TYPE dtans_matrix_compression_ratio gauge");
+        for p in &paper {
+            let _ = writeln!(out,
+                "dtans_matrix_compression_ratio{{matrix=\"{}\"}} {:.6}",
+                escape_label(&p.name), p.ratio);
+        }
+        let _ = writeln!(out,
+            "# HELP dtans_matrix_decode_bytes_per_second Latest observed dtANS stream decode throughput.");
+        let _ = writeln!(out, "# TYPE dtans_matrix_decode_bytes_per_second gauge");
+        for p in &paper {
+            let _ = writeln!(out,
+                "dtans_matrix_decode_bytes_per_second{{matrix=\"{}\"}} {}",
+                escape_label(&p.name), p.decode_bps);
+        }
+    }
+
+    out
+}
+
+/// Escape a string for embedding in JSON.
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// One latency-summary object body.
+fn summary_json(s: &crate::coordinator::metrics::LatencySummary) -> String {
+    format!(
+        "{{\"count\":{},\"p50_us\":{},\"p90_us\":{},\"p99_us\":{},\"max_us\":{}}}",
+        s.count, s.p50_us, s.p90_us, s.p99_us, s.max_us
+    )
+}
+
+/// Render the full metrics surface as one JSON object (the benches embed
+/// this in their `results/BENCH_*.json` artifacts).
+pub fn metrics_json(m: &Metrics) -> String {
+    let c = |a: &std::sync::atomic::AtomicU64| a.load(Ordering::Relaxed);
+    let mut out = String::with_capacity(2048);
+    out.push('{');
+    let _ = write!(
+        out,
+        "\"counters\":{{\"submitted\":{},\"completed\":{},\"failed\":{},\"shed\":{},\
+         \"quota_rejected\":{},\"expired\":{},\"batches\":{},\"coalesced_batches\":{},\
+         \"coalesced_requests\":{},\"store_hits\":{},\"store_misses\":{},\"evictions\":{},\
+         \"persist_failures\":{},\"cold_loads\":{},\"acquires\":{},\"solves\":{},\
+         \"solves_converged\":{},\"solves_diverged\":{}}}",
+        c(&m.submitted), c(&m.completed), c(&m.failed), c(&m.shed),
+        c(&m.quota_rejected), c(&m.expired), c(&m.batches), c(&m.coalesced_batches),
+        c(&m.coalesced_requests), c(&m.store_hits), c(&m.store_misses), c(&m.evictions),
+        c(&m.persist_failures), c(&m.cold_loads), c(&m.acquires), c(&m.solves),
+        c(&m.solves_converged), c(&m.solves_diverged),
+    );
+    let _ = write!(
+        out,
+        ",\"gauges\":{{\"queue_depth\":{},\"queue_depth_peak\":{},\"block_imbalance\":{:.3}}}",
+        c(&m.queue_depth), c(&m.queue_depth_peak), m.block_imbalance(),
+    );
+    let _ = write!(out, ",\"latency_us\":{}", summary_json(&m.latency_summary()));
+    let _ = write!(out, ",\"queue_wait_us\":{}", summary_json(&m.queue_wait_summary()));
+    let _ = write!(out, ",\"cold_load_us\":{}", summary_json(&m.cold_load_summary()));
+    let _ = write!(out, ",\"block_mean_us\":{}", summary_json(&m.block_mean_summary()));
+    let _ = write!(out, ",\"block_max_us\":{}", summary_json(&m.block_max_summary()));
+    out.push_str(",\"formats\":{");
+    for (i, tag) in m.format_tags().iter().enumerate() {
+        if let Some(s) = m.format_summary(tag) {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "\"{tag}\":{{\"completed\":{},\"failed\":{},\"latency\":{}}}",
+                s.completed, s.failed, summary_json(&s.latency)
+            );
+        }
+    }
+    out.push('}');
+    out.push_str(",\"tenants\":{");
+    for (i, (name, admitted, shed)) in m.tenant_counts().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "\"{}\":{{\"admitted\":{admitted},\"shed\":{shed}}}",
+            escape_json(name)
+        );
+    }
+    out.push('}');
+    out.push_str(",\"paper\":[");
+    for (i, p) in m.paper_summaries().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "{{\"id\":{},\"name\":\"{}\",\"baseline_bytes\":{},\"encoded_bytes\":{},\
+             \"ratio\":{:.4},\"decode_bps\":{},\"decode_samples\":{}}}",
+            p.id, escape_json(&p.name), p.baseline_bytes, p.encoded_bytes,
+            p.ratio, p.decode_bps, p.decode_samples,
+        );
+    }
+    out.push(']');
+    let _ = write!(
+        out,
+        ",\"trace\":{{\"recorded\":{},\"dropped\":{}}}",
+        m.tracer().recorded(), m.tracer().dropped(),
+    );
+    out.push('}');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn populated() -> Metrics {
+        let m = Metrics::default();
+        m.submitted.fetch_add(5, Ordering::Relaxed);
+        m.record_format_latency("csr", 120);
+        m.record_format_latency("csr_dtans", 480);
+        m.record_format_failure("csr");
+        m.record_shed(true);
+        m.record_expired();
+        m.record_queue_wait(30);
+        m.record_cold_load_for(2, 9000);
+        m.record_block_timing(50, 90, 70);
+        m.record_tenant("acme", true);
+        m.record_compression(1, "web", 2_000_000, 800_000);
+        m.record_decode_rate(1, 1_000_000, 500);
+        m
+    }
+
+    #[test]
+    fn exposition_has_paired_headers_and_stable_names() {
+        let m = populated();
+        let text = prometheus_text(&m);
+        for name in [
+            "dtans_requests_submitted_total",
+            "dtans_requests_shed_total",
+            "dtans_queue_depth",
+            "dtans_request_latency_microseconds",
+            "dtans_stage_duration_microseconds",
+            "dtans_kernel_block_microseconds",
+            "dtans_block_imbalance_ratio",
+            "dtans_format_requests_total",
+            "dtans_tenant_requests_total",
+            "dtans_matrix_compression_ratio",
+            "dtans_matrix_decode_bytes_per_second",
+            "dtans_trace_events_recorded_total",
+        ] {
+            assert!(text.contains(&format!("# HELP {name} ")), "missing HELP {name}");
+            assert!(text.contains(&format!("# TYPE {name} ")), "missing TYPE {name}");
+        }
+        assert!(text.contains("stage=\"queue_wait\""));
+        assert!(text.contains("stage=\"cold_load\""));
+        assert!(text.contains("format=\"csr_dtans\""));
+        assert!(text.contains("tenant=\"acme\",outcome=\"admitted\"} 1"), "{text}");
+        assert!(text.contains("matrix=\"web\""));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_close_with_inf() {
+        let m = populated();
+        let text = prometheus_text(&m);
+        // Pull the aggregate latency buckets and check monotonicity.
+        let mut counts = Vec::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("dtans_request_latency_microseconds_bucket{le=")
+            {
+                let v: u64 = rest.split_whitespace().last().unwrap().parse().unwrap();
+                counts.push(v);
+            }
+        }
+        assert_eq!(counts.len(), LE_BOUNDS.len() + 1);
+        assert!(counts.windows(2).all(|w| w[0] <= w[1]), "{counts:?}");
+        // +Inf equals _count.
+        assert!(text.contains(&format!(
+            "dtans_request_latency_microseconds_count {}",
+            counts.last().unwrap()
+        )));
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let m = Metrics::default();
+        m.record_tenant("we\"ird\\name", false);
+        let text = prometheus_text(&m);
+        assert!(text.contains("tenant=\"we\\\"ird\\\\name\""), "{text}");
+    }
+
+    #[test]
+    fn json_snapshot_carries_the_same_surface() {
+        let m = populated();
+        let json = metrics_json(&m);
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert!(json.contains("\"counters\":{\"submitted\":5"));
+        assert!(json.contains("\"queue_wait_us\":{\"count\":1"));
+        assert!(json.contains("\"csr_dtans\":{\"completed\":1"));
+        assert!(json.contains("\"acme\":{\"admitted\":1,\"shed\":0}"));
+        assert!(json.contains("\"ratio\":2.5000"));
+        assert!(json.contains("\"trace\":{"));
+    }
+}

@@ -1,0 +1,312 @@
+//! Log-bucketed mergeable histograms (HDR-style) for latency and
+//! iteration-count distributions.
+//!
+//! Replaces the fixed-size sliding sample rings that [`crate::coordinator::metrics::Metrics`]
+//! used through PR 6. A ring caps memory but *windows* the data: quantiles
+//! were computed over the most recent 64k samples only, so a long-running
+//! service forgot its warm-up tail and a burst could evict the whole
+//! history it was supposed to be compared against. The histogram keeps
+//! **every** sample (exact `count`, `sum`, `min`, `max` — no reservoir
+//! bias) in constant memory by bucketing values logarithmically:
+//!
+//! * values below [`LINEAR_MAX`] (= 2^([`MANTISSA_BITS`]+1) = 128) land in
+//!   exact unit-width buckets — small values (iteration counts, µs-scale
+//!   latencies) lose nothing;
+//! * larger values keep their exponent plus the top [`MANTISSA_BITS`]
+//!   mantissa bits, i.e. each power-of-two octave is split into 2^6 = 64
+//!   linear sub-buckets, bounding the worst-case relative quantile error
+//!   at 2^-(MANTISSA_BITS+1) ≈ 0.78% — comfortably inside the 2% budget
+//!   the observability tests enforce.
+//!
+//! Histograms are mergeable (`merge` is bucket-wise addition), so
+//! per-thread or per-shard instances can be combined without resorting
+//! raw samples.
+
+/// Mantissa bits kept per sample above the linear range. 6 bits → 64
+/// sub-buckets per octave → ≤0.78% relative error.
+pub const MANTISSA_BITS: u32 = 6;
+
+/// Values below this are bucketed exactly (unit-width buckets).
+pub const LINEAR_MAX: u64 = 1 << (MANTISSA_BITS + 1);
+
+/// Sub-buckets per power-of-two octave above the linear range.
+const SUB: usize = 1 << MANTISSA_BITS;
+
+/// Octaves above the linear range (`u64` exponents 7..=63).
+const OCTAVES: usize = 64 - (MANTISSA_BITS as usize + 1);
+
+/// Total bucket count: 128 exact + 57 octaves × 64 sub-buckets.
+pub const NBUCKETS: usize = LINEAR_MAX as usize + OCTAVES * SUB;
+
+/// A log-bucketed histogram over `u64` samples with exact count/sum/
+/// min/max and ≤0.78% relative quantile error. Memory is a fixed
+/// `NBUCKETS × 8` bytes (~30 KiB) regardless of sample count.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    counts: Box<[u64; NBUCKETS]>,
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram::new()
+    }
+}
+
+/// Bucket index for a value.
+fn index_of(v: u64) -> usize {
+    if v < LINEAR_MAX {
+        v as usize
+    } else {
+        let h = 63 - v.leading_zeros(); // exponent, >= MANTISSA_BITS + 1
+        let sub = ((v >> (h - MANTISSA_BITS)) as usize) & (SUB - 1);
+        LINEAR_MAX as usize + (h as usize - (MANTISSA_BITS as usize + 1)) * SUB + sub
+    }
+}
+
+/// Lowest value mapping to bucket `i`.
+fn bucket_low(i: usize) -> u64 {
+    if i < LINEAR_MAX as usize {
+        i as u64
+    } else {
+        let oct = (i - LINEAR_MAX as usize) / SUB;
+        let sub = ((i - LINEAR_MAX as usize) % SUB) as u64;
+        let h = oct as u32 + MANTISSA_BITS + 1;
+        (1u64 << h) + (sub << (h - MANTISSA_BITS))
+    }
+}
+
+/// Representative value reported for bucket `i` (its midpoint; exact for
+/// the unit-width linear buckets).
+fn representative(i: usize) -> u64 {
+    if i < LINEAR_MAX as usize {
+        i as u64
+    } else {
+        let oct = (i - LINEAR_MAX as usize) / SUB;
+        let h = oct as u32 + MANTISSA_BITS + 1;
+        let width = 1u64 << (h - MANTISSA_BITS);
+        bucket_low(i) + width / 2
+    }
+}
+
+impl LogHistogram {
+    /// An empty histogram.
+    pub fn new() -> LogHistogram {
+        LogHistogram {
+            counts: Box::new([0u64; NBUCKETS]),
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: u64) {
+        self.counts[index_of(v)] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Total samples recorded (exact — no window, no reservoir).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all samples (exact).
+    pub fn sum(&self) -> u128 {
+        self.sum
+    }
+
+    /// Smallest sample, or 0 if empty.
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest sample, or 0 if empty.
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Mean sample, or 0.0 if empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Quantile `p` in `[0, 1]`: the smallest bucket representative `r`
+    /// such that at least `ceil(p · count)` samples fell in buckets at or
+    /// below `r`'s. Clamped into `[min, max]`; 0 when empty. Relative
+    /// error vs the exact sorted quantile is bounded by the bucket
+    /// half-width (≤0.78%).
+    pub fn quantile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((p * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return representative(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Number of samples with value ≤ `bound`, at bucket resolution: a
+    /// sample counts iff its bucket's representative is ≤ `bound`. Exact
+    /// whenever `bound` is a bucket boundary (e.g. a power of two ≥ 128,
+    /// or any value < 128). Monotone in `bound` by construction — the
+    /// property Prometheus cumulative buckets need.
+    pub fn count_le(&self, bound: u64) -> u64 {
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 && representative(i) <= bound {
+                cum += c;
+            }
+        }
+        cum
+    }
+
+    /// Bucket-wise merge of `other` into `self` (exact: merging then
+    /// querying equals querying the concatenated sample streams).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.count > 0 {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = LogHistogram::new();
+        for v in 0..LINEAR_MAX {
+            h.record(v);
+        }
+        assert_eq!(h.count(), LINEAR_MAX);
+        for v in 0..LINEAR_MAX {
+            assert_eq!(index_of(v), v as usize);
+            assert_eq!(representative(index_of(v)), v);
+        }
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), LINEAR_MAX - 1);
+    }
+
+    #[test]
+    fn bucket_low_inverts_index_of() {
+        // bucket_low(i) must itself map to bucket i, and the next bucket's
+        // low must be strictly greater — the buckets tile the range.
+        for i in 0..NBUCKETS {
+            assert_eq!(index_of(bucket_low(i)), i, "bucket {i}");
+            if i + 1 < NBUCKETS {
+                assert!(bucket_low(i + 1) > bucket_low(i));
+            }
+        }
+        // Spot-check boundaries around the linear/log transition.
+        assert_eq!(index_of(LINEAR_MAX - 1), LINEAR_MAX as usize - 1);
+        assert_eq!(index_of(LINEAR_MAX), LINEAR_MAX as usize);
+        assert_eq!(index_of(u64::MAX), NBUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_match_exact_sorted_within_bound() {
+        let mut rng = Xoshiro256::seeded(7);
+        let mut h = LogHistogram::new();
+        let mut exact: Vec<u64> = Vec::new();
+        for _ in 0..10_000 {
+            // Log-uniform-ish spread over ~6 decades.
+            let e = rng.next_u64() % 20;
+            let v = (rng.next_u64() % 1000) << e;
+            h.record(v);
+            exact.push(v);
+        }
+        exact.sort_unstable();
+        for &p in &[0.5, 0.9, 0.99] {
+            let approx = h.quantile(p) as f64;
+            let idx = ((p * exact.len() as f64).ceil() as usize).clamp(1, exact.len()) - 1;
+            let truth = exact[idx] as f64;
+            let rel = (approx - truth).abs() / truth.max(1.0);
+            assert!(rel <= 0.02, "p{p}: approx {approx} vs exact {truth} (rel {rel})");
+        }
+        assert_eq!(h.count() as usize, exact.len());
+        assert_eq!(h.max(), *exact.last().unwrap());
+        assert_eq!(h.min(), exact[0]);
+    }
+
+    #[test]
+    fn merge_equals_concatenation() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut both = LogHistogram::new();
+        for v in [3u64, 900, 1 << 20, 7, 7, 1 << 33] {
+            a.record(v);
+            both.record(v);
+        }
+        for v in [1u64, 1 << 40, 55] {
+            b.record(v);
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.sum(), both.sum());
+        assert_eq!(a.min(), both.min());
+        assert_eq!(a.max(), both.max());
+        for &p in &[0.25, 0.5, 0.75, 0.99] {
+            assert_eq!(a.quantile(p), both.quantile(p));
+        }
+    }
+
+    #[test]
+    fn count_le_is_monotone_and_total() {
+        let mut h = LogHistogram::new();
+        for v in [1u64, 10, 100, 1000, 10_000, 100_000, 1_000_000] {
+            h.record(v);
+        }
+        let bounds = [0u64, 1, 64, 128, 1 << 10, 1 << 14, 1 << 20, u64::MAX];
+        let mut prev = 0;
+        for &b in &bounds {
+            let c = h.count_le(b);
+            assert!(c >= prev, "count_le not monotone at {b}");
+            prev = c;
+        }
+        assert_eq!(h.count_le(u64::MAX), h.count());
+        assert_eq!(h.count_le(0), 0);
+        // Exact below the linear range.
+        assert_eq!(h.count_le(1), 1);
+        assert_eq!(h.count_le(100), 3);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zeros() {
+        let h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+}

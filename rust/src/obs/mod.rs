@@ -1,0 +1,39 @@
+//! Observability: request-flow tracing, log-bucketed histograms, and
+//! metrics export for the serving pipeline.
+//!
+//! The paper's headline claims are *measured* claims — compression ratio
+//! against the smallest baseline format and per-matrix SpMVM speedup —
+//! and ROADMAP item 3 (measurement-driven adaptive routing) needs to know
+//! where a request's time actually goes. This module turns the serving
+//! core from "p50/p99 of a black box" into attributable stage-level
+//! evidence:
+//!
+//! * [`span`] — typed per-request stage events
+//!   (`Submitted → Queued → Dispatched → Pinned/ColdLoad →
+//!   Coalesced → Kernel → Completed/Failed/Shed/Expired`) with a
+//!   one-terminal-event-per-request conservation invariant;
+//! * [`trace`] — the [`Tracer`] collector: sampled, sharded,
+//!   fixed-capacity, drainable as structured events or Chrome
+//!   trace-event JSON (Perfetto-loadable);
+//! * [`hist`] — [`LogHistogram`], HDR-style log-bucketed mergeable
+//!   histograms (≤0.78% relative quantile error, exact counts, constant
+//!   memory) backing every latency/iteration distribution in
+//!   [`Metrics`](crate::coordinator::metrics::Metrics);
+//! * [`export`] — Prometheus text exposition and a JSON snapshot of the
+//!   full metrics surface (stable names; `format`/`tenant`/`stage`/
+//!   `matrix` labels — contract table in `docs/OBSERVABILITY.md`).
+//!
+//! Instrumentation lives where the stages happen: the coordinator stamps
+//! submit/queue/dispatch/coalesce/kernel, the store stamps cold loads,
+//! and [`SpmvEngine::run_timed`](crate::spmv::engine::SpmvEngine::run_timed)
+//! reports per-block min/max/mean micros — the partition-imbalance
+//! signal the SIMD and adaptive-routing roadmap items both need.
+
+pub mod export;
+pub mod hist;
+pub mod span;
+pub mod trace;
+
+pub use hist::LogHistogram;
+pub use span::{SpanEvent, SpanId, Stage};
+pub use trace::{ObsConfig, Tracer};

@@ -1,0 +1,201 @@
+//! Span identities and typed stage events for request-flow tracing.
+//!
+//! Every request admitted into the serving pipeline gets a [`SpanId`] at
+//! submit time and stamps a chain of [`Stage`] events as it moves through
+//! the stages:
+//!
+//! ```text
+//! Submitted ─► Queued(wait) ─► Dispatched ─► Pinned ─► Kernel ─► Completed
+//!     │                            │            │                 Failed
+//!     └► Shed                      └► Expired   └► Coalesced ─►┘
+//! ```
+//!
+//! plus standalone [`Stage::ColdLoad`] spans stamped by the store when an
+//! evicted matrix faults back in. Exactly one **terminal** event
+//! ([`Stage::is_terminal`]) closes every chain — the invariant the
+//! span-conservation oracle (testkit stress oracle 4,
+//! `docs/TESTING.md`) checks against the metrics identity
+//! `completed + failed + shed + expired == submitted`.
+//!
+//! Events are collected by [`crate::obs::trace::Tracer`]; the types here
+//! are plain data so tests and exporters can pattern-match without
+//! touching the collector.
+
+/// Identity of one request's span chain.
+///
+/// `SpanId::NONE` (id 0) marks an unsampled request: every
+/// [`Tracer::record`](crate::obs::trace::Tracer::record) against it is a
+/// no-op, so instrumentation sites stamp unconditionally and sampling is
+/// decided once, at [`Tracer::begin`](crate::obs::trace::Tracer::begin).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SpanId(pub u64);
+
+impl SpanId {
+    /// The unsampled sentinel: records against it are dropped.
+    pub const NONE: SpanId = SpanId(0);
+
+    /// Is this span actually being recorded?
+    pub fn is_sampled(&self) -> bool {
+        self.0 != 0
+    }
+}
+
+/// One typed stage event in a request's span chain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Request accepted by `submit` (counted in `submitted`). Stamped
+    /// before the admission-queue push, so shed requests carry it too.
+    Submitted {
+        /// Store id of the target matrix.
+        matrix: u64,
+    },
+    /// Request left the admission queue; `wait_us` is the measured queue
+    /// wait (enqueue → dequeue) — the number that was invisible before
+    /// this subsystem existed.
+    Queued {
+        /// Microseconds spent queued.
+        wait_us: u64,
+    },
+    /// Dispatcher handed the request to a pool worker.
+    Dispatched,
+    /// The target matrix was pinned resident (store acquire succeeded).
+    Pinned,
+    /// Store cold load: an evicted matrix faulted back in from its
+    /// artifact. Standalone span (own trace id), stamped by the store.
+    ColdLoad {
+        /// Store id of the loaded matrix.
+        matrix: u64,
+        /// Microseconds the fault-in took.
+        dur_us: u64,
+    },
+    /// Request served through a coalesced same-matrix SpMM batch; all
+    /// members share `batch`.
+    Coalesced {
+        /// Shared batch span id.
+        batch: u64,
+        /// Requests in the batch.
+        size: u32,
+    },
+    /// Kernel execution (the engine call itself).
+    Kernel {
+        /// Executing operator's format tag (`"csr"`, `"csr_dtans"`, …).
+        format: &'static str,
+        /// Partition blocks the engine ran (1 = serial).
+        blocks: u32,
+        /// Fastest block, microseconds (0 when per-block timing is off).
+        min_us: u64,
+        /// Slowest block, microseconds.
+        max_us: u64,
+        /// Mean block, microseconds.
+        mean_us: u64,
+        /// Whole-call duration, microseconds.
+        dur_us: u64,
+    },
+    /// Terminal: request completed; `total_us` is end-to-end latency.
+    Completed {
+        /// Submit → response, microseconds.
+        total_us: u64,
+    },
+    /// Terminal: request failed (store or kernel error).
+    Failed,
+    /// Terminal: shed at admission (queue full, quota, or closed).
+    Shed,
+    /// Terminal: deadline elapsed before execution.
+    Expired,
+}
+
+impl Stage {
+    /// Does this event close a span chain? Exactly one terminal event per
+    /// admitted request is the span-conservation invariant.
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            Stage::Completed { .. } | Stage::Failed | Stage::Shed | Stage::Expired
+        )
+    }
+
+    /// Stable lowercase name, used for Chrome-trace event names and
+    /// grouping in tests.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Submitted { .. } => "submitted",
+            Stage::Queued { .. } => "queued",
+            Stage::Dispatched => "dispatched",
+            Stage::Pinned => "pinned",
+            Stage::ColdLoad { .. } => "cold_load",
+            Stage::Coalesced { .. } => "coalesced",
+            Stage::Kernel { .. } => "kernel",
+            Stage::Completed { .. } => "completed",
+            Stage::Failed => "failed",
+            Stage::Shed => "shed",
+            Stage::Expired => "expired",
+        }
+    }
+
+    /// Duration carried by the event, if it represents a timed interval
+    /// (rendered as a Chrome-trace complete event; instants otherwise).
+    pub fn duration_us(&self) -> Option<u64> {
+        match self {
+            Stage::Queued { wait_us } => Some(*wait_us),
+            Stage::ColdLoad { dur_us, .. } => Some(*dur_us),
+            Stage::Kernel { dur_us, .. } => Some(*dur_us),
+            Stage::Completed { total_us } => Some(*total_us),
+            _ => None,
+        }
+    }
+}
+
+/// One collected event: a [`Stage`] plus when and where it happened.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanEvent {
+    /// Span chain this event belongs to.
+    pub span: SpanId,
+    /// Microseconds since the tracer's epoch.
+    pub ts_us: u64,
+    /// Track of the recording thread (one per dispatcher / pool worker /
+    /// client thread; see [`crate::obs::trace::Tracer`]).
+    pub track: u32,
+    /// The typed stage payload.
+    pub stage: Stage,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exactly_four_terminal_stages() {
+        let all = [
+            Stage::Submitted { matrix: 1 },
+            Stage::Queued { wait_us: 5 },
+            Stage::Dispatched,
+            Stage::Pinned,
+            Stage::ColdLoad { matrix: 1, dur_us: 9 },
+            Stage::Coalesced { batch: 2, size: 4 },
+            Stage::Kernel {
+                format: "csr",
+                blocks: 4,
+                min_us: 1,
+                max_us: 3,
+                mean_us: 2,
+                dur_us: 4,
+            },
+            Stage::Completed { total_us: 100 },
+            Stage::Failed,
+            Stage::Shed,
+            Stage::Expired,
+        ];
+        assert_eq!(all.iter().filter(|s| s.is_terminal()).count(), 4);
+        // Names are distinct (they key test assertions and trace output).
+        let mut names: Vec<_> = all.iter().map(|s| s.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), all.len());
+    }
+
+    #[test]
+    fn none_span_is_unsampled() {
+        assert!(!SpanId::NONE.is_sampled());
+        assert!(SpanId(1).is_sampled());
+    }
+}

@@ -1,0 +1,422 @@
+//! Fixed-capacity, lock-minimal span collector with per-thread buffers,
+//! configurable sampling, and Chrome trace-event export.
+//!
+//! A [`Tracer`] hands out [`SpanId`]s at [`Tracer::begin`] (where the
+//! sampling decision is made, once per request) and collects
+//! [`SpanEvent`]s from every instrumented thread. Collection is sharded:
+//! each recording thread owns a process-wide *track* id (assigned lazily,
+//! one per dispatcher / pool worker / client thread) and writes to the
+//! shard `track % NSHARDS`, so threads almost never contend on a lock and
+//! never contend with readers draining a different shard. Each shard is a
+//! bounded ring — when full it overwrites its oldest event and counts the
+//! loss in [`Tracer::dropped`], so a forgotten tracer can never grow
+//! without bound (capacity is per shard; total memory is at most
+//! `NSHARDS × capacity × sizeof(SpanEvent)`, allocated lazily as threads
+//! actually record).
+//!
+//! Two export surfaces:
+//! * [`Tracer::drain`] / [`Tracer::snapshot`] — structured [`SpanEvent`]s
+//!   in timestamp order, for oracles and programmatic consumers;
+//! * [`Tracer::trace_json`] — Chrome trace-event JSON, loadable in
+//!   Perfetto (<https://ui.perfetto.dev>) or `chrome://tracing`, one
+//!   track per recording thread (see `docs/OBSERVABILITY.md`).
+
+use crate::obs::span::{SpanEvent, SpanId, Stage};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Shards in the collector (a small power of two: more than the typical
+/// worker count so co-resident threads rarely share a lock).
+const NSHARDS: usize = 16;
+
+/// Tracing configuration, set at service construction
+/// ([`ServiceConfig::obs`](crate::coordinator::service::ServiceConfig)).
+#[derive(Debug, Clone, Copy)]
+pub struct ObsConfig {
+    /// Sample one request in this many: `1` traces every request (the
+    /// default), `N` traces those whose trace id is a multiple of `N`,
+    /// `0` disables tracing entirely (every span is [`SpanId::NONE`] and
+    /// the hot path pays only the `begin` counter increment).
+    pub sample_one_in: u32,
+    /// Ring capacity **per shard**, in events. When a shard fills, its
+    /// oldest event is overwritten and [`Tracer::dropped`] grows — size
+    /// this above the expected event volume when span conservation must
+    /// hold (the stress driver scales it from its op count).
+    pub capacity: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            sample_one_in: 1,
+            capacity: 65536,
+        }
+    }
+}
+
+/// Process-wide track allocator: one stable id per OS thread, shared by
+/// all tracers (a thread keeps its track for its lifetime).
+static NEXT_TRACK: AtomicU32 = AtomicU32::new(1);
+thread_local! {
+    static TRACK: std::cell::Cell<u32> = const { std::cell::Cell::new(0) };
+}
+
+/// The calling thread's track id, assigned on first use.
+fn current_track() -> u32 {
+    TRACK.with(|t| {
+        let v = t.get();
+        if v != 0 {
+            return v;
+        }
+        let v = NEXT_TRACK.fetch_add(1, Ordering::Relaxed);
+        t.set(v);
+        v
+    })
+}
+
+/// One bounded event ring (see module docs for the sharding scheme).
+#[derive(Debug, Default)]
+struct Shard {
+    buf: Vec<SpanEvent>,
+    /// Oldest slot, once full.
+    next: usize,
+}
+
+/// Span collector: sampling, sharded rings, counters, and exporters.
+#[derive(Debug)]
+pub struct Tracer {
+    sample_one_in: u32,
+    capacity: usize,
+    epoch: Instant,
+    next_trace: AtomicU64,
+    next_batch: AtomicU64,
+    recorded: AtomicU64,
+    dropped: AtomicU64,
+    shards: [Mutex<Shard>; NSHARDS],
+    /// Human labels for tracks that announced a role ("dispatcher",
+    /// "worker", …) — rendered as Chrome-trace thread names.
+    labels: Mutex<BTreeMap<u32, &'static str>>,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::new(ObsConfig::default())
+    }
+}
+
+impl Tracer {
+    /// A tracer with the given sampling and capacity.
+    pub fn new(cfg: ObsConfig) -> Tracer {
+        Tracer {
+            sample_one_in: cfg.sample_one_in,
+            capacity: cfg.capacity.max(1),
+            epoch: Instant::now(),
+            next_trace: AtomicU64::new(0),
+            next_batch: AtomicU64::new(0),
+            recorded: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            shards: std::array::from_fn(|_| Mutex::new(Shard::default())),
+            labels: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Is tracing disabled outright (`sample_one_in == 0`)?
+    pub fn is_off(&self) -> bool {
+        self.sample_one_in == 0
+    }
+
+    /// Start a span chain: assigns the next trace id and decides sampling
+    /// (`id % sample_one_in == 0`). Unsampled requests get
+    /// [`SpanId::NONE`], making every later [`Tracer::record`] a no-op —
+    /// instrumentation sites never branch on configuration themselves.
+    pub fn begin(&self) -> SpanId {
+        if self.sample_one_in == 0 {
+            return SpanId::NONE;
+        }
+        let id = self.next_trace.fetch_add(1, Ordering::Relaxed) + 1;
+        if id % self.sample_one_in as u64 == 0 {
+            SpanId(id)
+        } else {
+            SpanId::NONE
+        }
+    }
+
+    /// Next shared batch id, linking coalesced requests
+    /// ([`Stage::Coalesced`]) to their SpMM batch.
+    pub fn batch_id(&self) -> u64 {
+        self.next_batch.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Record one stage event against a span. No-op for
+    /// [`SpanId::NONE`]; otherwise one timestamp read plus one push under
+    /// the calling thread's shard lock.
+    pub fn record(&self, span: SpanId, stage: Stage) {
+        if !span.is_sampled() {
+            return;
+        }
+        let ev = SpanEvent {
+            span,
+            ts_us: self.epoch.elapsed().as_micros() as u64,
+            track: current_track(),
+            stage,
+        };
+        let mut shard = self.shards[ev.track as usize % NSHARDS].lock().unwrap();
+        if shard.buf.len() < self.capacity {
+            shard.buf.push(ev);
+        } else {
+            let next = shard.next;
+            shard.buf[next] = ev;
+            shard.next = (next + 1) % self.capacity;
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        drop(shard);
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Label the calling thread's track with a role name (idempotent;
+    /// last label wins). Shown as the thread name in Chrome traces.
+    pub fn label_current_track(&self, name: &'static str) {
+        let track = current_track();
+        self.labels.lock().unwrap().insert(track, name);
+    }
+
+    /// Events recorded (including any later overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    /// Events lost to ring overwrites. Span conservation only holds for
+    /// a drain observed with `dropped() == 0`.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Microseconds since the tracer's construction (the `ts_us` clock).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    fn collect(&self, clear: bool) -> Vec<SpanEvent> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let mut s = shard.lock().unwrap();
+            // Ring order: oldest (next..) then (..next).
+            out.extend_from_slice(&s.buf[s.next..]);
+            out.extend_from_slice(&s.buf[..s.next]);
+            if clear {
+                s.buf.clear();
+                s.next = 0;
+            }
+        }
+        out.sort_by_key(|e| (e.ts_us, e.span.0));
+        out
+    }
+
+    /// Remove and return all buffered events, oldest first (globally
+    /// ordered by timestamp). Counters are cumulative and unaffected.
+    pub fn drain(&self) -> Vec<SpanEvent> {
+        self.collect(true)
+    }
+
+    /// Copy of all buffered events in timestamp order, without clearing.
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        self.collect(false)
+    }
+
+    /// Render the buffered events as Chrome trace-event JSON: one
+    /// process, one track (`tid`) per recording thread, duration-bearing
+    /// stages ([`Stage::duration_us`]) as complete (`"ph":"X"`) events
+    /// and the rest as thread-scoped instants (`"ph":"i"`). Load the
+    /// string as a `.json` file in Perfetto or `chrome://tracing`.
+    pub fn trace_json(&self) -> String {
+        let events = self.snapshot();
+        let labels = self.labels.lock().unwrap().clone();
+        let mut out = String::with_capacity(128 + events.len() * 96);
+        out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+        let mut first = true;
+        let mut push = |out: &mut String, s: &str| {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(s);
+        };
+        for (track, name) in &labels {
+            push(
+                &mut out,
+                &format!(
+                    "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{track},\
+                     \"args\":{{\"name\":\"{name}-{track}\"}}}}"
+                ),
+            );
+        }
+        for e in &events {
+            let args = stage_args(&e.stage);
+            let line = match e.stage.duration_us() {
+                Some(dur) => format!(
+                    "{{\"name\":\"{}\",\"ph\":\"X\",\"pid\":1,\"tid\":{},\"ts\":{},\
+                     \"dur\":{},\"args\":{{{args}}}}}",
+                    e.stage.name(),
+                    e.track,
+                    e.ts_us.saturating_sub(dur),
+                    dur
+                ),
+                None => format!(
+                    "{{\"name\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\"pid\":1,\"tid\":{},\
+                     \"ts\":{},\"args\":{{{args}}}}}",
+                    e.stage.name(),
+                    e.track,
+                    e.ts_us
+                ),
+            };
+            push(&mut out, &line);
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// The `args` object body (no braces) for one stage event.
+fn stage_args(stage: &Stage) -> String {
+    match stage {
+        Stage::Submitted { matrix } => format!("\"matrix\":{matrix}"),
+        Stage::Queued { wait_us } => format!("\"wait_us\":{wait_us}"),
+        Stage::Dispatched | Stage::Pinned | Stage::Failed | Stage::Shed | Stage::Expired => {
+            String::new()
+        }
+        Stage::ColdLoad { matrix, dur_us } => {
+            format!("\"matrix\":{matrix},\"dur_us\":{dur_us}")
+        }
+        Stage::Coalesced { batch, size } => format!("\"batch\":{batch},\"size\":{size}"),
+        Stage::Kernel {
+            format,
+            blocks,
+            min_us,
+            max_us,
+            mean_us,
+            dur_us,
+        } => format!(
+            "\"format\":\"{format}\",\"blocks\":{blocks},\"min_us\":{min_us},\
+             \"max_us\":{max_us},\"mean_us\":{mean_us},\"dur_us\":{dur_us}"
+        ),
+        Stage::Completed { total_us } => format!("\"total_us\":{total_us}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn always_on_samples_every_request() {
+        let t = Tracer::new(ObsConfig::default());
+        for _ in 0..10 {
+            let s = t.begin();
+            assert!(s.is_sampled());
+            t.record(s, Stage::Dispatched);
+        }
+        assert_eq!(t.recorded(), 10);
+        assert_eq!(t.dropped(), 0);
+        assert_eq!(t.drain().len(), 10);
+        // Drain empties the buffers but keeps counters cumulative.
+        assert_eq!(t.drain().len(), 0);
+        assert_eq!(t.recorded(), 10);
+    }
+
+    #[test]
+    fn sampling_keeps_every_nth_trace_id() {
+        let t = Tracer::new(ObsConfig {
+            sample_one_in: 4,
+            capacity: 1024,
+        });
+        let spans: Vec<SpanId> = (0..16).map(|_| t.begin()).collect();
+        let sampled: Vec<u64> =
+            spans.iter().filter(|s| s.is_sampled()).map(|s| s.0).collect();
+        assert_eq!(sampled, vec![4, 8, 12, 16]);
+        // Records against unsampled spans are dropped silently.
+        for s in &spans {
+            t.record(*s, Stage::Dispatched);
+        }
+        assert_eq!(t.recorded(), 4);
+    }
+
+    #[test]
+    fn off_mode_records_nothing() {
+        let t = Tracer::new(ObsConfig {
+            sample_one_in: 0,
+            capacity: 16,
+        });
+        assert!(t.is_off());
+        let s = t.begin();
+        assert!(!s.is_sampled());
+        t.record(s, Stage::Failed);
+        assert_eq!(t.recorded(), 0);
+        assert!(t.drain().is_empty());
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let t = Tracer::new(ObsConfig {
+            sample_one_in: 1,
+            capacity: 4,
+        });
+        // All records land on this thread → one shard of capacity 4.
+        for i in 0..10u64 {
+            t.record(SpanId(i + 1), Stage::Dispatched);
+        }
+        assert_eq!(t.recorded(), 10);
+        assert_eq!(t.dropped(), 6);
+        let events = t.drain();
+        assert_eq!(events.len(), 4);
+        // Oldest-first: the survivors are the last four records.
+        let ids: Vec<u64> = events.iter().map(|e| e.span.0).collect();
+        assert_eq!(ids, vec![7, 8, 9, 10]);
+    }
+
+    #[test]
+    fn events_drain_in_timestamp_order_across_threads() {
+        let t = std::sync::Arc::new(Tracer::new(ObsConfig::default()));
+        let mut handles = Vec::new();
+        for k in 0..4u64 {
+            let t = std::sync::Arc::clone(&t);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    t.record(SpanId(k * 100 + i + 1), Stage::Dispatched);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let events = t.drain();
+        assert_eq!(events.len(), 200);
+        assert!(events.windows(2).all(|w| w[0].ts_us <= w[1].ts_us));
+        // Threads got distinct tracks.
+        let tracks: std::collections::BTreeSet<u32> =
+            events.iter().map(|e| e.track).collect();
+        assert_eq!(tracks.len(), 4);
+    }
+
+    #[test]
+    fn trace_json_has_events_and_labels() {
+        let t = Tracer::default();
+        t.label_current_track("tester");
+        let s = t.begin();
+        t.record(s, Stage::Submitted { matrix: 3 });
+        t.record(s, Stage::Queued { wait_us: 12 });
+        t.record(s, Stage::Completed { total_us: 99 });
+        let json = t.trace_json();
+        assert!(json.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["));
+        assert!(json.ends_with("]}"));
+        assert!(json.contains("\"thread_name\""));
+        assert!(json.contains("tester-"));
+        assert!(json.contains("\"name\":\"submitted\""));
+        // Duration-bearing stages render as complete events.
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"wait_us\":12"));
+        // snapshot() does not clear: drain still sees the events.
+        assert_eq!(t.drain().len(), 3);
+    }
+}

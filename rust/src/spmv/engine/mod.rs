@@ -90,6 +90,40 @@ pub enum ParStrategy {
     Auto,
 }
 
+/// Per-block wall-time spread of one timed engine call
+/// ([`SpmvEngine::run_timed`]): the partition-imbalance signal the
+/// observability layer records (`blk_imb` in
+/// [`Metrics::report`](crate::coordinator::metrics::Metrics::report)) and
+/// the adaptive-routing / SIMD roadmap items consume. A serial call
+/// reports one block with `min == max == mean`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BlockTiming {
+    /// Blocks the call fanned out into (1 = serial path).
+    pub blocks: usize,
+    /// Fastest block, microseconds.
+    pub min_us: u64,
+    /// Slowest block, microseconds (the straggler that bounds the call).
+    pub max_us: u64,
+    /// Mean block, microseconds (`max/mean` ≫ 1 ⇒ imbalanced partition).
+    pub mean_us: u64,
+}
+
+impl BlockTiming {
+    /// Aggregate per-block micros into the summary.
+    fn from_times(times_us: &[u64]) -> BlockTiming {
+        if times_us.is_empty() {
+            return BlockTiming::default();
+        }
+        let sum: u64 = times_us.iter().sum();
+        BlockTiming {
+            blocks: times_us.len(),
+            min_us: *times_us.iter().min().unwrap(),
+            max_us: *times_us.iter().max().unwrap(),
+            mean_us: sum / times_us.len() as u64,
+        }
+    }
+}
+
 /// The parallel SpMVM engine: owns a worker pool and routes any
 /// [`SpmvOperator`] through the nnz-balanced partitioner. See the
 /// [module docs](self) for the execution model.
@@ -214,6 +248,47 @@ impl SpmvEngine {
         }
     }
 
+    /// [`SpmvEngine::run`] with a per-block timing hook: identical
+    /// partitioning and arithmetic (results stay **bit-identical** to
+    /// [`SpmvEngine::run`] — each block's kernel is merely bracketed by
+    /// two clock reads), returning the per-block wall-time spread. This
+    /// is the optional instrumentation path: the coordinator uses it when
+    /// tracing is enabled and falls back to the unbracketed `run`
+    /// otherwise, so the hot path pays nothing when observability is off.
+    pub fn run_timed(
+        &self,
+        op: &dyn SpmvOperator,
+        x: &[f64],
+        y: &mut [f64],
+    ) -> Result<BlockTiming> {
+        let (nrows, ncols) = op.dims();
+        crate::spmv::check_dims(nrows, ncols, x, y)?;
+        let prefix = op.cost_prefix();
+        let (units, total) = prefix_stats(&prefix);
+        let parts = self.parts_for(op.cost());
+        match &self.pool {
+            Some(pool) if parts > 1 && units > 1 => {
+                let blocks = partition_prefix(&prefix, parts);
+                let mut times_us = vec![0u64; blocks.len()];
+                run_blocks_timed(
+                    pool,
+                    &blocks,
+                    y,
+                    &mut times_us,
+                    |b| op.rows_through(b.end),
+                    |b, seg| op.run_range(b, x, seg),
+                )?;
+                Ok(BlockTiming::from_times(&times_us))
+            }
+            _ => {
+                let t0 = std::time::Instant::now();
+                op.run_range(Block { start: 0, end: units, cost: total }, x, y)?;
+                let us = t0.elapsed().as_micros() as u64;
+                Ok(BlockTiming { blocks: 1, min_us: us, max_us: us, mean_us: us })
+            }
+        }
+    }
+
     /// Fused scaled update `y = alpha·A·x + beta·y` for any
     /// [`SpmvOperator`] — the iterative-solver iteration primitive
     /// ([`crate::solver`] calls this once or twice per iteration), saving
@@ -324,6 +399,13 @@ impl SpmvEngine {
         Ok(ys)
     }
 
+    /// Blocks per right-hand side a batched call of this shape will use
+    /// (1 = serial) — lets the coordinator label a coalesced batch's
+    /// kernel span without re-deriving the engine's decision.
+    pub fn batch_blocks(&self, cost: usize, k: usize) -> usize {
+        self.batch_parts(cost, k).unwrap_or(1)
+    }
+
     /// Blocks *per right-hand side* for a batched call, or `None` for the
     /// serial path. The whole batch's cost decides whether to go parallel
     /// at all; the per-matrix block count then shrinks as the batch itself
@@ -380,6 +462,42 @@ pub(crate) fn run_blocks(
             tail = rest;
             cursor = r1;
             jobs.push(Box::new(move || *slot = kernel(b, seg)));
+        }
+        pool.scope_run(jobs);
+    }
+    slots.into_iter().find(|r| r.is_err()).unwrap_or(Ok(()))
+}
+
+/// [`run_blocks`] with each block's kernel bracketed by two clock reads
+/// into a disjoint `times_us` slot (`times_us.len() == blocks.len()`).
+/// Kept separate so the untimed executor — shared with
+/// `spmv_csr_dtans_parallel` — stays exactly as it was.
+fn run_blocks_timed(
+    pool: &ThreadPool,
+    blocks: &[Block],
+    y: &mut [f64],
+    times_us: &mut [u64],
+    row_end: impl Fn(&Block) -> usize,
+    kernel: impl Fn(Block, &mut [f64]) -> Result<()> + Send + Sync,
+) -> Result<()> {
+    let mut slots: Vec<Result<()>> = Vec::new();
+    slots.resize_with(blocks.len(), || Ok(()));
+    let kernel = &kernel;
+    {
+        let mut jobs: Vec<ScopedJob<'_>> = Vec::with_capacity(blocks.len());
+        let mut tail: &mut [f64] = y;
+        let mut cursor = 0usize;
+        for ((b, slot), t) in blocks.iter().zip(slots.iter_mut()).zip(times_us.iter_mut()) {
+            let b = *b;
+            let r1 = row_end(&b);
+            let (seg, rest) = tail.split_at_mut(r1 - cursor);
+            tail = rest;
+            cursor = r1;
+            jobs.push(Box::new(move || {
+                let t0 = std::time::Instant::now();
+                *slot = kernel(b, seg);
+                *t = t0.elapsed().as_micros() as u64;
+            }));
         }
         pool.scope_run(jobs);
     }
@@ -554,6 +672,38 @@ mod tests {
         // k > 0 over an empty matrix: k empty output columns, no panic.
         let ys = engine.run_multi(&m, &DenseMat::zeros(0, 3)).unwrap();
         assert_eq!(ys.into_cols(), vec![Vec::<f64>::new(); 3]);
+    }
+
+    #[test]
+    fn run_timed_is_bit_identical_and_reports_block_spread() {
+        let m = test_matrix(11);
+        let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.3).sin()).collect();
+        let mut want = vec![0.0; m.nrows];
+        crate::spmv::csr::spmv_csr(&m, &x, &mut want).unwrap();
+        for strategy in [ParStrategy::Serial, ParStrategy::Fixed(4)] {
+            let engine = SpmvEngine::new(strategy);
+            let mut got = vec![0.0; m.nrows];
+            let t = engine.run_timed(&m, &x, &mut got).unwrap();
+            assert_eq!(got, want, "strategy {strategy:?}");
+            let expect_blocks = if engine.is_parallel() { 4 } else { 1 };
+            assert_eq!(t.blocks, expect_blocks, "strategy {strategy:?}");
+            assert!(t.min_us <= t.mean_us && t.mean_us <= t.max_us);
+        }
+        // The dimension check still fires on the timed path.
+        let engine = SpmvEngine::new(ParStrategy::Fixed(4));
+        let bad_x = vec![0.0; m.ncols + 1];
+        let mut y = vec![0.0; m.nrows];
+        assert!(engine.run_timed(&m, &bad_x, &mut y).is_err());
+    }
+
+    #[test]
+    fn batch_blocks_matches_will_batch_parallel() {
+        let engine = SpmvEngine::new(ParStrategy::Fixed(8));
+        assert!(engine.will_batch_parallel(1 << 20, 4));
+        assert_eq!(engine.batch_blocks(1 << 20, 4), 2); // ceil(8/4)
+        let serial = SpmvEngine::serial();
+        assert!(!serial.will_batch_parallel(1 << 20, 4));
+        assert_eq!(serial.batch_blocks(1 << 20, 4), 1);
     }
 
     #[test]

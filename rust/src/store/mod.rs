@@ -253,6 +253,7 @@ impl MatrixStore {
         let choice = sh.policy.choose(&csr, &enc, &sh.encode);
         let keep_csr = !(sh.config.drop_csr && choice == FormatChoice::CsrDtans);
         let (nrows, ncols, nnz) = (csr.nrows, csr.ncols, csr.nnz());
+        let baseline_bytes = csr.size_bytes_f64() as u64;
         let csr = keep_csr.then(|| Arc::new(csr));
         let enc = Arc::new(enc);
         let op = RoutePolicy::operator_for(choice, csr.as_ref(), &enc)?;
@@ -273,6 +274,17 @@ impl MatrixStore {
         };
         let persisted = artifact.is_some();
         let id = self.admit(name, &mat, artifact, eviction_is_lossless(&mat));
+        if choice == FormatChoice::CsrDtans {
+            // Paper-headline gauge: encoded footprint vs what a resident
+            // f64 CSR would have cost (the bytes this routing decision
+            // saves on every future multiply).
+            sh.metrics.record_compression(
+                id,
+                name,
+                baseline_bytes,
+                mat.enc.size_report().total as u64,
+            );
+        }
         // `key` is Some exactly when a cache is configured.
         if let (false, Some(key)) = (persisted, key) {
             // Persist off the request path; the entry becomes evictable
@@ -337,7 +349,19 @@ impl MatrixStore {
         // The CSR (if kept) was derived by decoding this very artifact, so
         // a cold reload rebuilds it bit-identically at any precision:
         // always safe to evict.
-        Ok(self.admit(name, &mat, Some(path), true))
+        let id = self.admit(name, &mat, Some(path), true);
+        if mat.choice == FormatChoice::CsrDtans {
+            // No user CSR exists here; baseline against the size model's
+            // CSR at the encode's own precision (the router's rule).
+            let model = crate::matrix::SizeModel { precision: mat.enc.precision };
+            sh.metrics.record_compression(
+                id,
+                name,
+                model.csr_bytes(mat.nrows, mat.nnz) as u64,
+                mat.enc.size_report().total as u64,
+            );
+        }
+        Ok(id)
     }
 
     /// Insert a freshly built resident matrix: allocate an id, record its
@@ -521,7 +545,7 @@ fn cold_load(sh: &Arc<StoreShared>, id: u64) -> Result<Arc<LoadedMatrix>> {
         op,
         choice,
     });
-    sh.metrics.record_cold_load(t0.elapsed().as_micros() as u64);
+    sh.metrics.record_cold_load_for(id, t0.elapsed().as_micros() as u64);
     let cost = resident_cost(&mat);
     let mut inner = sh.inner.lock().unwrap();
     let evicted = inner.residency.insert(id, Arc::clone(&mat), cost);

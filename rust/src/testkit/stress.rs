@@ -4,7 +4,7 @@
 //! SpMM bursts, CG solves, mid-trace registrations, forced evictions)
 //! from a seed, hammers a **budgeted** [`SpmvService`] with it from many
 //! threads — so evictions, cold reloads, deduped loader faults, SpMM
-//! batch packing and solve pins all interleave — and then checks three
+//! batch packing and solve pins all interleave — and then checks four
 //! conservation oracles:
 //!
 //! 1. **Bit-identical serial replay of the admitted trace** — every
@@ -22,6 +22,14 @@
 //!    [`pin_count`](crate::store::MatrixStore::pin_count) is 0 once all
 //!    threads join: no code path (including shedding and deadline
 //!    expiry) leaks an acquisition.
+//! 4. **Span conservation** — the stressed service traces every request
+//!    ([`ObsConfig`] with `sample_one_in: 1` and a capacity scaled to the
+//!    trace, so nothing drops), and after the drain the span chains must
+//!    tell exactly the counters' story: one `Submitted` event per
+//!    submitted request, exactly one terminal stage per request span
+//!    (never zero, never two — a double-send or a silent drop would show
+//!    up here), and terminal kinds summing to the `completed` / `failed`
+//!    / `shed` / `expired` counters.
 //!
 //! Two arrival modes share the trace and the oracles. **Closed-loop**
 //! (default): each thread waits for its op before issuing the next, so
@@ -42,6 +50,7 @@ use crate::coordinator::{
     AdmissionConfig, Pending, RoutePolicy, ServiceConfig, SpmvService, SubmitOptions,
 };
 use crate::matrix::csr::Csr;
+use crate::obs::{ObsConfig, Stage};
 use crate::solver::{SolveMethod, SolverConfig};
 use crate::spmv::engine::ParStrategy;
 use crate::store::StoreConfig;
@@ -264,6 +273,10 @@ fn run_stress_inner(cfg: &StressConfig, cache_dir: &Path) -> Result<StressReport
             loader_threads: 2,
         },
         admission: AdmissionConfig { queue_depth: cfg.queue_depth, ..Default::default() },
+        // Oracle 4 needs a lossless trace: sample everything, and size
+        // the per-shard ring far above the worst-case event volume (≤ ~8
+        // events per request, ≤ ~6 requests per op, one shard per thread).
+        obs: ObsConfig { sample_one_in: 1, capacity: cfg.ops.max(8) * 64 },
         ..Default::default()
     }));
     // Base fixtures and the SPD solve matrix register up front; extras
@@ -379,6 +392,69 @@ fn run_stress_inner(cfg: &StressConfig, cache_dir: &Path) -> Result<StressReport
         return Err(DtansError::Service(format!(
             "closed-loop run shed/expired requests (shed={shed} expired={expired}): {}",
             m.report()
+        )));
+    }
+
+    // --- Oracle 4: span conservation. Every request was traced and the
+    // collector was sized to lose nothing, so the drained span chains
+    // must reconcile exactly with the counters checked above.
+    let tracer = m.tracer();
+    if tracer.dropped() != 0 {
+        return Err(DtansError::Service(format!(
+            "tracer dropped {} event(s); ring capacity is undersized for this trace",
+            tracer.dropped()
+        )));
+    }
+    let events = tracer.drain();
+    // Per span id: (#Submitted events, #terminal events). Spans with no
+    // Submitted event are the store's standalone cold-load spans, which
+    // by design never terminate.
+    let mut spans: std::collections::BTreeMap<u64, (u64, u64)> = std::collections::BTreeMap::new();
+    let (mut t_completed, mut t_failed, mut t_shed, mut t_expired) = (0u64, 0u64, 0u64, 0u64);
+    for e in &events {
+        let entry = spans.entry(e.span.0).or_insert((0, 0));
+        match e.stage {
+            Stage::Submitted { .. } => entry.0 += 1,
+            Stage::Completed { .. } => {
+                entry.1 += 1;
+                t_completed += 1;
+            }
+            Stage::Failed => {
+                entry.1 += 1;
+                t_failed += 1;
+            }
+            Stage::Shed => {
+                entry.1 += 1;
+                t_shed += 1;
+            }
+            Stage::Expired => {
+                entry.1 += 1;
+                t_expired += 1;
+            }
+            _ => {}
+        }
+    }
+    let submitted_events: u64 = spans.values().map(|&(s, _)| s).sum();
+    if submitted_events != submitted {
+        return Err(DtansError::Service(format!(
+            "span conservation: {submitted_events} Submitted event(s) for \
+             {submitted} submitted request(s)"
+        )));
+    }
+    for (span, &(subs, terms)) in &spans {
+        let want_terms = u64::from(subs == 1);
+        if subs > 1 || terms != want_terms {
+            return Err(DtansError::Service(format!(
+                "span {span}: {subs} Submitted and {terms} terminal event(s) \
+                 (every request span must terminate exactly once)"
+            )));
+        }
+    }
+    if (t_completed, t_failed, t_shed, t_expired) != (completed, failed, shed, expired) {
+        return Err(DtansError::Service(format!(
+            "span terminals disagree with counters: spans say \
+             completed={t_completed} failed={t_failed} shed={t_shed} expired={t_expired}, \
+             counters say completed={completed} failed={failed} shed={shed} expired={expired}"
         )));
     }
 

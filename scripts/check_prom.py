@@ -1,0 +1,221 @@
+#!/usr/bin/env python3
+"""Prometheus text-exposition validator for the obs layer's export.
+
+Validates a text-format exposition file (as written by
+`dtans::obs::export::prometheus_text`, e.g. `results/metrics.prom` from
+the `observability` example) against the rules a scraper relies on:
+
+  * metric and label names use the legal charset;
+  * every sample's family is declared with `# HELP` and `# TYPE` lines
+    that appear before its first sample, exactly once;
+  * sample values parse as numbers;
+  * histogram bucket series are cumulative: `le` thresholds strictly
+    increase, counts are monotone non-decreasing, the series closes with
+    an `le="+Inf"` bucket, and the family's `_count` sample equals it.
+
+Hermetic (stdlib only, no network) so the CI job never flakes.
+
+Usage: python3 scripts/check_prom.py <exposition.prom> [more files...]
+       python3 scripts/check_prom.py --selftest
+Exit code 0 when every check passes, 1 otherwise (one line per error).
+"""
+
+import math
+import re
+import sys
+from pathlib import Path
+
+METRIC_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+LABELS_BODY_RE = re.compile(
+    r'^[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*"'
+    r'(?:,[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*")*,?$'
+)
+SAMPLE_RE = re.compile(r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{(.*)\})?\s+(\S+)(\s+\d+)?$")
+TYPES = {"counter", "gauge", "histogram", "summary", "untyped"}
+
+
+def parse_value(s: str):
+    if s == "+Inf":
+        return math.inf
+    if s == "-Inf":
+        return -math.inf
+    try:
+        return float(s)
+    except ValueError:
+        return None
+
+
+def family_of(name: str, types: dict) -> str:
+    """Histogram samples (`_bucket`/`_sum`/`_count`) belong to the base
+    family; everything else is its own family."""
+    for suffix in ("_bucket", "_sum", "_count"):
+        base = name.removesuffix(suffix)
+        if base != name and types.get(base) == "histogram":
+            return base
+    return name
+
+
+def validate(text: str, origin: str = "<input>") -> list:
+    errors = []
+    helps: dict = {}
+    types: dict = {}
+    sampled: set = set()
+    # bucket series: (family, sorted non-le labels) -> [(le, count, lineno)]
+    buckets: dict = {}
+    counts: dict = {}  # same key -> _count value
+
+    for lineno, line in enumerate(text.splitlines(), 1):
+        where = f"{origin}:{lineno}"
+        if not line.strip():
+            continue
+        if line.startswith("#"):
+            parts = line.split(None, 3)
+            if len(parts) >= 3 and parts[1] in ("HELP", "TYPE"):
+                kind, name = parts[1], parts[2]
+                reg = helps if kind == "HELP" else types
+                if not METRIC_NAME_RE.match(name):
+                    errors.append(f"{where}: bad metric name {name!r} in {kind}")
+                    continue
+                if name in reg:
+                    errors.append(f"{where}: duplicate # {kind} for {name}")
+                if name in sampled:
+                    errors.append(f"{where}: # {kind} for {name} after its samples")
+                if kind == "TYPE":
+                    t = parts[3].strip() if len(parts) > 3 else ""
+                    if t not in TYPES:
+                        errors.append(f"{where}: unknown TYPE {t!r} for {name}")
+                    types[name] = t
+                else:
+                    helps[name] = parts[3] if len(parts) > 3 else ""
+            continue
+
+        m = SAMPLE_RE.match(line)
+        if not m:
+            errors.append(f"{where}: unparsable sample line {line!r}")
+            continue
+        name, labels_body, value_s = m.group(1), m.group(3), m.group(4)
+        value = parse_value(value_s)
+        if value is None:
+            errors.append(f"{where}: non-numeric value {value_s!r} for {name}")
+            continue
+        labels = {}
+        if labels_body:
+            if not LABELS_BODY_RE.match(labels_body):
+                errors.append(f"{where}: malformed labels {{{labels_body}}}")
+                continue
+            for lm in LABEL_RE.finditer(labels_body):
+                labels[lm.group(1)] = lm.group(2)
+        fam = family_of(name, types)
+        sampled.add(fam)
+        if fam not in types:
+            errors.append(f"{where}: sample for {name} with no # TYPE {fam}")
+        if fam not in helps:
+            errors.append(f"{where}: sample for {name} with no # HELP {fam}")
+
+        if types.get(fam) == "histogram":
+            key = (fam, tuple(sorted((k, v) for k, v in labels.items() if k != "le")))
+            if name == fam + "_bucket":
+                if "le" not in labels:
+                    errors.append(f"{where}: histogram bucket without le label")
+                    continue
+                le = parse_value(labels["le"])
+                if le is None:
+                    errors.append(f"{where}: unparsable le={labels['le']!r}")
+                    continue
+                buckets.setdefault(key, []).append((le, value, lineno))
+            elif name == fam + "_count":
+                counts[key] = (value, lineno)
+
+    for (fam, lbls), series in buckets.items():
+        tag = fam if not lbls else f"{fam}{{{','.join(f'{k}={v}' for k, v in lbls)}}}"
+        les = [le for le, _, _ in series]
+        if any(b <= a for a, b in zip(les, les[1:])):
+            errors.append(f"{origin}: non-increasing le thresholds in {tag}")
+        vals = [v for _, v, _ in series]
+        if any(b < a for a, b in zip(vals, vals[1:])):
+            errors.append(f"{origin}: non-cumulative bucket counts in {tag}")
+        if not les or les[-1] != math.inf:
+            errors.append(f"{origin}: histogram {tag} does not close with le=\"+Inf\"")
+        elif key_count := counts.get((fam, lbls)):
+            if key_count[0] != vals[-1]:
+                errors.append(
+                    f"{origin}: {tag} _count {key_count[0]:g} != +Inf bucket {vals[-1]:g}"
+                )
+        else:
+            errors.append(f"{origin}: histogram {tag} has no _count sample")
+    return errors
+
+
+VALID_FIXTURE = """\
+# HELP dtans_requests_total Requests.
+# TYPE dtans_requests_total counter
+dtans_requests_total 12
+# HELP dtans_queue_depth Depth.
+# TYPE dtans_queue_depth gauge
+dtans_queue_depth 3
+# HELP dtans_latency_us Latency.
+# TYPE dtans_latency_us histogram
+dtans_latency_us_bucket{stage="queue",le="1"} 0
+dtans_latency_us_bucket{stage="queue",le="4"} 2
+dtans_latency_us_bucket{stage="queue",le="+Inf"} 5
+dtans_latency_us_sum{stage="queue"} 37
+dtans_latency_us_count{stage="queue"} 5
+"""
+
+INVALID_FIXTURES = {
+    "non-cumulative buckets": VALID_FIXTURE.replace('le="4"} 2', 'le="4"} 9'),
+    "missing +Inf bucket": VALID_FIXTURE.replace(
+        'dtans_latency_us_bucket{stage="queue",le="+Inf"} 5\n', ""
+    ),
+    "_count mismatch": VALID_FIXTURE.replace(
+        'dtans_latency_us_count{stage="queue"} 5',
+        'dtans_latency_us_count{stage="queue"} 7',
+    ),
+    "sample before TYPE": "orphan_metric 1\n",
+    "bad metric name": "# HELP 1bad x.\n# TYPE 1bad counter\n1bad 3\n",
+    "non-numeric value": VALID_FIXTURE.replace(
+        "dtans_queue_depth 3", "dtans_queue_depth three"
+    ),
+}
+
+
+def selftest() -> int:
+    errs = validate(VALID_FIXTURE, "valid-fixture")
+    if errs:
+        print("selftest: valid fixture unexpectedly rejected:")
+        for e in errs:
+            print(f"  {e}")
+        return 1
+    failed = 0
+    for label, fixture in INVALID_FIXTURES.items():
+        if not validate(fixture, label):
+            print(f"selftest: invalid fixture {label!r} was not caught")
+            failed += 1
+    print(
+        f"selftest: 1 valid + {len(INVALID_FIXTURES)} invalid fixtures: "
+        f"{'OK' if not failed else f'{failed} missed'}"
+    )
+    return 1 if failed else 0
+
+
+def main() -> int:
+    args = sys.argv[1:]
+    if not args:
+        sys.exit("usage: check_prom.py <exposition.prom> [more...] | --selftest")
+    if args == ["--selftest"]:
+        return selftest()
+    errors = []
+    for a in args:
+        p = Path(a)
+        if not p.is_file():
+            sys.exit(f"not a file: {a}")
+        errors.extend(validate(p.read_text(encoding="utf-8"), str(p)))
+    for e in errors:
+        print(e)
+    print(f"checked {len(args)} exposition file(s): {'OK' if not errors else f'{len(errors)} errors'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
