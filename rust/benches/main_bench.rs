@@ -16,6 +16,9 @@
 //!  * store benches: artifact-cache registration vs re-encode and
 //!    warm-vs-cold SpMV under eviction (`store_coldstart`), with a
 //!    machine-readable trajectory report at `results/BENCH_store.json`;
+//!  * mutation bench: delta-overlay append throughput, overlay-vs-
+//!    compacted SpMV latency and the compaction pause
+//!    (`delta_compaction`, reporting to `results/BENCH_delta.json`);
 //!  * stress bench: verified serving throughput of the full coordinator
 //!    stack under budget pressure via the testkit's seeded mixed trace
 //!    with its serial-replay oracle (`stress_driver`, scale via
@@ -374,6 +377,7 @@ fn bench_store_coldstart(filter: &Option<String>, quick: bool) {
                 budget_bytes: budget,
                 drop_csr: true,
                 loader_threads: 2,
+                ..Default::default()
             },
             EncodeOptions::default(),
             policy,
@@ -467,6 +471,135 @@ fn bench_store_coldstart(filter: &Option<String>, quick: bool) {
     let path = outdir.join("BENCH_store.json");
     std::fs::write(&path, json).expect("write BENCH_store.json");
     println!("store_coldstart/report       wrote {}", path.display());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Mutable-matrix workload (`docs/MUTATION.md`): append throughput into a
+/// growing delta overlay, SpMV latency through the overlay operator vs
+/// the compacted base, and the compaction pause itself (merge + re-encode
+/// + versioned persist + swap). Emits `results/BENCH_delta.json`.
+fn bench_delta_compaction(filter: &Option<String>, quick: bool) {
+    use dtans::coordinator::metrics::Metrics;
+    use dtans::coordinator::RoutePolicy;
+    use dtans::spmv::operator::SpmvOperator;
+    use dtans::store::{MatrixStore, StoreConfig};
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    if !should_run(filter, "delta_compaction") {
+        return;
+    }
+    let n = if quick { 20_000 } else { 120_000 };
+    let (bursts, burst_len) = if quick { (20usize, 64usize) } else { (50, 128) };
+    let mut m = banded(n, 3);
+    let mut rng = Xoshiro256::seeded(77);
+    assign_values(&mut m, ValueDist::FewDistinct(12), &mut rng);
+    let dir = std::env::temp_dir().join(format!("dtans_bench_delta_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = MatrixStore::new(
+        StoreConfig { cache_dir: Some(dir.clone()), ..Default::default() },
+        EncodeOptions::default(),
+        RoutePolicy { min_nnz: 1 << 10, max_size_ratio: 0.98 },
+        Arc::new(Metrics::default()),
+    )
+    .unwrap();
+    let id = store.register_csr("m", m.clone()).unwrap();
+    store.flush();
+
+    // --- Append throughput: seeded update bursts into a growing overlay.
+    // Per-append cost grows with the overlay (each commit rebuilds the
+    // sorted runs), so one timed pass over the whole sequence reports the
+    // amortized rate at this overlay size.
+    let mk_burst = |b: usize| -> Vec<(u32, u32, f64)> {
+        let mut rng = Xoshiro256::seeded(0xA55E7 + b as u64);
+        (0..burst_len)
+            .map(|_| {
+                (
+                    rng.below(n as u64) as u32,
+                    rng.below(n as u64) as u32,
+                    rng.next_f64() - 0.5,
+                )
+            })
+            .collect()
+    };
+    let total_updates = bursts * burst_len;
+    let st_append = bench(0, 1, 0.0, || {
+        for b in 0..bursts {
+            store.append(id, &mk_burst(b)).unwrap();
+        }
+    });
+    let overlay_nnz = store.overlay_nnz_of(id).unwrap();
+    println!(
+        "delta_compaction/append      {} for {} updates ({:.0} updates/s, overlay {} entries)",
+        st_append.display(),
+        total_updates,
+        total_updates as f64 / st_append.median,
+        overlay_nnz
+    );
+
+    // --- SpMV latency: overlay operator vs compacted base. ---
+    let engine = SpmvEngine::serial();
+    let x: Vec<f64> = (0..n).map(|j| (j as f64 * 0.001).sin()).collect();
+    let mut y = vec![0.0; n];
+    let st_overlay = {
+        let p = store.acquire(id).unwrap();
+        assert_eq!(p.op.format_tag(), "overlay");
+        bench(2, 5, 0.5, || {
+            y.iter_mut().for_each(|v| *v = 0.0);
+            engine.run(p.op.as_ref(), &x, &mut y).unwrap();
+        })
+    };
+
+    // --- Compaction pause: merge + re-encode + versioned persist + swap
+    // (the whole background job, run to completion via the loader). ---
+    let t0 = Instant::now();
+    assert!(store.compact(id));
+    store.flush();
+    let compaction_s = t0.elapsed().as_secs_f64();
+    assert_eq!(store.overlay_nnz_of(id), Some(0));
+
+    let st_compacted = {
+        let p = store.acquire(id).unwrap();
+        bench(2, 5, 0.5, || {
+            y.iter_mut().for_each(|v| *v = 0.0);
+            engine.run(p.op.as_ref(), &x, &mut y).unwrap();
+        })
+    };
+    println!(
+        "delta_compaction/spmv        overlay {} vs compacted {} ({:.2}x overlay cost)",
+        st_overlay.display(),
+        st_compacted.display(),
+        st_overlay.median / st_compacted.median
+    );
+    let metrics = store.metrics();
+    println!(
+        "delta_compaction/compact     {:.3}s pause, {} entries absorbed",
+        compaction_s, overlay_nnz
+    );
+
+    // --- Machine-readable trajectory report. ---
+    let outdir = Path::new("results");
+    let _ = std::fs::create_dir_all(outdir);
+    let json = format!(
+        "{{\n  \"bench\": \"delta_compaction\",\n  \"quick\": {},\n  \"nrows\": {},\n  \"base_nnz\": {},\n  \"updates_appended\": {},\n  \"append_total_s\": {:.6},\n  \"append_updates_per_s\": {:.0},\n  \"overlay_nnz\": {},\n  \"spmv_overlay_s\": {:.6},\n  \"spmv_compacted_s\": {:.6},\n  \"overlay_over_compacted\": {:.3},\n  \"compaction_pause_s\": {:.6},\n  \"compactions\": {},\n  \"deltas_appended\": {}\n}}\n",
+        quick,
+        n,
+        m.nnz(),
+        total_updates,
+        st_append.median,
+        total_updates as f64 / st_append.median,
+        overlay_nnz,
+        st_overlay.median,
+        st_compacted.median,
+        st_overlay.median / st_compacted.median,
+        compaction_s,
+        metrics.compactions.load(Ordering::Relaxed),
+        metrics.deltas_appended.load(Ordering::Relaxed),
+    );
+    let path = outdir.join("BENCH_delta.json");
+    std::fs::write(&path, json).expect("write BENCH_delta.json");
+    println!("delta_compaction/report      wrote {}", path.display());
     let _ = std::fs::remove_dir_all(&dir);
 }
 
@@ -852,6 +985,7 @@ fn main() {
     bench_operator_dispatch(&filter, quick);
     bench_solver_iterations(&filter, quick);
     bench_store_coldstart(&filter, quick);
+    bench_delta_compaction(&filter, quick);
     bench_stress_driver(&filter, quick);
     bench_serving_saturation(&filter, quick);
     bench_obs_overhead(&filter, quick);

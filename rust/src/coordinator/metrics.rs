@@ -85,6 +85,21 @@ pub struct Metrics {
     /// ([`crate::store::MatrixStore::acquire`]) — a solve must cost
     /// exactly one of these no matter how many iterations it runs.
     pub acquires: AtomicU64,
+    /// Individual COO update entries appended to mutable matrices
+    /// ([`crate::store::MatrixStore::append`]).
+    pub deltas_appended: AtomicU64,
+    /// Gauge: total entries currently held in RAM-only delta overlays
+    /// across all registered matrices (recomputed under the store lock at
+    /// every append/compaction, so it never drifts).
+    pub overlay_nnz: AtomicU64,
+    /// Background compactions that completed and swapped in a merged
+    /// matrix.
+    pub compactions: AtomicU64,
+    /// Background compactions that failed (merge, encode, or artifact
+    /// persist) — the old version stays servable. Stale builds discarded
+    /// after losing a race with a concurrent append are not failures and
+    /// are not counted.
+    pub compaction_failures: AtomicU64,
     /// Iterative solve attempts through the service (converged, diverged
     /// **or** errored before iterating — so `solves` may exceed
     /// `solves_converged + solves_diverged` when requests fail on
@@ -395,6 +410,22 @@ impl Metrics {
         self.record_cold_load_for(0, micros);
     }
 
+    /// Record one completed overlay compaction: counter + a standalone
+    /// [`Stage::Compaction`] span (terminal-free, like cold loads — the
+    /// span-conservation oracle must ignore it).
+    pub fn record_compaction(&self, id: u64, micros: u64, nnz_absorbed: u64) {
+        self.compactions.fetch_add(1, Ordering::Relaxed);
+        let span = self.tracer.begin();
+        self.tracer.record(
+            span,
+            Stage::Compaction {
+                matrix: id,
+                dur_us: micros,
+                nnz_absorbed,
+            },
+        );
+    }
+
     /// Record one timed engine call's per-block spread
     /// ([`SpmvEngine::run_timed`](crate::spmv::engine::SpmvEngine::run_timed)):
     /// mean and slowest-block micros go to histograms, and the
@@ -525,7 +556,8 @@ impl Metrics {
              coalesced_batches={} coalesced_requests={} queue_depth={} queue_peak={} \
              p50={}µs p99={}µs max={}µs \
              store_hits={} store_misses={} evictions={} persist_failures={} cold_loads={} \
-             acquires={} cold_p50={}µs cold_p99={}µs qwait_p50={}µs qwait_p99={}µs",
+             acquires={} cold_p50={}µs cold_p99={}µs qwait_p50={}µs qwait_p99={}µs \
+             deltas_appended={} overlay_nnz={} compactions={} compaction_failures={}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -549,6 +581,10 @@ impl Metrics {
             c.p99_us,
             q.p50_us,
             q.p99_us,
+            self.deltas_appended.load(Ordering::Relaxed),
+            self.overlay_nnz.load(Ordering::Relaxed),
+            self.compactions.load(Ordering::Relaxed),
+            self.compaction_failures.load(Ordering::Relaxed),
         );
         let bm = self.block_max_summary();
         if bm.count > 0 {
@@ -745,6 +781,29 @@ mod tests {
         assert!(events
             .iter()
             .all(|e| matches!(e.stage, crate::obs::span::Stage::ColdLoad { .. })));
+    }
+
+    #[test]
+    fn mutation_counters_reach_the_report_and_span_stream() {
+        let m = Metrics::default();
+        m.deltas_appended.fetch_add(5, Ordering::Relaxed);
+        m.overlay_nnz.store(3, Ordering::Relaxed);
+        m.record_compaction(7, 1200, 3);
+        m.compaction_failures.fetch_add(1, Ordering::Relaxed);
+        let report = m.report();
+        assert!(report.contains("deltas_appended=5"), "{report}");
+        assert!(report.contains("overlay_nnz=3"), "{report}");
+        assert!(report.contains("compactions=1 compaction_failures=1"), "{report}");
+        // The compaction left a standalone terminal-free span behind.
+        let events = m.tracer().drain();
+        assert_eq!(events.len(), 1);
+        match events[0].stage {
+            crate::obs::span::Stage::Compaction { matrix, dur_us, nnz_absorbed } => {
+                assert_eq!((matrix, dur_us, nnz_absorbed), (7, 1200, 3));
+            }
+            ref s => panic!("expected a compaction span, got {s:?}"),
+        }
+        assert!(!events[0].stage.is_terminal());
     }
 
     #[test]

@@ -38,7 +38,12 @@
 //! transparently (deduped across concurrent requests), and the pin keeps
 //! them resident until their batch completes. The dispatcher itself
 //! routes on metadata only and never blocks on a cold load, so one cold
-//! matrix cannot head-of-line-block warm traffic.
+//! matrix cannot head-of-line-block warm traffic. Registered matrices are
+//! mutable through [`SpmvService::append`] — delta overlays composed with
+//! the immutable base, versioned and background-compacted
+//! ([`crate::delta`], `docs/MUTATION.md`) — without any change to the
+//! request path: the routed operator is swapped atomically under the
+//! store's pin-quiesce.
 //!
 //! Beyond one-shot multiplies, the service runs whole **iterative
 //! solves** ([`SpmvService::solve`], [`SpmvService::power`],
@@ -211,6 +216,18 @@ impl SpmvService {
     /// Register a matrix straight from a serialized `.dtans` artifact.
     pub fn register_path(&self, name: &str, path: &Path) -> Result<u64> {
         self.store.register_path(name, path)
+    }
+
+    /// Append COO `(row, col, delta)` updates to a registered matrix:
+    /// each means `A[row,col] += delta`, folded in arrival order. Stamps
+    /// and returns a new monotonically increasing version; every request
+    /// submitted after this returns sees the updated matrix, while
+    /// requests already executing finish on the version they pinned (see
+    /// [`crate::delta`] and `docs/MUTATION.md`). The overlay is absorbed
+    /// into a fresh artifact by background compaction once it passes
+    /// [`StoreConfig::compact_overlay_nnz`].
+    pub fn append(&self, matrix: u64, updates: &[(u32, u32, f64)]) -> Result<u64> {
+        self.store.append(matrix, updates)
     }
 
     /// The service's tiered matrix store (stats, flush, manual evict).
@@ -966,6 +983,30 @@ mod tests {
     }
 
     #[test]
+    fn append_through_the_service_updates_results() {
+        let svc = SpmvService::start(ServiceConfig::default());
+        let mut m = banded(200, 3);
+        assign_values(&mut m, ValueDist::FewDistinct(4), &mut Xoshiro256::seeded(3));
+        let id = svc.register("m", m.clone()).unwrap();
+        let x: Vec<f64> = (0..200).map(|i| (i as f64 * 0.05).sin()).collect();
+        let before = svc.spmv(id, x.clone()).unwrap();
+        let updates = [(0u32, 0u32, 2.0f64), (5, 7, -1.5)];
+        assert_eq!(svc.append(id, &updates).unwrap(), 1);
+        // Served bits must equal the from-scratch rebuild of base+updates.
+        let overlay = crate::delta::DeltaOverlay::empty(200, 200)
+            .appended(&m, &updates)
+            .unwrap();
+        let merged = crate::delta::merge(&m, &overlay).unwrap();
+        let mut want = vec![0.0; 200];
+        spmv_csr(&merged, &x, &mut want).unwrap();
+        let after = svc.spmv(id, x).unwrap();
+        assert_eq!(after, want);
+        assert_ne!(after, before);
+        assert_eq!(svc.metrics.deltas_appended.load(Ordering::Relaxed), 2);
+        assert_eq!(svc.store().version_of(id), Some(1));
+    }
+
+    #[test]
     fn budgeted_service_faults_cold_matrices_in() {
         // A budget far below the working set: every request may need a
         // cold reload, yet answers stay correct and evictions/cold loads
@@ -979,6 +1020,7 @@ mod tests {
                 budget_bytes: Some(1),
                 drop_csr: true,
                 loader_threads: 2,
+                ..Default::default()
             },
             ..Default::default()
         });

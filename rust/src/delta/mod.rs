@@ -1,0 +1,541 @@
+//! Mutable registered matrices: an append-only COO delta overlay composed
+//! with the immutable encoded base.
+//!
+//! The dtANS artifact is frozen at encode time — the paper's format has no
+//! in-place update story, yet the serving north-star (evolving graphs,
+//! periodically retrained weights) needs one. Following SMASH's base+delta
+//! design (PAPERS.md), this module keeps the base immutable and absorbs
+//! writes into a small sorted side structure:
+//!
+//! * [`DeltaOverlay`] — a sorted-run COO holding **one entry per mutated
+//!   coordinate**. Appending `(r, c, d)` means `A[r,c] += d`; the overlay
+//!   stores the *folded effective coefficient* (the coordinate's current
+//!   value with every delta added in arrival order), so reads never
+//!   re-associate the accumulation and the stored bits are exactly what a
+//!   from-scratch sequential application of all deltas would produce.
+//! * [`merge`] — materializes the mutated matrix as a fresh CSR: the
+//!   coordinate union of base and overlay, overlay entries taking
+//!   precedence verbatim. This is the rebuild that compaction re-encodes
+//!   ([`crate::store`]); because overlay values are already folded, the
+//!   merge moves bits without performing arithmetic — which is what makes
+//!   compaction **bit-neutral**: multiplies before and after a compaction,
+//!   and appends that land after one, all see identical coefficients.
+//! * [`OverlayOperator`] — a [`SpmvOperator`] over `(base CSR, overlay)`
+//!   whose per-row kernel walks the same column-ascending union in the
+//!   same order, so its results are bit-identical to running the CSR
+//!   kernel on the [`merge`]-rebuilt matrix (property-tested across engine
+//!   partitions in `rust/tests/delta_overlay.rs`). The engine, router,
+//!   solvers and the coalescing SpMM path all work against it unchanged.
+//!
+//! # Why the base is the CSR original, not the dtANS decoder
+//!
+//! Bit-identity with a from-scratch rebuild requires interleaving base and
+//! overlay terms per row in column order — a coordinate-level walk the
+//! entropy-coded operator cannot expose (its decoder reassociates row sums
+//! in warp lockstep). A mutated matrix therefore serves CSR-exact
+//! arithmetic from its first append onward; the dtANS encoding remains the
+//! *persistence* format (versioned artifacts, cold loads, compaction
+//! output). `docs/MUTATION.md` documents the trade-off and the
+//! version/compaction protocol.
+
+use crate::matrix::csr::Csr;
+use crate::spmv::engine::Block;
+use crate::spmv::operator::SpmvOperator;
+use crate::util::error::{DtansError, Result};
+use std::borrow::Cow;
+use std::sync::Arc;
+
+/// Append-only delta overlay: a row-major sorted run with at most one
+/// entry per coordinate, each holding the coordinate's folded effective
+/// coefficient. Immutable once built — [`DeltaOverlay::appended`] returns
+/// a new overlay, so in-flight multiplies against the old one are never
+/// disturbed (the store swaps overlays under its lock the same way it
+/// swaps operators).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DeltaOverlay {
+    nrows: usize,
+    ncols: usize,
+    /// Per-row start offsets into `cols`/`vals`, length `nrows + 1`.
+    row_ptr: Vec<usize>,
+    /// Column per entry, strictly ascending within a row.
+    cols: Vec<u32>,
+    /// Folded effective coefficient per mutated coordinate.
+    vals: Vec<f64>,
+}
+
+impl DeltaOverlay {
+    /// Empty overlay for a `nrows x ncols` base.
+    pub fn empty(nrows: usize, ncols: usize) -> DeltaOverlay {
+        DeltaOverlay {
+            nrows,
+            ncols,
+            row_ptr: vec![0; nrows + 1],
+            cols: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    /// Shape `(nrows, ncols)`.
+    pub fn dims(&self) -> (usize, usize) {
+        (self.nrows, self.ncols)
+    }
+
+    /// Mutated coordinates carried by the overlay.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Is the overlay empty (no mutations at all)?
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+
+    /// Heap bytes of the overlay (the quantity the store's residency
+    /// accounting sees; the compaction trigger thresholds on [`Self::nnz`]).
+    pub fn size_bytes(&self) -> usize {
+        self.row_ptr.len() * 8 + self.cols.len() * 4 + self.vals.len() * 8
+    }
+
+    /// Column indices of row `r`'s overlay entries (ascending).
+    #[inline]
+    pub fn row_cols(&self, r: usize) -> &[u32] {
+        &self.cols[self.row_ptr[r]..self.row_ptr[r + 1]]
+    }
+
+    /// Effective coefficients of row `r`'s overlay entries.
+    #[inline]
+    pub fn row_vals(&self, r: usize) -> &[f64] {
+        &self.vals[self.row_ptr[r]..self.row_ptr[r + 1]]
+    }
+
+    /// The overlay's effective coefficient at `(r, c)`, if mutated.
+    #[inline]
+    pub fn get(&self, r: u32, c: u32) -> Option<f64> {
+        let (lo, hi) = (self.row_ptr[r as usize], self.row_ptr[r as usize + 1]);
+        self.cols[lo..hi].binary_search(&c).ok().map(|i| self.vals[lo + i])
+    }
+
+    /// A new overlay with `updates` accumulated on top of this one over
+    /// `base` (the immutable CSR the overlay composes with — needed
+    /// because a coordinate entering the overlay starts folding from its
+    /// base value).
+    ///
+    /// Accumulation is order-deterministic: each update means
+    /// `A[r,c] += d`, and a coordinate's updates (within this batch and
+    /// across batches) fold into the stored effective value **in arrival
+    /// order**. Replaying the same batches in the same order therefore
+    /// reproduces every stored bit — the property the stress driver's
+    /// serial-replay oracle leans on — and the fold is exactly what a
+    /// from-scratch sequential application of the deltas to `base` yields.
+    ///
+    /// Fails on a base shape mismatch, out-of-bounds coordinates, or
+    /// non-finite deltas (a NaN would silently poison every future
+    /// multiply of that row).
+    pub fn appended(&self, base: &Csr, updates: &[(u32, u32, f64)]) -> Result<DeltaOverlay> {
+        if (base.nrows, base.ncols) != (self.nrows, self.ncols) {
+            return Err(DtansError::Dimension(format!(
+                "overlay {:?} vs base {}x{}",
+                self.dims(),
+                base.nrows,
+                base.ncols
+            )));
+        }
+        for &(r, c, v) in updates {
+            if r as usize >= self.nrows || c as usize >= self.ncols {
+                return Err(DtansError::InvalidMatrix(format!(
+                    "delta ({r},{c}) out of bounds for {}x{}",
+                    self.nrows, self.ncols
+                )));
+            }
+            if !v.is_finite() {
+                return Err(DtansError::InvalidMatrix(format!(
+                    "non-finite delta {v} at ({r},{c})"
+                )));
+            }
+        }
+        // Stable sort keeps one coordinate's updates contiguous *in
+        // arrival order*, so the fold below is order-deterministic.
+        let mut idx: Vec<usize> = (0..updates.len()).collect();
+        idx.sort_by_key(|&i| ((updates[i].0 as u64) << 32) | updates[i].1 as u64);
+        let mut batch: Vec<(u32, u32, f64)> = Vec::new();
+        let mut k = 0;
+        while k < idx.len() {
+            let (r, c, _) = updates[idx[k]];
+            // Fold from the coordinate's current effective value: a prior
+            // overlay entry, else the base entry, else structural zero.
+            let mut eff = self
+                .get(r, c)
+                .or_else(|| {
+                    base.row_cols(r as usize)
+                        .binary_search(&c)
+                        .ok()
+                        .map(|i| base.row_vals(r as usize)[i])
+                })
+                .unwrap_or(0.0);
+            while k < idx.len() && (updates[idx[k]].0, updates[idx[k]].1) == (r, c) {
+                eff += updates[idx[k]].2;
+                k += 1;
+            }
+            batch.push((r, c, eff));
+        }
+        // Union-merge the batch into the sorted run; batch entries replace
+        // existing overlay entries (the fold above already started from
+        // them).
+        let mut out = DeltaOverlay::empty(self.nrows, self.ncols);
+        out.cols.reserve(self.nnz() + batch.len());
+        out.vals.reserve(self.nnz() + batch.len());
+        let mut j = 0;
+        for r in 0..self.nrows {
+            let (lo, hi) = (self.row_ptr[r], self.row_ptr[r + 1]);
+            let mut i = lo;
+            while i < hi || (j < batch.len() && batch[j].0 as usize == r) {
+                let from_batch = j < batch.len() && batch[j].0 as usize == r;
+                if i < hi && (!from_batch || self.cols[i] < batch[j].1) {
+                    out.cols.push(self.cols[i]);
+                    out.vals.push(self.vals[i]);
+                    i += 1;
+                } else {
+                    if i < hi && self.cols[i] == batch[j].1 {
+                        i += 1; // replaced by the batch's fold
+                    }
+                    out.cols.push(batch[j].1);
+                    out.vals.push(batch[j].2);
+                    j += 1;
+                }
+            }
+            out.row_ptr[r + 1] = out.cols.len();
+        }
+        debug_assert_eq!(j, batch.len());
+        Ok(out)
+    }
+}
+
+/// Materialize `base + overlay` as a fresh CSR: the column-ascending
+/// coordinate union per row, overlay entries taking precedence verbatim
+/// (their values are already folded, so the merge performs no float
+/// arithmetic at all). A mutation that lands exactly on `0.0` stays an
+/// explicit entry, so the rebuilt row structure — and therefore the CSR
+/// kernel's term order — matches [`OverlayOperator`]'s walk exactly.
+pub fn merge(base: &Csr, overlay: &DeltaOverlay) -> Result<Csr> {
+    if overlay.dims() != (base.nrows, base.ncols) {
+        return Err(DtansError::Dimension(format!(
+            "overlay {:?} vs base {}x{}",
+            overlay.dims(),
+            base.nrows,
+            base.ncols
+        )));
+    }
+    let mut out = Csr::new(base.nrows, base.ncols);
+    out.cols.reserve(base.nnz() + overlay.nnz());
+    out.vals.reserve(base.nnz() + overlay.nnz());
+    for r in 0..base.nrows {
+        let (bc, bv) = (base.row_cols(r), base.row_vals(r));
+        let (dc, dv) = (overlay.row_cols(r), overlay.row_vals(r));
+        let (mut i, mut j) = (0, 0);
+        while i < bc.len() && j < dc.len() {
+            if bc[i] < dc[j] {
+                out.cols.push(bc[i]);
+                out.vals.push(bv[i]);
+                i += 1;
+            } else {
+                if bc[i] == dc[j] {
+                    i += 1; // overridden
+                }
+                out.cols.push(dc[j]);
+                out.vals.push(dv[j]);
+                j += 1;
+            }
+        }
+        out.cols.extend_from_slice(&bc[i..]);
+        out.vals.extend_from_slice(&bv[i..]);
+        out.cols.extend_from_slice(&dc[j..]);
+        out.vals.extend_from_slice(&dv[j..]);
+        out.row_ptr[r + 1] = out.cols.len();
+    }
+    Ok(out)
+}
+
+/// [`SpmvOperator`] over an immutable CSR base plus a [`DeltaOverlay`]:
+/// the kernel surface a mutated matrix serves through between appends and
+/// compactions. Work units are rows (like CSR); the per-row kernel is the
+/// scalar CSR dot product over the coordinate *union* (overlay values
+/// taking precedence), so every result is bit-identical to
+/// [`crate::spmv::spmv_csr`] on the [`merge`]-rebuilt matrix.
+pub struct OverlayOperator {
+    base: Arc<Csr>,
+    delta: Arc<DeltaOverlay>,
+    /// Union per-row entry counts as a monotone prefix (length
+    /// `nrows + 1`) — the engine's partitioning cost, same units as CSR's
+    /// `row_ptr`.
+    prefix: Vec<usize>,
+}
+
+impl OverlayOperator {
+    /// Compose `base` with `delta` (shapes must agree).
+    pub fn new(base: Arc<Csr>, delta: Arc<DeltaOverlay>) -> Result<OverlayOperator> {
+        if delta.dims() != (base.nrows, base.ncols) {
+            return Err(DtansError::Dimension(format!(
+                "overlay {:?} vs base {}x{}",
+                delta.dims(),
+                base.nrows,
+                base.ncols
+            )));
+        }
+        let mut prefix = Vec::with_capacity(base.nrows + 1);
+        prefix.push(0);
+        let mut total = 0usize;
+        for r in 0..base.nrows {
+            let (bc, dc) = (base.row_cols(r), delta.row_cols(r));
+            let (mut i, mut j, mut n) = (0, 0, 0usize);
+            while i < bc.len() && j < dc.len() {
+                if bc[i] < dc[j] {
+                    i += 1;
+                } else if bc[i] > dc[j] {
+                    j += 1;
+                } else {
+                    i += 1;
+                    j += 1;
+                }
+                n += 1;
+            }
+            n += bc.len() - i + dc.len() - j;
+            total += n;
+            prefix.push(total);
+        }
+        Ok(OverlayOperator { base, delta, prefix })
+    }
+
+    /// The immutable base CSR.
+    pub fn base(&self) -> &Arc<Csr> {
+        &self.base
+    }
+
+    /// The composed overlay.
+    pub fn delta(&self) -> &Arc<DeltaOverlay> {
+        &self.delta
+    }
+
+    /// One row's dot product over the column-ascending union walk — the
+    /// same terms in the same order as [`crate::spmv::spmv_csr`] on the
+    /// merged CSR, overlay coefficients used verbatim where present.
+    #[inline]
+    fn row_dot(&self, r: usize, x: &[f64]) -> f64 {
+        let (bc, bv) = (self.base.row_cols(r), self.base.row_vals(r));
+        let (dc, dv) = (self.delta.row_cols(r), self.delta.row_vals(r));
+        let (mut i, mut j) = (0, 0);
+        let mut acc = 0.0;
+        while i < bc.len() && j < dc.len() {
+            if bc[i] < dc[j] {
+                acc += bv[i] * x[bc[i] as usize];
+                i += 1;
+            } else {
+                if bc[i] == dc[j] {
+                    i += 1; // overridden
+                }
+                acc += dv[j] * x[dc[j] as usize];
+                j += 1;
+            }
+        }
+        while i < bc.len() {
+            acc += bv[i] * x[bc[i] as usize];
+            i += 1;
+        }
+        while j < dc.len() {
+            acc += dv[j] * x[dc[j] as usize];
+            j += 1;
+        }
+        acc
+    }
+}
+
+impl SpmvOperator for OverlayOperator {
+    fn dims(&self) -> (usize, usize) {
+        (self.base.nrows, self.base.ncols)
+    }
+
+    /// Stored entries of the composition — what the merged CSR would
+    /// report (base and overlay coordinates union'd, shared ones counted
+    /// once).
+    fn nnz(&self) -> usize {
+        *self.prefix.last().unwrap_or(&0)
+    }
+
+    fn cost_prefix(&self) -> Cow<'_, [usize]> {
+        Cow::Borrowed(&self.prefix)
+    }
+
+    fn run_range(&self, block: Block, x: &[f64], y_seg: &mut [f64]) -> Result<()> {
+        debug_assert_eq!(y_seg.len(), block.end - block.start);
+        for (i, r) in (block.start..block.end).enumerate() {
+            let acc = self.row_dot(r, x);
+            y_seg[i] += acc;
+        }
+        Ok(())
+    }
+
+    /// Fused path mirroring the CSR kernel's: same per-row accumulator,
+    /// `alpha·acc + beta·y` in place of the accumulate — bit-identical to
+    /// the unfused compose, and to the merged CSR's own fused path.
+    fn run_range_axpby(
+        &self,
+        block: Block,
+        x: &[f64],
+        alpha: f64,
+        beta: f64,
+        y_seg: &mut [f64],
+    ) -> Result<()> {
+        debug_assert_eq!(y_seg.len(), block.end - block.start);
+        for (i, r) in (block.start..block.end).enumerate() {
+            let acc = self.row_dot(r, x);
+            y_seg[i] = alpha * acc + beta * y_seg[i];
+        }
+        Ok(())
+    }
+
+    fn resident_bytes(&self) -> usize {
+        SpmvOperator::resident_bytes(self.base.as_ref())
+            + self.delta.size_bytes()
+            + self.prefix.len() * 8
+    }
+
+    fn format_tag(&self) -> &'static str {
+        "overlay"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::coo::Coo;
+    use crate::matrix::gen::structured::banded;
+    use crate::matrix::gen::{assign_values, ValueDist};
+    use crate::util::rng::Xoshiro256;
+
+    fn sample(n: usize, seed: u64) -> Csr {
+        let mut m = banded(n, 3);
+        assign_values(&mut m, ValueDist::FewDistinct(6), &mut Xoshiro256::seeded(seed));
+        m
+    }
+
+    fn tiny_base() -> Csr {
+        let mut coo = Coo::new(3, 3);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 2, 2.0);
+        coo.push(1, 1, 3.0);
+        Csr::from_coo(&coo)
+    }
+
+    #[test]
+    fn appended_folds_from_current_effective_value_in_arrival_order() {
+        let base = tiny_base();
+        let d0 = DeltaOverlay::empty(3, 3);
+        assert!(d0.is_empty());
+        // (1,1) exists in the base (3.0) and gets two in-batch deltas:
+        // fold is (3.0 + 2.0) + 3.0. (2,0) is structurally zero: 0.0 + 4.0.
+        let d1 = d0.appended(&base, &[(1, 1, 2.0), (2, 0, 4.0), (1, 1, 3.0)]).unwrap();
+        assert_eq!(d1.nnz(), 2);
+        assert_eq!(d1.get(1, 1), Some((3.0 + 2.0) + 3.0));
+        assert_eq!(d1.get(2, 0), Some(4.0));
+        // A second batch folds from the stored effective value.
+        let d2 = d1.appended(&base, &[(1, 1, 0.5)]).unwrap();
+        assert_eq!(d2.get(1, 1), Some(((3.0 + 2.0) + 3.0) + 0.5));
+        // The original overlays are untouched (functional update).
+        assert_eq!(d1.get(1, 1), Some((3.0 + 2.0) + 3.0));
+        assert!(d0.is_empty());
+    }
+
+    #[test]
+    fn appended_rejects_bad_input() {
+        let base = Csr::new(2, 2);
+        let d = DeltaOverlay::empty(2, 2);
+        assert!(d.appended(&base, &[(2, 0, 1.0)]).is_err());
+        assert!(d.appended(&base, &[(0, 2, 1.0)]).is_err());
+        assert!(d.appended(&base, &[(0, 0, f64::NAN)]).is_err());
+        assert!(d.appended(&base, &[(0, 0, f64::INFINITY)]).is_err());
+        assert!(d.appended(&Csr::new(3, 2), &[]).is_err(), "shape mismatch");
+        assert!(d.appended(&base, &[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn merge_takes_overlay_values_verbatim() {
+        let base = tiny_base();
+        let d = DeltaOverlay::empty(3, 3)
+            .appended(&base, &[(0, 1, 10.0), (0, 2, -2.0), (1, 1, 0.25)])
+            .unwrap();
+        let m = merge(&base, &d).unwrap();
+        m.validate().unwrap();
+        assert_eq!(m.row_cols(0), &[0, 1, 2]);
+        assert_eq!(m.row_vals(0), &[1.0, 10.0, 0.0]); // 2.0 - 2.0 stays explicit
+        assert_eq!(m.row_vals(1), &[3.0 + 0.25]);
+        assert_eq!(m.row_len(2), 0);
+        // Shape mismatch is refused.
+        assert!(merge(&base, &DeltaOverlay::empty(4, 3)).is_err());
+    }
+
+    #[test]
+    fn compaction_is_bit_neutral_for_later_appends() {
+        // Appending after a merge (compaction) must fold from the same
+        // bits as appending onto the live overlay.
+        let base = sample(120, 3);
+        let d1 = DeltaOverlay::empty(120, 120)
+            .appended(&base, &[(5, 5, 0.1), (5, 5, 0.7), (40, 2, -1.5)])
+            .unwrap();
+        // Path A: keep appending on the overlay.
+        let a = d1.appended(&base, &[(5, 5, 0.3), (7, 7, 2.0)]).unwrap();
+        let ma = merge(&base, &a).unwrap();
+        // Path B: compact (merge) first, then append to the new base.
+        let compacted = merge(&base, &d1).unwrap();
+        let b = DeltaOverlay::empty(120, 120)
+            .appended(&compacted, &[(5, 5, 0.3), (7, 7, 2.0)])
+            .unwrap();
+        let mb = merge(&compacted, &b).unwrap();
+        assert_eq!(ma, mb, "merge-then-append must equal append-then-merge bitwise");
+    }
+
+    #[test]
+    fn operator_is_bitwise_equal_to_merged_csr_kernel() {
+        let base = Arc::new(sample(300, 11));
+        let mut delta = DeltaOverlay::empty(300, 300);
+        let mut rng = Xoshiro256::seeded(12);
+        for _ in 0..5 {
+            let batch: Vec<(u32, u32, f64)> = (0..40)
+                .map(|_| {
+                    (
+                        rng.below(300) as u32,
+                        rng.below(300) as u32,
+                        rng.next_f64() - 0.5,
+                    )
+                })
+                .collect();
+            delta = delta.appended(&base, &batch).unwrap();
+        }
+        let delta = Arc::new(delta);
+        let op = OverlayOperator::new(Arc::clone(&base), Arc::clone(&delta)).unwrap();
+        let rebuilt = merge(&base, &delta).unwrap();
+        assert_eq!(SpmvOperator::nnz(&op), rebuilt.nnz());
+        assert_eq!(op.cost_prefix().as_ref(), &rebuilt.row_ptr[..]);
+        let x = crate::testkit::seeded_vector(300, 13);
+        let mut want = vec![0.0; 300];
+        crate::spmv::spmv_csr(&rebuilt, &x, &mut want).unwrap();
+        let mut got = vec![0.0; 300];
+        let full = Block { start: 0, end: 300, cost: rebuilt.nnz() };
+        op.run_range(full, &x, &mut got).unwrap();
+        assert_eq!(got, want, "run_range must match the merged CSR bitwise");
+        // Fused path vs the merged CSR's fused path, also bitwise.
+        let y0: Vec<f64> = (0..300).map(|i| (i as f64) * 0.125 - 3.0).collect();
+        let mut a = y0.clone();
+        op.run_range_axpby(full, &x, -0.5, 1.25, &mut a).unwrap();
+        let mut b = y0.clone();
+        crate::spmv::engine::SpmvEngine::serial()
+            .run_axpby(&rebuilt, &x, -0.5, 1.25, &mut b)
+            .unwrap();
+        assert_eq!(a, b, "fused path must match the merged CSR bitwise");
+    }
+
+    #[test]
+    fn operator_refuses_shape_mismatch() {
+        let base = Arc::new(sample(50, 1));
+        let delta = Arc::new(DeltaOverlay::empty(51, 50));
+        assert!(OverlayOperator::new(base, delta).is_err());
+    }
+}

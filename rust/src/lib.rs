@@ -62,6 +62,11 @@
 //!   matrix skips encoding), memory-budgeted LRU residency with pinning,
 //!   and a deduping background loader that faults evicted matrices back
 //!   in from disk.
+//! * [`delta`] — mutable registered matrices: an append-only COO delta
+//!   overlay composed with the immutable base through an
+//!   [`delta::OverlayOperator`], versioned artifacts, and background
+//!   compaction that re-absorbs the overlay into a fresh dtANS encoding
+//!   (see `docs/MUTATION.md`).
 //! * [`testkit`] — the verification subsystem behind the integration
 //!   tests: a differential conformance oracle (every registered format ×
 //!   every partition strategy vs the serial CSR ground truth, with
@@ -94,6 +99,7 @@
 pub mod ans;
 pub mod autotune;
 pub mod coordinator;
+pub mod delta;
 pub mod eval;
 pub mod format;
 pub mod matrix;

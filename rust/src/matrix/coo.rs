@@ -43,6 +43,16 @@ impl Coo {
         self.vals.push(v);
     }
 
+    /// Build from a triplet slice (the shape the delta-overlay append API
+    /// and its tests speak), preserving arrival order.
+    pub fn from_triplets(nrows: usize, ncols: usize, triplets: &[(u32, u32, f64)]) -> Coo {
+        let mut out = Coo::new(nrows, ncols);
+        for &(r, c, v) in triplets {
+            out.push(r, c, v);
+        }
+        out
+    }
+
     /// Validate indices are in range and arrays agree in length.
     pub fn validate(&self) -> Result<()> {
         if self.rows.len() != self.cols.len() || self.rows.len() != self.vals.len() {
@@ -101,6 +111,14 @@ mod tests {
         assert_eq!(s.nnz(), 2);
         assert_eq!(s.rows, vec![0, 1]);
         assert_eq!(s.vals, vec![1.0, 5.0]);
+    }
+
+    #[test]
+    fn from_triplets_preserves_arrival_order() {
+        let m = Coo::from_triplets(2, 2, &[(1, 0, 2.0), (0, 1, 1.0)]);
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.rows, vec![1, 0]);
+        m.validate().unwrap();
     }
 
     #[test]

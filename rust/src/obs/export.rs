@@ -146,6 +146,20 @@ pub fn prometheus_text(m: &Metrics) -> String {
     scalar(&mut out, "dtans_store_acquires_total", "counter",
         "Successful store pin acquisitions.", c(&m.acquires));
 
+    // Mutation counters (delta overlays + background compaction).
+    scalar(&mut out, "dtans_store_deltas_appended_total", "counter",
+        "Individual COO update entries appended to mutable matrices.",
+        c(&m.deltas_appended));
+    scalar(&mut out, "dtans_store_overlay_nnz", "gauge",
+        "Entries currently held in RAM-only delta overlays across all matrices.",
+        c(&m.overlay_nnz));
+    scalar(&mut out, "dtans_store_compactions_total", "counter",
+        "Background compactions that swapped in a merged matrix.",
+        c(&m.compactions));
+    scalar(&mut out, "dtans_store_compaction_failures_total", "counter",
+        "Background compactions that failed; the old version stays servable.",
+        c(&m.compaction_failures));
+
     // Solver counters.
     scalar(&mut out, "dtans_solves_total", "counter",
         "Iterative solve attempts through the service.", c(&m.solves));
@@ -297,18 +311,21 @@ pub fn metrics_json(m: &Metrics) -> String {
         "\"counters\":{{\"submitted\":{},\"completed\":{},\"failed\":{},\"shed\":{},\
          \"quota_rejected\":{},\"expired\":{},\"batches\":{},\"coalesced_batches\":{},\
          \"coalesced_requests\":{},\"store_hits\":{},\"store_misses\":{},\"evictions\":{},\
-         \"persist_failures\":{},\"cold_loads\":{},\"acquires\":{},\"solves\":{},\
-         \"solves_converged\":{},\"solves_diverged\":{}}}",
+         \"persist_failures\":{},\"cold_loads\":{},\"acquires\":{},\
+         \"deltas_appended\":{},\"compactions\":{},\"compaction_failures\":{},\
+         \"solves\":{},\"solves_converged\":{},\"solves_diverged\":{}}}",
         c(&m.submitted), c(&m.completed), c(&m.failed), c(&m.shed),
         c(&m.quota_rejected), c(&m.expired), c(&m.batches), c(&m.coalesced_batches),
         c(&m.coalesced_requests), c(&m.store_hits), c(&m.store_misses), c(&m.evictions),
-        c(&m.persist_failures), c(&m.cold_loads), c(&m.acquires), c(&m.solves),
-        c(&m.solves_converged), c(&m.solves_diverged),
+        c(&m.persist_failures), c(&m.cold_loads), c(&m.acquires),
+        c(&m.deltas_appended), c(&m.compactions), c(&m.compaction_failures),
+        c(&m.solves), c(&m.solves_converged), c(&m.solves_diverged),
     );
     let _ = write!(
         out,
-        ",\"gauges\":{{\"queue_depth\":{},\"queue_depth_peak\":{},\"block_imbalance\":{:.3}}}",
-        c(&m.queue_depth), c(&m.queue_depth_peak), m.block_imbalance(),
+        ",\"gauges\":{{\"queue_depth\":{},\"queue_depth_peak\":{},\"overlay_nnz\":{},\
+         \"block_imbalance\":{:.3}}}",
+        c(&m.queue_depth), c(&m.queue_depth_peak), c(&m.overlay_nnz), m.block_imbalance(),
     );
     let _ = write!(out, ",\"latency_us\":{}", summary_json(&m.latency_summary()));
     let _ = write!(out, ",\"queue_wait_us\":{}", summary_json(&m.queue_wait_summary()));
@@ -402,6 +419,10 @@ mod tests {
             "dtans_matrix_compression_ratio",
             "dtans_matrix_decode_bytes_per_second",
             "dtans_trace_events_recorded_total",
+            "dtans_store_deltas_appended_total",
+            "dtans_store_overlay_nnz",
+            "dtans_store_compactions_total",
+            "dtans_store_compaction_failures_total",
         ] {
             assert!(text.contains(&format!("# HELP {name} ")), "missing HELP {name}");
             assert!(text.contains(&format!("# TYPE {name} ")), "missing TYPE {name}");
@@ -449,6 +470,8 @@ mod tests {
         let json = metrics_json(&m);
         assert!(json.starts_with('{') && json.ends_with('}'));
         assert!(json.contains("\"counters\":{\"submitted\":5"));
+        assert!(json.contains("\"deltas_appended\":0,\"compactions\":0"));
+        assert!(json.contains("\"overlay_nnz\":0"));
         assert!(json.contains("\"queue_wait_us\":{\"count\":1"));
         assert!(json.contains("\"csr_dtans\":{\"completed\":1"));
         assert!(json.contains("\"acme\":{\"admitted\":1,\"shed\":0}"));

@@ -11,7 +11,10 @@
 //! ```
 //!
 //! plus standalone [`Stage::ColdLoad`] spans stamped by the store when an
-//! evicted matrix faults back in. Exactly one **terminal** event
+//! evicted matrix faults back in, and standalone [`Stage::Compaction`]
+//! spans when a background job absorbs a delta overlay into a fresh
+//! artifact ([`crate::store::MatrixStore::compact`]). Exactly one
+//! **terminal** event
 //! ([`Stage::is_terminal`]) closes every chain — the invariant the
 //! span-conservation oracle (testkit stress oracle 4,
 //! `docs/TESTING.md`) checks against the metrics identity
@@ -68,6 +71,18 @@ pub enum Stage {
         /// Microseconds the fault-in took.
         dur_us: u64,
     },
+    /// Background overlay compaction completed: base+delta re-encoded and
+    /// swapped in ([`crate::store::MatrixStore::compact`]). Standalone
+    /// span (own trace id, terminal-free — like [`Stage::ColdLoad`]),
+    /// stamped by the store's metrics sink.
+    Compaction {
+        /// Store id of the compacted matrix.
+        matrix: u64,
+        /// Microseconds the merge + encode + persist + swap took.
+        dur_us: u64,
+        /// Overlay entries absorbed into the new base.
+        nnz_absorbed: u64,
+    },
     /// Request served through a coalesced same-matrix SpMM batch; all
     /// members share `batch`.
     Coalesced {
@@ -123,6 +138,7 @@ impl Stage {
             Stage::Dispatched => "dispatched",
             Stage::Pinned => "pinned",
             Stage::ColdLoad { .. } => "cold_load",
+            Stage::Compaction { .. } => "compaction",
             Stage::Coalesced { .. } => "coalesced",
             Stage::Kernel { .. } => "kernel",
             Stage::Completed { .. } => "completed",
@@ -138,6 +154,7 @@ impl Stage {
         match self {
             Stage::Queued { wait_us } => Some(*wait_us),
             Stage::ColdLoad { dur_us, .. } => Some(*dur_us),
+            Stage::Compaction { dur_us, .. } => Some(*dur_us),
             Stage::Kernel { dur_us, .. } => Some(*dur_us),
             Stage::Completed { total_us } => Some(*total_us),
             _ => None,
@@ -171,6 +188,7 @@ mod tests {
             Stage::Dispatched,
             Stage::Pinned,
             Stage::ColdLoad { matrix: 1, dur_us: 9 },
+            Stage::Compaction { matrix: 1, dur_us: 9, nnz_absorbed: 3 },
             Stage::Coalesced { batch: 2, size: 4 },
             Stage::Kernel {
                 format: "csr",

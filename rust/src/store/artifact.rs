@@ -13,6 +13,12 @@
 //! Layout: `<root>/<first-2-hex>/<32-hex>.dtans`, with writes going
 //! through a temp file + rename so readers never observe a half-written
 //! artifact.
+//!
+//! Mutable matrices ([`crate::delta`]) stamp a monotonically increasing
+//! version per append; [`key_for_versioned`] folds that version into the
+//! key (under a distinct schema tag, with version 0 mapping to the
+//! original [`key_for`] key space) so compacted artifacts of different
+//! versions of one matrix occupy different files.
 
 use crate::format::csr_dtans::{CsrDtans, EncodeOptions};
 use crate::format::serialize;
@@ -89,6 +95,33 @@ impl std::fmt::Display for ArtifactKey {
 pub fn key_for(csr: &Csr, opts: &EncodeOptions) -> ArtifactKey {
     let mut h = Fnv128::new();
     h.write(b"dtans-artifact-key-v1");
+    absorb_content(&mut h, csr, opts);
+    ArtifactKey(h.state)
+}
+
+/// Version-aware [`ArtifactKey`]: the key for *version* `version` of a
+/// mutable matrix whose compacted content is `csr` encoded with `opts`.
+///
+/// Version 0 (never appended to) delegates to [`key_for`], so every
+/// artifact written before versioning existed stays addressable under its
+/// original key. Versions > 0 hash under a distinct schema tag
+/// (`…-key-v2`) that covers the version number, so cached `.dtans` files
+/// from different versions of one matrix can never collide with each other
+/// or with any v1 key.
+pub fn key_for_versioned(csr: &Csr, opts: &EncodeOptions, version: u64) -> ArtifactKey {
+    if version == 0 {
+        return key_for(csr, opts);
+    }
+    let mut h = Fnv128::new();
+    h.write(b"dtans-artifact-key-v2");
+    h.write_u64(version);
+    absorb_content(&mut h, csr, opts);
+    ArtifactKey(h.state)
+}
+
+/// The shared content-hash body: shape, sparsity pattern, value bit
+/// patterns, and every encoder option.
+fn absorb_content(h: &mut Fnv128, csr: &Csr, opts: &EncodeOptions) {
     h.write_u64(csr.nrows as u64);
     h.write_u64(csr.ncols as u64);
     h.write_u64(csr.nnz() as u64);
@@ -110,7 +143,6 @@ pub fn key_for(csr: &Csr, opts: &EncodeOptions) -> ArtifactKey {
         Precision::F32 => 32,
     });
     h.write_u32(opts.delta_encode as u32);
-    ArtifactKey(h.state)
 }
 
 /// Distinguishes temp files written concurrently by threads of one process.
@@ -201,6 +233,29 @@ mod tests {
         assert_ne!(key_for(&a, &opts), key_for(&a, &other));
         let f32_opts = EncodeOptions { precision: Precision::F32, ..opts };
         assert_ne!(key_for(&a, &opts), key_for(&a, &f32_opts));
+    }
+
+    #[test]
+    fn versioned_keys_never_collide_across_versions() {
+        let opts = EncodeOptions::default();
+        let m = sample(1);
+        // Version 0 is the original key space: on-disk compatibility.
+        assert_eq!(key_for_versioned(&m, &opts, 0), key_for(&m, &opts));
+        // Distinct versions of the same content get distinct keys, all
+        // different from the v0 key.
+        let mut seen = vec![key_for(&m, &opts)];
+        for v in 1..=8u64 {
+            let k = key_for_versioned(&m, &opts, v);
+            assert!(!seen.contains(&k), "version {v} collided");
+            seen.push(k);
+        }
+        // Same (content, options, version) stays stable.
+        assert_eq!(key_for_versioned(&m, &opts, 3), key_for_versioned(&m, &opts, 3));
+        // Content still matters at any version.
+        assert_ne!(
+            key_for_versioned(&m, &opts, 2),
+            key_for_versioned(&sample(2), &opts, 2)
+        );
     }
 
     #[test]

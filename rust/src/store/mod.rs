@@ -34,16 +34,35 @@
 //! persisted one, and a CSR original rebuilt via
 //! [`CsrDtans::decode_to_csr`] is exact for f64 encodes (property-tested
 //! in `rust/tests/store_residency.rs`).
+//!
+//! # Mutation
+//!
+//! Registered matrices are mutable through [`MatrixStore::append`], which
+//! composes an append-only [`DeltaOverlay`](crate::delta::DeltaOverlay)
+//! with the immutable base and stamps a monotonically increasing
+//! **version** per batch. A mutated entry serves through an
+//! [`OverlayOperator`](crate::delta::OverlayOperator) (CSR-exact
+//! arithmetic) and is pinned unevictable while its overlay is RAM-only;
+//! once the overlay passes [`StoreConfig::compact_overlay_nnz`], a
+//! background **compaction** job on the [`loader`] merges base+overlay
+//! into a fresh CSR, re-encodes it, persists the dtANS artifact under a
+//! version-aware key ([`key_for_versioned`]) and atomically swaps the
+//! operator under a pin-quiesce: in-flight pins keep servicing the old
+//! version (their guards own an `Arc` to it), new acquires see the new
+//! one, and the old bytes become evictable garbage once the last pin
+//! drops. See `docs/MUTATION.md` for the semantics and the crash-safety
+//! argument.
 
 pub mod artifact;
 pub mod loader;
 pub mod residency;
 
-pub use artifact::{key_for, ArtifactCache, ArtifactKey};
+pub use artifact::{key_for, key_for_versioned, ArtifactCache, ArtifactKey};
 pub use residency::{ResidencyManager, ResidencyStats};
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::{FormatChoice, RoutePolicy};
+use crate::delta::{DeltaOverlay, OverlayOperator};
 use crate::format::csr_dtans::{CsrDtans, EncodeOptions};
 use crate::matrix::csr::Csr;
 use crate::matrix::Precision;
@@ -73,11 +92,16 @@ pub struct LoadedMatrix {
     /// The encoded form (always kept: it backs persistence and eviction).
     pub enc: Arc<CsrDtans>,
     /// The routed kernel surface the service executes against — the CSR
-    /// original, or a [`crate::spmv::operator::DtansOperator`] owning its
-    /// decode plan.
+    /// original, a [`crate::spmv::operator::DtansOperator`] owning its
+    /// decode plan, or an [`OverlayOperator`] for appended-to matrices.
     pub op: Arc<dyn SpmvOperator>,
     /// Routed format.
     pub choice: FormatChoice,
+    /// RAM-only delta overlay of updates appended since the base this
+    /// resident form was built from — `None` once compaction absorbs it.
+    pub overlay: Option<Arc<DeltaOverlay>>,
+    /// Monotonically increasing mutation version (0 = never appended to).
+    pub version: u64,
 }
 
 /// Can a matrix registered from a *user-provided* CSR original be evicted
@@ -126,6 +150,10 @@ pub struct StoreConfig {
     /// Background loader threads (0 is treated as 1). The default of 0
     /// lets `Default::default()` mean "minimal": one worker.
     pub loader_threads: usize,
+    /// Overlay size (in stored entries) at which an append triggers
+    /// background compaction of that matrix. `None` (the default) never
+    /// auto-compacts; [`MatrixStore::compact`] still works manually.
+    pub compact_overlay_nnz: Option<usize>,
 }
 
 /// Aggregate store numbers (see [`MatrixStore::stats`]).
@@ -151,6 +179,12 @@ struct EntryMeta {
     keep_csr: bool,
     /// Path of the persisted artifact, once it exists.
     artifact: Option<PathBuf>,
+    /// Current mutation version (bumped by every non-empty append).
+    version: u64,
+    /// Entries in the RAM-only overlay (0 = base is current).
+    overlay_nnz: usize,
+    /// A compaction job for this entry is in flight.
+    compacting: bool,
 }
 
 struct StoreInner {
@@ -266,6 +300,8 @@ impl MatrixStore {
             enc,
             op,
             choice,
+            overlay: None,
+            version: 0,
         });
         let artifact = if from_cache {
             sh.artifacts.as_ref().zip(key).map(|(c, k)| c.path_for(&k))
@@ -345,6 +381,8 @@ impl MatrixStore {
             enc,
             op,
             choice,
+            overlay: None,
+            version: 0,
         });
         // The CSR (if kept) was derived by decoding this very artifact, so
         // a cold reload rebuilds it bit-identically at any precision:
@@ -391,6 +429,9 @@ impl MatrixStore {
                 nnz: mat.nnz,
                 keep_csr: mat.csr.is_some(),
                 artifact,
+                version: 0,
+                overlay_nnz: 0,
+                compacting: false,
             },
         );
         inner.residency.track(id);
@@ -487,6 +528,125 @@ impl MatrixStore {
         evicted
     }
 
+    /// Append a batch of COO `(row, col, delta)` updates to matrix `id`:
+    /// each means `A[row,col] += delta`, folded in arrival order (see
+    /// [`crate::delta`] for the exact accumulation semantics). Stamps and
+    /// returns a new monotonically increasing version; an empty batch
+    /// returns the current version without bumping it.
+    ///
+    /// The mutated entry serves through an [`OverlayOperator`] (CSR-exact
+    /// arithmetic — the router's dtANS choice is revoked on first append)
+    /// and is marked unevictable until compaction persists a merged
+    /// artifact. If the overlay grows past
+    /// [`StoreConfig::compact_overlay_nnz`], a background compaction is
+    /// triggered.
+    pub fn append(&self, id: u64, updates: &[(u32, u32, f64)]) -> Result<u64> {
+        let sh = &self.shared;
+        // Pin first: keeps the entry resident (faulting it in if cold)
+        // for the whole rebuild, and guarantees the pin-quiesce swap
+        // below never races an eviction.
+        let pinned = self.acquire(id)?;
+        if updates.is_empty() {
+            return Ok(pinned.version);
+        }
+        loop {
+            // Snapshot the current resident form and version.
+            let (mat, version) = {
+                let mut inner = sh.inner.lock().unwrap();
+                let mat = inner.residency.get(id).expect("pinned entries are resident");
+                let version = inner.entries.get(&id).expect("tracked").version;
+                (mat, version)
+            };
+            // Build the successor outside the lock.
+            let base = match &mat.csr {
+                Some(c) => Arc::clone(c),
+                None => Arc::new(mat.enc.decode_to_csr()?),
+            };
+            let overlay = match &mat.overlay {
+                Some(o) => Arc::new(o.appended(&base, updates)?),
+                None => {
+                    Arc::new(DeltaOverlay::empty(mat.nrows, mat.ncols).appended(&base, updates)?)
+                }
+            };
+            let op = Arc::new(OverlayOperator::new(Arc::clone(&base), Arc::clone(&overlay))?);
+            let nnz = SpmvOperator::nnz(op.as_ref());
+            let new_mat = Arc::new(LoadedMatrix {
+                name: mat.name.clone(),
+                nrows: mat.nrows,
+                ncols: mat.ncols,
+                nnz,
+                csr: Some(base),
+                enc: Arc::clone(&mat.enc),
+                op,
+                choice: FormatChoice::Csr,
+                overlay: Some(Arc::clone(&overlay)),
+                version: version + 1,
+            });
+            let cost = resident_cost(&new_mat);
+            // Commit, unless a concurrent append bumped the version or a
+            // compaction swapped the resident form under us — then fold
+            // the batch again against the fresh state.
+            let mut inner = sh.inner.lock().unwrap();
+            let stale = inner.entries.get(&id).map_or(true, |e| e.version != version)
+                || inner.residency.get(id).map_or(true, |cur| !Arc::ptr_eq(&cur, &mat));
+            if stale {
+                continue;
+            }
+            let e = inner.entries.get_mut(&id).expect("tracked");
+            e.version = version + 1;
+            e.choice = FormatChoice::Csr;
+            e.keep_csr = true;
+            e.nnz = nnz;
+            e.overlay_nnz = overlay.nnz();
+            let evicted = inner.residency.insert(id, new_mat, cost);
+            // The overlay exists only in RAM: evicting would lose it.
+            inner.residency.mark_unevictable(id);
+            let gauge = overlay_total(&inner);
+            drop(inner);
+            sh.note_evictions(&evicted);
+            sh.metrics.deltas_appended.fetch_add(updates.len() as u64, Ordering::Relaxed);
+            sh.metrics.overlay_nnz.store(gauge, Ordering::Relaxed);
+            if sh.config.compact_overlay_nnz.is_some_and(|t| overlay.nnz() >= t) {
+                self.spawn_compaction(id);
+            }
+            drop(pinned);
+            return Ok(version + 1);
+        }
+    }
+
+    /// Manually trigger background compaction of `id`'s overlay. Returns
+    /// whether a job was scheduled (`false` if the overlay is empty, a
+    /// compaction is already in flight, or `id` is unknown); [`Self::flush`]
+    /// waits for it. Benches and tests use this for deterministic absorbs.
+    pub fn compact(&self, id: u64) -> bool {
+        self.spawn_compaction(id)
+    }
+
+    fn spawn_compaction(&self, id: u64) -> bool {
+        let sh = &self.shared;
+        {
+            let mut inner = sh.inner.lock().unwrap();
+            let Some(e) = inner.entries.get_mut(&id) else { return false };
+            if e.compacting || e.overlay_nnz == 0 {
+                return false;
+            }
+            e.compacting = true;
+        }
+        let sh2 = Arc::clone(sh);
+        self.loader.spawn(move || compact_job(&sh2, id));
+        true
+    }
+
+    /// Current mutation version of `id` (0 = never appended to).
+    pub fn version_of(&self, id: u64) -> Option<u64> {
+        self.shared.inner.lock().unwrap().entries.get(&id).map(|e| e.version)
+    }
+
+    /// Entries currently in `id`'s RAM-only overlay (0 = base is current).
+    pub fn overlay_nnz_of(&self, id: u64) -> Option<usize> {
+        self.shared.inner.lock().unwrap().entries.get(&id).map(|e| e.overlay_nnz)
+    }
+
     /// Block until background persists/loads submitted so far finished.
     pub fn flush(&self) {
         self.loader.wait_idle();
@@ -527,14 +687,17 @@ fn cold_load(sh: &Arc<StoreShared>, id: u64) -> Result<Arc<LoadedMatrix>> {
         let path = e.artifact.clone().ok_or_else(|| {
             DtansError::Service(format!("matrix {id} is cold and has no on-disk artifact"))
         })?;
-        (path, (e.name.clone(), e.choice, e.keep_csr, e.nrows, e.ncols, e.nnz))
+        (path, (e.name.clone(), e.choice, e.keep_csr, e.nrows, e.ncols, e.nnz, e.version))
     };
-    let (name, choice, keep_csr, nrows, ncols, nnz) = meta;
+    let (name, choice, keep_csr, nrows, ncols, nnz, version) = meta;
     let t0 = Instant::now();
     let enc = crate::format::serialize::load(&path)?;
     let csr = if keep_csr { Some(Arc::new(enc.decode_to_csr()?)) } else { None };
     let enc = Arc::new(enc);
     let op = RoutePolicy::operator_for(choice, csr.as_ref(), &enc)?;
+    // An entry is only ever evictable with an empty overlay (appends mark
+    // it unevictable until compaction persists the merged artifact), so a
+    // cold reload always rebuilds from the artifact alone.
     let mat = Arc::new(LoadedMatrix {
         name,
         nrows,
@@ -544,6 +707,8 @@ fn cold_load(sh: &Arc<StoreShared>, id: u64) -> Result<Arc<LoadedMatrix>> {
         enc,
         op,
         choice,
+        overlay: None,
+        version,
     });
     sh.metrics.record_cold_load_for(id, t0.elapsed().as_micros() as u64);
     let cost = resident_cost(&mat);
@@ -552,6 +717,119 @@ fn cold_load(sh: &Arc<StoreShared>, id: u64) -> Result<Arc<LoadedMatrix>> {
     drop(inner);
     sh.note_evictions(&evicted);
     Ok(mat)
+}
+
+/// Total overlay entries across all registered matrices — the value of
+/// the `overlay_nnz` gauge, recomputed under the store lock at every
+/// transition so it can never drift from the per-entry truth.
+fn overlay_total(inner: &StoreInner) -> u64 {
+    inner.entries.values().map(|e| e.overlay_nnz as u64).sum()
+}
+
+/// Background compaction: merge `id`'s base+overlay into a fresh CSR,
+/// re-encode, persist the artifact under a version-aware key, and swap
+/// the resident form under a pin-quiesce. Runs on the loader pool.
+///
+/// Failure (encode or persist) leaves the old version fully servable —
+/// the overlay stays RAM-only and the entry unevictable — and bumps
+/// `compaction_failures`. A concurrent append (version moved while we
+/// built) discards the stale build; the next over-threshold append
+/// re-triggers. Either way the `compacting` flag is cleared.
+fn compact_job(sh: &Arc<StoreShared>, id: u64) {
+    let clear_flag = |sh: &Arc<StoreShared>| {
+        let mut inner = sh.inner.lock().unwrap();
+        if let Some(e) = inner.entries.get_mut(&id) {
+            e.compacting = false;
+        }
+    };
+    let t0 = Instant::now();
+    // Snapshot. The entry is unevictable while its overlay is non-empty,
+    // so a scheduled compaction always finds it resident.
+    let (mat, version) = {
+        let mut inner = sh.inner.lock().unwrap();
+        let Some(mat) = inner.residency.get(id) else {
+            drop(inner);
+            clear_flag(sh);
+            return;
+        };
+        let version = inner.entries.get(&id).map_or(0, |e| e.version);
+        (mat, version)
+    };
+    let Some(overlay) = mat.overlay.clone().filter(|o| !o.is_empty()) else {
+        clear_flag(sh);
+        return;
+    };
+    // Merge + encode + persist outside the lock: traffic keeps servicing
+    // the old version meanwhile.
+    let built: Result<(Arc<Csr>, Arc<CsrDtans>, Option<PathBuf>)> = (|| {
+        let base = match &mat.csr {
+            Some(c) => Arc::clone(c),
+            None => Arc::new(mat.enc.decode_to_csr()?),
+        };
+        let merged = Arc::new(crate::delta::merge(&base, &overlay)?);
+        let enc = Arc::new(CsrDtans::encode(&merged, &sh.encode)?);
+        let path = match &sh.artifacts {
+            Some(cache) => {
+                Some(cache.store(&key_for_versioned(&merged, &sh.encode, version), &enc)?)
+            }
+            None => None,
+        };
+        Ok((merged, enc, path))
+    })();
+    let (merged, enc, path) = match built {
+        Ok(b) => b,
+        Err(_) => {
+            sh.metrics.compaction_failures.fetch_add(1, Ordering::Relaxed);
+            clear_flag(sh);
+            return;
+        }
+    };
+    let nnz_absorbed = overlay.nnz() as u64;
+    let op: Arc<dyn SpmvOperator> = Arc::clone(&merged);
+    let new_mat = Arc::new(LoadedMatrix {
+        name: mat.name.clone(),
+        nrows: mat.nrows,
+        ncols: mat.ncols,
+        nnz: merged.nnz(),
+        csr: Some(merged),
+        enc,
+        op,
+        choice: FormatChoice::Csr,
+        overlay: None,
+        version,
+    });
+    let cost = resident_cost(&new_mat);
+    // Re-eviction gate: with a persisted artifact the merged entry is
+    // evictable again, unless rebuilding its kept CSR would roundtrip
+    // through a lossy f32 decode (same rule as registration).
+    let evictable = path.is_some() && eviction_is_lossless(&new_mat);
+    let mut inner = sh.inner.lock().unwrap();
+    if inner.entries.get(&id).map_or(true, |e| e.version != version) {
+        // Lost the race with an append: the build is stale — discard it.
+        drop(inner);
+        clear_flag(sh);
+        return;
+    }
+    let e = inner.entries.get_mut(&id).expect("checked above");
+    e.nnz = new_mat.nnz;
+    e.overlay_nnz = 0;
+    e.compacting = false;
+    e.keep_csr = true;
+    e.choice = FormatChoice::Csr;
+    if let Some(p) = path {
+        e.artifact = Some(p);
+    }
+    // The atomic swap: in-flight pins keep their own `Arc` to the old
+    // version and finish on it; every acquire from here sees the new one.
+    let evicted = inner.residency.insert(id, Arc::clone(&new_mat), cost);
+    if evictable {
+        inner.residency.mark_evictable(id);
+    }
+    let gauge = overlay_total(&inner);
+    drop(inner);
+    sh.note_evictions(&evicted);
+    sh.metrics.overlay_nnz.store(gauge, Ordering::Relaxed);
+    sh.metrics.record_compaction(id, t0.elapsed().as_micros() as u64, nnz_absorbed);
 }
 
 /// Guard over an acquired matrix: derefs to [`LoadedMatrix`] and releases
@@ -756,6 +1034,126 @@ mod tests {
             let _ = store2.acquire(id2); // unpin triggers an enforce pass
         }
         assert!(!store2.is_resident(id2), "decode-derived CSR is safe to evict");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Run `id`'s routed operator serially over every row (exact bits).
+    fn run_full(store: &MatrixStore, id: u64, x: &[f64]) -> Vec<f64> {
+        let p = store.acquire(id).unwrap();
+        let block = crate::spmv::engine::Block { start: 0, end: p.nrows, cost: 0 };
+        let mut y = vec![0.0; p.nrows];
+        p.op.run_range(block, x, &mut y).unwrap();
+        y
+    }
+
+    #[test]
+    fn append_bumps_version_and_serves_exact_overlay_bits() {
+        let store = store_with(StoreConfig::default());
+        let m = sample(300, 8);
+        let id = store.register_csr("m", m.clone()).unwrap();
+        assert_eq!(store.version_of(id), Some(0));
+        assert_eq!(store.append(id, &[]).unwrap(), 0, "empty batch keeps the version");
+        let updates = [(0u32, 5u32, 1.5f64), (7, 7, -2.0), (0, 5, 0.25)];
+        assert_eq!(store.append(id, &updates).unwrap(), 1);
+        assert_eq!(store.version_of(id), Some(1));
+        assert_eq!(store.format_of(id), Some(FormatChoice::Csr), "append revokes dtANS routing");
+        assert_eq!(store.overlay_nnz_of(id), Some(2), "two distinct coordinates");
+        assert_eq!(store.metrics().deltas_appended.load(Ordering::Relaxed), 3);
+        // Bit-identical to the from-scratch rebuild of base+overlay.
+        let p = store.acquire(id).unwrap();
+        assert_eq!(p.version, 1);
+        assert_eq!(p.op.format_tag(), "overlay");
+        let rebuilt = crate::delta::merge(&m, p.overlay.as_ref().unwrap()).unwrap();
+        drop(p);
+        let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.03).cos()).collect();
+        let mut want = vec![0.0; m.nrows];
+        crate::spmv::spmv_csr(&rebuilt, &x, &mut want).unwrap();
+        assert_eq!(run_full(&store, id, &x), want);
+    }
+
+    #[test]
+    fn append_to_dtans_routed_matrix_decodes_base_and_reroutes() {
+        let store = store_with(StoreConfig { drop_csr: true, ..Default::default() });
+        let id = store.register_csr("m", sample(2000, 10)).unwrap();
+        assert_eq!(store.format_of(id), Some(FormatChoice::CsrDtans));
+        {
+            let p = store.acquire(id).unwrap();
+            assert!(p.csr.is_none(), "drop_csr sheds the original");
+        }
+        assert_eq!(store.append(id, &[(1, 1, 4.0)]).unwrap(), 1);
+        assert_eq!(store.format_of(id), Some(FormatChoice::Csr));
+        let p = store.acquire(id).unwrap();
+        assert!(p.csr.is_some(), "append rebuilds and keeps the CSR base");
+        assert_eq!(p.op.format_tag(), "overlay");
+    }
+
+    #[test]
+    fn compaction_absorbs_overlay_persists_versioned_artifact_and_restores_eviction() {
+        let dir = temp_dir("compact");
+        let store = store_with(StoreConfig {
+            cache_dir: Some(dir.clone()),
+            budget_bytes: Some(1),
+            ..Default::default()
+        });
+        let m = sample(400, 9);
+        let id = store.register_csr("m", m.clone()).unwrap();
+        store.flush();
+        let updates = [(3u32, 3u32, 2.5f64), (10, 0, -1.0)];
+        assert_eq!(store.append(id, &updates).unwrap(), 1);
+        // Unevictable while the overlay is RAM-only.
+        {
+            let _ = store.acquire(id); // unpin triggers an enforce pass
+        }
+        assert!(store.is_resident(id), "overlay entries must resist the budget");
+        assert!(!store.evict(id), "manual evict must refuse too");
+        let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.02).sin()).collect();
+        let want = run_full(&store, id, &x);
+        // Compact: absorbs the overlay, persists a version-1 artifact.
+        assert!(store.compact(id));
+        store.flush();
+        assert_eq!(store.overlay_nnz_of(id), Some(0));
+        assert_eq!(store.version_of(id), Some(1), "compaction keeps the version");
+        assert_eq!(store.metrics().compactions.load(Ordering::Relaxed), 1);
+        assert!(!store.compact(id), "nothing left to compact");
+        assert_eq!(run_full(&store, id, &x), want, "compaction must be bit-neutral");
+        // The artifact landed under the version-aware key.
+        let overlay =
+            DeltaOverlay::empty(m.nrows, m.ncols).appended(&m, &updates).unwrap();
+        let merged = crate::delta::merge(&m, &overlay).unwrap();
+        let cache = ArtifactCache::open(&dir).unwrap();
+        assert!(cache.contains(&key_for_versioned(&merged, &EncodeOptions::default(), 1)));
+        // Evictable again now that the merged artifact exists…
+        {
+            let _ = store.acquire(id); // unpin triggers an enforce pass
+        }
+        assert!(!store.is_resident(id), "compacted+persisted entries are evictable");
+        // …and the cold reload serves the same bits at the same version.
+        let p = store.acquire(id).unwrap();
+        assert_eq!((p.version, p.overlay.is_none()), (1, true));
+        drop(p);
+        assert_eq!(run_full(&store, id, &x), want);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn threshold_append_triggers_background_compaction() {
+        let dir = temp_dir("autocompact");
+        let store = store_with(StoreConfig {
+            cache_dir: Some(dir.clone()),
+            compact_overlay_nnz: Some(4),
+            ..Default::default()
+        });
+        let id = store.register_csr("m", sample(300, 11)).unwrap();
+        store.flush();
+        store.append(id, &[(0, 0, 1.0), (1, 1, 1.0)]).unwrap(); // below threshold
+        store.flush();
+        assert_eq!(store.metrics().compactions.load(Ordering::Relaxed), 0);
+        store.append(id, &[(2, 2, 1.0), (3, 3, 1.0)]).unwrap(); // reaches it
+        store.flush();
+        assert_eq!(store.metrics().compactions.load(Ordering::Relaxed), 1);
+        assert_eq!(store.overlay_nnz_of(id), Some(0));
+        assert_eq!(store.version_of(id), Some(2));
+        assert_eq!(store.metrics().deltas_appended.load(Ordering::Relaxed), 4);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -117,6 +117,17 @@ impl<T> ResidencyManager<T> {
         }
     }
 
+    /// Revoke `id`'s evictability. Used when a resident matrix gains
+    /// RAM-only state its artifact does not capture — a delta overlay
+    /// ([`crate::delta`]) lives only in memory until compaction persists a
+    /// merged artifact, so evicting the entry would lose the appended
+    /// updates.
+    pub fn mark_unevictable(&mut self, id: u64) {
+        if let Some(s) = self.slots.get_mut(&id) {
+            s.evictable = false;
+        }
+    }
+
     /// Fetch `id`'s resident payload, bumping its LRU clock.
     pub fn get(&mut self, id: u64) -> Option<Arc<T>> {
         self.clock += 1;
@@ -244,6 +255,20 @@ mod tests {
         assert!(m.is_resident(1));
         m.mark_evictable(1);
         assert_eq!(m.enforce(), vec![1]);
+    }
+
+    #[test]
+    fn unevictable_mark_revokes_and_restores() {
+        let mut m = mgr(50);
+        m.track(1);
+        m.mark_evictable(1);
+        m.mark_unevictable(1);
+        assert!(m.insert(1, Arc::new("a"), 100).is_empty());
+        assert!(m.is_resident(1), "unevictable entries survive the budget");
+        assert!(!m.evict(1), "manual evict must refuse too");
+        m.mark_evictable(1);
+        assert_eq!(m.enforce(), vec![1]);
+        assert!(!m.is_resident(1));
     }
 
     #[test]

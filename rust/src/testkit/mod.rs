@@ -28,10 +28,13 @@
 //!   [`store`](crate::store) error paths.
 //! * [`stress`] — a seeded concurrency-stress driver that hammers a
 //!   budgeted [`SpmvService`](crate::coordinator::SpmvService) with a
-//!   mixed trace (spmv, SpMM bursts, CG solves, registrations, evictions)
-//!   from many threads, then checks conservation oracles: every recorded
-//!   response bit-identical to a serial replay on an unbudgeted reference
-//!   service, metrics counters summing, zero leaked pins.
+//!   mixed trace (spmv, SpMM bursts, CG solves, registrations, evictions,
+//!   and delta-append bursts on mutable matrices that trigger background
+//!   overlay compactions mid-traffic) from many threads, then checks
+//!   conservation oracles: every recorded response bit-identical to a
+//!   serial replay on an unbudgeted, never-compacting reference service
+//!   (append version stamps included), metrics counters summing, zero
+//!   leaked pins.
 //! * [`zoo`] — curated named fixtures: the pathological shapes (empty
 //!   rows, a single dense row, 1×N, explicit zero values, duplicate-heavy
 //!   COO input, slice-boundary sizes) that previously existed only inline

@@ -1,11 +1,13 @@
 //! Seeded concurrency-stress driver for the coordinator stack.
 //!
 //! [`run_stress`] generates a deterministic mixed trace (single SpMVMs,
-//! SpMM bursts, CG solves, mid-trace registrations, forced evictions)
-//! from a seed, hammers a **budgeted** [`SpmvService`] with it from many
-//! threads — so evictions, cold reloads, deduped loader faults, SpMM
-//! batch packing and solve pins all interleave — and then checks four
-//! conservation oracles:
+//! SpMM bursts, CG solves, mid-trace registrations, forced evictions,
+//! and — in closed-loop runs — delta-append bursts on a set of mutable
+//! matrices) from a seed, hammers a **budgeted** [`SpmvService`] with it
+//! from many threads — so evictions, cold reloads, deduped loader
+//! faults, SpMM batch packing, solve pins and background overlay
+//! compactions all interleave — and then checks four conservation
+//! oracles:
 //!
 //! 1. **Bit-identical serial replay of the admitted trace** — every
 //!    response the stressed service produced is recomputed on a fresh
@@ -13,15 +15,24 @@
 //!    shed and expired requests (which by contract never executed) are
 //!    skipped but tallied. Eviction, cold reload and kernel parallelism
 //!    must never change a single ULP (the per-format bit-identity
-//!    guarantee of the engine, end to end through the service).
+//!    guarantee of the engine, end to end through the service). The
+//!    replay also re-applies every append burst at the same trace point
+//!    and compares the version stamps — and because every op touching a
+//!    mutable matrix is confined to one thread (see
+//!    [`StressConfig::mutate`]), the per-matrix interleaving is a
+//!    function of the trace alone, so reads of mutated matrices must be
+//!    bit-identical too even though the stressed service compacts
+//!    overlays in the background mid-traffic (compaction is bit-neutral
+//!    by construction; the reference never compacts).
 //! 2. **Metrics conservation** — after the run drains,
 //!    `completed + failed + shed + expired == submitted`, no request
 //!    failed, and the shed/expired counters agree exactly with the
 //!    outcomes the threads recorded.
 //! 3. **Zero leaked pins** — every registered matrix's
 //!    [`pin_count`](crate::store::MatrixStore::pin_count) is 0 once all
-//!    threads join: no code path (including shedding and deadline
-//!    expiry) leaks an acquisition.
+//!    threads join: no code path (including shedding, deadline expiry,
+//!    append's pin-and-retry commit, and the compaction swap's
+//!    pin-quiesce) leaks an acquisition.
 //! 4. **Span conservation** — the stressed service traces every request
 //!    ([`ObsConfig`] with `sample_one_in: 1` and a capacity scaled to the
 //!    trace, so nothing drops), and after the drain the span chains must
@@ -88,6 +99,20 @@ pub struct StressConfig {
     /// sheds); open-loop presets use a small depth so backpressure
     /// actually sheds.
     pub queue_depth: usize,
+    /// Inject mutation ops: a deterministic subset of each mutable
+    /// matrix's owning thread's trace slots is rewritten into
+    /// [`append`](SpmvService::append) bursts and reads of that matrix,
+    /// and the stressed service gets a small
+    /// [`compact_overlay_nnz`](StoreConfig::compact_overlay_nnz)
+    /// threshold so background compactions fire mid-traffic. Every op
+    /// touching mutable matrix `j` lands only at trace indices owned by
+    /// thread `j % threads` — the closed loop executes a thread's slice
+    /// in index order, so the per-matrix op order equals the serial
+    /// replay order and oracle 1's bit-identity extends to mutation.
+    /// Ignored (off) under [`open_loop`](StressConfig::open_loop)
+    /// arrivals, whose fire-and-forget submits would unorder reads
+    /// against appends.
+    pub mutate: bool,
 }
 
 impl StressConfig {
@@ -108,16 +133,19 @@ impl StressConfig {
             par: ParStrategy::Auto,
             open_loop: false,
             queue_depth: 4096,
+            mutate: true,
         }
     }
 
     /// The open-loop variant of [`StressConfig::for_scale`]: same trace
     /// shape, but arrivals are not gated on completions and the queue is
     /// small enough that admission control must shed under the burst.
+    /// Mutation ops are off — see [`StressConfig::mutate`].
     pub fn open_loop_for_scale(scale: TestkitScale) -> StressConfig {
         StressConfig {
             open_loop: true,
             queue_depth: 64,
+            mutate: false,
             ..StressConfig::for_scale(scale)
         }
     }
@@ -134,6 +162,11 @@ pub struct StressReport {
     pub spmm_checked: usize,
     /// CG solves compared (iterate + residual history, bitwise).
     pub solves_checked: usize,
+    /// Append bursts replayed on the reference with matching version
+    /// stamps (0 unless [`StressConfig::mutate`]).
+    pub appends_checked: usize,
+    /// Background overlay compactions the stressed service completed.
+    pub compactions: u64,
     /// Operations skipped because their mid-trace registration had not
     /// landed yet on the issuing thread's timeline.
     pub skipped: usize,
@@ -160,6 +193,12 @@ enum TraceOp {
     Solve { vseed: u64 },
     Register { extra: usize },
     Evict { mat: usize },
+    /// Append a deterministic burst of coefficient updates (expanded
+    /// from `batch_seed` by [`mutation_batch`]) to a mutable matrix.
+    /// Only injected by [`inject_mutations`], never rolled by
+    /// [`gen_trace`], so every `Append` sits at a trace index owned by
+    /// the matrix's affinity thread.
+    Append { mat: usize, batch_seed: u64 },
 }
 
 /// A recorded response, for bitwise comparison with the replay.
@@ -168,6 +207,8 @@ enum Response {
     Vecs(Vec<VecOutcome>),
     /// CG iterate and residual history.
     Solve(Vec<f64>, Vec<f64>),
+    /// The version an `Append` stamped.
+    Version(u64),
     /// Op produced nothing to compare (`Register`, `Evict`, skipped).
     None,
 }
@@ -216,13 +257,83 @@ fn gen_trace(rng: &mut Xoshiro256, ops: usize, n_total: usize, n_extra: usize) -
     trace
 }
 
+/// Expand an `Append` op's seed into its deterministic update burst
+/// (1–4 coefficient deltas inside the matrix's dims). Both the stressed
+/// run and the serial replay call this, so the burst is identical on
+/// each side by construction.
+fn mutation_batch(nrows: usize, ncols: usize, batch_seed: u64) -> Vec<(u32, u32, f64)> {
+    let mut rng = Xoshiro256::seeded(batch_seed);
+    let k = 1 + rng.below_usize(4);
+    (0..k)
+        .map(|_| {
+            let r = rng.below(nrows as u64) as u32;
+            let c = rng.below(ncols as u64) as u32;
+            (r, c, rng.next_f64() * 4.0 - 2.0)
+        })
+        .collect()
+}
+
+/// Rewrite a deterministic subset of each mutable matrix's owning
+/// thread's trace slots into append bursts and reads of that matrix.
+///
+/// Bit-identical replay of a mutated matrix needs its op order under
+/// concurrency to equal the serial trace order. The closed loop gives
+/// each thread its ops in index order (thread `t` executes indices
+/// `t, t+threads, …`, waiting for each before the next), so confining
+/// every op that touches mutable matrix `j` to the indices owned by
+/// thread `j % threads` makes the per-matrix interleaving a function of
+/// the trace alone — appends and reads replay in exactly that order on
+/// the serial reference. [`gen_trace`] never rolls a mutable index
+/// (its `n_total` excludes them), so this pass is the only source of
+/// ops on them. `Register` slots are left alone (each extra must still
+/// register exactly once); at least one `Append` per mutable matrix is
+/// guaranteed.
+fn inject_mutations(
+    trace: &mut [TraceOp],
+    rng: &mut Xoshiro256,
+    threads: usize,
+    n_rand: usize,
+    n_mut: usize,
+) {
+    let threads = threads.max(1);
+    for j in 0..n_mut {
+        let mat = n_rand + j;
+        let t = j % threads;
+        let mut appended = false;
+        let mut first_free = None;
+        for idx in (t..trace.len()).step_by(threads) {
+            if matches!(trace[idx], TraceOp::Register { .. }) {
+                continue;
+            }
+            if first_free.is_none() {
+                first_free = Some(idx);
+            }
+            let roll = rng.below(100);
+            if roll < 20 {
+                trace[idx] = TraceOp::Append { mat, batch_seed: rng.next_u64() };
+                appended = true;
+            } else if roll < 40 {
+                trace[idx] = TraceOp::Spmv { mat, vseed: rng.next_u64() };
+            }
+        }
+        if !appended {
+            if let Some(idx) = first_free {
+                trace[idx] = TraceOp::Append { mat, batch_seed: rng.next_u64() };
+            }
+        }
+    }
+}
+
 fn solver_config() -> SolverConfig {
     SolverConfig { max_iters: 200, tol: 1e-8, par: ParStrategy::Serial }
 }
 
-/// The fixture set: the mixed service zoo plus a few extras registered
-/// mid-trace, and one SPD matrix for solves.
-fn fixtures(seed: u64) -> (Vec<Csr>, usize, Csr) {
+/// The fixture set: the mixed service zoo, a few extras registered
+/// mid-trace, two mutable matrices (append targets — placed *after* the
+/// extras so [`gen_trace`]'s random indices never reach them; see
+/// [`inject_mutations`]), and one SPD matrix for solves. Returns
+/// `(fixtures, n_extra, n_mut, spd)`.
+fn fixtures(seed: u64) -> (Vec<Csr>, usize, usize, Csr) {
     let mut base = zoo::mixed_zoo();
     let n_extra = 3;
     for i in 0..n_extra as u64 {
@@ -234,7 +345,17 @@ fn fixtures(seed: u64) -> (Vec<Csr>, usize, Csr) {
         );
         base.push(m);
     }
-    (base, n_extra, zoo::spd(24))
+    let n_mut = 2;
+    for i in 0..n_mut as u64 {
+        let mut m = crate::matrix::gen::structured::banded(260 + 90 * i as usize, 3);
+        crate::matrix::gen::assign_values(
+            &mut m,
+            crate::matrix::gen::ValueDist::FewDistinct(4),
+            &mut Xoshiro256::seeded(seed ^ (0xF0 + i)),
+        );
+        base.push(m);
+    }
+    (base, n_extra, n_mut, zoo::spd(24))
 }
 
 /// Run one stress cycle; see the [module docs](self) for the oracles.
@@ -254,12 +375,21 @@ pub fn run_stress(cfg: &StressConfig) -> Result<StressReport> {
 
 fn run_stress_inner(cfg: &StressConfig, cache_dir: &Path) -> Result<StressReport> {
     let policy = RoutePolicy { min_nnz: 1 << 9, max_size_ratio: 0.95 };
-    let (all_fixtures, n_extra, spd) = fixtures(cfg.seed);
+    let (all_fixtures, n_extra, n_mut, spd) = fixtures(cfg.seed);
     let n_total = all_fixtures.len();
-    let n_base = n_total - n_extra;
+    // Random trace ops index only the first `n_rand` fixtures; the
+    // mutable tail is reached exclusively through [`inject_mutations`].
+    let n_rand = n_total - n_mut;
+    let n_base = n_rand - n_extra;
 
     let mut rng = Xoshiro256::seeded(cfg.seed);
-    let trace = gen_trace(&mut rng, cfg.ops, n_total, n_extra);
+    let mut trace = gen_trace(&mut rng, cfg.ops, n_rand, n_extra);
+    // Mutation needs the closed loop's per-thread ordering; open-loop
+    // fire-and-forget submits would unorder reads against appends.
+    let mutate = cfg.mutate && !cfg.open_loop;
+    if mutate {
+        inject_mutations(&mut trace, &mut rng, cfg.threads, n_rand, n_mut);
+    }
 
     // --- Stressed subject: budgeted, cached, parallel. ---
     let svc = Arc::new(SpmvService::start(ServiceConfig {
@@ -271,6 +401,9 @@ fn run_stress_inner(cfg: &StressConfig, cache_dir: &Path) -> Result<StressReport
             budget_bytes: cfg.budget_bytes,
             drop_csr: true,
             loader_threads: 2,
+            // Low threshold so append bursts actually trigger background
+            // compactions mid-traffic (bit-neutral, so oracle 1 holds).
+            compact_overlay_nnz: mutate.then_some(8),
         },
         admission: AdmissionConfig { queue_depth: cfg.queue_depth, ..Default::default() },
         // Oracle 4 needs a lossless trace: sample everything, and size
@@ -279,11 +412,14 @@ fn run_stress_inner(cfg: &StressConfig, cache_dir: &Path) -> Result<StressReport
         obs: ObsConfig { sample_one_in: 1, capacity: cfg.ops.max(8) * 64 },
         ..Default::default()
     }));
-    // Base fixtures and the SPD solve matrix register up front; extras
-    // land mid-trace.
+    // Base fixtures, the mutable tail and the SPD solve matrix register
+    // up front; extras land mid-trace.
     let mut ids: Vec<Option<u64>> = vec![None; n_total];
     for (i, m) in all_fixtures.iter().take(n_base).enumerate() {
         ids[i] = Some(svc.register(&format!("base{i}"), m.clone())?);
+    }
+    for mat in n_rand..n_total {
+        ids[mat] = Some(svc.register(&format!("mut{}", mat - n_rand), all_fixtures[mat].clone())?);
     }
     let spd_id = svc.register("spd", spd.clone())?;
     svc.store().flush(); // artifacts on disk -> base set evictable
@@ -476,6 +612,8 @@ fn run_stress_inner(cfg: &StressConfig, cache_dir: &Path) -> Result<StressReport
         spmv_checked: 0,
         spmm_checked: 0,
         solves_checked: 0,
+        appends_checked: 0,
+        compactions: m.compactions.load(Ordering::Relaxed),
         skipped: 0,
         shed: 0,
         expired: 0,
@@ -512,6 +650,28 @@ fn run_stress_inner(cfg: &StressConfig, cache_dir: &Path) -> Result<StressReport
              metrics say shed={shed} expired={expired}",
             report.shed, report.expired
         )));
+    }
+    // End-state probe: after the drain (and whatever background
+    // compactions the stressed service ran), every mutable matrix must
+    // sit at the reference's version and still serve the exact bits of
+    // the never-compacted reference overlay.
+    for mat in n_rand..n_total {
+        let id = ids.lock().unwrap()[mat].expect("mutable fixtures register up front");
+        let (got_v, want_v) =
+            (svc.store().version_of(id), reference.store().version_of(ref_ids[mat]));
+        if got_v != want_v {
+            return Err(DtansError::Service(format!(
+                "mutable matrix {mat}: stressed version {got_v:?} != reference {want_v:?}"
+            )));
+        }
+        let probe = request_vector(all_fixtures[mat].ncols, cfg.seed ^ mat as u64);
+        let got = svc.spmv(id, probe.clone())?;
+        let want = reference.spmv(ref_ids[mat], probe)?;
+        if got != want {
+            return Err(DtansError::Service(format!(
+                "mutable matrix {mat}: end-state SpMVM diverged from serial replay"
+            )));
+        }
     }
     Ok(report)
 }
@@ -592,7 +752,10 @@ fn submit_op(
             }
             None => InFlight::Ready(Ok(Response::None)),
         },
-        TraceOp::Solve { .. } | TraceOp::Register { .. } | TraceOp::Evict { .. } => {
+        TraceOp::Solve { .. }
+        | TraceOp::Register { .. }
+        | TraceOp::Evict { .. }
+        | TraceOp::Append { .. } => {
             InFlight::Ready(execute_op(svc, ids, fixtures, n_base, spd_id, spd_dims, op))
         }
     }
@@ -694,6 +857,16 @@ fn execute_op(
             }
             Ok(Response::None)
         }
+        TraceOp::Append { mat, batch_seed } => match lookup(mat) {
+            Some(id) => {
+                let updates =
+                    mutation_batch(fixtures[mat].nrows, fixtures[mat].ncols, batch_seed);
+                let version = svc.append(id, &updates).map_err(fail)?;
+                Ok(Response::Version(version))
+            }
+            // Mutable fixtures register before the threads start.
+            None => Err(format!("append target {mat} was never registered")),
+        },
     }
 }
 
@@ -765,6 +938,20 @@ fn replay_and_compare(
             }
             report.solves_checked += 1;
         }
+        (TraceOp::Append { mat, batch_seed }, Response::Version(got)) => {
+            // Re-apply the burst at the same trace point. Per-matrix
+            // thread affinity makes the stressed per-matrix order equal
+            // the trace order, so the version stamps must agree — and
+            // the reference overlay now carries the exact folded bits
+            // every later read of this matrix is compared against.
+            let updates =
+                mutation_batch(fixtures[mat].nrows, fixtures[mat].ncols, batch_seed);
+            let want = reference.append(ref_ids[mat], &updates)?;
+            if got != want {
+                return mismatch("append version stamp");
+            }
+            report.appends_checked += 1;
+        }
         (TraceOp::Spmv { .. } | TraceOp::Spmm { .. }, Response::None) => report.skipped += 1,
         (TraceOp::Register { .. } | TraceOp::Evict { .. }, _) => {}
         (op, _) => {
@@ -807,6 +994,67 @@ mod tests {
     }
 
     #[test]
+    fn mutation_injection_is_deterministic_and_thread_affine() {
+        let threads = 3;
+        let (n_rand, n_mut) = (12, 2);
+        let mk = |seed: u64| {
+            let mut rng = Xoshiro256::seeded(seed);
+            let mut trace = gen_trace(&mut rng, 300, n_rand, 3);
+            inject_mutations(&mut trace, &mut rng, threads, n_rand, n_mut);
+            trace
+        };
+        let ta = mk(9);
+        let tb = mk(9);
+        for (x, y) in ta.iter().zip(&tb) {
+            assert_eq!(format!("{x:?}"), format!("{y:?}"));
+        }
+        // Every op touching a mutable matrix sits at an index owned by
+        // that matrix's affinity thread, each mutable matrix gets at
+        // least one append, and the extras still register exactly once.
+        let mut appends = vec![0usize; n_mut];
+        for (idx, op) in ta.iter().enumerate() {
+            let mat = match op {
+                TraceOp::Spmv { mat, .. } | TraceOp::Spmm { mat, .. } | TraceOp::Evict { mat } => {
+                    *mat
+                }
+                TraceOp::Append { mat, batch_seed } => {
+                    assert!(*mat >= n_rand, "appends only target the mutable tail");
+                    appends[*mat - n_rand] += 1;
+                    assert!(!mutation_batch(40, 40, *batch_seed).is_empty());
+                    *mat
+                }
+                TraceOp::Solve { .. } | TraceOp::Register { .. } => continue,
+            };
+            if mat >= n_rand {
+                assert_eq!(idx % threads, (mat - n_rand) % threads, "op {idx} off-thread");
+            }
+        }
+        assert!(appends.iter().all(|&n| n >= 1), "{appends:?}");
+        let mut extras: Vec<usize> = ta
+            .iter()
+            .filter_map(|op| match op {
+                TraceOp::Register { extra } => Some(*extra),
+                _ => None,
+            })
+            .collect();
+        extras.sort_unstable();
+        assert_eq!(extras, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn mutation_batches_stay_in_bounds() {
+        for seed in 0..64 {
+            let batch = mutation_batch(17, 23, seed);
+            assert!((1..=4).contains(&batch.len()));
+            for &(r, c, v) in &batch {
+                assert!((r as usize) < 17 && (c as usize) < 23);
+                assert!(v.is_finite());
+            }
+            assert_eq!(batch, mutation_batch(17, 23, seed));
+        }
+    }
+
+    #[test]
     fn scale_configs_meet_the_acceptance_floor() {
         for scale in [TestkitScale::Small, TestkitScale::Medium, TestkitScale::Large] {
             let cfg = StressConfig::for_scale(scale);
@@ -814,11 +1062,13 @@ mod tests {
             assert!(cfg.ops >= 200, "{scale:?}");
             assert!(cfg.budget_bytes.is_some(), "{scale:?}");
             assert!(!cfg.open_loop, "{scale:?}");
+            assert!(cfg.mutate, "{scale:?}: closed-loop presets exercise mutation");
             // Closed loop must never shed: depth far above the largest
             // possible in-flight count (threads × max SpMM burst).
             assert!(cfg.queue_depth >= cfg.threads * 8, "{scale:?}");
             let ol = StressConfig::open_loop_for_scale(scale);
             assert!(ol.open_loop, "{scale:?}");
+            assert!(!ol.mutate, "{scale:?}: open loop cannot order appends");
             // Open loop must be able to shed: depth below the trace's
             // submit count.
             assert!(ol.queue_depth < ol.ops, "{scale:?}");
@@ -838,10 +1088,14 @@ mod tests {
             par: ParStrategy::Auto,
             open_loop: false,
             queue_depth: 4096,
+            mutate: true,
         };
         let report = run_stress(&cfg).unwrap();
         assert_eq!(report.ops_executed, 24);
         assert!(report.spmv_checked + report.spmm_checked + report.solves_checked > 0);
+        // Injection guarantees at least one append per mutable matrix,
+        // and every one must have replayed with a matching version.
+        assert!(report.appends_checked >= 2, "{report:?}");
         assert_eq!((report.shed, report.expired), (0, 0));
     }
 
@@ -859,9 +1113,12 @@ mod tests {
             par: ParStrategy::Auto,
             open_loop: true,
             queue_depth: 8,
+            // `mutate: true` must be a no-op under open-loop arrivals.
+            mutate: true,
         };
         let report = run_stress(&cfg).unwrap();
         assert_eq!(report.ops_executed, 32);
         assert!(report.spmv_checked + report.spmm_checked + report.solves_checked > 0);
+        assert_eq!((report.appends_checked, report.compactions), (0, 0));
     }
 }

@@ -43,6 +43,7 @@ fn budgeted_service_is_bit_identical_to_unbudgeted() {
             budget_bytes: Some(64 * 1024), // far below ~9 matrices' cost
             drop_csr: true,
             loader_threads: 2,
+            ..Default::default()
         },
         ..Default::default()
     });
