@@ -22,7 +22,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     // `obs_overhead` bench for the measured cost of each mode.
     let svc = SpmvService::start(ServiceConfig {
         workers: 2,
-        policy: RoutePolicy { min_nnz: 1 << 12, max_size_ratio: 0.95 },
+        policy: RoutePolicy { min_nnz: 1 << 12, max_size_ratio: 0.95, ..Default::default() },
         obs: ObsConfig { sample_one_in: 1, capacity: 8192 },
         ..Default::default()
     });

@@ -33,6 +33,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         policy: RoutePolicy {
             min_nnz: 1 << 14,
             max_size_ratio: 0.95,
+            ..Default::default()
         },
         store: StoreConfig {
             cache_dir: Some(cache_dir.clone()),

@@ -32,6 +32,10 @@ pub enum FormatChoice {
     Csr,
     /// Entropy-coded CSR-dtANS kernel.
     CsrDtans,
+    /// σ-sorted balanced-block kernel
+    /// ([`crate::matrix::BlockedEll`]) — for large matrices whose
+    /// row-length skew makes the sort-and-pad layout pay.
+    BlockedEll,
 }
 
 impl FormatChoice {
@@ -41,6 +45,7 @@ impl FormatChoice {
         match self {
             FormatChoice::Csr => "csr",
             FormatChoice::CsrDtans => "csr_dtans",
+            FormatChoice::BlockedEll => "blocked_ell",
         }
     }
 }
@@ -55,6 +60,13 @@ pub struct RoutePolicy {
     pub min_nnz: usize,
     /// Required compressed/baseline size ratio (must be below this).
     pub max_size_ratio: f64,
+    /// Row-length coefficient of variation (std/mean) at or above which a
+    /// large matrix that would otherwise stay CSR routes to
+    /// [`FormatChoice::BlockedEll`] instead — skewed row lengths are where
+    /// the σ-sort balancing pays (CMRS / adaptive row-grouped CSR).
+    /// Defaults to `f64::INFINITY`: BlockedEll is opt-in and existing
+    /// routing behavior is unchanged until a deployment lowers it.
+    pub blocked_ell_cv: f64,
 }
 
 impl Default for RoutePolicy {
@@ -62,12 +74,33 @@ impl Default for RoutePolicy {
         RoutePolicy {
             min_nnz: 1 << 15,
             max_size_ratio: 0.9,
+            blocked_ell_cv: f64::INFINITY,
         }
     }
 }
 
+/// Coefficient of variation (population std / mean) of `m`'s row lengths;
+/// `0.0` for empty or empty-row-only matrices.
+fn row_len_cv(m: &Csr) -> f64 {
+    if m.nrows == 0 || m.nnz() == 0 {
+        return 0.0;
+    }
+    let mean = m.nnz() as f64 / m.nrows as f64;
+    let var = (0..m.nrows)
+        .map(|r| {
+            let d = m.row_len(r) as f64 - mean;
+            d * d
+        })
+        .sum::<f64>()
+        / m.nrows as f64;
+    var.sqrt() / mean
+}
+
 impl RoutePolicy {
     /// Decide the format for a matrix given its (pre-computed) encoding.
+    /// Size rules first (dtANS when large *and* compressed); a large
+    /// matrix that stays uncompressed then routes to BlockedEll when its
+    /// row-length skew clears [`blocked_ell_cv`](RoutePolicy::blocked_ell_cv).
     pub fn choose(&self, csr: &Csr, enc: &CsrDtans, opts: &EncodeOptions) -> FormatChoice {
         if csr.nnz() < self.min_nnz {
             return FormatChoice::Csr;
@@ -79,6 +112,8 @@ impl RoutePolicy {
         let ratio = enc.size_report().total as f64 / baseline.max(1) as f64;
         if ratio < self.max_size_ratio {
             FormatChoice::CsrDtans
+        } else if row_len_cv(csr) >= self.blocked_ell_cv {
+            FormatChoice::BlockedEll
         } else {
             FormatChoice::Csr
         }
@@ -92,7 +127,10 @@ impl RoutePolicy {
     /// COO wins whenever `nnz < nrows + 1`, e.g. matrices with many empty
     /// rows). Only SELL is unaccounted for — it beats CSR/COO on size
     /// only for unusually regular matrices, where this rule is then
-    /// slightly more permissive than [`RoutePolicy::choose`].
+    /// slightly more permissive than [`RoutePolicy::choose`]. BlockedEll
+    /// is never chosen here: the row-length statistics it needs require
+    /// the decoded structure, and artifact-registered matrices keep no
+    /// CSR original to build it from.
     pub fn choose_encoded(&self, enc: &CsrDtans) -> FormatChoice {
         if enc.nnz < self.min_nnz {
             return FormatChoice::Csr;
@@ -111,7 +149,10 @@ impl RoutePolicy {
     /// execute against: the CSR original for [`FormatChoice::Csr`] (an
     /// error if none is held — the store's residency rules guarantee one
     /// exists for CSR-routed matrices), a [`DtansOperator`] (owning its
-    /// decode plan) for [`FormatChoice::CsrDtans`].
+    /// decode plan) for [`FormatChoice::CsrDtans`], and a freshly built
+    /// default-geometry [`BlockedEll`] for [`FormatChoice::BlockedEll`]
+    /// (also requiring the CSR original — the store keeps it resident for
+    /// every non-dtANS route).
     pub fn operator_for(
         choice: FormatChoice,
         csr: Option<&Arc<Csr>>,
@@ -125,6 +166,12 @@ impl RoutePolicy {
                 )),
             },
             FormatChoice::CsrDtans => Ok(Arc::new(DtansOperator::new(Arc::clone(enc)))),
+            FormatChoice::BlockedEll => match csr {
+                Some(csr) => Ok(Arc::new(crate::matrix::BlockedEll::from_csr_default(csr))),
+                None => Err(DtansError::Service(
+                    "BlockedEll-routed matrix has no resident CSR original".into(),
+                )),
+            },
         }
     }
 }
@@ -195,5 +242,37 @@ mod tests {
         };
         // Random values + random pattern: dtANS cannot win on size.
         assert_eq!(p.choose(&m, &enc, &opts), FormatChoice::Csr);
+    }
+
+    #[test]
+    fn skew_threshold_routes_large_uncompressible_matrices_to_blocked_ell() {
+        // Same incompressible matrix as above: the size rule rejects
+        // dtANS, so the skew rule decides between CSR and BlockedEll.
+        let mut rng = Xoshiro256::seeded(2);
+        let mut m = crate::matrix::gen::structured::random_uniform(8000, 8000, 80_000, &mut rng);
+        assign_values(&mut m, ValueDist::Random, &mut rng);
+        let opts = EncodeOptions::default();
+        let enc = CsrDtans::encode(&m, &opts).unwrap();
+        // Default threshold (infinity): behavior unchanged, stays CSR.
+        let p = RoutePolicy { min_nnz: 1 << 10, ..Default::default() };
+        assert_eq!(p.choose(&m, &enc, &opts), FormatChoice::Csr);
+        // Any finite threshold at/below the matrix's CV flips the route.
+        let p = RoutePolicy { min_nnz: 1 << 10, blocked_ell_cv: 0.0, ..Default::default() };
+        assert_eq!(p.choose(&m, &enc, &opts), FormatChoice::BlockedEll);
+        assert_eq!(FormatChoice::BlockedEll.tag(), "blocked_ell");
+        // Small matrices are exempt regardless of skew.
+        let small = banded(100, 2);
+        let small_enc = CsrDtans::encode(&small, &opts).unwrap();
+        assert_eq!(p.choose(&small, &small_enc, &opts), FormatChoice::Csr);
+    }
+
+    #[test]
+    fn operator_for_blocked_ell_needs_the_csr_original() {
+        let m = Arc::new(banded(100, 2));
+        let enc = Arc::new(CsrDtans::encode(&m, &EncodeOptions::default()).unwrap());
+        let op = RoutePolicy::operator_for(FormatChoice::BlockedEll, Some(&m), &enc).unwrap();
+        assert_eq!(op.format_tag(), "blocked_ell");
+        assert_eq!(op.dims(), (100, 100));
+        assert!(RoutePolicy::operator_for(FormatChoice::BlockedEll, None, &enc).is_err());
     }
 }

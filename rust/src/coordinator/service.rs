@@ -61,7 +61,7 @@ use crate::matrix::csr::Csr;
 use crate::obs::{ObsConfig, SpanId, Stage};
 use crate::solver::{self, PowerSolution, Solution, SolveMethod, SolverConfig};
 use crate::spmv::densemat::DenseMat;
-use crate::spmv::engine::{ParStrategy, SpmvEngine};
+use crate::spmv::engine::{KernelVariant, ParStrategy, SpmvEngine};
 use crate::store::{MatrixStore, PinnedMatrix, StoreConfig};
 use crate::util::error::{DtansError, Result};
 use std::path::Path;
@@ -111,6 +111,12 @@ pub struct ServiceConfig {
     /// large multiplies across all CPUs and runs small ones serially;
     /// `Serial` restores pre-engine behavior.
     pub par: ParStrategy,
+    /// Kernel variant of the shared engine: `Scalar` (default) runs the
+    /// classic left-to-right kernels; `Unrolled4`/`Unrolled8` select the
+    /// wide-accumulator kernels (reassociation policy in
+    /// `docs/KERNELS.md`). Per-variant results stay deterministic across
+    /// `par` and partition counts.
+    pub kernel_variant: KernelVariant,
     /// Storage tier: artifact cache directory, residency byte budget,
     /// CSR-original dropping, loader threads. The default keeps
     /// everything in RAM with no persistence (the pre-store behavior).
@@ -133,6 +139,7 @@ impl Default for ServiceConfig {
             encode: EncodeOptions::default(),
             policy: RoutePolicy::default(),
             par: ParStrategy::Auto,
+            kernel_variant: KernelVariant::default(),
             store: StoreConfig::default(),
             admission: AdmissionConfig::default(),
             obs: ObsConfig::default(),
@@ -186,7 +193,8 @@ impl SpmvService {
             Arc::clone(&metrics),
         )?);
         let queue = Arc::new(AdmissionQueue::new(&config.admission));
-        let engine = Arc::new(SpmvEngine::new(config.par));
+        let engine =
+            Arc::new(SpmvEngine::new(config.par).with_kernel_variant(config.kernel_variant));
 
         let dispatcher = {
             let queue = Arc::clone(&queue);
@@ -780,6 +788,25 @@ mod tests {
     }
 
     #[test]
+    fn kernel_variant_knob_serves_close_to_scalar() {
+        let mut m = banded(300, 4);
+        assign_values(&mut m, ValueDist::FewDistinct(4), &mut Xoshiro256::seeded(7));
+        let x: Vec<f64> = (0..300).map(|i| (i as f64).cos()).collect();
+        let mut want = vec![0.0; 300];
+        spmv_csr(&m, &x, &mut want).unwrap();
+        for variant in KernelVariant::ALL {
+            let svc = SpmvService::start(ServiceConfig {
+                kernel_variant: variant,
+                ..Default::default()
+            });
+            let id = svc.register("banded", m.clone()).unwrap();
+            let got = svc.spmv(id, x.clone()).unwrap();
+            crate::util::propcheck::assert_close(&got, &want, 1e-12, 1e-12)
+                .unwrap_or_else(|e| panic!("{}: {e}", variant.label()));
+        }
+    }
+
+    #[test]
     fn batches_many_concurrent_requests() {
         let svc = SpmvService::start(ServiceConfig {
             workers: 4,
@@ -859,7 +886,7 @@ mod tests {
             let svc = SpmvService::start(ServiceConfig {
                 workers: 2,
                 par,
-                policy: RoutePolicy { min_nnz: 1 << 10, max_size_ratio: 0.95 },
+                policy: RoutePolicy { min_nnz: 1 << 10, max_size_ratio: 0.95, ..Default::default() },
                 ..Default::default()
             });
             let id = svc.register("m", m.clone()).unwrap();
@@ -967,6 +994,7 @@ mod tests {
             policy: RoutePolicy {
                 min_nnz: 1 << 10,
                 max_size_ratio: 0.9,
+                ..Default::default()
             },
             ..Default::default()
         });
@@ -1014,7 +1042,7 @@ mod tests {
         let dir = std::env::temp_dir()
             .join(format!("dtans_test_svc_budget_{}", std::process::id()));
         let svc = SpmvService::start(ServiceConfig {
-            policy: RoutePolicy { min_nnz: 1 << 8, max_size_ratio: 0.98 },
+            policy: RoutePolicy { min_nnz: 1 << 8, max_size_ratio: 0.98, ..Default::default() },
             store: StoreConfig {
                 cache_dir: Some(dir.clone()),
                 budget_bytes: Some(1),

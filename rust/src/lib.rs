@@ -16,20 +16,25 @@
 //!   histogram normalization with multiplicity cap `M`, coding tables,
 //!   the segment/word decoder of the paper's Algorithm 3, and the
 //!   two-pass (base pass + digit pass) encoder.
-//! * [`matrix`] — sparse matrix substrates: COO/CSR/SELL, MatrixMarket IO,
-//!   random-graph and structured generators, entropy statistics.
+//! * [`matrix`] — sparse matrix substrates: COO/CSR/SELL plus the
+//!   balanced fixed-width block format [`matrix::BlockedEll`],
+//!   MatrixMarket IO, random-graph and structured generators, entropy
+//!   statistics.
 //! * [`format`] — the **CSR-dtANS** container: delta encoding,
 //!   symbolization with escapes, per-row encoding, warp interleaving,
 //!   byte-accurate size accounting.
-//! * [`spmv`] — SpMVM kernels for dense/CSR/COO/SELL/CSR-dtANS, including
-//!   the warp-synchronous on-the-fly-decoding kernel (the CUDA kernel's
-//!   semantics executed in lockstep on the CPU). On top sits the
+//! * [`spmv`] — SpMVM kernels for dense/CSR/COO/SELL/BlockedELL/
+//!   CSR-dtANS, including the warp-synchronous on-the-fly-decoding
+//!   kernel (the CUDA kernel's semantics executed in lockstep on the
+//!   CPU) and the hand-unrolled 4/8-wide [`spmv::engine::KernelVariant`]
+//!   kernels in [`spmv::unrolled`] with their documented deterministic
+//!   reassociation policy (`docs/KERNELS.md`). On top sits the
 //!   format-agnostic [`spmv::operator`] layer — the object-safe
 //!   [`spmv::SpmvOperator`] trait every format implements, plus a
 //!   [`spmv::FormatRegistry`] — and the parallel [`spmv::engine`]: an
 //!   nnz-balanced partitioner + thread-pool executor (bit-identical to
-//!   the serial kernels) with batched multi-RHS entry points over
-//!   contiguous [`spmv::densemat`] views.
+//!   the serial kernels, per variant) with batched multi-RHS entry
+//!   points over contiguous [`spmv::densemat`] views.
 //! * [`sim`] — a GPU execution-model simulator (coalescing, L2, DRAM
 //!   roofline) that stands in for the paper's RTX 5090 when regenerating
 //!   the runtime figures/tables.
@@ -69,8 +74,9 @@
 //!   (see `docs/MUTATION.md`).
 //! * [`testkit`] — the verification subsystem behind the integration
 //!   tests: a differential conformance oracle (every registered format ×
-//!   every partition strategy vs the serial CSR ground truth, with
-//!   structured mismatch reports), deterministic fault injection for
+//!   every kernel variant × every partition strategy vs the serial CSR
+//!   ground truth, with structured mismatch reports and reassociation
+//!   negative controls), deterministic fault injection for
 //!   `.dtans` artifacts plus a failing cache-root shim, a seeded
 //!   concurrency-stress driver with serial-replay bit-identity oracles,
 //!   and the curated pathological matrix zoo.

@@ -1,0 +1,292 @@
+//! Blocked ELLPACK (BlockedEll) — CMRS / adaptive-row-grouped-CSR-style
+//! balanced fixed-width row blocks: rows are sorted by length inside
+//! small σ-windows, grouped into fixed-height blocks of `block_rows`
+//! lanes, and each block is padded to its local maximum row length with
+//! an explicit column-index sentinel ([`BlockedEll::PAD_COL`]).
+//!
+//! Relative to SELL this trades the per-slice width array's irregular
+//! strides for *uniform* lane stride (`block_rows` everywhere) plus a
+//! window-local length sort that shrinks padding on skewed row-length
+//! distributions — the shape that lets the unrolled wide-accumulator
+//! kernels ([`crate::spmv::unrolled`]) run every lane of a block without
+//! per-row bounds juggling. The sort permutes rows **only within a
+//! σ-window**, so a window still covers a contiguous original-row range
+//! and the engine can hand each partition a disjoint `&mut` output
+//! segment (the same contract every other format keeps).
+
+use super::coo::Coo;
+use super::csr::Csr;
+
+/// Blocked ELLPACK matrix: σ-window length-sorted rows in fixed-height
+/// padded blocks. See the [module docs](self) for the layout rationale
+/// and `docs/KERNELS.md` for the kernel contract on top of it.
+///
+/// Layout: block `b` owns row *positions* `b·C .. min((b+1)·C, nrows)`
+/// (`C =` [`block_rows`](BlockedEll::block_rows)); position `p` holds
+/// original row [`perm`](BlockedEll::perm)`[p]`. The block stores
+/// `width[b] · C` cells column-major with **uniform stride `C`**:
+/// within-row element `j` of lane `t` lives at
+/// `block_ptr[b] + j·C + t`. Absent cells — lanes past `nrows` in the
+/// tail block, and positions `j ≥ row_lens[p]` — carry column
+/// [`BlockedEll::PAD_COL`] and value `0.0`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockedEll {
+    /// Number of rows of the logical matrix.
+    pub nrows: usize,
+    /// Number of columns.
+    pub ncols: usize,
+    /// Lanes (rows) per block, `1..=32` — the fixed accumulator width.
+    pub block_rows: usize,
+    /// Sort-window size in rows; always a multiple of `block_rows`.
+    /// Rows are length-sorted only within a window, so windows map to
+    /// contiguous original-row ranges.
+    pub sigma: usize,
+    /// Position → original row (length `nrows`). Within each σ-window,
+    /// rows sorted by descending length, ties by ascending row index.
+    pub perm: Vec<u32>,
+    /// Per-block padded width (local max row length; length = nblocks).
+    pub block_width: Vec<u32>,
+    /// Start offset of each block in `cols`/`vals` (length = nblocks + 1).
+    pub block_ptr: Vec<usize>,
+    /// Padded-cell prefix per σ-window (length = nwindows + 1) — the
+    /// engine's cost prefix; windows are the format's work units.
+    pub window_ptr: Vec<usize>,
+    /// Column indices, column-major within a block; padding is
+    /// [`BlockedEll::PAD_COL`].
+    pub cols: Vec<u32>,
+    /// Values, column-major within a block; padding is `0.0`.
+    pub vals: Vec<f64>,
+    /// Actual row length at each *position* `p` (i.e. of row `perm[p]`).
+    pub row_lens: Vec<u32>,
+}
+
+impl BlockedEll {
+    /// Sentinel column index marking a padded cell. Kernels must skip it —
+    /// unlike SELL's repeat-a-valid-column padding, it is **not** a legal
+    /// index into `x`.
+    pub const PAD_COL: u32 = u32::MAX;
+
+    /// Largest supported `block_rows` (the kernels keep one stack
+    /// accumulator per lane).
+    pub const MAX_BLOCK_ROWS: usize = 32;
+
+    /// Default lane count: matches the widest unrolled kernel variant.
+    pub const DEFAULT_BLOCK_ROWS: usize = 8;
+
+    /// Default sort window (rows).
+    pub const DEFAULT_SIGMA: usize = 64;
+
+    /// Number of blocks.
+    pub fn nblocks(&self) -> usize {
+        self.block_width.len()
+    }
+
+    /// Number of σ-windows (the format's work units).
+    pub fn nwindows(&self) -> usize {
+        self.window_ptr.len() - 1
+    }
+
+    /// Blocks per full window (`sigma / block_rows`).
+    pub fn blocks_per_window(&self) -> usize {
+        self.sigma / self.block_rows
+    }
+
+    /// Total padded cells (real kernel work, like SELL's).
+    pub fn padded_cells(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Build with the default geometry
+    /// ([`DEFAULT_BLOCK_ROWS`](BlockedEll::DEFAULT_BLOCK_ROWS) lanes,
+    /// [`DEFAULT_SIGMA`](BlockedEll::DEFAULT_SIGMA)-row windows).
+    pub fn from_csr_default(csr: &Csr) -> BlockedEll {
+        BlockedEll::from_csr(csr, Self::DEFAULT_BLOCK_ROWS, Self::DEFAULT_SIGMA)
+    }
+
+    /// Build from CSR. `block_rows` must be in
+    /// `1..=`[`MAX_BLOCK_ROWS`](BlockedEll::MAX_BLOCK_ROWS); `sigma` is
+    /// rounded **up** to a multiple of `block_rows` (and at least one
+    /// block), so window boundaries always align with block boundaries.
+    pub fn from_csr(csr: &Csr, block_rows: usize, sigma: usize) -> BlockedEll {
+        assert!(
+            block_rows >= 1 && block_rows <= Self::MAX_BLOCK_ROWS,
+            "block_rows {block_rows} outside 1..={}",
+            Self::MAX_BLOCK_ROWS
+        );
+        let sigma = sigma.max(block_rows).div_ceil(block_rows) * block_rows;
+        let c = block_rows;
+        let nblocks = csr.nrows.div_ceil(c);
+        let nwindows = csr.nrows.div_ceil(sigma);
+        let bpw = sigma / c;
+
+        // Window-local descending-length sort (stable: ties keep ascending
+        // row order) — σ bounds how far a row may move, and keeps each
+        // window a contiguous original-row range.
+        let mut perm: Vec<u32> = (0..csr.nrows as u32).collect();
+        for w in 0..nwindows {
+            let lo = w * sigma;
+            let hi = (lo + sigma).min(csr.nrows);
+            perm[lo..hi].sort_by_key(|&r| (usize::MAX - csr.row_len(r as usize), r));
+        }
+        let row_lens: Vec<u32> = perm.iter().map(|&r| csr.row_len(r as usize) as u32).collect();
+
+        let mut block_width = Vec::with_capacity(nblocks);
+        let mut block_ptr = vec![0usize];
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        for b in 0..nblocks {
+            let p0 = b * c;
+            let p1 = (p0 + c).min(csr.nrows);
+            // Sorted descending within the window and block boundaries
+            // align to window boundaries, so the first lane is the widest.
+            let width = (p0..p1).map(|p| row_lens[p] as usize).max().unwrap_or(0);
+            block_width.push(width as u32);
+            // Column-major, uniform stride C: element j of every lane.
+            for j in 0..width {
+                for t in 0..c {
+                    let p = p0 + t;
+                    if p < p1 && (j as u32) < row_lens[p] {
+                        let r = perm[p] as usize;
+                        cols.push(csr.row_cols(r)[j]);
+                        vals.push(csr.row_vals(r)[j]);
+                    } else {
+                        cols.push(Self::PAD_COL);
+                        vals.push(0.0);
+                    }
+                }
+            }
+            block_ptr.push(cols.len());
+        }
+        let window_ptr: Vec<usize> =
+            (0..=nwindows).map(|w| block_ptr[(w * bpw).min(nblocks)]).collect();
+
+        BlockedEll {
+            nrows: csr.nrows,
+            ncols: csr.ncols,
+            block_rows: c,
+            sigma,
+            perm,
+            block_width,
+            block_ptr,
+            window_ptr,
+            cols,
+            vals,
+            row_lens,
+        }
+    }
+
+    /// Convert back to CSR (drops padding, undoes the permutation) —
+    /// used by tests.
+    pub fn to_csr(&self) -> Csr {
+        let mut coo = Coo::new(self.nrows, self.ncols);
+        let c = self.block_rows;
+        for b in 0..self.nblocks() {
+            let p0 = b * c;
+            let width = self.block_width[b] as usize;
+            let base = self.block_ptr[b];
+            for t in 0..c {
+                let p = p0 + t;
+                if p >= self.nrows {
+                    break;
+                }
+                let r = self.perm[p];
+                for j in 0..(self.row_lens[p] as usize).min(width) {
+                    let idx = base + j * c + t;
+                    coo.push(r, self.cols[idx], self.vals[idx]);
+                }
+            }
+        }
+        Csr::from_coo(&coo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn example() -> Csr {
+        let mut coo = Coo::new(5, 6);
+        for &(r, c, v) in &[
+            (0, 0, 1.0),
+            (0, 5, 2.0),
+            (1, 2, 3.0),
+            (2, 0, 4.0),
+            (2, 1, 5.0),
+            (2, 3, 6.0),
+            (4, 4, 7.0),
+        ] {
+            coo.push(r, c, v);
+        }
+        Csr::from_coo(&coo)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = example();
+        for (c, sigma) in [(1, 1), (2, 4), (8, 64), (4, 5)] {
+            let be = BlockedEll::from_csr(&m, c, sigma);
+            assert_eq!(be.to_csr(), m, "C={c} sigma={sigma}");
+        }
+    }
+
+    #[test]
+    fn sigma_sort_is_window_local_and_descending() {
+        // One 4-row window over rows 0..4, tail window {4}. Row lengths
+        // are [2, 1, 3, 0, 1] → window 0 sorts to rows [2, 0, 1, 3].
+        let m = example();
+        let be = BlockedEll::from_csr(&m, 2, 4);
+        assert_eq!(be.sigma, 4);
+        assert_eq!(be.perm, vec![2, 0, 1, 3, 4]);
+        assert_eq!(be.row_lens, vec![3, 2, 1, 0, 1]);
+        // Blocks pad to the local max: {2,0} → 3 wide, {1,3} → 1, {4} → 1.
+        assert_eq!(be.block_width, vec![3, 1, 1]);
+        assert_eq!(be.padded_cells(), 3 * 2 + 1 * 2 + 1 * 2);
+        // Sorting shrank padding vs the unsorted grouping (widths 2,3,1).
+        assert!(be.padded_cells() < 2 * 2 + 3 * 2 + 1 * 2);
+    }
+
+    #[test]
+    fn padding_uses_the_sentinel() {
+        let m = example();
+        let be = BlockedEll::from_csr(&m, 2, 4);
+        let pads = be.cols.iter().filter(|&&c| c == BlockedEll::PAD_COL).count();
+        assert_eq!(pads, be.padded_cells() - m.nnz());
+        for (&c, &v) in be.cols.iter().zip(&be.vals) {
+            if c == BlockedEll::PAD_COL {
+                assert_eq!(v, 0.0);
+            } else {
+                assert!((c as usize) < be.ncols);
+            }
+        }
+    }
+
+    #[test]
+    fn window_ptr_is_the_padded_cell_prefix() {
+        let m = example();
+        let be = BlockedEll::from_csr(&m, 2, 4);
+        // Windows: {blocks 0,1} and {block 2}.
+        assert_eq!(be.nwindows(), 2);
+        assert_eq!(be.window_ptr, vec![0, 8, 10]);
+        assert_eq!(*be.window_ptr.last().unwrap(), be.padded_cells());
+    }
+
+    #[test]
+    fn sigma_rounds_up_to_block_multiple() {
+        let m = example();
+        let be = BlockedEll::from_csr(&m, 4, 5);
+        assert_eq!(be.sigma, 8);
+        let be = BlockedEll::from_csr(&m, 4, 0);
+        assert_eq!(be.sigma, 4);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = Csr::new(0, 0);
+        let be = BlockedEll::from_csr_default(&m);
+        assert_eq!(be.nblocks(), 0);
+        assert_eq!(be.nwindows(), 0);
+        assert_eq!(be.window_ptr, vec![0]);
+        assert_eq!(be.padded_cells(), 0);
+        assert_eq!(be.to_csr(), m);
+    }
+}

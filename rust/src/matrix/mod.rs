@@ -7,6 +7,7 @@
 //! through size accounting ([`SizeModel`]) and through the value
 //! symbolization in [`crate::format`].
 
+pub mod blocked_ell;
 pub mod coo;
 pub mod csr;
 pub mod gen;
@@ -14,6 +15,7 @@ pub mod mtx;
 pub mod sell;
 pub mod stats;
 
+pub use blocked_ell::BlockedEll;
 pub use coo::Coo;
 pub use csr::Csr;
 pub use sell::Sell;

@@ -1,0 +1,338 @@
+//! BlockedEll SpMVM kernels: fixed-lane padded blocks walked with a
+//! per-lane stack accumulator (scalar), plus the unrolled wide-accumulator
+//! variants under the [`crate::spmv::unrolled`] reassociation policy.
+//!
+//! Padding carries the [`BlockedEll::PAD_COL`] sentinel and is *skipped*
+//! (branch), never gathered — unlike SELL's repeat-a-valid-column padding
+//! the sentinel is not a legal index into `x`. Because a row's real
+//! elements are exactly positions `j < row_len` in ascending-`j` order,
+//! the scalar kernel performs each row's additions in CSR order: a full
+//! serial scalar BlockedEll multiply is **bit-identical** to the scalar
+//! CSR kernel, and partitioned runs are bit-identical to serial because
+//! every row is computed by exactly one block.
+
+use crate::matrix::blocked_ell::BlockedEll;
+use crate::spmv::unrolled::{combine_tree, prefetch_x, PREFETCH_AHEAD};
+use crate::util::error::Result;
+
+/// `y += A·x` over a BlockedEll matrix (scalar kernel).
+///
+/// ```
+/// use dtans::matrix::{BlockedEll, Coo, Csr};
+/// use dtans::spmv::{spmv_blocked_ell, spmv_csr};
+/// let mut coo = Coo::new(3, 3);
+/// for &(r, c, v) in &[(0, 0, 1.0), (0, 2, 2.0), (2, 1, 3.0)] {
+///     coo.push(r, c, v);
+/// }
+/// let m = Csr::from_coo(&coo);
+/// let be = BlockedEll::from_csr(&m, 2, 4);
+/// let x = [1.0, 1.0, 1.0];
+/// let (mut y, mut want) = (vec![0.0; 3], vec![0.0; 3]);
+/// spmv_blocked_ell(&be, &x, &mut y).unwrap();
+/// spmv_csr(&m, &x, &mut want).unwrap();
+/// assert_eq!(y, want); // bit-identical: same per-row addition order
+/// ```
+pub fn spmv_blocked_ell(m: &BlockedEll, x: &[f64], y: &mut [f64]) -> Result<()> {
+    super::check_dims(m.nrows, m.ncols, x, y)?;
+    spmv_blocked_ell_window_range(m, 0, m.nwindows(), x, y)
+}
+
+/// Scalar kernel over σ-windows `w0..w1`; `y_seg` spans original rows
+/// `w0·sigma .. min(w1·sigma, nrows)`. The window-local sort means those
+/// windows' positions hold exactly those rows, so the block-local
+/// accumulators scatter through `perm` without leaving the segment.
+/// Column-major j-outer walk (contiguous memory), one stack accumulator
+/// per lane; each row's additions happen in ascending-`j` = CSR order.
+pub(crate) fn spmv_blocked_ell_window_range(
+    m: &BlockedEll,
+    w0: usize,
+    w1: usize,
+    x: &[f64],
+    y_seg: &mut [f64],
+) -> Result<()> {
+    let c = m.block_rows;
+    let bpw = m.blocks_per_window();
+    let row0 = w0 * m.sigma;
+    let b1 = (w1 * bpw).min(m.nblocks());
+    for b in (w0 * bpw)..b1 {
+        let p0 = b * c;
+        let width = m.block_width[b] as usize;
+        let base = m.block_ptr[b];
+        let mut acc = [0.0f64; BlockedEll::MAX_BLOCK_ROWS];
+        for j in 0..width {
+            let col_base = base + j * c;
+            for t in 0..c {
+                let col = m.cols[col_base + t];
+                if col != BlockedEll::PAD_COL {
+                    acc[t] += m.vals[col_base + t] * x[col as usize];
+                }
+            }
+        }
+        for t in 0..c.min(m.nrows - p0) {
+            y_seg[m.perm[p0 + t] as usize - row0] += acc[t];
+        }
+    }
+    Ok(())
+}
+
+/// Fused scaled update over windows `w0..w1`:
+/// `y_seg[i] = alpha·(A·x)[row] + beta·y_seg[i]`. Same per-row
+/// accumulation as [`spmv_blocked_ell_window_range`] (each row is owned
+/// by exactly one block, so the write-once scaled update is safe), hence
+/// bit-identical to the unfused compose.
+pub(crate) fn spmv_blocked_ell_window_range_axpby(
+    m: &BlockedEll,
+    w0: usize,
+    w1: usize,
+    x: &[f64],
+    alpha: f64,
+    beta: f64,
+    y_seg: &mut [f64],
+) -> Result<()> {
+    let c = m.block_rows;
+    let bpw = m.blocks_per_window();
+    let row0 = w0 * m.sigma;
+    let b1 = (w1 * bpw).min(m.nblocks());
+    for b in (w0 * bpw)..b1 {
+        let p0 = b * c;
+        let width = m.block_width[b] as usize;
+        let base = m.block_ptr[b];
+        let mut acc = [0.0f64; BlockedEll::MAX_BLOCK_ROWS];
+        for j in 0..width {
+            let col_base = base + j * c;
+            for t in 0..c {
+                let col = m.cols[col_base + t];
+                if col != BlockedEll::PAD_COL {
+                    acc[t] += m.vals[col_base + t] * x[col as usize];
+                }
+            }
+        }
+        for t in 0..c.min(m.nrows - p0) {
+            let i = m.perm[p0 + t] as usize - row0;
+            y_seg[i] = alpha * acc[t] + beta * y_seg[i];
+        }
+    }
+    Ok(())
+}
+
+/// One lane's (row's) dot product under the unrolled reassociation
+/// policy: real elements are exactly positions `j < row_len` in ascending
+/// order, so lane assignment `j mod L` matches the policy's within-row
+/// position rule; sentinel cells are skipped and perturb neither the
+/// lanes nor the fixed combine tree.
+#[inline(always)]
+fn blocked_ell_row_dot_unrolled<const L: usize>(
+    m: &BlockedEll,
+    base: usize,
+    c: usize,
+    t: usize,
+    width: usize,
+    x: &[f64],
+) -> f64 {
+    let mut acc = [0.0f64; L];
+    let mut j = 0;
+    while j + L <= width {
+        if j + PREFETCH_AHEAD < width {
+            // PAD_COL is usize::MAX-sized: prefetch_x's bounds check
+            // turns sentinel prefetches into no-ops.
+            prefetch_x(x, m.cols[base + (j + PREFETCH_AHEAD) * c + t] as usize);
+        }
+        for l in 0..L {
+            let idx = base + (j + l) * c + t;
+            let col = m.cols[idx];
+            if col != BlockedEll::PAD_COL {
+                acc[l] += m.vals[idx] * x[col as usize];
+            }
+        }
+        j += L;
+    }
+    let mut l = 0;
+    while j < width {
+        let idx = base + j * c + t;
+        let col = m.cols[idx];
+        if col != BlockedEll::PAD_COL {
+            acc[l] += m.vals[idx] * x[col as usize];
+        }
+        j += 1;
+        l += 1;
+    }
+    combine_tree::<L>(acc)
+}
+
+/// Unrolled kernel over windows `w0..w1`; same range contract as
+/// [`spmv_blocked_ell_window_range`], each row accumulated under the
+/// [`crate::spmv::unrolled`] policy (`L` lanes over the block's padded
+/// width, fixed combine tree) — block- and partition-independent.
+pub(crate) fn spmv_blocked_ell_window_range_unrolled<const L: usize>(
+    m: &BlockedEll,
+    w0: usize,
+    w1: usize,
+    x: &[f64],
+    y_seg: &mut [f64],
+) -> Result<()> {
+    let c = m.block_rows;
+    let bpw = m.blocks_per_window();
+    let row0 = w0 * m.sigma;
+    let b1 = (w1 * bpw).min(m.nblocks());
+    for b in (w0 * bpw)..b1 {
+        let p0 = b * c;
+        let width = m.block_width[b] as usize;
+        let base = m.block_ptr[b];
+        for t in 0..c.min(m.nrows - p0) {
+            y_seg[m.perm[p0 + t] as usize - row0] +=
+                blocked_ell_row_dot_unrolled::<L>(m, base, c, t, width, x);
+        }
+    }
+    Ok(())
+}
+
+/// Fused unrolled kernel — the `_axpby` form of
+/// [`spmv_blocked_ell_window_range_unrolled`], same accumulation, scaled
+/// update.
+pub(crate) fn spmv_blocked_ell_window_range_axpby_unrolled<const L: usize>(
+    m: &BlockedEll,
+    w0: usize,
+    w1: usize,
+    x: &[f64],
+    alpha: f64,
+    beta: f64,
+    y_seg: &mut [f64],
+) -> Result<()> {
+    let c = m.block_rows;
+    let bpw = m.blocks_per_window();
+    let row0 = w0 * m.sigma;
+    let b1 = (w1 * bpw).min(m.nblocks());
+    for b in (w0 * bpw)..b1 {
+        let p0 = b * c;
+        let width = m.block_width[b] as usize;
+        let base = m.block_ptr[b];
+        for t in 0..c.min(m.nrows - p0) {
+            let acc = blocked_ell_row_dot_unrolled::<L>(m, base, c, t, width, x);
+            let i = m.perm[p0 + t] as usize - row0;
+            y_seg[i] = alpha * acc + beta * y_seg[i];
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::csr::Csr;
+    use crate::spmv::csr::spmv_csr;
+    use crate::util::propcheck::assert_close;
+    use crate::util::rng::Xoshiro256;
+
+    fn sample(n: usize, seed: u64) -> Csr {
+        let mut rng = Xoshiro256::seeded(seed);
+        let mut m = crate::matrix::gen::structured::powerlaw_rows(n, 5.0, 1.1, &mut rng);
+        crate::matrix::gen::assign_values(
+            &mut m,
+            crate::matrix::gen::ValueDist::Gaussian,
+            &mut rng,
+        );
+        m
+    }
+
+    #[test]
+    fn scalar_kernel_is_bitwise_csr_various_geometries() {
+        // Sentinel-skipped padding + ascending-j per-row order means the
+        // scalar BlockedEll kernel performs each row's exact CSR addition
+        // sequence — bitwise equality, not just closeness.
+        let m = sample(150, 1);
+        let mut rng = Xoshiro256::seeded(2);
+        let x: Vec<f64> = (0..m.ncols).map(|_| rng.next_f64() - 0.5).collect();
+        let mut want = vec![0.0; m.nrows];
+        spmv_csr(&m, &x, &mut want).unwrap();
+        for (c, sigma) in [(1, 1), (4, 16), (8, 64), (32, 32), (8, 1000)] {
+            let be = crate::matrix::blocked_ell::BlockedEll::from_csr(&m, c, sigma);
+            let mut y = vec![0.0; m.nrows];
+            spmv_blocked_ell(&be, &x, &mut y).unwrap();
+            assert_eq!(y, want, "C={c} sigma={sigma}");
+        }
+    }
+
+    #[test]
+    fn window_range_partitions_reassemble_bitwise() {
+        let m = sample(130, 3);
+        let be = crate::matrix::blocked_ell::BlockedEll::from_csr(&m, 8, 16);
+        let mut rng = Xoshiro256::seeded(4);
+        let x: Vec<f64> = (0..m.ncols).map(|_| rng.next_f64()).collect();
+        let nw = be.nwindows();
+        let mut want = vec![0.0; m.nrows];
+        spmv_blocked_ell_window_range(&be, 0, nw, &x, &mut want).unwrap();
+        let mut got = vec![0.0; m.nrows];
+        let mut got8 = vec![0.0; m.nrows];
+        let mut full8 = vec![0.0; m.nrows];
+        spmv_blocked_ell_window_range_unrolled::<8>(&be, 0, nw, &x, &mut full8).unwrap();
+        for w in [0usize, 2, 5, nw].windows(2) {
+            let r0 = w[0] * be.sigma;
+            let r1 = (w[1] * be.sigma).min(m.nrows);
+            spmv_blocked_ell_window_range(&be, w[0], w[1], &x, &mut got[r0..r1]).unwrap();
+            spmv_blocked_ell_window_range_unrolled::<8>(&be, w[0], w[1], &x, &mut got8[r0..r1])
+                .unwrap();
+        }
+        assert_eq!(got, want);
+        assert_eq!(got8, full8);
+    }
+
+    #[test]
+    fn unrolled_is_close_to_scalar_including_short_rows() {
+        let m = sample(200, 5);
+        let be = crate::matrix::blocked_ell::BlockedEll::from_csr_default(&m);
+        let mut rng = Xoshiro256::seeded(6);
+        let x: Vec<f64> = (0..m.ncols).map(|_| rng.next_f64() - 0.5).collect();
+        let mut want = vec![0.0; m.nrows];
+        spmv_csr(&m, &x, &mut want).unwrap();
+        let mut got4 = vec![0.0; m.nrows];
+        spmv_blocked_ell_window_range_unrolled::<4>(&be, 0, be.nwindows(), &x, &mut got4)
+            .unwrap();
+        let mut got8 = vec![0.0; m.nrows];
+        spmv_blocked_ell_window_range_unrolled::<8>(&be, 0, be.nwindows(), &x, &mut got8)
+            .unwrap();
+        assert_close(&got4, &want, 1e-12, 1e-15).unwrap();
+        assert_close(&got8, &want, 1e-12, 1e-15).unwrap();
+    }
+
+    #[test]
+    fn axpby_forms_match_unfused_compose_bitwise() {
+        let m = sample(90, 7);
+        let be = crate::matrix::blocked_ell::BlockedEll::from_csr(&m, 4, 32);
+        let mut rng = Xoshiro256::seeded(8);
+        let x: Vec<f64> = (0..m.ncols).map(|_| rng.next_f64() - 0.5).collect();
+        let y0: Vec<f64> = (0..m.nrows).map(|_| rng.next_f64() * 2.0).collect();
+        let nw = be.nwindows();
+        for &(alpha, beta) in &[(1.0, 0.0), (-0.5, 1.0), (2.5, -0.75)] {
+            let mut tmp = vec![0.0; m.nrows];
+            spmv_blocked_ell_window_range(&be, 0, nw, &x, &mut tmp).unwrap();
+            let want: Vec<f64> =
+                y0.iter().zip(&tmp).map(|(y, t)| alpha * t + beta * y).collect();
+            let mut got = y0.clone();
+            spmv_blocked_ell_window_range_axpby(&be, 0, nw, &x, alpha, beta, &mut got).unwrap();
+            assert_eq!(got, want, "scalar alpha={alpha} beta={beta}");
+
+            let mut tmp4 = vec![0.0; m.nrows];
+            spmv_blocked_ell_window_range_unrolled::<4>(&be, 0, nw, &x, &mut tmp4).unwrap();
+            let want4: Vec<f64> =
+                y0.iter().zip(&tmp4).map(|(y, t)| alpha * t + beta * y).collect();
+            let mut got4 = y0.clone();
+            spmv_blocked_ell_window_range_axpby_unrolled::<4>(
+                &be, 0, nw, &x, alpha, beta, &mut got4,
+            )
+            .unwrap();
+            assert_eq!(got4, want4, "unrolled4 alpha={alpha} beta={beta}");
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        for (nr, nc) in [(0usize, 0usize), (1, 1), (3, 0), (0, 3)] {
+            let m = Csr::new(nr, nc);
+            let be = crate::matrix::blocked_ell::BlockedEll::from_csr_default(&m);
+            let x = vec![1.0; nc];
+            let mut y = vec![0.0; nr];
+            spmv_blocked_ell(&be, &x, &mut y).unwrap();
+            assert!(y.iter().all(|&v| v == 0.0));
+        }
+    }
+}

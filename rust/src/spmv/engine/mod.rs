@@ -77,6 +77,52 @@ use crate::util::threadpool::{ScopedJob, ThreadPool};
 /// more in wake-ups than the multiply itself.
 pub const MIN_PAR_COST: usize = 1 << 14;
 
+/// Which per-row accumulation the engine asks operators to run — the
+/// kernel-variant knob of the SIMD speed push (`docs/KERNELS.md`).
+///
+/// * [`KernelVariant::Scalar`] (default) — the serial left-to-right
+///   kernels; results bit-identical to the free functions, as before.
+/// * [`KernelVariant::Unrolled4`] / [`KernelVariant::Unrolled8`] — the
+///   hand-unrolled wide-accumulator kernels
+///   ([`crate::spmv::unrolled`]) with a fixed lane count and combine
+///   tree. For a fixed variant, results are still **bit-identical across
+///   every [`ParStrategy`] and partition count** (the lane assignment
+///   depends only on within-row element positions, never on block
+///   boundaries); across variants they differ by float reassociation,
+///   within the conformance oracle's closeness bound.
+///
+/// Formats without unrolled kernels (COO's scatter, the dtANS lockstep
+/// decoder, the dense oracle) ignore the knob and always run their scalar
+/// kernels — the trait's default [`SpmvOperator::run_range_variant`]
+/// delegates to [`SpmvOperator::run_range`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum KernelVariant {
+    /// Serial left-to-right accumulation (the free-function kernels).
+    #[default]
+    Scalar,
+    /// 4-wide lane-strided accumulation with the fixed combine tree.
+    Unrolled4,
+    /// 8-wide lane-strided accumulation with the fixed combine tree.
+    Unrolled8,
+}
+
+impl KernelVariant {
+    /// Every variant, in sweep order — what the conformance oracle's
+    /// `cross_check_with` iterates.
+    pub const ALL: [KernelVariant; 3] =
+        [KernelVariant::Scalar, KernelVariant::Unrolled4, KernelVariant::Unrolled8];
+
+    /// Stable short label (`"scalar"`, `"unrolled4"`, `"unrolled8"`) for
+    /// reports and bench rows.
+    pub fn label(&self) -> &'static str {
+        match self {
+            KernelVariant::Scalar => "scalar",
+            KernelVariant::Unrolled4 => "unrolled4",
+            KernelVariant::Unrolled8 => "unrolled8",
+        }
+    }
+}
+
 /// How the engine maps one multiply onto threads; see the
 /// [module docs](self) for selection rules.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -135,6 +181,7 @@ pub struct SpmvEngine {
     strategy: ParStrategy,
     nthreads: usize,
     pool: Option<ThreadPool>,
+    variant: KernelVariant,
 }
 
 impl Default for SpmvEngine {
@@ -157,7 +204,7 @@ impl SpmvEngine {
             _ if nthreads < 2 => None,
             _ => Some(ThreadPool::new(nthreads)),
         };
-        SpmvEngine { strategy, nthreads, pool }
+        SpmvEngine { strategy, nthreads, pool, variant: KernelVariant::default() }
     }
 
     /// Engine that always runs on the calling thread.
@@ -170,9 +217,23 @@ impl SpmvEngine {
         SpmvEngine::new(ParStrategy::Auto)
     }
 
+    /// Builder: select the per-row accumulation every multiply on this
+    /// engine runs with (default [`KernelVariant::Scalar`]). For a fixed
+    /// variant, results stay bit-identical across all strategies and
+    /// partition counts — see [`KernelVariant`].
+    pub fn with_kernel_variant(mut self, variant: KernelVariant) -> SpmvEngine {
+        self.variant = variant;
+        self
+    }
+
     /// The configured strategy.
     pub fn strategy(&self) -> ParStrategy {
         self.strategy
+    }
+
+    /// The configured kernel variant.
+    pub fn kernel_variant(&self) -> KernelVariant {
+        self.variant
     }
 
     /// Worker threads available to this engine (1 for serial).
@@ -241,10 +302,15 @@ impl SpmvEngine {
                     &blocks,
                     y,
                     |b| op.rows_through(b.end),
-                    |b, seg| op.run_range(b, x, seg),
+                    |b, seg| op.run_range_variant(b, x, seg, self.variant),
                 )
             }
-            _ => op.run_range(Block { start: 0, end: units, cost: total }, x, y),
+            _ => op.run_range_variant(
+                Block { start: 0, end: units, cost: total },
+                x,
+                y,
+                self.variant,
+            ),
         }
     }
 
@@ -276,13 +342,18 @@ impl SpmvEngine {
                     y,
                     &mut times_us,
                     |b| op.rows_through(b.end),
-                    |b, seg| op.run_range(b, x, seg),
+                    |b, seg| op.run_range_variant(b, x, seg, self.variant),
                 )?;
                 Ok(BlockTiming::from_times(&times_us))
             }
             _ => {
                 let t0 = std::time::Instant::now();
-                op.run_range(Block { start: 0, end: units, cost: total }, x, y)?;
+                op.run_range_variant(
+                    Block { start: 0, end: units, cost: total },
+                    x,
+                    y,
+                    self.variant,
+                )?;
                 let us = t0.elapsed().as_micros() as u64;
                 Ok(BlockTiming { blocks: 1, min_us: us, max_us: us, mean_us: us })
             }
@@ -343,10 +414,17 @@ impl SpmvEngine {
                     &blocks,
                     y,
                     |b| op.rows_through(b.end),
-                    |b, seg| op.run_range_axpby(b, x, alpha, beta, seg),
+                    |b, seg| op.run_range_axpby_variant(b, x, alpha, beta, seg, self.variant),
                 )
             }
-            _ => op.run_range_axpby(Block { start: 0, end: units, cost: total }, x, alpha, beta, y),
+            _ => op.run_range_axpby_variant(
+                Block { start: 0, end: units, cost: total },
+                x,
+                alpha,
+                beta,
+                y,
+                self.variant,
+            ),
         }
     }
 
@@ -388,12 +466,12 @@ impl SpmvEngine {
             (Some(pool), Some(parts)) => {
                 let blocks = partition_prefix(&prefix, parts);
                 if !blocks.is_empty() {
-                    run_grid(pool, &blocks, op, xs, &mut ys)?;
+                    run_grid(pool, &blocks, op, xs, &mut ys, self.variant)?;
                 }
             }
             _ => {
                 let full = Block { start: 0, end: units, cost: total };
-                op.run_range_multi(full, xs, &mut ys.view_mut())?;
+                op.run_range_multi_variant(full, xs, &mut ys.view_mut(), self.variant)?;
             }
         }
         Ok(ys)
@@ -514,6 +592,7 @@ fn run_grid(
     op: &dyn SpmvOperator,
     xs: &DenseMat,
     ys: &mut DenseMat,
+    variant: KernelVariant,
 ) -> Result<()> {
     let njobs = blocks.len() * xs.ncols();
     let mut slots: Vec<Result<()>> = Vec::new();
@@ -532,7 +611,7 @@ fn run_grid(
                 tail = rest;
                 cursor = r1;
                 let slot = slot_iter.next().expect("slot per job");
-                jobs.push(Box::new(move || *slot = op.run_range(b, x, seg)));
+                jobs.push(Box::new(move || *slot = op.run_range_variant(b, x, seg, variant)));
             }
         }
         pool.scope_run(jobs);
@@ -597,6 +676,32 @@ mod tests {
         let mut got = vec![0.0; m.nrows];
         engine.run(&sell, &x, &mut got).unwrap();
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn unrolled_variants_bit_identical_across_strategies_and_close_to_scalar() {
+        // The KernelVariant contract: for a fixed variant, every strategy
+        // and partition count gives the exact bits of that variant's
+        // serial run; across variants only tight closeness holds.
+        let m = test_matrix(12);
+        let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.2).cos()).collect();
+        let mut scalar = vec![0.0; m.nrows];
+        SpmvEngine::serial().run(&m, &x, &mut scalar).unwrap();
+        for variant in [KernelVariant::Unrolled4, KernelVariant::Unrolled8] {
+            let mut serial = vec![0.0; m.nrows];
+            SpmvEngine::serial().with_kernel_variant(variant).run(&m, &x, &mut serial).unwrap();
+            for strategy in [ParStrategy::Fixed(3), ParStrategy::Fixed(16)] {
+                let engine = SpmvEngine::new(strategy).with_kernel_variant(variant);
+                assert_eq!(engine.kernel_variant(), variant);
+                let mut got = vec![0.0; m.nrows];
+                engine.run(&m, &x, &mut got).unwrap();
+                assert_eq!(got, serial, "{variant:?} {strategy:?}");
+            }
+            for (a, b) in serial.iter().zip(&scalar) {
+                let rel = (a - b).abs() / a.abs().max(b.abs()).max(1.0);
+                assert!(rel <= 1e-9, "{variant:?}: {a} vs scalar {b}");
+            }
+        }
     }
 
     #[test]

@@ -1,6 +1,9 @@
 //! SpMVM kernels (`y = A·x + y`, the paper's §III-A semantics) for every
 //! format: dense reference, CSR (scalar and vector variants), COO, SELL,
-//! and the fused decode+multiply kernel over CSR-dtANS.
+//! BlockedEll (σ-sorted fixed-width blocks), and the fused decode+multiply
+//! kernel over CSR-dtANS — plus the hand-unrolled wide-accumulator
+//! variants in [`unrolled`], selected per-engine via
+//! [`engine::KernelVariant`] (policy in `docs/KERNELS.md`).
 //!
 //! The classic-format kernels stand in for cuSPARSE's and feed the GPU
 //! simulator's cost models; the CSR-dtANS kernel is the paper's
@@ -34,6 +37,7 @@
 //! assert_eq!(y, y_eng);
 //! ```
 
+pub mod blocked_ell;
 pub mod coo;
 pub mod csr;
 pub mod csr_dtans;
@@ -42,14 +46,16 @@ pub mod densemat;
 pub mod engine;
 pub mod operator;
 pub mod sell;
+pub mod unrolled;
 pub mod verify;
 
+pub use blocked_ell::spmv_blocked_ell;
 pub use coo::spmv_coo;
 pub use csr::{spmv_csr, spmv_csr_vector};
 pub use csr_dtans::spmv_csr_dtans;
 pub use dense::spmv_dense;
 pub use densemat::{DenseMat, DenseMatMut};
-pub use engine::{ParStrategy, SpmvEngine};
+pub use engine::{KernelVariant, ParStrategy, SpmvEngine};
 pub use operator::{DenseOperator, DtansOperator, FormatEntry, FormatRegistry, SpmvOperator};
 pub use sell::spmv_sell;
 

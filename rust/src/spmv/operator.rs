@@ -14,7 +14,8 @@
 //!
 //! An operator is a matrix in some storage format, viewed as a collection
 //! of contiguous *work units* (rows for CSR/dense, 32-row slices for
-//! SELL/CSR-dtANS, one indivisible unit for COO's unordered scatter):
+//! SELL/CSR-dtANS, σ-row sort windows for BlockedEll, one indivisible
+//! unit for COO's unordered scatter):
 //!
 //! * [`cost_prefix`](SpmvOperator::cost_prefix) returns a monotone
 //!   non-decreasing prefix over the units (`prefix[i+1] - prefix[i]` =
@@ -30,7 +31,7 @@
 //!   (`y_seg[i] += …`). Because every row is computed by exactly one block
 //!   and blocks reuse the serial loops, the engine's parallel results are
 //!   **bit-identical** to the serial free functions — property-tested for
-//!   all five built-in formats in `tests/operator_dispatch.rs`.
+//!   all six built-in formats in `tests/operator_dispatch.rs`.
 //! * [`run_range_multi`](SpmvOperator::run_range_multi) is the batched
 //!   (multi-right-hand-side) variant over contiguous
 //!   [`DenseMat`]/[`DenseMatMut`] views; the default implementation loops
@@ -58,9 +59,10 @@ use crate::format::csr_dtans::{CsrDtans, EncodeOptions, WARP};
 use crate::matrix::coo::Coo;
 use crate::matrix::csr::Csr;
 use crate::matrix::sell::Sell;
+use crate::matrix::blocked_ell::BlockedEll;
 use crate::spmv::csr_dtans::DecodePlan;
 use crate::spmv::densemat::{DenseMat, DenseMatMut};
-use crate::spmv::engine::Block;
+use crate::spmv::engine::{Block, KernelVariant};
 use crate::util::error::{DtansError, Result};
 use std::borrow::Cow;
 use std::sync::Arc;
@@ -158,12 +160,90 @@ pub trait SpmvOperator: Send + Sync {
         Ok(())
     }
 
+    /// [`run_range`](SpmvOperator::run_range) under a selected
+    /// [`KernelVariant`] — the engine's dispatch point for the unrolled
+    /// wide-accumulator kernels (`docs/KERNELS.md`).
+    ///
+    /// The default ignores the variant and runs the scalar kernel, which
+    /// is the honest behavior for formats without unrolled kernels (COO's
+    /// scatter, the dtANS lockstep decoder, the dense oracle): every
+    /// variant then trivially keeps the per-variant bit-identity
+    /// contract. Overrides (CSR, SELL, BlockedEll) must dispatch to
+    /// kernels whose per-row arithmetic depends only on the row — never
+    /// on `block` boundaries — so that for a fixed variant, partitioned
+    /// results stay bit-identical to that variant's serial run.
+    fn run_range_variant(
+        &self,
+        block: Block,
+        x: &[f64],
+        y_seg: &mut [f64],
+        variant: KernelVariant,
+    ) -> Result<()> {
+        let _ = variant;
+        self.run_range(block, x, y_seg)
+    }
+
+    /// [`run_range_axpby`](SpmvOperator::run_range_axpby) under a selected
+    /// [`KernelVariant`]; same default/override rules as
+    /// [`run_range_variant`](SpmvOperator::run_range_variant). Overrides
+    /// must keep the fused form bit-identical to the unfused compose
+    /// *under the same variant*.
+    fn run_range_axpby_variant(
+        &self,
+        block: Block,
+        x: &[f64],
+        alpha: f64,
+        beta: f64,
+        y_seg: &mut [f64],
+        variant: KernelVariant,
+    ) -> Result<()> {
+        match variant {
+            KernelVariant::Scalar => self.run_range_axpby(block, x, alpha, beta, y_seg),
+            _ => {
+                // Unfused compose through the variant kernel: bit-identity
+                // with a fused override is the same argument as the
+                // scalar default's.
+                let mut tmp = vec![0.0; y_seg.len()];
+                self.run_range_variant(block, x, &mut tmp, variant)?;
+                for (y, t) in y_seg.iter_mut().zip(&tmp) {
+                    *y = alpha * t + beta * *y;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// [`run_range_multi`](SpmvOperator::run_range_multi) under a selected
+    /// [`KernelVariant`]: the default loops
+    /// [`run_range_variant`](SpmvOperator::run_range_variant) per column,
+    /// keeping batched results bit-identical to repeated single-vector
+    /// multiplies *of the same variant* by construction.
+    fn run_range_multi_variant(
+        &self,
+        block: Block,
+        xs: &DenseMat,
+        ys: &mut DenseMatMut<'_>,
+        variant: KernelVariant,
+    ) -> Result<()> {
+        match variant {
+            KernelVariant::Scalar => self.run_range_multi(block, xs, ys),
+            _ => {
+                debug_assert_eq!(xs.ncols(), ys.ncols());
+                for j in 0..xs.ncols() {
+                    self.run_range_variant(block, xs.col(j), ys.col_mut(j), variant)?;
+                }
+                Ok(())
+            }
+        }
+    }
+
     /// Heap bytes this operator pins while resident — its cost against the
     /// tiered store's memory budget ([`crate::store`]).
     fn resident_bytes(&self) -> usize;
 
     /// Stable short tag naming the format (`"csr"`, `"coo"`, `"sell"`,
-    /// `"dense"`, `"csr_dtans"`) — the key used by per-format metrics
+    /// `"blocked_ell"`, `"dense"`, `"csr_dtans"`) — the key used by
+    /// per-format metrics
     /// ([`crate::coordinator::metrics::Metrics`]) and the
     /// [`FormatRegistry`].
     fn format_tag(&self) -> &'static str;
@@ -202,6 +282,50 @@ impl SpmvOperator for Csr {
         y_seg: &mut [f64],
     ) -> Result<()> {
         crate::spmv::csr::spmv_row_range_axpby(self, block.start, block.end, x, alpha, beta, y_seg)
+    }
+
+    /// Dispatch to the unrolled wide-accumulator row kernels
+    /// ([`crate::spmv::unrolled`]); each row's lane assignment and combine
+    /// tree depend only on the row's own element list, never on `block`,
+    /// so per-variant partition bit-identity holds (`docs/KERNELS.md`).
+    fn run_range_variant(
+        &self,
+        block: Block,
+        x: &[f64],
+        y_seg: &mut [f64],
+        variant: KernelVariant,
+    ) -> Result<()> {
+        match variant {
+            KernelVariant::Scalar => self.run_range(block, x, y_seg),
+            KernelVariant::Unrolled4 => crate::spmv::unrolled::spmv_row_range_unrolled::<4>(
+                self, block.start, block.end, x, y_seg,
+            ),
+            KernelVariant::Unrolled8 => crate::spmv::unrolled::spmv_row_range_unrolled::<8>(
+                self, block.start, block.end, x, y_seg,
+            ),
+        }
+    }
+
+    /// Fused form of the unrolled kernels: same per-row accumulator and
+    /// combine tree, with `alpha·acc + beta·y` written in place of `y += acc`.
+    fn run_range_axpby_variant(
+        &self,
+        block: Block,
+        x: &[f64],
+        alpha: f64,
+        beta: f64,
+        y_seg: &mut [f64],
+        variant: KernelVariant,
+    ) -> Result<()> {
+        match variant {
+            KernelVariant::Scalar => self.run_range_axpby(block, x, alpha, beta, y_seg),
+            KernelVariant::Unrolled4 => crate::spmv::unrolled::spmv_row_range_axpby_unrolled::<4>(
+                self, block.start, block.end, x, alpha, beta, y_seg,
+            ),
+            KernelVariant::Unrolled8 => crate::spmv::unrolled::spmv_row_range_axpby_unrolled::<8>(
+                self, block.start, block.end, x, alpha, beta, y_seg,
+            ),
+        }
     }
 
     fn resident_bytes(&self) -> usize {
@@ -255,6 +379,53 @@ impl SpmvOperator for Sell {
         )
     }
 
+    /// Dispatch to the unrolled SELL kernels ([`crate::spmv::unrolled`]):
+    /// per-row lane assignment over the slice's padded width, fixed combine
+    /// tree — block-independent, so per-variant partition bit-identity
+    /// holds (`docs/KERNELS.md`).
+    fn run_range_variant(
+        &self,
+        block: Block,
+        x: &[f64],
+        y_seg: &mut [f64],
+        variant: KernelVariant,
+    ) -> Result<()> {
+        match variant {
+            KernelVariant::Scalar => self.run_range(block, x, y_seg),
+            KernelVariant::Unrolled4 => crate::spmv::unrolled::spmv_sell_slice_range_unrolled::<4>(
+                self, block.start, block.end, x, y_seg,
+            ),
+            KernelVariant::Unrolled8 => crate::spmv::unrolled::spmv_sell_slice_range_unrolled::<8>(
+                self, block.start, block.end, x, y_seg,
+            ),
+        }
+    }
+
+    /// Fused form of the unrolled SELL kernels; same accumulator order.
+    fn run_range_axpby_variant(
+        &self,
+        block: Block,
+        x: &[f64],
+        alpha: f64,
+        beta: f64,
+        y_seg: &mut [f64],
+        variant: KernelVariant,
+    ) -> Result<()> {
+        match variant {
+            KernelVariant::Scalar => self.run_range_axpby(block, x, alpha, beta, y_seg),
+            KernelVariant::Unrolled4 => {
+                crate::spmv::unrolled::spmv_sell_slice_range_axpby_unrolled::<4>(
+                    self, block.start, block.end, x, alpha, beta, y_seg,
+                )
+            }
+            KernelVariant::Unrolled8 => {
+                crate::spmv::unrolled::spmv_sell_slice_range_axpby_unrolled::<8>(
+                    self, block.start, block.end, x, alpha, beta, y_seg,
+                )
+            }
+        }
+    }
+
     fn resident_bytes(&self) -> usize {
         self.slice_widths.len() * 4
             + self.slice_ptr.len() * 8
@@ -265,6 +436,120 @@ impl SpmvOperator for Sell {
 
     fn format_tag(&self) -> &'static str {
         "sell"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BlockedEll
+// ---------------------------------------------------------------------------
+
+impl SpmvOperator for BlockedEll {
+    fn dims(&self) -> (usize, usize) {
+        (self.nrows, self.ncols)
+    }
+
+    fn nnz(&self) -> usize {
+        self.row_lens.iter().map(|&l| l as usize).sum()
+    }
+
+    /// Units = σ-windows, cost = padded cells (`window_ptr` — padding is
+    /// real kernel work, as for SELL). Windows, not blocks, are the units
+    /// because the length sort permutes rows only *within* a window: a
+    /// window range maps to a contiguous original-row range, which is
+    /// what lets the engine hand out disjoint `&mut` output segments.
+    fn cost_prefix(&self) -> Cow<'_, [usize]> {
+        Cow::Borrowed(&self.window_ptr)
+    }
+
+    fn rows_through(&self, unit_end: usize) -> usize {
+        (unit_end * self.sigma).min(self.nrows)
+    }
+
+    fn run_range(&self, block: Block, x: &[f64], y_seg: &mut [f64]) -> Result<()> {
+        crate::spmv::blocked_ell::spmv_blocked_ell_window_range(
+            self, block.start, block.end, x, y_seg,
+        )
+    }
+
+    /// Allocation-free fused path (see the trait docs for the bit-identity
+    /// argument).
+    fn run_range_axpby(
+        &self,
+        block: Block,
+        x: &[f64],
+        alpha: f64,
+        beta: f64,
+        y_seg: &mut [f64],
+    ) -> Result<()> {
+        crate::spmv::blocked_ell::spmv_blocked_ell_window_range_axpby(
+            self, block.start, block.end, x, alpha, beta, y_seg,
+        )
+    }
+
+    /// Dispatch to the unrolled BlockedEll kernels
+    /// ([`crate::spmv::blocked_ell`]): per-row lane assignment over the
+    /// block's padded width, fixed combine tree — block-independent, so
+    /// per-variant partition bit-identity holds (`docs/KERNELS.md`).
+    fn run_range_variant(
+        &self,
+        block: Block,
+        x: &[f64],
+        y_seg: &mut [f64],
+        variant: KernelVariant,
+    ) -> Result<()> {
+        match variant {
+            KernelVariant::Scalar => self.run_range(block, x, y_seg),
+            KernelVariant::Unrolled4 => {
+                crate::spmv::blocked_ell::spmv_blocked_ell_window_range_unrolled::<4>(
+                    self, block.start, block.end, x, y_seg,
+                )
+            }
+            KernelVariant::Unrolled8 => {
+                crate::spmv::blocked_ell::spmv_blocked_ell_window_range_unrolled::<8>(
+                    self, block.start, block.end, x, y_seg,
+                )
+            }
+        }
+    }
+
+    /// Fused form of the unrolled BlockedEll kernels; same accumulator
+    /// order.
+    fn run_range_axpby_variant(
+        &self,
+        block: Block,
+        x: &[f64],
+        alpha: f64,
+        beta: f64,
+        y_seg: &mut [f64],
+        variant: KernelVariant,
+    ) -> Result<()> {
+        match variant {
+            KernelVariant::Scalar => self.run_range_axpby(block, x, alpha, beta, y_seg),
+            KernelVariant::Unrolled4 => {
+                crate::spmv::blocked_ell::spmv_blocked_ell_window_range_axpby_unrolled::<4>(
+                    self, block.start, block.end, x, alpha, beta, y_seg,
+                )
+            }
+            KernelVariant::Unrolled8 => {
+                crate::spmv::blocked_ell::spmv_blocked_ell_window_range_axpby_unrolled::<8>(
+                    self, block.start, block.end, x, alpha, beta, y_seg,
+                )
+            }
+        }
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.perm.len() * 4
+            + self.block_width.len() * 4
+            + self.block_ptr.len() * 8
+            + self.window_ptr.len() * 8
+            + self.cols.len() * 4
+            + self.vals.len() * 8
+            + self.row_lens.len() * 4
+    }
+
+    fn format_tag(&self) -> &'static str {
+        "blocked_ell"
     }
 }
 
@@ -530,14 +815,16 @@ pub struct FormatRegistry {
 }
 
 impl FormatRegistry {
-    /// The five built-in formats: CSR, COO, SELL (32-row slices), the
-    /// dense oracle, and CSR-dtANS.
+    /// The six built-in formats: CSR, COO, SELL (32-row slices),
+    /// BlockedEll (8-lane blocks, 64-row sort windows), the dense oracle,
+    /// and CSR-dtANS.
     pub fn builtin() -> FormatRegistry {
         FormatRegistry {
             entries: vec![
                 FormatEntry { tag: "csr", build: build_csr },
                 FormatEntry { tag: "coo", build: build_coo },
                 FormatEntry { tag: "sell", build: build_sell },
+                FormatEntry { tag: "blocked_ell", build: build_blocked_ell },
                 FormatEntry { tag: "dense", build: build_dense },
                 FormatEntry { tag: "csr_dtans", build: build_dtans },
             ],
@@ -586,6 +873,10 @@ fn build_coo(m: &Csr, _opts: &EncodeOptions) -> Result<Arc<dyn SpmvOperator>> {
 
 fn build_sell(m: &Csr, _opts: &EncodeOptions) -> Result<Arc<dyn SpmvOperator>> {
     Ok(Arc::new(Sell::from_csr(m, 32)))
+}
+
+fn build_blocked_ell(m: &Csr, _opts: &EncodeOptions) -> Result<Arc<dyn SpmvOperator>> {
+    Ok(Arc::new(BlockedEll::from_csr_default(m)))
 }
 
 fn build_dense(m: &Csr, _opts: &EncodeOptions) -> Result<Arc<dyn SpmvOperator>> {

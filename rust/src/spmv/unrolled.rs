@@ -1,0 +1,373 @@
+//! Hand-unrolled 4/8-wide accumulator variants of the CSR row-range and
+//! SELL slice-range kernels — the CPU analog of the paper's wide warp
+//! accumulators, with a **documented, deterministic reassociation policy**
+//! (see `docs/KERNELS.md`).
+//!
+//! # Reassociation policy
+//!
+//! For a fixed lane count `L ∈ {4, 8}`, every row's dot product is
+//! computed as:
+//!
+//! 1. **Lane assignment** — the row's within-row element positions
+//!    `p = 0, 1, 2, …` are assigned to lane `p mod L`, in ascending `p`
+//!    order. Tail elements (a final partial group of fewer than `L`
+//!    elements) follow the *same* rule; lanes past the tail simply keep
+//!    their partial sums (a row shorter than `L` leaves the high lanes at
+//!    exactly `0.0`).
+//! 2. **Combine tree** — the `L` lane sums are reduced by a fixed
+//!    stride-halving pairwise tree:
+//!    `L = 4`: `(l0 + l2) + (l1 + l3)`;
+//!    `L = 8`: `((l0+l4) + (l2+l6)) + ((l1+l5) + (l3+l7))`.
+//!
+//! Both steps depend only on the row's own element list — never on block
+//! boundaries or partition counts — so for a fixed
+//! [`KernelVariant`](crate::spmv::engine::KernelVariant) the engine's
+//! results stay **bit-identical** across every
+//! [`ParStrategy`](crate::spmv::engine::ParStrategy) and partition count
+//! (oracle level 2), while differing from the scalar left-to-right kernels
+//! only by float reassociation, within the conformance oracle's closeness
+//! bound (oracle level 1). The `_axpby` fused forms reuse the identical
+//! per-row accumulation and apply `alpha·acc + beta·y` in place of the
+//! `y += acc` accumulate, exactly like their scalar counterparts.
+//!
+//! A software-prefetch helper ([`prefetch_x`]) walks the `x[col]` gather
+//! stream [`PREFETCH_AHEAD`] elements ahead of the accumulators; it
+//! compiles to `prefetcht0` on x86_64 and to nothing elsewhere, so it can
+//! never change results — only the memory schedule.
+
+use crate::matrix::csr::Csr;
+use crate::matrix::sell::Sell;
+use crate::util::error::Result;
+
+/// How many elements ahead of the accumulator the `x[col]` gather stream
+/// is prefetched. One or two cache-line-batches of column indices: far
+/// enough to cover DRAM latency at SpMV arithmetic intensity, near enough
+/// not to thrash L1.
+pub(crate) const PREFETCH_AHEAD: usize = 16;
+
+/// Software prefetch of `x[col]` into L1 — a scheduling hint only, never
+/// observable in results. Compiles to `prefetcht0` on x86_64 and to a
+/// no-op on every other target (cfg-gated; no `unsafe` reaches other
+/// architectures).
+#[inline(always)]
+pub(crate) fn prefetch_x(x: &[f64], col: usize) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if col < x.len() {
+            // SAFETY: `col` is bounds-checked above; _mm_prefetch has no
+            // memory effects beyond cache state.
+            unsafe {
+                core::arch::x86_64::_mm_prefetch(
+                    x.as_ptr().add(col) as *const i8,
+                    core::arch::x86_64::_MM_HINT_T0,
+                );
+            }
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (x, col);
+    }
+}
+
+/// The fixed stride-halving pairwise combine tree over `L` lane sums
+/// (`L` must be a power of two — enforced by the only instantiations,
+/// `L = 4` and `L = 8`). This is the *only* reduction order the unrolled
+/// kernels use, which is what makes a variant's results reproducible.
+#[inline(always)]
+pub(crate) fn combine_tree<const L: usize>(acc: [f64; L]) -> f64 {
+    debug_assert!(L.is_power_of_two());
+    let mut tmp = acc;
+    let mut width = L;
+    while width > 1 {
+        width /= 2;
+        for i in 0..width {
+            tmp[i] += tmp[i + width];
+        }
+    }
+    tmp[0]
+}
+
+/// One row's dot product under the unrolled policy: `L`-strided lane
+/// accumulation over `(vals, cols)` gathered from `x`, then the fixed
+/// combine tree.
+#[inline(always)]
+fn row_dot_unrolled<const L: usize>(vals: &[f64], cols: &[u32], x: &[f64]) -> f64 {
+    debug_assert_eq!(vals.len(), cols.len());
+    let n = vals.len();
+    let mut acc = [0.0f64; L];
+    let mut k = 0;
+    while k + L <= n {
+        if k + PREFETCH_AHEAD < n {
+            prefetch_x(x, cols[k + PREFETCH_AHEAD] as usize);
+        }
+        for j in 0..L {
+            acc[j] += vals[k + j] * x[cols[k + j] as usize];
+        }
+        k += L;
+    }
+    // Tail: positions keep the `p mod L` lane rule (j restarts at 0 on a
+    // multiple-of-L boundary, so offset == position mod L).
+    let mut j = 0;
+    while k < n {
+        acc[j] += vals[k] * x[cols[k] as usize];
+        k += 1;
+        j += 1;
+    }
+    combine_tree::<L>(acc)
+}
+
+/// Unrolled CSR kernel over rows `r0..r1`: `y_seg[i] += dot(row r0+i, x)`
+/// under the module's reassociation policy. Same range contract as
+/// [`spmv_row_range`](crate::spmv::csr::spmv_row_range).
+pub(crate) fn spmv_row_range_unrolled<const L: usize>(
+    m: &Csr,
+    r0: usize,
+    r1: usize,
+    x: &[f64],
+    y_seg: &mut [f64],
+) -> Result<()> {
+    debug_assert_eq!(y_seg.len(), r1 - r0);
+    for (i, r) in (r0..r1).enumerate() {
+        let lo = m.row_ptr[r];
+        let hi = m.row_ptr[r + 1];
+        y_seg[i] += row_dot_unrolled::<L>(&m.vals[lo..hi], &m.cols[lo..hi], x);
+    }
+    Ok(())
+}
+
+/// Fused unrolled CSR kernel: `y_seg[i] = alpha·dot + beta·y_seg[i]`,
+/// with the *same* per-row accumulation as
+/// [`spmv_row_range_unrolled`] — bit-identical to the unfused compose by
+/// the same argument as the scalar `_axpby` kernels.
+pub(crate) fn spmv_row_range_axpby_unrolled<const L: usize>(
+    m: &Csr,
+    r0: usize,
+    r1: usize,
+    x: &[f64],
+    alpha: f64,
+    beta: f64,
+    y_seg: &mut [f64],
+) -> Result<()> {
+    debug_assert_eq!(y_seg.len(), r1 - r0);
+    for (i, r) in (r0..r1).enumerate() {
+        let lo = m.row_ptr[r];
+        let hi = m.row_ptr[r + 1];
+        let acc = row_dot_unrolled::<L>(&m.vals[lo..hi], &m.cols[lo..hi], x);
+        y_seg[i] = alpha * acc + beta * y_seg[i];
+    }
+    Ok(())
+}
+
+/// One SELL row's dot product under the unrolled policy. SELL stores a
+/// slice column-major, so row `rr`'s element at within-row position `j`
+/// lives at `base + j*h + rr` (stride `h`); the lane rule is still
+/// `j mod L` over the slice's padded width — padded cells carry value
+/// `0.0` exactly as in the scalar SELL kernels, so they perturb nothing
+/// but participate in the (fixed) lane assignment.
+#[inline(always)]
+fn sell_row_dot_unrolled<const L: usize>(
+    m: &Sell,
+    base: usize,
+    h: usize,
+    rr: usize,
+    width: usize,
+    x: &[f64],
+) -> f64 {
+    let mut acc = [0.0f64; L];
+    let mut j = 0;
+    while j + L <= width {
+        if j + PREFETCH_AHEAD < width {
+            prefetch_x(x, m.cols[base + (j + PREFETCH_AHEAD) * h + rr] as usize);
+        }
+        for t in 0..L {
+            let idx = base + (j + t) * h + rr;
+            acc[t] += m.vals[idx] * x[m.cols[idx] as usize];
+        }
+        j += L;
+    }
+    let mut t = 0;
+    while j < width {
+        let idx = base + j * h + rr;
+        acc[t] += m.vals[idx] * x[m.cols[idx] as usize];
+        j += 1;
+        t += 1;
+    }
+    combine_tree::<L>(acc)
+}
+
+/// Unrolled SELL kernel over slices `s0..s1`; same range contract as
+/// [`spmv_sell_slice_range`](crate::spmv::sell::spmv_sell_slice_range),
+/// but each row accumulates under the module's reassociation policy
+/// (row-major walk, `L` lanes over the padded width).
+pub(crate) fn spmv_sell_slice_range_unrolled<const L: usize>(
+    m: &Sell,
+    s0: usize,
+    s1: usize,
+    x: &[f64],
+    y_seg: &mut [f64],
+) -> Result<()> {
+    let h = m.slice_height;
+    let row0 = s0 * h;
+    for s in s0..s1 {
+        let r_base = s * h;
+        let width = m.slice_widths[s] as usize;
+        let base = m.slice_ptr[s];
+        for rr in 0..h {
+            let r = r_base + rr;
+            if r >= m.nrows {
+                break; // tail slice: rows past nrows do not exist
+            }
+            y_seg[r - row0] += sell_row_dot_unrolled::<L>(m, base, h, rr, width, x);
+        }
+    }
+    Ok(())
+}
+
+/// Fused unrolled SELL kernel — the `_axpby` form of
+/// [`spmv_sell_slice_range_unrolled`], same accumulation, scaled update.
+pub(crate) fn spmv_sell_slice_range_axpby_unrolled<const L: usize>(
+    m: &Sell,
+    s0: usize,
+    s1: usize,
+    x: &[f64],
+    alpha: f64,
+    beta: f64,
+    y_seg: &mut [f64],
+) -> Result<()> {
+    let h = m.slice_height;
+    let row0 = s0 * h;
+    for s in s0..s1 {
+        let r_base = s * h;
+        let width = m.slice_widths[s] as usize;
+        let base = m.slice_ptr[s];
+        for rr in 0..h {
+            let r = r_base + rr;
+            if r >= m.nrows {
+                break;
+            }
+            let acc = sell_row_dot_unrolled::<L>(m, base, h, rr, width, x);
+            y_seg[r - row0] = alpha * acc + beta * y_seg[r - row0];
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen::structured::powerlaw_rows;
+    use crate::matrix::gen::{assign_values, ValueDist};
+    use crate::spmv::csr::spmv_csr;
+    use crate::util::propcheck::assert_close;
+    use crate::util::rng::Xoshiro256;
+
+    fn sample(n: usize, seed: u64) -> Csr {
+        let mut rng = Xoshiro256::seeded(seed);
+        let mut m = powerlaw_rows(n, 6.0, 1.1, &mut rng);
+        assign_values(&mut m, ValueDist::Gaussian, &mut rng);
+        m
+    }
+
+    #[test]
+    fn combine_tree_is_the_documented_order() {
+        // L = 4: (l0 + l2) + (l1 + l3), checked against a hand expansion
+        // on values where association is observable.
+        let eps = f64::EPSILON / 2.0; // 2^-53
+        let lanes = [1.0, eps, eps, eps];
+        let want = (1.0 + eps) + (eps + eps);
+        assert_eq!(combine_tree::<4>(lanes).to_bits(), want.to_bits());
+        // L = 8 stride-halving: ((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7)).
+        let lanes8 = [1.0, eps, eps, eps, eps, eps, eps, eps];
+        let want8 = ((1.0 + eps) + (eps + eps)) + ((eps + eps) + (eps + eps));
+        assert_eq!(combine_tree::<8>(lanes8).to_bits(), want8.to_bits());
+    }
+
+    #[test]
+    fn unrolled_row_ranges_reassemble_bitwise() {
+        // Partition independence: any split of the row range reassembles
+        // to the exact bits of the full-range run, for both lane counts.
+        let m = sample(120, 1);
+        let mut rng = Xoshiro256::seeded(2);
+        let x: Vec<f64> = (0..m.ncols).map(|_| rng.next_f64() - 0.5).collect();
+        let mut want4 = vec![0.0; m.nrows];
+        spmv_row_range_unrolled::<4>(&m, 0, m.nrows, &x, &mut want4).unwrap();
+        let mut want8 = vec![0.0; m.nrows];
+        spmv_row_range_unrolled::<8>(&m, 0, m.nrows, &x, &mut want8).unwrap();
+        for splits in [vec![0, 1, m.nrows], vec![0, 40, 77, m.nrows]] {
+            let mut got4 = vec![0.0; m.nrows];
+            let mut got8 = vec![0.0; m.nrows];
+            for w in splits.windows(2) {
+                spmv_row_range_unrolled::<4>(&m, w[0], w[1], &x, &mut got4[w[0]..w[1]]).unwrap();
+                spmv_row_range_unrolled::<8>(&m, w[0], w[1], &x, &mut got8[w[0]..w[1]]).unwrap();
+            }
+            assert_eq!(got4, want4);
+            assert_eq!(got8, want8);
+        }
+    }
+
+    #[test]
+    fn unrolled_csr_is_close_to_scalar_including_short_rows() {
+        // powerlaw matrices have plenty of rows shorter than the lane
+        // width plus empty rows — the closeness bound must hold anyway.
+        let m = sample(200, 3);
+        let mut rng = Xoshiro256::seeded(4);
+        let x: Vec<f64> = (0..m.ncols).map(|_| rng.next_f64() - 0.5).collect();
+        let mut want = vec![0.0; m.nrows];
+        spmv_csr(&m, &x, &mut want).unwrap();
+        let mut got4 = vec![0.0; m.nrows];
+        spmv_row_range_unrolled::<4>(&m, 0, m.nrows, &x, &mut got4).unwrap();
+        let mut got8 = vec![0.0; m.nrows];
+        spmv_row_range_unrolled::<8>(&m, 0, m.nrows, &x, &mut got8).unwrap();
+        assert_close(&got4, &want, 1e-12, 1e-15).unwrap();
+        assert_close(&got8, &want, 1e-12, 1e-15).unwrap();
+    }
+
+    #[test]
+    fn unrolled_axpby_matches_unfused_compose_bitwise() {
+        let m = sample(90, 5);
+        let mut rng = Xoshiro256::seeded(6);
+        let x: Vec<f64> = (0..m.ncols).map(|_| rng.next_f64() - 0.5).collect();
+        let y0: Vec<f64> = (0..m.nrows).map(|_| rng.next_f64() * 2.0).collect();
+        for &(alpha, beta) in &[(1.0, 0.0), (-0.5, 1.0), (2.5, -0.75)] {
+            let mut tmp = vec![0.0; m.nrows];
+            spmv_row_range_unrolled::<4>(&m, 0, m.nrows, &x, &mut tmp).unwrap();
+            let want: Vec<f64> =
+                y0.iter().zip(&tmp).map(|(y, t)| alpha * t + beta * y).collect();
+            let mut got = y0.clone();
+            spmv_row_range_axpby_unrolled::<4>(&m, 0, m.nrows, &x, alpha, beta, &mut got)
+                .unwrap();
+            assert_eq!(got, want, "alpha={alpha} beta={beta}");
+        }
+    }
+
+    #[test]
+    fn unrolled_sell_matches_scalar_sell_closely_and_partitions_bitwise() {
+        let m = sample(150, 7);
+        let sell = Sell::from_csr(&m, 32);
+        let mut rng = Xoshiro256::seeded(8);
+        let x: Vec<f64> = (0..m.ncols).map(|_| rng.next_f64() - 0.5).collect();
+        let mut scalar = vec![0.0; m.nrows];
+        crate::spmv::sell::spmv_sell(&sell, &x, &mut scalar).unwrap();
+        let nsl = sell.nslices();
+        let mut full = vec![0.0; m.nrows];
+        spmv_sell_slice_range_unrolled::<8>(&sell, 0, nsl, &x, &mut full).unwrap();
+        assert_close(&full, &scalar, 1e-12, 1e-15).unwrap();
+        // Slice-range splits reassemble bitwise.
+        let mut parts = vec![0.0; m.nrows];
+        for w in [0usize, 2, 3, nsl].windows(2) {
+            let r0 = w[0] * 32;
+            let r1 = (w[1] * 32).min(m.nrows);
+            spmv_sell_slice_range_unrolled::<8>(&sell, w[0], w[1], &x, &mut parts[r0..r1])
+                .unwrap();
+        }
+        assert_eq!(parts, full);
+        // Fused form agrees with its unfused compose.
+        let y0: Vec<f64> = (0..m.nrows).map(|_| rng.next_f64()).collect();
+        let want: Vec<f64> = y0.iter().zip(&full).map(|(y, t)| 2.0 * t - 0.5 * y).collect();
+        let mut got = y0.clone();
+        spmv_sell_slice_range_axpby_unrolled::<8>(&sell, 0, nsl, &x, 2.0, -0.5, &mut got)
+            .unwrap();
+        assert_eq!(got, want);
+    }
+}

@@ -130,6 +130,15 @@ fn resident_cost(mat: &LoadedMatrix) -> u64 {
                 cost += SpmvOperator::resident_bytes(csr.as_ref()) as u64;
             }
         }
+        // BlockedEll routes keep both the encoding (for artifacts /
+        // cold reload) and the CSR original (the operator is derived,
+        // not primary) alongside the padded operator itself.
+        FormatChoice::BlockedEll => {
+            cost += mat.enc.size_report().total as u64;
+            if let Some(csr) = &mat.csr {
+                cost += SpmvOperator::resident_bytes(csr.as_ref()) as u64;
+            }
+        }
     }
     cost
 }
@@ -893,7 +902,7 @@ mod tests {
         MatrixStore::new(
             config,
             EncodeOptions::default(),
-            RoutePolicy { min_nnz: 1 << 8, max_size_ratio: 0.98 },
+            RoutePolicy { min_nnz: 1 << 8, max_size_ratio: 0.98, ..Default::default() },
             Arc::new(Metrics::default()),
         )
         .unwrap()
@@ -1004,7 +1013,7 @@ mod tests {
                 ..Default::default()
             },
             EncodeOptions { precision: Precision::F32, ..Default::default() },
-            RoutePolicy { min_nnz: 1 << 8, max_size_ratio: 0.98 },
+            RoutePolicy { min_nnz: 1 << 8, max_size_ratio: 0.98, ..Default::default() },
             Arc::new(Metrics::default()),
         )
         .unwrap();
@@ -1025,7 +1034,7 @@ mod tests {
         let store2 = MatrixStore::new(
             StoreConfig { budget_bytes: Some(1), ..Default::default() },
             opts,
-            RoutePolicy { min_nnz: 1 << 8, max_size_ratio: 0.98 },
+            RoutePolicy { min_nnz: 1 << 8, max_size_ratio: 0.98, ..Default::default() },
             Arc::new(Metrics::default()),
         )
         .unwrap();

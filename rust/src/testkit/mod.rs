@@ -51,7 +51,10 @@ pub mod oracle;
 pub mod stress;
 pub mod zoo;
 
-pub use oracle::{ConformanceReport, Mismatch, MismatchKind, OracleConfig, PerturbedOperator};
+pub use oracle::{
+    ConformanceReport, MiscombinedOperator, Mismatch, MismatchKind, OracleConfig,
+    PerturbedOperator,
+};
 pub use stress::{run_stress, StressConfig, StressReport};
 
 /// Deterministic request/input vector: `n` values in `[-0.5, 0.5)` from

@@ -1,35 +1,52 @@
-//! Differential conformance oracle: every format × every strategy,
-//! against the serial CSR ground truth.
+//! Differential conformance oracle: every format × every strategy ×
+//! every kernel variant, against the serial CSR ground truth.
 //!
 //! Two levels of agreement are checked for each operator the
-//! [`FormatRegistry`] can build:
+//! [`FormatRegistry`] can build, for each swept
+//! [`KernelVariant`]:
 //!
-//! 1. **Cross-format closeness** — the operator's serial result must match
-//!    the serial CSR free-function kernel
+//! 1. **Cross-format closeness** — the operator's serial result *under
+//!    the variant* must match the serial scalar CSR free-function kernel
 //!    ([`spmv_csr`](crate::spmv::spmv_csr)) within
 //!    [`OracleConfig::rel_tol`]. Exact bit-identity is *not* required
-//!    across formats: COO's scatter order and the dtANS lockstep decoder
-//!    reassociate row sums (see `docs/SOLVERS.md` §format-independence),
-//!    so the guarantee across formats is tight closeness, not equality.
-//! 2. **Engine bit-identity** — for every partition count
-//!    `Fixed(1..=max_parts)`, the engine's result over the operator must
-//!    be **bit-identical** to the operator's own serial result. This is
-//!    the repo-wide invariant the engine is built on (each row computed by
-//!    exactly one block with the serial kernel's arithmetic), checked here
-//!    exhaustively instead of per-format ad hoc.
+//!    across formats or variants: COO's scatter order, the dtANS lockstep
+//!    decoder and the unrolled wide-accumulator kernels all reassociate
+//!    row sums (see `docs/SOLVERS.md` §format-independence and
+//!    `docs/KERNELS.md`), so the guarantee across formats/variants is
+//!    tight closeness, not equality.
+//! 2. **Engine bit-identity per variant** — for every partition count
+//!    `Fixed(1..=max_parts)`, the engine's result over the operator under
+//!    the variant must be **bit-identical** to the operator's own serial
+//!    result *under the same variant*. This is the repo-wide invariant
+//!    the engine is built on (each row computed by exactly one block,
+//!    with per-row arithmetic that depends only on the row — never on
+//!    block boundaries), checked here exhaustively instead of per-format
+//!    ad hoc.
+//!
+//! The default entry points ([`check_matrix`], [`check_matrix_with`],
+//! [`check_operator`]) sweep the scalar variant only — the historical
+//! behavior; [`cross_check_with`] and [`check_operator_with`] take an
+//! explicit variant list (usually [`KernelVariant::ALL`]) and an explicit
+//! registry, so custom-registered formats and non-default variants are
+//! swept too (`tests/conformance.rs` uses them).
 //!
 //! Failures come back as structured [`Mismatch`] records — format tag,
-//! partition count, first divergent row, the two values and their ULP
-//! distance — so a conformance break is immediately actionable.
-//! [`PerturbedOperator`] is the oracle's own negative control: it wraps
-//! any operator and flips one output bit only on partitioned runs, which a
-//! healthy oracle must detect and localize (`tests/conformance.rs`).
+//! kernel variant, partition count, first divergent row, the two values
+//! and their ULP distance — so a conformance break is immediately
+//! actionable. [`PerturbedOperator`] is the oracle's own negative
+//! control: it wraps any operator and flips one output bit only on
+//! partitioned runs, which a healthy oracle must detect and localize
+//! (`tests/conformance.rs`). [`MiscombinedOperator`] is the
+//! reassociation-drift control: it answers partitioned blocks with a
+//! deliberately *wrong combine order* (reverse-order row folds), proving
+//! the per-variant bit-identity level can actually catch a kernel whose
+//! partitioned arithmetic silently reassociates.
 
 use crate::format::csr_dtans::EncodeOptions;
 use crate::matrix::csr::Csr;
 use crate::matrix::Precision;
 use crate::spmv::densemat::{DenseMat, DenseMatMut};
-use crate::spmv::engine::{Block, ParStrategy, SpmvEngine};
+use crate::spmv::engine::{Block, KernelVariant, ParStrategy, SpmvEngine};
 use crate::spmv::operator::{FormatRegistry, SpmvOperator};
 use crate::testkit::seeded_vector as input_vector;
 use crate::util::error::Result;
@@ -81,6 +98,8 @@ pub struct Mismatch {
     pub kind: MismatchKind,
     /// [`SpmvOperator::format_tag`] of the offending operator.
     pub format: &'static str,
+    /// Kernel variant the offending run executed under.
+    pub variant: KernelVariant,
     /// Partition count of the offending run (0 for the serial
     /// cross-format check, which has no partitioning).
     pub parts: usize,
@@ -105,8 +124,13 @@ impl fmt::Display for Mismatch {
         };
         write!(
             f,
-            "[{}] {level}: row {} got {:e} want {:e} ({} ulp)",
-            self.format, self.row, self.got, self.want, self.ulps
+            "[{}/{}] {level}: row {} got {:e} want {:e} ({} ulp)",
+            self.format,
+            self.variant.label(),
+            self.row,
+            self.got,
+            self.want,
+            self.ulps
         )
     }
 }
@@ -183,6 +207,42 @@ pub fn check_matrix_with(
     cfg: &OracleConfig,
     registry: &FormatRegistry,
 ) -> Result<ConformanceReport> {
+    cross_check_with(m, cfg, registry, &[KernelVariant::Scalar])
+}
+
+/// The full cross-product sweep: every format the registry can build ×
+/// every listed [`KernelVariant`] × serial + every partition count.
+/// This is the latent-gap fix for custom-registered formats and
+/// non-default variants: [`check_matrix`] / [`check_matrix_with`] are the
+/// builtin-registry / scalar-only specializations of this entry point.
+///
+/// Ground truth stays the *scalar* serial CSR kernel for every variant —
+/// the two-level contract is closeness to scalar CSR (level 1) plus
+/// per-variant partition bit-identity (level 2); see `docs/KERNELS.md`.
+///
+/// ```
+/// use dtans::matrix::gen::structured::banded;
+/// use dtans::spmv::engine::KernelVariant;
+/// use dtans::spmv::operator::FormatRegistry;
+/// use dtans::testkit::oracle::{cross_check_with, OracleConfig};
+///
+/// let report = cross_check_with(
+///     &banded(100, 2),
+///     &OracleConfig::default(),
+///     &FormatRegistry::builtin(),
+///     &KernelVariant::ALL,
+/// )
+/// .unwrap();
+/// assert!(report.is_conformant(), "{report}");
+/// assert!(report.formats.contains(&"blocked_ell"));
+/// assert_eq!(report.strategies, 3 * 9); // 3 variants x (serial + Fixed(1..=8))
+/// ```
+pub fn cross_check_with(
+    m: &Csr,
+    cfg: &OracleConfig,
+    registry: &FormatRegistry,
+    variants: &[KernelVariant],
+) -> Result<ConformanceReport> {
     let reference = match cfg.opts.precision {
         Precision::F64 => m.clone(),
         Precision::F32 => m.round_to_f32(),
@@ -191,13 +251,15 @@ pub fn check_matrix_with(
     let mut want = vec![0.0; m.nrows];
     crate::spmv::csr::spmv_csr(&reference, &x, &mut want)?;
 
-    let engines = fixed_engines(cfg.max_parts);
-    let mut report = ConformanceReport { strategies: engines.len() + 1, ..Default::default() };
+    let mut report = ConformanceReport {
+        strategies: variants.len() * (cfg.max_parts.max(1) + 1),
+        ..Default::default()
+    };
     for (tag, op) in registry.build_all(&reference, &cfg.opts) {
         match op {
             Ok(op) => {
                 report.formats.push(tag);
-                check_one(op.as_ref(), &x, &want, cfg, &engines, &mut report)?;
+                check_one(op.as_ref(), &x, &want, cfg, variants, &mut report)?;
             }
             Err(_) => report.skipped.push(tag),
         }
@@ -207,85 +269,98 @@ pub fn check_matrix_with(
 
 /// Conformance-check a single operator against a CSR reference matrix
 /// (the entry point for hand-built operators such as
-/// [`PerturbedOperator`]). `reference` must already be at the operator's
-/// precision.
+/// [`PerturbedOperator`]), scalar variant only. `reference` must already
+/// be at the operator's precision.
 pub fn check_operator(
     op: &dyn SpmvOperator,
     reference: &Csr,
     cfg: &OracleConfig,
 ) -> Result<ConformanceReport> {
+    check_operator_with(op, reference, cfg, &[KernelVariant::Scalar])
+}
+
+/// [`check_operator`] over an explicit variant list — sweeps the single
+/// operator under every listed [`KernelVariant`].
+pub fn check_operator_with(
+    op: &dyn SpmvOperator,
+    reference: &Csr,
+    cfg: &OracleConfig,
+    variants: &[KernelVariant],
+) -> Result<ConformanceReport> {
     let x = input_vector(reference.ncols, cfg.seed);
     let mut want = vec![0.0; reference.nrows];
     crate::spmv::csr::spmv_csr(reference, &x, &mut want)?;
-    let engines = fixed_engines(cfg.max_parts);
     let mut report = ConformanceReport {
         formats: vec![op.format_tag()],
-        strategies: engines.len() + 1,
+        strategies: variants.len() * (cfg.max_parts.max(1) + 1),
         ..Default::default()
     };
-    check_one(op, &x, &want, cfg, &engines, &mut report)?;
+    check_one(op, &x, &want, cfg, variants, &mut report)?;
     Ok(report)
 }
 
-fn fixed_engines(max_parts: usize) -> Vec<SpmvEngine> {
-    (1..=max_parts.max(1)).map(|p| SpmvEngine::new(ParStrategy::Fixed(p))).collect()
-}
-
-/// The per-operator sweep shared by [`check_matrix_with`] and
-/// [`check_operator`].
+/// The per-operator sweep shared by [`cross_check_with`] and
+/// [`check_operator_with`]: both oracle levels, once per variant.
 fn check_one(
     op: &dyn SpmvOperator,
     x: &[f64],
     want: &[f64],
     cfg: &OracleConfig,
-    engines: &[SpmvEngine],
+    variants: &[KernelVariant],
     report: &mut ConformanceReport,
 ) -> Result<()> {
     let tag = op.format_tag();
     let nrows = want.len();
 
-    // Level 1: the operator's own serial result vs the CSR ground truth.
-    let mut own = vec![0.0; nrows];
-    SpmvEngine::serial().run(op, x, &mut own)?;
-    let mut worst: Option<(usize, f64)> = None;
-    for (i, (&got, &w)) in own.iter().zip(want).enumerate() {
-        let rel = (got - w).abs() / got.abs().max(w.abs()).max(1.0);
-        let beats = match worst {
-            None => true,
-            Some((_, r)) => rel > r,
-        };
-        if rel > cfg.rel_tol && beats {
-            worst = Some((i, rel));
+    for &variant in variants {
+        // Level 1: the operator's own serial result under this variant vs
+        // the scalar CSR ground truth (closeness, not bit-identity —
+        // formats and variants may reassociate).
+        let mut own = vec![0.0; nrows];
+        SpmvEngine::serial().with_kernel_variant(variant).run(op, x, &mut own)?;
+        let mut worst: Option<(usize, f64)> = None;
+        for (i, (&got, &w)) in own.iter().zip(want).enumerate() {
+            let rel = (got - w).abs() / got.abs().max(w.abs()).max(1.0);
+            let beats = match worst {
+                None => true,
+                Some((_, r)) => rel > r,
+            };
+            if rel > cfg.rel_tol && beats {
+                worst = Some((i, rel));
+            }
         }
-    }
-    if let Some((row, _)) = worst {
-        report.mismatches.push(Mismatch {
-            kind: MismatchKind::CrossFormat,
-            format: tag,
-            parts: 0,
-            row,
-            got: own[row],
-            want: want[row],
-            ulps: ulp_distance(own[row], want[row]),
-        });
-    }
-
-    // Level 2: every partition count vs the operator's own serial result,
-    // bit for bit.
-    for (i, engine) in engines.iter().enumerate() {
-        let parts = i + 1;
-        let mut got = vec![0.0; nrows];
-        engine.run(op, x, &mut got)?;
-        if let Some(row) = (0..nrows).find(|&r| got[r].to_bits() != own[r].to_bits()) {
+        if let Some((row, _)) = worst {
             report.mismatches.push(Mismatch {
-                kind: MismatchKind::ParallelDivergence,
+                kind: MismatchKind::CrossFormat,
                 format: tag,
-                parts,
+                variant,
+                parts: 0,
                 row,
-                got: got[row],
-                want: own[row],
-                ulps: ulp_distance(got[row], own[row]),
+                got: own[row],
+                want: want[row],
+                ulps: ulp_distance(own[row], want[row]),
             });
+        }
+
+        // Level 2: every partition count vs the operator's own serial
+        // result under the same variant, bit for bit.
+        for parts in 1..=cfg.max_parts.max(1) {
+            let engine =
+                SpmvEngine::new(ParStrategy::Fixed(parts)).with_kernel_variant(variant);
+            let mut got = vec![0.0; nrows];
+            engine.run(op, x, &mut got)?;
+            if let Some(row) = (0..nrows).find(|&r| got[r].to_bits() != own[r].to_bits()) {
+                report.mismatches.push(Mismatch {
+                    kind: MismatchKind::ParallelDivergence,
+                    format: tag,
+                    variant,
+                    parts,
+                    row,
+                    got: got[row],
+                    want: own[row],
+                    ulps: ulp_distance(got[row], own[row]),
+                });
+            }
         }
     }
     Ok(())
@@ -376,12 +451,157 @@ impl SpmvOperator for PerturbedOperator {
         Ok(())
     }
 
+    // The variant hooks must forward to the *inner* operator's variant
+    // dispatch (not fall back to the trait defaults, which would reroute
+    // through our own `run_range` and lose the variant), then perturb —
+    // so the negative control stays honest under variant sweeps.
+    fn run_range_variant(
+        &self,
+        block: Block,
+        x: &[f64],
+        y_seg: &mut [f64],
+        variant: KernelVariant,
+    ) -> Result<()> {
+        self.inner.run_range_variant(block, x, y_seg, variant)?;
+        self.perturb(block, y_seg);
+        Ok(())
+    }
+
+    fn run_range_axpby_variant(
+        &self,
+        block: Block,
+        x: &[f64],
+        alpha: f64,
+        beta: f64,
+        y_seg: &mut [f64],
+        variant: KernelVariant,
+    ) -> Result<()> {
+        self.inner.run_range_axpby_variant(block, x, alpha, beta, y_seg, variant)?;
+        self.perturb(block, y_seg);
+        Ok(())
+    }
+
+    fn run_range_multi_variant(
+        &self,
+        block: Block,
+        xs: &DenseMat,
+        ys: &mut DenseMatMut<'_>,
+        variant: KernelVariant,
+    ) -> Result<()> {
+        self.inner.run_range_multi_variant(block, xs, ys, variant)?;
+        for j in 0..ys.ncols() {
+            self.perturb(block, ys.col_mut(j));
+        }
+        Ok(())
+    }
+
     fn resident_bytes(&self) -> usize {
         self.inner.resident_bytes()
     }
 
     fn format_tag(&self) -> &'static str {
         self.inner.format_tag()
+    }
+}
+
+/// A CSR operator with a deliberately *wrong combine order* — the
+/// oracle's reassociation-drift negative control.
+///
+/// On the full serial block it runs the correct scalar CSR kernel. On any
+/// partitioned block it computes each row's dot product by a
+/// **reverse-element-order sequential fold** instead. Floating-point
+/// addition is commutative bit-for-bit but not associative, so the
+/// reversed *sequential* fold genuinely changes the association — e.g.
+/// with products `[1.0, 2⁻⁵³, 2⁻⁵³, 2⁻⁵³]` the forward fold yields
+/// `1 + 2⁻⁵²` while the reverse fold yields `1 + 2⁻⁵¹`. A healthy oracle
+/// must flag this as [`MismatchKind::ParallelDivergence`]: the partitioned
+/// result is no longer bit-identical to the serial result, which is
+/// exactly the bug class the level-2 check exists to catch (a kernel whose
+/// partitioned arithmetic silently reassociates row sums). Used by
+/// `tests/kernel_variants.rs`.
+pub struct MiscombinedOperator {
+    inner: Arc<Csr>,
+}
+
+impl MiscombinedOperator {
+    /// Wrap a CSR matrix.
+    pub fn new(inner: Arc<Csr>) -> MiscombinedOperator {
+        MiscombinedOperator { inner }
+    }
+
+    /// One row's dot product folded back-to-front — a different
+    /// association than the forward fold the scalar kernel uses.
+    fn row_dot_reversed(&self, r: usize, x: &[f64]) -> f64 {
+        let m = &*self.inner;
+        let (lo, hi) = (m.row_ptr[r], m.row_ptr[r + 1]);
+        let mut acc = 0.0;
+        for k in (lo..hi).rev() {
+            acc += m.vals[k] * x[m.cols[k] as usize];
+        }
+        acc
+    }
+
+    fn is_full_block(&self, block: Block) -> bool {
+        let units = self.inner.cost_prefix().len().saturating_sub(1);
+        block.start == 0 && block.end == units
+    }
+}
+
+impl SpmvOperator for MiscombinedOperator {
+    fn dims(&self) -> (usize, usize) {
+        self.inner.dims()
+    }
+
+    fn nnz(&self) -> usize {
+        Csr::nnz(&self.inner)
+    }
+
+    fn cost_prefix(&self) -> Cow<'_, [usize]> {
+        self.inner.cost_prefix()
+    }
+
+    fn run_range(&self, block: Block, x: &[f64], y_seg: &mut [f64]) -> Result<()> {
+        if self.is_full_block(block) {
+            return crate::spmv::csr::spmv_row_range(&self.inner, block.start, block.end, x, y_seg);
+        }
+        for r in block.start..block.end {
+            y_seg[r - block.start] += self.row_dot_reversed(r, x);
+        }
+        Ok(())
+    }
+
+    fn run_range_axpby(
+        &self,
+        block: Block,
+        x: &[f64],
+        alpha: f64,
+        beta: f64,
+        y_seg: &mut [f64],
+    ) -> Result<()> {
+        if self.is_full_block(block) {
+            return crate::spmv::csr::spmv_row_range_axpby(
+                &self.inner,
+                block.start,
+                block.end,
+                x,
+                alpha,
+                beta,
+                y_seg,
+            );
+        }
+        for r in block.start..block.end {
+            let y = &mut y_seg[r - block.start];
+            *y = alpha * self.row_dot_reversed(r, x) + beta * *y;
+        }
+        Ok(())
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.inner.resident_bytes()
+    }
+
+    fn format_tag(&self) -> &'static str {
+        "csr" // masquerades as a CSR kernel — that's the point
     }
 }
 
@@ -402,10 +622,11 @@ mod tests {
     fn healthy_matrix_is_conformant_across_all_formats() {
         let report = check_matrix(&sample(), &OracleConfig::default()).unwrap();
         assert!(report.is_conformant(), "{report}");
-        assert_eq!(report.formats.len() + report.skipped.len(), 5);
+        assert_eq!(report.formats.len() + report.skipped.len(), 6);
         assert!(report.formats.contains(&"csr"));
+        assert!(report.formats.contains(&"blocked_ell"));
         assert!(report.formats.contains(&"csr_dtans"));
-        assert_eq!(report.strategies, 9); // serial + Fixed(1..=8)
+        assert_eq!(report.strategies, 9); // 1 variant x (serial + Fixed(1..=8))
     }
 
     #[test]
@@ -438,6 +659,7 @@ mod tests {
         let m = Mismatch {
             kind: MismatchKind::ParallelDivergence,
             format: "sell",
+            variant: KernelVariant::Unrolled4,
             parts: 4,
             row: 9,
             got: 1.0,
@@ -445,6 +667,39 @@ mod tests {
             ulps: 42,
         };
         let s = m.to_string();
-        assert!(s.contains("sell") && s.contains("parts=4") && s.contains("row 9"), "{s}");
+        assert!(
+            s.contains("sell")
+                && s.contains("unrolled4")
+                && s.contains("parts=4")
+                && s.contains("row 9"),
+            "{s}"
+        );
+    }
+
+    #[test]
+    fn miscombined_operator_is_flagged_as_parallel_divergence() {
+        // Precondition: under the oracle's own input vector, at least one
+        // row's forward and reverse folds must differ bitwise — otherwise
+        // the control would be vacuous on this fixture.
+        let m = sample();
+        let cfg = OracleConfig::default();
+        let x = input_vector(m.ncols, cfg.seed);
+        let bad = MiscombinedOperator::new(Arc::new(m.clone()));
+        let differs = (0..m.nrows).any(|r| {
+            let fwd: f64 = (m.row_ptr[r]..m.row_ptr[r + 1])
+                .fold(0.0, |acc, k| acc + m.vals[k] * x[m.cols[k] as usize]);
+            fwd.to_bits() != bad.row_dot_reversed(r, &x).to_bits()
+        });
+        assert!(differs, "fixture too tame: reverse fold never changes a bit");
+
+        let report = check_operator(&bad, &m, &cfg).unwrap();
+        assert!(!report.is_conformant());
+        // Serial and Fixed(1) are the full block (correct kernel); every
+        // genuinely partitioned run must be caught at level 2.
+        assert!(report
+            .mismatches
+            .iter()
+            .all(|mm| mm.kind == MismatchKind::ParallelDivergence && mm.parts >= 2));
+        assert_eq!(report.mismatches.len(), 7); // parts 2..=8
     }
 }

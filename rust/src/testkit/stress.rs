@@ -374,7 +374,7 @@ pub fn run_stress(cfg: &StressConfig) -> Result<StressReport> {
 }
 
 fn run_stress_inner(cfg: &StressConfig, cache_dir: &Path) -> Result<StressReport> {
-    let policy = RoutePolicy { min_nnz: 1 << 9, max_size_ratio: 0.95 };
+    let policy = RoutePolicy { min_nnz: 1 << 9, max_size_ratio: 0.95, ..Default::default() };
     let (all_fixtures, n_extra, n_mut, spd) = fixtures(cfg.seed);
     let n_total = all_fixtures.len();
     // Random trace ops index only the first `n_rand` fixtures; the

@@ -281,7 +281,7 @@ fn coalesced_spmm_is_bit_identical_to_per_request_spmv() {
     // format (the PR-3 run_multi guarantee, end to end through
     // admission). Exercise both router outcomes: a compressible banded
     // matrix above the dtANS threshold and a small CSR-routed one.
-    let policy = RoutePolicy { min_nnz: 1 << 10, max_size_ratio: 0.95 };
+    let policy = RoutePolicy { min_nnz: 1 << 10, max_size_ratio: 0.95, ..Default::default() };
     let mut big = banded(4000, 2);
     assign_values(&mut big, ValueDist::FewDistinct(6), &mut Xoshiro256::seeded(11));
     // 744 nnz < the policy's 1024 floor -> guaranteed CSR routing.

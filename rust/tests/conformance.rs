@@ -7,6 +7,7 @@ use dtans::format::csr_dtans::EncodeOptions;
 use dtans::matrix::gen::structured::banded;
 use dtans::matrix::gen::{assign_values, ValueDist};
 use dtans::matrix::{Csr, Precision};
+use dtans::spmv::engine::KernelVariant;
 use dtans::spmv::{FormatEntry, FormatRegistry, SpmvOperator};
 use dtans::testkit::oracle::{self, MismatchKind, OracleConfig, PerturbedOperator};
 use dtans::testkit::{run_stress, zoo, StressConfig, TestkitScale};
@@ -14,15 +15,21 @@ use dtans::util::rng::Xoshiro256;
 use std::sync::Arc;
 
 #[test]
-fn pathological_zoo_is_conformant_across_formats_and_partitions() {
+fn pathological_zoo_is_conformant_across_formats_variants_and_partitions() {
+    // The full cross-product sweep: every builtin format × every kernel
+    // variant × serial + every partition count, on every zoo fixture.
     let cfg = OracleConfig::default();
+    let registry = FormatRegistry::builtin();
     for f in zoo::pathological() {
-        let report = oracle::check_matrix(&f.csr, &cfg)
+        let report = oracle::cross_check_with(&f.csr, &cfg, &registry, &KernelVariant::ALL)
             .unwrap_or_else(|e| panic!("{}: oracle errored: {e}", f.name));
         assert!(report.is_conformant(), "{}: {report}", f.name);
         // Every fixture must actually exercise the zoo — at least the
-        // CSR, COO, SELL and dtANS builders accept all of these shapes.
-        assert!(report.formats.len() >= 4, "{}: only {:?}", f.name, report.formats);
+        // CSR, COO, SELL, BlockedELL and dtANS builders accept all of
+        // these shapes.
+        assert!(report.formats.len() >= 5, "{}: only {:?}", f.name, report.formats);
+        assert!(report.formats.contains(&"blocked_ell"), "{}", f.name);
+        assert_eq!(report.strategies, KernelVariant::ALL.len() * (cfg.max_parts + 1));
     }
 }
 

@@ -27,7 +27,7 @@ fn store_with(config: StoreConfig) -> MatrixStore {
     MatrixStore::new(
         config,
         EncodeOptions::default(),
-        RoutePolicy { min_nnz: 1 << 8, max_size_ratio: 0.98 },
+        RoutePolicy { min_nnz: 1 << 8, max_size_ratio: 0.98, ..Default::default() },
         Arc::new(Metrics::default()),
     )
     .unwrap()

@@ -48,6 +48,7 @@ fn routing_policy_follows_paper_rule() {
     let policy = RoutePolicy {
         min_nnz: 1 << 12,
         max_size_ratio: 0.9,
+        ..Default::default()
     };
     let opts = EncodeOptions::default();
     let mut rng = Xoshiro256::seeded(2);

@@ -1,0 +1,187 @@
+//! Tier-1 suite for the vectorized range kernels: every
+//! [`KernelVariant`] × every built-in format × partition counts 1..=16
+//! must be **bit-identical** to the same variant's serial run, and every
+//! variant's serial result must stay within the oracle's closeness bound
+//! of the scalar CSR ground truth — including tail rows shorter than the
+//! lane width, empty rows, and the 31/32/33 warp-slice-boundary fixtures.
+//! Plus the reassociation negative control: a deliberately wrong combine
+//! order must be caught by the per-format bit-identity oracle.
+
+use dtans::format::csr_dtans::EncodeOptions;
+use dtans::matrix::coo::Coo;
+use dtans::matrix::csr::Csr;
+use dtans::matrix::gen::structured::{banded, powerlaw_rows, stencil2d5};
+use dtans::matrix::gen::{assign_values, gen_graph_csr, GraphModel, ValueDist};
+use dtans::spmv::engine::{KernelVariant, ParStrategy, SpmvEngine};
+use dtans::spmv::operator::FormatRegistry;
+use dtans::testkit::oracle::{self, MismatchKind, MiscombinedOperator, OracleConfig};
+use dtans::testkit::{seeded_vector, zoo};
+use dtans::util::propcheck::{assert_close, check, Ctx};
+use std::sync::Arc;
+
+/// Random sparse matrix mixing graph and structured families — the same
+/// palette the operator-dispatch suite uses, so empty rows (power-law,
+/// Erdős–Rényi) and short rows (narrow bands) both occur naturally.
+fn random_csr(ctx: &mut Ctx) -> Csr {
+    let n = 1 + ctx.rng.below_usize(ctx.size.max(1));
+    let mut m = match ctx.rng.below(4) {
+        0 => gen_graph_csr(GraphModel::ErdosRenyi, n.max(4), 4.0, &mut ctx.rng),
+        1 => powerlaw_rows(n.max(4), 5.0, 1.1, &mut ctx.rng),
+        2 => banded(n.max(2), 1 + ctx.rng.below_usize(4)),
+        _ => {
+            let side = 2 + ctx.rng.below_usize((n as f64).sqrt() as usize + 2);
+            stencil2d5(side, side)
+        }
+    };
+    let dist = match ctx.rng.below(3) {
+        0 => ValueDist::FewDistinct(6),
+        1 => ValueDist::Gaussian,
+        _ => ValueDist::Quantized(64),
+    };
+    assign_values(&mut m, dist, &mut ctx.rng);
+    m
+}
+
+/// The central variant contract, property-tested: for every built-in
+/// format and every kernel variant, each partition count in 1..=16 is
+/// bit-identical to the *same variant's* serial run, and the variant's
+/// serial run is close (oracle metric) to the scalar serial CSR kernel.
+#[test]
+fn prop_variants_bit_identical_across_partitions_and_close_to_scalar() {
+    check("kernel-variants-bitident", 10, 90, |ctx: &mut Ctx| {
+        let m = random_csr(ctx);
+        let opts = EncodeOptions::default();
+        let x: Vec<f64> = (0..m.ncols).map(|_| ctx.rng.next_f64() - 0.5).collect();
+
+        // Scalar serial CSR ground truth for the closeness level.
+        let mut want = vec![0.0; m.nrows];
+        dtans::spmv::spmv_csr(&m, &x, &mut want).map_err(|e| e.to_string())?;
+
+        for (tag, op) in FormatRegistry::builtin().build_all(&m, &opts) {
+            let op = op.map_err(|e| format!("{tag}: build failed: {e}"))?;
+            for variant in KernelVariant::ALL {
+                let mut own = vec![0.0; m.nrows];
+                SpmvEngine::serial()
+                    .with_kernel_variant(variant)
+                    .run(op.as_ref(), &x, &mut own)
+                    .map_err(|e| format!("{tag}/{}: {e}", variant.label()))?;
+                assert_close(&own, &want, 1e-9, 1e-12)
+                    .map_err(|e| format!("{tag}/{}: not close to scalar CSR: {e}", variant.label()))?;
+                for parts in 1..=16usize {
+                    let engine =
+                        SpmvEngine::new(ParStrategy::Fixed(parts)).with_kernel_variant(variant);
+                    let mut got = vec![0.0; m.nrows];
+                    engine
+                        .run(op.as_ref(), &x, &mut got)
+                        .map_err(|e| format!("{tag}/{}: {e}", variant.label()))?;
+                    if got.iter().zip(&own).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                        return Err(format!(
+                            "{tag}/{}: parts={parts} not bit-identical to serial",
+                            variant.label()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The 31/32/33 warp-slice-boundary fixtures from the pathological zoo,
+/// swept through the full format × variant × partition cross-product.
+#[test]
+fn slice_boundary_fixtures_conform_under_all_variants() {
+    let cfg = OracleConfig { max_parts: 16, ..Default::default() };
+    let registry = FormatRegistry::builtin();
+    let fixtures: Vec<_> = zoo::pathological()
+        .into_iter()
+        .filter(|f| f.name.starts_with("slice-boundary-"))
+        .collect();
+    assert_eq!(fixtures.len(), 3, "expected the 31/32/33 trio");
+    for f in fixtures {
+        let report = oracle::cross_check_with(&f.csr, &cfg, &registry, &KernelVariant::ALL)
+            .unwrap_or_else(|e| panic!("{}: oracle errored: {e}", f.name));
+        assert!(report.is_conformant(), "{}: {report}", f.name);
+        assert_eq!(report.strategies, 3 * 17, "{}", f.name); // 3 variants x (serial + 1..=16)
+    }
+}
+
+/// Hand-built worst case for the unrolled tails: every row length from 0
+/// (empty) through 9 — all shorter than, equal to, and one past both lane
+/// widths (4 and 8) — must agree bitwise across partitions for every
+/// variant, and stay close to scalar CSR.
+#[test]
+fn short_and_empty_rows_stay_exact_under_unrolled_variants() {
+    let nrows = 10usize;
+    let ncols = 16usize;
+    let mut coo = Coo::new(nrows, ncols);
+    for r in 0..nrows as u32 {
+        for j in 0..r {
+            // Row r has exactly r elements (row 0 is empty).
+            coo.push(r, (j * 3 + r) % ncols as u32, (r as f64 + 1.0) / (j as f64 + 2.0));
+        }
+    }
+    let m = Csr::from_coo(&coo);
+    let x = seeded_vector(ncols, 0xBEEF);
+    let mut want = vec![0.0; nrows];
+    dtans::spmv::spmv_csr(&m, &x, &mut want).unwrap();
+
+    for (tag, op) in FormatRegistry::builtin().build_all(&m, &EncodeOptions::default()) {
+        let op = op.expect(tag);
+        for variant in KernelVariant::ALL {
+            let mut own = vec![0.0; nrows];
+            SpmvEngine::serial().with_kernel_variant(variant).run(op.as_ref(), &x, &mut own).unwrap();
+            assert_close(&own, &want, 1e-12, 1e-12)
+                .unwrap_or_else(|e| panic!("{tag}/{}: {e}", variant.label()));
+            for parts in 1..=16usize {
+                let engine = SpmvEngine::new(ParStrategy::Fixed(parts)).with_kernel_variant(variant);
+                let mut got = vec![0.0; nrows];
+                engine.run(op.as_ref(), &x, &mut got).unwrap();
+                assert_eq!(
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    own.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{tag}/{} parts={parts}",
+                    variant.label()
+                );
+            }
+        }
+    }
+}
+
+/// Negative control: a kernel whose *partitioned* runs use a deliberately
+/// wrong combine order (reverse-element sequential folds) must be flagged
+/// by the level-2 bit-identity oracle as partition divergence — under the
+/// scalar variant and under the unrolled variants alike.
+#[test]
+fn wrong_combine_order_is_caught_by_the_bit_identity_oracle() {
+    let mut m = banded(200, 4);
+    assign_values(&mut m, ValueDist::Gaussian, &mut dtans::util::rng::Xoshiro256::seeded(11));
+    let cfg = OracleConfig::default();
+
+    // Precondition (so the control can't silently go vacuous): under the
+    // oracle's own input vector, at least one row's forward and reverse
+    // sequential folds must differ bitwise.
+    let x = seeded_vector(m.ncols, cfg.seed);
+    let differs = (0..m.nrows).any(|r| {
+        let (lo, hi) = (m.row_ptr[r], m.row_ptr[r + 1]);
+        let fwd = (lo..hi).fold(0.0f64, |acc, k| acc + m.vals[k] * x[m.cols[k] as usize]);
+        let rev = (lo..hi).rev().fold(0.0f64, |acc, k| acc + m.vals[k] * x[m.cols[k] as usize]);
+        fwd.to_bits() != rev.to_bits()
+    });
+    assert!(differs, "fixture too tame: reverse fold never changes a bit");
+
+    let bad = MiscombinedOperator::new(Arc::new(m.clone()));
+    let report = oracle::check_operator_with(&bad, &m, &cfg, &KernelVariant::ALL).unwrap();
+    assert!(!report.is_conformant(), "wrong combine order went undetected");
+    // Every mismatch is a level-2 partition divergence on a genuinely
+    // partitioned run; the serial/full-block runs stay clean.
+    for mm in &report.mismatches {
+        assert_eq!(mm.kind, MismatchKind::ParallelDivergence, "{mm}");
+        assert!(mm.parts >= 2, "{mm}");
+        assert!(mm.ulps >= 1, "{mm}");
+    }
+    // The scalar variant must be among the catches (the operator ignores
+    // variant dispatch, so all three variants report the same drift).
+    assert!(report.mismatches.iter().any(|mm| mm.variant == KernelVariant::Scalar));
+    assert_eq!(report.mismatches.len(), 3 * 7); // 3 variants x parts 2..=8
+}

@@ -148,7 +148,7 @@ fn prometheus_exposition_covers_paper_and_pipeline_metrics() {
     // populated, plus enough traffic for queue-wait and block-timing
     // histograms.
     let svc = SpmvService::start(ServiceConfig {
-        policy: RoutePolicy { min_nnz: 1 << 10, max_size_ratio: 0.9 },
+        policy: RoutePolicy { min_nnz: 1 << 10, max_size_ratio: 0.9, ..Default::default() },
         ..Default::default()
     });
     let mut m = banded(4000, 2);

@@ -1,19 +1,21 @@
 //! Property tests for the format-agnostic `dyn SpmvOperator` surface,
-//! pinning the redesign's central contract: for **all five built-in
-//! formats** (CSR, COO, SELL, dense, CSR-dtANS) and every partition count
-//! in 1..=16, the engine's trait path is **bit-identical** to that
-//! format's legacy free-function kernel — not merely numerically close.
-//! Also pinned: batched `run_multi` over a contiguous [`DenseMat`] matches
-//! repeated single-vector multiplies bitwise, for every format.
+//! pinning the redesign's central contract: for **all six built-in
+//! formats** (CSR, COO, SELL, BlockedELL, dense, CSR-dtANS) and every
+//! partition count in 1..=16, the engine's trait path is **bit-identical**
+//! to that format's legacy free-function kernel — not merely numerically
+//! close. Also pinned: batched `run_multi` over a contiguous [`DenseMat`]
+//! matches repeated single-vector multiplies bitwise, for every format.
 
 use dtans::format::csr_dtans::{CsrDtans, EncodeOptions};
 use dtans::matrix::csr::Csr;
 use dtans::matrix::gen::structured::{banded, powerlaw_rows, stencil2d5};
 use dtans::matrix::gen::{assign_values, gen_graph_csr, GraphModel, ValueDist};
-use dtans::matrix::Sell;
+use dtans::matrix::{BlockedEll, Sell};
 use dtans::spmv::engine::{ParStrategy, SpmvEngine};
 use dtans::spmv::operator::FormatRegistry;
-use dtans::spmv::{spmv_coo, spmv_csr, spmv_csr_dtans, spmv_dense, spmv_sell, DenseMat};
+use dtans::spmv::{
+    spmv_blocked_ell, spmv_coo, spmv_csr, spmv_csr_dtans, spmv_dense, spmv_sell, DenseMat,
+};
 use dtans::util::propcheck::{check, Ctx};
 
 /// Random sparse matrix mixing graph and structured families, with value
@@ -57,6 +59,7 @@ fn legacy_kernel(
         "csr" => spmv_csr(m, x, &mut y),
         "coo" => spmv_coo(&m.to_coo(), x, &mut y),
         "sell" => spmv_sell(&Sell::from_csr(m, 32), x, &mut y),
+        "blocked_ell" => spmv_blocked_ell(&BlockedEll::from_csr_default(m), x, &mut y),
         "dense" => spmv_dense(&m.to_dense(), m.nrows, m.ncols, x, &mut y),
         "csr_dtans" => {
             let enc = CsrDtans::encode(m, opts).map_err(|e| e.to_string())?;
@@ -80,8 +83,8 @@ fn prop_dyn_engine_bit_identical_to_legacy_kernels_all_formats() {
         // Nonzero initial y exercises the += contract.
         let y0: Vec<f64> = (0..m.nrows).map(|i| (i as f64) * 0.0625 - 1.0).collect();
         let built = FormatRegistry::builtin().build_all(&m, &opts);
-        if built.len() != 5 {
-            return Err(format!("expected 5 builtin formats, got {}", built.len()));
+        if built.len() != 6 {
+            return Err(format!("expected 6 builtin formats, got {}", built.len()));
         }
         for (tag, op) in built {
             // Test matrices are small; every builder (dense included)

@@ -29,7 +29,7 @@ fn budgeted_service_is_bit_identical_to_unbudgeted() {
     let dir = temp_dir("bitident");
     let mats = mixed_zoo();
     assert!(mats.len() >= 8);
-    let policy = RoutePolicy { min_nnz: 1 << 9, max_size_ratio: 0.95 };
+    let policy = RoutePolicy { min_nnz: 1 << 9, max_size_ratio: 0.95, ..Default::default() };
 
     // Ground truth: an unbudgeted, serial service (the pre-store path).
     let reference = SpmvService::start(ServiceConfig { policy, ..Default::default() });
@@ -157,7 +157,7 @@ fn register_path_roundtrip_through_service() {
     dtans::format::serialize::save(&enc, &file).unwrap();
 
     let svc = SpmvService::start(ServiceConfig {
-        policy: RoutePolicy { min_nnz: 1 << 9, max_size_ratio: 0.95 },
+        policy: RoutePolicy { min_nnz: 1 << 9, max_size_ratio: 0.95, ..Default::default() },
         ..Default::default()
     });
     let id = svc.register_path("from-artifact", &file).unwrap();

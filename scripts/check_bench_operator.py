@@ -1,0 +1,156 @@
+#!/usr/bin/env python3
+"""Smoke-checker for the operator-dispatch bench report.
+
+Validates `results/BENCH_operator.json` (as written by
+`cargo bench --bench main_bench -- operator_dispatch`) so the CI
+bench-smoke step fails loudly when the report goes stale or a format
+drops out of the registry:
+
+  * the file parses as JSON;
+  * the `formats` array names all six built-in formats
+    (csr, coo, sell, blocked_ell, dense, csr_dtans);
+  * every per-kernel timing field is present and a positive number;
+  * `best_variant` names one of the vectorized candidates and
+    `best_speedup_vs_csr_scalar` is a positive number (the > 1.0
+    acceptance assert lives in the bench itself, full mode only —
+    quick-mode CI matrices are too small for wide accumulators).
+
+Hermetic (stdlib only, no network) so the CI job never flakes.
+
+Usage: python3 scripts/check_bench_operator.py <BENCH_operator.json>
+       python3 scripts/check_bench_operator.py --selftest
+Exit code 0 when every check passes, 1 otherwise (one line per error).
+"""
+
+import json
+import sys
+from pathlib import Path
+
+REQUIRED_FORMATS = {"csr", "coo", "sell", "blocked_ell", "dense", "csr_dtans"}
+TIMING_FIELDS = [
+    "csr_direct_s",
+    "csr_dyn_s",
+    "csr_dtans_direct_s",
+    "csr_dtans_dyn_s",
+    "csr_unrolled4_s",
+    "csr_unrolled8_s",
+    "blocked_ell_s",
+    "blocked_ell_unrolled8_s",
+]
+VARIANT_CANDIDATES = {
+    "csr_unrolled4",
+    "csr_unrolled8",
+    "blocked_ell",
+    "blocked_ell_unrolled8",
+}
+
+
+def validate(text: str, origin: str = "<input>") -> list:
+    errors = []
+    try:
+        report = json.loads(text)
+    except json.JSONDecodeError as e:
+        return [f"{origin}: not valid JSON: {e}"]
+    if not isinstance(report, dict):
+        return [f"{origin}: top level is not an object"]
+
+    if report.get("bench") != "operator_dispatch":
+        errors.append(f"{origin}: bench != operator_dispatch: {report.get('bench')!r}")
+
+    formats = report.get("formats")
+    if not isinstance(formats, list):
+        errors.append(f"{origin}: missing/invalid formats array")
+    else:
+        missing = REQUIRED_FORMATS - set(formats)
+        if missing:
+            errors.append(f"{origin}: formats missing {sorted(missing)}")
+
+    for field in TIMING_FIELDS:
+        v = report.get(field)
+        if not isinstance(v, (int, float)) or isinstance(v, bool) or v <= 0:
+            errors.append(f"{origin}: {field} missing or not a positive number: {v!r}")
+
+    best = report.get("best_variant")
+    if best not in VARIANT_CANDIDATES:
+        errors.append(f"{origin}: best_variant {best!r} not in {sorted(VARIANT_CANDIDATES)}")
+    speedup = report.get("best_speedup_vs_csr_scalar")
+    if not isinstance(speedup, (int, float)) or isinstance(speedup, bool) or speedup <= 0:
+        errors.append(f"{origin}: best_speedup_vs_csr_scalar missing/invalid: {speedup!r}")
+    return errors
+
+
+VALID_FIXTURE = json.dumps(
+    {
+        "bench": "operator_dispatch",
+        "quick": True,
+        "nnz": 2293756,
+        "formats": ["csr", "coo", "sell", "blocked_ell", "dense", "csr_dtans"],
+        "csr_direct_s": 0.002,
+        "csr_dyn_s": 0.00201,
+        "csr_overhead_pct": 0.5,
+        "csr_dtans_direct_s": 0.004,
+        "csr_dtans_dyn_s": 0.00402,
+        "csr_dtans_overhead_pct": 0.5,
+        "csr_unrolled4_s": 0.0017,
+        "csr_unrolled8_s": 0.0016,
+        "blocked_ell_s": 0.0019,
+        "blocked_ell_unrolled8_s": 0.0015,
+        "best_variant": "blocked_ell_unrolled8",
+        "best_speedup_vs_csr_scalar": 1.333,
+        "acceptance_bar_pct": 5.0,
+    }
+)
+
+INVALID_FIXTURES = {
+    "not json": "{ nope",
+    "missing format": VALID_FIXTURE.replace('"blocked_ell", ', ""),
+    "missing timing": VALID_FIXTURE.replace('"csr_unrolled8_s": 0.0016, ', ""),
+    "zero timing": VALID_FIXTURE.replace('"blocked_ell_s": 0.0019', '"blocked_ell_s": 0.0'),
+    "unknown best variant": VALID_FIXTURE.replace(
+        '"best_variant": "blocked_ell_unrolled8"', '"best_variant": "mystery"'
+    ),
+    "bad speedup": VALID_FIXTURE.replace(
+        '"best_speedup_vs_csr_scalar": 1.333', '"best_speedup_vs_csr_scalar": "fast"'
+    ),
+}
+
+
+def selftest() -> int:
+    errs = validate(VALID_FIXTURE, "valid-fixture")
+    if errs:
+        print("selftest: valid fixture unexpectedly rejected:")
+        for e in errs:
+            print(f"  {e}")
+        return 1
+    failed = 0
+    for label, fixture in INVALID_FIXTURES.items():
+        if not validate(fixture, label):
+            print(f"selftest: invalid fixture {label!r} was not caught")
+            failed += 1
+    print(
+        f"selftest: 1 valid + {len(INVALID_FIXTURES)} invalid fixtures: "
+        f"{'OK' if not failed else f'{failed} missed'}"
+    )
+    return 1 if failed else 0
+
+
+def main() -> int:
+    args = sys.argv[1:]
+    if not args:
+        sys.exit("usage: check_bench_operator.py <BENCH_operator.json> | --selftest")
+    if args == ["--selftest"]:
+        return selftest()
+    errors = []
+    for a in args:
+        p = Path(a)
+        if not p.is_file():
+            sys.exit(f"not a file: {a}")
+        errors.extend(validate(p.read_text(encoding="utf-8"), str(p)))
+    for e in errors:
+        print(e)
+    print(f"checked {len(args)} report(s): {'OK' if not errors else f'{len(errors)} errors'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
