@@ -30,6 +30,11 @@
 //!  * observability bench: per-request cost of the tracing/metrics
 //!    layer — off vs sampled 1-in-64 vs always-on — on the scaling
 //!    matrix (`obs_overhead`, reporting to `results/BENCH_obs.json`);
+//!  * routing bench: adaptation quality of the bandit router on the
+//!    deterministic simulator's regime traces — including a mid-run
+//!    regime shift — asserting the post-convergence served p50 lands
+//!    within 10% of the best static arm's p50 (`routing_adaptation`,
+//!    reporting to `results/BENCH_routing.json`);
 //!  * one end-to-end bench per paper table/figure (regenerating them at
 //!    bench scale): fig4, fig6+tab1, fig7/tab2, fig8/tab3, fig9, ablate.
 //!
@@ -414,6 +419,78 @@ fn bench_operator_dispatch(filter: &Option<String>, quick: bool) {
     let path = outdir.join("BENCH_operator.json");
     std::fs::write(&path, json).expect("write BENCH_operator.json");
     println!("operator_dispatch/report     wrote {}", path.display());
+}
+
+/// Adaptive-routing quality bench: replay the deterministic simulator's
+/// regime traces (stationary dtANS-hostile, drifting incumbent, bimodal
+/// noise, and a stationary trace with a mid-run regime *shift*) through
+/// the real `AdaptiveRouter` and report convergence step, flip count,
+/// and the served post-convergence p50 next to the best static arm's
+/// p50. Acceptance: every trace converges and its p50 ratio stays
+/// within 1.10 — ε-greedy's exploration tax plus hysteresis lag must
+/// not cost more than 10% at the median. Emits
+/// `results/BENCH_routing.json`.
+fn bench_routing_adaptation(filter: &Option<String>, quick: bool) {
+    use dtans::testkit::routing_sim::{run_routing_sim, Regime, SimConfig};
+
+    if !should_run(filter, "routing_adaptation") {
+        return;
+    }
+    // The simulator is pure arithmetic (no kernels, no threads), so the
+    // traces run at full length even under --quick: shrinking them would
+    // move the drift crossover and change which arm is truly best.
+    let bar = 1.10;
+    let shift = SimConfig::regime(Regime::Stationary);
+    let reversal = shift.steps / 2;
+    let traces: Vec<(&str, SimConfig)> = vec![
+        ("stationary", SimConfig::regime(Regime::Stationary)),
+        ("drifting", SimConfig::regime(Regime::Drifting)),
+        ("bimodal_noisy", SimConfig::regime(Regime::BimodalNoisy)),
+        // The regime-shift trace: the stationary regime reverses halfway.
+        ("stationary_shift", shift.with_reversal(reversal)),
+    ];
+
+    let mut rows = Vec::new();
+    for (name, cfg) in &traces {
+        let out = run_routing_sim(cfg);
+        let at = out
+            .converged_at
+            .unwrap_or_else(|| panic!("routing_adaptation/{name}: never converged: {out:?}"));
+        let ratio = out.post_convergence_p50_us / out.best_static_p50_us;
+        println!(
+            "routing_adaptation/{name:<17} converged@{at:<4} flips={} p50 {:.1}us \
+             vs best-static {:.1}us (ratio {ratio:.3})",
+            out.flips.len(),
+            out.post_convergence_p50_us,
+            out.best_static_p50_us,
+        );
+        assert!(
+            ratio <= bar,
+            "routing_adaptation/{name}: post-convergence p50 ratio {ratio:.3} exceeds {bar}"
+        );
+        rows.push(format!(
+            "    {{\n      \"regime\": \"{}\",\n      \"steps\": {},\n      \"flips\": {},\n      \"converged_at\": {},\n      \"post_convergence_p50_us\": {:.3},\n      \"best_static_p50_us\": {:.3},\n      \"p50_ratio\": {:.4}\n    }}",
+            name,
+            cfg.steps,
+            out.flips.len(),
+            at,
+            out.post_convergence_p50_us,
+            out.best_static_p50_us,
+            ratio,
+        ));
+    }
+
+    let outdir = Path::new("results");
+    let _ = std::fs::create_dir_all(outdir);
+    let json = format!(
+        "{{\n  \"bench\": \"routing_adaptation\",\n  \"quick\": {},\n  \"acceptance_bar_ratio\": {:.2},\n  \"regimes\": [\n{}\n  ]\n}}\n",
+        quick,
+        bar,
+        rows.join(",\n"),
+    );
+    let path = outdir.join("BENCH_routing.json");
+    std::fs::write(&path, json).expect("write BENCH_routing.json");
+    println!("routing_adaptation/report    wrote {}", path.display());
 }
 
 /// Tiered-store cold-start bench: (1) register-from-artifact vs
@@ -1062,6 +1139,7 @@ fn main() {
     bench_stress_driver(&filter, quick);
     bench_serving_saturation(&filter, quick);
     bench_obs_overhead(&filter, quick);
+    bench_routing_adaptation(&filter, quick);
     bench_large_banded(&filter, quick);
     bench_experiments(&filter, quick);
     println!("done.");

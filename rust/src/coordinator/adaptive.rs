@@ -1,0 +1,812 @@
+//! Online adaptive routing: a latency-learning cost model with bandit
+//! exploration (closes ROADMAP item 3 — see `docs/ROUTING.md`).
+//!
+//! [`RoutePolicy`](super::router::RoutePolicy) chooses a format once, at
+//! registration, from static heuristics (size ratio, row-length skew).
+//! The paper's Fig. 9 point — *which format wins depends on the matrix*
+//! — means that choice can be wrong, and nothing ever corrects it even
+//! though [`Metrics`] watches every kernel. The [`AdaptiveRouter`]
+//! closes that loop per matrix:
+//!
+//! * **Arm space.** One [`Arm`] per admissible point on the decision
+//!   surface `FormatChoice × KernelVariant × ParHint` ([`ParHint`] maps
+//!   onto the engine's [`ParStrategy`](crate::spmv::engine::ParStrategy):
+//!   the service's configured strategy, or a forced serial run). Which
+//!   formats are admissible is a *residency* question answered by the
+//!   store — an artifact-registered matrix with no CSR original cannot
+//!   serve CSR-walk formats, and an overlaid (mutated) matrix can only
+//!   serve its own composite operator — so the arm list is built from
+//!   [`RoutePolicy::admissible_for`](super::router::RoutePolicy::admissible_for)
+//!   and violations are the typed
+//!   [`DtansError::InadmissibleRoute`](crate::util::error::DtansError).
+//! * **Cost model.** A per-arm EWMA over observed kernel latencies,
+//!   seeded (best first) from an autotune sweep ([`autotune_seeds`]),
+//!   from the GPU-model estimate ([`sim_seeds`]), or not at all — the
+//!   static `RoutePolicy` choice then stands until real observations
+//!   arrive ([`SeedSource::Static`]).
+//! * **Exploration.** Epsilon-greedy: a configurable fraction of
+//!   traffic ([`AdaptiveConfig::explore_fraction`]) is served by a
+//!   uniformly-random non-incumbent arm; everything else rides the
+//!   incumbent. `explored + exploited == routed` always holds
+//!   ([`RouteCounters`]). With the fraction at 0 no challenger ever
+//!   accumulates observations, so routing is *exactly* the static
+//!   choice — the stress driver's bit-identity replay relies on this.
+//! * **Hysteresis.** A challenger must beat the incumbent's EWMA by
+//!   [`AdaptiveConfig::hysteresis_margin`] for
+//!   [`AdaptiveConfig::hysteresis_k`] *consecutive* observations before
+//!   the route flips; any interruption resets the streak. Flips are
+//!   rare by construction — each one lands in [`RouteFlip`], bumps
+//!   [`Metrics::route_flips`] and stamps a standalone
+//!   [`Stage::Routed`](crate::obs::Stage) span.
+//! * **Override.** [`RouteOverride::Pin`] is the operator escape hatch:
+//!   the pinned arm serves all traffic (no exploration, no flips) until
+//!   [`RouteOverride::Clear`]. Pinning an inadmissible arm is allowed —
+//!   execution then fails with the typed routing error rather than
+//!   serving wrong bits.
+//!
+//! The subsystem is proven stable by the deterministic routing
+//! simulator in [`crate::testkit::routing_sim`]: an injected-clock,
+//! seeded-latency-oracle harness that replays stationary / drifting /
+//! bimodal-noisy regimes through this *real* router and asserts
+//! convergence, bounded flap counts and exploration conservation.
+
+use super::metrics::Metrics;
+use super::router::FormatChoice;
+use crate::format::csr_dtans::CsrDtans;
+use crate::matrix::csr::Csr;
+use crate::sim::{best_baseline, simulate, GpuModel, KernelKind, SimInput};
+use crate::spmv::engine::KernelVariant;
+use crate::util::rng::Xoshiro256;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+/// Parallelism half of the arm key. The engine's
+/// [`ParStrategy`](crate::spmv::engine::ParStrategy) is a
+/// *construction-time* property (it owns the worker pool), so the arm
+/// space exposes the two points the service can reach per request
+/// without spawning pools: the shared engine's configured strategy, or
+/// a forced serial run (pool-free by definition).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ParHint {
+    /// Execute on the service's shared engine (its configured
+    /// `ParStrategy` — `Auto` by default).
+    #[default]
+    Engine,
+    /// Force the calling thread: the serial engine, no partitioning.
+    /// Wins on small matrices where fan-out overhead dominates.
+    Serial,
+}
+
+impl ParHint {
+    /// Report label.
+    pub fn label(self) -> &'static str {
+        match self {
+            ParHint::Engine => "engine",
+            ParHint::Serial => "serial",
+        }
+    }
+}
+
+/// One point on the routing decision surface:
+/// format × kernel variant × parallelism hint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Arm {
+    /// Executing format.
+    pub choice: FormatChoice,
+    /// Kernel variant (scalar / unrolled-4 / unrolled-8).
+    pub variant: KernelVariant,
+    /// Parallelism hint.
+    pub par: ParHint,
+}
+
+impl Arm {
+    /// The default-variant, engine-parallel arm for a format — what a
+    /// static [`RoutePolicy`](super::router::RoutePolicy) choice maps to.
+    pub fn format(choice: FormatChoice) -> Arm {
+        Arm { choice, variant: KernelVariant::default(), par: ParHint::default() }
+    }
+
+    /// Compact label, e.g. `csr_dtans/scalar/engine`.
+    pub fn label(&self) -> String {
+        format!("{}/{}/{}", self.choice.tag(), self.variant.label(), self.par.label())
+    }
+}
+
+/// Where a matrix's arm estimates came from (the seeding order of
+/// `docs/ROUTING.md`: autotune sweep → sim estimate → static heuristic).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeedSource {
+    /// Offline autotune sweep ([`crate::autotune`]) — most accurate,
+    /// paid for with AlphaSparse-scale search cost.
+    Autotune,
+    /// GPU execution-model estimate ([`crate::sim`]) — cheap, analytic.
+    Sim,
+    /// No estimate: the static `RoutePolicy` choice stands until real
+    /// observations arrive.
+    Static,
+}
+
+/// One seeded arm estimate.
+#[derive(Debug, Clone, Copy)]
+pub struct ArmSeed {
+    /// The arm being estimated.
+    pub arm: Arm,
+    /// Estimated per-call latency in microseconds.
+    pub est_us: f64,
+}
+
+/// Operator escape hatch: pin a matrix's route, or clear the pin.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteOverride {
+    /// Serve *all* of this matrix's traffic from one arm — no
+    /// exploration, no flips — until cleared. An inadmissible pin is
+    /// accepted here and fails at execution with the typed
+    /// [`DtansError::InadmissibleRoute`](crate::util::error::DtansError)
+    /// (residency is only knowable against the pinned `LoadedMatrix`).
+    Pin(Arm),
+    /// Return the matrix to learned routing.
+    Clear,
+}
+
+/// Adaptive-routing knobs. `Default` is **disabled**: the service
+/// behaves exactly as static-routing builds did unless a config opts
+/// in.
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptiveConfig {
+    /// Master switch. Off ⇒ [`AdaptiveRouter::decide`] returns `None`
+    /// and the service never consults the router.
+    pub enabled: bool,
+    /// Epsilon: fraction of traffic served by a random non-incumbent
+    /// arm. `0.0` disables exploration entirely — and with it, flips
+    /// (challengers only accumulate observations when explored).
+    pub explore_fraction: f64,
+    /// EWMA smoothing factor α ∈ (0, 1]: `ewma ← α·obs + (1−α)·ewma`.
+    pub ewma_alpha: f64,
+    /// Relative margin a challenger must clear: it counts a "win" only
+    /// while `challenger_ewma < incumbent_ewma · (1 − margin)`.
+    pub hysteresis_margin: f64,
+    /// Consecutive wins required before the route flips.
+    pub hysteresis_k: u32,
+    /// Observations an arm needs before it may challenge at all.
+    pub min_observations: u64,
+    /// Grow the arm space across all kernel variants (`false`: only the
+    /// service's configured variant).
+    pub variant_arms: bool,
+    /// Add forced-serial ([`ParHint::Serial`]) arms per format.
+    pub serial_arms: bool,
+    /// Seed for the exploration RNG (deterministic given request order).
+    pub seed: u64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            enabled: false,
+            explore_fraction: 0.05,
+            ewma_alpha: 0.3,
+            hysteresis_margin: 0.10,
+            hysteresis_k: 3,
+            min_observations: 2,
+            variant_arms: false,
+            serial_arms: false,
+            seed: 0xADA9_7E57,
+        }
+    }
+}
+
+impl AdaptiveConfig {
+    /// Enabled, with everything else at defaults.
+    pub fn enabled() -> AdaptiveConfig {
+        AdaptiveConfig { enabled: true, ..AdaptiveConfig::default() }
+    }
+
+    /// Enabled with exploration off: learned state is consulted but
+    /// never fed — routing is provably identical to the static policy
+    /// (the stress driver's replay oracle runs this config).
+    pub fn zero_exploration() -> AdaptiveConfig {
+        AdaptiveConfig { enabled: true, explore_fraction: 0.0, ..AdaptiveConfig::default() }
+    }
+}
+
+/// One routing decision handed to the execution path.
+#[derive(Debug, Clone, Copy)]
+pub struct RouteDecision {
+    /// The arm to execute on.
+    pub arm: Arm,
+    /// True when this request was an exploration sample.
+    pub explored: bool,
+    /// True when a [`RouteOverride::Pin`] forced the arm.
+    pub pinned: bool,
+}
+
+/// One committed route flip (hysteresis-confirmed).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RouteFlip {
+    /// Matrix whose route flipped.
+    pub matrix: u64,
+    /// Previous incumbent.
+    pub from: Arm,
+    /// New incumbent.
+    pub to: Arm,
+    /// Observation count (router-wide) at flip time — the simulator's
+    /// injected clock for convergence assertions.
+    pub at_observation: u64,
+}
+
+/// Conservation counters: `explored + exploited == routed` always.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RouteCounters {
+    /// Decisions handed out.
+    pub routed: u64,
+    /// Decisions that were exploration samples.
+    pub explored: u64,
+    /// Decisions that rode the incumbent (or a pin).
+    pub exploited: u64,
+    /// Hysteresis-confirmed route flips.
+    pub flips: u64,
+}
+
+/// Per-arm EWMA state.
+#[derive(Debug, Clone, Copy)]
+struct ArmState {
+    arm: Arm,
+    /// Current latency estimate (µs); seeded or +∞ until observed.
+    ewma_us: f64,
+    /// Real observations folded in (seeds don't count).
+    observations: u64,
+}
+
+/// Per-matrix routing state.
+#[derive(Debug, Clone)]
+struct MatrixState {
+    arms: Vec<ArmState>,
+    incumbent: Arm,
+    pinned: Option<Arm>,
+    /// Current challenger and its consecutive-win streak.
+    challenger: Option<(Arm, u32)>,
+    seed_source: SeedSource,
+}
+
+impl MatrixState {
+    fn arm_mut(&mut self, arm: Arm) -> Option<&mut ArmState> {
+        self.arms.iter_mut().find(|s| s.arm == arm)
+    }
+
+    fn ewma_of(&self, arm: Arm) -> Option<f64> {
+        self.arms.iter().find(|s| s.arm == arm).map(|s| s.ewma_us)
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    matrices: std::collections::BTreeMap<u64, MatrixState>,
+    rng: Option<Xoshiro256>,
+    flips: Vec<RouteFlip>,
+    counters: RouteCounters,
+    /// Total observations fed in (the flip-trace clock).
+    observations: u64,
+}
+
+/// The per-matrix online cost model + epsilon-greedy router.
+/// Construction is cheap; all state is behind one mutex (arm lists are
+/// a handful of entries, decisions are a few comparisons).
+pub struct AdaptiveRouter {
+    cfg: AdaptiveConfig,
+    metrics: Arc<Metrics>,
+    inner: Mutex<Inner>,
+}
+
+impl AdaptiveRouter {
+    /// Build a router. `metrics` receives `route_flips` /
+    /// `explore_requests` counters and the standalone `Routed` flip
+    /// spans.
+    pub fn new(cfg: AdaptiveConfig, metrics: Arc<Metrics>) -> AdaptiveRouter {
+        AdaptiveRouter {
+            cfg,
+            metrics,
+            inner: Mutex::new(Inner {
+                rng: Some(Xoshiro256::seeded(cfg.seed)),
+                ..Default::default()
+            }),
+        }
+    }
+
+    /// The configuration this router runs.
+    pub fn config(&self) -> &AdaptiveConfig {
+        &self.cfg
+    }
+
+    /// Whether the adaptive layer is live at all.
+    pub fn is_enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// Register a matrix: build its arm list from the admissible
+    /// formats (residency-filtered by the caller — see
+    /// [`RoutePolicy::admissible_for`](super::router::RoutePolicy::admissible_for)),
+    /// fold in any seeded estimates, and install the static choice as
+    /// incumbent. Re-registering replaces prior state.
+    pub fn register_matrix(
+        &self,
+        matrix: u64,
+        static_choice: FormatChoice,
+        admissible: &[FormatChoice],
+        base_variant: KernelVariant,
+        seeds: &[ArmSeed],
+        source: SeedSource,
+    ) {
+        if !self.cfg.enabled {
+            return;
+        }
+        let variants: Vec<KernelVariant> = if self.cfg.variant_arms {
+            KernelVariant::ALL.to_vec()
+        } else {
+            vec![base_variant]
+        };
+        let pars: Vec<ParHint> = if self.cfg.serial_arms {
+            vec![ParHint::Engine, ParHint::Serial]
+        } else {
+            vec![ParHint::Engine]
+        };
+        let mut arms = Vec::new();
+        for &choice in admissible {
+            for &variant in &variants {
+                for &par in &pars {
+                    let arm = Arm { choice, variant, par };
+                    let seed = seeds.iter().find(|s| s.arm == arm).map(|s| s.est_us);
+                    arms.push(ArmState {
+                        arm,
+                        ewma_us: seed.unwrap_or(f64::INFINITY),
+                        observations: 0,
+                    });
+                }
+            }
+        }
+        let incumbent = Arm { choice: static_choice, variant: base_variant, par: ParHint::Engine };
+        if !arms.iter().any(|s| s.arm == incumbent) {
+            // The static choice must be servable; a caller that filtered
+            // it out still gets a consistent (single-arm) state.
+            arms.push(ArmState { arm: incumbent, ewma_us: f64::INFINITY, observations: 0 });
+        }
+        self.inner.lock().unwrap().matrices.insert(
+            matrix,
+            MatrixState { arms, incumbent, pinned: None, challenger: None, seed_source: source },
+        );
+    }
+
+    /// Remove a matrix from adaptation. The service calls this on
+    /// `append`: an overlaid matrix's composite operator is the only
+    /// correct execution surface (its base encoding is stale), so the
+    /// registered route must stand until a future re-registration.
+    pub fn retire(&self, matrix: u64) {
+        self.inner.lock().unwrap().matrices.remove(&matrix);
+    }
+
+    /// Apply or clear an operator pin.
+    pub fn set_override(&self, matrix: u64, ov: RouteOverride) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(st) = inner.matrices.get_mut(&matrix) {
+            st.pinned = match ov {
+                RouteOverride::Pin(arm) => Some(arm),
+                RouteOverride::Clear => None,
+            };
+            st.challenger = None;
+        }
+    }
+
+    /// Route one request. `None` when disabled or the matrix is
+    /// unregistered/retired — the caller then executes the registered
+    /// operator exactly as static-routing builds did.
+    pub fn decide(&self, matrix: u64) -> Option<RouteDecision> {
+        if !self.cfg.enabled {
+            return None;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let mut rng = inner.rng.take().expect("router rng");
+        let decision = match inner.matrices.get(&matrix) {
+            None => None,
+            Some(st) => {
+                if let Some(arm) = st.pinned {
+                    Some(RouteDecision { arm, explored: false, pinned: true })
+                } else if st.arms.len() > 1 && rng.chance(self.cfg.explore_fraction) {
+                    let others: Vec<Arm> = st
+                        .arms
+                        .iter()
+                        .map(|s| s.arm)
+                        .filter(|a| *a != st.incumbent)
+                        .collect();
+                    let arm = others[rng.below_usize(others.len())];
+                    Some(RouteDecision { arm, explored: true, pinned: false })
+                } else {
+                    Some(RouteDecision { arm: st.incumbent, explored: false, pinned: false })
+                }
+            }
+        };
+        inner.rng = Some(rng);
+        if let Some(d) = &decision {
+            inner.counters.routed += 1;
+            if d.explored {
+                inner.counters.explored += 1;
+                self.metrics.explore_requests.fetch_add(1, Ordering::Relaxed);
+            } else {
+                inner.counters.exploited += 1;
+            }
+            self.metrics.routed_requests.fetch_add(1, Ordering::Relaxed);
+        }
+        decision
+    }
+
+    /// Feed one observed kernel latency back into the cost model, then
+    /// run the hysteresis check. Observations for retired/unknown
+    /// matrices or arms are dropped silently (a request may complete
+    /// after its matrix was retired by an append).
+    pub fn observe(&self, matrix: u64, arm: Arm, latency_us: f64) {
+        if !self.cfg.enabled || !latency_us.is_finite() || latency_us < 0.0 {
+            return;
+        }
+        let alpha = self.cfg.ewma_alpha.clamp(0.0, 1.0);
+        let mut inner = self.inner.lock().unwrap();
+        inner.observations += 1;
+        let now = inner.observations;
+        let Some(st) = inner.matrices.get_mut(&matrix) else { return };
+        let Some(s) = st.arm_mut(arm) else { return };
+        s.ewma_us = if s.observations == 0 || !s.ewma_us.is_finite() {
+            latency_us
+        } else {
+            alpha * latency_us + (1.0 - alpha) * s.ewma_us
+        };
+        s.observations += 1;
+
+        if st.pinned.is_some() {
+            return; // pinned routes never flip
+        }
+        // Hysteresis: the best sufficiently-observed arm must beat the
+        // incumbent by the margin for K consecutive observations.
+        let incumbent_ewma = st.ewma_of(st.incumbent).unwrap_or(f64::INFINITY);
+        let bar = incumbent_ewma * (1.0 - self.cfg.hysteresis_margin);
+        let best = st
+            .arms
+            .iter()
+            .filter(|s| s.arm != st.incumbent && s.observations >= self.cfg.min_observations)
+            .filter(|s| s.ewma_us < bar)
+            .min_by(|a, b| a.ewma_us.total_cmp(&b.ewma_us))
+            .map(|s| s.arm);
+        match best {
+            None => st.challenger = None,
+            Some(challenger) => {
+                let wins = match st.challenger {
+                    Some((c, w)) if c == challenger => w + 1,
+                    _ => 1,
+                };
+                if wins >= self.cfg.hysteresis_k {
+                    let from = st.incumbent;
+                    st.incumbent = challenger;
+                    st.challenger = None;
+                    inner.flips.push(RouteFlip {
+                        matrix,
+                        from,
+                        to: challenger,
+                        at_observation: now,
+                    });
+                    inner.counters.flips += 1;
+                    self.metrics.record_route_flip(
+                        matrix,
+                        from.choice.tag(),
+                        challenger.choice.tag(),
+                        "hysteresis",
+                    );
+                } else {
+                    st.challenger = Some((challenger, wins));
+                }
+            }
+        }
+    }
+
+    /// Current incumbent arm of a matrix.
+    pub fn incumbent(&self, matrix: u64) -> Option<Arm> {
+        self.inner.lock().unwrap().matrices.get(&matrix).map(|s| s.incumbent)
+    }
+
+    /// Current EWMA estimate (µs) for one arm of a matrix.
+    pub fn estimate_us(&self, matrix: u64, arm: Arm) -> Option<f64> {
+        self.inner.lock().unwrap().matrices.get(&matrix).and_then(|s| s.ewma_of(arm))
+    }
+
+    /// Where this matrix's estimates were seeded from.
+    pub fn seed_source(&self, matrix: u64) -> Option<SeedSource> {
+        self.inner.lock().unwrap().matrices.get(&matrix).map(|s| s.seed_source)
+    }
+
+    /// The admissible arms of a matrix (empty when unregistered).
+    pub fn admissible_arms(&self, matrix: u64) -> Vec<Arm> {
+        self.inner
+            .lock()
+            .unwrap()
+            .matrices
+            .get(&matrix)
+            .map(|s| s.arms.iter().map(|a| a.arm).collect())
+            .unwrap_or_default()
+    }
+
+    /// Union of admissible format tags across every registered matrix —
+    /// the stress driver's routing-conservation oracle checks executed
+    /// tags against this set.
+    pub fn admissible_tag_union(&self) -> Vec<&'static str> {
+        let inner = self.inner.lock().unwrap();
+        let mut tags: Vec<&'static str> = inner
+            .matrices
+            .values()
+            .flat_map(|s| s.arms.iter().map(|a| a.arm.choice.tag()))
+            .collect();
+        tags.sort_unstable();
+        tags.dedup();
+        tags
+    }
+
+    /// The committed flip trace, in order.
+    pub fn flips(&self) -> Vec<RouteFlip> {
+        self.inner.lock().unwrap().flips.clone()
+    }
+
+    /// Conservation counters (`explored + exploited == routed`).
+    pub fn counters(&self) -> RouteCounters {
+        self.inner.lock().unwrap().counters
+    }
+}
+
+/// Seed arm estimates from the GPU execution-model simulator: the
+/// CSR-walk formats get the best baseline kernel's time, CSR-dtANS the
+/// fused decode kernel's. Cheap (analytic model, no kernel runs) —
+/// the middle rung of the seeding ladder.
+pub fn sim_seeds(csr: &Csr, enc: &CsrDtans, admissible: &[FormatChoice]) -> Vec<ArmSeed> {
+    let dev = GpuModel::RTX5090;
+    let inp = SimInput { csr, sell: None, enc: Some(enc), precision: enc.precision };
+    let (_, base) = best_baseline(&inp, &dev, true);
+    let dtans = simulate(KernelKind::CsrDtans, &inp, &dev, true);
+    admissible
+        .iter()
+        .map(|&choice| ArmSeed {
+            arm: Arm::format(choice),
+            est_us: match choice {
+                FormatChoice::CsrDtans => dtans.time_us,
+                FormatChoice::Csr | FormatChoice::BlockedEll => base.time_us,
+            },
+        })
+        .collect()
+}
+
+/// Seed arm estimates from an offline autotune sweep (the top rung):
+/// each evaluated candidate maps onto the admissible format it would
+/// execute as, keeping the fastest estimate per format.
+pub fn autotune_seeds(
+    tune: &crate::autotune::TuneResult,
+    admissible: &[FormatChoice],
+) -> Vec<ArmSeed> {
+    let mut seeds: Vec<ArmSeed> = Vec::new();
+    for (cand, us) in &tune.evaluated {
+        let choice = match cand.kind {
+            KernelKind::CsrScalar | KernelKind::CsrVector | KernelKind::Coo => FormatChoice::Csr,
+            // SELL's balanced slices are this repo's BlockedELL stand-in.
+            KernelKind::Sell => FormatChoice::BlockedEll,
+            KernelKind::CsrDtans => FormatChoice::CsrDtans,
+        };
+        if !admissible.contains(&choice) {
+            continue;
+        }
+        let arm = Arm::format(choice);
+        match seeds.iter_mut().find(|s| s.arm == arm) {
+            Some(s) => s.est_us = s.est_us.min(*us),
+            None => seeds.push(ArmSeed { arm, est_us: *us }),
+        }
+    }
+    seeds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::ObsConfig;
+
+    fn router(cfg: AdaptiveConfig) -> AdaptiveRouter {
+        AdaptiveRouter::new(cfg, Arc::new(Metrics::with_obs(ObsConfig::default())))
+    }
+
+    fn two_arm_router(cfg: AdaptiveConfig) -> (AdaptiveRouter, Arm, Arm) {
+        let r = router(cfg);
+        r.register_matrix(
+            1,
+            FormatChoice::CsrDtans,
+            &[FormatChoice::CsrDtans, FormatChoice::Csr],
+            KernelVariant::default(),
+            &[],
+            SeedSource::Static,
+        );
+        (r, Arm::format(FormatChoice::CsrDtans), Arm::format(FormatChoice::Csr))
+    }
+
+    #[test]
+    fn disabled_router_decides_nothing() {
+        let r = router(AdaptiveConfig::default());
+        r.register_matrix(
+            1,
+            FormatChoice::Csr,
+            &[FormatChoice::Csr],
+            KernelVariant::default(),
+            &[],
+            SeedSource::Static,
+        );
+        assert!(r.decide(1).is_none());
+        assert_eq!(r.counters().routed, 0);
+    }
+
+    #[test]
+    fn zero_exploration_is_exactly_the_static_choice() {
+        let (r, dtans, csr) = two_arm_router(AdaptiveConfig::zero_exploration());
+        for _ in 0..200 {
+            let d = r.decide(1).unwrap();
+            assert_eq!(d.arm, dtans);
+            assert!(!d.explored);
+            // Only the incumbent is ever observed — the challenger can
+            // never accumulate the observations hysteresis demands.
+            r.observe(1, d.arm, 500.0);
+        }
+        let c = r.counters();
+        assert_eq!((c.routed, c.explored, c.exploited, c.flips), (200, 0, 200, 0));
+        assert!(r.flips().is_empty());
+        assert_eq!(r.incumbent(1), Some(dtans));
+        // Even with a (stale, seeded-nowhere) fast estimate on the
+        // challenger, zero real observations means zero flips.
+        assert_eq!(r.estimate_us(1, csr), Some(f64::INFINITY));
+    }
+
+    #[test]
+    fn hysteresis_requires_k_consecutive_margin_wins() {
+        let cfg = AdaptiveConfig {
+            explore_fraction: 0.0, // drive observations by hand
+            hysteresis_k: 3,
+            hysteresis_margin: 0.10,
+            min_observations: 2,
+            ..AdaptiveConfig::enabled()
+        };
+        let (r, dtans, csr) = two_arm_router(cfg);
+        r.observe(1, dtans, 1000.0);
+        r.observe(1, dtans, 1000.0);
+        // Challenger at 8% better: inside the 10% margin, never flips.
+        for _ in 0..20 {
+            r.observe(1, csr, 920.0);
+        }
+        assert_eq!(r.incumbent(1), Some(dtans));
+        assert!(r.flips().is_empty());
+        // 40% better: needs exactly K observations past min_observations.
+        r.observe(1, csr, 600.0); // obs pulls EWMA down; win streak 1
+        r.observe(1, csr, 600.0); // streak 2
+        assert_eq!(r.incumbent(1), Some(dtans));
+        r.observe(1, csr, 600.0); // streak 3 == K: flip
+        assert_eq!(r.incumbent(1), Some(csr));
+        let flips = r.flips();
+        assert_eq!(flips.len(), 1);
+        assert_eq!((flips[0].matrix, flips[0].from, flips[0].to), (1, dtans, csr));
+        assert_eq!(r.counters().flips, 1);
+    }
+
+    #[test]
+    fn interrupted_streaks_reset() {
+        let cfg = AdaptiveConfig {
+            explore_fraction: 0.0,
+            hysteresis_k: 3,
+            hysteresis_margin: 0.10,
+            min_observations: 1,
+            ewma_alpha: 1.0, // each observation replaces the estimate
+            ..AdaptiveConfig::enabled()
+        };
+        let (r, dtans, csr) = two_arm_router(cfg);
+        r.observe(1, dtans, 1000.0);
+        r.observe(1, csr, 500.0); // streak 1
+        r.observe(1, csr, 500.0); // streak 2
+        r.observe(1, csr, 990.0); // inside margin: streak resets
+        r.observe(1, csr, 500.0); // streak 1
+        r.observe(1, csr, 500.0); // streak 2
+        assert_eq!(r.incumbent(1), Some(dtans));
+        r.observe(1, csr, 500.0); // streak 3: flip
+        assert_eq!(r.incumbent(1), Some(csr));
+        assert_eq!(r.flips().len(), 1);
+    }
+
+    #[test]
+    fn exploration_conservation_holds() {
+        let cfg = AdaptiveConfig { explore_fraction: 0.5, ..AdaptiveConfig::enabled() };
+        let (r, _, _) = two_arm_router(cfg);
+        for _ in 0..500 {
+            let d = r.decide(1).unwrap();
+            r.observe(1, d.arm, 100.0);
+        }
+        let c = r.counters();
+        assert_eq!(c.routed, 500);
+        assert_eq!(c.explored + c.exploited, c.routed);
+        // ε = 0.5 over 500 draws: both branches must actually occur.
+        assert!(c.explored > 50 && c.exploited > 50, "{c:?}");
+    }
+
+    #[test]
+    fn pinned_routes_never_explore_or_flip() {
+        let cfg = AdaptiveConfig {
+            explore_fraction: 1.0, // would explore every request
+            min_observations: 1,
+            hysteresis_k: 1,
+            ..AdaptiveConfig::enabled()
+        };
+        let (r, dtans, csr) = two_arm_router(cfg);
+        r.set_override(1, RouteOverride::Pin(csr));
+        for _ in 0..50 {
+            let d = r.decide(1).unwrap();
+            assert!(d.pinned && !d.explored);
+            assert_eq!(d.arm, csr);
+            r.observe(1, csr, 10.0);
+            r.observe(1, dtans, 10_000.0);
+        }
+        assert!(r.flips().is_empty(), "pinned matrices must not flip");
+        r.set_override(1, RouteOverride::Clear);
+        assert!(r.decide(1).unwrap().explored || r.decide(1).unwrap().explored);
+    }
+
+    #[test]
+    fn seeds_order_arms_before_any_observation() {
+        let (r, dtans, csr) = two_arm_router(AdaptiveConfig::zero_exploration());
+        // Re-register with sim-style seeds: estimates land in the EWMA.
+        r.register_matrix(
+            1,
+            FormatChoice::CsrDtans,
+            &[FormatChoice::CsrDtans, FormatChoice::Csr],
+            KernelVariant::default(),
+            &[ArmSeed { arm: dtans, est_us: 80.0 }, ArmSeed { arm: csr, est_us: 120.0 }],
+            SeedSource::Sim,
+        );
+        assert_eq!(r.estimate_us(1, dtans), Some(80.0));
+        assert_eq!(r.estimate_us(1, csr), Some(120.0));
+        assert_eq!(r.seed_source(1), Some(SeedSource::Sim));
+        // A seed is advisory: the first real observation replaces it.
+        r.observe(1, dtans, 10.0);
+        assert_eq!(r.estimate_us(1, dtans), Some(10.0));
+    }
+
+    #[test]
+    fn sim_seeds_cover_admissible_formats() {
+        use crate::format::csr_dtans::EncodeOptions;
+        use crate::matrix::gen::structured::banded;
+        let m = banded(2000, 2);
+        let enc = CsrDtans::encode(&m, &EncodeOptions::default()).unwrap();
+        let adm = [FormatChoice::Csr, FormatChoice::CsrDtans];
+        let seeds = sim_seeds(&m, &enc, &adm);
+        assert_eq!(seeds.len(), 2);
+        assert!(seeds.iter().all(|s| s.est_us > 0.0 && s.est_us.is_finite()));
+    }
+
+    #[test]
+    fn retire_removes_state_and_decide_returns_none() {
+        let (r, _, _) = two_arm_router(AdaptiveConfig::enabled());
+        assert!(r.decide(1).is_some());
+        r.retire(1);
+        assert!(r.decide(1).is_none());
+        assert!(r.admissible_arms(1).is_empty());
+        // Late observations for a retired matrix are dropped silently.
+        r.observe(1, Arm::format(FormatChoice::Csr), 1.0);
+    }
+
+    #[test]
+    fn variant_and_serial_dimensions_expand_the_arm_space() {
+        let cfg =
+            AdaptiveConfig { variant_arms: true, serial_arms: true, ..AdaptiveConfig::enabled() };
+        let r = router(cfg);
+        r.register_matrix(
+            7,
+            FormatChoice::Csr,
+            &[FormatChoice::Csr, FormatChoice::CsrDtans],
+            KernelVariant::default(),
+            &[],
+            SeedSource::Static,
+        );
+        // 2 formats × 3 variants × 2 par hints.
+        assert_eq!(r.admissible_arms(7).len(), 12);
+        assert_eq!(r.admissible_tag_union(), vec!["csr", "csr_dtans"]);
+    }
+}

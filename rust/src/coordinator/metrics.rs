@@ -114,6 +114,19 @@ pub struct Metrics {
     /// Gauge: per-block imbalance (slowest/mean block micros, ×1000) of
     /// the most recent timed engine call. 1000 = perfectly balanced.
     pub block_imbalance_milli: AtomicU64,
+    /// Requests that received an adaptive-routing decision
+    /// ([`crate::coordinator::adaptive::AdaptiveRouter::decide`]). With
+    /// adaptation off (the default) this stays 0.
+    pub routed_requests: AtomicU64,
+    /// Routed requests that were epsilon-greedy exploration samples
+    /// (served by a random non-incumbent arm). The conservation identity
+    /// `explored + exploited == routed` holds on the router's own
+    /// counters; this mirrors the explored side for exposition.
+    pub explore_requests: AtomicU64,
+    /// Hysteresis-confirmed route flips committed by the adaptive
+    /// router. Each one also stamps a standalone
+    /// [`Stage::Routed`] span.
+    pub route_flips: AtomicU64,
     latencies_us: Mutex<LogHistogram>,
     cold_load_us: Mutex<LogHistogram>,
     solve_iters: Mutex<LogHistogram>,
@@ -404,6 +417,23 @@ impl Metrics {
         );
     }
 
+    /// Record one committed adaptive route flip: bumps
+    /// [`Metrics::route_flips`] and stamps a standalone
+    /// [`Stage::Routed`] span (own trace id, terminal-free — the same
+    /// pattern as cold loads and compactions, so the span-conservation
+    /// oracle ignores it).
+    pub fn record_route_flip(
+        &self,
+        matrix: u64,
+        from: &'static str,
+        to: &'static str,
+        reason: &'static str,
+    ) {
+        self.route_flips.fetch_add(1, Ordering::Relaxed);
+        let span = self.tracer.begin();
+        self.tracer.record(span, Stage::Routed { matrix, from, to, reason });
+    }
+
     /// Record one cold load without a matrix id (kept for callers that
     /// predate the tracing layer; the span carries id 0).
     pub fn record_cold_load(&self, micros: u64) {
@@ -557,7 +587,8 @@ impl Metrics {
              p50={}µs p99={}µs max={}µs \
              store_hits={} store_misses={} evictions={} persist_failures={} cold_loads={} \
              acquires={} cold_p50={}µs cold_p99={}µs qwait_p50={}µs qwait_p99={}µs \
-             deltas_appended={} overlay_nnz={} compactions={} compaction_failures={}",
+             deltas_appended={} overlay_nnz={} compactions={} compaction_failures={} \
+             routed={} explored={} route_flips={}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -585,6 +616,9 @@ impl Metrics {
             self.overlay_nnz.load(Ordering::Relaxed),
             self.compactions.load(Ordering::Relaxed),
             self.compaction_failures.load(Ordering::Relaxed),
+            self.routed_requests.load(Ordering::Relaxed),
+            self.explore_requests.load(Ordering::Relaxed),
+            self.route_flips.load(Ordering::Relaxed),
         );
         let bm = self.block_max_summary();
         if bm.count > 0 {

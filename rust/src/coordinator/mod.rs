@@ -8,12 +8,20 @@
 //! pool. Matrix lifetime and residency live one layer down in the tiered
 //! store ([`crate::store`]); iterative solves ([`crate::solver`]) run
 //! through [`service::SpmvService::solve`] under a single store pin.
+//! Per-matrix routes are static by default ([`router::RoutePolicy`]) and
+//! optionally learned online by the [`adaptive`] bandit router
+//! (`docs/ROUTING.md`).
 
+pub mod adaptive;
 pub mod admission;
 pub mod metrics;
 pub mod router;
 pub mod service;
 
+pub use adaptive::{
+    AdaptiveConfig, AdaptiveRouter, Arm, ArmSeed, ParHint, RouteCounters, RouteDecision,
+    RouteFlip, RouteOverride, SeedSource,
+};
 pub use admission::{AdmissionConfig, AdmissionQueue, Priority, QuotaConfig, SubmitOptions};
 pub use metrics::{FormatSummary, LatencySummary, Metrics, SolverSummary};
 pub use router::{FormatChoice, RoutePolicy};

@@ -131,6 +131,15 @@ impl RoutePolicy {
     /// is never chosen here: the row-length statistics it needs require
     /// the decoded structure, and artifact-registered matrices keep no
     /// CSR original to build it from.
+    ///
+    /// For the same reason, any *re*-routing layer on top (the adaptive
+    /// router, `docs/ROUTING.md`) must not offer such a matrix a
+    /// CSR-walk arm at all: use [`RoutePolicy::admissible_for`] to build
+    /// the candidate set, and
+    /// [`LoadedMatrix::operator_for_choice`](crate::store::LoadedMatrix::operator_for_choice)
+    /// turns a violation into the typed
+    /// [`DtansError::InadmissibleRoute`] instead of a generic service
+    /// error.
     pub fn choose_encoded(&self, enc: &CsrDtans) -> FormatChoice {
         if enc.nnz < self.min_nnz {
             return FormatChoice::Csr;
@@ -142,6 +151,38 @@ impl RoutePolicy {
             FormatChoice::CsrDtans
         } else {
             FormatChoice::Csr
+        }
+    }
+
+    /// The formats a matrix can be *re*-routed to, given its residency —
+    /// the admissible-arm computation of the adaptive router
+    /// (`docs/ROUTING.md`). Residency, not policy: the latent gap this
+    /// closes is that [`RoutePolicy::choose_encoded`] already knows an
+    /// artifact-registered matrix keeps no CSR original, but nothing
+    /// stopped a re-routing layer from picking a CSR-requiring choice
+    /// later anyway.
+    ///
+    /// * An **overlaid** (mutated) matrix admits only its registered
+    ///   route: the composite overlay operator is the one correct
+    ///   execution surface (its base encoding is stale until
+    ///   compaction).
+    /// * Without a resident CSR original, the CSR-walk formats
+    ///   ([`FormatChoice::Csr`], [`FormatChoice::BlockedEll`]) are
+    ///   inadmissible; CSR-dtANS always is (the encoding is what the
+    ///   store holds).
+    /// * With one, every format is admissible.
+    pub fn admissible_for(
+        registered: FormatChoice,
+        csr_resident: bool,
+        overlaid: bool,
+    ) -> Vec<FormatChoice> {
+        if overlaid {
+            return vec![registered];
+        }
+        if csr_resident {
+            vec![FormatChoice::Csr, FormatChoice::CsrDtans, FormatChoice::BlockedEll]
+        } else {
+            vec![FormatChoice::CsrDtans]
         }
     }
 
@@ -264,6 +305,22 @@ mod tests {
         let small = banded(100, 2);
         let small_enc = CsrDtans::encode(&small, &opts).unwrap();
         assert_eq!(p.choose(&small, &small_enc, &opts), FormatChoice::Csr);
+    }
+
+    #[test]
+    fn admissible_arms_consult_residency() {
+        // Full residency: every format is re-routable.
+        let all = RoutePolicy::admissible_for(FormatChoice::Csr, true, false);
+        assert_eq!(all.len(), 3);
+        // Artifact-registered (no CSR original): dtANS only — the
+        // choose_encoded gap, closed. A CSR-walk choice must not appear.
+        let enc_only = RoutePolicy::admissible_for(FormatChoice::CsrDtans, false, false);
+        assert_eq!(enc_only, vec![FormatChoice::CsrDtans]);
+        assert!(!enc_only.contains(&FormatChoice::Csr));
+        assert!(!enc_only.contains(&FormatChoice::BlockedEll));
+        // Overlaid: only the registered composite route survives.
+        let overlaid = RoutePolicy::admissible_for(FormatChoice::Csr, true, true);
+        assert_eq!(overlaid, vec![FormatChoice::Csr]);
     }
 
     #[test]

@@ -30,6 +30,17 @@
 //! are recorded per executing `format_tag()`. Everything is std-thread
 //! based.
 //!
+//! Routing is static by default (the registration-time [`RoutePolicy`]
+//! choice). With [`ServiceConfig::adaptive`] enabled, singleton requests
+//! instead consult the [`AdaptiveRouter`] — a per-matrix
+//! latency-learning cost model with epsilon-greedy exploration and
+//! hysteresis-gated route flips (`docs/ROUTING.md`). The adaptive path
+//! times every kernel on the exact arm it routed to and feeds the
+//! latency back ([`AdaptiveRouter::observe`]); coalesced SpMM batches
+//! and whole solves stay on the registered route, and matrices retire
+//! from adaptation on their first [`SpmvService::append`] (the overlaid
+//! composite operator is the only correct execution surface).
+//!
 //! Matrix lifetime is owned by the tiered [`MatrixStore`]
 //! ([`crate::store`]): registration goes through the on-disk artifact
 //! cache (re-registering a known matrix skips encoding), and residency is
@@ -53,6 +64,9 @@
 //! request-level sample carrying its iteration count and outcome (see
 //! `docs/SOLVERS.md`).
 
+use super::adaptive::{
+    sim_seeds, AdaptiveConfig, AdaptiveRouter, ParHint, RouteOverride, SeedSource,
+};
 use super::admission::{AdmissionConfig, AdmissionQueue, SubmitOptions};
 use super::metrics::Metrics;
 use super::router::{FormatChoice, RoutePolicy};
@@ -129,6 +143,10 @@ pub struct ServiceConfig {
     /// traces every request; `sample_one_in: 0` turns the tracer off
     /// entirely (kernels run untimed, spans cost nothing).
     pub obs: ObsConfig,
+    /// Online adaptive routing ([`AdaptiveConfig`], `docs/ROUTING.md`).
+    /// The default is **disabled**: requests execute the registered
+    /// operator exactly as static-routing builds did.
+    pub adaptive: AdaptiveConfig,
 }
 
 impl Default for ServiceConfig {
@@ -143,6 +161,7 @@ impl Default for ServiceConfig {
             store: StoreConfig::default(),
             admission: AdmissionConfig::default(),
             obs: ObsConfig::default(),
+            adaptive: AdaptiveConfig::default(),
         }
     }
 }
@@ -171,6 +190,13 @@ pub struct SpmvService {
     /// request jobs, and whole solves — so decode plans stay hot and
     /// kernel parallelism is centralized under [`ServiceConfig::par`].
     engine: Arc<SpmvEngine>,
+    /// Pool-free serial engine backing [`ParHint::Serial`] arms (and
+    /// nothing else): construction is free, so it exists even when
+    /// adaptation is off.
+    serial_engine: Arc<SpmvEngine>,
+    /// The online routing layer (disabled by default — see
+    /// [`ServiceConfig::adaptive`]).
+    adaptive: Arc<AdaptiveRouter>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     config: ServiceConfig,
 }
@@ -195,14 +221,21 @@ impl SpmvService {
         let queue = Arc::new(AdmissionQueue::new(&config.admission));
         let engine =
             Arc::new(SpmvEngine::new(config.par).with_kernel_variant(config.kernel_variant));
+        let serial_engine =
+            Arc::new(SpmvEngine::serial().with_kernel_variant(config.kernel_variant));
+        let adaptive = Arc::new(AdaptiveRouter::new(config.adaptive, Arc::clone(&metrics)));
 
         let dispatcher = {
             let queue = Arc::clone(&queue);
             let store = Arc::clone(&store);
             let metrics = Arc::clone(&metrics);
             let engine = Arc::clone(&engine);
+            let serial_engine = Arc::clone(&serial_engine);
+            let adaptive = Arc::clone(&adaptive);
             let cfg = config.clone();
-            std::thread::spawn(move || dispatcher_loop(queue, store, metrics, engine, cfg))
+            std::thread::spawn(move || {
+                dispatcher_loop(queue, store, metrics, engine, serial_engine, adaptive, cfg)
+            })
         };
 
         Ok(SpmvService {
@@ -210,20 +243,61 @@ impl SpmvService {
             queue,
             metrics,
             engine,
+            serial_engine,
+            adaptive,
             dispatcher: Some(dispatcher),
             config,
         })
     }
 
     /// Register a matrix: encodes it (or loads its cached artifact),
-    /// routes it, returns its id.
+    /// routes it, returns its id. With adaptation enabled the matrix
+    /// also enters the [`AdaptiveRouter`], its arm estimates seeded from
+    /// the GPU execution-model simulator when a CSR original is resident
+    /// ([`SeedSource::Sim`]; [`SeedSource::Static`] otherwise).
     pub fn register(&self, name: &str, csr: Csr) -> Result<u64> {
-        self.store.register_csr(name, csr)
+        let id = self.store.register_csr(name, csr)?;
+        self.seed_routes(id);
+        Ok(id)
     }
 
     /// Register a matrix straight from a serialized `.dtans` artifact.
+    /// Enters adaptation like [`SpmvService::register`]; the admissible
+    /// arm set is residency-filtered, so a `drop_csr` store keeps such a
+    /// matrix on its dtANS route (no CSR original to serve CSR-walk
+    /// formats from).
     pub fn register_path(&self, name: &str, path: &Path) -> Result<u64> {
-        self.store.register_path(name, path)
+        let id = self.store.register_path(name, path)?;
+        self.seed_routes(id);
+        Ok(id)
+    }
+
+    /// Enter a freshly registered matrix into the adaptive router: the
+    /// admissible arms come from what is resident right now
+    /// ([`LoadedMatrix::admissible_choices`]), and estimates are seeded
+    /// from the analytic GPU model when the CSR original is available.
+    /// No-op when adaptation is disabled.
+    fn seed_routes(&self, id: u64) {
+        if !self.adaptive.is_enabled() {
+            return;
+        }
+        // A failed acquire (raced eviction before the artifact persisted,
+        // etc.) just leaves the matrix unadapted: decide() returns None
+        // and it serves its registered route, which is always correct.
+        let Ok(pinned) = self.store.acquire(id) else { return };
+        let admissible = pinned.admissible_choices();
+        let (seeds, source) = match &pinned.csr {
+            Some(csr) => (sim_seeds(csr, &pinned.enc, &admissible), SeedSource::Sim),
+            None => (Vec::new(), SeedSource::Static),
+        };
+        self.adaptive.register_matrix(
+            id,
+            pinned.choice,
+            &admissible,
+            self.config.kernel_variant,
+            &seeds,
+            source,
+        );
     }
 
     /// Append COO `(row, col, delta)` updates to a registered matrix:
@@ -235,7 +309,31 @@ impl SpmvService {
     /// into a fresh artifact by background compaction once it passes
     /// [`StoreConfig::compact_overlay_nnz`].
     pub fn append(&self, matrix: u64, updates: &[(u32, u32, f64)]) -> Result<u64> {
-        self.store.append(matrix, updates)
+        let version = self.store.append(matrix, updates)?;
+        if !updates.is_empty() {
+            // An overlaid matrix serves only its composite operator (the
+            // base encoding is stale), so it leaves adaptation: decide()
+            // returns None and requests ride the registered route.
+            self.adaptive.retire(matrix);
+        }
+        Ok(version)
+    }
+
+    /// The adaptive routing layer (counters, flip trace, incumbents).
+    pub fn adaptive(&self) -> &Arc<AdaptiveRouter> {
+        &self.adaptive
+    }
+
+    /// Pin (or unpin) a matrix's route — the operator escape hatch
+    /// ([`RouteOverride`], `docs/ROUTING.md`). A pinned arm serves all
+    /// of the matrix's singleton traffic with no exploration and no
+    /// flips; pinning a route the matrix cannot materialize makes its
+    /// requests fail with the typed
+    /// [`DtansError::InadmissibleRoute`](crate::util::error::DtansError)
+    /// rather than silently serving another format. No-op when
+    /// adaptation is disabled or the matrix is unregistered/retired.
+    pub fn pin_route(&self, matrix: u64, ov: RouteOverride) {
+        self.adaptive.set_override(matrix, ov);
     }
 
     /// The service's tiered matrix store (stats, flush, manual evict).
@@ -447,6 +545,8 @@ fn dispatcher_loop(
     // The service-wide engine (shared with `SpmvService::solve`): decode
     // tables / plans stay hot, kernel parallelism lives in one place.
     engine: Arc<SpmvEngine>,
+    serial_engine: Arc<SpmvEngine>,
+    adaptive: Arc<AdaptiveRouter>,
     cfg: ServiceConfig,
 ) {
     let pool = crate::util::threadpool::ThreadPool::new(cfg.workers);
@@ -521,13 +621,19 @@ fn dispatcher_loop(
             // fails every request) and runs the batched kernel.
             let store = Arc::clone(&store);
             let engine = Arc::clone(&engine);
+            let serial_engine = Arc::clone(&serial_engine);
+            let adaptive = Arc::clone(&adaptive);
             let metrics = Arc::clone(&metrics);
-            pool.execute(move || process_batch(&store, &engine, &metrics, batch));
+            pool.execute(move || {
+                process_batch(&store, &engine, &serial_engine, &adaptive, &metrics, batch)
+            });
         } else {
             // Warm per-request path: each job takes its own (cheap) pin.
             for req in batch {
                 let store = Arc::clone(&store);
                 let engine = Arc::clone(&engine);
+                let serial_engine = Arc::clone(&serial_engine);
+                let adaptive = Arc::clone(&adaptive);
                 let metrics = Arc::clone(&metrics);
                 pool.execute(move || {
                     let tracer = metrics.tracer();
@@ -542,8 +648,15 @@ fn dispatcher_loop(
                         }
                         Ok(pinned) => {
                             tracer.record(req.span, Stage::Pinned);
-                            let tag = pinned.op.format_tag();
-                            let result = run_one(&pinned, &engine, &req.x, req.span, &metrics);
+                            let (result, tag) = run_routed(
+                                &pinned,
+                                &engine,
+                                &serial_engine,
+                                &adaptive,
+                                &req.x,
+                                req.span,
+                                &metrics,
+                            );
                             match &result {
                                 Ok(_) => {
                                     let total_us = req.submitted.elapsed().as_micros() as u64;
@@ -572,6 +685,8 @@ fn dispatcher_loop(
 fn process_batch(
     store: &MatrixStore,
     engine: &SpmvEngine,
+    serial_engine: &SpmvEngine,
+    adaptive: &AdaptiveRouter,
     metrics: &Metrics,
     batch: Vec<Request>,
 ) {
@@ -588,6 +703,10 @@ fn process_batch(
             }
         }
         Ok(pinned) if batch.len() > 1 && engine.will_batch_parallel(pinned.nnz, batch.len()) => {
+            // Coalesced batches ride the registered route: one SpMM call
+            // cannot split across per-request arms, and fragmenting the
+            // batch to explore would forfeit the decode amortization the
+            // batch exists for (docs/ROUTING.md documents the tradeoff).
             for req in &batch {
                 tracer.record(req.span, Stage::Pinned);
             }
@@ -601,10 +720,17 @@ fn process_batch(
             // per-multiply fan-out would buy little — while re-dispatching
             // per-request jobs from inside a pool job would require the
             // pool to own an Arc of itself (a self-join hazard on drop).
-            let tag = pinned.op.format_tag();
             for req in batch {
                 tracer.record(req.span, Stage::Pinned);
-                let result = run_one(&pinned, engine, &req.x, req.span, metrics);
+                let (result, tag) = run_routed(
+                    &pinned,
+                    engine,
+                    serial_engine,
+                    adaptive,
+                    &req.x,
+                    req.span,
+                    metrics,
+                );
                 match &result {
                     Ok(_) => {
                         let total_us = req.submitted.elapsed().as_micros() as u64;
@@ -715,6 +841,91 @@ fn run_spmm_batch(
                 let _ = resp.send(Err(e.duplicate()));
             }
         }
+    }
+}
+
+/// One SpMV through the adaptive route. Returns the result **and the
+/// tag of the operator that actually executed** (exploration may serve
+/// a different format than the registered one), so callers charge
+/// latency/failure metrics to the right format family.
+///
+/// When the router declines ([`AdaptiveRouter::decide`] returns `None`:
+/// adaptation disabled, or the matrix unregistered/retired) this is
+/// exactly [`run_one`] on the registered operator — the static-routing
+/// fast path, untimed when the tracer is off. When a decision arrives,
+/// the kernel is *always* timed (the observation feeding the cost
+/// model) on the exact arm it routed to: the decided format's operator
+/// ([`LoadedMatrix::operator_for_choice`]), the decided kernel variant,
+/// and the decided engine ([`ParHint`]).
+///
+/// Inadmissibility: a [`RouteOverride::Pin`] to a route this resident
+/// form cannot serve fails with the typed
+/// [`DtansError::InadmissibleRoute`] (never silently re-routed); a
+/// *learned* decision that residency cannot serve falls back to the
+/// registered operator (the arm list is residency-filtered at
+/// registration, so this only happens when residency changed underneath
+/// — e.g. a cold reload that could not rebuild the CSR original).
+fn run_routed(
+    pinned: &PinnedMatrix,
+    engine: &SpmvEngine,
+    serial_engine: &SpmvEngine,
+    adaptive: &AdaptiveRouter,
+    x: &[f64],
+    span: SpanId,
+    metrics: &Metrics,
+) -> (Result<Vec<f64>>, &'static str) {
+    let mat: &LoadedMatrix = pinned;
+    let registered_tag = mat.op.format_tag();
+    let Some(decision) = adaptive.decide(pinned.id()) else {
+        return (run_one(pinned, engine, x, span, metrics), registered_tag);
+    };
+    let op = match mat.operator_for_choice(pinned.id(), decision.arm.choice) {
+        Ok(op) => op,
+        Err(e) if decision.pinned => return (Err(e), registered_tag),
+        Err(_) => return (run_one(pinned, engine, x, span, metrics), registered_tag),
+    };
+    let eng = match decision.arm.par {
+        ParHint::Engine => engine,
+        ParHint::Serial => serial_engine,
+    };
+    let tag = op.format_tag();
+    let mut y = vec![0.0; mat.nrows];
+    let tracer = metrics.tracer();
+    let t0 = Instant::now();
+    let result = if tracer.is_off() {
+        // Untraced: whole-call timing only (the router's observation).
+        eng.run_variant(op.as_ref(), x, &mut y, decision.arm.variant).map(|_| None)
+    } else {
+        eng.run_timed_variant(op.as_ref(), x, &mut y, decision.arm.variant).map(Some)
+    };
+    let dur_us = t0.elapsed().as_micros() as u64;
+    match result {
+        Ok(timing) => {
+            adaptive.observe(pinned.id(), decision.arm, dur_us as f64);
+            if let Some(timing) = timing {
+                metrics.record_block_timing(timing.min_us, timing.max_us, timing.mean_us);
+                if tag == "csr_dtans" {
+                    metrics.record_decode_rate(
+                        pinned.id(),
+                        mat.enc.size_report().stream as u64,
+                        dur_us,
+                    );
+                }
+                tracer.record(
+                    span,
+                    Stage::Kernel {
+                        format: tag,
+                        blocks: timing.blocks as u32,
+                        min_us: timing.min_us,
+                        max_us: timing.max_us,
+                        mean_us: timing.mean_us,
+                        dur_us,
+                    },
+                );
+            }
+            (Ok(y), tag)
+        }
+        Err(e) => (Err(e), tag),
     }
 }
 
@@ -1032,6 +1243,87 @@ mod tests {
         assert_ne!(after, before);
         assert_eq!(svc.metrics.deltas_appended.load(Ordering::Relaxed), 2);
         assert_eq!(svc.store().version_of(id), Some(1));
+    }
+
+    #[test]
+    fn zero_exploration_adaptive_is_bit_identical_to_static() {
+        // The invariant the stress driver's replay oracle leans on: with
+        // exploration off, every decision is the incumbent — which IS the
+        // registered static choice — so responses are bit-identical to a
+        // service with adaptation disabled.
+        let mut m = banded(500, 3);
+        assign_values(&mut m, ValueDist::FewDistinct(5), &mut Xoshiro256::seeded(21));
+        let xs: Vec<Vec<f64>> = (0..8)
+            .map(|i| (0..500).map(|j| ((i + j) as f64 * 0.01).sin()).collect())
+            .collect();
+        let run = |adaptive: AdaptiveConfig| -> Vec<Vec<f64>> {
+            let svc = SpmvService::start(ServiceConfig { adaptive, ..Default::default() });
+            let id = svc.register("m", m.clone()).unwrap();
+            xs.iter().map(|x| svc.spmv(id, x.clone()).unwrap()).collect()
+        };
+        let static_bits = run(AdaptiveConfig::default());
+        let adaptive_bits = run(AdaptiveConfig::zero_exploration());
+        assert_eq!(static_bits, adaptive_bits);
+    }
+
+    #[test]
+    fn adaptive_service_explores_and_conserves() {
+        let svc = SpmvService::start(ServiceConfig {
+            adaptive: AdaptiveConfig {
+                explore_fraction: 0.5,
+                ..AdaptiveConfig::enabled()
+            },
+            ..Default::default()
+        });
+        let mut m = banded(400, 3);
+        assign_values(&mut m, ValueDist::FewDistinct(4), &mut Xoshiro256::seeded(5));
+        let id = svc.register("m", m.clone()).unwrap();
+        // The CSR original is kept, so all three formats are admissible.
+        assert_eq!(svc.adaptive().admissible_arms(id).len(), 3);
+        let x: Vec<f64> = (0..400).map(|i| (i as f64 * 0.02).cos()).collect();
+        let mut want = vec![0.0; 400];
+        spmv_csr(&m, &x, &mut want).unwrap();
+        for _ in 0..60 {
+            let got = svc.spmv(id, x.clone()).unwrap();
+            crate::util::propcheck::assert_close(&got, &want, 1e-12, 1e-9).unwrap();
+        }
+        let c = svc.adaptive().counters();
+        assert_eq!(c.routed, 60);
+        assert_eq!(c.explored + c.exploited, c.routed);
+        assert!(c.explored > 0, "epsilon 0.5 over 60 requests must explore: {c:?}");
+        assert_eq!(
+            svc.metrics.explore_requests.load(Ordering::Relaxed),
+            c.explored
+        );
+        assert_eq!(svc.metrics.routed_requests.load(Ordering::Relaxed), c.routed);
+    }
+
+    #[test]
+    fn pinned_inadmissible_route_fails_typed() {
+        use super::super::adaptive::Arm;
+        // drop_csr + dtANS route: no CSR original resident, so a pin to
+        // the CSR arm cannot be served — requests must fail with the
+        // typed routing error, not silently ride another format.
+        let svc = SpmvService::start(ServiceConfig {
+            policy: RoutePolicy { min_nnz: 1 << 10, max_size_ratio: 0.9, ..Default::default() },
+            store: StoreConfig { drop_csr: true, ..Default::default() },
+            adaptive: AdaptiveConfig::zero_exploration(),
+            ..Default::default()
+        });
+        let mut m = banded(4000, 2);
+        assign_values(&mut m, ValueDist::Ones, &mut Xoshiro256::seeded(2));
+        let id = svc.register("big", m).unwrap();
+        assert_eq!(svc.format_of(id), Some(FormatChoice::CsrDtans));
+        assert_eq!(svc.adaptive().admissible_arms(id), vec![Arm::format(FormatChoice::CsrDtans)]);
+        svc.pin_route(id, RouteOverride::Pin(Arm::format(FormatChoice::Csr)));
+        let err = svc.spmv(id, vec![1.0; 4000]).unwrap_err();
+        assert!(
+            matches!(err, DtansError::InadmissibleRoute { matrix, tag: "csr" } if matrix == id),
+            "{err}"
+        );
+        // Clearing the pin restores learned (here: incumbent) routing.
+        svc.pin_route(id, RouteOverride::Clear);
+        assert_eq!(svc.spmv(id, vec![1.0; 4000]).unwrap().len(), 4000);
     }
 
     #[test]

@@ -168,6 +168,17 @@ pub fn prometheus_text(m: &Metrics) -> String {
     scalar(&mut out, "dtans_solves_diverged_total", "counter",
         "Solves that ran but did not converge.", c(&m.solves_diverged));
 
+    // Adaptive routing counters (docs/ROUTING.md).
+    scalar(&mut out, "dtans_route_requests_total", "counter",
+        "Requests whose route was decided by the adaptive router.",
+        c(&m.routed_requests));
+    scalar(&mut out, "dtans_route_explore_total", "counter",
+        "Subset of routed: requests sent to a non-incumbent arm to gather latency evidence.",
+        c(&m.explore_requests));
+    scalar(&mut out, "dtans_route_flips_total", "counter",
+        "Hysteresis-confirmed incumbent changes committed by the adaptive router.",
+        c(&m.route_flips));
+
     // Tracer health.
     scalar(&mut out, "dtans_trace_events_recorded_total", "counter",
         "Span events recorded by the tracer.", m.tracer().recorded());
@@ -313,13 +324,15 @@ pub fn metrics_json(m: &Metrics) -> String {
          \"coalesced_requests\":{},\"store_hits\":{},\"store_misses\":{},\"evictions\":{},\
          \"persist_failures\":{},\"cold_loads\":{},\"acquires\":{},\
          \"deltas_appended\":{},\"compactions\":{},\"compaction_failures\":{},\
-         \"solves\":{},\"solves_converged\":{},\"solves_diverged\":{}}}",
+         \"solves\":{},\"solves_converged\":{},\"solves_diverged\":{},\
+         \"routed\":{},\"explored\":{},\"route_flips\":{}}}",
         c(&m.submitted), c(&m.completed), c(&m.failed), c(&m.shed),
         c(&m.quota_rejected), c(&m.expired), c(&m.batches), c(&m.coalesced_batches),
         c(&m.coalesced_requests), c(&m.store_hits), c(&m.store_misses), c(&m.evictions),
         c(&m.persist_failures), c(&m.cold_loads), c(&m.acquires),
         c(&m.deltas_appended), c(&m.compactions), c(&m.compaction_failures),
         c(&m.solves), c(&m.solves_converged), c(&m.solves_diverged),
+        c(&m.routed_requests), c(&m.explore_requests), c(&m.route_flips),
     );
     let _ = write!(
         out,
@@ -423,6 +436,9 @@ mod tests {
             "dtans_store_overlay_nnz",
             "dtans_store_compactions_total",
             "dtans_store_compaction_failures_total",
+            "dtans_route_requests_total",
+            "dtans_route_explore_total",
+            "dtans_route_flips_total",
         ] {
             assert!(text.contains(&format!("# HELP {name} ")), "missing HELP {name}");
             assert!(text.contains(&format!("# TYPE {name} ")), "missing TYPE {name}");
@@ -471,6 +487,7 @@ mod tests {
         assert!(json.starts_with('{') && json.ends_with('}'));
         assert!(json.contains("\"counters\":{\"submitted\":5"));
         assert!(json.contains("\"deltas_appended\":0,\"compactions\":0"));
+        assert!(json.contains("\"routed\":0,\"explored\":0,\"route_flips\":0"));
         assert!(json.contains("\"overlay_nnz\":0"));
         assert!(json.contains("\"queue_wait_us\":{\"count\":1"));
         assert!(json.contains("\"csr_dtans\":{\"completed\":1"));

@@ -11,9 +11,11 @@
 //! ```
 //!
 //! plus standalone [`Stage::ColdLoad`] spans stamped by the store when an
-//! evicted matrix faults back in, and standalone [`Stage::Compaction`]
+//! evicted matrix faults back in, standalone [`Stage::Compaction`]
 //! spans when a background job absorbs a delta overlay into a fresh
-//! artifact ([`crate::store::MatrixStore::compact`]). Exactly one
+//! artifact ([`crate::store::MatrixStore::compact`]), and standalone
+//! [`Stage::Routed`] spans when adaptive routing commits a route flip
+//! (`docs/ROUTING.md`). Exactly one
 //! **terminal** event
 //! ([`Stage::is_terminal`]) closes every chain — the invariant the
 //! span-conservation oracle (testkit stress oracle 4,
@@ -83,6 +85,22 @@ pub enum Stage {
         /// Overlay entries absorbed into the new base.
         nnz_absorbed: u64,
     },
+    /// Adaptive routing committed a route flip for a matrix: the
+    /// hysteresis-confirmed challenger replaced the incumbent
+    /// ([`crate::coordinator::adaptive::AdaptiveRouter`],
+    /// `docs/ROUTING.md`). Standalone span (own trace id, terminal-free
+    /// and non-terminal — like [`Stage::ColdLoad`]), stamped by the
+    /// metrics sink at flip time, not on a request chain.
+    Routed {
+        /// Store id of the re-routed matrix.
+        matrix: u64,
+        /// Format tag the matrix was served from before the flip.
+        from: &'static str,
+        /// Format tag it is served from now.
+        to: &'static str,
+        /// Why the route flipped (`"hysteresis"` for learned flips).
+        reason: &'static str,
+    },
     /// Request served through a coalesced same-matrix SpMM batch; all
     /// members share `batch`.
     Coalesced {
@@ -139,6 +157,7 @@ impl Stage {
             Stage::Pinned => "pinned",
             Stage::ColdLoad { .. } => "cold_load",
             Stage::Compaction { .. } => "compaction",
+            Stage::Routed { .. } => "routed",
             Stage::Coalesced { .. } => "coalesced",
             Stage::Kernel { .. } => "kernel",
             Stage::Completed { .. } => "completed",
@@ -189,6 +208,7 @@ mod tests {
             Stage::Pinned,
             Stage::ColdLoad { matrix: 1, dur_us: 9 },
             Stage::Compaction { matrix: 1, dur_us: 9, nnz_absorbed: 3 },
+            Stage::Routed { matrix: 1, from: "csr_dtans", to: "csr", reason: "hysteresis" },
             Stage::Coalesced { batch: 2, size: 4 },
             Stage::Kernel {
                 format: "csr",

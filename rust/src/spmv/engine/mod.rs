@@ -289,6 +289,22 @@ impl SpmvEngine {
     /// assert_eq!(y, vec![2.0, 3.0]);
     /// ```
     pub fn run(&self, op: &dyn SpmvOperator, x: &[f64], y: &mut [f64]) -> Result<()> {
+        self.run_variant(op, x, y, self.variant)
+    }
+
+    /// [`SpmvEngine::run`] with a per-call kernel-variant override: same
+    /// partitioning and arithmetic, but every block executes `variant`
+    /// instead of the engine's configured default. The adaptive router
+    /// ([`crate::coordinator::adaptive`]) uses this to steer individual
+    /// requests onto challenger variants without rebuilding engines (and
+    /// without perturbing concurrent requests on the default route).
+    pub fn run_variant(
+        &self,
+        op: &dyn SpmvOperator,
+        x: &[f64],
+        y: &mut [f64],
+        variant: KernelVariant,
+    ) -> Result<()> {
         let (nrows, ncols) = op.dims();
         crate::spmv::check_dims(nrows, ncols, x, y)?;
         let prefix = op.cost_prefix();
@@ -302,14 +318,14 @@ impl SpmvEngine {
                     &blocks,
                     y,
                     |b| op.rows_through(b.end),
-                    |b, seg| op.run_range_variant(b, x, seg, self.variant),
+                    |b, seg| op.run_range_variant(b, x, seg, variant),
                 )
             }
             _ => op.run_range_variant(
                 Block { start: 0, end: units, cost: total },
                 x,
                 y,
-                self.variant,
+                variant,
             ),
         }
     }
@@ -327,6 +343,20 @@ impl SpmvEngine {
         x: &[f64],
         y: &mut [f64],
     ) -> Result<BlockTiming> {
+        self.run_timed_variant(op, x, y, self.variant)
+    }
+
+    /// [`SpmvEngine::run_timed`] with a per-call kernel-variant override
+    /// (see [`SpmvEngine::run_variant`]). The adaptive router's feedback
+    /// loop runs this so the latency it learns from is measured on the
+    /// exact arm it routed to.
+    pub fn run_timed_variant(
+        &self,
+        op: &dyn SpmvOperator,
+        x: &[f64],
+        y: &mut [f64],
+        variant: KernelVariant,
+    ) -> Result<BlockTiming> {
         let (nrows, ncols) = op.dims();
         crate::spmv::check_dims(nrows, ncols, x, y)?;
         let prefix = op.cost_prefix();
@@ -342,7 +372,7 @@ impl SpmvEngine {
                     y,
                     &mut times_us,
                     |b| op.rows_through(b.end),
-                    |b, seg| op.run_range_variant(b, x, seg, self.variant),
+                    |b, seg| op.run_range_variant(b, x, seg, variant),
                 )?;
                 Ok(BlockTiming::from_times(&times_us))
             }
@@ -352,7 +382,7 @@ impl SpmvEngine {
                     Block { start: 0, end: units, cost: total },
                     x,
                     y,
-                    self.variant,
+                    variant,
                 )?;
                 let us = t0.elapsed().as_micros() as u64;
                 Ok(BlockTiming { blocks: 1, min_us: us, max_us: us, mean_us: us })

@@ -69,7 +69,7 @@ use crate::matrix::Precision;
 use crate::spmv::operator::SpmvOperator;
 use crate::util::error::{DtansError, Result};
 use loader::Loader;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
@@ -102,6 +102,62 @@ pub struct LoadedMatrix {
     pub overlay: Option<Arc<DeltaOverlay>>,
     /// Monotonically increasing mutation version (0 = never appended to).
     pub version: u64,
+    /// Lazily materialized operators for *alternate* routes (keyed by
+    /// format tag), built the first time the adaptive router
+    /// ([`crate::coordinator::adaptive`]) steers a request onto a format
+    /// other than [`LoadedMatrix::choice`]. Cached per resident form: an
+    /// eviction, cold reload, append, or compaction swaps in a fresh
+    /// `LoadedMatrix` and so naturally invalidates the cache.
+    alt_ops: Mutex<BTreeMap<&'static str, Arc<dyn SpmvOperator>>>,
+}
+
+impl LoadedMatrix {
+    /// The kernel surface for serving this resident form through
+    /// `choice`: the registered operator when `choice` matches the routed
+    /// format, otherwise a lazily built (and cached) alternate operator.
+    ///
+    /// Residency gates admissibility (see
+    /// [`RoutePolicy::admissible_for`] and `docs/ROUTING.md`): a
+    /// CSR-walk format (`csr`, `blocked_ell`) needs the resident CSR
+    /// original, and an overlaid (mutated) matrix serves **only**
+    /// through its composite overlay operator. Violations return the
+    /// typed [`DtansError::InadmissibleRoute`] — `matrix_id` is only
+    /// used to label that error.
+    pub fn operator_for_choice(
+        &self,
+        matrix_id: u64,
+        choice: FormatChoice,
+    ) -> Result<Arc<dyn SpmvOperator>> {
+        if choice == self.choice {
+            // For an overlaid matrix this hands back the composite
+            // overlay operator — the one surface that sees the appended
+            // updates.
+            return Ok(Arc::clone(&self.op));
+        }
+        let tag = choice.tag();
+        if self.overlay.is_some() {
+            // Any re-route of a mutated matrix would serve stale bits.
+            return Err(DtansError::InadmissibleRoute { matrix: matrix_id, tag });
+        }
+        if matches!(choice, FormatChoice::Csr | FormatChoice::BlockedEll)
+            && self.csr.is_none()
+        {
+            return Err(DtansError::InadmissibleRoute { matrix: matrix_id, tag });
+        }
+        let mut cache = self.alt_ops.lock().unwrap();
+        if let Some(op) = cache.get(tag) {
+            return Ok(Arc::clone(op));
+        }
+        let op = RoutePolicy::operator_for(choice, self.csr.as_ref(), &self.enc)?;
+        cache.insert(tag, Arc::clone(&op));
+        Ok(op)
+    }
+
+    /// Routes this resident form can actually serve, given what is in
+    /// RAM right now (delegates to [`RoutePolicy::admissible_for`]).
+    pub fn admissible_choices(&self) -> Vec<FormatChoice> {
+        RoutePolicy::admissible_for(self.choice, self.csr.is_some(), self.overlay.is_some())
+    }
 }
 
 /// Can a matrix registered from a *user-provided* CSR original be evicted
@@ -311,6 +367,7 @@ impl MatrixStore {
             choice,
             overlay: None,
             version: 0,
+            alt_ops: Mutex::new(BTreeMap::new()),
         });
         let artifact = if from_cache {
             sh.artifacts.as_ref().zip(key).map(|(c, k)| c.path_for(&k))
@@ -392,6 +449,7 @@ impl MatrixStore {
             choice,
             overlay: None,
             version: 0,
+            alt_ops: Mutex::new(BTreeMap::new()),
         });
         // The CSR (if kept) was derived by decoding this very artifact, so
         // a cold reload rebuilds it bit-identically at any precision:
@@ -590,6 +648,7 @@ impl MatrixStore {
                 choice: FormatChoice::Csr,
                 overlay: Some(Arc::clone(&overlay)),
                 version: version + 1,
+                alt_ops: Mutex::new(BTreeMap::new()),
             });
             let cost = resident_cost(&new_mat);
             // Commit, unless a concurrent append bumped the version or a
@@ -718,6 +777,7 @@ fn cold_load(sh: &Arc<StoreShared>, id: u64) -> Result<Arc<LoadedMatrix>> {
         choice,
         overlay: None,
         version,
+        alt_ops: Mutex::new(BTreeMap::new()),
     });
     sh.metrics.record_cold_load_for(id, t0.elapsed().as_micros() as u64);
     let cost = resident_cost(&mat);
@@ -806,6 +866,7 @@ fn compact_job(sh: &Arc<StoreShared>, id: u64) {
         choice: FormatChoice::Csr,
         overlay: None,
         version,
+        alt_ops: Mutex::new(BTreeMap::new()),
     });
     let cost = resident_cost(&new_mat);
     // Re-eviction gate: with a persisted artifact the merged entry is
@@ -1164,6 +1225,52 @@ mod tests {
         assert_eq!(store.version_of(id), Some(2));
         assert_eq!(store.metrics().deltas_appended.load(Ordering::Relaxed), 4);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn operator_for_choice_gates_on_residency() {
+        // dtANS-routed with a kept CSR original: every route materializes,
+        // and the alternate operator is cached per resident form.
+        let store = store_with(StoreConfig::default());
+        let id = store.register_csr("m", sample(2000, 12)).unwrap();
+        let p = store.acquire(id).unwrap();
+        assert_eq!(p.choice, FormatChoice::CsrDtans);
+        let csr_op = p.operator_for_choice(id, FormatChoice::Csr).unwrap();
+        assert_eq!(csr_op.format_tag(), "csr");
+        let again = p.operator_for_choice(id, FormatChoice::Csr).unwrap();
+        assert!(Arc::ptr_eq(&csr_op, &again), "alternate operators must be cached");
+        assert_eq!(
+            p.operator_for_choice(id, FormatChoice::BlockedEll).unwrap().format_tag(),
+            "blocked_ell"
+        );
+        drop(p);
+
+        // drop_csr sheds the original: CSR-walk routes become typed errors.
+        let store2 = store_with(StoreConfig { drop_csr: true, ..Default::default() });
+        let id2 = store2.register_csr("n", sample(2000, 13)).unwrap();
+        let p2 = store2.acquire(id2).unwrap();
+        assert!(p2.csr.is_none());
+        assert!(matches!(
+            p2.operator_for_choice(id2, FormatChoice::Csr),
+            Err(DtansError::InadmissibleRoute { matrix, tag: "csr" }) if matrix == id2
+        ));
+        assert_eq!(p2.admissible_choices(), vec![FormatChoice::CsrDtans]);
+        drop(p2);
+
+        // Overlaid matrices serve only their composite operator.
+        let store3 = store_with(StoreConfig::default());
+        let id3 = store3.register_csr("o", sample(300, 14)).unwrap();
+        store3.append(id3, &[(0, 0, 1.0)]).unwrap();
+        let p3 = store3.acquire(id3).unwrap();
+        assert_eq!(
+            p3.operator_for_choice(id3, p3.choice).unwrap().format_tag(),
+            "overlay"
+        );
+        assert!(matches!(
+            p3.operator_for_choice(id3, FormatChoice::CsrDtans),
+            Err(DtansError::InadmissibleRoute { tag: "csr_dtans", .. })
+        ));
+        assert_eq!(p3.admissible_choices(), vec![p3.choice]);
     }
 
     #[test]

@@ -35,6 +35,13 @@
 //!   serial replay on an unbudgeted, never-compacting reference service
 //!   (append version stamps included), metrics counters summing, zero
 //!   leaked pins.
+//! * [`routing_sim`] — the deterministic routing simulator: an
+//!   injected-clock, seeded-latency-oracle harness that replays
+//!   stationary / drifting / bimodal-noisy latency regimes through the
+//!   *real* [`AdaptiveRouter`](crate::coordinator::AdaptiveRouter) (no
+//!   kernels, no threads, no sleeps) and reports convergence step, flip
+//!   trace, and conservation counters — the stability proof behind
+//!   `docs/ROUTING.md`.
 //! * [`zoo`] — curated named fixtures: the pathological shapes (empty
 //!   rows, a single dense row, 1×N, explicit zero values, duplicate-heavy
 //!   COO input, slice-boundary sizes) that previously existed only inline
@@ -48,6 +55,7 @@
 
 pub mod faults;
 pub mod oracle;
+pub mod routing_sim;
 pub mod stress;
 pub mod zoo;
 
@@ -55,6 +63,7 @@ pub use oracle::{
     ConformanceReport, MiscombinedOperator, Mismatch, MismatchKind, OracleConfig,
     PerturbedOperator,
 };
+pub use routing_sim::{run_routing_sim, ArmProfile, LatencyOracle, Regime, SimConfig, SimOutcome};
 pub use stress::{run_stress, StressConfig, StressReport};
 
 /// Deterministic request/input vector: `n` values in `[-0.5, 0.5)` from

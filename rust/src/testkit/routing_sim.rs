@@ -1,0 +1,486 @@
+//! Deterministic routing simulator: the stability proof for the
+//! [`AdaptiveRouter`](crate::coordinator::AdaptiveRouter).
+//!
+//! Adaptive routing is a feedback loop (decide → execute → observe →
+//! maybe flip), and feedback loops have failure modes that unit tests
+//! on single methods cannot exhibit: failure to converge onto the best
+//! arm, route *flapping* under noisy latencies, exploration samples
+//! leaking into the conservation counters. This module closes that gap
+//! without ever running a kernel:
+//!
+//! * **Injected clock.** There are no sleeps and no wall-clock reads.
+//!   Time is the router's own observation counter — one simulated
+//!   request per step, and [`RouteFlip::at_observation`] is the clock
+//!   stamp every convergence assertion reads.
+//! * **Seeded latency oracle.** [`LatencyOracle`] synthesizes per-arm
+//!   latencies from an [`ArmProfile`] (base cost, per-step drift,
+//!   uniform jitter, periodic spikes) using one seeded
+//!   [`Xoshiro256`] stream *per arm*, so an arm's k-th sample is
+//!   identical no matter how draws interleave across arms. An optional
+//!   mid-run **reversal** swaps the arms' base costs at a chosen step
+//!   (the regime the incumbent was learned under stops being true).
+//! * **The real router.** [`run_routing_sim`] drives an actual
+//!   [`AdaptiveRouter`] — same EWMA, same hysteresis, same counters the
+//!   service uses — through the synthetic trace and returns a
+//!   [`SimOutcome`]: the full decision trace, the flip trace, the
+//!   conservation counters, the convergence step, and the
+//!   post-convergence p50 next to the best static arm's p50.
+//!
+//! Three canned regimes ([`Regime`]) cover the interesting dynamics:
+//! `Stationary` (a dtANS-hostile matrix where the static choice is
+//! simply wrong), `Drifting` (the incumbent degrades linearly until it
+//! loses), and `BimodalNoisy` (heavy jitter plus periodic latency
+//! spikes on both arms — the flap-inducing case hysteresis exists
+//! for). Everything is seeded: the same [`SimConfig`] always produces
+//! the same [`SimOutcome`], bit for bit, so assertions like "exactly
+//! one flip, at observation ≤ 200" are stable in CI.
+
+use crate::coordinator::adaptive::{
+    AdaptiveConfig, AdaptiveRouter, Arm, RouteCounters, RouteFlip, SeedSource,
+};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::router::FormatChoice;
+use crate::obs::ObsConfig;
+use crate::spmv::engine::KernelVariant;
+use crate::util::rng::Xoshiro256;
+use std::sync::Arc;
+
+/// The single simulated matrix id.
+const SIM_MATRIX: u64 = 1;
+
+/// Latency-generating profile for one arm.
+#[derive(Debug, Clone, Copy)]
+pub struct ArmProfile {
+    /// The arm this profile describes.
+    pub arm: Arm,
+    /// Baseline latency (µs).
+    pub base_us: f64,
+    /// Linear drift: added as `drift_us_per_step · step` (models an
+    /// incumbent that degrades as the workload shifts).
+    pub drift_us_per_step: f64,
+    /// Uniform jitter half-width: each sample adds `U[-j, j)` µs.
+    pub jitter_us: f64,
+    /// Every Nth sample of this arm spikes (`0` = never) — the bimodal
+    /// tail (an eviction, a page fault, a neighbor burst).
+    pub spike_every: u64,
+    /// Spike magnitude (µs), added on spiking samples.
+    pub spike_us: f64,
+}
+
+impl ArmProfile {
+    /// A flat profile: constant base cost with a little jitter.
+    pub fn flat(arm: Arm, base_us: f64, jitter_us: f64) -> ArmProfile {
+        ArmProfile { arm, base_us, drift_us_per_step: 0.0, jitter_us, spike_every: 0, spike_us: 0.0 }
+    }
+}
+
+/// Canned latency regimes (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Regime {
+    /// dtANS-hostile: the static choice (dtANS) is 1.6× slower than the
+    /// CSR baseline and stays that way. The router must converge to CSR.
+    Stationary,
+    /// The incumbent starts fastest but degrades linearly until the flat
+    /// challenger wins. Exactly the case static routing can never fix.
+    Drifting,
+    /// Heavy jitter plus periodic spikes on both arms, with a 2× true
+    /// gap underneath. Hysteresis must find the gap without flapping.
+    BimodalNoisy,
+}
+
+/// One simulator run: the arm profiles, the routing config under test,
+/// and the trace shape.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Router configuration under test.
+    pub adaptive: AdaptiveConfig,
+    /// Latency profile per arm (the arm list defines the admissible
+    /// set; arms should be [`Arm::format`]-shaped unless
+    /// `adaptive.variant_arms` / `serial_arms` expand the space).
+    pub profiles: Vec<ArmProfile>,
+    /// The static `RoutePolicy` choice — the incumbent at step 0.
+    pub static_choice: FormatChoice,
+    /// Simulated request count (one decide/observe pair per step).
+    pub steps: u64,
+    /// Swap the arms' base costs from this step on (`None` = never):
+    /// the learned regime reverses mid-run and the router must follow.
+    pub reversal_at: Option<u64>,
+    /// Seed for the latency oracle's per-arm streams (independent of
+    /// the router's exploration seed).
+    pub oracle_seed: u64,
+}
+
+impl SimConfig {
+    /// Build the canned [`Regime`] scenarios. In every regime the
+    /// static choice is dtANS and the router explores 20% of traffic;
+    /// hysteresis stays at the production defaults (10% margin, K=3,
+    /// 2 observations minimum).
+    pub fn regime(regime: Regime) -> SimConfig {
+        let adaptive = AdaptiveConfig { explore_fraction: 0.2, ..AdaptiveConfig::enabled() };
+        let dtans = Arm::format(FormatChoice::CsrDtans);
+        let csr = Arm::format(FormatChoice::Csr);
+        let (profiles, steps) = match regime {
+            Regime::Stationary => (
+                vec![ArmProfile::flat(dtans, 400.0, 20.0), ArmProfile::flat(csr, 250.0, 20.0)],
+                400,
+            ),
+            Regime::Drifting => (
+                vec![
+                    ArmProfile {
+                        arm: dtans,
+                        base_us: 240.0,
+                        drift_us_per_step: 1.2,
+                        jitter_us: 15.0,
+                        spike_every: 0,
+                        spike_us: 0.0,
+                    },
+                    ArmProfile::flat(csr, 400.0, 15.0),
+                ],
+                400,
+            ),
+            Regime::BimodalNoisy => (
+                vec![
+                    ArmProfile {
+                        arm: dtans,
+                        base_us: 500.0,
+                        drift_us_per_step: 0.0,
+                        jitter_us: 25.0,
+                        spike_every: 9,
+                        spike_us: 350.0,
+                    },
+                    ArmProfile {
+                        arm: csr,
+                        base_us: 250.0,
+                        drift_us_per_step: 0.0,
+                        jitter_us: 25.0,
+                        spike_every: 7,
+                        spike_us: 350.0,
+                    },
+                ],
+                500,
+            ),
+        };
+        SimConfig {
+            adaptive,
+            profiles,
+            static_choice: FormatChoice::CsrDtans,
+            steps,
+            reversal_at: None,
+            oracle_seed: 0x0051_D0_0051_D0,
+        }
+    }
+
+    /// The same regime with a base-cost reversal at `step`.
+    pub fn with_reversal(mut self, step: u64) -> SimConfig {
+        self.reversal_at = Some(step);
+        self
+    }
+}
+
+struct OracleArm {
+    profile: ArmProfile,
+    rng: Xoshiro256,
+    samples: u64,
+}
+
+/// Seeded per-arm latency synthesizer (see the module docs). One RNG
+/// stream per arm: an arm's k-th sample never depends on what the
+/// other arms were asked, which is what makes the best-static-arm
+/// replay comparable to the live run.
+pub struct LatencyOracle {
+    arms: Vec<OracleArm>,
+    reversal_at: Option<u64>,
+}
+
+impl LatencyOracle {
+    /// Build an oracle over `profiles`, with per-arm streams derived
+    /// from `seed` and an optional base-cost reversal step.
+    pub fn new(profiles: &[ArmProfile], seed: u64, reversal_at: Option<u64>) -> LatencyOracle {
+        let arms = profiles
+            .iter()
+            .enumerate()
+            .map(|(i, p)| OracleArm {
+                profile: *p,
+                rng: Xoshiro256::seeded(
+                    seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                ),
+                samples: 0,
+            })
+            .collect();
+        LatencyOracle { arms, reversal_at }
+    }
+
+    /// Synthesize the latency of one request on `arm` at trace `step`.
+    /// After the reversal step the arms trade base costs (profile `i`
+    /// uses profile `len-1-i`'s base); drift, jitter and spikes stay
+    /// with the arm.
+    pub fn sample(&mut self, arm: Arm, step: u64) -> f64 {
+        let reversed = self.reversal_at.is_some_and(|r| step >= r);
+        let n = self.arms.len();
+        let idx = self
+            .arms
+            .iter()
+            .position(|a| a.profile.arm == arm)
+            .expect("sampled arm has a profile");
+        let base = if reversed {
+            self.arms[n - 1 - idx].profile.base_us
+        } else {
+            self.arms[idx].profile.base_us
+        };
+        let a = &mut self.arms[idx];
+        let p = a.profile;
+        let mut lat = base + p.drift_us_per_step * step as f64;
+        lat += (a.rng.next_f64() * 2.0 - 1.0) * p.jitter_us;
+        a.samples += 1;
+        if p.spike_every > 0 && a.samples % p.spike_every == 0 {
+            lat += p.spike_us;
+        }
+        lat.max(1.0)
+    }
+}
+
+/// Everything a stability assertion needs from one simulator run.
+/// Fully deterministic given the [`SimConfig`] (derives `PartialEq` so
+/// tests can assert two runs are identical, decision for decision).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimOutcome {
+    /// The arm served at each step, in order (the decision trace).
+    pub decisions: Vec<Arm>,
+    /// The committed flip trace ([`RouteFlip::at_observation`] is the
+    /// injected clock).
+    pub flips: Vec<RouteFlip>,
+    /// Conservation counters: `explored + exploited == routed` and
+    /// `routed == steps` must hold.
+    pub counters: RouteCounters,
+    /// Incumbent after the last step.
+    pub final_incumbent: Arm,
+    /// The truly-best arm of the *final* regime (lowest replayed p50
+    /// over the post-reversal window).
+    pub best_arm: Arm,
+    /// Observation-clock stamp after which the incumbent equals
+    /// [`SimOutcome::best_arm`] and never changes again (`Some(0)` when
+    /// the static choice was already best; `None` when the run never
+    /// converged).
+    pub converged_at: Option<u64>,
+    /// p50 of the latencies actually served after convergence
+    /// (exploration samples included — ε-greedy pays for its samples).
+    pub post_convergence_p50_us: f64,
+    /// p50 an oracle-replayed best static arm would have served over
+    /// the same window.
+    pub best_static_p50_us: f64,
+}
+
+fn p50(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(f64::total_cmp);
+    v[v.len() / 2]
+}
+
+/// Run one simulated trace through a real [`AdaptiveRouter`]: register
+/// the matrix (arm list = the profiles' formats, [`SeedSource::Static`]
+/// — the cost model starts blind, exactly like a service without a CSR
+/// original to seed from), then `decide → oracle → observe` once per
+/// step. No threads, no sleeps, no kernels.
+pub fn run_routing_sim(cfg: &SimConfig) -> SimOutcome {
+    let metrics = Arc::new(Metrics::with_obs(ObsConfig::default()));
+    let router = AdaptiveRouter::new(cfg.adaptive, metrics);
+    let mut admissible: Vec<FormatChoice> = Vec::new();
+    for p in &cfg.profiles {
+        if !admissible.contains(&p.arm.choice) {
+            admissible.push(p.arm.choice);
+        }
+    }
+    router.register_matrix(
+        SIM_MATRIX,
+        cfg.static_choice,
+        &admissible,
+        KernelVariant::default(),
+        &[],
+        SeedSource::Static,
+    );
+
+    let mut oracle = LatencyOracle::new(&cfg.profiles, cfg.oracle_seed, cfg.reversal_at);
+    let mut decisions = Vec::with_capacity(cfg.steps as usize);
+    let mut served = Vec::with_capacity(cfg.steps as usize);
+    for step in 0..cfg.steps {
+        let d = router.decide(SIM_MATRIX).expect("simulated matrix is registered");
+        let lat = oracle.sample(d.arm, step);
+        router.observe(SIM_MATRIX, d.arm, lat);
+        decisions.push(d.arm);
+        served.push(lat);
+    }
+
+    let flips = router.flips();
+    let counters = router.counters();
+    let final_incumbent = router.incumbent(SIM_MATRIX).expect("still registered");
+
+    // Best arm of the *final* regime: replay each arm alone on a fresh
+    // oracle over the post-reversal window and take the lowest p50.
+    let eval_start = cfg.reversal_at.unwrap_or(0);
+    let mut best_arm = cfg.profiles[0].arm;
+    let mut best_static_p50_us = f64::INFINITY;
+    for p in &cfg.profiles {
+        let mut o = LatencyOracle::new(&cfg.profiles, cfg.oracle_seed, cfg.reversal_at);
+        let lats: Vec<f64> = (eval_start..cfg.steps).map(|s| o.sample(p.arm, s)).collect();
+        let q = p50(&lats);
+        if q < best_static_p50_us {
+            best_static_p50_us = q;
+            best_arm = p.arm;
+        }
+    }
+
+    let converged_at = if final_incumbent != best_arm {
+        None
+    } else {
+        match flips.last() {
+            None => Some(0),
+            Some(f) => Some(f.at_observation),
+        }
+    };
+
+    // Post-convergence window: from the later of convergence and the
+    // reversal (one observation ≈ one step on this single-matrix trace).
+    let start = converged_at.unwrap_or(eval_start).max(eval_start) as usize;
+    let tail = if start < served.len() { &served[start..] } else { &served[..] };
+    let post_convergence_p50_us = p50(tail);
+
+    SimOutcome {
+        decisions,
+        flips,
+        counters,
+        final_incumbent,
+        best_arm,
+        converged_at,
+        post_convergence_p50_us,
+        best_static_p50_us,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dtans() -> Arm {
+        Arm::format(FormatChoice::CsrDtans)
+    }
+
+    fn csr() -> Arm {
+        Arm::format(FormatChoice::Csr)
+    }
+
+    #[test]
+    fn stationary_hostile_regime_converges_to_the_best_arm() {
+        let out = run_routing_sim(&SimConfig::regime(Regime::Stationary));
+        assert_eq!(out.best_arm, csr());
+        assert_eq!(out.final_incumbent, csr(), "router must leave the hostile static choice");
+        assert_eq!(out.flips.len(), 1, "one committed flip, no flapping: {:?}", out.flips);
+        assert_eq!((out.flips[0].from, out.flips[0].to), (dtans(), csr()));
+        // ε = 0.2 with K = 3 and min_observations = 2: convergence is a
+        // handful of exploration samples, far inside half the trace.
+        let at = out.converged_at.expect("converged");
+        assert!(at > 0 && at <= 200, "converged_at = {at}");
+    }
+
+    #[test]
+    fn reversal_flips_the_route_back() {
+        let out = run_routing_sim(&SimConfig::regime(Regime::Stationary).with_reversal(200));
+        // After step 200 the base costs swap, so dtANS is best again.
+        assert_eq!(out.best_arm, dtans());
+        assert_eq!(out.final_incumbent, dtans());
+        assert_eq!(out.flips.len(), 2, "out then back: {:?}", out.flips);
+        assert_eq!((out.flips[0].from, out.flips[0].to), (dtans(), csr()));
+        assert_eq!((out.flips[1].from, out.flips[1].to), (csr(), dtans()));
+        assert!(out.flips[1].at_observation > 200, "the flip-back reacts to the reversal");
+    }
+
+    #[test]
+    fn drifting_incumbent_is_abandoned_exactly_once() {
+        let out = run_routing_sim(&SimConfig::regime(Regime::Drifting));
+        assert_eq!(out.best_arm, csr());
+        assert_eq!(out.final_incumbent, csr());
+        // The incumbent starts genuinely best; one flip once the drift
+        // crosses the hysteresis margin, and no churn after.
+        assert_eq!(out.flips.len(), 1, "{:?}", out.flips);
+        let at = out.flips[0].at_observation;
+        assert!(at > 100, "no premature flip while the incumbent still wins (at = {at})");
+    }
+
+    #[test]
+    fn bimodal_noise_is_bounded_to_two_flips() {
+        let out = run_routing_sim(&SimConfig::regime(Regime::BimodalNoisy));
+        assert_eq!(out.final_incumbent, csr());
+        assert!(out.flips.len() <= 2, "hysteresis must bound flapping: {:?}", out.flips);
+        assert!(out.converged_at.is_some());
+        // The served p50 after convergence tracks the best static arm.
+        assert!(
+            out.post_convergence_p50_us <= out.best_static_p50_us * 1.10,
+            "post-convergence p50 {} vs best static {}",
+            out.post_convergence_p50_us,
+            out.best_static_p50_us
+        );
+    }
+
+    #[test]
+    fn exploration_conservation_holds_over_the_whole_trace() {
+        let cfg = SimConfig::regime(Regime::Stationary);
+        let out = run_routing_sim(&cfg);
+        assert_eq!(out.counters.routed, cfg.steps);
+        assert_eq!(out.counters.explored + out.counters.exploited, out.counters.routed);
+        assert!(out.counters.explored > 0, "ε = 0.2 must actually explore");
+        assert_eq!(out.counters.flips, out.flips.len() as u64);
+        assert_eq!(out.decisions.len() as u64, cfg.steps);
+    }
+
+    #[test]
+    fn zero_exploration_is_deterministic_and_flip_free() {
+        let mut cfg = SimConfig::regime(Regime::Stationary);
+        cfg.adaptive = AdaptiveConfig::zero_exploration();
+        let a = run_routing_sim(&cfg);
+        let b = run_routing_sim(&cfg);
+        assert_eq!(a, b, "seeded simulator must be bit-reproducible");
+        assert!(a.flips.is_empty(), "no exploration ⇒ no challenger data ⇒ no flips");
+        assert_eq!(a.counters.explored, 0);
+        assert!(a.decisions.iter().all(|d| *d == dtans()), "every request rides the static arm");
+        // The static choice is hostile here, so the run never converges
+        // onto the best arm — which is exactly the point of ε > 0.
+        assert_eq!(a.converged_at, None);
+    }
+
+    #[test]
+    fn challenger_inside_the_margin_never_flips() {
+        // 5% better than the incumbent, against a 10% margin: hysteresis
+        // must hold the line no matter how long the trace runs.
+        let mut cfg = SimConfig::regime(Regime::Stationary);
+        cfg.profiles = vec![
+            ArmProfile::flat(dtans(), 300.0, 0.0),
+            ArmProfile::flat(csr(), 285.0, 0.0),
+        ];
+        cfg.adaptive.explore_fraction = 0.3;
+        cfg.steps = 300;
+        let out = run_routing_sim(&cfg);
+        assert!(out.flips.is_empty(), "{:?}", out.flips);
+        assert_eq!(out.final_incumbent, dtans());
+        assert!(out.counters.explored > 0);
+    }
+
+    #[test]
+    fn oracle_streams_are_per_arm_and_interleaving_independent() {
+        let profiles =
+            vec![ArmProfile::flat(dtans(), 400.0, 50.0), ArmProfile::flat(csr(), 250.0, 50.0)];
+        // Stream A: sample only dtANS.
+        let mut solo = LatencyOracle::new(&profiles, 7, None);
+        let alone: Vec<f64> = (0..16).map(|s| solo.sample(dtans(), s)).collect();
+        // Stream B: interleave CSR draws between every dtANS draw.
+        let mut mixed = LatencyOracle::new(&profiles, 7, None);
+        let interleaved: Vec<f64> = (0..16)
+            .map(|s| {
+                let _ = mixed.sample(csr(), s);
+                mixed.sample(dtans(), s)
+            })
+            .collect();
+        assert_eq!(alone, interleaved, "an arm's k-th sample must not depend on other arms");
+    }
+}

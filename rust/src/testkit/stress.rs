@@ -6,7 +6,7 @@
 //! matrices) from a seed, hammers a **budgeted** [`SpmvService`] with it
 //! from many threads — so evictions, cold reloads, deduped loader
 //! faults, SpMM batch packing, solve pins and background overlay
-//! compactions all interleave — and then checks four conservation
+//! compactions all interleave — and then checks five conservation
 //! oracles:
 //!
 //! 1. **Bit-identical serial replay of the admitted trace** — every
@@ -41,6 +41,18 @@
 //!    (never zero, never two — a double-send or a silent drop would show
 //!    up here), and terminal kinds summing to the `completed` / `failed`
 //!    / `shed` / `expired` counters.
+//! 5. **Routing conservation** — the stressed service runs the adaptive
+//!    router live under stress, but at
+//!    [`AdaptiveConfig::zero_exploration`]: by the router's own
+//!    contract no challenger ever accumulates observations, so adaptive
+//!    routing must be observationally invisible (which is what lets
+//!    oracle 1's serial replay stay bit-identical). After the drain:
+//!    `explored + exploited == routed` with `explored == 0`, the
+//!    `route_flips` counter equals the length of the (empty) flip
+//!    trace, the router's counters agree with the exported metrics, and
+//!    every format tag that actually executed lies in the union of the
+//!    router's admissible arm sets (plus `overlay` for mutated
+//!    matrices, which the router retires on their first append).
 //!
 //! Two arrival modes share the trace and the oracles. **Closed-loop**
 //! (default): each thread waits for its op before issuing the next, so
@@ -58,7 +70,8 @@
 //! `medium`/`large`.
 
 use crate::coordinator::{
-    AdmissionConfig, Pending, RoutePolicy, ServiceConfig, SpmvService, SubmitOptions,
+    AdaptiveConfig, AdmissionConfig, Pending, RoutePolicy, ServiceConfig, SpmvService,
+    SubmitOptions,
 };
 use crate::matrix::csr::Csr;
 use crate::obs::{ObsConfig, Stage};
@@ -180,6 +193,13 @@ pub struct StressReport {
     pub evictions: u64,
     /// Cold loads observed on the stressed service.
     pub cold_loads: u64,
+    /// Routing decisions the adaptive router handed out (oracle 5).
+    pub routed: u64,
+    /// Exploration samples among them — must be 0 under the stress
+    /// driver's zero-exploration config.
+    pub explored: u64,
+    /// Hysteresis-confirmed route flips — must be 0 likewise.
+    pub route_flips: u64,
     /// The stressed service's final metrics report line.
     pub metrics_report: String,
 }
@@ -406,6 +426,10 @@ fn run_stress_inner(cfg: &StressConfig, cache_dir: &Path) -> Result<StressReport
             compact_overlay_nnz: mutate.then_some(8),
         },
         admission: AdmissionConfig { queue_depth: cfg.queue_depth, ..Default::default() },
+        // Oracle 5: the adaptive router runs live (decides on every warm
+        // singleton request) but with exploration off, so it is provably
+        // bit-neutral and oracle 1's replay contract survives.
+        adaptive: AdaptiveConfig::zero_exploration(),
         // Oracle 4 needs a lossless trace: sample everything, and size
         // the per-shard ring far above the worst-case event volume (≤ ~8
         // events per request, ≤ ~6 requests per op, one shard per thread).
@@ -594,6 +618,52 @@ fn run_stress_inner(cfg: &StressConfig, cache_dir: &Path) -> Result<StressReport
         )));
     }
 
+    // --- Oracle 5: routing conservation. The adaptive router ran live
+    // at zero exploration, so its counters must conserve, nothing may
+    // have explored or flipped, the router's view must agree with the
+    // exported metrics, and every format tag that actually executed
+    // must be accounted for: an admissible arm of a still-routed
+    // matrix, the registered format of some matrix (retired matrices
+    // keep serving their registered route), or the overlay composite
+    // of a mutated matrix.
+    let rc = svc.adaptive().counters();
+    if rc.explored + rc.exploited != rc.routed {
+        return Err(DtansError::Service(format!("routing counters do not conserve: {rc:?}")));
+    }
+    let flip_trace = svc.adaptive().flips();
+    if rc.explored != 0 || !flip_trace.is_empty() {
+        return Err(DtansError::Service(format!(
+            "zero-exploration run explored or flipped: {rc:?}, flips {flip_trace:?}"
+        )));
+    }
+    let (m_routed, m_explored, m_flips) = (
+        m.routed_requests.load(Ordering::Relaxed),
+        m.explore_requests.load(Ordering::Relaxed),
+        m.route_flips.load(Ordering::Relaxed),
+    );
+    if (m_routed, m_explored, m_flips) != (rc.routed, rc.explored, rc.flips)
+        || m_flips != flip_trace.len() as u64
+    {
+        return Err(DtansError::Service(format!(
+            "router counters disagree with metrics: router {rc:?}, metrics \
+             routed={m_routed} explored={m_explored} flips={m_flips}"
+        )));
+    }
+    let mut allowed_tags = svc.adaptive().admissible_tag_union();
+    allowed_tags.push("overlay");
+    for id in &final_ids {
+        if let Some(choice) = svc.format_of(*id) {
+            allowed_tags.push(choice.tag());
+        }
+    }
+    for tag in svc.metrics.format_tags() {
+        if !allowed_tags.contains(&tag) {
+            return Err(DtansError::Service(format!(
+                "format '{tag}' executed outside the admissible set {allowed_tags:?}"
+            )));
+        }
+    }
+
     // --- Oracle 1: bit-identical serial replay on a reference service. ---
     let reference = SpmvService::start(ServiceConfig {
         workers: 1,
@@ -619,6 +689,9 @@ fn run_stress_inner(cfg: &StressConfig, cache_dir: &Path) -> Result<StressReport
         expired: 0,
         evictions: m.evictions.load(Ordering::Relaxed),
         cold_loads: m.cold_loads.load(Ordering::Relaxed),
+        routed: rc.routed,
+        explored: rc.explored,
+        route_flips: rc.flips,
         metrics_report: m.report(),
     };
     let responses = Arc::try_unwrap(responses)
@@ -1097,6 +1170,9 @@ mod tests {
         // and every one must have replayed with a matching version.
         assert!(report.appends_checked >= 2, "{report:?}");
         assert_eq!((report.shed, report.expired), (0, 0));
+        // Oracle 5 ran live: decisions were handed out, none explored.
+        assert!(report.routed > 0, "{report:?}");
+        assert_eq!((report.explored, report.route_flips), (0, 0));
     }
 
     #[test]

@@ -98,6 +98,21 @@ pub enum DtansError {
     /// closed (the service is shutting down). Distinct from
     /// [`DtansError::Overloaded`]: retrying cannot succeed.
     QueueClosed,
+
+    /// Adaptive routing asked a matrix to serve a format it cannot
+    /// materialize: a CSR-walk format (`csr`, `blocked_ell`) on an
+    /// artifact-registered matrix with no resident CSR original, or any
+    /// alternate format on an overlaid (mutated) matrix whose composite
+    /// operator is the only correct execution surface. Typed — not a
+    /// `Service` string — so operators can tell a bad
+    /// [`RouteOverride`](crate::coordinator::adaptive::RouteOverride)
+    /// pin from an execution failure. See `docs/ROUTING.md`.
+    InadmissibleRoute {
+        /// The matrix whose residency forbids the route.
+        matrix: u64,
+        /// Tag of the format that cannot be served.
+        tag: &'static str,
+    },
 }
 
 impl DtansError {
@@ -135,6 +150,9 @@ impl DtansError {
                 DtansError::QuotaExceeded { tenant: tenant.clone() }
             }
             DtansError::QueueClosed => DtansError::QueueClosed,
+            DtansError::InadmissibleRoute { matrix, tag } => {
+                DtansError::InadmissibleRoute { matrix: *matrix, tag }
+            }
         }
     }
 }
@@ -176,6 +194,13 @@ impl fmt::Display for DtansError {
             }
             DtansError::QueueClosed => {
                 write!(f, "service shutting down: admission queue closed")
+            }
+            DtansError::InadmissibleRoute { matrix, tag } => {
+                write!(
+                    f,
+                    "inadmissible route: matrix {matrix} cannot serve format '{tag}' \
+                     (no resident CSR original, or the matrix is overlaid)"
+                )
             }
         }
     }
@@ -261,6 +286,17 @@ mod tests {
         let c = DtansError::QueueClosed;
         assert!(c.to_string().contains("queue closed"));
         assert!(matches!(c.duplicate(), DtansError::QueueClosed));
+    }
+
+    #[test]
+    fn inadmissible_route_is_typed_and_duplicates() {
+        let e = DtansError::InadmissibleRoute { matrix: 42, tag: "csr" };
+        assert!(e.to_string().contains("matrix 42"));
+        assert!(e.to_string().contains("format 'csr'"));
+        assert!(matches!(
+            e.duplicate(),
+            DtansError::InadmissibleRoute { matrix: 42, tag: "csr" }
+        ));
     }
 
     #[test]

@@ -1,0 +1,170 @@
+//! Tier-1 acceptance for online adaptive routing (`docs/ROUTING.md`):
+//! the deterministic simulator proves the bandit converges off a
+//! hostile static choice, follows a mid-run regime reversal, and never
+//! flips inside the hysteresis margin; a real service with exploration
+//! disabled is **bit-identical** to static routing; an exploring
+//! service conserves its counters while every response stays within
+//! the documented ULP contract of the conformance oracle; and an
+//! artifact-registered matrix (no CSR original, cold loads through a
+//! [`FailingDir`]-managed cache) rejects CSR-requiring pins with the
+//! typed routing error across eviction/reload cycles.
+
+use dtans::coordinator::{
+    AdaptiveConfig, Arm, FormatChoice, RouteOverride, RoutePolicy, ServiceConfig, SpmvService,
+};
+use dtans::matrix::gen::structured::banded;
+use dtans::matrix::gen::{assign_values, ValueDist};
+use dtans::spmv::spmv_csr;
+use dtans::store::StoreConfig;
+use dtans::testkit::faults::FailingDir;
+use dtans::testkit::routing_sim::{run_routing_sim, ArmProfile, Regime, SimConfig};
+use dtans::util::propcheck::assert_close;
+use dtans::util::rng::Xoshiro256;
+use dtans::DtansError;
+use std::sync::atomic::Ordering;
+
+fn dtans_arm() -> Arm {
+    Arm::format(FormatChoice::CsrDtans)
+}
+
+fn csr_arm() -> Arm {
+    Arm::format(FormatChoice::Csr)
+}
+
+/// dtANS-hostile regime: the static choice is 1.6× slower than the CSR
+/// baseline. The router must abandon it within 200 observations, with
+/// exactly one committed flip — and when the regime reverses mid-run,
+/// it must flip back.
+#[test]
+fn hostile_regime_flips_to_csr_and_back_on_reversal() {
+    let out = run_routing_sim(&SimConfig::regime(Regime::Stationary));
+    assert_eq!(out.final_incumbent, csr_arm());
+    assert_eq!(out.flips.len(), 1, "{:?}", out.flips);
+    assert_eq!((out.flips[0].from, out.flips[0].to), (dtans_arm(), csr_arm()));
+    let at = out.converged_at.expect("converged");
+    assert!(at <= 200, "flip must land within 200 observations, was {at}");
+
+    let rev = run_routing_sim(&SimConfig::regime(Regime::Stationary).with_reversal(200));
+    assert_eq!(rev.final_incumbent, dtans_arm(), "regime reversed, route must follow");
+    assert_eq!(rev.flips.len(), 2, "{:?}", rev.flips);
+    assert_eq!(rev.flips[1].to, dtans_arm());
+    assert!(rev.flips[1].at_observation > 200);
+}
+
+/// A challenger 5% faster than the incumbent, against a 10% hysteresis
+/// margin: no flip, ever — however long the trace and however much it
+/// explores. (The flap bound under real noise lives in the simulator's
+/// own bimodal test; this is the margin contract in isolation.)
+#[test]
+fn challenger_inside_the_hysteresis_margin_never_flips() {
+    let mut cfg = SimConfig::regime(Regime::Stationary);
+    cfg.profiles =
+        vec![ArmProfile::flat(dtans_arm(), 300.0, 0.0), ArmProfile::flat(csr_arm(), 285.0, 0.0)];
+    cfg.adaptive.explore_fraction = 0.3;
+    cfg.steps = 500;
+    let out = run_routing_sim(&cfg);
+    assert!(out.flips.is_empty(), "{:?}", out.flips);
+    assert_eq!(out.final_incumbent, dtans_arm());
+    assert!(out.counters.explored > 0, "the margin held against real challenger data");
+}
+
+/// With exploration at zero the adaptive layer is observationally
+/// invisible: a learned-routing service answers bit-for-bit what a
+/// static-routing service answers, because no challenger ever gets the
+/// observations hysteresis demands.
+#[test]
+fn zero_exploration_service_is_bit_identical_to_static_routing() {
+    let mut m = banded(600, 3);
+    assign_values(&mut m, ValueDist::FewDistinct(6), &mut Xoshiro256::seeded(11));
+    let xs: Vec<Vec<f64>> =
+        (0..10).map(|i| dtans::testkit::seeded_vector(600, 100 + i as u64)).collect();
+    let run = |adaptive: AdaptiveConfig| -> Vec<Vec<f64>> {
+        let svc = SpmvService::start(ServiceConfig { adaptive, ..Default::default() });
+        let id = svc.register("m", m.clone()).unwrap();
+        xs.iter().map(|x| svc.spmv(id, x.clone()).unwrap()).collect()
+    };
+    let static_bits = run(AdaptiveConfig::default());
+    let adaptive_bits = run(AdaptiveConfig::zero_exploration());
+    assert_eq!(static_bits, adaptive_bits);
+}
+
+/// An aggressively-exploring service: every response (whichever arm
+/// served it) stays within the conformance oracle's ULP contract of
+/// the serial CSR ground truth, and when the dust settles
+/// `explored + exploited == routed` holds in both the router's own
+/// counters and the exported metrics.
+#[test]
+fn exploring_service_conserves_counters_and_stays_ulp_close() {
+    let svc = SpmvService::start(ServiceConfig {
+        adaptive: AdaptiveConfig { explore_fraction: 0.5, ..AdaptiveConfig::enabled() },
+        ..Default::default()
+    });
+    let mut m = banded(500, 3);
+    assign_values(&mut m, ValueDist::FewDistinct(5), &mut Xoshiro256::seeded(3));
+    let id = svc.register("m", m.clone()).unwrap();
+    assert_eq!(svc.adaptive().admissible_arms(id).len(), 3, "kept CSR ⇒ all formats admissible");
+    for i in 0..80u64 {
+        let x = dtans::testkit::seeded_vector(500, i);
+        let mut want = vec![0.0; 500];
+        spmv_csr(&m, &x, &mut want).unwrap();
+        let got = svc.spmv(id, x).unwrap();
+        assert_close(&got, &want, 1e-12, 1e-9).unwrap();
+    }
+    let c = svc.adaptive().counters();
+    assert_eq!(c.routed, 80);
+    assert_eq!(c.explored + c.exploited, c.routed);
+    assert!(c.explored > 0, "ε = 0.5 over 80 requests must explore: {c:?}");
+    assert_eq!(svc.metrics.routed_requests.load(Ordering::Relaxed), c.routed);
+    assert_eq!(svc.metrics.explore_requests.load(Ordering::Relaxed), c.explored);
+    assert_eq!(svc.metrics.route_flips.load(Ordering::Relaxed), c.flips);
+}
+
+/// Regression for the residency gap: an artifact-registered matrix has
+/// no CSR original (`drop_csr`), so its only admissible arm is its own
+/// encoded format — a pin to the CSR arm must fail with the typed
+/// [`DtansError::InadmissibleRoute`], and it must *keep* failing across
+/// eviction/cold-reload cycles (each reload rebuilds the residency
+/// answer from scratch), while clearing the pin restores service.
+#[test]
+fn artifact_registered_matrix_rejects_csr_pins_across_cold_loads() {
+    let dir = FailingDir::new("adaptive_route").unwrap();
+    let svc = SpmvService::start(ServiceConfig {
+        policy: RoutePolicy { min_nnz: 1 << 8, max_size_ratio: 0.98, ..Default::default() },
+        store: StoreConfig {
+            cache_dir: Some(dir.root().to_path_buf()),
+            budget_bytes: Some(1), // everything persisted is evictable
+            drop_csr: true,
+            ..Default::default()
+        },
+        adaptive: AdaptiveConfig::zero_exploration(),
+        ..Default::default()
+    });
+    let mut m = banded(800, 3);
+    assign_values(&mut m, ValueDist::FewDistinct(4), &mut Xoshiro256::seeded(9));
+    let id = svc.register("cold", m.clone()).unwrap();
+    assert_eq!(svc.format_of(id), Some(FormatChoice::CsrDtans));
+    assert_eq!(svc.adaptive().admissible_arms(id), vec![dtans_arm()]);
+
+    let x = dtans::testkit::seeded_vector(800, 42);
+    let mut want = vec![0.0; 800];
+    spmv_csr(&m, &x, &mut want).unwrap();
+
+    svc.pin_route(id, RouteOverride::Pin(csr_arm()));
+    for round in 0..3 {
+        // Force the next request through the cold-load path.
+        svc.store().flush();
+        svc.store().evict(id);
+        let err = svc.spmv(id, x.clone()).unwrap_err();
+        assert!(
+            matches!(err, DtansError::InadmissibleRoute { matrix, tag: "csr" } if matrix == id),
+            "round {round}: {err}"
+        );
+    }
+    // Clearing the pin restores the (sole admissible) registered route,
+    // still through a cold load.
+    svc.pin_route(id, RouteOverride::Clear);
+    svc.store().flush();
+    svc.store().evict(id);
+    let got = svc.spmv(id, x).unwrap();
+    assert_close(&got, &want, 1e-12, 1e-9).unwrap();
+}

@@ -1,0 +1,190 @@
+#!/usr/bin/env python3
+"""Smoke-checker for the adaptive-routing bench report.
+
+Validates `results/BENCH_routing.json` (as written by
+`cargo bench --bench main_bench -- routing_adaptation`) so the CI
+bench-smoke step fails loudly when the report goes stale or the router
+stops converging:
+
+  * the file parses as JSON and names the right bench;
+  * `acceptance_bar_ratio` is a number > 1 (the served-p50 budget);
+  * `regimes` is a non-empty array whose entries each carry a regime
+    name, a positive `steps` count, a non-negative bounded `flips`
+    count (<= 4: hysteresis must prevent flapping on every canned
+    trace), a `converged_at` observation stamp inside the trace, and
+    positive p50s;
+  * every regime's `p50_ratio` is consistent with its two p50s and
+    within the acceptance bar — post-convergence served latency must
+    sit within 10% of the best static arm's.
+
+Hermetic (stdlib only, no network) so the CI job never flakes.
+
+Usage: python3 scripts/check_bench_routing.py <BENCH_routing.json>
+       python3 scripts/check_bench_routing.py --selftest
+Exit code 0 when every check passes, 1 otherwise (one line per error).
+"""
+
+import json
+import sys
+from pathlib import Path
+
+MAX_FLIPS = 4
+REGIME_NUMBER_FIELDS = [
+    "steps",
+    "flips",
+    "converged_at",
+    "post_convergence_p50_us",
+    "best_static_p50_us",
+    "p50_ratio",
+]
+
+
+def _num(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def validate(text: str, origin: str = "<input>") -> list:
+    errors = []
+    try:
+        report = json.loads(text)
+    except json.JSONDecodeError as e:
+        return [f"{origin}: not valid JSON: {e}"]
+    if not isinstance(report, dict):
+        return [f"{origin}: top level is not an object"]
+
+    if report.get("bench") != "routing_adaptation":
+        errors.append(f"{origin}: bench != routing_adaptation: {report.get('bench')!r}")
+
+    bar = report.get("acceptance_bar_ratio")
+    if not _num(bar) or bar <= 1.0:
+        errors.append(f"{origin}: acceptance_bar_ratio missing or <= 1: {bar!r}")
+        bar = None
+
+    regimes = report.get("regimes")
+    if not isinstance(regimes, list) or not regimes:
+        return errors + [f"{origin}: missing/empty regimes array"]
+
+    for i, entry in enumerate(regimes):
+        if not isinstance(entry, dict):
+            errors.append(f"{origin}: regimes[{i}] is not an object")
+            continue
+        name = entry.get("regime")
+        tag = f"{origin}: regimes[{i}] ({name!r})"
+        if not isinstance(name, str) or not name:
+            errors.append(f"{tag}: missing regime name")
+        bad = False
+        for field in REGIME_NUMBER_FIELDS:
+            v = entry.get(field)
+            if not _num(v):
+                errors.append(f"{tag}: {field} missing or not a number: {v!r}")
+                bad = True
+        if bad:
+            continue
+        if entry["steps"] <= 0:
+            errors.append(f"{tag}: steps not positive: {entry['steps']}")
+        if not 0 <= entry["flips"] <= MAX_FLIPS:
+            errors.append(f"{tag}: flips {entry['flips']} outside [0, {MAX_FLIPS}]")
+        if not 0 <= entry["converged_at"] <= entry["steps"]:
+            errors.append(
+                f"{tag}: converged_at {entry['converged_at']} outside the trace "
+                f"(steps={entry['steps']})"
+            )
+        post = entry["post_convergence_p50_us"]
+        best = entry["best_static_p50_us"]
+        ratio = entry["p50_ratio"]
+        if post <= 0 or best <= 0:
+            errors.append(f"{tag}: p50s must be positive: post={post} best={best}")
+            continue
+        if abs(ratio - post / best) > 0.01:
+            errors.append(f"{tag}: p50_ratio {ratio} inconsistent with {post}/{best}")
+        if bar is not None and ratio > bar:
+            errors.append(f"{tag}: p50_ratio {ratio} exceeds acceptance bar {bar}")
+    return errors
+
+
+VALID_FIXTURE = json.dumps(
+    {
+        "bench": "routing_adaptation",
+        "quick": False,
+        "acceptance_bar_ratio": 1.10,
+        "regimes": [
+            {
+                "regime": "stationary",
+                "steps": 400,
+                "flips": 1,
+                "converged_at": 31,
+                "post_convergence_p50_us": 254.1,
+                "best_static_p50_us": 249.8,
+                "p50_ratio": 1.0172,
+            },
+            {
+                "regime": "stationary_shift",
+                "steps": 400,
+                "flips": 2,
+                "converged_at": 223,
+                "post_convergence_p50_us": 256.3,
+                "best_static_p50_us": 250.4,
+                "p50_ratio": 1.0236,
+            },
+        ],
+    }
+)
+
+INVALID_FIXTURES = {
+    "not json": "{ nope",
+    "wrong bench": VALID_FIXTURE.replace(
+        '"bench": "routing_adaptation"', '"bench": "mystery"'
+    ),
+    "bad bar": VALID_FIXTURE.replace('"acceptance_bar_ratio": 1.1', '"acceptance_bar_ratio": 0.5'),
+    "empty regimes": VALID_FIXTURE.replace(
+        VALID_FIXTURE[VALID_FIXTURE.index("[") : VALID_FIXTURE.rindex("]") + 1], "[]"
+    ),
+    "missing p50": VALID_FIXTURE.replace('"post_convergence_p50_us": 254.1, ', "", 1),
+    "flapping": VALID_FIXTURE.replace('"flips": 2', '"flips": 9'),
+    "late convergence": VALID_FIXTURE.replace('"converged_at": 223', '"converged_at": 9000'),
+    "ratio over bar": VALID_FIXTURE.replace(
+        '"post_convergence_p50_us": 256.3', '"post_convergence_p50_us": 756.3'
+    ).replace('"p50_ratio": 1.0236', '"p50_ratio": 3.0204'),
+    "inconsistent ratio": VALID_FIXTURE.replace('"p50_ratio": 1.0236', '"p50_ratio": 1.08'),
+}
+
+
+def selftest() -> int:
+    errs = validate(VALID_FIXTURE, "valid-fixture")
+    if errs:
+        print("selftest: valid fixture unexpectedly rejected:")
+        for e in errs:
+            print(f"  {e}")
+        return 1
+    failed = 0
+    for label, fixture in INVALID_FIXTURES.items():
+        if not validate(fixture, label):
+            print(f"selftest: invalid fixture {label!r} was not caught")
+            failed += 1
+    print(
+        f"selftest: 1 valid + {len(INVALID_FIXTURES)} invalid fixtures: "
+        f"{'OK' if not failed else f'{failed} missed'}"
+    )
+    return 1 if failed else 0
+
+
+def main() -> int:
+    args = sys.argv[1:]
+    if not args:
+        sys.exit("usage: check_bench_routing.py <BENCH_routing.json> | --selftest")
+    if args == ["--selftest"]:
+        return selftest()
+    errors = []
+    for a in args:
+        p = Path(a)
+        if not p.is_file():
+            sys.exit(f"not a file: {a}")
+        errors.extend(validate(p.read_text(encoding="utf-8"), str(p)))
+    for e in errors:
+        print(e)
+    print(f"checked {len(args)} report(s): {'OK' if not errors else f'{len(errors)} errors'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
